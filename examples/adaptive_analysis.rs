@@ -1,0 +1,65 @@
+//! Adaptive-behaviour analysis: visualises what Foresight actually decides
+//! on a real request — the per-layer thresholds (paper Fig. 5) and the
+//! compute/reuse map over layers × steps (paper Fig. 6) — as ASCII art.
+//!
+//! Run with: `cargo run --release --example adaptive_analysis`
+
+use std::sync::Arc;
+
+use foresight::config::Manifest;
+use foresight::engine::{Engine, Request};
+use foresight::model::{BlockKind, LoadedModel};
+use foresight::policy::build_policy;
+use foresight::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    let rt = Arc::new(Runtime::cpu()?);
+    let model = Arc::new(LoadedModel::load(rt, &manifest, "opensora-sim", "240p-2s")?);
+    let engine = Engine::new(model.clone(), manifest.schedule);
+    let info = model.info.clone();
+
+    let prompt = "a playful black labrador in a pumpkin halloween costume \
+                  bounds joyfully across a leaf-strewn lawn";
+    let mut policy = build_policy("foresight:n=1,r=2,gamma=0.5,warmup=0.15", &info, info.steps)?;
+    let run = engine.generate(&Request::new(prompt, 7), policy.as_mut(), None)?;
+
+    println!("prompt: {prompt}\n");
+    println!(
+        "policy {} — wall {:.2}s, reuse {:.0}%\n",
+        run.stats.policy,
+        run.stats.wall_s,
+        100.0 * run.stats.reuse_fraction()
+    );
+
+    // --- Fig. 5: per-layer thresholds -------------------------------------
+    let th = run.thresholds.expect("foresight thresholds");
+    println!("reuse thresholds λ (cond branch)   spatial      temporal");
+    for layer in 0..info.layers {
+        let s = th.get(&(layer, BlockKind::Spatial, 0)).copied().unwrap_or(0.0);
+        let t = th.get(&(layer, BlockKind::Temporal, 0)).copied().unwrap_or(0.0);
+        let bar = |v: f64| "#".repeat(((v * 2e3).min(28.0)) as usize);
+        println!("  layer {layer:2}  {s:9.2e} {:<14} {t:9.2e} {}", bar(s), bar(t));
+    }
+
+    // --- Fig. 6: reuse map over layers × steps ----------------------------
+    // sites in order: (layer, spatial), (layer, temporal) per layer
+    println!("\nreuse map (rows = blocks, cols = steps; '·' compute, '█' reuse)");
+    let n_sites = info.layers * 2;
+    for site in 0..n_sites {
+        let layer = site / 2;
+        let kind = if site % 2 == 0 { "S" } else { "T" };
+        let row: String = run
+            .reuse_map
+            .iter()
+            .map(|step| if step[site] { '█' } else { '·' })
+            .collect();
+        println!("  L{layer:02}{kind} {row}");
+    }
+    println!(
+        "\n(warmup = first {} steps; refresh every R steps; later layers \
+         recompute more often — the paper's Fig. 6 pattern)",
+        ((info.steps as f64) * 0.15).round() as usize
+    );
+    Ok(())
+}

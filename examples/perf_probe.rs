@@ -1,0 +1,24 @@
+//! Internal perf probe: per-executable time breakdown for one baseline run.
+//! (Used by the EXPERIMENTS.md §Perf iterations; not part of the public API.)
+use foresight::bench_support::{run_one, BenchCtx};
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let bucket = std::env::args().nth(1).unwrap_or("240p-2s".into());
+    let engine = ctx.engine("opensora-sim", &bucket)?;
+    let _ = run_one(&engine, "none", "warmup", 0, Some(2))?;
+    engine.model().reset_op_stats();
+    let t0 = std::time::Instant::now();
+    let r = run_one(&engine, "none", "a lighthouse at dusk", 1, None)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut stats = engine.model().op_stats();
+    stats.sort_by(|a, b| b.2.total_cmp(&a.2));
+    let exec_total: f64 = stats.iter().map(|s| s.2).sum();
+    println!("bucket {bucket}: wall {wall:.3}s, engine-reported {:.3}s, exec total {exec_total:.3}s, non-exec {:.3}s", r.stats.wall_s, wall - exec_total);
+    for (name, calls, secs) in stats {
+        if calls > 0 {
+            println!("  {name:20} {calls:6} calls {secs:8.3}s  ({:.3} ms/call)", 1e3 * secs / calls as f64);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Policy comparison: run all six reuse policies on the same prompts and
+//! print a Table 1-shaped comparison (latency, speedup, reuse fraction,
+//! PSNR/SSIM/LPIPS vs. baseline).
+//!
+//! Run with: `cargo run --release --example policy_compare`
+
+use std::sync::Arc;
+
+use foresight::config::Manifest;
+use foresight::engine::{Engine, Request};
+use foresight::metrics::{Decoder, FeatureNet, QualityReport};
+use foresight::model::LoadedModel;
+use foresight::policy::build_policy;
+use foresight::runtime::Runtime;
+use foresight::util::benchkit::MdTable;
+
+const PROMPTS: [&str; 3] = [
+    "a calm lake at dawn, soft golden light, mist drifting slowly",
+    "a drone camera racing along crashing waves as a storm swirls",
+    "a chef slicing vegetables in a quiet kitchen, steady close-up",
+];
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    let rt = Arc::new(Runtime::cpu()?);
+    let model = Arc::new(LoadedModel::load(rt, &manifest, "opensora-sim", "240p-2s")?);
+    let engine = Engine::new(model.clone(), manifest.schedule);
+    let info = model.info.clone();
+    let bucket = info.bucket("240p-2s")?.clone();
+    let dec = Decoder::new(bucket.ph, bucket.pw, info.latent_channels);
+    let net = FeatureNet::new();
+
+    // Baselines per prompt (also warms the runtime).
+    let mut baselines = Vec::new();
+    for (i, prompt) in PROMPTS.iter().enumerate() {
+        let mut p = build_policy("none", &info, info.steps)?;
+        let r = engine.generate(&Request::new(prompt, 100 + i as u64), p.as_mut(), None)?;
+        baselines.push(r);
+    }
+    let base_lat: f64 =
+        baselines.iter().map(|r| r.stats.wall_s).sum::<f64>() / baselines.len() as f64;
+
+    let mut table = MdTable::new(&[
+        "Method", "Latency(s)", "Speedup", "Reuse%", "PSNR", "SSIM", "LPIPS*",
+    ]);
+    table.row(vec![
+        "baseline".into(),
+        format!("{base_lat:.2}"),
+        "1.00x".into(),
+        "0".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    for spec in [
+        "static",
+        "delta-dit",
+        "tgate",
+        "pab",
+        "foresight:n=1,r=2",
+        "foresight:n=2,r=3",
+    ] {
+        let mut lat = 0.0;
+        let mut reuse = 0.0;
+        let (mut psnr, mut ssim, mut lpips) = (0.0, 0.0, 0.0);
+        for (i, prompt) in PROMPTS.iter().enumerate() {
+            let mut p = build_policy(spec, &info, info.steps)?;
+            let r = engine.generate(&Request::new(prompt, 100 + i as u64), p.as_mut(), None)?;
+            lat += r.stats.wall_s;
+            reuse += r.stats.reuse_fraction();
+            let q = QualityReport::compare(
+                &net,
+                &dec.decode(&baselines[i].latents),
+                &dec.decode(&r.latents),
+            );
+            psnr += q.psnr;
+            ssim += q.ssim;
+            lpips += q.lpips;
+        }
+        let n = PROMPTS.len() as f64;
+        lat /= n;
+        table.row(vec![
+            spec.into(),
+            format!("{lat:.2}"),
+            format!("{:.2}x", base_lat / lat),
+            format!("{:.0}", 100.0 * reuse / n),
+            format!("{:.2}", psnr / n),
+            format!("{:.3}", ssim / n),
+            format!("{:.4}", lpips / n),
+        ]);
+    }
+
+    println!("\nPolicy comparison — opensora-sim @ 240p-2s, {} prompts\n", PROMPTS.len());
+    println!("{}", table.to_markdown());
+    println!("(*LPIPS is the random-feature proxy; see DESIGN.md §1)");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: generate one video with Foresight and compare it against
+//! the no-reuse baseline — the 30-line tour of the public API.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first.)
+
+use std::sync::Arc;
+
+use foresight::config::Manifest;
+use foresight::engine::{Engine, Request};
+use foresight::metrics::{Decoder, FeatureNet, QualityReport};
+use foresight::model::LoadedModel;
+use foresight::policy::build_policy;
+use foresight::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT artifacts (HLO text + weights) onto the PJRT client.
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    let rt = Arc::new(Runtime::cpu()?);
+    let model = Arc::new(LoadedModel::load(rt, &manifest, "opensora-sim", "240p-2s")?);
+    let engine = Engine::new(model.clone(), manifest.schedule);
+    let info = &model.info;
+
+    let prompt = "a playful black labrador in a pumpkin costume frolics \
+                  through a sunlit autumn garden, leaves swirling";
+    let req = Request::new(prompt, 42);
+
+    // 2. Baseline: every block computed at every step.
+    let mut baseline_policy = build_policy("none", info, info.steps)?;
+    let baseline = engine.generate(&req, baseline_policy.as_mut(), None)?;
+
+    // 3. Foresight: adaptive per-layer reuse (paper defaults N=1, R=2,
+    //    gamma=0.5, 15% warmup).
+    let mut fs_policy = build_policy("foresight", info, info.steps)?;
+    let fs = engine.generate(&req, fs_policy.as_mut(), None)?;
+
+    // 4. Decode latents and measure quality relative to the baseline.
+    let bucket = info.bucket("240p-2s")?;
+    let dec = Decoder::new(bucket.ph, bucket.pw, info.latent_channels);
+    let net = FeatureNet::new();
+    let q = QualityReport::compare(&net, &dec.decode(&baseline.latents), &dec.decode(&fs.latents));
+
+    println!("prompt   : {prompt}");
+    println!();
+    println!("baseline : {:.2}s ({} blocks computed)", baseline.stats.wall_s, baseline.stats.computed_units);
+    println!(
+        "foresight: {:.2}s ({} computed, {} reused = {:.0}%)",
+        fs.stats.wall_s,
+        fs.stats.computed_units,
+        fs.stats.reused_units,
+        100.0 * fs.stats.reuse_fraction()
+    );
+    println!("speedup  : {:.2}x", baseline.stats.wall_s / fs.stats.wall_s);
+    println!();
+    println!("quality vs baseline:");
+    println!("  PSNR  : {:.2} dB", q.psnr);
+    println!("  SSIM  : {:.3}", q.ssim);
+    println!("  LPIPS*: {:.4}  (*random-feature proxy)", q.lpips);
+    println!("  VBench*: {:.2}%", q.vbench);
+    println!();
+    println!(
+        "cache: {:.0} KiB peak, {:.0} entries/layer (coarse 2LHWF)",
+        fs.stats.cache_peak_bytes as f64 / 1024.0,
+        fs.stats.cache_entries_per_layer
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! End-to-end serving driver (the DESIGN.md validation workload): starts
+//! the TCP JSON-lines server in-process, drives it with concurrent client
+//! connections sending a mixed policy workload, and reports latency /
+//! throughput — proving all three layers compose: Pallas kernels inside
+//! AOT HLO executables (L1/L2), dispatched by the Rust coordinator's
+//! router + worker pool (L3), with Python nowhere on the request path.
+//!
+//! Run with: `cargo run --release --example serve`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use foresight::config::Manifest;
+use foresight::runtime::Runtime;
+use foresight::server::{Client, EngineRegistry, Server, ServerConfig};
+use foresight::util::json::Json;
+use foresight::util::stats;
+use foresight::workload;
+
+const CLIENTS: usize = 4;
+const REQUESTS_PER_CLIENT: usize = 3;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    let rt = Arc::new(Runtime::cpu()?);
+    println!("loading engines on PJRT ({}) ...", rt.platform());
+    let registry = Arc::new(EngineRegistry::load(
+        rt,
+        &manifest,
+        &[("opensora-sim".to_string(), "240p-2s".to_string())],
+    )?);
+    let server = Server::start(registry, ServerConfig { addr: "127.0.0.1:0".into(), workers: 2 })?;
+    let addr = server.addr();
+    println!("server up on {addr}; {CLIENTS} clients × {REQUESTS_PER_CLIENT} requests\n");
+
+    let prompts = workload::vbench_prompts(2);
+    let policies = ["foresight", "static", "foresight:n=2,r=3", "pab"];
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for cid in 0..CLIENTS {
+        let prompts: Vec<String> = prompts.iter().map(|p| p.text.clone()).collect();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<(f64, f64, f64)>> {
+            let mut client = Client::connect(&addr)?;
+            assert!(client.ping()?);
+            let mut out = Vec::new();
+            for i in 0..REQUESTS_PER_CLIENT {
+                let idx = cid * REQUESTS_PER_CLIENT + i;
+                let req = Json::obj(vec![
+                    ("op", Json::str("generate")),
+                    ("model", Json::str("opensora-sim")),
+                    ("bucket", Json::str("240p-2s")),
+                    ("policy", Json::str(policies[idx % policies.len()])),
+                    ("prompt", Json::str(&prompts[idx % prompts.len()])),
+                    ("seed", Json::num(idx as f64)),
+                ]);
+                let t = Instant::now();
+                let resp = client.call(&req)?;
+                let e2e = t.elapsed().as_secs_f64();
+                anyhow::ensure!(
+                    resp.get("status").and_then(|s| s.as_str()) == Some("ok"),
+                    "request failed: {resp}"
+                );
+                let wall = resp.get("wall_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let queue = resp.get("queue_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                out.push((e2e, wall, queue));
+            }
+            Ok(out)
+        }));
+    }
+
+    let mut e2e = Vec::new();
+    let mut exec = Vec::new();
+    let mut queued = Vec::new();
+    for h in handles {
+        for (a, b, c) in h.join().expect("client thread")? {
+            e2e.push(a);
+            exec.push(b);
+            queued.push(c);
+        }
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    let n = e2e.len();
+
+    // server-side stats
+    let mut client = Client::connect(&addr)?;
+    let sstats = client.call(&Json::obj(vec![("op", Json::str("stats"))]))?;
+
+    println!("completed {n} requests in {total_s:.2}s");
+    println!("throughput        : {:.2} videos/min", n as f64 * 60.0 / total_s);
+    println!(
+        "e2e latency       : p50 {:.2}s  p95 {:.2}s  mean {:.2}s",
+        stats::percentile(&e2e, 50.0),
+        stats::percentile(&e2e, 95.0),
+        stats::mean(&e2e)
+    );
+    println!(
+        "execution latency : p50 {:.2}s  mean {:.2}s",
+        stats::percentile(&exec, 50.0),
+        stats::mean(&exec)
+    );
+    println!("queueing          : mean {:.2}s", stats::mean(&queued));
+    println!("server stats      : {sstats}");
+
+    let _ = client.call(&Json::obj(vec![("op", Json::str("shutdown"))]));
+    server.shutdown();
+    println!("\nserver stopped cleanly");
+    Ok(())
+}

@@ -1,0 +1,250 @@
+"""AOT exporter: lower every model piece to HLO text + dump weights.
+
+This is the only place Python touches the pipeline; it runs once under
+``make artifacts`` and is a no-op when sources are unchanged (content hash
+stamp). The Rust coordinator consumes:
+
+* ``artifacts/<model>/<bucket>/{embed,spatial_block,temporal_block,final}.hlo.txt``
+* ``artifacts/<model>/{t_embed,text_proj,text_kv}.hlo.txt`` (bucket-free)
+* ``artifacts/<model>/weights/<piece>.<param>.npy``
+* ``artifacts/manifest.json`` — shapes, parameter ordering (the ABI),
+  sampler constants.
+
+Each piece returns a single array and is converted with
+``return_tuple=False`` so the entry root is a plain buffer — outputs chain
+straight into the next ``execute_b`` on the Rust side with no tuple
+unwrapping.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+from .configs import BUCKETS, EXPORT_PLAN, MODELS, Bucket, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """jax.jit(...).lower(...) -> XLA HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _param_specs(cfg: ModelConfig, piece: str) -> list[jax.ShapeDtypeStruct]:
+    return [_spec(s) for _, s in model.piece_params(cfg)[piece]]
+
+
+def lower_piece(cfg: ModelConfig, piece: str, bucket: Bucket | None) -> str:
+    """Lower one model piece to HLO text with static shapes."""
+    d = cfg.d_model
+    s = cfg.text_len
+    if piece == "t_embed":
+        fn = lambda t, *w: model.t_embed(t, *w, cfg=cfg)
+        args = [_spec(())] + _param_specs(cfg, "t_embed")
+    elif piece == "text_proj":
+        fn = model.text_proj
+        args = [_spec((s, cfg.d_text))] + _param_specs(cfg, "text_proj")
+    elif piece == "text_k":
+        fn = model.text_k
+        args = [_spec((s, d))] + _param_specs(cfg, "text_k")
+    elif piece == "text_v":
+        fn = model.text_v
+        args = [_spec((s, d))] + _param_specs(cfg, "text_v")
+    elif piece == "embed":
+        assert bucket is not None
+        fn = lambda x, *w: model.embed(x, *w, cfg=cfg, bucket=bucket)
+        args = [_spec((bucket.frames, bucket.tokens, cfg.latent_channels))]
+        args += _param_specs(cfg, "embed")
+    elif piece in ("spatial_block", "temporal_block"):
+        assert bucket is not None
+        kind = piece.split("_")[0]
+        fn = lambda h, c, tk, tv, *w: model.dit_block(
+            h, c, tk, tv, *w, cfg=cfg, bucket=bucket, kind=kind,
+            ops=model.PALLAS_OPS,
+        )
+        args = [
+            _spec((bucket.frames, bucket.tokens, d)),
+            _spec((d,)),
+            _spec((s, d)),
+            _spec((s, d)),
+        ] + _param_specs(cfg, piece)
+    elif piece in ("sb_attn_spatial", "sb_attn_temporal"):
+        assert bucket is not None
+        kind = piece.rsplit("_", 1)[1]
+        fn = lambda h, c, *w: model.block_attn_sub(
+            h, c, *w, cfg=cfg, bucket=bucket, kind=kind, ops=model.PALLAS_OPS
+        )
+        args = [_spec((bucket.frames, bucket.tokens, d)), _spec((d,))]
+        args += _param_specs(cfg, "sb_attn")
+    elif piece == "sb_cross":
+        assert bucket is not None
+        fn = lambda h, tk, tv, *w: model.block_cross_sub(
+            h, tk, tv, *w, cfg=cfg, bucket=bucket, ops=model.PALLAS_OPS
+        )
+        args = [
+            _spec((bucket.frames, bucket.tokens, d)),
+            _spec((s, d)),
+            _spec((s, d)),
+        ] + _param_specs(cfg, "sb_cross")
+    elif piece == "sb_mlp":
+        assert bucket is not None
+        fn = lambda h, c, *w: model.block_mlp_sub(
+            h, c, *w, cfg=cfg, bucket=bucket, ops=model.PALLAS_OPS
+        )
+        args = [_spec((bucket.frames, bucket.tokens, d)), _spec((d,))]
+        args += _param_specs(cfg, "sb_mlp")
+    elif piece == "final":
+        assert bucket is not None
+        fn = lambda h, c, *w: model.final(
+            h, c, *w, cfg=cfg, bucket=bucket, ops=model.PALLAS_OPS
+        )
+        args = [_spec((bucket.frames, bucket.tokens, d)), _spec((d,))]
+        args += _param_specs(cfg, "final")
+    else:
+        raise ValueError(f"unknown piece {piece}")
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+MODEL_PIECES = ("t_embed", "text_proj", "text_k", "text_v")
+BUCKET_PIECES = (
+    "embed",
+    "spatial_block",
+    "temporal_block",
+    "sb_attn_spatial",
+    "sb_attn_temporal",
+    "sb_cross",
+    "sb_mlp",
+    "final",
+)
+
+
+def export_weights(cfg: ModelConfig, out: Path) -> dict[str, list[str]]:
+    """Dump all weights as .npy and return {piece_key: [param names]}."""
+    params = model.init_params(cfg)
+    wdir = out / cfg.name / "weights"
+    wdir.mkdir(parents=True, exist_ok=True)
+    index: dict[str, list[str]] = {}
+    for piece_key, arrays in params.items():
+        index[piece_key] = list(arrays.keys())
+        for name, arr in arrays.items():
+            np.save(wdir / f"{piece_key}.{name}.npy", arr)
+    return index
+
+
+def source_hash() -> str:
+    """Hash of everything that affects the artifacts."""
+    here = Path(__file__).parent
+    files = sorted(
+        list(here.glob("*.py")) + list((here / "kernels").glob("*.py"))
+    )
+    h = hashlib.sha256()
+    for f in files:
+        h.update(f.read_bytes())
+    return h.hexdigest()
+
+
+def export_all(out: Path, models: list[str], force: bool) -> None:
+    stamp = out / ".stamp"
+    want = source_hash() + ":" + ",".join(sorted(models))
+    if not force and stamp.exists() and stamp.read_text() == want:
+        print(f"artifacts up-to-date ({out})")
+        return
+
+    manifest: dict = {
+        "version": 1,
+        "schedule": {
+            "train_timesteps": configs.TRAIN_TIMESTEPS,
+            "beta_start": configs.BETA_START,
+            "beta_end": configs.BETA_END,
+        },
+        "models": {},
+    }
+
+    for mname in models:
+        cfg = MODELS[mname]
+        print(f"[aot] {mname}: weights", flush=True)
+        windex = export_weights(cfg, out)
+        specs = model.piece_params(cfg)
+
+        mdir = out / cfg.name
+        mdir.mkdir(parents=True, exist_ok=True)
+        for piece in MODEL_PIECES:
+            print(f"[aot] {mname}: lower {piece}", flush=True)
+            (mdir / f"{piece}.hlo.txt").write_text(lower_piece(cfg, piece, None))
+
+        buckets = {}
+        for bname in EXPORT_PLAN[cfg.name]:
+            bucket = BUCKETS[bname]
+            bdir = mdir / bname
+            bdir.mkdir(parents=True, exist_ok=True)
+            for piece in BUCKET_PIECES:
+                print(f"[aot] {mname}/{bname}: lower {piece}", flush=True)
+                (bdir / f"{piece}.hlo.txt").write_text(
+                    lower_piece(cfg, piece, bucket)
+                )
+            buckets[bname] = {
+                "ph": bucket.ph,
+                "pw": bucket.pw,
+                "frames": bucket.frames,
+                "tokens": bucket.tokens,
+                "dir": f"{cfg.name}/{bname}",
+            }
+
+        manifest["models"][cfg.name] = {
+            "layers": cfg.layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_text": cfg.d_text,
+            "text_len": cfg.text_len,
+            "latent_channels": cfg.latent_channels,
+            "mlp_ratio": cfg.mlp_ratio,
+            "t_freq_dim": cfg.t_freq_dim,
+            "sampler": cfg.sampler,
+            "steps": cfg.steps,
+            "cfg_scale": cfg.cfg_scale,
+            "weights_dir": f"{cfg.name}/weights",
+            "piece_params": {p: [n for n, _ in sp] for p, sp in specs.items()},
+            "weight_index": windex,
+            "buckets": buckets,
+        }
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    stamp.write_text(want)
+    print(f"[aot] wrote manifest + stamp to {out}")
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument(
+        "--models", default=",".join(MODELS), help="comma-separated presets"
+    )
+    ap.add_argument("--force", action="store_true")
+    ns = ap.parse_args(argv)
+    export_all(Path(ns.out), [m for m in ns.models.split(",") if m], ns.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Model presets and shape buckets for the Foresight reproduction.
+
+The paper evaluates on OpenSora-v1.2, Latte-1.0 and CogVideoX-2b (A100,
+pretrained billion-parameter models). This environment is CPU-only with no
+pretrained weights, so each model is replaced by a scaled-down ST-DiT with
+the same topology, sampler family, step count and CFG scale (see DESIGN.md
+§1). The `analysis` preset has the paper's 28 layer pairs so that the
+layer-resolution of the Fig. 2/6/13/14 analyses is faithful.
+
+Everything the Rust coordinator needs to know about shapes and parameter
+ordering is emitted into artifacts/manifest.json by aot.py; this module is
+the single source of truth on the Python side.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + sampling hyper-parameters for one model preset."""
+
+    name: str
+    layers: int           # number of (spatial, temporal) layer pairs
+    d_model: int
+    n_heads: int
+    d_text: int           # raw prompt-embedding dim (text-encoder substitute)
+    text_len: int         # number of text tokens
+    latent_channels: int
+    mlp_ratio: int
+    t_freq_dim: int       # sinusoidal timestep embedding dim
+    sampler: str          # "rflow" | "ddim"
+    steps: int            # default denoising steps
+    cfg_scale: float
+    seed: int             # weight-init seed
+    # Depth-dependent gate bias: later layers contribute more, reproducing
+    # the paper's observation (Fig. 2) that late layers show larger
+    # step-to-step feature change. Gate bias ramps from gate_lo..gate_hi.
+    gate_lo: float = 0.3
+    gate_hi: float = 1.0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """A static-shape compilation bucket: latent patch grid x frames."""
+
+    name: str
+    ph: int               # patch rows
+    pw: int               # patch cols
+    frames: int
+
+    @property
+    def tokens(self) -> int:
+        return self.ph * self.pw
+
+
+# ---------------------------------------------------------------------------
+# Presets. Paper models -> sim presets (DESIGN.md §1, §4).
+# ---------------------------------------------------------------------------
+
+OPENSORA_SIM = ModelConfig(
+    name="opensora-sim", layers=6, d_model=96, n_heads=4,
+    d_text=64, text_len=16, latent_channels=8, mlp_ratio=4, t_freq_dim=128,
+    sampler="rflow", steps=30, cfg_scale=7.5, seed=1001,
+)
+
+LATTE_SIM = ModelConfig(
+    name="latte-sim", layers=7, d_model=80, n_heads=4,
+    d_text=64, text_len=16, latent_channels=8, mlp_ratio=4, t_freq_dim=128,
+    sampler="ddim", steps=50, cfg_scale=7.5, seed=1002,
+)
+
+COGVIDEOX_SIM = ModelConfig(
+    name="cogvideox-sim", layers=8, d_model=112, n_heads=4,
+    d_text=64, text_len=16, latent_channels=8, mlp_ratio=4, t_freq_dim=128,
+    sampler="ddim", steps=50, cfg_scale=6.0, seed=1003,
+)
+
+# 28 layer pairs like OpenSora-v1.2, narrow width: used for the feature
+# dynamics analyses that need the paper's layer resolution.
+ANALYSIS = ModelConfig(
+    name="analysis", layers=28, d_model=48, n_heads=4,
+    d_text=64, text_len=16, latent_channels=8, mlp_ratio=4, t_freq_dim=128,
+    sampler="rflow", steps=30, cfg_scale=7.5, seed=1004,
+)
+
+MODELS: dict[str, ModelConfig] = {
+    m.name: m for m in (OPENSORA_SIM, LATTE_SIM, COGVIDEOX_SIM, ANALYSIS)
+}
+
+# Resolution buckets. Names mirror the paper's settings; the patch grids are
+# the scaled-down latent equivalents. All token counts are multiples of 8 so
+# the Pallas tiles divide evenly (see kernels/attention.py).
+BUCKETS: dict[str, Bucket] = {
+    b.name: b
+    for b in (
+        Bucket("240p-2s", 6, 8, 8),     # P=48
+        Bucket("240p-4s", 6, 8, 16),    # P=48, F=16
+        Bucket("480p-2s", 8, 12, 8),    # P=96
+        Bucket("720p-2s", 12, 16, 8),   # P=192
+        Bucket("512sq-2s", 8, 8, 8),    # Latte 512x512 -> P=64
+        Bucket("480x720-2s", 8, 10, 8),  # CogVideoX 480x720 -> P=80
+    )
+}
+
+# Which buckets each model preset is exported for (driven by the experiment
+# index in DESIGN.md §5).
+EXPORT_PLAN: dict[str, list[str]] = {
+    "opensora-sim": ["240p-2s", "240p-4s", "480p-2s", "720p-2s"],
+    "latte-sim": ["512sq-2s"],
+    "cogvideox-sim": ["480x720-2s"],
+    "analysis": ["240p-2s", "480p-2s", "720p-2s"],
+}
+
+# Denoising-schedule constants shared with the Rust samplers (emitted into
+# the manifest so both sides agree bit-for-bit on the timestep grid).
+TRAIN_TIMESTEPS = 1000
+BETA_START = 1e-4
+BETA_END = 2e-2

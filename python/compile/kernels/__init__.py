@@ -1,0 +1,20 @@
+"""L1 Pallas kernels for the Foresight ST-DiT (build-time only).
+
+Exports the three fused kernels the L2 model composes, plus their pure-jnp
+oracles (``ref``). All kernels lower with ``interpret=True`` so the AOT HLO
+runs on the CPU PJRT client driven by the Rust coordinator.
+"""
+
+from . import ref
+from .attention import flash_attention, multi_head_attention
+from .mlp import fused_mlp
+from .modulate import layernorm, ln_modulate
+
+__all__ = [
+    "ref",
+    "flash_attention",
+    "multi_head_attention",
+    "fused_mlp",
+    "layernorm",
+    "ln_modulate",
+]

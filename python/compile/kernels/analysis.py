@@ -1,0 +1,137 @@
+"""L1 kernel VMEM-footprint / MXU-utilisation estimates (DESIGN.md §9).
+
+interpret=True wallclock is CPU-interpreter time, not a TPU proxy, so the
+TPU-facing performance story is analytical: for every kernel × shape the
+model uses, emit the VMEM working set per grid step, the arithmetic
+intensity, and an MXU-utilisation upper bound from how well the matmul tile
+shapes fill the 128×128 systolic array.
+
+Run: ``python -m compile.kernels.analysis`` → artifacts/kernel_analysis.json
+(also executed by `make artifacts` via aot? no — standalone, cheap).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from ..configs import BUCKETS, EXPORT_PLAN, MODELS
+from .attention import VMEM_BUDGET_BYTES, _largest_divisor_tile, DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K
+
+MXU_DIM = 128  # TPU systolic array side
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+def mxu_utilisation(m: int, k: int, n: int) -> float:
+    """Fraction of the 128x128 MXU a (m,k)x(k,n) matmul keeps busy.
+
+    Tiles smaller than 128 in the contracted or output dims leave array
+    rows/columns idle; utilisation is the product of fill fractions.
+    """
+    fill = lambda d: min(d, MXU_DIM) / MXU_DIM
+    return fill(m) * fill(k) * fill(n)
+
+
+def attention_estimate(bh: int, sq: int, skv: int, d: int) -> dict:
+    working_set = 4 * (2 * bh * sq * d + 2 * bh * skv * d + bh * sq * skv)
+    whole = working_set <= VMEM_BUDGET_BYTES
+    if whole:
+        vmem = working_set
+        grid = 1
+        # scores matmul (sq x d)·(d x skv) and pv (sq x skv)·(skv x d)
+        util = 0.5 * (mxu_utilisation(sq, d, skv) + mxu_utilisation(sq, skv, d))
+    else:
+        bq = _largest_divisor_tile(sq, DEFAULT_BLOCK_Q)
+        bk = _largest_divisor_tile(skv, DEFAULT_BLOCK_K)
+        # q tile + full k/v + accumulators per grid step
+        vmem = 4 * (bq * d * 2 + 2 * skv * d + bq * bk + 2 * bq)
+        grid = bh * (sq // bq)
+        util = 0.5 * (mxu_utilisation(bq, d, bk) + mxu_utilisation(bq, bk, d))
+    flops = 4.0 * bh * sq * skv * d
+    bytes_hbm = 4.0 * (2 * bh * sq * d + 2 * bh * skv * d)
+    return {
+        "path": "whole" if whole else "tiled-flash",
+        "grid_steps": grid,
+        "vmem_bytes_per_step": vmem,
+        "vmem_fraction": vmem / VMEM_BYTES,
+        "flops": flops,
+        "hbm_bytes": bytes_hbm,
+        "arith_intensity": flops / bytes_hbm,
+        "mxu_util_upper_bound": util,
+    }
+
+
+def mlp_estimate(rows: int, d: int, h: int) -> dict:
+    ws = 4 * (2 * rows * d + rows * h + 2 * d * h + d + h)
+    whole = ws <= VMEM_BUDGET_BYTES
+    vmem = ws if whole else 4 * (64 * d * 2 + 64 * h + 2 * d * h + d + h)
+    flops = 4.0 * rows * d * h
+    bytes_hbm = 4.0 * (2 * rows * d + 2 * d * h)
+    util = 0.5 * (mxu_utilisation(rows, d, h) + mxu_utilisation(rows, h, d))
+    return {
+        "path": "whole" if whole else "row-tiled",
+        "vmem_bytes_per_step": vmem,
+        "vmem_fraction": vmem / VMEM_BYTES,
+        "flops": flops,
+        "hbm_bytes": bytes_hbm,
+        "arith_intensity": flops / bytes_hbm,
+        "mxu_util_upper_bound": util,
+    }
+
+
+def ln_modulate_estimate(rows: int, d: int) -> dict:
+    ws = 4 * (2 * rows * d + 2 * d)
+    return {
+        "path": "whole" if ws <= VMEM_BUDGET_BYTES else "row-tiled",
+        "vmem_bytes_per_step": min(ws, VMEM_BUDGET_BYTES),
+        "vmem_fraction": min(ws, VMEM_BUDGET_BYTES) / VMEM_BYTES,
+        "flops": 8.0 * rows * d,  # elementwise + moments
+        "hbm_bytes": 4.0 * 2 * rows * d,
+        "arith_intensity": 1.0,  # memory-bound by construction
+        "mxu_util_upper_bound": 0.0,  # VPU op, no MXU
+    }
+
+
+def build_report() -> dict:
+    report: dict = {"vmem_budget_bytes": VMEM_BUDGET_BYTES, "configs": {}}
+    for mname, buckets in EXPORT_PLAN.items():
+        cfg = MODELS[mname]
+        d = cfg.d_model
+        dh = cfg.d_head
+        for bname in buckets:
+            b = BUCKETS[bname]
+            rows = b.frames * b.tokens
+            key = f"{mname}/{bname}"
+            report["configs"][key] = {
+                "spatial_attention": attention_estimate(
+                    b.frames * cfg.n_heads, b.tokens, b.tokens, dh
+                ),
+                "temporal_attention": attention_estimate(
+                    b.tokens * cfg.n_heads, b.frames, b.frames, dh
+                ),
+                "cross_attention": attention_estimate(
+                    cfg.n_heads, rows, cfg.text_len, dh
+                ),
+                "mlp": mlp_estimate(rows, d, cfg.mlp_ratio * d),
+                "ln_modulate": ln_modulate_estimate(rows, d),
+            }
+    return report
+
+
+def main() -> None:
+    out = Path(__file__).resolve().parents[3] / "artifacts" / "kernel_analysis.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    report = build_report()
+    out.write_text(json.dumps(report, indent=1))
+    print(f"wrote {out}")
+    # summary to stdout
+    for key, cfgs in report["configs"].items():
+        sa = cfgs["spatial_attention"]
+        print(
+            f"{key:28} spatial-attn: {sa['path']:12} vmem {sa['vmem_fraction']*100:5.1f}% "
+            f"AI {sa['arith_intensity']:6.1f} MXU≤{sa['mxu_util_upper_bound']*100:4.0f}%"
+        )
+
+
+if __name__ == "__main__":
+    main()

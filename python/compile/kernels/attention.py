@@ -1,0 +1,162 @@
+"""Pallas flash-style multi-head attention kernel (L1).
+
+Hardware adaptation (DESIGN.md §3): the paper's models run FlashAttention on
+A100 (threadblock-tiled, softmax accumulators in shared memory / registers).
+On the TPU model targeted by Pallas the same insight — never materialise the
+S_q x S_kv score matrix in HBM — maps to:
+
+* grid over ``(batch*heads, q_tiles)``: each grid step holds one q tile in
+  VMEM (the TPU scratchpad standing in for shared memory);
+* K/V are brought into VMEM by ``BlockSpec`` once per grid step and walked in
+  ``bk``-sized tiles by an in-kernel ``fori_loop`` carrying the online-softmax
+  running statistics ``(m, l, acc)``;
+* matmuls are ``q_tile @ k_tile.T`` / ``p @ v_tile`` shapes sized for the MXU
+  (see kernels/analysis.py for the VMEM-footprint / MXU-utilisation model).
+
+Execution here uses ``interpret=True`` (CPU PJRT cannot run Mosaic
+custom-calls); the lowered HLO is plain XLA ops, so the AOT artifacts run on
+the Rust PJRT client unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. Both are upper bounds; callers get the largest divisor
+# of the actual sequence length not exceeding these.
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+# VMEM working-set budget for the untiled fast path (half of a TPU core's
+# ~16 MiB VMEM, leaving headroom for double-buffering and scratch). When
+# q, k, v, o and the score matrix all fit, the whole attention runs as a
+# single-block kernel — on real hardware this avoids pointless HBM
+# round-trips between tiles, and under interpret=True it avoids the
+# per-grid-step interpreter overhead (EXPERIMENTS.md §Perf iteration 1).
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _whole_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """Single-block attention: everything resident in VMEM."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o_ref[...] = jnp.einsum("bqk,bkd->bqd", p, v) / p.sum(axis=-1, keepdims=True)
+
+
+def _largest_divisor_tile(n: int, cap: int) -> int:
+    """Largest t <= cap with n % t == 0 (n >= 1)."""
+    t = min(n, cap)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, skv: int, scale: float):
+    """One (batch-head, q-tile) grid step of online-softmax attention."""
+    q = q_ref[0]  # [bq, d] VMEM tile
+    bq, d = q.shape
+
+    m0 = jnp.full((bq,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(i * bk, bk), slice(None)))  # [bk, d]
+        v = pl.load(v_ref, (0, pl.dslice(i * bk, bk), slice(None)))  # [bk, d]
+        s = jnp.dot(q, k.T) * scale                                   # [bq, bk]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, skv // bk, body, (m0, l0, acc0))
+    o_ref[0, ...] = acc / l[:, None]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Fused attention over flattened batch-heads.
+
+    Args:
+      q: ``[BH, Sq, d]`` queries (batch x heads already flattened).
+      k: ``[BH, Skv, d]`` keys; ``Skv`` may differ from ``Sq``
+         (cross-attention).
+      v: ``[BH, Skv, d]`` values.
+
+    Returns:
+      ``[BH, Sq, d]`` attention output, numerically equal (to f32 tolerance)
+      to ``softmax(q k^T / sqrt(d)) v``.
+    """
+    bh, sq, d = q.shape
+    bh_k, skv, dk = k.shape
+    assert bh == bh_k and d == dk, (q.shape, k.shape)
+    assert v.shape == k.shape, (v.shape, k.shape)
+    scale_f = 1.0 / (d ** 0.5)
+
+    # Fast path: whole working set fits the VMEM budget → one block.
+    working_set = 4 * (2 * bh * sq * d + 2 * bh * skv * d + bh * sq * skv)
+    if working_set <= VMEM_BUDGET_BYTES:
+        return pl.pallas_call(
+            functools.partial(_whole_kernel, scale=scale_f),
+            out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+            interpret=True,
+        )(q, k, v)
+
+    bq = _largest_divisor_tile(sq, block_q)
+    bk = _largest_divisor_tile(skv, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_flash_kernel, bk=bk, skv=skv, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, skv, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, skv, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def multi_head_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, n_heads: int
+) -> jax.Array:
+    """Head split/merge wrapper around :func:`flash_attention`.
+
+    Args:
+      q: ``[B, Sq, D]``; k, v: ``[B, Skv, D]`` with ``D = n_heads * d_head``.
+
+    Returns:
+      ``[B, Sq, D]``.
+    """
+    b, sq, dm = q.shape
+    skv = k.shape[1]
+    dh = dm // n_heads
+
+    def split(x, s):
+        return (
+            x.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3).reshape(b * n_heads, s, dh)
+        )
+
+    o = flash_attention(split(q, sq), split(k, skv), split(v, skv))
+    return o.reshape(b, n_heads, sq, dh).transpose(0, 2, 1, 3).reshape(b, sq, dm)

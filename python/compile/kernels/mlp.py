@@ -1,0 +1,81 @@
+"""Pallas fused transformer MLP kernel (L1).
+
+Fuses ``gelu(x @ w1 + b1) @ w2 + b2`` into one kernel so the ``[R, 4D]``
+intermediate activation never round-trips through HBM: each grid step keeps
+one row tile plus both weight panels in VMEM and produces the output tile
+directly. On the MXU model both matmuls are ``(br x D) @ (D x 4D)`` and
+``(br x 4D) @ (4D x D)`` — see kernels/analysis.py for the footprint math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _largest_divisor_tile(n: int, cap: int) -> int:
+    t = min(n, cap)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]  # [br, D]
+    h = x @ w1_ref[...] + b1_ref[...]
+    h = jax.nn.gelu(h, approximate=True)
+    o_ref[...] = h @ w2_ref[...] + b2_ref[...]
+
+
+def fused_mlp(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jax.Array:
+    """Fused two-layer GELU MLP.
+
+    Args:
+      x: ``[R, D]`` input rows (callers flatten leading dims).
+      w1: ``[D, H]``, b1: ``[H]``, w2: ``[H, D]``, b2: ``[D]``.
+
+    Returns:
+      ``[R, D]``.
+    """
+    r, d = x.shape
+    h = w1.shape[1]
+    assert w1.shape == (d, h) and b1.shape == (h,), (w1.shape, b1.shape)
+    assert w2.shape == (h, d) and b2.shape == (d,), (w2.shape, b2.shape)
+    # Whole-block fast path when activations + weights + the [r, H]
+    # intermediate fit the VMEM budget (see attention.VMEM_BUDGET_BYTES).
+    from .attention import VMEM_BUDGET_BYTES
+
+    working_set = 4 * (2 * r * d + r * h + 2 * d * h + d + h)
+    if working_set <= VMEM_BUDGET_BYTES:
+        return pl.pallas_call(
+            _mlp_kernel,
+            out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+            interpret=True,
+        )(x, w1, b1, w2, b2)
+    br = _largest_divisor_tile(r, block_rows)
+
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

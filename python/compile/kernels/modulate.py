@@ -1,0 +1,93 @@
+"""Pallas fused LayerNorm + adaLN modulation kernel (L1).
+
+The paper's workload characterisation (Appendix A.2, Fig. 9) attributes ~35%
+of inference time to non-linear glue ops — LayerNorm, scaling, residuals —
+which on GPU are separate memory-bound kernels. The TPU adaptation fuses the
+chain ``modulate(LN(x), shift, scale) = LN(x) * (1 + scale) + shift`` into a
+single VMEM-resident pass: each grid step loads one row tile, computes the
+normalisation moments in registers and applies the conditioning affine
+before writing back — one HBM read + one HBM write per element.
+
+``shift``/``scale`` come from the block's adaLN projection of the timestep
+conditioning vector and are ``[D]`` (per-video, token-invariant), so they are
+broadcast into VMEM once per grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 64
+LN_EPS = 1e-6
+
+
+def _largest_divisor_tile(n: int, cap: int) -> int:
+    t = min(n, cap)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _ln_modulate_kernel(x_ref, shift_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...]  # [br, D]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = xn * (1.0 + scale_ref[...]) + shift_ref[...]
+
+
+def ln_modulate(
+    x: jax.Array,
+    shift: jax.Array,
+    scale: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    eps: float = LN_EPS,
+) -> jax.Array:
+    """Fused ``LN(x) * (1 + scale) + shift`` over the last dim.
+
+    Args:
+      x: ``[R, D]`` rows to normalise (callers flatten leading dims).
+      shift, scale: ``[D]`` conditioning vectors.
+
+    Returns:
+      ``[R, D]``.
+    """
+    r, d = x.shape
+    assert shift.shape == (d,) and scale.shape == (d,), (shift.shape, scale.shape, d)
+    kernel = functools.partial(_ln_modulate_kernel, eps=eps)
+
+    # Whole-block fast path (see attention.VMEM_BUDGET_BYTES).
+    from .attention import VMEM_BUDGET_BYTES
+
+    if 4 * (2 * r * d + 2 * d) <= VMEM_BUDGET_BYTES:
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+            interpret=True,
+        )(x, shift, scale)
+
+    br = _largest_divisor_tile(r, block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=True,
+    )(x, shift, scale)
+
+
+def layernorm(x: jax.Array, *, eps: float = LN_EPS) -> jax.Array:
+    """Plain affine-free LayerNorm via the fused kernel (shift=scale=0)."""
+    d = x.shape[-1]
+    zeros = jnp.zeros((d,), x.dtype)
+    return ln_modulate(x, zeros, zeros, eps=eps)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness reference).
+
+Every kernel in this package has an exact (to f32 tolerance) counterpart
+here, written with the most literal jnp formulation possible. pytest
+(python/tests/test_kernels.py) asserts allclose between the two over
+hypothesis-driven shape/seed sweeps; the L2 model can also be built entirely
+from these for a second, kernel-free HLO path used in equivalence tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-6
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Reference attention over flattened batch-heads: ``[BH, Sq, d]``."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.float32(d)).astype(q.dtype)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def multi_head_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, n_heads: int
+) -> jax.Array:
+    """Reference multi-head attention: q ``[B, Sq, D]``, k/v ``[B, Skv, D]``."""
+    b, sq, dm = q.shape
+    skv = k.shape[1]
+    dh = dm // n_heads
+
+    def split(x, s):
+        return x.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3).reshape(
+            b * n_heads, s, dh
+        )
+
+    o = attention_ref(split(q, sq), split(k, skv), split(v, skv))
+    return o.reshape(b, n_heads, sq, dh).transpose(0, 2, 1, 3).reshape(b, sq, dm)
+
+
+def ln_modulate_ref(
+    x: jax.Array, shift: jax.Array, scale: jax.Array, *, eps: float = LN_EPS
+) -> jax.Array:
+    """Reference ``LN(x) * (1 + scale) + shift`` over the last dim."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    xn = (x - mu) / jnp.sqrt(var + eps)
+    return xn * (1.0 + scale) + shift
+
+
+def layernorm_ref(x: jax.Array, *, eps: float = LN_EPS) -> jax.Array:
+    d = x.shape[-1]
+    z = jnp.zeros((d,), x.dtype)
+    return ln_modulate_ref(x, z, z, eps=eps)
+
+
+def mlp_ref(
+    x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array
+) -> jax.Array:
+    """Reference two-layer GELU MLP."""
+    h = jax.nn.gelu(x @ w1 + b1, approximate=True)
+    return h @ w2 + b2

@@ -1,0 +1,422 @@
+"""L2: Spatial-Temporal DiT (ST-DiT) in JAX, composed from the L1 kernels.
+
+The model mirrors the topology the paper targets (OpenSora/Latte/CogVideoX
+family, Appendix A.1 Fig. 8): alternating Spatial-DiT and Temporal-DiT
+blocks, each ``{self/temporal attention, text cross-attention, MLP}`` with
+adaLN timestep conditioning, plus patch/text/timestep embedders and a final
+projection back to latent channels.
+
+Crucially for Foresight, each piece is lowered to a **separate** HLO module
+(see aot.py): the Rust coordinator makes the paper's per-layer, per-step
+reuse decision by either dispatching a block executable or feeding the
+cached activation forward — so the block boundary here *is* the reuse
+granularity (coarse, 2 blocks/layer → the paper's 2LHWF cache).
+
+All functions take weights as explicit positional arguments in the order
+given by ``piece_params``; that order is recorded in artifacts/manifest.json
+and is the ABI between Python (build time) and Rust (request path).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import Bucket, ModelConfig
+from . import kernels
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Parameter ABI: piece name -> ordered (param name, shape) list.
+# Shapes are functions of cfg only — buckets never affect weight shapes.
+# ---------------------------------------------------------------------------
+
+
+def piece_params(cfg: ModelConfig) -> dict[str, list[tuple[str, tuple[int, ...]]]]:
+    """Ordered parameter (name, shape) lists per piece — the Python/Rust ABI."""
+    d = cfg.d_model
+    h = cfg.mlp_ratio * d
+    c = cfg.latent_channels
+    block = [
+        ("adaln_w", (d, 6 * d)),
+        ("adaln_b", (6 * d,)),
+        ("qkv_w", (d, 3 * d)),
+        ("qkv_b", (3 * d,)),
+        ("attn_proj_w", (d, d)),
+        ("attn_proj_b", (d,)),
+        ("cross_q_w", (d, d)),
+        ("cross_q_b", (d,)),
+        ("cross_proj_w", (d, d)),
+        ("cross_proj_b", (d,)),
+        ("mlp_w1", (d, h)),
+        ("mlp_b1", (h,)),
+        ("mlp_w2", (h, d)),
+        ("mlp_b2", (d,)),
+    ]
+    return {
+        "t_embed": [
+            ("tw1", (cfg.t_freq_dim, d)),
+            ("tb1", (d,)),
+            ("tw2", (d, d)),
+            ("tb2", (d,)),
+        ],
+        "text_proj": [("w", (cfg.d_text, d)), ("b", (d,))],
+        "text_k": [("k_w", (d, d)), ("k_b", (d,))],
+        "text_v": [("v_w", (d, d)), ("v_b", (d,))],
+        "embed": [("patch_w", (c, d)), ("patch_b", (d,))],
+        "spatial_block": block,
+        "temporal_block": block,
+        # Sub-block pieces reuse subsets of the block weights (same arrays,
+        # narrower argument lists) — needed by the PAB / T-GATE baselines.
+        "sb_attn": [
+            ("adaln_w", (d, 6 * d)),
+            ("adaln_b", (6 * d,)),
+            ("qkv_w", (d, 3 * d)),
+            ("qkv_b", (3 * d,)),
+            ("attn_proj_w", (d, d)),
+            ("attn_proj_b", (d,)),
+        ],
+        "sb_cross": [
+            ("cross_q_w", (d, d)),
+            ("cross_q_b", (d,)),
+            ("cross_proj_w", (d, d)),
+            ("cross_proj_b", (d,)),
+        ],
+        "sb_mlp": [
+            ("adaln_w", (d, 6 * d)),
+            ("adaln_b", (6 * d,)),
+            ("mlp_w1", (d, h)),
+            ("mlp_b1", (h,)),
+            ("mlp_w2", (h, d)),
+            ("mlp_b2", (d,)),
+        ],
+        "final": [
+            ("f_adaln_w", (d, 2 * d)),
+            ("f_adaln_b", (2 * d,)),
+            ("out_w", (d, c)),
+            ("out_b", (c,)),
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Weight initialisation.
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig) -> dict[str, dict[str, np.ndarray]]:
+    """Deterministic weight init for one model preset.
+
+    Returns ``{piece_key: {param_name: array}}`` where block piece keys are
+    ``layer{i:02d}.spatial`` / ``layer{i:02d}.temporal`` (each holding the 14
+    block params plus its own cross-attention ``kv_w``/``kv_b`` consumed by
+    the per-layer ``text_kv`` executable).
+
+    Init scheme (DESIGN.md §1): fan-in-scaled Gaussians, zero biases, and an
+    adaLN gate bias that ramps with depth from ``gate_lo`` to ``gate_hi`` so
+    later layers contribute larger residual updates — the synthetic
+    counterpart of the paper's Fig. 2 observation that late-layer features
+    change more between steps.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    d = cfg.d_model
+    specs = piece_params(cfg)
+
+    def w(shape: tuple[int, ...]) -> np.ndarray:
+        std = 1.0 / math.sqrt(shape[0])
+        return rng.normal(0.0, std, size=shape).astype(np.float32)
+
+    def zeros(shape: tuple[int, ...]) -> np.ndarray:
+        return np.zeros(shape, np.float32)
+
+    def init_piece(spec: list[tuple[str, tuple[int, ...]]]) -> dict[str, np.ndarray]:
+        out = {}
+        for name, shape in spec:
+            out[name] = zeros(shape) if len(shape) == 1 else w(shape)
+        return out
+
+    params: dict[str, dict[str, np.ndarray]] = {
+        "t_embed": init_piece(specs["t_embed"]),
+        "text_proj": init_piece(specs["text_proj"]),
+        "embed": init_piece(specs["embed"]),
+        "final": init_piece(specs["final"]),
+    }
+
+    n = cfg.layers
+    for i in range(n):
+        gate = cfg.gate_lo + (cfg.gate_hi - cfg.gate_lo) * (i / max(n - 1, 1))
+        for kind in ("spatial", "temporal"):
+            p = init_piece(specs["spatial_block"])
+            # adaLN weights are small so conditioning perturbs rather than
+            # dominates; the bias carries the depth-ramped gate.
+            p["adaln_w"] = (0.1 * p["adaln_w"]).astype(np.float32)
+            b = np.zeros(6 * d, np.float32)
+            b[2 * d : 3 * d] = gate  # gate_msa
+            b[5 * d : 6 * d] = gate  # gate_mlp
+            p["adaln_b"] = b
+            # Per-layer cross-attention K/V projections (consumed by the
+            # text_k / text_v executables, hoisted out of the step loop).
+            p["k_w"] = w((d, d))
+            p["k_b"] = zeros((d,))
+            p["v_w"] = w((d, d))
+            p["v_b"] = zeros((d,))
+            params[f"layer{i:02d}.{kind}"] = p
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Kernel indirection: the same model code builds the Pallas-kernel HLO
+# (use_pallas=True — the AOT path) or a pure-jnp reference HLO (tests).
+# ---------------------------------------------------------------------------
+
+
+class Ops:
+    """Dispatch table selecting Pallas kernels or jnp reference ops."""
+
+    def __init__(self, use_pallas: bool):
+        self.use_pallas = use_pallas
+        if use_pallas:
+            self.mha: Callable = kernels.multi_head_attention
+            self.ln_modulate: Callable = kernels.ln_modulate
+            self.layernorm: Callable = kernels.layernorm
+            self.mlp: Callable = kernels.fused_mlp
+        else:
+            self.mha = kref.multi_head_attention_ref
+            self.ln_modulate = kref.ln_modulate_ref
+            self.layernorm = kref.layernorm_ref
+            self.mlp = kref.mlp_ref
+
+
+PALLAS_OPS = Ops(use_pallas=True)
+REF_OPS = Ops(use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# Model pieces. Each returns a single array so the lowered HLO root is a
+# plain (non-tuple) buffer that chains directly into the next execute_b call
+# on the Rust side.
+# ---------------------------------------------------------------------------
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def t_embed(t, tw1, tb1, tw2, tb2, *, cfg: ModelConfig):
+    """Timestep scalar -> conditioning vector c [D].
+
+    Sinusoidal features of the schedule timestep (0..1000 for DDIM, 0..1
+    sigma scaled by 1000 for rflow — the Rust sampler defines the value)
+    followed by a 2-layer SiLU MLP.
+    """
+    half = cfg.t_freq_dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32) * freqs
+    emb = jnp.concatenate([jnp.cos(ang), jnp.sin(ang)])  # [t_freq_dim]
+    return silu(emb @ tw1 + tb1) @ tw2 + tb2
+
+
+def text_proj(raw, w, b):
+    """Raw prompt embedding [S, d_text] -> model-width text tokens [S, D]."""
+    return raw @ w + b
+
+
+def text_k(text, k_w, k_b):
+    """Per-layer cross-attention K, hoisted out of the step loop.
+
+    Text tokens are step-invariant, so K/V are computed once per request per
+    layer-block by the Rust engine instead of inside every block dispatch
+    (L2 perf item, DESIGN.md §8).
+    """
+    return text @ k_w + k_b
+
+
+def text_v(text, v_w, v_b):
+    """Per-layer cross-attention V (see text_k)."""
+    return text @ v_w + v_b
+
+
+def _sincos_1d(n: int, dim: int) -> jnp.ndarray:
+    """Fixed sinusoidal positional table [n, dim] (computed in-graph)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+def embed(x, patch_w, patch_b, *, cfg: ModelConfig, bucket: Bucket):
+    """Latent video [F, P, C] -> token states [F, P, D] with spatial and
+    temporal sinusoidal position embeddings added in-graph (no weight
+    dependence on the bucket)."""
+    h = x @ patch_w + patch_b  # [F, P, D]
+    d = cfg.d_model
+    pos_p = _sincos_1d(bucket.tokens, d)[None, :, :]  # [1, P, D]
+    pos_f = _sincos_1d(bucket.frames, d)[:, None, :]  # [F, 1, D]
+    return h + 0.5 * pos_p + 0.5 * pos_f
+
+
+def _adaln(c, adaln_w, adaln_b, d: int):
+    m = silu(c) @ adaln_w + adaln_b  # [6D]
+    return [m[i * d : (i + 1) * d] for i in range(6)]
+
+
+def dit_block(
+    h, c, tk, tv,
+    adaln_w, adaln_b, qkv_w, qkv_b, attn_proj_w, attn_proj_b,
+    cross_q_w, cross_q_b, cross_proj_w, cross_proj_b,
+    mlp_w1, mlp_b1, mlp_w2, mlp_b2,
+    *, cfg: ModelConfig, bucket: Bucket, kind: str, ops: Ops = PALLAS_OPS,
+):
+    """One DiT block — the paper's coarse reuse unit.
+
+    kind="spatial": self-attention over the P patch tokens, frames batched.
+    kind="temporal": self-attention over the F frames, patches batched
+    (states transposed around the attention). Both kinds share the text
+    cross-attention (precomputed K/V) and the fused MLP.
+    """
+    assert kind in ("spatial", "temporal")
+    f, p, d = bucket.frames, bucket.tokens, cfg.d_model
+    nh = cfg.n_heads
+    (shift_msa, scale_msa, gate_msa, shift_mlp, scale_mlp, gate_mlp) = _adaln(
+        c, adaln_w, adaln_b, d
+    )
+
+    # --- self / temporal attention ---------------------------------------
+    xm = ops.ln_modulate(h.reshape(f * p, d), shift_msa, scale_msa).reshape(f, p, d)
+    if kind == "temporal":
+        xm = xm.transpose(1, 0, 2)  # [P, F, D]
+    qkv = xm @ qkv_w + qkv_b
+    q, k, v = qkv[..., :d], qkv[..., d : 2 * d], qkv[..., 2 * d :]
+    a = ops.mha(q, k, v, nh)
+    if kind == "temporal":
+        a = a.transpose(1, 0, 2)  # back to [F, P, D]
+    a = a.reshape(f * p, d) @ attn_proj_w + attn_proj_b
+    h = h + (gate_msa * a).reshape(f, p, d)
+
+    # --- cross attention over text tokens --------------------------------
+    xq = ops.layernorm(h.reshape(f * p, d))
+    q = (xq @ cross_q_w + cross_q_b).reshape(1, f * p, d)
+    ca = ops.mha(q, tk[None, :, :], tv[None, :, :], nh).reshape(f * p, d)
+    ca = ca @ cross_proj_w + cross_proj_b
+    h = h + ca.reshape(f, p, d)
+
+    # --- MLP ---------------------------------------------------------------
+    xm2 = ops.ln_modulate(h.reshape(f * p, d), shift_mlp, scale_mlp)
+    m = ops.mlp(xm2, mlp_w1, mlp_b1, mlp_w2, mlp_b2)
+    h = h + (gate_mlp * m).reshape(f, p, d)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Sub-block pieces: the three sublayers of a DiT block exported separately.
+#
+# The fine-grained baselines the paper compares against (PAB's pyramid
+# attention broadcast and T-GATE's CA/SA phase split, Appendix A.6) reuse
+# *sublayers* at different rates, so the Rust coordinator needs dispatchable
+# units below the coarse DiT block. Composing attn -> cross -> mlp is
+# bit-identical to `dit_block` (asserted by python/tests/test_model.py);
+# Foresight itself only ever uses the fused block executable.
+# ---------------------------------------------------------------------------
+
+
+def block_attn_sub(
+    h, c, adaln_w, adaln_b, qkv_w, qkv_b, attn_proj_w, attn_proj_b,
+    *, cfg: ModelConfig, bucket: Bucket, kind: str, ops: Ops = PALLAS_OPS,
+):
+    """Self/temporal-attention sublayer with its adaLN modulation + residual."""
+    assert kind in ("spatial", "temporal")
+    f, p, d = bucket.frames, bucket.tokens, cfg.d_model
+    (shift_msa, scale_msa, gate_msa, _, _, _) = _adaln(c, adaln_w, adaln_b, d)
+    xm = ops.ln_modulate(h.reshape(f * p, d), shift_msa, scale_msa).reshape(f, p, d)
+    if kind == "temporal":
+        xm = xm.transpose(1, 0, 2)
+    qkv = xm @ qkv_w + qkv_b
+    q, k, v = qkv[..., :d], qkv[..., d : 2 * d], qkv[..., 2 * d :]
+    a = ops.mha(q, k, v, cfg.n_heads)
+    if kind == "temporal":
+        a = a.transpose(1, 0, 2)
+    a = a.reshape(f * p, d) @ attn_proj_w + attn_proj_b
+    return h + (gate_msa * a).reshape(f, p, d)
+
+
+def block_cross_sub(
+    h, tk, tv, cross_q_w, cross_q_b, cross_proj_w, cross_proj_b,
+    *, cfg: ModelConfig, bucket: Bucket, ops: Ops = PALLAS_OPS,
+):
+    """Text cross-attention sublayer + residual (kind-independent)."""
+    f, p, d = bucket.frames, bucket.tokens, cfg.d_model
+    xq = ops.layernorm(h.reshape(f * p, d))
+    q = (xq @ cross_q_w + cross_q_b).reshape(1, f * p, d)
+    ca = ops.mha(q, tk[None, :, :], tv[None, :, :], cfg.n_heads).reshape(f * p, d)
+    ca = ca @ cross_proj_w + cross_proj_b
+    return h + ca.reshape(f, p, d)
+
+
+def block_mlp_sub(
+    h, c, adaln_w, adaln_b, mlp_w1, mlp_b1, mlp_w2, mlp_b2,
+    *, cfg: ModelConfig, bucket: Bucket, ops: Ops = PALLAS_OPS,
+):
+    """MLP sublayer with its adaLN modulation + residual."""
+    f, p, d = bucket.frames, bucket.tokens, cfg.d_model
+    (_, _, _, shift_mlp, scale_mlp, gate_mlp) = _adaln(c, adaln_w, adaln_b, d)
+    xm2 = ops.ln_modulate(h.reshape(f * p, d), shift_mlp, scale_mlp)
+    m = ops.mlp(xm2, mlp_w1, mlp_b1, mlp_w2, mlp_b2)
+    return h + (gate_mlp * m).reshape(f, p, d)
+
+
+def final(h, c, f_adaln_w, f_adaln_b, out_w, out_b,
+          *, cfg: ModelConfig, bucket: Bucket, ops: Ops = PALLAS_OPS):
+    """Final adaLN-modulated projection back to latent channels [F, P, C]."""
+    f, p, d = bucket.frames, bucket.tokens, cfg.d_model
+    m = silu(c) @ f_adaln_w + f_adaln_b
+    shift, scale = m[:d], m[d:]
+    x = ops.ln_modulate(h.reshape(f * p, d), shift, scale)
+    out = x @ out_w + out_b
+    return out.reshape(f, p, cfg.latent_channels)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference forward (Python-side oracle for tests and for the
+# Rust engine's no-reuse cross-check).
+# ---------------------------------------------------------------------------
+
+
+def forward_step(
+    params: dict[str, dict[str, np.ndarray]],
+    cfg: ModelConfig,
+    bucket: Bucket,
+    x: jax.Array,
+    t: jax.Array,
+    text_raw: jax.Array,
+    ops: Ops = REF_OPS,
+) -> jax.Array:
+    """One full denoising-network evaluation (all layers computed).
+
+    Mirrors exactly what the Rust engine does with reuse disabled: embed,
+    L x (spatial block, temporal block), final. Used by
+    python/tests/test_model.py and the Rust integration cross-check.
+    """
+    spec = piece_params(cfg)
+
+    def args(piece_key: str, spec_key: str):
+        return [jnp.asarray(params[piece_key][name]) for name, _ in spec[spec_key]]
+
+    c = t_embed(t, *args("t_embed", "t_embed"), cfg=cfg)
+    text = text_proj(text_raw, *args("text_proj", "text_proj"))
+    h = embed(x, *args("embed", "embed"), cfg=cfg, bucket=bucket)
+    for i in range(cfg.layers):
+        for kind in ("spatial", "temporal"):
+            key = f"layer{i:02d}.{kind}"
+            tk = text_k(text, jnp.asarray(params[key]["k_w"]),
+                        jnp.asarray(params[key]["k_b"]))
+            tv = text_v(text, jnp.asarray(params[key]["v_w"]),
+                        jnp.asarray(params[key]["v_b"]))
+            h = dit_block(
+                h, c, tk, tv, *args(key, f"{kind}_block"),
+                cfg=cfg, bucket=bucket, kind=kind, ops=ops,
+            )
+    return final(h, c, *args("final", "final"), cfg=cfg, bucket=bucket, ops=ops)

@@ -1,0 +1,197 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/seeds; the kernels must match ref.py to f32
+tolerance for every shape the model can feed them (the CORE correctness
+signal of the build path — if these fail, the AOT artifacts are wrong).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref as kref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    bh=st.sampled_from([1, 2, 8]),
+    sq=st.sampled_from([8, 16, 48, 96]),
+    skv=st.sampled_from([8, 16, 48]),
+    d=st.sampled_from([8, 24, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(bh, sq, skv, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = rand(rng, bh, sq, d), rand(rng, bh, skv, d), rand(rng, bh, skv, d)
+    got = kernels.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    want = kref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_cross_lengths():
+    """Cross-attention shape: many queries, few kv tokens."""
+    rng = np.random.default_rng(0)
+    q, k, v = rand(rng, 4, 384, 24), rand(rng, 4, 16, 24), rand(rng, 4, 16, 24)
+    got = kernels.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(got, kref.attention_ref(q, k, v), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_softmax_rows_sum_to_one_property():
+    """Attention output of constant V must be that constant (softmax sums 1)."""
+    rng = np.random.default_rng(1)
+    q, k = rand(rng, 2, 32, 16), rand(rng, 2, 32, 16)
+    v = np.ones((2, 32, 16), np.float32) * 3.5
+    got = kernels.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(got, v, rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_extreme_logits_stable():
+    """Online softmax must not overflow with large score magnitudes."""
+    rng = np.random.default_rng(2)
+    q = (rand(rng, 1, 16, 8) * 50).astype(np.float32)
+    k = (rand(rng, 1, 16, 8) * 50).astype(np.float32)
+    v = rand(rng, 1, 16, 8)
+    got = np.asarray(kernels.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, kref.attention_ref(q, k, v), rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    b=st.sampled_from([1, 8]),
+    s=st.sampled_from([16, 48]),
+    nh=st.sampled_from([2, 4]),
+    dh=st.sampled_from([8, 24]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_multi_head_attention_matches_ref(b, s, nh, dh, seed):
+    rng = np.random.default_rng(seed)
+    d = nh * dh
+    q, k, v = rand(rng, b, s, d), rand(rng, b, s, d), rand(rng, b, s, d)
+    got = kernels.multi_head_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), nh)
+    want = kref.multi_head_attention_ref(q, k, v, nh)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused layernorm + modulate
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    r=st.sampled_from([8, 64, 384]),
+    d=st.sampled_from([32, 48, 96]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ln_modulate_matches_ref(r, d, seed):
+    rng = np.random.default_rng(seed)
+    x, sh, sc = rand(rng, r, d), rand(rng, d), rand(rng, d)
+    got = kernels.ln_modulate(jnp.asarray(x), jnp.asarray(sh), jnp.asarray(sc))
+    want = kref.ln_modulate_ref(x, sh, sc)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_ln_modulate_zero_modulation_is_layernorm():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 32, 48)
+    got = kernels.layernorm(jnp.asarray(x))
+    want = kref.layernorm_ref(x)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    # normalised rows: mean 0, var 1
+    np.testing.assert_allclose(np.asarray(got).mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got).var(-1), 1.0, rtol=1e-3)
+
+
+def test_ln_modulate_constant_rows():
+    """Constant rows have zero variance — eps must keep this finite."""
+    x = np.full((8, 16), 2.5, np.float32)
+    sh = np.zeros(16, np.float32)
+    sc = np.zeros(16, np.float32)
+    got = np.asarray(kernels.ln_modulate(jnp.asarray(x), jnp.asarray(sh), jnp.asarray(sc)))
+    assert np.isfinite(got).all()
+
+
+# ---------------------------------------------------------------------------
+# fused MLP
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    r=st.sampled_from([8, 64, 384]),
+    d=st.sampled_from([32, 48]),
+    ratio=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_mlp_matches_ref(r, d, ratio, seed):
+    rng = np.random.default_rng(seed)
+    h = ratio * d
+    x = rand(rng, r, d)
+    w1, b1 = rand(rng, d, h) / np.sqrt(d), rand(rng, h) * 0.1
+    w2, b2 = rand(rng, h, d) / np.sqrt(h), rand(rng, d) * 0.1
+    got = kernels.fused_mlp(*map(jnp.asarray, (x, w1, b1, w2, b2)))
+    want = kref.mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_mlp_zero_weights_gives_bias():
+    x = np.ones((16, 8), np.float32)
+    w1 = np.zeros((8, 32), np.float32)
+    b1 = np.zeros(32, np.float32)
+    w2 = np.zeros((32, 8), np.float32)
+    b2 = np.full(8, 7.0, np.float32)
+    got = np.asarray(kernels.fused_mlp(*map(jnp.asarray, (x, w1, b1, w2, b2))))
+    np.testing.assert_allclose(got, 7.0)
+
+
+# ---------------------------------------------------------------------------
+# kernels compose under jit (the AOT path wraps everything in jax.jit)
+# ---------------------------------------------------------------------------
+
+
+def test_kernels_jit_compatible():
+    rng = np.random.default_rng(4)
+
+    @jax.jit
+    def f(q, k, v, sh, sc):
+        a = kernels.flash_attention(q, k, v)
+        return kernels.ln_modulate(a.reshape(-1, a.shape[-1]), sh, sc)
+
+    q, k, v = rand(rng, 2, 16, 8), rand(rng, 2, 16, 8), rand(rng, 2, 16, 8)
+    sh, sc = rand(rng, 8), rand(rng, 8)
+    out = f(*map(jnp.asarray, (q, k, v, sh, sc)))
+    ref_a = kref.attention_ref(q, k, v)
+    ref_o = kref.ln_modulate_ref(ref_a.reshape(-1, 8), sh, sc)
+    np.testing.assert_allclose(out, ref_o, rtol=2e-5, atol=2e-5)
+
+
+def test_tile_divisor_selection():
+    from compile.kernels.attention import _largest_divisor_tile
+
+    assert _largest_divisor_tile(48, 32) == 24
+    assert _largest_divisor_tile(96, 32) == 32
+    assert _largest_divisor_tile(7, 32) == 7
+    assert _largest_divisor_tile(16, 32) == 16
+    for n in [8, 12, 48, 96, 192, 17]:
+        t = _largest_divisor_tile(n, 32)
+        assert n % t == 0 and t <= 32
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,224 @@
+"""L2 correctness: ST-DiT model pieces, parameter ABI, pallas/ref parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+CFG = configs.MODELS["opensora-sim"]
+BUCKET = configs.BUCKETS["240p-2s"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG)
+
+
+def _args(params, piece_key, spec_key):
+    spec = model.piece_params(CFG)[spec_key]
+    return [jnp.asarray(params[piece_key][n]) for n, _ in spec]
+
+
+def _rand_state(seed):
+    rng = np.random.default_rng(seed)
+    return {
+        "h": jnp.asarray(
+            rng.normal(size=(BUCKET.frames, BUCKET.tokens, CFG.d_model)).astype(np.float32)
+        ),
+        "c": jnp.asarray(rng.normal(size=(CFG.d_model,)).astype(np.float32)),
+        "tk": jnp.asarray(
+            rng.normal(size=(CFG.text_len, CFG.d_model)).astype(np.float32)
+        ),
+        "tv": jnp.asarray(
+            rng.normal(size=(CFG.text_len, CFG.d_model)).astype(np.float32)
+        ),
+        "x": jnp.asarray(
+            rng.normal(size=(BUCKET.frames, BUCKET.tokens, CFG.latent_channels)).astype(
+                np.float32
+            )
+        ),
+        "raw": jnp.asarray(
+            rng.normal(size=(CFG.text_len, CFG.d_text)).astype(np.float32)
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# parameter ABI
+# ---------------------------------------------------------------------------
+
+
+def test_init_params_match_declared_shapes(params):
+    spec = model.piece_params(CFG)
+    for piece in ("t_embed", "text_proj", "embed", "final"):
+        for name, shape in spec[piece]:
+            assert params[piece][name].shape == shape, f"{piece}.{name}"
+    for i in range(CFG.layers):
+        for kind in ("spatial", "temporal"):
+            key = f"layer{i:02d}.{kind}"
+            for name, shape in spec["spatial_block"]:
+                assert params[key][name].shape == shape, f"{key}.{name}"
+            for sub in ("sb_attn", "sb_cross", "sb_mlp", "text_k", "text_v"):
+                for name, shape in spec[sub]:
+                    assert params[key][name].shape == shape, f"{key}.{name} ({sub})"
+
+
+def test_init_is_deterministic():
+    a = model.init_params(CFG)
+    b = model.init_params(CFG)
+    np.testing.assert_array_equal(
+        a["layer03.spatial"]["qkv_w"], b["layer03.spatial"]["qkv_w"]
+    )
+
+
+def test_gate_bias_ramps_with_depth(params):
+    d = CFG.d_model
+    g_first = params["layer00.spatial"]["adaln_b"][2 * d]
+    g_last = params[f"layer{CFG.layers-1:02d}.spatial"]["adaln_b"][2 * d]
+    assert g_first == pytest.approx(CFG.gate_lo)
+    assert g_last == pytest.approx(CFG.gate_hi)
+    assert g_first < g_last
+
+
+def test_models_have_distinct_weights():
+    a = model.init_params(configs.MODELS["opensora-sim"])
+    b = model.init_params(configs.MODELS["latte-sim"])
+    assert a["t_embed"]["tw1"].shape != b["t_embed"]["tw1"].shape or not np.array_equal(
+        a["t_embed"]["tw1"], b["t_embed"]["tw1"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# piece semantics
+# ---------------------------------------------------------------------------
+
+
+def test_sub_blocks_compose_to_full_block(params):
+    s = _rand_state(0)
+    for kind in ("spatial", "temporal"):
+        key = f"layer02.{kind}"
+        full = model.dit_block(
+            s["h"], s["c"], s["tk"], s["tv"], *_args(params, key, "spatial_block"),
+            cfg=CFG, bucket=BUCKET, kind=kind, ops=model.REF_OPS,
+        )
+        h1 = model.block_attn_sub(
+            s["h"], s["c"], *_args(params, key, "sb_attn"),
+            cfg=CFG, bucket=BUCKET, kind=kind, ops=model.REF_OPS,
+        )
+        h2 = model.block_cross_sub(
+            h1, s["tk"], s["tv"], *_args(params, key, "sb_cross"),
+            cfg=CFG, bucket=BUCKET, ops=model.REF_OPS,
+        )
+        h3 = model.block_mlp_sub(
+            h2, s["c"], *_args(params, key, "sb_mlp"),
+            cfg=CFG, bucket=BUCKET, ops=model.REF_OPS,
+        )
+        np.testing.assert_allclose(full, h3, rtol=1e-6, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 2**31 - 1), layer=st.integers(0, CFG.layers - 1))
+def test_block_pallas_matches_ref(seed, layer):
+    params = model.init_params(CFG)
+    s = _rand_state(seed)
+    key = f"layer{layer:02d}.spatial"
+    a = model.dit_block(
+        s["h"], s["c"], s["tk"], s["tv"], *_args(params, key, "spatial_block"),
+        cfg=CFG, bucket=BUCKET, kind="spatial", ops=model.REF_OPS,
+    )
+    b = model.dit_block(
+        s["h"], s["c"], s["tk"], s["tv"], *_args(params, key, "spatial_block"),
+        cfg=CFG, bucket=BUCKET, kind="spatial", ops=model.PALLAS_OPS,
+    )
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_temporal_block_differs_from_spatial(params):
+    """Temporal attention attends over frames — same weights must give a
+    different result than spatial attention unless F == P."""
+    s = _rand_state(1)
+    key = "layer00.spatial"
+    a = model.dit_block(
+        s["h"], s["c"], s["tk"], s["tv"], *_args(params, key, "spatial_block"),
+        cfg=CFG, bucket=BUCKET, kind="spatial", ops=model.REF_OPS,
+    )
+    b = model.dit_block(
+        s["h"], s["c"], s["tk"], s["tv"], *_args(params, key, "spatial_block"),
+        cfg=CFG, bucket=BUCKET, kind="temporal", ops=model.REF_OPS,
+    )
+    assert not np.allclose(a, b)
+
+
+def test_text_kv_pieces(params):
+    s = _rand_state(2)
+    text = np.asarray(
+        model.text_proj(s["raw"], *_args(params, "text_proj", "text_proj"))
+    )
+    key = "layer01.temporal"
+    k = model.text_k(jnp.asarray(text), *_args(params, key, "text_k"))
+    v = model.text_v(jnp.asarray(text), *_args(params, key, "text_v"))
+    assert k.shape == (CFG.text_len, CFG.d_model)
+    assert v.shape == (CFG.text_len, CFG.d_model)
+    assert not np.allclose(np.asarray(k), np.asarray(v))
+
+
+def test_t_embed_varies_smoothly(params):
+    args = _args(params, "t_embed", "t_embed")
+    c1 = np.asarray(model.t_embed(jnp.float32(500.0), *args, cfg=CFG))
+    c2 = np.asarray(model.t_embed(jnp.float32(501.0), *args, cfg=CFG))
+    c3 = np.asarray(model.t_embed(jnp.float32(900.0), *args, cfg=CFG))
+    assert c1.shape == (CFG.d_model,)
+    d_near = np.linalg.norm(c1 - c2)
+    d_far = np.linalg.norm(c1 - c3)
+    assert d_near < d_far
+    assert d_near > 0
+
+
+def test_embed_adds_position_information(params):
+    s = _rand_state(3)
+    h = np.asarray(model.embed(s["x"], *_args(params, "embed", "embed"), cfg=CFG, bucket=BUCKET))
+    assert h.shape == (BUCKET.frames, BUCKET.tokens, CFG.d_model)
+    # identical latent tokens at different positions must embed differently
+    x_const = jnp.asarray(np.ones((BUCKET.frames, BUCKET.tokens, CFG.latent_channels), np.float32))
+    hc = np.asarray(model.embed(x_const, *_args(params, "embed", "embed"), cfg=CFG, bucket=BUCKET))
+    assert not np.allclose(hc[0, 0], hc[0, 1])
+    assert not np.allclose(hc[0, 0], hc[1, 0])
+
+
+def test_final_shape(params):
+    s = _rand_state(4)
+    out = model.final(
+        s["h"], s["c"], *_args(params, "final", "final"),
+        cfg=CFG, bucket=BUCKET, ops=model.REF_OPS,
+    )
+    assert out.shape == (BUCKET.frames, BUCKET.tokens, CFG.latent_channels)
+
+
+def test_forward_step_pallas_ref_parity():
+    params = model.init_params(CFG)
+    s = _rand_state(5)
+    a = model.forward_step(params, CFG, BUCKET, s["x"], jnp.float32(500.0), s["raw"],
+                           ops=model.REF_OPS)
+    b = model.forward_step(params, CFG, BUCKET, s["x"], jnp.float32(500.0), s["raw"],
+                           ops=model.PALLAS_OPS)
+    np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+    assert np.isfinite(np.asarray(a)).all()
+
+
+def test_forward_step_prompt_sensitivity():
+    params = model.init_params(CFG)
+    s = _rand_state(6)
+    raw2 = jnp.asarray(np.asarray(s["raw"]) * 2.0 + 0.5)
+    a = model.forward_step(params, CFG, BUCKET, s["x"], jnp.float32(500.0), s["raw"])
+    b = model.forward_step(params, CFG, BUCKET, s["x"], jnp.float32(500.0), raw2)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

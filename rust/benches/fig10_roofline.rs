@@ -1,0 +1,87 @@
+//! Reproduces **Figure 10** (appendix): compute vs memory throughput for
+//! Spatial and Temporal attention blocks across resolutions / durations.
+//!
+//! The paper measures A100 counters; here each block's analytical FLOP and
+//! byte counts (model/mod.rs) are combined with measured dispatch times to
+//! report achieved FLOP/s, bandwidth and arithmetic intensity, classifying
+//! each configuration as compute- or memory-bound relative to the host's
+//! measured peak (estimated from the largest observed throughput).
+//!
+//! Paper shape: spatial attention's intensity grows with resolution
+//! (compute-bound); temporal attention stays low-intensity (memory-bound).
+
+use foresight::bench_support::{run_one, BenchCtx};
+use foresight::model::BlockKind;
+use foresight::util::benchkit::{MdTable, Report};
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let mut report = Report::new(
+        "fig10",
+        "Figure 10 — compute vs memory characterisation of attention blocks",
+    );
+
+    let mut t = MdTable::new(&[
+        "config", "kind", "GFLOP/dispatch", "MB/dispatch", "intensity (FLOP/B)",
+        "time/dispatch (ms)", "GFLOP/s",
+    ]);
+
+    let mut rows: Vec<(String, BlockKind, f64, f64, f64, f64)> = Vec::new();
+    // spatial: resolution sweep at fixed 2s; temporal: duration sweep at 240p
+    for (bucket, kinds) in [
+        ("240p-2s", vec![BlockKind::Spatial, BlockKind::Temporal]),
+        ("480p-2s", vec![BlockKind::Spatial]),
+        ("720p-2s", vec![BlockKind::Spatial]),
+        ("240p-4s", vec![BlockKind::Temporal]),
+    ] {
+        let engine = ctx.engine("opensora-sim", bucket)?;
+        let m = engine.model();
+        m.reset_op_stats();
+        let _ = run_one(&engine, "none", "roofline probe prompt", 2, None)?;
+        let stats = m.op_stats();
+        for kind in kinds {
+            let name = format!("{}_block", kind.name());
+            let (calls, secs) = stats
+                .iter()
+                .find(|(n, _, _)| *n == name)
+                .map(|(_, c, s)| (*c, *s))
+                .unwrap_or((0, 0.0));
+            if calls == 0 {
+                continue;
+            }
+            let per_call = secs / calls as f64;
+            let flops = m.block_flops(kind);
+            let bytes = m.block_bytes(kind);
+            rows.push((bucket.to_string(), kind, flops, bytes, per_call, flops / per_call));
+        }
+    }
+    for (bucket, kind, flops, bytes, per_call, thr) in &rows {
+        t.row(vec![
+            bucket.clone(),
+            kind.name().into(),
+            format!("{:.3}", flops / 1e9),
+            format!("{:.2}", bytes / 1e6),
+            format!("{:.1}", flops / bytes),
+            format!("{:.3}", per_call * 1e3),
+            format!("{:.2}", thr / 1e9),
+        ]);
+    }
+    report.table("attention block characterisation", &t);
+    report.csv("series", &t);
+
+    // classification vs best observed throughput
+    let peak = rows.iter().map(|r| r.5).fold(0.0f64, f64::max);
+    let mut tc = MdTable::new(&["config", "kind", "% of peak compute", "bound"]);
+    for (bucket, kind, _f, _b, _p, thr) in &rows {
+        let frac = thr / peak;
+        tc.row(vec![
+            bucket.clone(),
+            kind.name().into(),
+            format!("{:.0}", 100.0 * frac),
+            if frac > 0.5 { "compute-leaning".into() } else { "memory/overhead-leaning".to_string() },
+        ]);
+    }
+    report.table("bound classification (relative to observed peak)", &tc);
+    report.finish()?;
+    Ok(())
+}

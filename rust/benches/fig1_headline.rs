@@ -1,0 +1,55 @@
+//! Reproduces **Figure 1**: the headline speedup + quality comparison of
+//! Foresight vs prior static techniques on all three models (the paper's
+//! teaser numbers: up to 1.63× end-to-end with quality preserved).
+
+use foresight::bench_support::{run_suite, BenchCtx, PAPER_MODELS};
+use foresight::util::benchkit::{MdTable, Report};
+use foresight::workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let prompts = workload::vbench_prompts(1)[..3].to_vec();
+    let methods: &[(&str, &str)] = &[
+        ("Static", "static"),
+        ("PAB", "pab"),
+        ("Foresight (N2R3)", "foresight:n=2,r=3"),
+    ];
+
+    let mut report = Report::new(
+        "fig1",
+        "Figure 1 — headline: inference time and quality across models",
+    );
+    let mut t = MdTable::new(&["Model", "Method", "Latency(s)", "Speedup", "PSNR vs base"]);
+    let mut best_speedup: f64 = 0.0;
+
+    for (model, bucket) in PAPER_MODELS {
+        let engine = ctx.engine(model, bucket)?;
+        let (base, rows) = run_suite(&engine, &prompts, methods, None)?;
+        t.row(vec![
+            model.into(),
+            "Baseline".into(),
+            base.latency_cell(),
+            "1.00x".into(),
+            "-".into(),
+        ]);
+        for r in &rows {
+            let sp = r.speedup_vs(&base);
+            best_speedup = best_speedup.max(if r.name.contains("Foresight") { sp } else { 0.0 });
+            t.row(vec![
+                model.into(),
+                r.name.clone(),
+                r.latency_cell(),
+                format!("{sp:.2}x"),
+                format!("{:.2}", r.psnr),
+            ]);
+        }
+    }
+    report.table("headline comparison", &t);
+    report.csv("series", &t);
+    report.text(&format!(
+        "\nbest Foresight end-to-end speedup observed: {best_speedup:.2}x \
+         (paper headline: up to 1.63x on CogVideoX)"
+    ));
+    report.finish()?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Reproduces **Figure 5**: Foresight's adaptive reuse thresholds λ —
+//! (left) spatial-block thresholds for two different prompts at 240p;
+//! (right) spatial vs temporal thresholds for the same prompt at 720p.
+//!
+//! Paper shape: thresholds vary per layer, differ across prompts, and shift
+//! when the resolution changes.
+
+use foresight::bench_support::BenchCtx;
+use foresight::engine::Request;
+use foresight::model::BlockKind;
+use foresight::policy::build_policy;
+use foresight::util::benchkit::{MdTable, Report};
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let mut report = Report::new("fig5", "Figure 5 — adaptive reuse thresholds λ");
+
+    // --- left: two prompts at 240p -----------------------------------------
+    let engine = ctx.engine("opensora-sim", "240p-2s")?;
+    let info = engine.model().info.clone();
+    let prompts = [
+        "a still mountain lake mirrors the dawn sky, calm and quiet",
+        "a skateboarder jumping and spinning rapidly through a crowded plaza",
+    ];
+    let mut lambdas = Vec::new();
+    for p in prompts {
+        let mut pol = build_policy("foresight", &info, info.steps)?;
+        let r = engine.generate(&Request::new(p, 3), pol.as_mut(), None)?;
+        lambdas.push(r.thresholds.unwrap());
+    }
+    let mut tl = MdTable::new(&["layer", "λ prompt A (spatial)", "λ prompt B (spatial)"]);
+    for l in 0..info.layers {
+        tl.row(vec![
+            l.to_string(),
+            format!("{:.4e}", lambdas[0][&(l, BlockKind::Spatial, 0)]),
+            format!("{:.4e}", lambdas[1][&(l, BlockKind::Spatial, 0)]),
+        ]);
+    }
+    report.table("left: spatial λ for two prompts (240p, 2s)", &tl);
+    report.csv("prompts_240p", &tl);
+
+    // --- right: spatial vs temporal at 720p ---------------------------------
+    let engine = ctx.engine("opensora-sim", "720p-2s")?;
+    let mut pol = build_policy("foresight", &info, info.steps)?;
+    let r = engine.generate(&Request::new(prompts[0], 3), pol.as_mut(), None)?;
+    let th = r.thresholds.unwrap();
+    let mut tr = MdTable::new(&["layer", "λ spatial", "λ temporal"]);
+    for l in 0..info.layers {
+        tr.row(vec![
+            l.to_string(),
+            format!("{:.4e}", th[&(l, BlockKind::Spatial, 0)]),
+            format!("{:.4e}", th[&(l, BlockKind::Temporal, 0)]),
+        ]);
+    }
+    report.table("right: spatial vs temporal λ (720p, 2s)", &tr);
+    report.csv("spatial_temporal_720p", &tr);
+
+    report.finish()?;
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Reproduces **Figure 6**: Foresight's compute/reuse decision map over
+//! layers × denoising steps on OpenSora-sim (240p, 4s, W=15%, N=1, R=2,
+//! γ=0.5), with the warmup prefix computing everything and adaptive
+//! alternation afterwards.
+
+use foresight::bench_support::BenchCtx;
+use foresight::engine::Request;
+use foresight::policy::build_policy;
+use foresight::util::benchkit::{MdTable, Report};
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let engine = ctx.engine("opensora-sim", "240p-4s")?;
+    let info = engine.model().info.clone();
+
+    let prompt = "a playful black labrador in a pumpkin halloween costume \
+                  frolics in a sunlit autumn garden surrounded by fallen leaves";
+    let mut pol = build_policy("foresight:n=1,r=2,gamma=0.5,warmup=0.15", &info, info.steps)?;
+    let r = engine.generate(&Request::new(prompt, 6), pol.as_mut(), None)?;
+
+    let mut report = Report::new(
+        "fig6",
+        "Figure 6 — Foresight reuse/compute map (opensora-sim, 240p, 4s, N=1 R=2 γ=0.5)",
+    );
+    report.text(&format!(
+        "wall {:.2}s, reuse {:.0}% (✓=compute, →=reuse)\n",
+        r.stats.wall_s,
+        100.0 * r.stats.reuse_fraction()
+    ));
+
+    // CSV: rows = sites, cols = steps
+    let n_sites = info.layers * 2;
+    let mut header: Vec<String> = vec!["block".into()];
+    header.extend((0..r.reuse_map.len()).map(|s| format!("s{s}")));
+    let mut t = MdTable::new(
+        &header.iter().map(|s| Box::leak(s.clone().into_boxed_str()) as &str).collect::<Vec<_>>(),
+    );
+    let mut ascii = String::new();
+    for site in 0..n_sites {
+        let layer = site / 2;
+        let kind = if site % 2 == 0 { "S" } else { "T" };
+        let mut row = vec![format!("L{layer:02}{kind}")];
+        let mut line = format!("  L{layer:02}{kind} ");
+        for step in &r.reuse_map {
+            row.push(if step[site] { "reuse".into() } else { "compute".into() });
+            line.push(if step[site] { '→' } else { '✓' });
+        }
+        t.row(row);
+        ascii.push_str(&line);
+        ascii.push('\n');
+    }
+    report.csv("map", &t);
+    report.text(&format!("```\n{ascii}```"));
+
+    // per-layer reuse counts (the paper's "later layers recompute more")
+    let mut counts = MdTable::new(&["layer", "reuse count (spatial)", "reuse count (temporal)"]);
+    for layer in 0..info.layers {
+        let c = |k: usize| {
+            r.reuse_map
+                .iter()
+                .filter(|step| step[layer * 2 + k])
+                .count()
+        };
+        counts.row(vec![layer.to_string(), c(0).to_string(), c(1).to_string()]);
+    }
+    report.table("per-layer reuse totals", &counts);
+    report.finish()?;
+    Ok(())
+}

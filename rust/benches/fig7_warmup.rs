@@ -1,0 +1,56 @@
+//! Reproduces **Figure 7**: varying the warmup fraction W (5%..40%) with
+//! fixed N=1, R=2, γ=0.5 on OpenSora-sim.
+//!
+//! Paper shape: more warmup → fewer reuse-eligible steps → higher quality
+//! (PSNR toward baseline) but smaller speedup.
+
+use foresight::bench_support::{run_suite, BenchCtx};
+use foresight::util::benchkit::{MdTable, Report};
+use foresight::workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let engine = ctx.engine("opensora-sim", "240p-2s")?;
+    let prompts = workload::vbench_prompts(1)[..3].to_vec();
+
+    let settings: Vec<(String, String)> = [5, 10, 15, 20, 25, 30, 40]
+        .into_iter()
+        .map(|w| {
+            (
+                format!("W={w}%"),
+                format!("foresight:n=1,r=2,gamma=0.5,warmup=0.{w:02}"),
+            )
+        })
+        .collect();
+    let specs: Vec<(&str, &str)> =
+        settings.iter().map(|(a, b)| (a.as_str(), b.as_str())).collect();
+
+    let (base, rows) = run_suite(&engine, &prompts, &specs, None)?;
+
+    let mut t = MdTable::new(&["Warmup", "Latency(s)", "Speedup", "Reuse %", "PSNR"]);
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.2}", r.latency_mean()),
+            format!("{:.2}x", r.speedup_vs(&base)),
+            format!("{:.0}", 100.0 * r.reuse_frac),
+            format!("{:.2}", r.psnr),
+        ]);
+    }
+
+    let mut report = Report::new(
+        "fig7",
+        "Figure 7 — warmup fraction sweep (N=1, R=2, γ=0.5, opensora-sim 240p-2s)",
+    );
+    report.table("warmup sweep", &t);
+    report.csv("series", &t);
+    let psnr: Vec<f64> = rows.iter().map(|r| r.psnr).collect();
+    let reuse: Vec<f64> = rows.iter().map(|r| r.reuse_frac).collect();
+    report.text(&format!(
+        "\nshape check: PSNR non-decreasing in W = {}; reuse non-increasing in W = {}",
+        psnr.windows(2).all(|w| w[1] >= w[0] - 0.5),
+        reuse.windows(2).all(|w| w[1] <= w[0] + 0.02),
+    ));
+    report.finish()?;
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Reproduces **Figure 9** (appendix): workload characterisation —
+//! (left) end-to-end latency across resolutions; (right) inference-time
+//! breakdown by operator type (attention vs FFN vs non-linear glue).
+//!
+//! Paper shape: latency grows super-linearly with resolution (quadratic
+//! attention); attention dominates the breakdown, with a sizable share for
+//! the non-attention glue the fused kernels target.
+
+use foresight::bench_support::{run_one, BenchCtx};
+use foresight::cache::Unit;
+use foresight::engine::Request;
+use foresight::policy::{Action, CacheMode, Granularity, ReusePolicy, Site};
+use foresight::util::benchkit::{MdTable, Report};
+
+/// All-compute policy at sublayer granularity so the op-level timers see
+/// attention / cross / MLP separately.
+struct AllComputeFine;
+
+impl ReusePolicy for AllComputeFine {
+    fn name(&self) -> String {
+        "all-compute-fine".into()
+    }
+    fn granularity(&self) -> Granularity {
+        Granularity::Fine
+    }
+    fn cache_mode(&self) -> CacheMode {
+        CacheMode::Delta
+    }
+    fn begin_request(&mut self, _l: usize, _s: usize) {}
+    fn action(&mut self, _step: usize, _site: Site) -> Action {
+        Action::Compute { update_cache: false, measure: false }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let mut report = Report::new(
+        "fig9",
+        "Figure 9 — latency across resolutions + operator breakdown (opensora-sim)",
+    );
+
+    // --- left: end-to-end latency vs resolution ----------------------------
+    let mut tl = MdTable::new(&["resolution", "tokens/frame", "latency (s)"]);
+    let mut lat = Vec::new();
+    for bucket in ["240p-2s", "480p-2s", "720p-2s"] {
+        let engine = ctx.engine("opensora-sim", bucket)?;
+        let _ = run_one(&engine, "none", "warmup", 0, Some(2))?;
+        let r = run_one(&engine, "none", "a lighthouse at dusk on a rocky coast", 1, None)?;
+        lat.push(r.stats.wall_s);
+        tl.row(vec![
+            bucket.into(),
+            engine.model().bucket.tokens.to_string(),
+            format!("{:.2}", r.stats.wall_s),
+        ]);
+    }
+    report.table("left: latency vs resolution", &tl);
+    report.csv("latency", &tl);
+    report.text(&format!(
+        "720p/240p latency ratio: {:.2} (paper: 2.5x for 480p→720p on A100)",
+        lat[2] / lat[0]
+    ));
+
+    // --- right: operator breakdown at sub-block granularity ----------------
+    let engine = ctx.engine("opensora-sim", "480p-2s")?;
+    engine.model().reset_op_stats();
+    let mut pol = AllComputeFine;
+    engine.generate(
+        &Request::new("a lighthouse at dusk on a rocky coast", 1),
+        &mut pol,
+        None,
+    )?;
+    let stats = engine.model().op_stats();
+    let total: f64 = stats.iter().map(|(_, _, s)| s).sum();
+    let mut tr = MdTable::new(&["operator", "calls", "time (s)", "share %"]);
+    let mut grouped: Vec<(&str, f64, u64)> = Vec::new();
+    let group_of = |name: &str| -> &'static str {
+        if name.contains("sb_attn") {
+            "self/temporal attention"
+        } else if name.contains("sb_cross") {
+            "cross attention"
+        } else if name.contains("sb_mlp") {
+            "FFN (MLP)"
+        } else if name.contains("embed") || name.contains("final") || name.contains("text") {
+            "embed/final/text (glue)"
+        } else {
+            "other"
+        }
+    };
+    for (name, calls, secs) in &stats {
+        let g = group_of(name);
+        if let Some(e) = grouped.iter_mut().find(|(n, _, _)| *n == g) {
+            e.1 += secs;
+            e.2 += calls;
+        } else {
+            grouped.push((g, *secs, *calls));
+        }
+    }
+    grouped.sort_by(|a, b| b.1.total_cmp(&a.1));
+    for (g, secs, calls) in &grouped {
+        tr.row(vec![
+            (*g).into(),
+            calls.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.1}", 100.0 * secs / total),
+        ]);
+    }
+    report.table("right: operator breakdown (sub-block dispatch, 480p)", &tr);
+    report.csv("breakdown", &tr);
+    report.finish()?;
+    let _ = Unit::Block;
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Reproduces **Table 1**: VBench / PSNR / SSIM / LPIPS / FVD / latency /
+//! speedup for {Baseline, Static, Δ-DiT, T-GATE, PAB, Foresight N1R2,
+//! Foresight N2R3} across the three evaluation models.
+//!
+//! Paper protocol: 550 VBench prompts (50 × 11 categories) per model.
+//! Default scale runs a stratified subset; `FORESIGHT_BENCH_SCALE=paper`
+//! restores the full count. The *shape* to check against the paper:
+//! Foresight N1R2 has the best PSNR/SSIM/LPIPS/FVD of all reuse methods,
+//! N2R3 the best speedup at near-PAB-or-better quality, Static the worst
+//! quality, Δ-DiT/T-GATE minor speedups.
+
+use foresight::bench_support::{run_suite, scaled, BenchCtx, PAPER_MODELS, TABLE1_METHODS};
+use foresight::util::benchkit::{MdTable, Report};
+use foresight::workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let per_category = scaled(50).min(50);
+    let prompts = workload::vbench_prompts(per_category.max(1));
+    // stratify down to a manageable subset in quick mode (1 per category)
+    let take = scaled(550).max(4).min(prompts.len());
+    let prompts: Vec<_> = prompts
+        .iter()
+        .step_by((prompts.len() / take).max(1))
+        .cloned()
+        .take(take)
+        .collect();
+
+    let mut report = Report::new(
+        "table1",
+        "Table 1 — quality/latency comparison on the VBench prompt set",
+    );
+    report.text(&format!(
+        "{} prompts per model (paper: 550). Metrics vs. no-reuse baseline; \
+         LPIPS/FVD/VBench are the documented proxies (DESIGN.md §1).\n",
+        prompts.len()
+    ));
+
+    for (model, bucket) in PAPER_MODELS {
+        let engine = ctx.engine(model, bucket)?;
+        let (base, rows) = run_suite(&engine, &prompts, &TABLE1_METHODS, None)?;
+
+        let mut t = MdTable::new(&[
+            "Method", "VBench(%)", "PSNR", "SSIM", "LPIPS", "FVD", "Latency(s)", "Speedup",
+        ]);
+        t.row(vec![
+            base.name.clone(),
+            format!("{:.2}", base.vbench),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            base.latency_cell(),
+            "-".into(),
+        ]);
+        for r in &rows {
+            t.row(vec![
+                r.name.clone(),
+                format!("{:.2}", r.vbench),
+                format!("{:.2}", r.psnr),
+                format!("{:.3}", r.ssim),
+                format!("{:.4}", r.lpips),
+                format!("{:.2}", r.fvd),
+                r.latency_cell(),
+                format!("{:.2}x", r.speedup_vs(&base)),
+            ]);
+        }
+        report.table(&format!("{model} @ {bucket}"), &t);
+        report.csv(&format!("{model}"), &t);
+
+        // paper §4.2 memory claim: coarse vs fine cache
+        let fs = rows.iter().find(|r| r.name.contains("N1R2")).unwrap();
+        let pab = rows.iter().find(|r| r.name == "PAB").unwrap();
+        report.text(&format!(
+            "cache peak: Foresight {:.0} KiB (2LHWF) vs PAB {:.0} KiB (6LHWF fine-grained)\n",
+            fs.cache_peak_bytes as f64 / 1024.0,
+            pab.cache_peak_bytes as f64 / 1024.0
+        ));
+    }
+    report.finish()?;
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Reproduces **Table 2**: effect of reuse settings (N, R) on OpenSora
+//! (240p, 2s, T=60, W=15%, γ=0.5), latency + PSNR compared to PAB.
+//!
+//! Paper shape to check: larger N/R monotonically lowers latency and PSNR;
+//! Foresight beats PAB's PSNR up to N=3 and falls slightly below at N=4.
+
+use foresight::bench_support::{run_suite, BenchCtx};
+use foresight::util::benchkit::{MdTable, Report};
+use foresight::workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let engine = ctx.engine("opensora-sim", "240p-2s")?;
+    let steps = Some(60); // paper: T=60 for this ablation
+    let prompts = workload::vbench_prompts(1)[..3].to_vec();
+
+    let settings: &[(&str, &str)] = &[
+        ("PAB", "pab"),
+        ("N=1, R=2", "foresight:n=1,r=2,gamma=0.5,warmup=0.15"),
+        ("N=2, R=3", "foresight:n=2,r=3,gamma=0.5,warmup=0.15"),
+        ("N=3, R=4", "foresight:n=3,r=4,gamma=0.5,warmup=0.15"),
+        ("N=4, R=5", "foresight:n=4,r=5,gamma=0.5,warmup=0.15"),
+    ];
+    let (_base, rows) = run_suite(&engine, &prompts, settings, steps)?;
+    let pab = &rows[0];
+
+    let mut t = MdTable::new(&["Settings", "Latency (s)", "Δ vs PAB", "PSNR", "Δ vs PAB"]);
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.2}", r.latency_mean()),
+            format!("{:+.2}", r.latency_mean() - pab.latency_mean()),
+            format!("{:.2}", r.psnr),
+            if r.psnr.is_nan() || pab.psnr.is_nan() {
+                "-".into()
+            } else {
+                format!("{:+.2}", r.psnr - pab.psnr)
+            },
+        ]);
+    }
+
+    let mut report = Report::new(
+        "table2",
+        "Table 2 — reuse settings (N, R) on OpenSora-sim (240p, 2s, T=60, W=15%, γ=0.5)",
+    );
+    report.table("latency/PSNR vs PAB", &t);
+    report.csv("series", &t);
+
+    // shape assertions logged for EXPERIMENTS.md
+    let lat: Vec<f64> = rows[1..].iter().map(|r| r.latency_mean()).collect();
+    let psnr: Vec<f64> = rows[1..].iter().map(|r| r.psnr).collect();
+    report.text(&format!(
+        "\nshape check: latency monotone decreasing = {}; PSNR monotone decreasing = {}",
+        lat.windows(2).all(|w| w[1] <= w[0] * 1.05),
+        psnr.windows(2).all(|w| w[1] <= w[0] + 0.5),
+    ));
+    report.finish()?;
+    Ok(())
+}

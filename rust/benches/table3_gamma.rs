@@ -1,0 +1,55 @@
+//! Reproduces **Table 3**: effect of the scaling factor γ on OpenSora-sim
+//! (N=1, R=2, 240p, 2s, T=60, W=15%), latency + PSNR compared to PAB.
+//!
+//! Paper shape: smaller γ → higher latency and higher PSNR (γ=0.25 tops
+//! PSNR at a small latency premium); larger γ trades quality for speed.
+
+use foresight::bench_support::{run_suite, BenchCtx};
+use foresight::util::benchkit::{MdTable, Report};
+use foresight::workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let engine = ctx.engine("opensora-sim", "240p-2s")?;
+    let steps = Some(60);
+    let prompts = workload::vbench_prompts(1)[..3].to_vec();
+
+    let settings: &[(&str, &str)] = &[
+        ("PAB", "pab"),
+        ("γ=0.25", "foresight:n=1,r=2,gamma=0.25,warmup=0.15"),
+        ("γ=0.5", "foresight:n=1,r=2,gamma=0.5,warmup=0.15"),
+        ("γ=1.0", "foresight:n=1,r=2,gamma=1.0,warmup=0.15"),
+        ("γ=2.0", "foresight:n=1,r=2,gamma=2.0,warmup=0.15"),
+    ];
+    let (_base, rows) = run_suite(&engine, &prompts, settings, steps)?;
+    let pab = &rows[0];
+
+    let mut t = MdTable::new(&["γ", "Latency (s)", "Δ vs PAB", "PSNR", "Δ vs PAB", "Reuse %"]);
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.2}", r.latency_mean()),
+            format!("{:+.2}", r.latency_mean() - pab.latency_mean()),
+            format!("{:.2}", r.psnr),
+            format!("{:+.2}", r.psnr - pab.psnr),
+            format!("{:.0}", 100.0 * r.reuse_frac),
+        ]);
+    }
+
+    let mut report = Report::new(
+        "table3",
+        "Table 3 — scaling factor γ on OpenSora-sim (N=1, R=2, 240p, 2s, T=60, W=15%)",
+    );
+    report.table("latency/PSNR vs PAB", &t);
+    report.csv("series", &t);
+
+    let psnr: Vec<f64> = rows[1..].iter().map(|r| r.psnr).collect();
+    let reuse: Vec<f64> = rows[1..].iter().map(|r| r.reuse_frac).collect();
+    report.text(&format!(
+        "\nshape check: PSNR decreasing in γ = {}; reuse increasing in γ = {}",
+        psnr.windows(2).all(|w| w[1] <= w[0] + 0.5),
+        reuse.windows(2).all(|w| w[1] >= w[0] - 0.02),
+    ));
+    report.finish()?;
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Reproduces **Table 8** (appendix): CLIPSIM / CLIP-Temp / DOVER-VQA on
+//! the UCF-101 and EvalCrafter prompt sets, PAB vs Foresight vs baseline.
+//!
+//! Paper shape: Foresight holds baseline-level CLIP/VQA scores while PAB
+//! degrades the VQA scores (most visibly on OpenSora), with Foresight N2R3
+//! delivering the larger speedup.
+
+use foresight::bench_support::{run_clip_vqa_suite, scaled, BenchCtx};
+use foresight::util::benchkit::{MdTable, Report};
+use foresight::util::stats;
+use foresight::workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::new()?;
+    let engine = ctx.engine("opensora-sim", "240p-2s")?;
+    let methods: &[(&str, &str)] = &[
+        ("Baseline", "none"),
+        ("PAB", "pab"),
+        ("Foresight (N1R2)", "foresight:n=1,r=2"),
+        ("Foresight (N2R3)", "foresight:n=2,r=3"),
+    ];
+
+    let mut report = Report::new(
+        "table8",
+        "Table 8 — CLIP / VQA metrics on UCF-101 and EvalCrafter prompt sets (opensora-sim)",
+    );
+
+    for (set_name, prompts) in [
+        ("UCF-101", workload::ucf101_prompts(scaled(101))),
+        ("EvalCrafter", workload::evalcrafter_prompts(scaled(150))),
+    ] {
+        let rows = run_clip_vqa_suite(&engine, &prompts, methods, None)?;
+        let base_lat = stats::mean(&rows[0].latencies);
+        let mut t = MdTable::new(&[
+            "Method", "CLIP-SIM", "CLIP-Temp", "VQA-Aesthetic", "VQA-Technical",
+            "VQA-Overall", "Latency(s)", "Speedup",
+        ]);
+        for r in &rows {
+            let lat = stats::mean(&r.latencies);
+            t.row(vec![
+                r.name.clone(),
+                format!("{:.2}", r.clipsim),
+                format!("{:.2}", r.clip_temp),
+                format!("{:.2}", r.vqa_aesthetic),
+                format!("{:.2}", r.vqa_technical),
+                format!("{:.2}", r.vqa_overall),
+                stats::fmt_mean_pm_std(&r.latencies),
+                if r.name == "Baseline" {
+                    "-".into()
+                } else {
+                    format!("{:.2}x", base_lat / lat)
+                },
+            ]);
+        }
+        report.text(&format!("\n{} prompts: {}", set_name, prompts.len()));
+        report.table(set_name, &t);
+        report.csv(&set_name.to_lowercase().replace('-', ""), &t);
+    }
+    report.finish()?;
+    Ok(())
+}

@@ -1,0 +1,253 @@
+//! Shared scaffolding for the paper-reproduction benches
+//! (`rust/benches/*.rs`, one per paper table/figure — DESIGN.md §5).
+//!
+//! Benches run at a reduced default scale so `cargo bench` finishes on a
+//! laptop-class CPU; set `FORESIGHT_BENCH_SCALE=paper` to use the paper's
+//! prompt counts (550 VBench / 101 UCF / 150 EvalCrafter — hours of CPU).
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::Manifest;
+use crate::engine::{Engine, Request, RunResult};
+use crate::metrics::{self, ClipProxy, Decoder, FeatureNet, Frames};
+use crate::model::LoadedModel;
+use crate::policy::build_policy;
+use crate::runtime::Runtime;
+use crate::util::stats;
+use crate::workload::PromptSpec;
+
+/// Scale knob for prompt counts.
+pub fn bench_scale() -> f64 {
+    match std::env::var("FORESIGHT_BENCH_SCALE").as_deref() {
+        Ok("paper") => 1.0,
+        Ok("medium") => 0.2,
+        _ => 0.012, // quick default
+    }
+}
+
+/// Scaled prompt count: paper count n → quick subset (min 2).
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * bench_scale()).round() as usize).clamp(2, n)
+}
+
+/// Lazily-loaded engines shared by a bench run.
+pub struct BenchCtx {
+    pub manifest: Manifest,
+    rt: Arc<Runtime>,
+    engines: BTreeMap<(String, String), Arc<Engine>>,
+}
+
+impl BenchCtx {
+    pub fn new() -> Result<Self> {
+        let manifest = Manifest::load(&Manifest::default_root())?;
+        let rt = Arc::new(Runtime::cpu()?);
+        Ok(Self { manifest, rt, engines: BTreeMap::new() })
+    }
+
+    pub fn engine(&mut self, model: &str, bucket: &str) -> Result<Arc<Engine>> {
+        let key = (model.to_string(), bucket.to_string());
+        if let Some(e) = self.engines.get(&key) {
+            return Ok(e.clone());
+        }
+        let lm = Arc::new(LoadedModel::load(self.rt.clone(), &self.manifest, model, bucket)?);
+        let e = Arc::new(Engine::new(lm, self.manifest.schedule));
+        self.engines.insert(key, e.clone());
+        Ok(e)
+    }
+
+    pub fn decoder_for(&self, engine: &Engine) -> Decoder {
+        let b = &engine.model().bucket;
+        Decoder::new(b.ph, b.pw, engine.model().info.latent_channels)
+    }
+}
+
+/// One generation under a policy spec.
+pub fn run_one(
+    engine: &Engine,
+    spec: &str,
+    prompt: &str,
+    seed: u64,
+    steps: Option<usize>,
+) -> Result<RunResult> {
+    let info = &engine.model().info;
+    let mut policy = build_policy(spec, info, steps.unwrap_or(info.steps))?;
+    let mut req = Request::new(prompt, seed);
+    req.steps = steps;
+    engine.generate(&req, policy.as_mut(), None)
+}
+
+/// Aggregated per-method results over a prompt set (a paper table row).
+pub struct MethodRow {
+    pub name: String,
+    pub latencies: Vec<f64>,
+    pub reuse_frac: f64,
+    pub psnr: f64,
+    pub ssim: f64,
+    pub lpips: f64,
+    pub vbench: f64,
+    pub fvd: f64,
+    pub cache_peak_bytes: usize,
+}
+
+impl MethodRow {
+    pub fn latency_mean(&self) -> f64 {
+        stats::mean(&self.latencies)
+    }
+
+    pub fn latency_cell(&self) -> String {
+        stats::fmt_mean_pm_std(&self.latencies)
+    }
+
+    pub fn speedup_vs(&self, base: &MethodRow) -> f64 {
+        base.latency_mean() / self.latency_mean()
+    }
+}
+
+/// Run a full method-comparison suite over a prompt set: baseline first,
+/// then each policy spec; quality metrics computed per prompt vs. the
+/// baseline video (exactly the paper's Table 1 protocol).
+pub fn run_suite(
+    engine: &Engine,
+    prompts: &[PromptSpec],
+    specs: &[(&str, &str)], // (display name, policy spec)
+    steps: Option<usize>,
+) -> Result<(MethodRow, Vec<MethodRow>)> {
+    let dec = {
+        let b = &engine.model().bucket;
+        Decoder::new(b.ph, b.pw, engine.model().info.latent_channels)
+    };
+    let net = FeatureNet::new();
+
+    // warm the runtime so the first measured latency isn't compile-skewed
+    let _ = run_one(engine, "none", "warmup prompt", 0, Some(2))?;
+
+    let mut base_frames: Vec<Frames> = Vec::new();
+    let mut base_lat = Vec::new();
+    for p in prompts {
+        let r = run_one(engine, "none", &p.text, p.id as u64, steps)?;
+        base_lat.push(r.stats.wall_s);
+        base_frames.push(dec.decode(&r.latents));
+    }
+    let baseline = MethodRow {
+        name: "Baseline".into(),
+        latencies: base_lat,
+        reuse_frac: 0.0,
+        psnr: f64::NAN,
+        ssim: f64::NAN,
+        lpips: f64::NAN,
+        vbench: metrics::vbench_percent(&net, &base_frames),
+        fvd: f64::NAN,
+        cache_peak_bytes: 0,
+    };
+
+    let mut rows = Vec::new();
+    for (name, spec) in specs {
+        let mut lats = Vec::new();
+        let mut reuse = 0.0;
+        let (mut psnr, mut ssim, mut lpips) = (0.0, 0.0, 0.0);
+        let mut frames = Vec::new();
+        let mut cache_peak = 0usize;
+        for p in prompts {
+            let r = run_one(engine, spec, &p.text, p.id as u64, steps)?;
+            lats.push(r.stats.wall_s);
+            reuse += r.stats.reuse_fraction();
+            cache_peak = cache_peak.max(r.stats.cache_peak_bytes);
+            let fr = dec.decode(&r.latents);
+            let i = frames.len();
+            psnr += metrics::psnr(&base_frames[i], &fr);
+            ssim += metrics::ssim(&base_frames[i], &fr);
+            lpips += metrics::lpips(&net, &base_frames[i], &fr);
+            frames.push(fr);
+        }
+        let n = prompts.len() as f64;
+        rows.push(MethodRow {
+            name: name.to_string(),
+            latencies: lats,
+            reuse_frac: reuse / n,
+            psnr: psnr / n,
+            ssim: ssim / n,
+            lpips: lpips / n,
+            vbench: metrics::vbench_percent(&net, &frames),
+            fvd: metrics::fvd(&net, &base_frames, &frames),
+            cache_peak_bytes: cache_peak,
+        });
+    }
+    Ok((baseline, rows))
+}
+
+/// CLIP/VQA metric bundle for Table 8.
+pub struct ClipVqaRow {
+    pub name: String,
+    pub clipsim: f64,
+    pub clip_temp: f64,
+    pub vqa_aesthetic: f64,
+    pub vqa_technical: f64,
+    pub vqa_overall: f64,
+    pub latencies: Vec<f64>,
+}
+
+/// Table 8 protocol: absolute CLIP/VQA scores per method over a prompt set.
+pub fn run_clip_vqa_suite(
+    engine: &Engine,
+    prompts: &[PromptSpec],
+    specs: &[(&str, &str)],
+    steps: Option<usize>,
+) -> Result<Vec<ClipVqaRow>> {
+    let dec = {
+        let b = &engine.model().bucket;
+        Decoder::new(b.ph, b.pw, engine.model().info.latent_channels)
+    };
+    let clip = ClipProxy::new(engine.model().info.d_text);
+    let _ = run_one(engine, "none", "warmup prompt", 0, Some(2))?;
+
+    let mut rows = Vec::new();
+    for (name, spec) in specs {
+        let mut lats = Vec::new();
+        let (mut cs, mut ct, mut va, mut vt, mut vo) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for p in prompts {
+            let r = run_one(engine, spec, &p.text, p.id as u64, steps)?;
+            lats.push(r.stats.wall_s);
+            let fr = dec.decode(&r.latents);
+            let emb = crate::workload::embed_prompt(
+                &p.text,
+                engine.model().info.d_text,
+                engine.model().info.text_len,
+            );
+            cs += clip.clipsim(&emb, &fr);
+            ct += clip.clip_temp(&fr);
+            va += metrics::vqa_aesthetic(&fr);
+            vt += metrics::vqa_technical(&fr);
+            vo += metrics::vqa_overall(&fr);
+        }
+        let n = prompts.len() as f64;
+        rows.push(ClipVqaRow {
+            name: name.to_string(),
+            clipsim: cs / n,
+            clip_temp: ct / n,
+            vqa_aesthetic: va / n,
+            vqa_technical: vt / n,
+            vqa_overall: vo / n,
+            latencies: lats,
+        });
+    }
+    Ok(rows)
+}
+
+/// The standard method set of Table 1.
+pub const TABLE1_METHODS: [(&str, &str); 6] = [
+    ("Static", "static"),
+    ("Δ-DiT", "delta-dit"),
+    ("T-GATE", "tgate"),
+    ("PAB", "pab"),
+    ("Foresight (N1R2)", "foresight:n=1,r=2,gamma=0.5"),
+    ("Foresight (N2R3)", "foresight:n=2,r=3,gamma=0.5"),
+];
+
+/// The paper's three evaluation models with their buckets.
+pub const PAPER_MODELS: [(&str, &str); 3] = [
+    ("opensora-sim", "240p-2s"),
+    ("latte-sim", "512sq-2s"),
+    ("cogvideox-sim", "480x720-2s"),
+];

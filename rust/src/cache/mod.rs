@@ -1,0 +1,242 @@
+//! Feature cache manager (paper Eq. 3 and §4.2 "Overhead: Memory").
+//!
+//! Stores DiT-block activations (or sublayer residual deltas for the
+//! fine-grained baselines) per CFG branch, with byte-exact memory
+//! accounting. Foresight's coarse strategy caches 2 entries per layer pair
+//! (spatial + temporal block outputs → the paper's `2LHWF`); PAB-style
+//! fine-grained caching stores up to 6 (3 sublayers × 2 blocks → `6LHWF`),
+//! which is how the paper's 3× memory-reduction claim is reproduced
+//! (asserted in tests and reported by the Table 1 bench).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::model::{BlockKind, SubUnit};
+use crate::runtime::DeviceTensor;
+
+/// What a cache entry holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Unit {
+    /// Whole DiT-block output (coarse; Foresight / Static / Δ-DiT).
+    Block,
+    /// One sublayer's residual delta (fine; PAB / T-GATE).
+    Sub(SubUnit),
+}
+
+impl Unit {
+    pub fn name(&self) -> String {
+        match self {
+            Unit::Block => "block".to_string(),
+            Unit::Sub(s) => format!("sub.{}", s.name()),
+        }
+    }
+}
+
+/// Cache key: CFG branch × layer × block kind × unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CacheKey {
+    pub branch: usize,
+    pub layer: usize,
+    pub kind: BlockKind,
+    pub unit: Unit,
+}
+
+/// One cached activation: device buffer (for zero-copy reuse) plus an
+/// optional host mirror (needed only when a policy measures MSE against it).
+pub struct CacheEntry {
+    pub device: Arc<DeviceTensor>,
+    pub host: Option<Vec<f32>>,
+    /// Step at which this entry was written (staleness analytics).
+    pub step: usize,
+}
+
+/// Per-request feature cache with memory accounting.
+#[derive(Default)]
+pub struct FeatureCache {
+    entries: BTreeMap<CacheKey, CacheEntry>,
+    current_bytes: usize,
+    peak_bytes: usize,
+    /// Lifetime counters.
+    pub stores: u64,
+    pub hits: u64,
+}
+
+impl FeatureCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn entry_bytes(e: &CacheEntry) -> usize {
+        let dev = e.device.element_count() * 4;
+        let host = e.host.as_ref().map_or(0, |h| h.len() * 4);
+        dev + host
+    }
+
+    /// Insert or replace an entry; accounting tracks both device and host
+    /// mirrors.
+    pub fn put(
+        &mut self,
+        key: CacheKey,
+        device: Arc<DeviceTensor>,
+        host: Option<Vec<f32>>,
+        step: usize,
+    ) {
+        let entry = CacheEntry { device, host, step };
+        let new_bytes = Self::entry_bytes(&entry);
+        if let Some(old) = self.entries.insert(key, entry) {
+            self.current_bytes -= Self::entry_bytes(&old);
+        }
+        self.current_bytes += new_bytes;
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes);
+        self.stores += 1;
+    }
+
+    pub fn get(&mut self, key: &CacheKey) -> Option<&CacheEntry> {
+        let e = self.entries.get(key);
+        if e.is_some() {
+            self.hits += 1;
+        }
+        e
+    }
+
+    /// Host mirror of an entry without counting a hit (policy measurement).
+    pub fn peek_host(&self, key: &CacheKey) -> Option<&[f32]> {
+        self.entries.get(key).and_then(|e| e.host.as_deref())
+    }
+
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn current_bytes(&self) -> usize {
+        self.current_bytes
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Entries per layer-pair (the paper's "2 vs 6 per layer" comparison),
+    /// over the branch with the most entries.
+    pub fn entries_per_layer(&self, layers: usize) -> f64 {
+        if layers == 0 || self.entries.is_empty() {
+            return 0.0;
+        }
+        let branches: std::collections::BTreeSet<usize> =
+            self.entries.keys().map(|k| k.branch).collect();
+        let max_per_branch = branches
+            .iter()
+            .map(|b| self.entries.keys().filter(|k| k.branch == *b).count())
+            .max()
+            .unwrap_or(0);
+        max_per_branch as f64 / layers as f64
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.current_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+
+    fn dev(rt: &Runtime, n: usize) -> Arc<DeviceTensor> {
+        Arc::new(rt.upload(&vec![0.5f32; n], &[n]).unwrap())
+    }
+
+    fn key(branch: usize, layer: usize, unit: Unit) -> CacheKey {
+        CacheKey { branch, layer, kind: BlockKind::Spatial, unit }
+    }
+
+    #[test]
+    fn accounting_tracks_put_replace_peak() {
+        let rt = Runtime::cpu().unwrap();
+        let mut c = FeatureCache::new();
+        c.put(key(0, 0, Unit::Block), dev(&rt, 100), None, 0);
+        assert_eq!(c.current_bytes(), 400);
+        // replace with host mirror: 400 device + 400 host
+        c.put(key(0, 0, Unit::Block), dev(&rt, 100), Some(vec![0.0; 100]), 1);
+        assert_eq!(c.current_bytes(), 800);
+        assert_eq!(c.peak_bytes(), 800);
+        assert_eq!(c.len(), 1);
+        // second entry
+        c.put(key(0, 1, Unit::Block), dev(&rt, 50), None, 1);
+        assert_eq!(c.current_bytes(), 1000);
+        c.clear();
+        assert_eq!(c.current_bytes(), 0);
+        assert_eq!(c.peak_bytes(), 1000, "peak survives clear");
+    }
+
+    #[test]
+    fn coarse_vs_fine_entries_per_layer() {
+        let rt = Runtime::cpu().unwrap();
+        let layers = 4;
+        // coarse: 2 per layer pair (spatial+temporal blocks)
+        let mut coarse = FeatureCache::new();
+        for l in 0..layers {
+            for kind in BlockKind::ALL {
+                coarse.put(
+                    CacheKey { branch: 0, layer: l, kind, unit: Unit::Block },
+                    dev(&rt, 10),
+                    None,
+                    0,
+                );
+            }
+        }
+        assert!((coarse.entries_per_layer(layers) - 2.0).abs() < 1e-9);
+
+        // fine: 3 sublayers × 2 kinds = 6 per layer pair
+        let mut fine = FeatureCache::new();
+        for l in 0..layers {
+            for kind in BlockKind::ALL {
+                for s in SubUnit::ALL {
+                    fine.put(
+                        CacheKey { branch: 0, layer: l, kind, unit: Unit::Sub(s) },
+                        dev(&rt, 10),
+                        None,
+                        0,
+                    );
+                }
+            }
+        }
+        assert!((fine.entries_per_layer(layers) - 6.0).abs() < 1e-9);
+        // the paper's 3× memory claim
+        assert!(
+            (fine.current_bytes() as f64 / coarse.current_bytes() as f64 - 3.0).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn hits_and_stores_counted() {
+        let rt = Runtime::cpu().unwrap();
+        let mut c = FeatureCache::new();
+        let k = key(1, 2, Unit::Sub(SubUnit::Mlp));
+        assert!(c.get(&k).is_none());
+        assert_eq!(c.hits, 0);
+        c.put(k, dev(&rt, 10), None, 3);
+        assert!(c.get(&k).is_some());
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.stores, 1);
+        assert_eq!(c.get(&k).unwrap().step, 3);
+    }
+
+    #[test]
+    fn branches_are_isolated() {
+        let rt = Runtime::cpu().unwrap();
+        let mut c = FeatureCache::new();
+        c.put(key(0, 0, Unit::Block), dev(&rt, 10), None, 0);
+        assert!(!c.contains(&key(1, 0, Unit::Block)));
+        assert!(c.contains(&key(0, 0, Unit::Block)));
+    }
+}

@@ -1,0 +1,282 @@
+//! Artifact manifest parsing — the Python→Rust ABI.
+//!
+//! `artifacts/manifest.json` (written by python/compile/aot.py) records
+//! every model preset's architecture numbers, the ordered parameter name
+//! lists per executable piece, the shape buckets, and the denoising
+//! schedule constants. This module parses it into typed structs; everything
+//! downstream (model loading, samplers, engine) works off these.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Denoising-schedule constants shared bit-for-bit with Python.
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleConfig {
+    pub train_timesteps: usize,
+    pub beta_start: f64,
+    pub beta_end: f64,
+}
+
+/// Which sampler family a preset uses (paper §4.1: OpenSora uses rflow,
+/// Latte/CogVideoX use DDIM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    Rflow,
+    Ddim,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "rflow" => Ok(Self::Rflow),
+            "ddim" => Ok(Self::Ddim),
+            other => Err(anyhow!("unknown sampler kind '{other}'")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Rflow => "rflow",
+            Self::Ddim => "ddim",
+        }
+    }
+}
+
+/// One compilation bucket (static shapes).
+#[derive(Debug, Clone)]
+pub struct BucketInfo {
+    pub name: String,
+    pub ph: usize,
+    pub pw: usize,
+    pub frames: usize,
+    pub tokens: usize,
+    pub dir: String,
+}
+
+/// One model preset as exported.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_text: usize,
+    pub text_len: usize,
+    pub latent_channels: usize,
+    pub mlp_ratio: usize,
+    pub t_freq_dim: usize,
+    pub sampler: SamplerKind,
+    pub steps: usize,
+    pub cfg_scale: f64,
+    pub weights_dir: String,
+    /// Ordered parameter names per piece (the executable argument ABI).
+    pub piece_params: BTreeMap<String, Vec<String>>,
+    pub buckets: BTreeMap<String, BucketInfo>,
+}
+
+impl ModelInfo {
+    pub fn bucket(&self, name: &str) -> Result<&BucketInfo> {
+        self.buckets.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {} has no bucket '{name}' (have: {})",
+                self.name,
+                self.buckets.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Feature elements per DiT-block activation [F, P, D].
+    pub fn block_elements(&self, bucket: &BucketInfo) -> usize {
+        bucket.frames * bucket.tokens * self.d_model
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub schedule: ScheduleConfig,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+fn req<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest: missing {ctx}.{key}"))
+}
+
+fn req_usize(j: &Json, key: &str, ctx: &str) -> Result<usize> {
+    req(j, key, ctx)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("manifest: {ctx}.{key} not a number"))
+}
+
+fn req_f64(j: &Json, key: &str, ctx: &str) -> Result<f64> {
+    req(j, key, ctx)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("manifest: {ctx}.{key} not a number"))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a str> {
+    req(j, key, ctx)?
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest: {ctx}.{key} not a string"))
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Self> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, root)
+    }
+
+    /// Parse manifest text (root used to resolve artifact paths).
+    pub fn parse(text: &str, root: &Path) -> Result<Self> {
+        let j = json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let sched = req(&j, "schedule", "")?;
+        let schedule = ScheduleConfig {
+            train_timesteps: req_usize(sched, "train_timesteps", "schedule")?,
+            beta_start: req_f64(sched, "beta_start", "schedule")?,
+            beta_end: req_f64(sched, "beta_end", "schedule")?,
+        };
+        let mut models = BTreeMap::new();
+        let mobj = req(&j, "models", "")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: models not an object"))?;
+        for (name, mj) in mobj {
+            models.insert(name.clone(), Self::parse_model(name, mj)?);
+        }
+        Ok(Self { root: root.to_path_buf(), schedule, models })
+    }
+
+    fn parse_model(name: &str, mj: &Json) -> Result<ModelInfo> {
+        let ctx = format!("models.{name}");
+        let mut piece_params = BTreeMap::new();
+        let pp = req(mj, "piece_params", &ctx)?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: {ctx}.piece_params not object"))?;
+        for (piece, arr) in pp {
+            let names = arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest: piece_params.{piece} not array"))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("manifest: non-string param name"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            piece_params.insert(piece.clone(), names);
+        }
+        let mut buckets = BTreeMap::new();
+        let bo = req(mj, "buckets", &ctx)?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: {ctx}.buckets not object"))?;
+        for (bname, bj) in bo {
+            let bctx = format!("{ctx}.buckets.{bname}");
+            buckets.insert(
+                bname.clone(),
+                BucketInfo {
+                    name: bname.clone(),
+                    ph: req_usize(bj, "ph", &bctx)?,
+                    pw: req_usize(bj, "pw", &bctx)?,
+                    frames: req_usize(bj, "frames", &bctx)?,
+                    tokens: req_usize(bj, "tokens", &bctx)?,
+                    dir: req_str(bj, "dir", &bctx)?.to_string(),
+                },
+            );
+        }
+        Ok(ModelInfo {
+            name: name.to_string(),
+            layers: req_usize(mj, "layers", &ctx)?,
+            d_model: req_usize(mj, "d_model", &ctx)?,
+            n_heads: req_usize(mj, "n_heads", &ctx)?,
+            d_text: req_usize(mj, "d_text", &ctx)?,
+            text_len: req_usize(mj, "text_len", &ctx)?,
+            latent_channels: req_usize(mj, "latent_channels", &ctx)?,
+            mlp_ratio: req_usize(mj, "mlp_ratio", &ctx)?,
+            t_freq_dim: req_usize(mj, "t_freq_dim", &ctx)?,
+            sampler: SamplerKind::parse(req_str(mj, "sampler", &ctx)?)?,
+            steps: req_usize(mj, "steps", &ctx)?,
+            cfg_scale: req_f64(mj, "cfg_scale", &ctx)?,
+            weights_dir: req_str(mj, "weights_dir", &ctx)?.to_string(),
+            piece_params,
+            buckets,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown model '{name}' (have: {})",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Default artifacts root: $FORESIGHT_ARTIFACTS or ./artifacts.
+    pub fn default_root() -> PathBuf {
+        std::env::var("FORESIGHT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "schedule": {"train_timesteps": 1000, "beta_start": 0.0001, "beta_end": 0.02},
+      "models": {
+        "m": {
+          "layers": 2, "d_model": 16, "n_heads": 2, "d_text": 8, "text_len": 4,
+          "latent_channels": 8, "mlp_ratio": 4, "t_freq_dim": 32,
+          "sampler": "ddim", "steps": 50, "cfg_scale": 7.5,
+          "weights_dir": "m/weights",
+          "piece_params": {"embed": ["patch_w", "patch_b"]},
+          "buckets": {"b": {"ph": 2, "pw": 3, "frames": 4, "tokens": 6, "dir": "m/b"}}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.schedule.train_timesteps, 1000);
+        let mm = m.model("m").unwrap();
+        assert_eq!(mm.layers, 2);
+        assert_eq!(mm.sampler, SamplerKind::Ddim);
+        let b = mm.bucket("b").unwrap();
+        assert_eq!(b.tokens, 6);
+        assert_eq!(mm.block_elements(b), 4 * 6 * 16);
+        assert_eq!(mm.piece_params["embed"], vec!["patch_w", "patch_b"]);
+    }
+
+    #[test]
+    fn unknown_model_and_bucket_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.model("m").unwrap().bucket("nope").is_err());
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let bad = r#"{"schedule": {"train_timesteps": 1000}, "models": {}}"#;
+        assert!(Manifest::parse(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn sampler_kind_parse() {
+        assert_eq!(SamplerKind::parse("rflow").unwrap(), SamplerKind::Rflow);
+        assert!(SamplerKind::parse("euler").is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! Generation engine: the denoising loop with per-block reuse decisions.
+//!
+//! This is where the paper's system comes together. For every request the
+//! engine runs `T` denoising steps with classifier-free guidance; at each
+//! step, for each (layer, block, CFG-branch) — or sublayer for fine-grained
+//! baselines — it asks the [`ReusePolicy`] whether to dispatch the block
+//! executable or serve the activation from the [`FeatureCache`]. Reused
+//! blocks cost zero FLOPs and zero dispatches; that is the entire speedup
+//! mechanism of the paper.
+//!
+//! Hot-path properties (EXPERIMENTS.md §Perf):
+//! * activations stay device-resident across blocks and steps; the host
+//!   only sees the per-step `eps` (for sampler math) and, for Foresight,
+//!   the block outputs it must measure (Eq. 5/6 MSEs);
+//! * text K/V are precomputed once per request per (layer, kind, branch);
+//! * the patch embedding runs once per step, shared across CFG branches;
+//! * measurement scratch buffers are allocated once per request.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cache::{CacheKey, FeatureCache, Unit};
+use crate::config::ScheduleConfig;
+use crate::model::{BlockKind, LoadedModel, SubUnit};
+use crate::policy::{Action, CacheMode, Granularity, ReusePolicy, Site};
+use crate::runtime::{DeviceTensor, HostTensor};
+use crate::sampler;
+use crate::util::prng::Rng;
+use crate::util::stats::mse_f32;
+use crate::workload;
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: String,
+    pub seed: u64,
+    /// Override the preset's step count (paper ablations use T=60).
+    pub steps: Option<usize>,
+    /// Override the preset's CFG scale.
+    pub cfg_scale: Option<f64>,
+}
+
+impl Request {
+    pub fn new(prompt: &str, seed: u64) -> Self {
+        Self { prompt: prompt.to_string(), seed, steps: None, cfg_scale: None }
+    }
+}
+
+/// Counters and timings for one run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub policy: String,
+    pub wall_s: f64,
+    pub per_step_s: Vec<f64>,
+    pub computed_units: u64,
+    pub reused_units: u64,
+    /// Reuse decisions that fell back to compute due to a cold cache.
+    pub fallback_units: u64,
+    pub cache_peak_bytes: usize,
+    pub cache_entries_per_layer: f64,
+}
+
+impl RunStats {
+    /// Fraction of reuse-eligible decisions that actually reused.
+    pub fn reuse_fraction(&self) -> f64 {
+        let total = self.computed_units + self.reused_units;
+        if total == 0 {
+            0.0
+        } else {
+            self.reused_units as f64 / total as f64
+        }
+    }
+}
+
+/// Full result of one generation.
+pub struct RunResult {
+    /// Final denoised latent video [F, P, C].
+    pub latents: HostTensor,
+    pub stats: RunStats,
+    /// Per step, per site (branch 0, policy order): true = reused (Fig. 6).
+    pub reuse_map: Vec<Vec<bool>>,
+    /// Foresight's per-site λ after the run (Fig. 5).
+    pub thresholds: Option<BTreeMap<(usize, BlockKind, usize), f64>>,
+}
+
+/// Observer hook for the feature-dynamics analyses (Figs. 2/3/11-14):
+/// receives host copies of computed block outputs.
+pub trait StepObserver: Send {
+    /// Which CFG branch to observe (downloads are expensive; default cond).
+    fn wants_branch(&self, branch: usize) -> bool {
+        branch == 0
+    }
+
+    fn on_block(&mut self, step: usize, layer: usize, kind: BlockKind, data: &[f32]);
+}
+
+/// The generation engine bound to one loaded model variant.
+pub struct Engine {
+    model: Arc<LoadedModel>,
+    schedule: ScheduleConfig,
+}
+
+/// Per-branch request context (text conditioning).
+struct BranchCtx {
+    /// Precomputed cross-attention K/V per (layer, kind-index).
+    text_kv: Vec<[(Arc<DeviceTensor>, Arc<DeviceTensor>); 2]>,
+}
+
+impl Engine {
+    pub fn new(model: Arc<LoadedModel>, schedule: ScheduleConfig) -> Self {
+        Self { model, schedule }
+    }
+
+    pub fn model(&self) -> &Arc<LoadedModel> {
+        &self.model
+    }
+
+    /// Run one request under `policy`, optionally streaming block outputs
+    /// to `observer`.
+    pub fn generate(
+        &self,
+        req: &Request,
+        policy: &mut dyn ReusePolicy,
+        mut observer: Option<&mut dyn StepObserver>,
+    ) -> Result<RunResult> {
+        let m = &self.model;
+        let info = &m.info;
+        let rt = m.runtime().clone();
+        let steps = req.steps.unwrap_or(info.steps);
+        let cfg_scale = req.cfg_scale.unwrap_or(info.cfg_scale) as f32;
+        let smp = sampler::build(info.sampler, &self.schedule, steps);
+        let [f, p, d] = m.state_dims();
+        let [_, _, c_lat] = m.latent_dims();
+        let state_elems = f * p * d;
+        let latent_elems = f * p * c_lat;
+
+        policy.begin_request(info.layers, steps);
+        let granularity = policy.granularity();
+        let cache_mode = policy.cache_mode();
+        let needs_host = policy.needs_measurement();
+
+        // --- request-constant conditioning --------------------------------
+        let cond_raw = workload::embed_prompt(&req.prompt, info.d_text, info.text_len);
+        let uncond_raw = HostTensor::zeros(vec![info.text_len, info.d_text]);
+        let mut branches = Vec::with_capacity(2);
+        for raw in [&cond_raw, &uncond_raw] {
+            let text = Arc::new(m.text_proj(raw)?);
+            let mut text_kv = Vec::with_capacity(info.layers);
+            for layer in 0..info.layers {
+                let mut pair = Vec::with_capacity(2);
+                for kind in BlockKind::ALL {
+                    let tk = Arc::new(m.text_k(layer, kind, &text)?);
+                    let tv = Arc::new(m.text_v(layer, kind, &text)?);
+                    pair.push((tk, tv));
+                }
+                let pair: [(Arc<DeviceTensor>, Arc<DeviceTensor>); 2] =
+                    pair.try_into().map_err(|_| anyhow!("kv pair"))?;
+                text_kv.push(pair);
+            }
+            branches.push(BranchCtx { text_kv });
+        }
+
+        // --- initial latents ----------------------------------------------
+        let mut latent_rng = Rng::from_seed_and_label(req.seed, "latents");
+        let mut x = latent_rng.normal_vec(latent_elems);
+
+        // --- run state ------------------------------------------------------
+        let mut cache = FeatureCache::new();
+        let mut stats = RunStats { policy: policy.name(), ..Default::default() };
+        let mut reuse_map: Vec<Vec<bool>> = Vec::with_capacity(steps);
+        let mut scratch = vec![0.0f32; state_elems];
+        let mut eps = vec![0.0f32; latent_elems];
+        let mut eps_cond = vec![0.0f32; latent_elems];
+
+        let t_start = Instant::now();
+        for step in 0..steps {
+            let t_step = Instant::now();
+            let t_val = smp.t_value(step);
+            let c = Arc::new(m.t_embed(t_val)?);
+            let x_dev = rt.upload(&x, &[f, p, c_lat])?;
+            let h0 = Arc::new(m.embed(&x_dev)?);
+
+            let mut step_decisions: Vec<bool> = Vec::new();
+            for branch in 0..2usize {
+                let bctx = &branches[branch];
+                let mut h = h0.clone();
+                for layer in 0..info.layers {
+                    for kind in BlockKind::ALL {
+                        let (tk, tv) = &bctx.text_kv[layer][kind.index()];
+                        match granularity {
+                            Granularity::Coarse => {
+                                let site = Site { layer, kind, unit: Unit::Block, branch };
+                                let action = policy.action(step, site);
+                                if branch == 0 {
+                                    step_decisions.push(action.is_reuse());
+                                }
+                                h = self.apply_coarse(
+                                    step, site, action, cache_mode, needs_host, h, &c, tk,
+                                    tv, &mut cache, policy, &mut stats, &mut scratch,
+                                )?;
+                            }
+                            Granularity::Fine => {
+                                for sub in SubUnit::ALL {
+                                    let site =
+                                        Site { layer, kind, unit: Unit::Sub(sub), branch };
+                                    let action = policy.action(step, site);
+                                    if branch == 0 {
+                                        step_decisions.push(action.is_reuse());
+                                    }
+                                    h = self.apply_fine(
+                                        site, action, h, &c, tk, tv, &mut cache,
+                                        &mut stats, step,
+                                    )?;
+                                }
+                            }
+                        }
+                        if let Some(obs) = observer.as_deref_mut() {
+                            if obs.wants_branch(branch) {
+                                rt.download_into(&h, &mut scratch)?;
+                                obs.on_block(step, layer, kind, &scratch);
+                            }
+                        }
+                    }
+                }
+                let eps_dev = m.final_proj(&h, &c)?;
+                let dst = if branch == 0 { &mut eps_cond } else { &mut eps };
+                rt.download_into(&eps_dev, dst)?;
+            }
+
+            // CFG combine: eps = uncond + s * (cond - uncond)
+            for i in 0..latent_elems {
+                eps[i] += cfg_scale * (eps_cond[i] - eps[i]);
+            }
+            smp.step(&mut x, &eps, step);
+            reuse_map.push(step_decisions);
+            stats.per_step_s.push(t_step.elapsed().as_secs_f64());
+        }
+
+        stats.wall_s = t_start.elapsed().as_secs_f64();
+        stats.cache_peak_bytes = cache.peak_bytes();
+        stats.cache_entries_per_layer = cache.entries_per_layer(info.layers);
+        Ok(RunResult {
+            latents: HostTensor::new(vec![f, p, c_lat], x),
+            stats,
+            reuse_map,
+            thresholds: policy.thresholds(),
+        })
+    }
+
+    /// Execute / reuse one coarse (whole-block) site.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_coarse(
+        &self,
+        step: usize,
+        site: Site,
+        action: Action,
+        cache_mode: CacheMode,
+        needs_host: bool,
+        h: Arc<DeviceTensor>,
+        c: &Arc<DeviceTensor>,
+        tk: &Arc<DeviceTensor>,
+        tv: &Arc<DeviceTensor>,
+        cache: &mut FeatureCache,
+        policy: &mut dyn ReusePolicy,
+        stats: &mut RunStats,
+        scratch: &mut [f32],
+    ) -> Result<Arc<DeviceTensor>> {
+        let m = &self.model;
+        let key = CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
+
+        let effective = match action {
+            Action::Reuse | Action::ReuseResidual if !cache.contains(&key) => {
+                stats.fallback_units += 1;
+                Action::Compute { update_cache: true, measure: needs_host }
+            }
+            a => a,
+        };
+
+        match effective {
+            Action::Reuse => {
+                stats.reused_units += 1;
+                let e = cache.get(&key).expect("checked above");
+                Ok(e.device.clone())
+            }
+            Action::ReuseResidual => {
+                stats.reused_units += 1;
+                let delta = cache.get(&key).expect("checked above").device.clone();
+                Ok(Arc::new(m.add(&h, &delta)?))
+            }
+            Action::Compute { update_cache, measure } => {
+                stats.computed_units += 1;
+                let out = Arc::new(m.block_full(site.layer, site.kind, &h, c, tk, tv)?);
+                if measure {
+                    m.runtime().download_into(&out, scratch)?;
+                    if let Some(prev) = cache.peek_host(&key) {
+                        let mse = mse_f32(scratch, prev);
+                        policy.observe_mse(step, site, mse);
+                    }
+                }
+                if update_cache {
+                    let (dev, host) = match cache_mode {
+                        CacheMode::Output => (
+                            out.clone(),
+                            if needs_host { Some(scratch.to_vec()) } else { None },
+                        ),
+                        CacheMode::Delta => {
+                            (Arc::new(m.sub(&out, &h)?), None)
+                        }
+                    };
+                    cache.put(key, dev, host, step);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Execute / reuse one fine (sublayer) site. Fine policies always cache
+    /// residual deltas.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_fine(
+        &self,
+        site: Site,
+        action: Action,
+        h: Arc<DeviceTensor>,
+        c: &Arc<DeviceTensor>,
+        tk: &Arc<DeviceTensor>,
+        tv: &Arc<DeviceTensor>,
+        cache: &mut FeatureCache,
+        stats: &mut RunStats,
+        step: usize,
+    ) -> Result<Arc<DeviceTensor>> {
+        let m = &self.model;
+        let Unit::Sub(sub) = site.unit else {
+            return Err(anyhow!("fine path requires sub unit"));
+        };
+        let key = CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
+
+        let effective = match action {
+            Action::Reuse | Action::ReuseResidual if !cache.contains(&key) => {
+                stats.fallback_units += 1;
+                Action::Compute { update_cache: true, measure: false }
+            }
+            Action::Reuse => Action::ReuseResidual, // fine reuse is delta-based
+            a => a,
+        };
+
+        match effective {
+            Action::ReuseResidual => {
+                stats.reused_units += 1;
+                let delta = cache.get(&key).expect("checked above").device.clone();
+                Ok(Arc::new(m.add(&h, &delta)?))
+            }
+            Action::Compute { update_cache, .. } => {
+                stats.computed_units += 1;
+                let out = Arc::new(match sub {
+                    SubUnit::Attn => m.block_attn(site.layer, site.kind, &h, c)?,
+                    SubUnit::Cross => m.block_cross(site.layer, site.kind, &h, tk, tv)?,
+                    SubUnit::Mlp => m.block_mlp(site.layer, site.kind, &h, c)?,
+                });
+                if update_cache {
+                    let delta = Arc::new(m.sub(&out, &h)?);
+                    cache.put(key, delta, None, step);
+                }
+                Ok(out)
+            }
+            Action::Reuse => unreachable!("mapped to ReuseResidual above"),
+        }
+    }
+}

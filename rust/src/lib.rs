@@ -1,0 +1,32 @@
+//! # Foresight — adaptive layer reuse for text-to-video DiT serving
+//!
+//! Rust + JAX + Pallas reproduction of *"Foresight: Adaptive Layer Reuse for
+//! Accelerated and High-Quality Text-to-Video Generation"* (NeurIPS 2025).
+//!
+//! Three layers (DESIGN.md):
+//! * **L1** — Pallas kernels (flash attention, fused LN+modulate, fused MLP)
+//!   authored in `python/compile/kernels/`, lowered at build time.
+//! * **L2** — the ST-DiT model in JAX (`python/compile/model.py`), exported
+//!   piece-by-piece to HLO text so each DiT block is an independently
+//!   dispatchable executable.
+//! * **L3** — this crate: the serving coordinator that makes the paper's
+//!   per-layer, per-step reuse decisions on the request path, with Python
+//!   never loaded at runtime.
+//!
+//! Start with [`engine::Engine`] for single requests or [`server`] for the
+//! TCP serving front-end; `examples/quickstart.rs` shows the 20-line path.
+
+pub mod analysis;
+pub mod cache;
+pub mod config;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod policy;
+pub mod runtime;
+pub mod sampler;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+pub mod bench_support;

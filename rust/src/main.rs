@@ -1,0 +1,201 @@
+//! Foresight CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `generate` — run one prompt through a policy, print run stats
+//! * `serve`    — start the TCP JSON-lines serving front-end
+//! * `analyze`  — dump feature-dynamics statistics (Fig. 2-style CSV)
+//! * `info`     — list models/buckets available in the artifact manifest
+
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+use foresight::analysis::DynamicsRecorder;
+use foresight::config::Manifest;
+use foresight::engine::{Engine, Request};
+use foresight::model::{BlockKind, LoadedModel};
+use foresight::policy::build_policy;
+use foresight::runtime::Runtime;
+use foresight::server::{EngineRegistry, Server, ServerConfig};
+use foresight::util::cli::Cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.clone(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let run = match cmd.as_str() {
+        "generate" => cmd_generate(&rest),
+        "serve" => cmd_serve(&rest),
+        "analyze" => cmd_analyze(&rest),
+        "info" => cmd_info(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n\n{}", usage())),
+    };
+    if let Err(e) = run {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "foresight — adaptive layer reuse for text-to-video DiT serving\n\n\
+     Commands:\n\
+     \x20 generate   run one prompt under a reuse policy\n\
+     \x20 serve      start the TCP JSON-lines server\n\
+     \x20 analyze    dump feature-dynamics CSV (Fig. 2 style)\n\
+     \x20 info       list available models and buckets\n\n\
+     Run `foresight <command> --help` for options."
+        .to_string()
+}
+
+fn load_engine(model: &str, bucket: &str) -> Result<Engine> {
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    let rt = Arc::new(Runtime::cpu()?);
+    let lm = Arc::new(LoadedModel::load(rt, &manifest, model, bucket)?);
+    Ok(Engine::new(lm, manifest.schedule))
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let p = Cli::new("foresight generate", "run one prompt under a reuse policy")
+        .opt("model", "opensora-sim", "model preset")
+        .opt("bucket", "240p-2s", "shape bucket")
+        .opt("policy", "foresight", "policy spec, e.g. foresight:n=2,r=3,gamma=0.5")
+        .opt("prompt", "a calm lake at dawn, soft golden light", "text prompt")
+        .opt("seed", "0", "random seed")
+        .opt("steps", "", "override denoising steps")
+        .parse(args)
+        .map_err(|e| anyhow!("{e}"))?;
+
+    let engine = load_engine(p.get("model"), p.get("bucket"))?;
+    let info = engine.model().info.clone();
+    let steps = if p.get("steps").is_empty() {
+        None
+    } else {
+        Some(p.get_usize("steps").map_err(|e| anyhow!(e))?)
+    };
+    let mut policy = build_policy(p.get("policy"), &info, steps.unwrap_or(info.steps))?;
+    let mut req = Request::new(p.get("prompt"), p.get_u64("seed").map_err(|e| anyhow!(e))?);
+    req.steps = steps;
+
+    let result = engine.generate(&req, policy.as_mut(), None)?;
+    let s = &result.stats;
+    println!("model        : {} / {}", info.name, p.get("bucket"));
+    println!("policy       : {}", s.policy);
+    println!("steps        : {}", s.per_step_s.len());
+    println!("wall time    : {:.3} s", s.wall_s);
+    println!("computed     : {} block-units", s.computed_units);
+    println!(
+        "reused       : {} block-units ({:.1}%)",
+        s.reused_units,
+        100.0 * s.reuse_fraction()
+    );
+    println!("cache peak   : {:.1} KiB", s.cache_peak_bytes as f64 / 1024.0);
+    println!("entries/layer: {:.1}", s.cache_entries_per_layer);
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let p = Cli::new("foresight serve", "start the TCP JSON-lines server")
+        .opt("addr", "127.0.0.1:7878", "bind address")
+        .opt("workers", "2", "worker threads")
+        .opt(
+            "models",
+            "opensora-sim:240p-2s",
+            "comma list of model:bucket pairs to load",
+        )
+        .parse(args)
+        .map_err(|e| anyhow!("{e}"))?;
+
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    let rt = Arc::new(Runtime::cpu()?);
+    let pairs: Vec<(String, String)> = p
+        .get_list("models")
+        .iter()
+        .map(|s| {
+            s.split_once(':')
+                .map(|(m, b)| (m.to_string(), b.to_string()))
+                .ok_or_else(|| anyhow!("--models entries must be model:bucket, got '{s}'"))
+        })
+        .collect::<Result<_>>()?;
+    let registry = Arc::new(EngineRegistry::load(rt, &manifest, &pairs)?);
+    let server = Server::start(
+        registry,
+        ServerConfig {
+            addr: p.get("addr").to_string(),
+            workers: p.get_usize("workers").map_err(|e| anyhow!(e))?,
+        },
+    )?;
+    println!("foresight server listening on {}", server.addr());
+    println!("loaded: {pairs:?}");
+    println!("press Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_analyze(args: &[String]) -> Result<()> {
+    let p = Cli::new("foresight analyze", "dump feature-dynamics CSV")
+        .opt("model", "analysis", "model preset (28 layer pairs)")
+        .opt("bucket", "240p-2s", "shape bucket")
+        .opt("prompt", "a calm lake at dawn, soft golden light", "text prompt")
+        .opt("seed", "0", "random seed")
+        .opt("out", "results/analyze_mse.csv", "output CSV path")
+        .parse(args)
+        .map_err(|e| anyhow!("{e}"))?;
+
+    let engine = load_engine(p.get("model"), p.get("bucket"))?;
+    let info = engine.model().info.clone();
+    let mut policy = build_policy("none", &info, info.steps)?;
+    let mut rec = DynamicsRecorder::new();
+    let req = Request::new(p.get("prompt"), p.get_u64("seed").map_err(|e| anyhow!(e))?);
+    engine.generate(&req, policy.as_mut(), Some(&mut rec))?;
+
+    let mut csv = String::from("layer,step,mse_spatial,mse_temporal\n");
+    for (step, row) in &rec.step_mse {
+        for layer in 0..info.layers {
+            let ms = row.get(&(layer, BlockKind::Spatial)).copied().unwrap_or(0.0);
+            let mt = row.get(&(layer, BlockKind::Temporal)).copied().unwrap_or(0.0);
+            csv.push_str(&format!("{layer},{step},{ms:.6e},{mt:.6e}\n"));
+        }
+    }
+    let out = p.get("out");
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(out, csv)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_info(_args: &[String]) -> Result<()> {
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    println!("artifacts: {}", manifest.root.display());
+    println!(
+        "schedule: T={} beta=[{}, {}]",
+        manifest.schedule.train_timesteps,
+        manifest.schedule.beta_start,
+        manifest.schedule.beta_end
+    );
+    for (name, m) in &manifest.models {
+        println!(
+            "\n{name}: L={} D={} heads={} sampler={} steps={} cfg={}",
+            m.layers,
+            m.d_model,
+            m.n_heads,
+            m.sampler.name(),
+            m.steps,
+            m.cfg_scale
+        );
+        for (bname, b) in &m.buckets {
+            println!("  bucket {bname}: {}x{} patches × {} frames", b.ph, b.pw, b.frames);
+        }
+    }
+    Ok(())
+}

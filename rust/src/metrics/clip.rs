@@ -1,0 +1,147 @@
+//! CLIP-proxy metrics: text-video similarity (CLIPSIM) and temporal
+//! consistency (CLIP-Temp), per EvalCrafter's definitions (paper Appendix
+//! A.7, Table 8). Substitution: the shared-space projections are fixed
+//! seeded matrices over the prompt embedding and the frame descriptors
+//! (DESIGN.md §1) — relative comparisons between methods are preserved.
+
+use super::decoder::Frames;
+use super::features::FeatureNet;
+use crate::runtime::HostTensor;
+use crate::util::prng::Rng;
+use crate::util::stats::cosine_f32;
+
+/// Dimensionality of the joint text-video space.
+const JOINT_DIM: usize = 32;
+
+/// Fixed projection pair mapping prompt embeddings and video descriptors
+/// into a joint space.
+pub struct ClipProxy {
+    net: FeatureNet,
+    /// [d_text_pooled(=64 max), JOINT_DIM]
+    text_proj: Vec<f32>,
+    d_text: usize,
+    /// [40, JOINT_DIM] (frame descriptor dim)
+    video_proj: Vec<f32>,
+}
+
+impl ClipProxy {
+    pub fn new(d_text: usize) -> Self {
+        let mut rng = Rng::from_seed_and_label(0xC11F, "clip-proxy");
+        let text_proj = (0..d_text * JOINT_DIM)
+            .map(|_| rng.next_normal() / (d_text as f32).sqrt())
+            .collect();
+        let video_proj = (0..40 * JOINT_DIM)
+            .map(|_| rng.next_normal() / 40f32.sqrt())
+            .collect();
+        Self { net: FeatureNet::new(), text_proj, d_text, video_proj }
+    }
+
+    fn project(&self, v: &[f32], proj: &[f32], din: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; JOINT_DIM];
+        for i in 0..din {
+            for j in 0..JOINT_DIM {
+                out[j] += v[i] * proj[i * JOINT_DIM + j];
+            }
+        }
+        out
+    }
+
+    /// CLIPSIM-proxy: mean cosine similarity between the projected prompt
+    /// embedding and each projected frame descriptor, scaled ×20 + 20 into
+    /// the familiar EvalCrafter CLIPSIM range for readability (identical
+    /// affine for every method; ordering unchanged).
+    pub fn clipsim(&self, prompt_emb: &HostTensor, fr: &Frames) -> f64 {
+        // pool prompt tokens
+        let (s, d) = (prompt_emb.dims[0], prompt_emb.dims[1]);
+        assert_eq!(d, self.d_text);
+        let mut pooled = vec![0.0f32; d];
+        for tok in 0..s {
+            for i in 0..d {
+                pooled[i] += prompt_emb.data[tok * d + i] / s as f32;
+            }
+        }
+        let t = self.project(&pooled, &self.text_proj, d);
+        let descs = self.net.video_descriptors(fr);
+        let mut acc = 0.0;
+        for desc in &descs {
+            let v = self.project(desc, &self.video_proj, 40);
+            acc += cosine_f32(&t, &v);
+        }
+        20.0 + 20.0 * (acc / descs.len() as f64)
+    }
+
+    /// CLIP-Temp: mean cosine similarity of consecutive frame descriptors
+    /// × 100 (this *is* EvalCrafter's definition, just in our feature
+    /// space; paper values are 99.x).
+    pub fn clip_temp(&self, fr: &Frames) -> f64 {
+        let descs = self.net.video_descriptors(fr);
+        if descs.len() < 2 {
+            return 100.0;
+        }
+        let mut acc = 0.0;
+        for t in 1..descs.len() {
+            acc += cosine_f32(&descs[t - 1], &descs[t]);
+        }
+        100.0 * acc / (descs.len() - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::embed_prompt;
+
+    fn frames(seed: u64) -> Frames {
+        let mut rng = Rng::new(seed);
+        Frames { f: 4, h: 16, w: 16, data: rng.uniform_vec(4 * 3 * 16 * 16, 0.0, 1.0) }
+    }
+
+    #[test]
+    fn clip_temp_static_video_is_100() {
+        let c = ClipProxy::new(64);
+        let one = frames(1);
+        let per = one.pixels_per_frame();
+        let mut st = one.clone();
+        let first: Vec<f32> = st.data[..per].to_vec();
+        for f in 0..st.f {
+            st.data[f * per..(f + 1) * per].copy_from_slice(&first);
+        }
+        let v = c.clip_temp(&st);
+        assert!((v - 100.0).abs() < 1e-6, "{v}");
+    }
+
+    #[test]
+    fn clip_temp_smooth_above_noisy() {
+        let c = ClipProxy::new(64);
+        let smooth = frames(2); // uniform random but same distribution per frame
+        let mut noisy = smooth.clone();
+        // alternate inverted frames → violently changing video
+        let per = noisy.pixels_per_frame();
+        for f in (1..noisy.f).step_by(2) {
+            for v in &mut noisy.data[f * per..(f + 1) * per] {
+                *v = 1.0 - *v;
+            }
+        }
+        assert!(c.clip_temp(&smooth) > c.clip_temp(&noisy));
+    }
+
+    #[test]
+    fn clipsim_deterministic_and_bounded() {
+        let c = ClipProxy::new(64);
+        let p = embed_prompt("a calm lake at dawn", 64, 16);
+        let f = frames(3);
+        let a = c.clipsim(&p, &f);
+        let b = c.clipsim(&p, &f);
+        assert_eq!(a, b);
+        assert!((0.0..=40.0).contains(&a), "{a}");
+    }
+
+    #[test]
+    fn clipsim_differs_across_prompts() {
+        let c = ClipProxy::new(64);
+        let f = frames(4);
+        let a = c.clipsim(&embed_prompt("a calm lake", 64, 16), &f);
+        let b = c.clipsim(&embed_prompt("explosive racing storm chaos", 64, 16), &f);
+        assert_ne!(a, b);
+    }
+}

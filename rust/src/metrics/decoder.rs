@@ -1,0 +1,179 @@
+//! VAE-decoder substitute: deterministic linear patch decoder.
+//!
+//! The paper decodes latents with each model's pretrained VAE before
+//! computing pixel metrics. No VAE exists here, so latent tokens are
+//! decoded with a *fixed seeded* linear projection per patch
+//! (`C → 3·s·s` pixel-shuffle, s = 8) followed by a smooth squash into
+//! [0, 1]. Fixed weights mean the decoder is a measurable, reproducible
+//! function: identical latents → identical frames, and latent-space
+//! differences map monotonically into pixel-space differences, which is all
+//! the relative quality comparisons in the paper's tables require
+//! (DESIGN.md §1).
+
+use crate::runtime::HostTensor;
+use crate::util::prng::Rng;
+
+/// Pixel upsampling factor per latent patch.
+pub const PATCH_SIDE: usize = 8;
+
+/// A decoded video: frames in [F, 3, H, W] layout, values in [0, 1].
+#[derive(Debug, Clone)]
+pub struct Frames {
+    pub f: usize,
+    pub h: usize,
+    pub w: usize,
+    /// len = f * 3 * h * w
+    pub data: Vec<f32>,
+}
+
+impl Frames {
+    pub fn frame(&self, i: usize) -> &[f32] {
+        let sz = 3 * self.h * self.w;
+        &self.data[i * sz..(i + 1) * sz]
+    }
+
+    pub fn channel(&self, frame: usize, c: usize) -> &[f32] {
+        let hw = self.h * self.w;
+        let base = frame * 3 * hw + c * hw;
+        &self.data[base..base + hw]
+    }
+
+    pub fn pixels_per_frame(&self) -> usize {
+        3 * self.h * self.w
+    }
+}
+
+/// The fixed decoder for one latent geometry.
+pub struct Decoder {
+    ph: usize,
+    pw: usize,
+    channels: usize,
+    /// [C, 3*s*s] projection, seeded once.
+    weight: Vec<f32>,
+}
+
+impl Decoder {
+    pub fn new(ph: usize, pw: usize, channels: usize) -> Self {
+        let mut rng = Rng::from_seed_and_label(0xDEC0DE, "linear-vae-decoder");
+        let out = 3 * PATCH_SIDE * PATCH_SIDE;
+        let scale = 1.0 / (channels as f32).sqrt();
+        let weight = (0..channels * out)
+            .map(|_| rng.next_normal() * scale)
+            .collect();
+        Self { ph, pw, channels, weight }
+    }
+
+    pub fn out_height(&self) -> usize {
+        self.ph * PATCH_SIDE
+    }
+
+    pub fn out_width(&self) -> usize {
+        self.pw * PATCH_SIDE
+    }
+
+    /// Decode latents [F, P, C] (P = ph*pw) into frames [F, 3, H, W].
+    pub fn decode(&self, latents: &HostTensor) -> Frames {
+        assert_eq!(latents.dims.len(), 3, "latents must be [F, P, C]");
+        let (f, p, c) = (latents.dims[0], latents.dims[1], latents.dims[2]);
+        assert_eq!(p, self.ph * self.pw, "patch grid mismatch");
+        assert_eq!(c, self.channels, "channel mismatch");
+        let (h, w) = (self.out_height(), self.out_width());
+        let s = PATCH_SIDE;
+        let out_per_patch = 3 * s * s;
+        let mut data = vec![0.0f32; f * 3 * h * w];
+        for fi in 0..f {
+            for py in 0..self.ph {
+                for px in 0..self.pw {
+                    let tok = &latents.data
+                        [(fi * p + py * self.pw + px) * c..(fi * p + py * self.pw + px + 1) * c];
+                    for o in 0..out_per_patch {
+                        let mut acc = 0.0f32;
+                        for ci in 0..c {
+                            acc += tok[ci] * self.weight[ci * out_per_patch + o];
+                        }
+                        // smooth squash into [0, 1]
+                        let v = 0.5 + 0.5 * (acc * 0.7).tanh();
+                        let ch = o / (s * s);
+                        let yy = (o / s) % s;
+                        let xx = o % s;
+                        let y = py * s + yy;
+                        let x = px * s + xx;
+                        data[fi * 3 * h * w + ch * h * w + y * w + x] = v;
+                    }
+                }
+            }
+        }
+        Frames { f, h, w, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn latents(seed: u64) -> HostTensor {
+        let mut rng = Rng::new(seed);
+        HostTensor::new(vec![4, 6, 8], rng.normal_vec(4 * 6 * 8))
+    }
+
+    #[test]
+    fn decode_shapes_and_range() {
+        let d = Decoder::new(2, 3, 8);
+        let fr = d.decode(&latents(1));
+        assert_eq!(fr.f, 4);
+        assert_eq!(fr.h, 16);
+        assert_eq!(fr.w, 24);
+        assert_eq!(fr.data.len(), 4 * 3 * 16 * 24);
+        assert!(fr.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn decoder_is_deterministic() {
+        let d1 = Decoder::new(2, 3, 8);
+        let d2 = Decoder::new(2, 3, 8);
+        let l = latents(2);
+        assert_eq!(d1.decode(&l).data, d2.decode(&l).data);
+    }
+
+    #[test]
+    fn different_latents_different_frames() {
+        let d = Decoder::new(2, 3, 8);
+        assert_ne!(d.decode(&latents(1)).data, d.decode(&latents(2)).data);
+    }
+
+    #[test]
+    fn latent_distance_monotone_in_pixels() {
+        // small latent perturbation → smaller pixel distance than large one
+        let d = Decoder::new(2, 3, 8);
+        let base = latents(3);
+        let mut small = base.clone();
+        let mut large = base.clone();
+        for (i, v) in small.data.iter_mut().enumerate() {
+            *v += if i % 7 == 0 { 0.01 } else { 0.0 };
+        }
+        for (i, v) in large.data.iter_mut().enumerate() {
+            *v += if i % 7 == 0 { 0.5 } else { 0.0 };
+        }
+        let f0 = d.decode(&base);
+        let fs = d.decode(&small);
+        let fl = d.decode(&large);
+        let dist = |a: &Frames, b: &Frames| {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(dist(&f0, &fs) < dist(&f0, &fl));
+    }
+
+    #[test]
+    fn frame_and_channel_views() {
+        let d = Decoder::new(2, 2, 8);
+        let mut rng = Rng::new(5);
+        let l = HostTensor::new(vec![2, 4, 8], rng.normal_vec(2 * 4 * 8));
+        let fr = d.decode(&l);
+        assert_eq!(fr.frame(0).len(), fr.pixels_per_frame());
+        assert_eq!(fr.channel(1, 2).len(), fr.h * fr.w);
+    }
+}

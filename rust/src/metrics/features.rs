@@ -1,0 +1,209 @@
+//! Fixed random-feature extractor shared by the perceptual metric proxies.
+//!
+//! LPIPS/FVD/CLIP in the paper use pretrained networks (AlexNet, I3D, CLIP)
+//! as feature spaces. Here the feature space is a *fixed seeded* 3-stage
+//! conv stack (3→8→16→16 channels with ReLU + 2× average pooling). Random
+//! convolutional features are a standard stand-in for perceptual metrics:
+//! they are multi-scale, translation-equivariant and structure-sensitive,
+//! so distances in them order degradations the same way even though the
+//! absolute values differ from the pretrained-network metrics (documented
+//! substitution, DESIGN.md §1).
+
+use super::decoder::Frames;
+use crate::util::prng::Rng;
+
+/// One conv stage: 3x3 conv (padding 1) + ReLU + 2x2 average pool.
+struct Stage {
+    cin: usize,
+    cout: usize,
+    /// [cout, cin, 3, 3]
+    weight: Vec<f32>,
+}
+
+impl Stage {
+    fn new(rng: &mut Rng, cin: usize, cout: usize) -> Self {
+        let scale = (2.0 / (cin as f32 * 9.0)).sqrt();
+        let weight = (0..cout * cin * 9).map(|_| rng.next_normal() * scale).collect();
+        Self { cin, cout, weight }
+    }
+
+    /// input [cin, h, w] → output [cout, h/2, w/2]
+    fn forward(&self, x: &[f32], h: usize, w: usize) -> (Vec<f32>, usize, usize) {
+        let mut conv = vec![0.0f32; self.cout * h * w];
+        for co in 0..self.cout {
+            for ci in 0..self.cin {
+                let wbase = (co * self.cin + ci) * 9;
+                for y in 0..h {
+                    for x0 in 0..w {
+                        let mut acc = 0.0f32;
+                        for ky in 0..3usize {
+                            let yy = y + ky;
+                            if yy < 1 || yy > h {
+                                continue;
+                            }
+                            let yy = yy - 1;
+                            for kx in 0..3usize {
+                                let xx = x0 + kx;
+                                if xx < 1 || xx > w {
+                                    continue;
+                                }
+                                let xx = xx - 1;
+                                acc += self.weight[wbase + ky * 3 + kx]
+                                    * x[ci * h * w + yy * w + xx];
+                            }
+                        }
+                        conv[co * h * w + y * w + x0] += acc;
+                    }
+                }
+            }
+        }
+        // ReLU + 2x2 average pool
+        let (oh, ow) = (h / 2, w / 2);
+        let mut out = vec![0.0f32; self.cout * oh * ow];
+        for c in 0..self.cout {
+            for y in 0..oh {
+                for x0 in 0..ow {
+                    let mut acc = 0.0f32;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            acc += conv[c * h * w + (2 * y + dy) * w + (2 * x0 + dx)].max(0.0);
+                        }
+                    }
+                    out[c * oh * ow + y * ow + x0] = acc / 4.0;
+                }
+            }
+        }
+        (out, oh, ow)
+    }
+}
+
+/// The shared 3-stage feature pyramid.
+pub struct FeatureNet {
+    stages: Vec<Stage>,
+}
+
+/// Feature maps at each scale: (channels, h, w, data).
+pub struct Pyramid {
+    pub scales: Vec<(usize, usize, usize, Vec<f32>)>,
+}
+
+impl FeatureNet {
+    pub fn new() -> Self {
+        let mut rng = Rng::from_seed_and_label(0xFEA7, "metric-feature-net");
+        Self {
+            stages: vec![
+                Stage::new(&mut rng, 3, 8),
+                Stage::new(&mut rng, 8, 16),
+                Stage::new(&mut rng, 16, 16),
+            ],
+        }
+    }
+
+    /// Multi-scale features of one frame [3, h, w].
+    pub fn pyramid(&self, frame: &[f32], h: usize, w: usize) -> Pyramid {
+        let mut scales = Vec::with_capacity(self.stages.len());
+        let mut x = frame.to_vec();
+        let (mut ch, mut cw) = (h, w);
+        let mut _cin = 3;
+        for st in &self.stages {
+            let (nx, nh, nw) = st.forward(&x, ch, cw);
+            scales.push((st.cout, nh, nw, nx.clone()));
+            x = nx;
+            ch = nh;
+            cw = nw;
+            _cin = st.cout;
+        }
+        Pyramid { scales }
+    }
+
+    /// Global pooled descriptor of one frame (concatenated per-scale,
+    /// per-channel means) — the "embedding" used by FVD/CLIP proxies.
+    pub fn descriptor(&self, frame: &[f32], h: usize, w: usize) -> Vec<f32> {
+        let pyr = self.pyramid(frame, h, w);
+        let mut out = Vec::new();
+        for (c, sh, sw, data) in &pyr.scales {
+            for ci in 0..*c {
+                let plane = &data[ci * sh * sw..(ci + 1) * sh * sw];
+                out.push(plane.iter().sum::<f32>() / (sh * sw) as f32);
+            }
+        }
+        out // 8 + 16 + 16 = 40 dims
+    }
+
+    /// Per-frame descriptors of a whole video.
+    pub fn video_descriptors(&self, fr: &Frames) -> Vec<Vec<f32>> {
+        (0..fr.f)
+            .map(|i| self.descriptor(fr.frame(i), fr.h, fr.w))
+            .collect()
+    }
+}
+
+impl Default for FeatureNet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(seed: u64, h: usize, w: usize) -> Vec<f32> {
+        Rng::new(seed).uniform_vec(3 * h * w, 0.0, 1.0)
+    }
+
+    #[test]
+    fn pyramid_shapes_halve() {
+        let net = FeatureNet::new();
+        let p = net.pyramid(&frame(1, 16, 24), 16, 24);
+        assert_eq!(p.scales.len(), 3);
+        assert_eq!((p.scales[0].0, p.scales[0].1, p.scales[0].2), (8, 8, 12));
+        assert_eq!((p.scales[1].0, p.scales[1].1, p.scales[1].2), (16, 4, 6));
+        assert_eq!((p.scales[2].0, p.scales[2].1, p.scales[2].2), (16, 2, 3));
+    }
+
+    #[test]
+    fn descriptor_is_deterministic_and_40d() {
+        let net1 = FeatureNet::new();
+        let net2 = FeatureNet::new();
+        let f = frame(2, 16, 16);
+        let d1 = net1.descriptor(&f, 16, 16);
+        let d2 = net2.descriptor(&f, 16, 16);
+        assert_eq!(d1, d2);
+        assert_eq!(d1.len(), 40);
+    }
+
+    #[test]
+    fn distinct_frames_distinct_descriptors() {
+        let net = FeatureNet::new();
+        let d1 = net.descriptor(&frame(1, 16, 16), 16, 16);
+        let d2 = net.descriptor(&frame(2, 16, 16), 16, 16);
+        assert_ne!(d1, d2);
+    }
+
+    #[test]
+    fn descriptor_continuity() {
+        // small pixel change → small descriptor change vs large change
+        let net = FeatureNet::new();
+        let f0 = frame(3, 16, 16);
+        let mut fs = f0.clone();
+        let mut fl = f0.clone();
+        for (i, v) in fs.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *v = (*v + 0.01).min(1.0);
+            }
+        }
+        for (i, v) in fl.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *v = (*v + 0.4).min(1.0);
+            }
+        }
+        let d0 = net.descriptor(&f0, 16, 16);
+        let ds = net.descriptor(&fs, 16, 16);
+        let dl = net.descriptor(&fl, 16, 16);
+        let dist = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>()
+        };
+        assert!(dist(&d0, &ds) < dist(&d0, &dl));
+    }
+}

@@ -1,0 +1,86 @@
+//! Video-quality metrics (paper §4.1 "Evaluation Datasets and Metrics",
+//! Appendix A.5).
+//!
+//! Exact implementations: PSNR, SSIM (pixel.rs). Documented proxies for the
+//! pretrained-network metrics: LPIPS/FVD (perceptual.rs over the fixed
+//! random feature net in features.rs), CLIPSIM/CLIP-Temp (clip.rs), DOVER
+//! VQA (vqa.rs) and VBench (vbench.rs). Latents are decoded to pixel-shaped
+//! frames by the fixed linear decoder (decoder.rs).
+//!
+//! [`QualityReport::compare`] bundles everything a paper table row needs.
+
+pub mod clip;
+pub mod decoder;
+pub mod features;
+pub mod perceptual;
+pub mod pixel;
+pub mod vbench;
+pub mod vqa;
+
+pub use clip::ClipProxy;
+pub use decoder::{Decoder, Frames};
+pub use features::FeatureNet;
+pub use perceptual::{fvd, lpips};
+pub use pixel::{psnr, ssim};
+pub use vbench::{evaluate as vbench_evaluate, vbench_percent, VbenchScores};
+pub use vqa::{vqa_aesthetic, vqa_overall, vqa_technical};
+
+/// Per-video quality vs. a baseline video (the paper's Table 1 columns).
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    pub psnr: f64,
+    pub ssim: f64,
+    pub lpips: f64,
+    pub vbench: f64,
+}
+
+impl QualityReport {
+    /// Compare a policy's decoded video against the no-reuse baseline.
+    pub fn compare(net: &FeatureNet, baseline: &Frames, candidate: &Frames) -> Self {
+        Self {
+            psnr: psnr(baseline, candidate),
+            ssim: ssim(baseline, candidate),
+            lpips: lpips(net, baseline, candidate),
+            vbench: vbench_evaluate(net, candidate).overall(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn quality_report_identity() {
+        let mut rng = Rng::new(1);
+        let f = Frames { f: 2, h: 16, w: 16, data: rng.uniform_vec(2 * 3 * 16 * 16, 0.0, 1.0) };
+        let net = FeatureNet::new();
+        let q = QualityReport::compare(&net, &f, &f);
+        assert_eq!(q.psnr, 100.0);
+        assert!((q.ssim - 1.0).abs() < 1e-9);
+        assert!(q.lpips < 1e-12);
+        assert!((0.0..=100.0).contains(&q.vbench));
+    }
+
+    #[test]
+    fn quality_report_orders_perturbations() {
+        let mut rng = Rng::new(2);
+        let base =
+            Frames { f: 2, h: 16, w: 16, data: rng.uniform_vec(2 * 3 * 16 * 16, 0.0, 1.0) };
+        let perturb = |scale: f32, seed: u64| {
+            let mut r = Rng::new(seed);
+            let mut f = base.clone();
+            for v in &mut f.data {
+                *v = (*v + scale * r.next_normal()).clamp(0.0, 1.0);
+            }
+            f
+        };
+        let net = FeatureNet::new();
+        let close = QualityReport::compare(&net, &base, &perturb(0.01, 3));
+        let far = QualityReport::compare(&net, &base, &perturb(0.3, 4));
+        assert!(close.psnr > far.psnr);
+        assert!(close.ssim > far.ssim);
+        assert!(close.lpips < far.lpips);
+    }
+}

@@ -1,0 +1,224 @@
+//! Perceptual metric proxies: LPIPS and FVD (documented substitutions for
+//! the pretrained-network metrics; see features.rs and DESIGN.md §1).
+
+use super::decoder::Frames;
+use super::features::FeatureNet;
+
+/// LPIPS-proxy: channel-normalised multi-scale feature distance, averaged
+/// over frames. Lower = more perceptually similar (same orientation as the
+/// paper's LPIPS column).
+pub fn lpips(net: &FeatureNet, a: &Frames, b: &Frames) -> f64 {
+    assert_eq!(a.data.len(), b.data.len());
+    let mut acc = 0.0;
+    for f in 0..a.f {
+        let pa = net.pyramid(a.frame(f), a.h, a.w);
+        let pb = net.pyramid(b.frame(f), b.h, b.w);
+        let mut frame_d = 0.0;
+        for ((ca, ha, wa, da), (_, _, _, db)) in pa.scales.iter().zip(&pb.scales) {
+            // unit-normalise each spatial position's channel vector, then
+            // mean squared distance over positions (the LPIPS recipe)
+            let hw = ha * wa;
+            let mut scale_d = 0.0;
+            for pos in 0..hw {
+                let (mut na, mut nb) = (1e-10f64, 1e-10f64);
+                for c in 0..*ca {
+                    na += (da[c * hw + pos] as f64).powi(2);
+                    nb += (db[c * hw + pos] as f64).powi(2);
+                }
+                let (na, nb) = (na.sqrt(), nb.sqrt());
+                let mut d = 0.0;
+                for c in 0..*ca {
+                    let va = da[c * hw + pos] as f64 / na;
+                    let vb = db[c * hw + pos] as f64 / nb;
+                    d += (va - vb).powi(2);
+                }
+                scale_d += d;
+            }
+            frame_d += scale_d / hw as f64;
+        }
+        acc += frame_d / pa.scales.len() as f64;
+    }
+    acc / a.f as f64
+}
+
+/// Gaussian moments of a set of feature vectors (diagonal covariance).
+pub struct GaussianStats {
+    pub mean: Vec<f64>,
+    pub var: Vec<f64>,
+    pub n: usize,
+}
+
+/// Fit diagonal-Gaussian moments over a collection of descriptors.
+pub fn fit_gaussian(descriptors: &[Vec<f32>]) -> GaussianStats {
+    assert!(!descriptors.is_empty());
+    let d = descriptors[0].len();
+    let n = descriptors.len();
+    let mut mean = vec![0.0f64; d];
+    for v in descriptors {
+        for i in 0..d {
+            mean[i] += v[i] as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let mut var = vec![0.0f64; d];
+    for v in descriptors {
+        for i in 0..d {
+            var[i] += (v[i] as f64 - mean[i]).powi(2);
+        }
+    }
+    for v in &mut var {
+        *v /= n.max(1) as f64;
+    }
+    GaussianStats { mean, var, n }
+}
+
+/// Fréchet distance between two diagonal Gaussians:
+/// `|μ1-μ2|² + Σ_i (σ1ᵢ + σ2ᵢ - 2·√(σ1ᵢ·σ2ᵢ))`.
+///
+/// The paper's FVD uses I3D features with full covariance; the diagonal
+/// form is the standard cheap estimator and preserves ordering for the
+/// relative comparisons the tables make.
+pub fn frechet_distance(a: &GaussianStats, b: &GaussianStats) -> f64 {
+    assert_eq!(a.mean.len(), b.mean.len());
+    let mut d2 = 0.0;
+    for i in 0..a.mean.len() {
+        d2 += (a.mean[i] - b.mean[i]).powi(2);
+        d2 += a.var[i] + b.var[i] - 2.0 * (a.var[i] * b.var[i]).sqrt();
+    }
+    d2.max(0.0)
+}
+
+/// Spatio-temporal video descriptor for FVD-proxy: per-frame descriptors
+/// pooled with mean + mean-absolute-temporal-difference (captures both
+/// appearance and motion, like I3D features do).
+pub fn video_descriptor(net: &FeatureNet, fr: &Frames) -> Vec<f32> {
+    let per_frame = net.video_descriptors(fr);
+    let d = per_frame[0].len();
+    let f = per_frame.len();
+    let mut mean = vec![0.0f32; d];
+    for v in &per_frame {
+        for i in 0..d {
+            mean[i] += v[i] / f as f32;
+        }
+    }
+    let mut motion = vec![0.0f32; d];
+    if f > 1 {
+        for t in 1..f {
+            for i in 0..d {
+                motion[i] += (per_frame[t][i] - per_frame[t - 1][i]).abs() / (f - 1) as f32;
+            }
+        }
+    }
+    mean.extend(motion);
+    mean // 80 dims
+}
+
+/// FVD-proxy between two *sets* of videos (e.g. baseline vs reuse-policy
+/// outputs over a prompt set). Lower is better.
+pub fn fvd(net: &FeatureNet, set_a: &[Frames], set_b: &[Frames]) -> f64 {
+    let da: Vec<Vec<f32>> = set_a.iter().map(|v| video_descriptor(net, v)).collect();
+    let db: Vec<Vec<f32>> = set_b.iter().map(|v| video_descriptor(net, v)).collect();
+    // scale into the paper's familiar magnitude range (pure display scale,
+    // applied identically to every method)
+    1e5 * frechet_distance(&fit_gaussian(&da), &fit_gaussian(&db))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn frames(seed: u64) -> Frames {
+        let mut rng = Rng::new(seed);
+        Frames { f: 4, h: 16, w: 16, data: rng.uniform_vec(4 * 3 * 16 * 16, 0.0, 1.0) }
+    }
+
+    #[test]
+    fn lpips_identity_zero_and_orders() {
+        let net = FeatureNet::new();
+        let a = frames(1);
+        assert!(lpips(&net, &a, &a) < 1e-12);
+        let mut rng = Rng::new(2);
+        let mut small = a.clone();
+        let mut big = a.clone();
+        for v in &mut small.data {
+            *v = (*v + 0.02 * rng.next_normal()).clamp(0.0, 1.0);
+        }
+        for v in &mut big.data {
+            *v = (*v + 0.3 * rng.next_normal()).clamp(0.0, 1.0);
+        }
+        let (ls, lb) = (lpips(&net, &a, &small), lpips(&net, &a, &big));
+        assert!(ls < lb, "{ls} vs {lb}");
+    }
+
+    #[test]
+    fn frechet_identical_sets_is_zero() {
+        let net = FeatureNet::new();
+        let set: Vec<Frames> = (0..4).map(frames).collect();
+        let d = fvd(&net, &set, &set);
+        assert!(d.abs() < 1e-9, "fvd={d}");
+    }
+
+    #[test]
+    fn frechet_separates_distributions() {
+        let net = FeatureNet::new();
+        let set_a: Vec<Frames> = (0..4).map(frames).collect();
+        // set_b: same videos, heavily darkened → different distribution
+        let set_b: Vec<Frames> = set_a
+            .iter()
+            .map(|f| {
+                let mut g = f.clone();
+                for v in &mut g.data {
+                    *v *= 0.3;
+                }
+                g
+            })
+            .collect();
+        // mildly perturbed set
+        let mut rng = Rng::new(77);
+        let set_c: Vec<Frames> = set_a
+            .iter()
+            .map(|f| {
+                let mut g = f.clone();
+                for v in &mut g.data {
+                    *v = (*v + 0.01 * rng.next_normal()).clamp(0.0, 1.0);
+                }
+                g
+            })
+            .collect();
+        let d_far = fvd(&net, &set_a, &set_b);
+        let d_near = fvd(&net, &set_a, &set_c);
+        assert!(d_near < d_far, "{d_near} vs {d_far}");
+    }
+
+    #[test]
+    fn gaussian_fit_moments() {
+        let descs = vec![vec![1.0f32, 0.0], vec![3.0, 0.0]];
+        let g = fit_gaussian(&descs);
+        assert_eq!(g.mean, vec![2.0, 0.0]);
+        assert_eq!(g.var, vec![1.0, 0.0]);
+        assert_eq!(g.n, 2);
+    }
+
+    #[test]
+    fn video_descriptor_captures_motion() {
+        let net = FeatureNet::new();
+        // static video: every frame identical → motion half is zero
+        let one = frames(5);
+        let mut static_v = one.clone();
+        let per = one.pixels_per_frame();
+        let first: Vec<f32> = one.data[..per].to_vec();
+        for f in 0..static_v.f {
+            static_v.data[f * per..(f + 1) * per].copy_from_slice(&first);
+        }
+        let d = video_descriptor(&net, &static_v);
+        let (appearance, motion) = d.split_at(d.len() / 2);
+        assert!(motion.iter().all(|&v| v.abs() < 1e-9));
+        assert!(appearance.iter().any(|&v| v != 0.0));
+        // dynamic video has non-zero motion part
+        let dm = video_descriptor(&net, &one);
+        assert!(dm[d.len() / 2..].iter().any(|&v| v > 0.0));
+    }
+}

@@ -1,0 +1,169 @@
+//! Pixel-space quality metrics: PSNR and SSIM (exact standard formulas,
+//! identical to the paper's usage: computed per frame against the no-reuse
+//! baseline video, averaged over frames — Appendix A.5).
+
+use super::decoder::Frames;
+
+/// Peak signal-to-noise ratio in dB over [0,1] frames, averaged per frame.
+pub fn psnr(a: &Frames, b: &Frames) -> f64 {
+    assert_eq!(a.data.len(), b.data.len(), "frame geometry mismatch");
+    let per = a.pixels_per_frame();
+    let mut acc = 0.0;
+    for f in 0..a.f {
+        let (fa, fb) = (a.frame(f), b.frame(f));
+        let mse: f64 = fa
+            .iter()
+            .zip(fb)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            / per as f64;
+        acc += if mse <= 1e-12 { 100.0 } else { -10.0 * (mse).log10() };
+    }
+    acc / a.f as f64
+}
+
+/// 2D gaussian window (side × side, given sigma), normalised to sum 1.
+fn gaussian_window(side: usize, sigma: f64) -> Vec<f64> {
+    let c = (side as f64 - 1.0) / 2.0;
+    let mut w = Vec::with_capacity(side * side);
+    for y in 0..side {
+        for x in 0..side {
+            let dy = y as f64 - c;
+            let dx = x as f64 - c;
+            w.push((-(dx * dx + dy * dy) / (2.0 * sigma * sigma)).exp());
+        }
+    }
+    let s: f64 = w.iter().sum();
+    w.iter().map(|v| v / s).collect()
+}
+
+/// Structural similarity of one channel plane (valid-window convolution).
+fn ssim_plane(a: &[f32], b: &[f32], h: usize, w: usize) -> f64 {
+    const SIDE: usize = 7;
+    const SIGMA: f64 = 1.5;
+    const C1: f64 = 0.01 * 0.01; // (k1·L)², L = 1
+    const C2: f64 = 0.03 * 0.03;
+    if h < SIDE || w < SIDE {
+        return 1.0;
+    }
+    let win = gaussian_window(SIDE, SIGMA);
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    for y0 in 0..=(h - SIDE) {
+        for x0 in 0..=(w - SIDE) {
+            let (mut ma, mut mb) = (0.0f64, 0.0f64);
+            for wy in 0..SIDE {
+                for wx in 0..SIDE {
+                    let k = win[wy * SIDE + wx];
+                    ma += k * a[(y0 + wy) * w + (x0 + wx)] as f64;
+                    mb += k * b[(y0 + wy) * w + (x0 + wx)] as f64;
+                }
+            }
+            let (mut va, mut vb, mut cov) = (0.0f64, 0.0f64, 0.0f64);
+            for wy in 0..SIDE {
+                for wx in 0..SIDE {
+                    let k = win[wy * SIDE + wx];
+                    let da = a[(y0 + wy) * w + (x0 + wx)] as f64 - ma;
+                    let db = b[(y0 + wy) * w + (x0 + wx)] as f64 - mb;
+                    va += k * da * da;
+                    vb += k * db * db;
+                    cov += k * da * db;
+                }
+            }
+            let s = ((2.0 * ma * mb + C1) * (2.0 * cov + C2))
+                / ((ma * ma + mb * mb + C1) * (va + vb + C2));
+            acc += s;
+            count += 1;
+        }
+    }
+    acc / count as f64
+}
+
+/// Mean SSIM over frames and RGB channels.
+pub fn ssim(a: &Frames, b: &Frames) -> f64 {
+    assert_eq!(a.data.len(), b.data.len(), "frame geometry mismatch");
+    let mut acc = 0.0;
+    for f in 0..a.f {
+        for c in 0..3 {
+            acc += ssim_plane(a.channel(f, c), b.channel(f, c), a.h, a.w);
+        }
+    }
+    acc / (a.f * 3) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn frames(seed: u64, f: usize, h: usize, w: usize) -> Frames {
+        let mut rng = Rng::new(seed);
+        Frames { f, h, w, data: rng.uniform_vec(f * 3 * h * w, 0.0, 1.0) }
+    }
+
+    #[test]
+    fn psnr_identity_is_max() {
+        let a = frames(1, 2, 16, 16);
+        assert_eq!(psnr(&a, &a), 100.0);
+    }
+
+    #[test]
+    fn psnr_known_uniform_noise() {
+        let a = frames(1, 1, 16, 16);
+        let mut b = a.clone();
+        for v in &mut b.data {
+            *v = (*v + 0.1).min(1.5); // constant offset 0.1 (no clamp below 1.5)
+        }
+        // mse = 0.01 → psnr = 20 dB
+        let p = psnr(&a, &b);
+        assert!((p - 20.0).abs() < 0.2, "psnr={p}");
+    }
+
+    #[test]
+    fn psnr_decreases_with_noise() {
+        let a = frames(2, 2, 16, 16);
+        let mut rng = Rng::new(9);
+        let mut small = a.clone();
+        let mut big = a.clone();
+        for v in &mut small.data {
+            *v += 0.01 * rng.next_normal();
+        }
+        for v in &mut big.data {
+            *v += 0.2 * rng.next_normal();
+        }
+        assert!(psnr(&a, &small) > psnr(&a, &big));
+    }
+
+    #[test]
+    fn ssim_identity_is_one() {
+        let a = frames(3, 1, 12, 12);
+        let s = ssim(&a, &a);
+        assert!((s - 1.0).abs() < 1e-9, "ssim={s}");
+    }
+
+    #[test]
+    fn ssim_in_range_and_orders_degradation() {
+        let a = frames(4, 1, 16, 16);
+        let mut rng = Rng::new(10);
+        let mut small = a.clone();
+        let mut big = a.clone();
+        for v in &mut small.data {
+            *v = (*v + 0.02 * rng.next_normal()).clamp(0.0, 1.0);
+        }
+        for v in &mut big.data {
+            *v = (*v + 0.3 * rng.next_normal()).clamp(0.0, 1.0);
+        }
+        let (ss, sb) = (ssim(&a, &small), ssim(&a, &big));
+        assert!(ss > sb, "{ss} vs {sb}");
+        assert!((-1.0..=1.0).contains(&sb));
+    }
+
+    #[test]
+    fn gaussian_window_normalised() {
+        let w = gaussian_window(7, 1.5);
+        let s: f64 = w.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        // symmetric
+        assert!((w[0] - w[48]).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,253 @@
+//! VBench-proxy: multi-dimensional video-generation quality score
+//! (paper §4.1/§4.2; VBench has 16 dimensions over 11 prompt categories).
+//!
+//! Each dimension below implements the *definition* of a VBench dimension
+//! with closed-form statistics over decoded frames instead of pretrained
+//! feature extractors (documented substitution, DESIGN.md §1). Scores are
+//! in [0, 1]; the overall score is the VBench-style weighted mean reported
+//! as a percentage — the paper's "VBench(%)" column.
+
+use super::decoder::Frames;
+use super::features::FeatureNet;
+use super::vqa;
+use crate::util::stats::cosine_f32;
+
+/// Individual dimension scores for one video.
+#[derive(Debug, Clone)]
+pub struct VbenchScores {
+    pub subject_consistency: f64,
+    pub background_consistency: f64,
+    pub temporal_flickering: f64,
+    pub motion_smoothness: f64,
+    pub dynamic_degree: f64,
+    pub imaging_quality: f64,
+    pub aesthetic_quality: f64,
+}
+
+impl VbenchScores {
+    /// VBench-style weighted aggregate (%), weights follow VBench's
+    /// emphasis on consistency and smoothness.
+    pub fn overall(&self) -> f64 {
+        let weighted = 0.20 * self.subject_consistency
+            + 0.15 * self.background_consistency
+            + 0.15 * self.temporal_flickering
+            + 0.20 * self.motion_smoothness
+            + 0.10 * self.dynamic_degree
+            + 0.10 * self.imaging_quality
+            + 0.10 * self.aesthetic_quality;
+        100.0 * weighted
+    }
+}
+
+/// Evaluate all dimensions for one video.
+pub fn evaluate(net: &FeatureNet, fr: &Frames) -> VbenchScores {
+    let descs = net.video_descriptors(fr);
+
+    // subject consistency: cosine similarity of every frame to the first
+    let subject_consistency = if descs.len() < 2 {
+        1.0
+    } else {
+        (1..descs.len())
+            .map(|t| 0.5 * (cosine_f32(&descs[0], &descs[t]) + 1.0))
+            .sum::<f64>()
+            / (descs.len() - 1) as f64
+    };
+
+    // background consistency: same statistic on 4x-downsampled frames
+    let background_consistency = {
+        let coarse: Vec<Vec<f32>> = (0..fr.f).map(|f| downsample4(fr, f)).collect();
+        if coarse.len() < 2 {
+            1.0
+        } else {
+            (1..coarse.len())
+                .map(|t| 0.5 * (cosine_f32(&coarse[0], &coarse[t]) + 1.0))
+                .sum::<f64>()
+                / (coarse.len() - 1) as f64
+        }
+    };
+
+    // temporal flickering: 1 - normalised mean |frame_t - frame_{t-1}|
+    let mean_abs_diff = if fr.f < 2 {
+        0.0
+    } else {
+        (1..fr.f)
+            .map(|t| {
+                fr.frame(t)
+                    .iter()
+                    .zip(fr.frame(t - 1))
+                    .map(|(a, b)| (a - b).abs() as f64)
+                    .sum::<f64>()
+                    / fr.pixels_per_frame() as f64
+            })
+            .sum::<f64>()
+            / (fr.f - 1) as f64
+    };
+    let temporal_flickering = (1.0 - 4.0 * mean_abs_diff).clamp(0.0, 1.0);
+
+    // motion smoothness: second-order temporal difference energy relative
+    // to first-order (constant-velocity motion scores 1)
+    let motion_smoothness = if fr.f < 3 {
+        1.0
+    } else {
+        let per = fr.pixels_per_frame();
+        let mut first = 0.0f64;
+        let mut second = 0.0f64;
+        for t in 1..fr.f {
+            let (a, b) = (fr.frame(t - 1), fr.frame(t));
+            for i in 0..per {
+                first += ((b[i] - a[i]) as f64).powi(2);
+            }
+        }
+        for t in 2..fr.f {
+            let (a, b, c) = (fr.frame(t - 2), fr.frame(t - 1), fr.frame(t));
+            for i in 0..per {
+                second += ((c[i] - 2.0 * b[i] + a[i]) as f64).powi(2);
+            }
+        }
+        if first < 1e-12 {
+            1.0
+        } else {
+            (1.0 - (second / (4.0 * first)).sqrt()).clamp(0.0, 1.0)
+        }
+    };
+
+    // dynamic degree: enough motion to not be a still image (saturating)
+    let dynamic_degree = (mean_abs_diff * 20.0).min(1.0);
+
+    // imaging quality / aesthetics from the VQA proxies
+    let imaging_quality = vqa::vqa_technical(fr) / 100.0;
+    let aesthetic_quality = vqa::vqa_aesthetic(fr) / 100.0;
+
+    VbenchScores {
+        subject_consistency,
+        background_consistency,
+        temporal_flickering,
+        motion_smoothness,
+        dynamic_degree,
+        imaging_quality,
+        aesthetic_quality,
+    }
+}
+
+fn downsample4(fr: &Frames, f: usize) -> Vec<f32> {
+    let (h, w) = (fr.h / 4, fr.w / 4);
+    let mut out = vec![0.0f32; 3 * h * w];
+    for c in 0..3 {
+        let p = fr.channel(f, c);
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = 0.0;
+                for dy in 0..4 {
+                    for dx in 0..4 {
+                        acc += p[(4 * y + dy) * fr.w + 4 * x + dx];
+                    }
+                }
+                out[c * h * w + y * w + x] = acc / 16.0;
+            }
+        }
+    }
+    out
+}
+
+/// Mean overall VBench score (%) over a set of videos.
+pub fn vbench_percent(net: &FeatureNet, videos: &[Frames]) -> f64 {
+    if videos.is_empty() {
+        return 0.0;
+    }
+    videos.iter().map(|v| evaluate(net, v).overall()).sum::<f64>() / videos.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn frames(seed: u64) -> Frames {
+        let mut rng = Rng::new(seed);
+        Frames { f: 6, h: 16, w: 16, data: rng.uniform_vec(6 * 3 * 16 * 16, 0.0, 1.0) }
+    }
+
+    fn static_video(seed: u64) -> Frames {
+        let one = frames(seed);
+        let per = one.pixels_per_frame();
+        let mut st = one.clone();
+        let first: Vec<f32> = st.data[..per].to_vec();
+        for f in 0..st.f {
+            st.data[f * per..(f + 1) * per].copy_from_slice(&first);
+        }
+        st
+    }
+
+    /// Smoothly drifting video: constant-velocity pixel ramp.
+    fn smooth_video(seed: u64) -> Frames {
+        let mut v = static_video(seed);
+        let per = v.pixels_per_frame();
+        for f in 0..v.f {
+            for p in &mut v.data[f * per..(f + 1) * per] {
+                *p = (*p + 0.02 * f as f32).min(1.0);
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn scores_in_unit_range() {
+        let net = FeatureNet::new();
+        let s = evaluate(&net, &frames(1));
+        for v in [
+            s.subject_consistency,
+            s.background_consistency,
+            s.temporal_flickering,
+            s.motion_smoothness,
+            s.dynamic_degree,
+            s.imaging_quality,
+            s.aesthetic_quality,
+        ] {
+            assert!((0.0..=1.0).contains(&v), "{v}");
+        }
+        assert!((0.0..=100.0).contains(&s.overall()));
+    }
+
+    #[test]
+    fn static_video_perfect_consistency_zero_dynamics() {
+        let net = FeatureNet::new();
+        let s = evaluate(&net, &static_video(2));
+        assert!(s.subject_consistency > 0.999);
+        assert!(s.temporal_flickering > 0.999);
+        assert!(s.dynamic_degree < 1e-6);
+    }
+
+    #[test]
+    fn smooth_motion_beats_flicker() {
+        let net = FeatureNet::new();
+        let smooth = evaluate(&net, &smooth_video(3));
+        let mut fl = static_video(3);
+        let per = fl.pixels_per_frame();
+        for f in (1..fl.f).step_by(2) {
+            for v in &mut fl.data[f * per..(f + 1) * per] {
+                *v = (*v + 0.3).min(1.0);
+            }
+        }
+        let flicker = evaluate(&net, &fl);
+        assert!(smooth.motion_smoothness > flicker.motion_smoothness);
+        assert!(smooth.temporal_flickering > flicker.temporal_flickering);
+    }
+
+    #[test]
+    fn frozen_video_scores_lower_dynamic_degree_than_moving() {
+        let net = FeatureNet::new();
+        let frozen = evaluate(&net, &static_video(4));
+        let moving = evaluate(&net, &frames(4));
+        assert!(frozen.dynamic_degree < moving.dynamic_degree);
+    }
+
+    #[test]
+    fn set_aggregate_is_mean() {
+        let net = FeatureNet::new();
+        let vs = vec![static_video(5), frames(6)];
+        let agg = vbench_percent(&net, &vs);
+        let manual = (evaluate(&net, &vs[0]).overall() + evaluate(&net, &vs[1]).overall()) / 2.0;
+        assert!((agg - manual).abs() < 1e-9);
+        assert_eq!(vbench_percent(&net, &[]), 0.0);
+    }
+}

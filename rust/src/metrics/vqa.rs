@@ -1,0 +1,201 @@
+//! DOVER-style VQA proxies: aesthetic and technical quality scores
+//! (paper Appendix A.7, Table 8). DOVER is a pretrained video-quality
+//! network; the substitution scores the same perceptual properties with
+//! closed-form image statistics (documented, DESIGN.md §1):
+//!
+//! * **aesthetic** — colorfulness (Hasler–Süsstrunk-style opponent-channel
+//!   statistics), contrast and luminance balance;
+//! * **technical** — sharpness (Laplacian energy), exposure clipping and
+//!   temporal stability.
+//!
+//! Both map to 0..100; higher is better.
+
+use super::decoder::Frames;
+
+fn mean_std(xs: impl Iterator<Item = f64> + Clone) -> (f64, f64) {
+    let n = xs.clone().count().max(1) as f64;
+    let mean = xs.clone().sum::<f64>() / n;
+    let var = xs.map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Colorfulness of one frame (opponent-channel statistic).
+fn colorfulness(fr: &Frames, f: usize) -> f64 {
+    let (r, g, b) = (fr.channel(f, 0), fr.channel(f, 1), fr.channel(f, 2));
+    let rg = r.iter().zip(g).map(|(x, y)| (x - y) as f64);
+    let yb = r
+        .iter()
+        .zip(g)
+        .zip(b)
+        .map(|((x, y), z)| (0.5 * (x + y) - z) as f64);
+    let (m_rg, s_rg) = mean_std(rg);
+    let (m_yb, s_yb) = mean_std(yb);
+    ((s_rg * s_rg + s_yb * s_yb).sqrt() + 0.3 * (m_rg * m_rg + m_yb * m_yb).sqrt()) * 100.0
+}
+
+/// Laplacian energy (sharpness) of one channel plane.
+fn laplacian_energy(p: &[f32], h: usize, w: usize) -> f64 {
+    let mut acc = 0.0;
+    for y in 1..h - 1 {
+        for x in 1..w - 1 {
+            let c = p[y * w + x] as f64;
+            let lap = 4.0 * c
+                - p[(y - 1) * w + x] as f64
+                - p[(y + 1) * w + x] as f64
+                - p[y * w + x - 1] as f64
+                - p[y * w + x + 1] as f64;
+            acc += lap * lap;
+        }
+    }
+    acc / ((h - 2) * (w - 2)) as f64
+}
+
+/// Aesthetic VQA proxy in 0..100.
+pub fn vqa_aesthetic(fr: &Frames) -> f64 {
+    let mut acc = 0.0;
+    for f in 0..fr.f {
+        let color = colorfulness(fr, f).min(60.0);
+        // contrast: luminance std (balanced exposure scores higher)
+        let lum: Vec<f64> = {
+            let (r, g, b) = (fr.channel(f, 0), fr.channel(f, 1), fr.channel(f, 2));
+            r.iter()
+                .zip(g)
+                .zip(b)
+                .map(|((x, y), z)| 0.299 * *x as f64 + 0.587 * *y as f64 + 0.114 * *z as f64)
+                .collect()
+        };
+        let (m, s) = mean_std(lum.iter().copied());
+        let contrast = (s * 4.0).min(1.0) * 25.0;
+        let balance = (1.0 - (m - 0.5).abs() * 2.0).max(0.0) * 15.0;
+        acc += color + contrast + balance;
+    }
+    (acc / fr.f as f64).min(100.0)
+}
+
+/// Technical VQA proxy in 0..100.
+pub fn vqa_technical(fr: &Frames) -> f64 {
+    let mut sharp = 0.0;
+    let mut clip_penalty = 0.0;
+    for f in 0..fr.f {
+        for c in 0..3 {
+            let p = fr.channel(f, c);
+            sharp += laplacian_energy(p, fr.h, fr.w);
+            let clipped = p.iter().filter(|&&v| v <= 0.002 || v >= 0.998).count();
+            clip_penalty += clipped as f64 / p.len() as f64;
+        }
+    }
+    let n = (fr.f * 3) as f64;
+    sharp /= n;
+    clip_penalty /= n;
+    // temporal stability: penalise frame-to-frame jumps
+    let mut temporal = 0.0;
+    if fr.f > 1 {
+        for f in 1..fr.f {
+            let (a, b) = (fr.frame(f - 1), fr.frame(f));
+            temporal += a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs() as f64)
+                .sum::<f64>()
+                / a.len() as f64;
+        }
+        temporal /= (fr.f - 1) as f64;
+    }
+    // monotone saturating map (never hard-clips, so blur always lowers it)
+    let sharp_score = 60.0 * sharp / (sharp + 0.02);
+    let stability = (1.0 - (temporal * 4.0).min(1.0)) * 30.0;
+    let exposure = (1.0 - clip_penalty * 4.0).max(0.0) * 10.0;
+    (sharp_score + stability + exposure).min(100.0)
+}
+
+/// Overall VQA (DOVER-style fusion: mean of the two branches).
+pub fn vqa_overall(fr: &Frames) -> f64 {
+    0.5 * (vqa_aesthetic(fr) + vqa_technical(fr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn frames(seed: u64) -> Frames {
+        let mut rng = Rng::new(seed);
+        Frames { f: 4, h: 16, w: 16, data: rng.uniform_vec(4 * 3 * 16 * 16, 0.0, 1.0) }
+    }
+
+    #[test]
+    fn scores_bounded() {
+        let f = frames(1);
+        for v in [vqa_aesthetic(&f), vqa_technical(&f), vqa_overall(&f)] {
+            assert!((0.0..=100.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn gray_video_less_aesthetic_than_colorful() {
+        let colorful = frames(2);
+        let mut gray = colorful.clone();
+        let hw = gray.h * gray.w;
+        for f in 0..gray.f {
+            for pos in 0..hw {
+                let base = f * 3 * hw;
+                let m = (gray.data[base + pos] + gray.data[base + hw + pos]
+                    + gray.data[base + 2 * hw + pos])
+                    / 3.0;
+                gray.data[base + pos] = m;
+                gray.data[base + hw + pos] = m;
+                gray.data[base + 2 * hw + pos] = m;
+            }
+        }
+        assert!(vqa_aesthetic(&gray) < vqa_aesthetic(&colorful));
+    }
+
+    #[test]
+    fn blurred_video_less_technical_than_sharp() {
+        let sharp = frames(3);
+        let mut blurred = sharp.clone();
+        // 3x3 box blur per channel
+        let (h, w) = (sharp.h, sharp.w);
+        for f in 0..sharp.f {
+            for c in 0..3 {
+                let src: Vec<f32> = sharp.channel(f, c).to_vec();
+                let hw = h * w;
+                let base = f * 3 * hw + c * hw;
+                for y in 1..h - 1 {
+                    for x in 1..w - 1 {
+                        let mut acc = 0.0;
+                        for dy in 0..3 {
+                            for dx in 0..3 {
+                                acc += src[(y + dy - 1) * w + (x + dx - 1)];
+                            }
+                        }
+                        blurred.data[base + y * w + x] = acc / 9.0;
+                    }
+                }
+            }
+        }
+        assert!(vqa_technical(&blurred) < vqa_technical(&sharp));
+    }
+
+    #[test]
+    fn flickering_video_less_technical_than_stable() {
+        let stable = {
+            let one = frames(4);
+            let per = one.pixels_per_frame();
+            let mut st = one.clone();
+            let first: Vec<f32> = st.data[..per].to_vec();
+            for f in 0..st.f {
+                st.data[f * per..(f + 1) * per].copy_from_slice(&first);
+            }
+            st
+        };
+        let mut flicker = stable.clone();
+        let per = flicker.pixels_per_frame();
+        for f in (1..flicker.f).step_by(2) {
+            for v in &mut flicker.data[f * per..(f + 1) * per] {
+                *v = 1.0 - *v;
+            }
+        }
+        assert!(vqa_technical(&flicker) < vqa_technical(&stable));
+    }
+}

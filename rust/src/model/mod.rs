@@ -1,0 +1,409 @@
+//! Loaded model: compiled piece executables + device-resident weights.
+//!
+//! A [`LoadedModel`] binds one (preset, bucket) pair: it compiles the
+//! exported HLO pieces once and uploads every weight array to the device
+//! once, then exposes typed dispatch methods the engine calls per step.
+//! Weight argument vectors are pre-assembled at load time in manifest
+//! order, so a block dispatch on the hot path is a single `execute_b` with
+//! borrowed device buffers — no maps, no copies, no Python.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{BucketInfo, Manifest, ModelInfo};
+use crate::runtime::{DeviceTensor, Executable, HostTensor, Runtime};
+use crate::util::npy;
+
+/// Spatial or temporal DiT block (the paper's two blocks per layer pair).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BlockKind {
+    Spatial,
+    Temporal,
+}
+
+impl BlockKind {
+    pub const ALL: [BlockKind; 2] = [BlockKind::Spatial, BlockKind::Temporal];
+
+    pub fn index(self) -> usize {
+        match self {
+            BlockKind::Spatial => 0,
+            BlockKind::Temporal => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BlockKind::Spatial => "spatial",
+            BlockKind::Temporal => "temporal",
+        }
+    }
+}
+
+/// Sublayer units inside a DiT block (used by fine-grained baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SubUnit {
+    Attn,
+    Cross,
+    Mlp,
+}
+
+impl SubUnit {
+    pub const ALL: [SubUnit; 3] = [SubUnit::Attn, SubUnit::Cross, SubUnit::Mlp];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SubUnit::Attn => "attn",
+            SubUnit::Cross => "cross",
+            SubUnit::Mlp => "mlp",
+        }
+    }
+}
+
+/// Compiled executables for one (preset, bucket).
+struct Pieces {
+    t_embed: Arc<Executable>,
+    text_proj: Arc<Executable>,
+    text_k: Arc<Executable>,
+    text_v: Arc<Executable>,
+    embed: Arc<Executable>,
+    block: [Arc<Executable>; 2], // [spatial, temporal]
+    sb_attn: [Arc<Executable>; 2],
+    sb_cross: Arc<Executable>,
+    sb_mlp: Arc<Executable>,
+    final_: Arc<Executable>,
+}
+
+/// Per-(layer, kind) pre-assembled weight argument vectors.
+struct BlockArgs {
+    full: Vec<Arc<DeviceTensor>>,   // 14, spatial_block order
+    attn: Vec<Arc<DeviceTensor>>,   // 6, sb_attn order
+    cross: Vec<Arc<DeviceTensor>>,  // 4, sb_cross order
+    mlp: Vec<Arc<DeviceTensor>>,    // 6, sb_mlp order
+    text_k: Vec<Arc<DeviceTensor>>, // 2
+    text_v: Vec<Arc<DeviceTensor>>, // 2
+}
+
+/// One ready-to-serve model variant.
+pub struct LoadedModel {
+    pub info: ModelInfo,
+    pub bucket: BucketInfo,
+    rt: Arc<Runtime>,
+    pieces: Pieces,
+    t_embed_w: Vec<Arc<DeviceTensor>>,
+    text_proj_w: Vec<Arc<DeviceTensor>>,
+    embed_w: Vec<Arc<DeviceTensor>>,
+    final_w: Vec<Arc<DeviceTensor>>,
+    blocks: Vec<[BlockArgs; 2]>, // [layer][kind]
+    add_exec: Arc<Executable>,
+    sub_exec: Arc<Executable>,
+}
+
+fn load_weight_args(
+    rt: &Runtime,
+    wdir: &Path,
+    piece_key: &str,
+    names: &[String],
+) -> Result<Vec<Arc<DeviceTensor>>> {
+    names
+        .iter()
+        .map(|n| {
+            let path = wdir.join(format!("{piece_key}.{n}.npy"));
+            let arr = npy::load(&path)?;
+            let dims = if arr.shape.is_empty() { vec![] } else { arr.shape.clone() };
+            Ok(Arc::new(rt.upload(&arr.data, &dims)?))
+        })
+        .collect()
+}
+
+impl LoadedModel {
+    /// Compile all pieces and upload all weights for (model, bucket).
+    pub fn load(
+        rt: Arc<Runtime>,
+        manifest: &Manifest,
+        model_name: &str,
+        bucket_name: &str,
+    ) -> Result<Self> {
+        let info = manifest.model(model_name)?.clone();
+        let bucket = info.bucket(bucket_name)?.clone();
+        let root = &manifest.root;
+        let mdir = root.join(&info.name);
+        let bdir = root.join(&bucket.dir);
+        let wdir = root.join(&info.weights_dir);
+
+        let pieces = Pieces {
+            t_embed: rt.load_hlo(&mdir.join("t_embed.hlo.txt"))?,
+            text_proj: rt.load_hlo(&mdir.join("text_proj.hlo.txt"))?,
+            text_k: rt.load_hlo(&mdir.join("text_k.hlo.txt"))?,
+            text_v: rt.load_hlo(&mdir.join("text_v.hlo.txt"))?,
+            embed: rt.load_hlo(&bdir.join("embed.hlo.txt"))?,
+            block: [
+                rt.load_hlo(&bdir.join("spatial_block.hlo.txt"))?,
+                rt.load_hlo(&bdir.join("temporal_block.hlo.txt"))?,
+            ],
+            sb_attn: [
+                rt.load_hlo(&bdir.join("sb_attn_spatial.hlo.txt"))?,
+                rt.load_hlo(&bdir.join("sb_attn_temporal.hlo.txt"))?,
+            ],
+            sb_cross: rt.load_hlo(&bdir.join("sb_cross.hlo.txt"))?,
+            sb_mlp: rt.load_hlo(&bdir.join("sb_mlp.hlo.txt"))?,
+            final_: rt.load_hlo(&bdir.join("final.hlo.txt"))?,
+        };
+
+        let pp = |piece: &str| -> Result<&Vec<String>> {
+            info.piece_params
+                .get(piece)
+                .ok_or_else(|| anyhow!("manifest missing piece_params.{piece}"))
+        };
+
+        let t_embed_w = load_weight_args(&rt, &wdir, "t_embed", pp("t_embed")?)?;
+        let text_proj_w = load_weight_args(&rt, &wdir, "text_proj", pp("text_proj")?)?;
+        let embed_w = load_weight_args(&rt, &wdir, "embed", pp("embed")?)?;
+        let final_w = load_weight_args(&rt, &wdir, "final", pp("final")?)?;
+
+        let mut blocks = Vec::with_capacity(info.layers);
+        for layer in 0..info.layers {
+            let mut pair = Vec::with_capacity(2);
+            for kind in BlockKind::ALL {
+                let key = format!("layer{layer:02}.{}", kind.name());
+                pair.push(BlockArgs {
+                    full: load_weight_args(&rt, &wdir, &key, pp("spatial_block")?)
+                        .with_context(|| format!("weights for {key}"))?,
+                    attn: load_weight_args(&rt, &wdir, &key, pp("sb_attn")?)?,
+                    cross: load_weight_args(&rt, &wdir, &key, pp("sb_cross")?)?,
+                    mlp: load_weight_args(&rt, &wdir, &key, pp("sb_mlp")?)?,
+                    text_k: load_weight_args(&rt, &wdir, &key, pp("text_k")?)?,
+                    text_v: load_weight_args(&rt, &wdir, &key, pp("text_v")?)?,
+                });
+            }
+            let pair: [BlockArgs; 2] = pair
+                .try_into()
+                .map_err(|_| anyhow!("block pair assembly"))?;
+            blocks.push(pair);
+        }
+
+        let dims = [bucket.frames, bucket.tokens, info.d_model];
+        let add_exec = rt.elementwise_binary("add", &dims)?;
+        let sub_exec = rt.elementwise_binary("sub", &dims)?;
+
+        Ok(Self {
+            info,
+            bucket,
+            rt,
+            pieces,
+            t_embed_w,
+            text_proj_w,
+            embed_w,
+            final_w,
+            blocks,
+            add_exec,
+            sub_exec,
+        })
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// Activation dims of one block state [F, P, D].
+    pub fn state_dims(&self) -> [usize; 3] {
+        [self.bucket.frames, self.bucket.tokens, self.info.d_model]
+    }
+
+    /// Latent dims [F, P, C].
+    pub fn latent_dims(&self) -> [usize; 3] {
+        [self.bucket.frames, self.bucket.tokens, self.info.latent_channels]
+    }
+
+    fn run_with_weights(
+        &self,
+        exe: &Executable,
+        inputs: &[&DeviceTensor],
+        weights: &[Arc<DeviceTensor>],
+    ) -> Result<DeviceTensor> {
+        let mut args: Vec<&DeviceTensor> = Vec::with_capacity(inputs.len() + weights.len());
+        args.extend_from_slice(inputs);
+        args.extend(weights.iter().map(|w| w.as_ref()));
+        exe.run(&args)
+    }
+
+    /// Timestep scalar → conditioning vector c [D].
+    pub fn t_embed(&self, t: f32) -> Result<DeviceTensor> {
+        let ts = self.rt.upload(&[t], &[])?;
+        self.run_with_weights(&self.pieces.t_embed, &[&ts], &self.t_embed_w)
+    }
+
+    /// Raw prompt embedding [S, d_text] → text tokens [S, D].
+    pub fn text_proj(&self, raw: &HostTensor) -> Result<DeviceTensor> {
+        let raw = self.rt.upload_tensor(raw)?;
+        self.run_with_weights(&self.pieces.text_proj, &[&raw], &self.text_proj_w)
+    }
+
+    /// Per-(layer, kind) cross-attention K (step-invariant, hoisted).
+    pub fn text_k(&self, layer: usize, kind: BlockKind, text: &DeviceTensor) -> Result<DeviceTensor> {
+        let ba = &self.blocks[layer][kind.index()];
+        self.run_with_weights(&self.pieces.text_k, &[text], &ba.text_k)
+    }
+
+    /// Per-(layer, kind) cross-attention V.
+    pub fn text_v(&self, layer: usize, kind: BlockKind, text: &DeviceTensor) -> Result<DeviceTensor> {
+        let ba = &self.blocks[layer][kind.index()];
+        self.run_with_weights(&self.pieces.text_v, &[text], &ba.text_v)
+    }
+
+    /// Latent [F, P, C] → token states [F, P, D].
+    pub fn embed(&self, x: &DeviceTensor) -> Result<DeviceTensor> {
+        self.run_with_weights(&self.pieces.embed, &[x], &self.embed_w)
+    }
+
+    /// Full DiT block dispatch (the Foresight coarse reuse unit).
+    pub fn block_full(
+        &self,
+        layer: usize,
+        kind: BlockKind,
+        h: &DeviceTensor,
+        c: &DeviceTensor,
+        tk: &DeviceTensor,
+        tv: &DeviceTensor,
+    ) -> Result<DeviceTensor> {
+        let ba = &self.blocks[layer][kind.index()];
+        self.run_with_weights(&self.pieces.block[kind.index()], &[h, c, tk, tv], &ba.full)
+    }
+
+    /// Attention sublayer only (PAB / T-GATE granularity).
+    pub fn block_attn(
+        &self,
+        layer: usize,
+        kind: BlockKind,
+        h: &DeviceTensor,
+        c: &DeviceTensor,
+    ) -> Result<DeviceTensor> {
+        let ba = &self.blocks[layer][kind.index()];
+        self.run_with_weights(&self.pieces.sb_attn[kind.index()], &[h, c], &ba.attn)
+    }
+
+    /// Cross-attention sublayer only.
+    pub fn block_cross(
+        &self,
+        layer: usize,
+        kind: BlockKind,
+        h: &DeviceTensor,
+        tk: &DeviceTensor,
+        tv: &DeviceTensor,
+    ) -> Result<DeviceTensor> {
+        let ba = &self.blocks[layer][kind.index()];
+        self.run_with_weights(&self.pieces.sb_cross, &[h, tk, tv], &ba.cross)
+    }
+
+    /// MLP sublayer only.
+    pub fn block_mlp(
+        &self,
+        layer: usize,
+        kind: BlockKind,
+        h: &DeviceTensor,
+        c: &DeviceTensor,
+    ) -> Result<DeviceTensor> {
+        let ba = &self.blocks[layer][kind.index()];
+        self.run_with_weights(&self.pieces.sb_mlp, &[h, c], &ba.mlp)
+    }
+
+    /// Final projection → predicted noise / velocity [F, P, C].
+    pub fn final_proj(&self, h: &DeviceTensor, c: &DeviceTensor) -> Result<DeviceTensor> {
+        self.run_with_weights(&self.pieces.final_, &[h, c], &self.final_w)
+    }
+
+    /// Device-side elementwise add over block states (residual reuse).
+    pub fn add(&self, a: &DeviceTensor, b: &DeviceTensor) -> Result<DeviceTensor> {
+        self.add_exec.run(&[a, b])
+    }
+
+    /// Device-side elementwise sub over block states (delta extraction).
+    pub fn sub(&self, a: &DeviceTensor, b: &DeviceTensor) -> Result<DeviceTensor> {
+        self.sub_exec.run(&[a, b])
+    }
+
+    /// Per-executable (calls, seconds) snapshot for the Fig. 9 breakdown.
+    pub fn op_stats(&self) -> Vec<(String, u64, f64)> {
+        let mut out = Vec::new();
+        let mut push = |e: &Executable| {
+            let (calls, secs) = e.stats.snapshot();
+            out.push((e.name().to_string(), calls, secs));
+        };
+        push(&self.pieces.t_embed);
+        push(&self.pieces.text_proj);
+        push(&self.pieces.text_k);
+        push(&self.pieces.text_v);
+        push(&self.pieces.embed);
+        push(&self.pieces.block[0]);
+        push(&self.pieces.block[1]);
+        push(&self.pieces.sb_attn[0]);
+        push(&self.pieces.sb_attn[1]);
+        push(&self.pieces.sb_cross);
+        push(&self.pieces.sb_mlp);
+        push(&self.pieces.final_);
+        push(&self.add_exec);
+        push(&self.sub_exec);
+        out
+    }
+
+    /// Reset op telemetry (benches call this between phases).
+    pub fn reset_op_stats(&self) {
+        self.pieces.t_embed.stats.reset();
+        self.pieces.text_proj.stats.reset();
+        self.pieces.text_k.stats.reset();
+        self.pieces.text_v.stats.reset();
+        self.pieces.embed.stats.reset();
+        for e in &self.pieces.block {
+            e.stats.reset();
+        }
+        for e in &self.pieces.sb_attn {
+            e.stats.reset();
+        }
+        self.pieces.sb_cross.stats.reset();
+        self.pieces.sb_mlp.stats.reset();
+        self.pieces.final_.stats.reset();
+        self.add_exec.stats.reset();
+        self.sub_exec.stats.reset();
+    }
+
+    /// Analytical FLOP count of one full DiT block dispatch (used by the
+    /// Fig. 10 roofline reproduction and the speedup model in DESIGN.md).
+    pub fn block_flops(&self, kind: BlockKind) -> f64 {
+        let f = self.bucket.frames as f64;
+        let p = self.bucket.tokens as f64;
+        let d = self.info.d_model as f64;
+        let s = self.info.text_len as f64;
+        let hdim = (self.info.mlp_ratio * self.info.d_model) as f64;
+        let tokens = f * p;
+        // self/temporal attention: qkv proj + scores + weighted sum + out proj
+        let (b_attn, s_attn) = match kind {
+            BlockKind::Spatial => (f, p),
+            BlockKind::Temporal => (p, f),
+        };
+        let attn = 2.0 * tokens * d * 3.0 * d          // qkv
+            + 2.0 * b_attn * s_attn * s_attn * d * 2.0 // scores + pv
+            + 2.0 * tokens * d * d;                    // out proj
+        // cross attention
+        let cross = 2.0 * tokens * d * d               // q proj
+            + 2.0 * tokens * s * d * 2.0               // scores + pv
+            + 2.0 * tokens * d * d;                    // out proj
+        // mlp
+        let mlp = 2.0 * tokens * d * hdim * 2.0;
+        // adaLN + LN glue (linear in elements)
+        let glue = 10.0 * tokens * d;
+        attn + cross + mlp + glue
+    }
+
+    /// Bytes moved per full block dispatch (HBM traffic model for Fig. 10).
+    pub fn block_bytes(&self, _kind: BlockKind) -> f64 {
+        let f = self.bucket.frames as f64;
+        let p = self.bucket.tokens as f64;
+        let d = self.info.d_model as f64;
+        let hdim = (self.info.mlp_ratio * self.info.d_model) as f64;
+        let state = f * p * d * 4.0;
+        let weights = (d * 6.0 * d + d * 3.0 * d + 2.0 * d * d + 2.0 * d * d
+            + d * hdim + hdim * d) * 4.0;
+        // activations in+out ~3 sublayer passes + weights once
+        3.0 * 2.0 * state + weights
+    }
+}

@@ -1,0 +1,130 @@
+//! Δ-DiT baseline (Chen et al. 2024; paper Appendix A.6 Table 5).
+//!
+//! Caches feature-map *deviations* (residual deltas) rather than full
+//! outputs, and applies reuse to different depth regions per generation
+//! stage: **back** blocks during the early outline stage (the first `b`
+//! steps) and **front** blocks during the late detail-refinement stage.
+//! Within the active region, deltas refresh every `k` steps and are reused
+//! in between.
+
+use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
+
+pub struct DeltaDit {
+    /// Cache interval k (Table 5: 2).
+    pub k: usize,
+    /// Gate step b separating outline and detail stages.
+    pub b: usize,
+    /// Number of layers in the reused region.
+    pub range: usize,
+    layers: usize,
+}
+
+impl DeltaDit {
+    pub fn new(k: usize, b: usize, range: usize) -> Self {
+        assert!(k >= 1 && range >= 1);
+        Self { k, b, range, layers: 0 }
+    }
+
+    fn in_region(&self, step: usize, layer: usize) -> bool {
+        if step < self.b {
+            // outline stage: back blocks
+            layer >= self.layers.saturating_sub(self.range)
+        } else {
+            // detail stage: front blocks
+            layer < self.range
+        }
+    }
+}
+
+impl ReusePolicy for DeltaDit {
+    fn name(&self) -> String {
+        format!("delta-dit(k={},b={},range={})", self.k, self.b, self.range)
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Coarse
+    }
+
+    fn cache_mode(&self) -> CacheMode {
+        CacheMode::Delta
+    }
+
+    fn begin_request(&mut self, layers: usize, _steps: usize) {
+        self.layers = layers;
+    }
+
+    fn action(&mut self, step: usize, site: Site) -> Action {
+        if !self.in_region(step, site.layer) {
+            return Action::Compute { update_cache: false, measure: false };
+        }
+        // Refresh the delta on the first region step and every k-th after;
+        // reset the phase at the stage boundary so the detail stage starts
+        // with a fresh delta for its (different) region.
+        let phase = if step < self.b { step } else { step - self.b };
+        if phase % self.k == 0 {
+            Action::Compute { update_cache: true, measure: false }
+        } else {
+            Action::ReuseResidual
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Unit;
+    use crate::model::BlockKind;
+
+    fn site(layer: usize) -> Site {
+        Site { layer, kind: BlockKind::Spatial, unit: Unit::Block, branch: 0 }
+    }
+
+    #[test]
+    fn outline_stage_reuses_back_blocks_only() {
+        let mut p = DeltaDit::new(2, 25, 2);
+        p.begin_request(8, 30);
+        // step 1 (odd → reuse-eligible), outline stage
+        assert!(!p.action(1, site(0)).is_reuse(), "front must compute in outline");
+        assert!(p.action(1, site(7)).is_reuse(), "back must reuse in outline");
+        assert!(p.action(1, site(6)).is_reuse());
+        assert!(!p.action(1, site(5)).is_reuse(), "outside range");
+    }
+
+    #[test]
+    fn detail_stage_flips_to_front_blocks() {
+        let mut p = DeltaDit::new(2, 25, 2);
+        p.begin_request(8, 30);
+        // step 26: detail stage, phase = 1 → reuse-eligible
+        assert!(p.action(26, site(0)).is_reuse());
+        assert!(p.action(26, site(1)).is_reuse());
+        assert!(!p.action(26, site(2)).is_reuse());
+        assert!(!p.action(26, site(7)).is_reuse(), "back computes in detail stage");
+    }
+
+    #[test]
+    fn refresh_every_k_steps() {
+        let mut p = DeltaDit::new(2, 25, 1);
+        p.begin_request(4, 30);
+        for step in 0..24 {
+            let a = p.action(step, site(3));
+            assert_eq!(a.is_reuse(), step % 2 == 1, "step {step}");
+            if !a.is_reuse() {
+                assert_eq!(a, Action::Compute { update_cache: true, measure: false });
+            } else {
+                assert_eq!(a, Action::ReuseResidual, "delta mode uses residual reuse");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_boundary_resets_refresh_phase() {
+        let mut p = DeltaDit::new(2, 25, 1);
+        p.begin_request(4, 30);
+        // first detail-stage step must refresh the (new) front-region delta
+        assert_eq!(
+            p.action(25, site(0)),
+            Action::Compute { update_cache: true, measure: false }
+        );
+        assert!(p.action(26, site(0)).is_reuse());
+    }
+}

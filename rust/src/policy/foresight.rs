@@ -1,0 +1,275 @@
+//! Foresight: the paper's adaptive layer-reuse policy (§3.4, Algorithm 1).
+//!
+//! Two phases per request:
+//!
+//! * **Warmup** (steps `0..W`): every block computes; per-site thresholds λ
+//!   accumulate as the geometrically-weighted sum of the MSEs between
+//!   consecutive-step features over the last three warmup steps (Eq. 5):
+//!   `λ = Σ_{t=W-2..W} 10^{-(W-t)} · MSE[x(t), x(t-1)]`.
+//! * **Reuse** (steps `W..T`): the step cycle has length R. On refresh
+//!   steps (`(step-W) % R == 0`) everything recomputes, δ updates to
+//!   `MSE[x(t), C]` (Eq. 6), the cache refreshes. On the other `N = R-1`
+//!   steps each site reuses iff `δ ≤ γ·λ` (Eq. 7); sites that compute
+//!   anyway also refresh δ and the cache (Alg. 1 lines 19-21).
+
+use std::collections::BTreeMap;
+
+use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
+use crate::model::BlockKind;
+
+/// Per-site adaptive state.
+#[derive(Debug, Clone, Copy, Default)]
+struct SiteState {
+    lambda: f64,
+    delta: f64,
+}
+
+/// The Foresight policy.
+pub struct Foresight {
+    /// Reuse window (display only; the cycle is driven by `r = N+1`).
+    pub n: usize,
+    /// Compute interval: cycle length in the reuse phase.
+    pub r: usize,
+    /// Threshold scaling γ ∈ (0, 2] (Eq. 7).
+    pub gamma: f64,
+    /// Warmup fraction of total steps (paper uses 15%).
+    pub warmup_frac: f64,
+    warmup_steps: usize,
+    steps: usize,
+    state: BTreeMap<(usize, BlockKind, usize), SiteState>,
+}
+
+impl Foresight {
+    pub fn new(n: usize, r: usize, gamma: f64, warmup_frac: f64) -> Self {
+        assert!(r >= 1, "compute interval must be >= 1");
+        assert!(gamma > 0.0, "gamma must be positive");
+        assert!((0.0..1.0).contains(&warmup_frac));
+        Self {
+            n,
+            r,
+            gamma,
+            warmup_frac,
+            warmup_steps: 0,
+            steps: 0,
+            state: BTreeMap::new(),
+        }
+    }
+
+    /// Paper default configuration N=1, R=2, γ=0.5, W=15%.
+    pub fn paper_default() -> Self {
+        Self::new(1, 2, 0.5, 0.15)
+    }
+
+    fn key(site: Site) -> (usize, BlockKind, usize) {
+        (site.layer, site.kind, site.branch)
+    }
+
+    pub fn warmup_steps(&self) -> usize {
+        self.warmup_steps
+    }
+
+    fn in_warmup(&self, step: usize) -> bool {
+        step < self.warmup_steps
+    }
+
+    fn is_refresh_step(&self, step: usize) -> bool {
+        (step - self.warmup_steps) % self.r == 0
+    }
+}
+
+impl ReusePolicy for Foresight {
+    fn name(&self) -> String {
+        format!(
+            "foresight(N{}R{},g={},W={:.0}%)",
+            self.n,
+            self.r,
+            self.gamma,
+            self.warmup_frac * 100.0
+        )
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Coarse
+    }
+
+    fn cache_mode(&self) -> CacheMode {
+        CacheMode::Output
+    }
+
+    fn needs_measurement(&self) -> bool {
+        true
+    }
+
+    fn begin_request(&mut self, _layers: usize, steps: usize) {
+        self.steps = steps;
+        // At least 3 warmup steps so Eq. 5 has its three MSE terms; at most
+        // steps-1 so there is a reuse phase at all.
+        self.warmup_steps = ((steps as f64 * self.warmup_frac).round() as usize)
+            .clamp(3, steps.saturating_sub(1).max(3));
+        self.state.clear();
+    }
+
+    fn action(&mut self, step: usize, site: Site) -> Action {
+        if self.in_warmup(step) || self.is_refresh_step(step) {
+            return Action::Compute { update_cache: true, measure: true };
+        }
+        let s = self.state.entry(Self::key(site)).or_default();
+        if s.delta <= self.gamma * s.lambda {
+            Action::Reuse
+        } else {
+            // Alg. 1 lines 19-21: computed sites refresh δ and the cache.
+            Action::Compute { update_cache: true, measure: true }
+        }
+    }
+
+    fn observe_mse(&mut self, step: usize, site: Site, mse: f64) {
+        let w = self.warmup_steps;
+        let s = self.state.entry(Self::key(site)).or_default();
+        if step < w {
+            // Warmup MSEs exist from step 1 (step 0 has no predecessor).
+            // Eq. 5: weight 10^-(W-1-step) over the last three steps.
+            if step + 3 >= w && step > 0 {
+                let exponent = (w - 1 - step) as i32;
+                s.lambda += mse * 10f64.powi(-exponent);
+            }
+            if step + 1 == w {
+                // Alg. 1 line 8: δ initialised to λ.
+                s.delta = s.lambda;
+            }
+        } else {
+            // Eq. 6: δ = MSE(current features, cache).
+            s.delta = mse;
+        }
+    }
+
+    fn thresholds(&self) -> Option<BTreeMap<(usize, BlockKind, usize), f64>> {
+        Some(
+            self.state
+                .iter()
+                .map(|(k, v)| (*k, v.lambda))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Unit;
+
+    fn site(layer: usize) -> Site {
+        Site { layer, kind: BlockKind::Spatial, unit: Unit::Block, branch: 0 }
+    }
+
+    #[test]
+    fn never_reuses_during_warmup() {
+        let mut p = Foresight::paper_default();
+        p.begin_request(4, 30);
+        let w = p.warmup_steps();
+        assert!(w >= 3);
+        for step in 0..w {
+            for l in 0..4 {
+                assert!(
+                    !p.action(step, site(l)).is_reuse(),
+                    "reused at warmup step {step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_steps_always_compute() {
+        let mut p = Foresight::new(1, 2, 0.5, 0.15);
+        p.begin_request(2, 30);
+        let w = p.warmup_steps();
+        // make reuse very attractive
+        for step in 1..w {
+            p.observe_mse(step, site(0), 0.0);
+        }
+        for step in w..30 {
+            let a = p.action(step, site(0));
+            if (step - w) % 2 == 0 {
+                assert!(!a.is_reuse(), "refresh step {step} must compute");
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_gate_controls_reuse() {
+        let mut p = Foresight::new(1, 2, 1.0, 0.15);
+        p.begin_request(2, 40);
+        let w = p.warmup_steps();
+        // warmup MSEs of 1.0 → λ = 1.11 (1 + 0.1 + 0.01 over last 3 steps)
+        for step in 1..w {
+            p.observe_mse(step, site(0), 1.0);
+            p.observe_mse(step, site(1), 1.0);
+        }
+        let lam = p.thresholds().unwrap()[&(0, BlockKind::Spatial, 0)];
+        assert!((lam - 1.11).abs() < 1e-9, "λ={lam}");
+
+        // site 0: small δ → reuse; site 1: large δ → compute
+        let refresh = w; // first refresh step
+        p.observe_mse(refresh, site(0), 0.5);
+        p.observe_mse(refresh, site(1), 5.0);
+        let s0 = p.action(w + 1, site(0));
+        let s1 = p.action(w + 1, site(1));
+        assert_eq!(s0, Action::Reuse);
+        assert!(!s1.is_reuse());
+    }
+
+    #[test]
+    fn gamma_scales_strictness() {
+        // Same δ/λ: strict gamma computes, lax gamma reuses (Table 3).
+        for (gamma, expect_reuse) in [(0.25, false), (2.0, true)] {
+            let mut p = Foresight::new(1, 2, gamma, 0.15);
+            p.begin_request(1, 40);
+            let w = p.warmup_steps();
+            for step in 1..w {
+                p.observe_mse(step, site(0), 1.0);
+            }
+            p.observe_mse(w, site(0), 0.6); // δ=0.6 vs λ=1.11
+            let a = p.action(w + 1, site(0));
+            assert_eq!(a.is_reuse(), expect_reuse, "gamma={gamma}");
+        }
+    }
+
+    #[test]
+    fn delta_initialised_to_lambda_reuses_first_window() {
+        // Right after warmup δ=λ, so with γ=1 the first reuse-eligible step
+        // reuses (δ ≤ γλ).
+        let mut p = Foresight::new(1, 2, 1.0, 0.15);
+        p.begin_request(1, 40);
+        let w = p.warmup_steps();
+        for step in 1..w {
+            p.observe_mse(step, site(0), 2.0);
+        }
+        p.observe_mse(w, site(0), 2.0 * 1.11); // refresh-step δ update
+        // δ == γλ exactly → reuse (≤)
+        let a = p.action(w + 1, site(0));
+        assert_eq!(a, Action::Reuse);
+    }
+
+    #[test]
+    fn warmup_clamped_to_at_least_three() {
+        let mut p = Foresight::new(1, 2, 0.5, 0.05);
+        p.begin_request(1, 20); // 5% of 20 = 1 → clamp to 3
+        assert_eq!(p.warmup_steps(), 3);
+    }
+
+    #[test]
+    fn branches_tracked_independently() {
+        let mut p = Foresight::new(1, 2, 1.0, 0.15);
+        p.begin_request(1, 40);
+        let w = p.warmup_steps();
+        let cond = Site { branch: 0, ..site(0) };
+        let uncond = Site { branch: 1, ..site(0) };
+        for step in 1..w {
+            p.observe_mse(step, cond, 1.0);
+            p.observe_mse(step, uncond, 1.0);
+        }
+        p.observe_mse(w, cond, 0.1);  // cond: very reusable
+        p.observe_mse(w, uncond, 9.0); // uncond: not
+        assert!(p.action(w + 1, cond).is_reuse());
+        assert!(!p.action(w + 1, uncond).is_reuse());
+    }
+}

@@ -1,0 +1,265 @@
+//! Reuse policies: Foresight (the paper's contribution) and the four
+//! static baselines it compares against (§4.1, Appendix A.6).
+//!
+//! A policy answers, for every (step, layer, block-kind, unit, CFG-branch):
+//! *compute this unit, or reuse the cached activation?* The engine owns the
+//! cache and the executions; policies are pure decision state machines fed
+//! MSE observations — which keeps them unit-testable without a runtime and
+//! lets the property tests drive them through thousands of synthetic
+//! trajectories.
+
+pub mod delta_dit;
+pub mod foresight;
+pub mod none;
+pub mod pab;
+pub mod static_reuse;
+pub mod tgate;
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+use crate::cache::Unit;
+use crate::config::ModelInfo;
+use crate::model::BlockKind;
+
+pub use delta_dit::DeltaDit;
+pub use foresight::Foresight;
+pub use none::NoReuse;
+pub use pab::Pab;
+pub use static_reuse::StaticReuse;
+pub use tgate::TGate;
+
+/// Whether a policy decides over whole DiT blocks or sublayers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// Whole DiT blocks — 2 cache entries per layer pair (2LHWF).
+    Coarse,
+    /// Attention / cross / MLP sublayers — up to 6 per layer pair (6LHWF).
+    Fine,
+}
+
+/// What computed activations are cached as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheMode {
+    /// The block output itself (Foresight / Static: Eq. 3-4).
+    Output,
+    /// The residual delta `out - in` (Δ-DiT / PAB / T-GATE broadcast).
+    Delta,
+}
+
+/// Per-unit decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    Compute {
+        /// Refresh the cache with this unit's new activation.
+        update_cache: bool,
+        /// Report MSE(new, cached) back via `observe_mse` (needs a host
+        /// mirror in the cache — only Foresight pays this).
+        measure: bool,
+    },
+    /// Feed the cached output forward (coarse output-mode reuse, Eq. 4).
+    Reuse,
+    /// Add the cached residual delta to the current state (delta-mode).
+    ReuseResidual,
+}
+
+impl Action {
+    pub fn is_reuse(&self) -> bool {
+        matches!(self, Action::Reuse | Action::ReuseResidual)
+    }
+}
+
+/// Identifies one decision site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Site {
+    pub layer: usize,
+    pub kind: BlockKind,
+    pub unit: Unit,
+    pub branch: usize,
+}
+
+/// The policy interface the engine drives.
+pub trait ReusePolicy: Send {
+    /// Display name including parameters, e.g. `foresight(N1R2,g=0.5)`.
+    fn name(&self) -> String;
+
+    fn granularity(&self) -> Granularity;
+
+    fn cache_mode(&self) -> CacheMode;
+
+    /// True when the policy consumes MSE observations (the engine then
+    /// keeps host mirrors of cached activations).
+    fn needs_measurement(&self) -> bool {
+        false
+    }
+
+    /// Reset state for a new request.
+    fn begin_request(&mut self, layers: usize, steps: usize);
+
+    /// Decision for one site at one step.
+    fn action(&mut self, step: usize, site: Site) -> Action;
+
+    /// MSE(new activation, cached activation) after a measured compute.
+    fn observe_mse(&mut self, _step: usize, _site: Site, _mse: f64) {}
+
+    /// Foresight's per-site reuse thresholds λ (Fig. 5); None otherwise.
+    fn thresholds(&self) -> Option<BTreeMap<(usize, BlockKind, usize), f64>> {
+        None
+    }
+}
+
+/// Parse `name:key=val,key=val` policy specs into concrete policies, filling
+/// paper-default parameters from the model preset (Appendix A.6 tables).
+///
+/// Examples: `none`, `static`, `static:n=2,r=3`,
+/// `foresight:n=1,r=2,gamma=0.5,warmup=0.15`, `delta-dit`, `tgate`, `pab`.
+pub fn build_policy(spec: &str, model: &ModelInfo, steps: usize) -> Result<Box<dyn ReusePolicy>> {
+    let (name, args) = match spec.split_once(':') {
+        Some((n, a)) => (n, a),
+        None => (spec, ""),
+    };
+    let mut kv = BTreeMap::new();
+    for pair in args.split(',').filter(|s| !s.is_empty()) {
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| anyhow!("policy arg '{pair}' is not key=val"))?;
+        kv.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    let get_f = |k: &str, default: f64| -> Result<f64> {
+        match kv.get(k) {
+            Some(v) => v.parse().map_err(|_| anyhow!("policy arg {k}={v} not a number")),
+            None => Ok(default),
+        }
+    };
+    let get_u = |k: &str, default: usize| -> Result<usize> {
+        match kv.get(k) {
+            Some(v) => v.parse().map_err(|_| anyhow!("policy arg {k}={v} not an integer")),
+            None => Ok(default),
+        }
+    };
+
+    match name {
+        "none" | "baseline" => Ok(Box::new(NoReuse::new())),
+        "static" => {
+            let n = get_u("n", 1)?;
+            let r = get_u("r", n + 1)?;
+            Ok(Box::new(StaticReuse::new(n, r)))
+        }
+        "foresight" => {
+            let n = get_u("n", 1)?;
+            let r = get_u("r", n + 1)?;
+            let gamma = get_f("gamma", 0.5)?;
+            let warmup_frac = get_f("warmup", 0.15)?;
+            Ok(Box::new(Foresight::new(n, r, gamma, warmup_frac)))
+        }
+        "delta-dit" | "delta_dit" => {
+            // Table 5: k=2; gate b=25/30 (OpenSora) or 48/50; block range
+            // ~20% of layers.
+            let k = get_u("k", 2)?;
+            let default_b = ((steps as f64) * if steps <= 30 { 0.83 } else { 0.96 }) as usize;
+            let b = get_u("b", default_b.max(1))?;
+            let range = get_u("range", ((model.layers as f64) * 0.2).ceil() as usize)?;
+            Ok(Box::new(DeltaDit::new(k, b, range.max(1))))
+        }
+        "tgate" | "t-gate" => {
+            // Table 6: k=2, gate m = 0.4*steps for both 30- and 50-step setups.
+            let k = get_u("k", 2)?;
+            let m = get_u("m", ((steps as f64) * 0.4) as usize)?;
+            Ok(Box::new(TGate::new(k, m.max(1))))
+        }
+        "pab" => {
+            // Table 7: spatial α=2, temporal β=4, cross γ=6; broadcast range
+            // t∈[930,450] of 1000 → step fractions [0.07, 0.55]; MLP blocks
+            // 0..5 with interval 2.
+            let alpha = get_u("alpha", 2)?;
+            let beta = get_u("beta", 4)?;
+            let gamma_c = get_u("gamma", 6)?;
+            let lo = get_f("lo", 0.07)?;
+            let hi = get_f("hi", 0.55)?;
+            let mlp_interval = get_u("mlp_interval", 2)?;
+            let mlp_blocks: Vec<usize> = (0..model.layers.min(5)).collect();
+            Ok(Box::new(Pab::new(
+                alpha, beta, gamma_c, lo, hi, mlp_blocks, mlp_interval, steps,
+            )))
+        }
+        other => Err(anyhow!(
+            "unknown policy '{other}' (expected none|static|foresight|delta-dit|tgate|pab)"
+        )),
+    }
+}
+
+/// Iterate all decision sites of one step in execution order for a model.
+pub fn sites_for(model_layers: usize, granularity: Granularity, branch: usize) -> Vec<Site> {
+    let mut out = Vec::new();
+    for layer in 0..model_layers {
+        for kind in BlockKind::ALL {
+            match granularity {
+                Granularity::Coarse => out.push(Site { layer, kind, unit: Unit::Block, branch }),
+                Granularity::Fine => {
+                    for s in crate::model::SubUnit::ALL {
+                        out.push(Site { layer, kind, unit: Unit::Sub(s), branch });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelInfo {
+        // hand-rolled minimal ModelInfo for parser tests
+        ModelInfo {
+            name: "m".into(),
+            layers: 6,
+            d_model: 96,
+            n_heads: 4,
+            d_text: 64,
+            text_len: 16,
+            latent_channels: 8,
+            mlp_ratio: 4,
+            t_freq_dim: 128,
+            sampler: crate::config::SamplerKind::Rflow,
+            steps: 30,
+            cfg_scale: 7.5,
+            weights_dir: "w".into(),
+            piece_params: BTreeMap::new(),
+            buckets: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn parses_all_policy_names() {
+        let m = model();
+        for spec in ["none", "static", "foresight", "delta-dit", "tgate", "pab"] {
+            let p = build_policy(spec, &m, 30).unwrap();
+            assert!(!p.name().is_empty(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn parses_parameters() {
+        let m = model();
+        let p = build_policy("foresight:n=2,r=3,gamma=0.25,warmup=0.2", &m, 30).unwrap();
+        assert!(p.name().contains("N2R3"));
+        assert!(p.name().contains("0.25"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let m = model();
+        assert!(build_policy("warp-drive", &m, 30).is_err());
+        assert!(build_policy("static:nope", &m, 30).is_err());
+        assert!(build_policy("static:n=abc", &m, 30).is_err());
+    }
+
+    #[test]
+    fn sites_enumeration_counts() {
+        assert_eq!(sites_for(6, Granularity::Coarse, 0).len(), 12);
+        assert_eq!(sites_for(6, Granularity::Fine, 1).len(), 36);
+        assert!(sites_for(6, Granularity::Fine, 1).iter().all(|s| s.branch == 1));
+    }
+}

@@ -1,0 +1,54 @@
+//! No-reuse baseline: every block computes at every step. All quality
+//! metrics in the paper (PSNR/SSIM/LPIPS/FVD) are measured relative to this
+//! policy's output.
+
+use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
+
+#[derive(Default)]
+pub struct NoReuse;
+
+impl NoReuse {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl ReusePolicy for NoReuse {
+    fn name(&self) -> String {
+        "baseline".to_string()
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Coarse
+    }
+
+    fn cache_mode(&self) -> CacheMode {
+        CacheMode::Output
+    }
+
+    fn begin_request(&mut self, _layers: usize, _steps: usize) {}
+
+    fn action(&mut self, _step: usize, _site: Site) -> Action {
+        Action::Compute { update_cache: false, measure: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Unit;
+    use crate::model::BlockKind;
+
+    #[test]
+    fn never_reuses_never_caches() {
+        let mut p = NoReuse::new();
+        p.begin_request(28, 50);
+        for step in 0..50 {
+            let a = p.action(
+                step,
+                Site { layer: step % 28, kind: BlockKind::Spatial, unit: Unit::Block, branch: 0 },
+            );
+            assert_eq!(a, Action::Compute { update_cache: false, measure: false });
+        }
+    }
+}

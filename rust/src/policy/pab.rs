@@ -1,0 +1,191 @@
+//! PAB — Pyramid Attention Broadcast baseline (Zhao et al. 2024b; paper
+//! Appendix A.6 Table 7).
+//!
+//! Within a broadcast step range, attention outputs are "broadcast" (their
+//! residual contributions cached and re-applied) at hierarchical rates:
+//! spatial attention every α steps (top of the pyramid, most reusable in
+//! PAB's design at rate α=2), temporal every β=4, cross every γ=6. A subset
+//! of front blocks additionally broadcasts its MLP output on its own
+//! schedule. Outside the range everything computes. This is the paper's
+//! strongest static baseline and is *fine-grained*: it caches up to 6
+//! sublayer entries per layer pair (6LHWF) vs Foresight's 2 (2LHWF) —
+//! reproducing the 3× memory-overhead comparison of §4.2.
+
+use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
+use crate::cache::Unit;
+use crate::model::{BlockKind, SubUnit};
+
+pub struct Pab {
+    pub alpha: usize,   // spatial attention broadcast rate
+    pub beta: usize,    // temporal attention broadcast rate
+    pub gamma_c: usize, // cross attention broadcast rate
+    lo: usize,          // broadcast range start step (inclusive)
+    hi: usize,          // broadcast range end step (exclusive)
+    lo_frac: f64,
+    hi_frac: f64,
+    pub mlp_blocks: Vec<usize>,
+    pub mlp_interval: usize,
+}
+
+impl Pab {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        alpha: usize,
+        beta: usize,
+        gamma_c: usize,
+        lo_frac: f64,
+        hi_frac: f64,
+        mlp_blocks: Vec<usize>,
+        mlp_interval: usize,
+        steps: usize,
+    ) -> Self {
+        assert!(alpha >= 1 && beta >= 1 && gamma_c >= 1 && mlp_interval >= 1);
+        assert!((0.0..=1.0).contains(&lo_frac) && lo_frac < hi_frac && hi_frac <= 1.0);
+        let lo = (steps as f64 * lo_frac).round() as usize;
+        let hi = (steps as f64 * hi_frac).round() as usize;
+        Self { alpha, beta, gamma_c, lo, hi, lo_frac, hi_frac, mlp_blocks, mlp_interval }
+    }
+
+    fn rate_for(&self, kind: BlockKind, sub: SubUnit) -> Option<usize> {
+        match sub {
+            SubUnit::Attn => Some(match kind {
+                BlockKind::Spatial => self.alpha,
+                BlockKind::Temporal => self.beta,
+            }),
+            SubUnit::Cross => Some(self.gamma_c),
+            SubUnit::Mlp => None, // handled separately per block list
+        }
+    }
+}
+
+impl ReusePolicy for Pab {
+    fn name(&self) -> String {
+        format!(
+            "pab(a{}b{}c{},range={:.0}%-{:.0}%)",
+            self.alpha,
+            self.beta,
+            self.gamma_c,
+            self.lo_frac * 100.0,
+            self.hi_frac * 100.0
+        )
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Fine
+    }
+
+    fn cache_mode(&self) -> CacheMode {
+        CacheMode::Delta
+    }
+
+    fn begin_request(&mut self, _layers: usize, steps: usize) {
+        self.lo = (steps as f64 * self.lo_frac).round() as usize;
+        self.hi = (steps as f64 * self.hi_frac).round() as usize;
+    }
+
+    fn action(&mut self, step: usize, site: Site) -> Action {
+        let Unit::Sub(sub) = site.unit else {
+            return Action::Compute { update_cache: false, measure: false };
+        };
+        let in_range = step >= self.lo && step < self.hi;
+        if !in_range {
+            return Action::Compute { update_cache: false, measure: false };
+        }
+        let phase = step - self.lo;
+        match sub {
+            SubUnit::Mlp => {
+                if self.mlp_blocks.contains(&site.layer) {
+                    if phase % self.mlp_interval == 0 {
+                        Action::Compute { update_cache: true, measure: false }
+                    } else {
+                        Action::ReuseResidual
+                    }
+                } else {
+                    Action::Compute { update_cache: false, measure: false }
+                }
+            }
+            _ => {
+                let rate = self.rate_for(site.kind, sub).unwrap();
+                if phase % rate == 0 {
+                    Action::Compute { update_cache: true, measure: false }
+                } else {
+                    Action::ReuseResidual
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pab(steps: usize) -> Pab {
+        Pab::new(2, 4, 6, 0.07, 0.55, vec![0, 1, 2, 3, 4], 2, steps)
+    }
+
+    fn site(layer: usize, kind: BlockKind, sub: SubUnit) -> Site {
+        Site { layer, kind, unit: Unit::Sub(sub), branch: 0 }
+    }
+
+    #[test]
+    fn pyramid_rates_inside_range() {
+        let mut p = pab(30);
+        p.begin_request(6, 30);
+        // range [2, 17) for 30 steps
+        let lo = 2;
+        let mut sa_reuse = 0;
+        let mut ta_reuse = 0;
+        let mut ca_reuse = 0;
+        for step in lo..17 {
+            if p.action(step, site(5, BlockKind::Spatial, SubUnit::Attn)).is_reuse() {
+                sa_reuse += 1;
+            }
+            if p.action(step, site(5, BlockKind::Temporal, SubUnit::Attn)).is_reuse() {
+                ta_reuse += 1;
+            }
+            if p.action(step, site(5, BlockKind::Spatial, SubUnit::Cross)).is_reuse() {
+                ca_reuse += 1;
+            }
+        }
+        // hierarchy: cross (rate 6) reuses most often, then temporal (4),
+        // then spatial (2)
+        assert!(ca_reuse > ta_reuse, "cross {ca_reuse} vs temporal {ta_reuse}");
+        assert!(ta_reuse > sa_reuse, "temporal {ta_reuse} vs spatial {sa_reuse}");
+        assert!(sa_reuse > 0);
+    }
+
+    #[test]
+    fn everything_computes_outside_range() {
+        let mut p = pab(30);
+        p.begin_request(6, 30);
+        for step in [0, 1, 17, 25, 29] {
+            for kind in BlockKind::ALL {
+                for sub in SubUnit::ALL {
+                    assert!(
+                        !p.action(step, site(0, kind, sub)).is_reuse(),
+                        "step {step} {kind:?} {sub:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_broadcast_only_for_listed_blocks() {
+        let mut p = pab(30);
+        p.begin_request(6, 30);
+        // step 3 → phase 1 → mlp reuse step for listed blocks
+        assert!(p.action(3, site(0, BlockKind::Spatial, SubUnit::Mlp)).is_reuse());
+        assert!(!p.action(3, site(5, BlockKind::Spatial, SubUnit::Mlp)).is_reuse());
+    }
+
+    #[test]
+    fn range_rescales_with_steps() {
+        let mut p = pab(30);
+        p.begin_request(6, 60);
+        // with 60 steps, range = [4, 33): step 20 is inside
+        assert!(p.action(21, site(0, BlockKind::Spatial, SubUnit::Attn)).is_reuse());
+        assert!(!p.action(40, site(0, BlockKind::Spatial, SubUnit::Attn)).is_reuse());
+    }
+}

@@ -1,0 +1,84 @@
+//! Static coarse-grained caching baseline (paper §3.2, Appendix A.6
+//! Table 4): compute + cache all blocks every R-th step, reuse the cached
+//! outputs verbatim for the N = R-1 steps in between, uniformly across all
+//! layers — exactly the behaviour whose limitations §3.3 analyses.
+
+use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
+
+pub struct StaticReuse {
+    pub n: usize,
+    pub r: usize,
+}
+
+impl StaticReuse {
+    pub fn new(n: usize, r: usize) -> Self {
+        assert!(r >= 1);
+        Self { n, r }
+    }
+}
+
+impl ReusePolicy for StaticReuse {
+    fn name(&self) -> String {
+        format!("static(N{}R{})", self.n, self.r)
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Coarse
+    }
+
+    fn cache_mode(&self) -> CacheMode {
+        CacheMode::Output
+    }
+
+    fn begin_request(&mut self, _layers: usize, _steps: usize) {}
+
+    fn action(&mut self, step: usize, _site: Site) -> Action {
+        if step % self.r == 0 {
+            Action::Compute { update_cache: true, measure: false }
+        } else {
+            Action::Reuse
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Unit;
+    use crate::model::BlockKind;
+
+    fn site() -> Site {
+        Site { layer: 0, kind: BlockKind::Temporal, unit: Unit::Block, branch: 0 }
+    }
+
+    #[test]
+    fn n1r2_alternates() {
+        let mut p = StaticReuse::new(1, 2);
+        p.begin_request(4, 30);
+        for step in 0..30 {
+            let a = p.action(step, site());
+            assert_eq!(a.is_reuse(), step % 2 == 1, "step {step}");
+        }
+    }
+
+    #[test]
+    fn n2r3_two_reuse_steps_per_cycle() {
+        let mut p = StaticReuse::new(2, 3);
+        p.begin_request(4, 30);
+        let reused = (0..30).filter(|&s| p.action(s, site()).is_reuse()).count();
+        assert_eq!(reused, 20);
+    }
+
+    #[test]
+    fn uniform_across_layers() {
+        let mut p = StaticReuse::new(1, 2);
+        p.begin_request(8, 30);
+        for step in 0..30 {
+            let mut actions = vec![];
+            for l in 0..8 {
+                actions.push(p.action(step, Site { layer: l, ..site() }).is_reuse());
+            }
+            assert!(actions.windows(2).all(|w| w[0] == w[1]), "non-uniform at {step}");
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! T-GATE baseline (Liu et al. 2024b; paper Appendix A.6 Table 6).
+//!
+//! Splits denoising into a **semantics-planning** phase (steps < m) and a
+//! **fidelity-improvement** phase (steps ≥ m):
+//!
+//! * phase 1 — cross-attention stays live (and keeps its cache fresh so the
+//!   gate step has up-to-date features); self/temporal attention computes
+//!   every k-th step after a one-step warmup and reuses its cached delta
+//!   otherwise;
+//! * phase 2 — cross-attention is replaced by its cached features entirely
+//!   (text conditioning is "gated off"), while self-attention computes.
+//!
+//! MLP sublayers always compute (T-GATE only touches attention).
+
+use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
+use crate::cache::Unit;
+use crate::model::SubUnit;
+
+pub struct TGate {
+    /// Self-attention cache interval k (Table 6: 2).
+    pub k: usize,
+    /// Gate step m between the two phases (Table 6: 12/30 or 20/50).
+    pub m: usize,
+}
+
+impl TGate {
+    pub fn new(k: usize, m: usize) -> Self {
+        assert!(k >= 1 && m >= 1);
+        Self { k, m }
+    }
+}
+
+impl ReusePolicy for TGate {
+    fn name(&self) -> String {
+        format!("tgate(k={},m={})", self.k, self.m)
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Fine
+    }
+
+    fn cache_mode(&self) -> CacheMode {
+        CacheMode::Delta
+    }
+
+    fn begin_request(&mut self, _layers: usize, _steps: usize) {}
+
+    fn action(&mut self, step: usize, site: Site) -> Action {
+        let Unit::Sub(sub) = site.unit else {
+            // engine always drives fine policies at sub granularity
+            return Action::Compute { update_cache: false, measure: false };
+        };
+        match sub {
+            SubUnit::Mlp => Action::Compute { update_cache: false, measure: false },
+            SubUnit::Attn => {
+                if step >= self.m {
+                    // fidelity phase: SA continues
+                    Action::Compute { update_cache: false, measure: false }
+                } else if step == 0 || step % self.k == 0 {
+                    Action::Compute { update_cache: true, measure: false }
+                } else {
+                    Action::ReuseResidual
+                }
+            }
+            SubUnit::Cross => {
+                if step < self.m {
+                    // keep the CA cache fresh for the gate
+                    Action::Compute { update_cache: true, measure: false }
+                } else {
+                    Action::ReuseResidual
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BlockKind;
+
+    fn site(sub: SubUnit) -> Site {
+        Site { layer: 1, kind: BlockKind::Spatial, unit: Unit::Sub(sub), branch: 0 }
+    }
+
+    #[test]
+    fn phase1_sa_broadcast_ca_live() {
+        let mut p = TGate::new(2, 12);
+        p.begin_request(6, 30);
+        for step in 0..12 {
+            let sa = p.action(step, site(SubUnit::Attn));
+            assert_eq!(sa.is_reuse(), step % 2 == 1, "SA step {step}");
+            let ca = p.action(step, site(SubUnit::Cross));
+            assert!(!ca.is_reuse(), "CA computes in phase 1");
+            assert_eq!(ca, Action::Compute { update_cache: true, measure: false });
+        }
+    }
+
+    #[test]
+    fn phase2_ca_gated_sa_live() {
+        let mut p = TGate::new(2, 12);
+        p.begin_request(6, 30);
+        for step in 12..30 {
+            assert!(!p.action(step, site(SubUnit::Attn)).is_reuse(), "SA step {step}");
+            assert_eq!(p.action(step, site(SubUnit::Cross)), Action::ReuseResidual);
+        }
+    }
+
+    #[test]
+    fn mlp_always_computes() {
+        let mut p = TGate::new(2, 12);
+        p.begin_request(6, 30);
+        for step in 0..30 {
+            assert!(!p.action(step, site(SubUnit::Mlp)).is_reuse());
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//!
+//! This is the only module that touches the `xla` crate. The pattern follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b` with
+//! device-resident buffers. HLO **text** (not serialized proto) is the
+//! interchange format — see python/compile/aot.py for why.
+//!
+//! Thread-safety: the PJRT CPU client and its loaded executables are
+//! internally thread-safe, but the `xla` crate wraps raw pointers and so
+//! doesn't declare `Send`/`Sync`. [`Runtime`] asserts those bounds via the
+//! `Shared` wrapper below; the serving integration test exercises
+//! concurrent execution from multiple workers.
+
+pub mod tensor;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+pub use tensor::HostTensor;
+
+/// Wrapper asserting thread-safety of PJRT objects (see module docs).
+struct Shared<T>(T);
+// SAFETY: PJRT CPU client/executable/buffer handles are internally
+// synchronised; the xla crate merely lacks the declarations.
+unsafe impl<T> Send for Shared<T> {}
+unsafe impl<T> Sync for Shared<T> {}
+
+/// A device-resident tensor (opaque PJRT buffer + shape metadata).
+pub struct DeviceTensor {
+    buf: Shared<xla::PjRtBuffer>,
+    dims: Vec<usize>,
+}
+
+impl DeviceTensor {
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn raw(&self) -> &xla::PjRtBuffer {
+        &self.buf.0
+    }
+}
+
+/// Cumulative execution telemetry for one executable (drives the Fig. 9
+/// operator-breakdown reproduction).
+#[derive(Debug, Default)]
+pub struct ExecStats {
+    pub calls: AtomicU64,
+    pub nanos: AtomicU64,
+}
+
+impl ExecStats {
+    pub fn record(&self, dt: std::time::Duration) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// (call count, total seconds).
+    pub fn snapshot(&self) -> (u64, f64) {
+        (
+            self.calls.load(Ordering::Relaxed),
+            self.nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        )
+    }
+
+    pub fn reset(&self) {
+        self.calls.store(0, Ordering::Relaxed);
+        self.nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+/// One compiled HLO module ready to execute.
+pub struct Executable {
+    name: String,
+    exe: Shared<xla::PjRtLoadedExecutable>,
+    /// Expected argument count (parsed from the HLO entry layout) so arity
+    /// bugs fail with a readable error instead of a PJRT abort.
+    arity: usize,
+    pub stats: ExecStats,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// Execute with device-resident inputs; returns the root output buffer.
+    ///
+    /// All artifacts are lowered with non-tuple roots (aot.py), so the
+    /// result is always exactly one buffer.
+    pub fn run(&self, args: &[&DeviceTensor]) -> Result<DeviceTensor> {
+        if args.len() != self.arity {
+            return Err(anyhow!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.arity,
+                args.len()
+            ));
+        }
+        let t0 = Instant::now();
+        let raw: Vec<&xla::PjRtBuffer> = args.iter().map(|a| a.raw()).collect();
+        let out = self
+            .exe
+            .0
+            .execute_b(&raw)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        self.stats.record(t0.elapsed());
+        let buf = out
+            .into_iter()
+            .next()
+            .and_then(|replica| replica.into_iter().next())
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.name))?;
+        let shape = buf
+            .on_device_shape()
+            .map_err(|e| anyhow!("{}: output shape: {e:?}", self.name))?;
+        let dims = array_dims(&shape)?;
+        Ok(DeviceTensor { buf: Shared(buf), dims })
+    }
+}
+
+fn array_dims(shape: &xla::Shape) -> Result<Vec<usize>> {
+    let ashape = xla::ArrayShape::try_from(shape)
+        .map_err(|e| anyhow!("non-array output shape: {e:?}"))?;
+    Ok(ashape.dims().iter().map(|&d| d as usize).collect())
+}
+
+/// Count parameters in the HLO entry computation layout line, e.g.
+/// `entry_computation_layout={(f32[8,48]{1,0}, f32[96]{0})->f32[8,48]{1,0}}`.
+fn parse_entry_arity(hlo_text: &str) -> usize {
+    if let Some(start) = hlo_text.find("entry_computation_layout={(") {
+        let rest = &hlo_text[start + "entry_computation_layout={(".len()..];
+        if let Some(end) = rest.find(")->") {
+            let params = &rest[..end];
+            if params.trim().is_empty() {
+                return 0;
+            }
+            let mut depth = 0usize;
+            let mut count = 1usize;
+            for ch in params.chars() {
+                match ch {
+                    '[' | '{' | '(' => depth += 1,
+                    ']' | '}' | ')' => depth = depth.saturating_sub(1),
+                    ',' if depth == 0 => count += 1,
+                    _ => {}
+                }
+            }
+            return count;
+        }
+    }
+    0
+}
+
+/// The PJRT runtime: client + executable cache + elementwise helpers.
+pub struct Runtime {
+    client: Shared<xla::PjRtClient>,
+    /// Compiled executables keyed by absolute artifact path.
+    cache: Mutex<BTreeMap<PathBuf, Arc<Executable>>>,
+    /// Runtime-built elementwise binaries keyed by (op, dims).
+    elementwise: Mutex<BTreeMap<(String, Vec<usize>), Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Self {
+            client: Shared(client),
+            cache: Mutex::new(BTreeMap::new()),
+            elementwise: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.0.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by path).
+    pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(path) {
+            return Ok(e.clone());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse hlo {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        let name = path
+            .file_name()
+            .map(|s| {
+                s.to_string_lossy()
+                    .trim_end_matches(".hlo.txt")
+                    .to_string()
+            })
+            .unwrap_or_default();
+        let arity = parse_entry_arity(&text);
+        let exec = Arc::new(Executable {
+            name,
+            exe: Shared(exe),
+            arity,
+            stats: ExecStats::default(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Upload host data to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<DeviceTensor> {
+        let buf = self
+            .client
+            .0
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))?;
+        Ok(DeviceTensor { buf: Shared(buf), dims: dims.to_vec() })
+    }
+
+    pub fn upload_tensor(&self, t: &HostTensor) -> Result<DeviceTensor> {
+        self.upload(&t.data, &t.dims)
+    }
+
+    /// Download a device tensor into a new host tensor.
+    pub fn download(&self, t: &DeviceTensor) -> Result<HostTensor> {
+        let mut out = HostTensor::zeros(t.dims.to_vec());
+        self.download_into(t, &mut out.data)?;
+        Ok(out)
+    }
+
+    /// Download into a pre-allocated host slice (hot path: no allocation).
+    pub fn download_into(&self, t: &DeviceTensor, dst: &mut [f32]) -> Result<()> {
+        if dst.len() != t.element_count() {
+            return Err(anyhow!(
+                "download size mismatch: {} vs {}",
+                dst.len(),
+                t.element_count()
+            ));
+        }
+        // CPU PJRT does not implement CopyRawToHost; route through a
+        // Literal (one extra host copy — measured as negligible vs. block
+        // execution cost; see EXPERIMENTS.md §Perf).
+        let lit = t
+            .raw()
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download (to_literal): {e:?}"))?;
+        lit.copy_raw_to(dst)
+            .map_err(|e| anyhow!("download (copy_raw): {e:?}"))
+    }
+
+    /// Runtime-built elementwise binary op over identically-shaped tensors
+    /// (used for Δ-DiT / PAB residual-delta reuse so the add/sub stays on
+    /// device instead of round-tripping through the host).
+    pub fn elementwise_binary(&self, op: &str, dims: &[usize]) -> Result<Arc<Executable>> {
+        let key = (op.to_string(), dims.to_vec());
+        if let Some(e) = self.elementwise.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let b = xla::XlaBuilder::new(&format!("ew_{op}"));
+        let idims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let x = b
+            .parameter(0, xla::ElementType::F32, &idims, "x")
+            .map_err(|e| anyhow!("builder: {e:?}"))?;
+        let y = b
+            .parameter(1, xla::ElementType::F32, &idims, "y")
+            .map_err(|e| anyhow!("builder: {e:?}"))?;
+        let z = match op {
+            "add" => x.add_(&y),
+            "sub" => x.sub_(&y),
+            _ => return Err(anyhow!("unknown elementwise op {op}")),
+        }
+        .map_err(|e| anyhow!("builder {op}: {e:?}"))?;
+        let comp = z.build().map_err(|e| anyhow!("build: {e:?}"))?;
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile ew_{op}: {e:?}"))?;
+        let exec = Arc::new(Executable {
+            name: format!("ew_{op}{dims:?}"),
+            exe: Shared(exe),
+            arity: 2,
+            stats: ExecStats::default(),
+        });
+        self.elementwise.lock().unwrap().insert(key, exec.clone());
+        Ok(exec)
+    }
+
+    /// Number of compiled artifacts currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_parser_counts_params() {
+        let h = "HloModule m, entry_computation_layout={(f32[8,48,96]{2,1,0}, f32[96]{0}, f32[16,96]{1,0})->f32[8,48,96]{2,1,0}}";
+        assert_eq!(parse_entry_arity(h), 3);
+        let h0 = "HloModule m, entry_computation_layout={()->f32[2]{0}}";
+        assert_eq!(parse_entry_arity(h0), 0);
+        let h1 = "HloModule m, entry_computation_layout={(f32[])->f32[]}";
+        assert_eq!(parse_entry_arity(h1), 1);
+    }
+}

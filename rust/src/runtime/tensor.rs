@@ -1,0 +1,114 @@
+//! Host-side dense f32 tensor (row-major), the CPU counterpart of the
+//! device-resident [`super::DeviceTensor`].
+
+/// Row-major f32 tensor with explicit dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "dims {:?} do not match data length {}",
+            dims,
+            data.len()
+        );
+        Self { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Self { dims, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { dims: vec![], data: vec![v] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Reinterpret with new dims (same element count).
+    pub fn reshaped(mut self, dims: Vec<usize>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims;
+        self
+    }
+
+    /// Elementwise a - b into a fresh tensor.
+    pub fn sub(&self, other: &Self) -> Self {
+        assert_eq!(self.dims, other.dims);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Self { dims: self.dims.clone(), data }
+    }
+
+    /// Elementwise a + b into a fresh tensor.
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!(self.dims, other.dims);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Self { dims: self.dims.clone(), data }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_arith() {
+        let a = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::new(vec![2, 2], vec![4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(a.add(&b).data, vec![5.0; 4]);
+        assert_eq!(a.sub(&a).data, vec![0.0; 4]);
+        assert_eq!(a.element_count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_dims_panic() {
+        HostTensor::new(vec![3], vec![1.0]);
+    }
+
+    #[test]
+    fn zeros_scale_norm() {
+        let mut z = HostTensor::zeros(vec![4]);
+        assert_eq!(z.l2_norm(), 0.0);
+        z.data = vec![3.0, 4.0, 0.0, 0.0];
+        z.scale(2.0);
+        assert!((z.l2_norm() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reshape_keeps_data() {
+        let a = HostTensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let b = a.clone().reshaped(vec![3, 2]);
+        assert_eq!(b.dims, vec![3, 2]);
+        assert_eq!(b.data, a.data);
+    }
+}

@@ -1,0 +1,243 @@
+//! Denoising samplers (host-side math, no Python).
+//!
+//! The paper's setups (§4.1): OpenSora uses rectified-flow (rflow) Euler
+//! sampling with 30 steps; Latte and CogVideoX use DDIM with 50 steps. Both
+//! are implemented here over host f32 latents; the model executables only
+//! ever see `(x_t, t)` pairs, so samplers and the reuse policies compose
+//! freely.
+
+use crate::config::{SamplerKind, ScheduleConfig};
+
+/// A denoising schedule instance for one request.
+pub trait Sampler: Send {
+    fn kind(&self) -> SamplerKind;
+
+    /// Number of denoising steps.
+    fn n_steps(&self) -> usize;
+
+    /// The scalar fed to the timestep-embedding executable at step `i`
+    /// (training-timestep value for DDIM, sigma*1000 for rflow).
+    fn t_value(&self, i: usize) -> f32;
+
+    /// Advance `x` in place given the model output at step `i`
+    /// (noise prediction for DDIM, velocity for rflow).
+    fn step(&self, x: &mut [f32], model_out: &[f32], i: usize);
+}
+
+// ---------------------------------------------------------------------------
+// DDIM
+// ---------------------------------------------------------------------------
+
+/// Deterministic DDIM (eta = 0) over a linear-beta schedule.
+pub struct Ddim {
+    /// Descending training timesteps, one per denoising step.
+    pub timesteps: Vec<usize>,
+    /// alpha-bar lookup over the full training schedule.
+    alphas_cumprod: Vec<f64>,
+}
+
+impl Ddim {
+    pub fn new(sched: &ScheduleConfig, steps: usize) -> Self {
+        assert!(steps >= 1 && steps <= sched.train_timesteps);
+        let t_train = sched.train_timesteps;
+        let mut alphas_cumprod = Vec::with_capacity(t_train);
+        let mut prod = 1.0f64;
+        for i in 0..t_train {
+            // linear beta ramp, matching configs.py constants
+            let beta = sched.beta_start
+                + (sched.beta_end - sched.beta_start) * (i as f64) / ((t_train - 1) as f64);
+            prod *= 1.0 - beta;
+            alphas_cumprod.push(prod);
+        }
+        // Quadratic ("quad") timestep subsequence as in the original DDIM
+        // paper: dense near t=0, sparse at high t. Consecutive denoising
+        // steps therefore make progressively smaller updates toward the end
+        // of sampling — the decaying adjacent-step feature MSE the paper's
+        // Fig. 2 shows and Foresight's warmup-derived thresholds rely on.
+        let mut timesteps: Vec<usize> = (0..steps)
+            .rev()
+            .map(|i| {
+                let frac = (i + 1) as f64 / steps as f64;
+                ((frac * frac) * (t_train - 1) as f64).round() as usize
+            })
+            .collect();
+        // enforce strictly decreasing after rounding
+        for i in (0..timesteps.len().saturating_sub(1)).rev() {
+            if timesteps[i] <= timesteps[i + 1] {
+                timesteps[i] = timesteps[i + 1] + 1;
+            }
+        }
+        Self { timesteps, alphas_cumprod }
+    }
+
+    fn abar(&self, t: Option<usize>) -> f64 {
+        match t {
+            Some(t) => self.alphas_cumprod[t],
+            None => 1.0, // "alpha-bar past the last step" = fully denoised
+        }
+    }
+}
+
+impl Sampler for Ddim {
+    fn kind(&self) -> SamplerKind {
+        SamplerKind::Ddim
+    }
+
+    fn n_steps(&self) -> usize {
+        self.timesteps.len()
+    }
+
+    fn t_value(&self, i: usize) -> f32 {
+        self.timesteps[i] as f32
+    }
+
+    fn step(&self, x: &mut [f32], eps: &[f32], i: usize) {
+        assert_eq!(x.len(), eps.len());
+        let t = self.timesteps[i];
+        let t_prev = self.timesteps.get(i + 1).copied();
+        let a_t = self.abar(Some(t));
+        let a_prev = self.abar(t_prev);
+        let sqrt_at = a_t.sqrt() as f32;
+        let sqrt_1mat = (1.0 - a_t).sqrt() as f32;
+        let sqrt_aprev = a_prev.sqrt() as f32;
+        let sqrt_1maprev = (1.0 - a_prev).sqrt() as f32;
+        for (xv, ev) in x.iter_mut().zip(eps) {
+            // x0-prediction then jump to t_prev (eta = 0)
+            let x0 = (*xv - sqrt_1mat * ev) / sqrt_at;
+            // clamp x0 to keep random-weight trajectories bounded
+            let x0 = x0.clamp(-6.0, 6.0);
+            *xv = sqrt_aprev * x0 + sqrt_1maprev * ev;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rectified flow (Euler)
+// ---------------------------------------------------------------------------
+
+/// Rectified-flow Euler sampler: x moves along the predicted velocity field
+/// from sigma=1 (noise) to sigma=0 (data).
+pub struct Rflow {
+    sigmas: Vec<f64>, // len = steps + 1, descending 1.0 -> 0.0
+}
+
+impl Rflow {
+    pub fn new(steps: usize) -> Self {
+        assert!(steps >= 1);
+        // Quadratic sigma spacing: large Euler steps while x is mostly
+        // noise, small steps as it converges — the step-size analogue of
+        // DDIM "quad" spacing (see Ddim::new), giving the decaying
+        // adjacent-step feature MSE of the paper's Fig. 2.
+        let sigmas = (0..=steps)
+            .map(|i| {
+                let s = 1.0 - (i as f64) / (steps as f64);
+                s * s
+            })
+            .collect();
+        Self { sigmas }
+    }
+}
+
+impl Sampler for Rflow {
+    fn kind(&self) -> SamplerKind {
+        SamplerKind::Rflow
+    }
+
+    fn n_steps(&self) -> usize {
+        self.sigmas.len() - 1
+    }
+
+    fn t_value(&self, i: usize) -> f32 {
+        // scale sigma into the same numeric range the t-embedding saw at
+        // export time (0..1000)
+        (self.sigmas[i] * 1000.0) as f32
+    }
+
+    fn step(&self, x: &mut [f32], velocity: &[f32], i: usize) {
+        assert_eq!(x.len(), velocity.len());
+        let dt = (self.sigmas[i + 1] - self.sigmas[i]) as f32; // negative
+        for (xv, vv) in x.iter_mut().zip(velocity) {
+            *xv += dt * vv;
+        }
+    }
+}
+
+/// Construct the sampler a model preset asks for.
+pub fn build(kind: SamplerKind, sched: &ScheduleConfig, steps: usize) -> Box<dyn Sampler> {
+    match kind {
+        SamplerKind::Ddim => Box::new(Ddim::new(sched, steps)),
+        SamplerKind::Rflow => Box::new(Rflow::new(steps)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> ScheduleConfig {
+        ScheduleConfig { train_timesteps: 1000, beta_start: 1e-4, beta_end: 2e-2 }
+    }
+
+    #[test]
+    fn ddim_timesteps_descend_within_range() {
+        let d = Ddim::new(&sched(), 50);
+        assert_eq!(d.n_steps(), 50);
+        for w in d.timesteps.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        assert!(*d.timesteps.first().unwrap() < 1000);
+    }
+
+    #[test]
+    fn ddim_alphabar_monotone_decreasing() {
+        let d = Ddim::new(&sched(), 10);
+        for w in d.alphas_cumprod.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        assert!(d.alphas_cumprod[0] < 1.0 && d.alphas_cumprod[999] > 0.0);
+    }
+
+    #[test]
+    fn ddim_zero_eps_stays_finite() {
+        let d = Ddim::new(&sched(), 50);
+        let mut x = vec![1.0f32; 8];
+        let eps = vec![0.0f32; 8];
+        for i in 0..d.n_steps() {
+            d.step(&mut x, &eps, i);
+        }
+        for &v in &x {
+            assert!(v.is_finite());
+            assert!(v > 1.0, "abar increases toward the end so x grows toward x0: {v}");
+        }
+    }
+
+    #[test]
+    fn rflow_integrates_constant_velocity_exactly() {
+        let r = Rflow::new(30);
+        assert_eq!(r.n_steps(), 30);
+        let mut x = vec![1.0f32; 4];
+        let v = vec![2.0f32; 4];
+        for i in 0..r.n_steps() {
+            r.step(&mut x, &v, i);
+        }
+        // total dt = -1, so x = 1 - 2 = -1
+        for &xv in &x {
+            assert!((xv + 1.0).abs() < 1e-5, "{xv}");
+        }
+    }
+
+    #[test]
+    fn rflow_t_values_descend_from_1000() {
+        let r = Rflow::new(30);
+        assert!((r.t_value(0) - 1000.0).abs() < 1e-3);
+        for i in 1..r.n_steps() {
+            assert!(r.t_value(i) < r.t_value(i - 1));
+        }
+    }
+
+    #[test]
+    fn build_dispatches() {
+        assert_eq!(build(SamplerKind::Ddim, &sched(), 10).n_steps(), 10);
+        assert_eq!(build(SamplerKind::Rflow, &sched(), 10).n_steps(), 10);
+    }
+}

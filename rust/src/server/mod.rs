@@ -1,0 +1,388 @@
+//! TCP JSON-lines serving front-end: router, request queue, worker pool.
+//!
+//! This is the L3 deployment surface: a newline-delimited JSON protocol
+//! over TCP (one request object per line, one response object per line),
+//! a FIFO queue with a fixed worker pool executing generations, and
+//! aggregate latency telemetry. Python is never involved; workers drive
+//! the PJRT executables directly.
+//!
+//! Protocol ops:
+//! * `{"op":"ping"}` → `{"status":"ok","pong":true}`
+//! * `{"op":"generate","model":..,"bucket":..,"policy":..,"prompt":..,
+//!    "seed":..,"steps"?:..}` → run stats
+//! * `{"op":"stats"}` → server-level counters + latency percentiles
+//! * `{"op":"shutdown"}` → stops the server
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::config::Manifest;
+use crate::engine::{Engine, Request};
+use crate::model::LoadedModel;
+use crate::policy::build_policy;
+use crate::runtime::Runtime;
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+/// Engines per (model, bucket), loaded once and shared by all workers.
+pub struct EngineRegistry {
+    engines: BTreeMap<(String, String), Arc<Engine>>,
+}
+
+impl EngineRegistry {
+    /// Load the given (model, bucket) pairs from the artifact manifest.
+    pub fn load(rt: Arc<Runtime>, manifest: &Manifest, pairs: &[(String, String)]) -> Result<Self> {
+        let mut engines = BTreeMap::new();
+        for (model, bucket) in pairs {
+            let lm = Arc::new(LoadedModel::load(rt.clone(), manifest, model, bucket)?);
+            engines.insert(
+                (model.clone(), bucket.clone()),
+                Arc::new(Engine::new(lm, manifest.schedule)),
+            );
+        }
+        Ok(Self { engines })
+    }
+
+    pub fn get(&self, model: &str, bucket: &str) -> Result<&Arc<Engine>> {
+        self.engines
+            .get(&(model.to_string(), bucket.to_string()))
+            .ok_or_else(|| anyhow!("no engine loaded for {model}/{bucket}"))
+    }
+
+    pub fn keys(&self) -> Vec<(String, String)> {
+        self.engines.keys().cloned().collect()
+    }
+}
+
+struct Job {
+    payload: Json,
+    enqueued: Instant,
+    reply: mpsc::Sender<Json>,
+}
+
+#[derive(Default)]
+struct Telemetry {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    latencies_s: Mutex<Vec<f64>>,
+    queue_s: Mutex<Vec<f64>>,
+}
+
+/// The running server; dropping it (or calling [`Server::shutdown`]) stops
+/// the listener and workers.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    /// Bind address; use port 0 for an ephemeral port (tests).
+    pub addr: String,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:0".to_string(), workers: 2 }
+    }
+}
+
+type Queue = Arc<(Mutex<VecDeque<Job>>, Condvar)>;
+
+impl Server {
+    /// Start the listener + worker pool.
+    pub fn start(registry: Arc<EngineRegistry>, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr).context("bind")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue: Queue = Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+        let telemetry = Arc::new(Telemetry::default());
+        let mut handles = Vec::new();
+
+        // worker pool
+        for wid in 0..cfg.workers.max(1) {
+            let queue = Arc::clone(&queue);
+            let stop = Arc::clone(&stop);
+            let registry = Arc::clone(&registry);
+            let telemetry = Arc::clone(&telemetry);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("foresight-server-worker-{wid}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let (lock, cv) = &*queue;
+                            let mut q = lock.lock().unwrap();
+                            loop {
+                                if let Some(j) = q.pop_front() {
+                                    break j;
+                                }
+                                if stop.load(Ordering::SeqCst) {
+                                    return;
+                                }
+                                let (nq, _timeout) = cv
+                                    .wait_timeout(q, std::time::Duration::from_millis(50))
+                                    .unwrap();
+                                q = nq;
+                            }
+                        };
+                        let queue_s = job.enqueued.elapsed().as_secs_f64();
+                        let resp = handle_generate(&registry, &job.payload, queue_s, &telemetry);
+                        let _ = job.reply.send(resp);
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        // accept loop
+        {
+            let stop_accept = Arc::clone(&stop);
+            let queue = Arc::clone(&queue);
+            let telemetry = Arc::clone(&telemetry);
+            handles.push(
+                std::thread::Builder::new()
+                    .name("foresight-server-accept".to_string())
+                    .spawn(move || {
+                        let mut conn_handles = Vec::new();
+                        while !stop_accept.load(Ordering::SeqCst) {
+                            match listener.accept() {
+                                Ok((stream, _peer)) => {
+                                    let queue = Arc::clone(&queue);
+                                    let stop = Arc::clone(&stop_accept);
+                                    let telemetry = Arc::clone(&telemetry);
+                                    conn_handles.push(std::thread::spawn(move || {
+                                        let _ = handle_conn(stream, queue, stop, telemetry);
+                                    }));
+                                }
+                                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                    std::thread::sleep(std::time::Duration::from_millis(10));
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                        for h in conn_handles {
+                            let _ = h.join();
+                        }
+                    })
+                    .expect("spawn accept"),
+            );
+        }
+
+        Ok(Server { addr, stop, handles })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join all threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("status", Json::str("error")), ("error", Json::str(msg))])
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    queue: Queue,
+    stop: Arc<AtomicBool>,
+    telemetry: Arc<Telemetry>,
+) -> Result<()> {
+    use std::io::Read;
+    // Poll with a read timeout so idle connections notice server shutdown
+    // instead of blocking forever in a read (which would deadlock
+    // Server::shutdown's thread joins).
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    'conn: loop {
+        // extract complete lines already buffered
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let line_bytes: Vec<u8> = buf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&line_bytes).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if !handle_line(&line, &mut writer, &queue, &stop, &telemetry)? {
+                break 'conn;
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break, // peer closed
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+    }
+    Ok(())
+}
+
+/// Process one protocol line; returns false when the connection should end.
+fn handle_line(
+    line: &str,
+    writer: &mut TcpStream,
+    queue: &Queue,
+    stop: &Arc<AtomicBool>,
+    telemetry: &Arc<Telemetry>,
+) -> Result<bool> {
+    {
+        let payload = match json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(writer, "{}", err_json(&format!("bad json: {e}")))?;
+                return Ok(true);
+            }
+        };
+        let op = payload.get("op").and_then(|o| o.as_str()).unwrap_or("");
+        let resp = match op {
+            "ping" => Json::obj(vec![("status", Json::str("ok")), ("pong", Json::Bool(true))]),
+            "stats" => {
+                let lat = telemetry.latencies_s.lock().unwrap().clone();
+                let qs = telemetry.queue_s.lock().unwrap().clone();
+                Json::obj(vec![
+                    ("status", Json::str("ok")),
+                    ("requests", Json::num(telemetry.requests.load(Ordering::Relaxed) as f64)),
+                    ("errors", Json::num(telemetry.errors.load(Ordering::Relaxed) as f64)),
+                    ("latency_p50_s", Json::num(stats::percentile(&lat, 50.0))),
+                    ("latency_p95_s", Json::num(stats::percentile(&lat, 95.0))),
+                    ("latency_mean_s", Json::num(stats::mean(&lat))),
+                    ("queue_mean_s", Json::num(stats::mean(&qs))),
+                ])
+            }
+            "shutdown" => {
+                stop.store(true, Ordering::SeqCst);
+                let r = Json::obj(vec![("status", Json::str("ok")), ("stopping", Json::Bool(true))]);
+                writeln!(writer, "{r}")?;
+                return Ok(false);
+            }
+            "generate" => {
+                let (tx, rx) = mpsc::channel();
+                {
+                    let (lock, cv) = &**queue;
+                    lock.lock()
+                        .unwrap()
+                        .push_back(Job { payload, enqueued: Instant::now(), reply: tx });
+                    cv.notify_one();
+                }
+                rx.recv().unwrap_or_else(|_| err_json("worker dropped"))
+            }
+            other => err_json(&format!("unknown op '{other}'")),
+        };
+        writeln!(writer, "{resp}")?;
+    }
+    Ok(true)
+}
+
+fn handle_generate(
+    registry: &EngineRegistry,
+    payload: &Json,
+    queue_s: f64,
+    telemetry: &Telemetry,
+) -> Json {
+    telemetry.requests.fetch_add(1, Ordering::Relaxed);
+    let get_str = |k: &str| payload.get(k).and_then(|v| v.as_str()).map(str::to_string);
+    let model = get_str("model").unwrap_or_else(|| "opensora-sim".to_string());
+    let bucket = get_str("bucket").unwrap_or_else(|| "240p-2s".to_string());
+    let policy_spec = get_str("policy").unwrap_or_else(|| "foresight".to_string());
+    let prompt = get_str("prompt").unwrap_or_default();
+    let seed = payload.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let steps = payload.get("steps").and_then(|v| v.as_usize());
+
+    let run = (|| -> Result<Json> {
+        let engine = registry.get(&model, &bucket)?;
+        let info = &engine.model().info;
+        let mut policy = build_policy(&policy_spec, info, steps.unwrap_or(info.steps))?;
+        let mut req = Request::new(&prompt, seed);
+        req.steps = steps;
+        let result = engine.generate(&req, policy.as_mut(), None)?;
+        let s = &result.stats;
+        Ok(Json::obj(vec![
+            ("status", Json::str("ok")),
+            ("model", Json::str(&model)),
+            ("bucket", Json::str(&bucket)),
+            ("policy", Json::str(&s.policy)),
+            ("wall_s", Json::num(s.wall_s)),
+            ("queue_s", Json::num(queue_s)),
+            ("steps", Json::num(s.per_step_s.len() as f64)),
+            ("computed_units", Json::num(s.computed_units as f64)),
+            ("reused_units", Json::num(s.reused_units as f64)),
+            ("reuse_fraction", Json::num(s.reuse_fraction())),
+            ("cache_peak_bytes", Json::num(s.cache_peak_bytes as f64)),
+        ]))
+    })();
+
+    match run {
+        Ok(resp) => {
+            if let Some(w) = resp.get("wall_s").and_then(|v| v.as_f64()) {
+                telemetry.latencies_s.lock().unwrap().push(w);
+                telemetry.queue_s.lock().unwrap().push(queue_s);
+            }
+            resp
+        }
+        Err(e) => {
+            telemetry.errors.fetch_add(1, Ordering::Relaxed);
+            err_json(&format!("{e:#}"))
+        }
+    }
+}
+
+/// Blocking JSON-lines client for the server (used by examples and tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        let writer = stream.try_clone()?;
+        Ok(Self { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request object; wait for one response line.
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.writer, "{req}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(anyhow!("server closed connection"));
+        }
+        json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("ping"))]))?;
+        Ok(r.get("pong").and_then(|v| v.as_bool()).unwrap_or(false))
+    }
+}

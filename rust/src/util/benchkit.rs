@@ -1,0 +1,186 @@
+//! Benchmark harness (criterion substitute) + results writers.
+//!
+//! Each paper table/figure has a `[[bench]] harness = false` binary that
+//! uses this module to time workloads (warmup + measured iterations,
+//! mean/std/percentiles) and to emit the paper-shaped markdown table plus a
+//! CSV series under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+use super::stats;
+
+/// Timing result for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub samples_s: Vec<f64>,
+}
+
+impl Timing {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples_s)
+    }
+    pub fn std_s(&self) -> f64 {
+        stats::std(&self.samples_s)
+    }
+    pub fn p50_s(&self) -> f64 {
+        stats::percentile(&self.samples_s, 50.0)
+    }
+    pub fn p95_s(&self) -> f64 {
+        stats::percentile(&self.samples_s, 95.0)
+    }
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: mean {:.4}s ± {:.4}s (p50 {:.4}s, p95 {:.4}s, n={})",
+            self.name,
+            self.mean_s(),
+            self.std_s(),
+            self.p50_s(),
+            self.p95_s(),
+            self.samples_s.len()
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs.
+pub fn time_case<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing { name: name.to_string(), samples_s: samples }
+}
+
+/// Markdown table builder matching the paper's table shapes.
+#[derive(Debug, Default, Clone)]
+pub struct MdTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            s,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        s
+    }
+}
+
+/// A report file under results/: title, commentary, tables, csv series.
+pub struct Report {
+    slug: String,
+    md: String,
+    csvs: Vec<(String, String)>,
+}
+
+impl Report {
+    pub fn new(slug: &str, title: &str) -> Self {
+        Self { slug: slug.to_string(), md: format!("# {title}\n\n"), csvs: Vec::new() }
+    }
+
+    pub fn text(&mut self, t: &str) {
+        self.md.push_str(t);
+        self.md.push('\n');
+    }
+
+    pub fn table(&mut self, caption: &str, t: &MdTable) {
+        let _ = writeln!(self.md, "\n**{caption}**\n\n{}", t.to_markdown());
+    }
+
+    pub fn csv(&mut self, name: &str, t: &MdTable) {
+        self.csvs.push((name.to_string(), t.to_csv()));
+    }
+
+    /// Write results/<slug>.md (+ any csvs) and echo the report to stdout.
+    pub fn finish(self) -> std::io::Result<()> {
+        let dir = Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.md", self.slug)), &self.md)?;
+        for (name, csv) in &self.csvs {
+            std::fs::write(dir.join(format!("{}_{}.csv", self.slug, name)), csv)?;
+        }
+        println!("{}", self.md);
+        println!("[benchkit] wrote results/{}.md", self.slug);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_something() {
+        let t = time_case("t", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.samples_s.len(), 5);
+        assert!(t.mean_s() >= 0.0);
+        assert!(t.p95_s() >= t.p50_s());
+    }
+
+    #[test]
+    fn md_table_shape() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert!(md.contains("|---|---|"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = MdTable::new(&["a"]);
+        t.row(vec!["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+}

@@ -1,0 +1,236 @@
+//! Tiny declarative CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands; generates `--help` text from the declared options.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    program: String,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Self {
+            program: program.to_string(),
+            about,
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default.into()), is_flag: false });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = match &o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{left:28}{}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse a raw arg list. Returns Err(message) on bad input, and
+    /// Err(help text) when `--help` is present.
+    pub fn parse(mut self, args: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?
+                    .clone();
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    self.flags.insert(key, true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    self.values.insert(key, v);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // defaults + required check
+        for o in &self.opts {
+            if o.is_flag {
+                self.flags.entry(o.name.to_string()).or_insert(false);
+            } else if !self.values.contains_key(o.name) {
+                match &o.default {
+                    Some(d) => {
+                        self.values.insert(o.name.to_string(), d.clone());
+                    }
+                    None => return Err(format!("missing required --{}", o.name)),
+                }
+            }
+        }
+        Ok(Parsed { values: self.values, flags: self.flags, positional: self.positional })
+    }
+}
+
+/// Parse result with typed getters.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected integer, got '{}'", self.get(name)))
+    }
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected integer, got '{}'", self.get(name)))
+    }
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected number, got '{}'", self.get(name)))
+    }
+    /// Comma-separated list.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("model", "opensora-sim", "model preset")
+            .opt("steps", "30", "steps")
+            .flag("verbose", "chatty")
+            .req("out", "output path")
+    }
+
+    #[test]
+    fn parses_defaults_and_required() {
+        let p = cli().parse(&argv(&["--out", "x.md"])).unwrap();
+        assert_eq!(p.get("model"), "opensora-sim");
+        assert_eq!(p.get_usize("steps").unwrap(), 30);
+        assert!(!p.get_flag("verbose"));
+        assert_eq!(p.get("out"), "x.md");
+    }
+
+    #[test]
+    fn parses_equals_and_flags() {
+        let p = cli()
+            .parse(&argv(&["--out=o", "--steps=50", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(p.get_usize("steps").unwrap(), 50);
+        assert!(p.get_flag("verbose"));
+        assert_eq!(p.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&argv(&["--out", "o", "--nope"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(h.contains("--model"));
+        assert!(h.contains("default: opensora-sim"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let p = cli().parse(&argv(&["--out", "a,b,c"])).unwrap();
+        assert_eq!(p.get_list("out"), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,21 @@
+//! In-tree substrates (crates.io is unreachable in this environment).
+//!
+//! | module | replaces |
+//! |---|---|
+//! | [`json`] | serde_json |
+//! | [`cli`] | clap |
+//! | [`prng`] | rand |
+//! | [`npy`] | ndarray-npy |
+//! | [`stats`] | statrs bits used by metrics/benches |
+//! | [`threadpool`] | rayon/tokio worker pools |
+//! | [`benchkit`] | criterion |
+//! | [`proptest`] | proptest |
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod npy;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod threadpool;

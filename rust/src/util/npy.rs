@@ -1,0 +1,173 @@
+//! NumPy `.npy` (format v1.0/v2.0) reader for the exported model weights.
+//!
+//! aot.py dumps every parameter with `np.save` (little-endian f32, C order);
+//! this module parses the header dict and returns shape + data. Only the
+//! dtypes the exporter produces are supported — anything else is a hard
+//! error rather than a silent misread.
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// A host-side f32 tensor loaded from a .npy file.
+#[derive(Debug, Clone)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NpyArray {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parse the Python-literal header dict, e.g.
+/// `{'descr': '<f4', 'fortran_order': False, 'shape': (96, 576), }`.
+fn parse_header(h: &str) -> Result<(String, bool, Vec<usize>)> {
+    let descr = extract_str_field(h, "descr").context("npy header: descr")?;
+    let fortran = h
+        .split("'fortran_order'")
+        .nth(1)
+        .map(|rest| rest.trim_start_matches([':', ' ']).starts_with("True"))
+        .context("npy header: fortran_order")?;
+    let shape_src = h
+        .split("'shape'")
+        .nth(1)
+        .and_then(|rest| {
+            let open = rest.find('(')?;
+            let close = rest[open..].find(')')? + open;
+            Some(&rest[open + 1..close])
+        })
+        .context("npy header: shape")?;
+    let mut shape = Vec::new();
+    for part in shape_src.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue; // trailing comma of 1-tuples / scalar ()
+        }
+        shape.push(part.parse::<usize>().context("npy header: shape dim")?);
+    }
+    Ok((descr, fortran, shape))
+}
+
+fn extract_str_field(h: &str, key: &str) -> Option<String> {
+    let rest = h.split(&format!("'{key}'")).nth(1)?;
+    let rest = rest.trim_start_matches([':', ' ']);
+    let rest = rest.strip_prefix('\'')?;
+    Some(rest[..rest.find('\'')?].to_string())
+}
+
+/// Load a .npy file containing little-endian f32 (or f8/i8-free) data.
+pub fn load(path: &Path) -> Result<NpyArray> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).context("npy magic")?;
+    if &magic[..6] != b"\x93NUMPY" {
+        bail!("{}: not a .npy file", path.display());
+    }
+    let major = magic[6];
+    let header_len = match major {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => bail!("{}: unsupported npy version {v}", path.display()),
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header).context("npy header utf-8")?;
+    let (descr, fortran, shape) = parse_header(&header)?;
+    if fortran {
+        bail!("{}: fortran_order not supported", path.display());
+    }
+    if descr != "<f4" {
+        bail!("{}: dtype {descr} unsupported (expected <f4)", path.display());
+    }
+    let count: usize = shape.iter().product();
+    let mut raw = vec![0u8; count * 4];
+    f.read_exact(&mut raw)
+        .with_context(|| format!("{}: payload", path.display()))?;
+    let data = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(NpyArray { shape, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_npy(path: &Path, shape: &[usize], data: &[f32]) {
+        // Emit exactly what np.save v1.0 produces.
+        let shape_str = match shape.len() {
+            0 => "()".to_string(),
+            1 => format!("({},)", shape[0]),
+            _ => format!(
+                "({})",
+                shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+            ),
+        };
+        let mut header = format!(
+            "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+        );
+        let unpadded = 10 + header.len() + 1;
+        let pad = (64 - unpadded % 64) % 64;
+        header.push_str(&" ".repeat(pad));
+        header.push('\n');
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"\x93NUMPY\x01\x00").unwrap();
+        f.write_all(&(header.len() as u16).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        for v in data {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn roundtrip_matrix() {
+        let dir = std::env::temp_dir().join("foresight_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.npy");
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        write_npy(&p, &[3, 4], &data);
+        let arr = load(&p).unwrap();
+        assert_eq!(arr.shape, vec![3, 4]);
+        assert_eq!(arr.data, data);
+    }
+
+    #[test]
+    fn roundtrip_vector_and_scalar() {
+        let dir = std::env::temp_dir().join("foresight_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("v.npy");
+        write_npy(&p, &[5], &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let arr = load(&p).unwrap();
+        assert_eq!(arr.shape, vec![5]);
+        assert_eq!(arr.element_count(), 5);
+
+        let p2 = dir.join("s.npy");
+        write_npy(&p2, &[], &[42.0]);
+        let arr = load(&p2).unwrap();
+        assert!(arr.shape.is_empty());
+        assert_eq!(arr.data, vec![42.0]);
+    }
+
+    #[test]
+    fn rejects_non_npy() {
+        let dir = std::env::temp_dir().join("foresight_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.npy");
+        std::fs::write(&p, b"not numpy at all").unwrap();
+        assert!(load(&p).is_err());
+    }
+}

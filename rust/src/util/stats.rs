@@ -1,0 +1,227 @@
+//! Statistics helpers shared by metrics, benches and telemetry.
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample standard deviation (n-1); 0 for n < 2.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    let mut w = Welford::new();
+    for &x in xs {
+        w.push(x);
+    }
+    w.std()
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Mean and (mean-of-xs, std-of-xs) formatted like the paper's
+/// "12.65 (± 0.06)" latency cells.
+pub fn fmt_mean_pm_std(xs: &[f64]) -> String {
+    format!("{:.2} (± {:.2})", mean(xs), std(xs))
+}
+
+/// Pearson correlation of two equal-length series.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 0.0;
+    }
+    let ma = mean(a);
+    let mb = mean(b);
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for i in 0..a.len() {
+        let xa = a[i] - ma;
+        let xb = b[i] - mb;
+        num += xa * xb;
+        da += xa * xa;
+        db += xb * xb;
+    }
+    let _ = n;
+    if da == 0.0 || db == 0.0 {
+        0.0
+    } else {
+        num / (da.sqrt() * db.sqrt())
+    }
+}
+
+// --- dense vector helpers used on the hot path -----------------------------
+
+/// Mean squared error between two equal-length f32 slices.
+///
+/// Chunked accumulation in f64 keeps the result stable and lets LLVM
+/// autovectorise the inner loop (hot path: the Foresight δ update, Eq. 6).
+pub fn mse_f32(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    const CHUNK: usize = 4096;
+    for (ca, cb) in a.chunks(CHUNK).zip(b.chunks(CHUNK)) {
+        let mut s = 0.0f32;
+        for i in 0..ca.len() {
+            let d = ca[i] - cb[i];
+            s += d * d;
+        }
+        acc += s as f64;
+    }
+    acc / a.len() as f64
+}
+
+/// Cosine similarity of two equal-length f32 slices (0 when either is 0).
+pub fn cosine_f32(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for i in 0..a.len() {
+        dot += (a[i] as f64) * (b[i] as f64);
+        na += (a[i] as f64).powi(2);
+        nb += (b[i] as f64).powi(2);
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a: Vec<f32> = (0..10_000).map(|i| (i as f32).sin()).collect();
+        assert_eq!(mse_f32(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn mse_known_value() {
+        let a = [0.0f32, 0.0, 0.0, 0.0];
+        let b = [1.0f32, 1.0, 1.0, 1.0];
+        assert!((mse_f32(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [2.0f32, 0.0, 0.0, 0.0];
+        assert!((mse_f32(&a, &c) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_cases() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!(cosine_f32(&a, &a) > 0.999_999);
+        assert!(cosine_f32(&a, &b).abs() < 1e-12);
+        let c = [-1.0f32, 0.0];
+        assert!((cosine_f32(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_mean_pm_std_shape() {
+        assert_eq!(fmt_mean_pm_std(&[1.0, 1.0, 1.0]), "1.00 (± 0.00)");
+    }
+}

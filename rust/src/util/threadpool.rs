@@ -1,0 +1,170 @@
+//! Fixed-size worker thread pool (tokio/rayon substitute).
+//!
+//! Used by the serving layer's worker pool and by benches that fan out
+//! independent generations. Jobs are boxed closures delivered over an mpsc
+//! channel guarded by a mutex (multi-consumer); `scope`-style joining is
+//! provided by [`ThreadPool::run_all`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads consuming jobs from a shared queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<(Mutex<usize>, Condvar)>,
+    submitted: AtomicUsize,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let inf = Arc::clone(&in_flight);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("foresight-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*inf;
+                                let mut cnt = lock.lock().unwrap();
+                                *cnt -= 1;
+                                cv.notify_all();
+                            }
+                            Err(_) => return, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self { tx: Some(tx), workers, in_flight, submitted: AtomicUsize::new(0) }
+    }
+
+    /// Submit a job; returns immediately.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.in_flight;
+            *lock.lock().unwrap() += 1;
+        }
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.in_flight;
+        let mut cnt = lock.lock().unwrap();
+        while *cnt > 0 {
+            cnt = cv.wait(cnt).unwrap();
+        }
+    }
+
+    /// Total jobs ever submitted (telemetry).
+    pub fn submitted(&self) -> usize {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Run a batch of closures to completion, returning results in order.
+    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let slots: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for (i, job) in jobs.into_iter().enumerate() {
+            let slots = Arc::clone(&slots);
+            self.submit(move || {
+                let r = job();
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(slots)
+            .unwrap_or_else(|_| panic!("slots still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("job did not run"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel -> workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.submitted(), 100);
+    }
+
+    #[test]
+    fn run_all_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let jobs: Vec<_> = (0..20).map(|i| move || i * i).collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(1);
+        pool.wait_idle(); // must not hang
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,178 @@
+//! Engine integration: full generations over real artifacts under every
+//! policy; checks determinism, reuse accounting, quality coupling and the
+//! paper's qualitative orderings at small scale.
+
+use std::sync::Arc;
+
+use foresight::config::Manifest;
+use foresight::engine::{Engine, Request};
+use foresight::model::LoadedModel;
+use foresight::policy::{self, build_policy};
+use foresight::runtime::Runtime;
+use foresight::util::stats::mse_f32;
+
+fn engine(model: &str, bucket: &str) -> Option<Engine> {
+    let root = Manifest::default_root();
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return None;
+    }
+    let manifest = Manifest::load(&root).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let m = Arc::new(LoadedModel::load(rt, &manifest, model, bucket).unwrap());
+    Some(Engine::new(m, manifest.schedule))
+}
+
+fn run(eng: &Engine, spec: &str, prompt: &str, seed: u64) -> foresight::engine::RunResult {
+    let info = &eng.model().info;
+    let mut pol = build_policy(spec, info, info.steps).unwrap();
+    eng.generate(&Request::new(prompt, seed), pol.as_mut(), None)
+        .unwrap()
+}
+
+#[test]
+fn baseline_generation_is_deterministic_and_finite() {
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let a = run(&eng, "none", "a calm lake at dawn", 7);
+    let b = run(&eng, "none", "a calm lake at dawn", 7);
+    assert_eq!(a.latents.data, b.latents.data, "same seed+prompt must be bitwise equal");
+    assert!(a.latents.data.iter().all(|v| v.is_finite()));
+    assert_eq!(a.stats.reused_units, 0);
+    assert_eq!(a.stats.cache_peak_bytes, 0);
+    // 30 steps × 2 branches × 6 layers × 2 kinds = 720 computed blocks
+    assert_eq!(a.stats.computed_units, 720);
+}
+
+#[test]
+fn different_seeds_or_prompts_change_output() {
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let a = run(&eng, "none", "a calm lake at dawn", 7);
+    let b = run(&eng, "none", "a calm lake at dawn", 8);
+    let c = run(&eng, "none", "a storm crashing over cliffs", 7);
+    assert_ne!(a.latents.data, b.latents.data);
+    assert_ne!(a.latents.data, c.latents.data);
+}
+
+#[test]
+fn foresight_reuses_and_stays_close_to_baseline() {
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let base = run(&eng, "none", "a calm lake at dawn", 42);
+    let fs = run(&eng, "foresight:n=1,r=2,gamma=0.5", "a calm lake at dawn", 42);
+
+    assert!(fs.stats.reused_units > 0, "foresight must reuse after warmup");
+    assert!(fs.stats.computed_units < base.stats.computed_units);
+    assert_eq!(fs.stats.fallback_units, 0, "warmup fills the cache before reuse");
+
+    // quality coupling: reused generation stays near the baseline output
+    let mse = mse_f32(&base.latents.data, &fs.latents.data);
+    let var = {
+        let m: f32 = base.latents.data.iter().sum::<f32>() / base.latents.data.len() as f32;
+        base.latents.data.iter().map(|v| (v - m).powi(2)).sum::<f32>()
+            / base.latents.data.len() as f32
+    };
+    assert!(
+        mse < var as f64,
+        "foresight output diverged beyond signal variance: mse={mse}, var={var}"
+    );
+
+    // thresholds (λ) exist for every (layer, kind, branch)
+    let th = fs.thresholds.expect("foresight exposes thresholds");
+    assert_eq!(th.len(), 6 * 2 * 2);
+    assert!(th.values().all(|&l| l.is_finite() && l >= 0.0));
+}
+
+#[test]
+fn gamma_strictness_orders_reuse_and_quality() {
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let base = run(&eng, "none", "a quiet library hall", 5);
+    // absurdly strict threshold → reuse almost never fires outside warmup
+    let strict = run(&eng, "foresight:gamma=0.0000000001", "a quiet library hall", 5);
+    let lax = run(&eng, "foresight:gamma=2.0", "a quiet library hall", 5);
+    assert!(strict.stats.reused_units <= lax.stats.reused_units);
+    let mse_strict = mse_f32(&base.latents.data, &strict.latents.data);
+    let mse_lax = mse_f32(&base.latents.data, &lax.latents.data);
+    assert!(
+        mse_strict <= mse_lax * 1.05 + 1e-9,
+        "stricter gamma must not be farther from baseline: {mse_strict} vs {mse_lax}"
+    );
+}
+
+#[test]
+fn all_policies_run_and_account_consistently() {
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let info = eng.model().info.clone();
+    let sites_coarse = info.layers * 2;
+    let sites_fine = info.layers * 2 * 3;
+    for spec in ["none", "static", "foresight", "delta-dit", "tgate", "pab"] {
+        let r = run(&eng, spec, "a red vintage car on a mountain road", 9);
+        assert!(r.latents.data.iter().all(|v| v.is_finite()), "{spec}: non-finite");
+        let total = r.stats.computed_units + r.stats.reused_units;
+        let pol = build_policy(spec, &info, info.steps).unwrap();
+        let per_step = match pol.granularity() {
+            policy::Granularity::Coarse => sites_coarse,
+            policy::Granularity::Fine => sites_fine,
+        };
+        assert_eq!(
+            total as usize,
+            info.steps * 2 * per_step,
+            "{spec}: unit accounting mismatch"
+        );
+        // reuse map covers branch 0
+        assert_eq!(r.reuse_map.len(), info.steps, "{spec}");
+        assert!(r.reuse_map.iter().all(|row| row.len() == per_step), "{spec}");
+    }
+}
+
+#[test]
+fn reuse_speeds_up_wall_clock() {
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    // warm both paths once (compile caches, allocators)
+    run(&eng, "none", "warmup", 1);
+    let base = run(&eng, "none", "a bustling night market at dusk", 3);
+    let fast = run(&eng, "static:n=2,r=3", "a bustling night market at dusk", 3);
+    assert!(
+        fast.stats.wall_s < base.stats.wall_s,
+        "static reuse should beat baseline: {} vs {}",
+        fast.stats.wall_s,
+        base.stats.wall_s
+    );
+}
+
+#[test]
+fn coarse_cache_is_2_entries_per_layer_fine_caches_more() {
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let fs = run(&eng, "foresight", "memory accounting prompt", 11);
+    assert!((fs.stats.cache_entries_per_layer - 2.0).abs() < 1e-9);
+    let pab = run(&eng, "pab", "memory accounting prompt", 11);
+    assert!(
+        pab.stats.cache_entries_per_layer > fs.stats.cache_entries_per_layer,
+        "fine-grained PAB must cache more entries per layer"
+    );
+}
+
+#[test]
+fn per_step_latency_drops_on_reuse_steps() {
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let r = run(&eng, "static:n=1,r=2", "latency shape prompt", 13);
+    // odd steps reuse everything → must be faster than even (compute) steps
+    let compute_avg: f64 = r.stats.per_step_s.iter().step_by(2).sum::<f64>()
+        / r.stats.per_step_s.iter().step_by(2).count() as f64;
+    let reuse_avg: f64 = r.stats.per_step_s.iter().skip(1).step_by(2).sum::<f64>()
+        / r.stats.per_step_s.iter().skip(1).step_by(2).count() as f64;
+    assert!(
+        reuse_avg < compute_avg,
+        "reuse steps should be cheaper: {reuse_avg} vs {compute_avg}"
+    );
+}
+
+#[test]
+fn step_override_is_respected() {
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let info = eng.model().info.clone();
+    let mut pol = build_policy("none", &info, 10).unwrap();
+    let mut req = Request::new("short run", 2);
+    req.steps = Some(10);
+    let r = eng.generate(&req, pol.as_mut(), None).unwrap();
+    assert_eq!(r.stats.per_step_s.len(), 10);
+    assert_eq!(r.stats.computed_units, 10 * 2 * 12);
+}

@@ -1,0 +1,329 @@
+//! Property-based tests on coordinator invariants (DESIGN.md §7), driven
+//! through thousands of synthetic decision trajectories with the in-tree
+//! proptest-lite harness — no PJRT runtime needed.
+
+use foresight::cache::Unit;
+use foresight::config::{SamplerKind, ScheduleConfig};
+use foresight::model::{BlockKind, SubUnit};
+use foresight::policy::{
+    build_policy, Action, Foresight, Granularity, Pab, ReusePolicy, Site, StaticReuse,
+};
+use foresight::sampler;
+use foresight::util::json::{self, Json};
+use foresight::util::proptest::{prop_assert, proptest_cases, Gen};
+use foresight::workload;
+
+fn coarse_site(layer: usize, kind: BlockKind, branch: usize) -> Site {
+    Site { layer, kind, unit: Unit::Block, branch }
+}
+
+/// Drive a coarse policy through a synthetic trajectory of per-site MSEs,
+/// returning the decision sequence. `mse_fn(step, layer)` defines feature
+/// dynamics.
+fn drive_coarse(
+    policy: &mut dyn ReusePolicy,
+    layers: usize,
+    steps: usize,
+    mse_fn: impl Fn(usize, usize) -> f64,
+) -> Vec<Vec<bool>> {
+    policy.begin_request(layers, steps);
+    let mut out = Vec::new();
+    for step in 0..steps {
+        let mut row = Vec::new();
+        for layer in 0..layers {
+            for kind in BlockKind::ALL {
+                let site = coarse_site(layer, kind, 0);
+                let a = policy.action(step, site);
+                row.push(a.is_reuse());
+                if let Action::Compute { measure: true, .. } = a {
+                    policy.observe_mse(step, site, mse_fn(step, layer));
+                }
+            }
+        }
+        out.push(row);
+    }
+    out
+}
+
+#[test]
+fn prop_policies_are_deterministic() {
+    proptest_cases(60, |g: &mut Gen| {
+        let layers = g.usize_in(1..=8);
+        let steps = g.usize_in(8..=60);
+        let spec = *g.pick(&["static", "foresight", "delta-dit", "tgate", "pab"]);
+        let seed_mse: Vec<f64> = (0..steps * layers)
+            .map(|i| g.f64_in(0.0, 1.0) + i as f64 * 1e-9)
+            .collect();
+        let info = fake_model(layers);
+        let mse = |step: usize, layer: usize| seed_mse[step * layers + layer];
+
+        let mut p1 = build_policy(spec, &info, steps).unwrap();
+        let mut p2 = build_policy(spec, &info, steps).unwrap();
+        let (d1, d2);
+        if p1.granularity() == Granularity::Coarse {
+            d1 = drive_coarse(p1.as_mut(), layers, steps, mse);
+            d2 = drive_coarse(p2.as_mut(), layers, steps, mse);
+        } else {
+            d1 = drive_fine(p1.as_mut(), layers, steps);
+            d2 = drive_fine(p2.as_mut(), layers, steps);
+        }
+        prop_assert(d1 == d2, format!("{spec}: nondeterministic decisions"));
+    });
+}
+
+fn drive_fine(policy: &mut dyn ReusePolicy, layers: usize, steps: usize) -> Vec<Vec<bool>> {
+    policy.begin_request(layers, steps);
+    let mut out = Vec::new();
+    for step in 0..steps {
+        let mut row = Vec::new();
+        for layer in 0..layers {
+            for kind in BlockKind::ALL {
+                for sub in SubUnit::ALL {
+                    let site = Site { layer, kind, unit: Unit::Sub(sub), branch: 0 };
+                    row.push(policy.action(step, site).is_reuse());
+                }
+            }
+        }
+        out.push(row);
+    }
+    out
+}
+
+fn fake_model(layers: usize) -> foresight::config::ModelInfo {
+    foresight::config::ModelInfo {
+        name: "prop".into(),
+        layers,
+        d_model: 32,
+        n_heads: 4,
+        d_text: 16,
+        text_len: 8,
+        latent_channels: 8,
+        mlp_ratio: 4,
+        t_freq_dim: 64,
+        sampler: SamplerKind::Rflow,
+        steps: 30,
+        cfg_scale: 7.5,
+        weights_dir: "w".into(),
+        piece_params: Default::default(),
+        buckets: Default::default(),
+    }
+}
+
+#[test]
+fn prop_foresight_never_reuses_in_warmup_and_refresh() {
+    proptest_cases(80, |g: &mut Gen| {
+        let layers = g.usize_in(1..=6);
+        let steps = g.usize_in(10..=80);
+        let r = g.usize_in(2..=5);
+        let gamma = g.f64_in(0.1, 2.0);
+        let wf = g.f64_in(0.05, 0.4);
+        let mut p = Foresight::new(r - 1, r, gamma, wf);
+        let decisions = drive_coarse(&mut p, layers, steps, |s, l| {
+            1.0 / (1.0 + s as f64 + l as f64)
+        });
+        let w = p.warmup_steps();
+        for (step, row) in decisions.iter().enumerate() {
+            if step < w {
+                prop_assert(
+                    row.iter().all(|&x| !x),
+                    format!("reuse during warmup step {step} (W={w})"),
+                );
+            } else if (step - w) % r == 0 {
+                prop_assert(
+                    row.iter().all(|&x| !x),
+                    format!("reuse on refresh step {step}"),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_foresight_reuse_monotone_in_gamma() {
+    proptest_cases(40, |g: &mut Gen| {
+        let layers = g.usize_in(1..=5);
+        let steps = g.usize_in(15..=60);
+        let g1 = g.f64_in(0.05, 1.0);
+        let g2 = g1 + g.f64_in(0.0, 1.0);
+        let traj: Vec<f64> = (0..steps).map(|s| 1.0 / (1.0 + s as f64)).collect();
+        let count = |gamma: f64| {
+            let mut p = Foresight::new(1, 2, gamma, 0.15);
+            drive_coarse(&mut p, layers, steps, |s, _| traj[s])
+                .iter()
+                .flatten()
+                .filter(|&&x| x)
+                .count()
+        };
+        let (c1, c2) = (count(g1), count(g2));
+        prop_assert(
+            c1 <= c2,
+            format!("reuse count not monotone in gamma: g={g1:.3}→{c1}, g={g2:.3}→{c2}"),
+        );
+    });
+}
+
+#[test]
+fn prop_static_reuse_pattern_exact() {
+    proptest_cases(50, |g: &mut Gen| {
+        let layers = g.usize_in(1..=8);
+        let steps = g.usize_in(4..=60);
+        let r = g.usize_in(1..=6);
+        let mut p = StaticReuse::new(r.saturating_sub(1), r);
+        let decisions = drive_coarse(&mut p, layers, steps, |_, _| 0.0);
+        for (step, row) in decisions.iter().enumerate() {
+            let expect = step % r != 0;
+            prop_assert(
+                row.iter().all(|&x| x == expect),
+                format!("static r={r} wrong at step {step}"),
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_pab_hierarchy_holds() {
+    proptest_cases(40, |g: &mut Gen| {
+        let layers = g.usize_in(2..=8);
+        let steps = g.usize_in(20..=80);
+        let alpha = g.usize_in(2..=3);
+        let beta = alpha + g.usize_in(1..=3);
+        let gamma_c = beta + g.usize_in(1..=3);
+        let mut p = Pab::new(alpha, beta, gamma_c, 0.1, 0.6, vec![0], 2, steps);
+        p.begin_request(layers, steps);
+        let mut counts = [0usize; 3]; // spatial-attn, temporal-attn, cross
+        for step in 0..steps {
+            for layer in 0..layers {
+                for (i, (kind, sub)) in [
+                    (BlockKind::Spatial, SubUnit::Attn),
+                    (BlockKind::Temporal, SubUnit::Attn),
+                    (BlockKind::Spatial, SubUnit::Cross),
+                ]
+                .iter()
+                .enumerate()
+                {
+                    let site = Site { layer, kind: *kind, unit: Unit::Sub(*sub), branch: 0 };
+                    if p.action(step, site).is_reuse() {
+                        counts[i] += 1;
+                    }
+                }
+            }
+        }
+        prop_assert(
+            counts[2] >= counts[1] && counts[1] >= counts[0],
+            format!("pyramid violated: spatial {} temporal {} cross {}", counts[0], counts[1], counts[2]),
+        );
+    });
+}
+
+#[test]
+fn prop_samplers_stay_finite_and_ordered() {
+    proptest_cases(60, |g: &mut Gen| {
+        let steps = g.usize_in(2..=120);
+        let sched = ScheduleConfig { train_timesteps: 1000, beta_start: 1e-4, beta_end: 2e-2 };
+        for kind in [SamplerKind::Ddim, SamplerKind::Rflow] {
+            let s = sampler::build(kind, &sched, steps);
+            prop_assert(s.n_steps() == steps, "step count");
+            for i in 1..steps {
+                prop_assert(
+                    s.t_value(i) < s.t_value(i - 1),
+                    format!("{kind:?}: t_value not strictly decreasing at {i}"),
+                );
+            }
+            let n = g.usize_in(4..=64);
+            let mut x = g.vec_normal(n);
+            let out = g.vec_normal(n);
+            for i in 0..steps {
+                s.step(&mut x, &out, i);
+            }
+            prop_assert(
+                x.iter().all(|v| v.is_finite()),
+                format!("{kind:?}: non-finite latent"),
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        let choice = if depth == 0 { g.usize_in(0..=3) } else { g.usize_in(0..=5) };
+        match choice {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = g.usize_in(0..=8);
+                Json::Str((0..n).map(|i| ((b'a' + (i as u8 % 26)) as char)).collect())
+            }
+            4 => {
+                let n = g.usize_in(0..=4);
+                Json::Arr((0..n).map(|_| random_json(g, depth - 1)).collect())
+            }
+            _ => {
+                let n = g.usize_in(0..=4);
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    proptest_cases(200, |g: &mut Gen| {
+        let v = random_json(g, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).expect("roundtrip parse");
+        prop_assert(back == v, format!("roundtrip mismatch for {text}"));
+    });
+}
+
+#[test]
+fn prop_prompt_embedding_shape_and_determinism() {
+    proptest_cases(60, |g: &mut Gen| {
+        let n_words = g.usize_in(0..=40);
+        let words: Vec<String> = (0..n_words)
+            .map(|_| {
+                let len = g.usize_in(1..=8);
+                (0..len)
+                    .map(|_| (b'a' + (g.usize_in(0..=25) as u8)) as char)
+                    .collect()
+            })
+            .collect();
+        let prompt = words.join(" ");
+        let d = *g.pick(&[16usize, 32, 64]);
+        let s = *g.pick(&[4usize, 8, 16]);
+        let e1 = workload::embed_prompt(&prompt, d, s);
+        let e2 = workload::embed_prompt(&prompt, d, s);
+        prop_assert(e1.dims == vec![s, d], "dims");
+        prop_assert(e1.data == e2.data, "determinism");
+        prop_assert(e1.data.iter().all(|v| v.is_finite()), "finite");
+        let c = workload::motion_complexity(&prompt);
+        prop_assert((0.0..=1.0).contains(&c), format!("complexity {c}"));
+    });
+}
+
+#[test]
+fn prop_foresight_lambda_matches_eq5_weighting() {
+    // With constant warmup MSE m, Eq. 5 gives λ = m * (1 + 0.1 + 0.01).
+    proptest_cases(40, |g: &mut Gen| {
+        let m = g.f64_in(0.01, 5.0);
+        let steps = g.usize_in(20..=60);
+        let mut p = Foresight::new(1, 2, 0.5, 0.15);
+        p.begin_request(1, steps);
+        let w = p.warmup_steps();
+        for step in 1..w {
+            p.observe_mse(step, coarse_site(0, BlockKind::Spatial, 0), m);
+        }
+        let lam = p.thresholds().unwrap()[&(0, BlockKind::Spatial, 0)];
+        // Eq. 5 weights the last three warmup MSEs 10^-2, 10^-1, 10^0; MSEs
+        // only exist from step 1, so a minimal W=3 warmup has two terms.
+        let expect: f64 = (1..w)
+            .filter(|s| s + 3 >= w)
+            .map(|s| m * 10f64.powi(-((w - 1 - s) as i32)))
+            .sum();
+        prop_assert(
+            (lam - expect).abs() < 1e-9 * (1.0 + expect),
+            format!("λ={lam} expected {expect}"),
+        );
+    });
+}

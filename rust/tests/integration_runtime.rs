@@ -1,0 +1,212 @@
+//! Runtime integration: load real artifacts, execute pieces, cross-check
+//! numerics against the Python oracle fixtures where available.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise, loudly).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use foresight::config::Manifest;
+use foresight::model::{BlockKind, LoadedModel};
+use foresight::runtime::{HostTensor, Runtime};
+use foresight::util::prng::Rng;
+
+fn artifacts_root() -> Option<std::path::PathBuf> {
+    let root = Manifest::default_root();
+    if root.join("manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("SKIP: no artifacts at {} — run `make artifacts`", root.display());
+        None
+    }
+}
+
+fn load_model(rt: &Arc<Runtime>, model: &str, bucket: &str) -> Option<LoadedModel> {
+    let root = artifacts_root()?;
+    let manifest = Manifest::load(&root).expect("manifest parses");
+    Some(LoadedModel::load(rt.clone(), &manifest, model, bucket).expect("model loads"))
+}
+
+#[test]
+fn manifest_loads_and_lists_models() {
+    let Some(root) = artifacts_root() else { return };
+    let m = Manifest::load(&root).unwrap();
+    for name in ["opensora-sim", "latte-sim", "cogvideox-sim", "analysis"] {
+        assert!(m.models.contains_key(name), "missing model {name}");
+    }
+    let os = m.model("opensora-sim").unwrap();
+    assert_eq!(os.sampler.name(), "rflow");
+    assert!(os.buckets.contains_key("240p-2s"));
+}
+
+#[test]
+fn full_piece_pipeline_executes_with_correct_shapes() {
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let Some(m) = load_model(&rt, "opensora-sim", "240p-2s") else { return };
+    let [f, p, d] = m.state_dims();
+    let [_, _, c_lat] = m.latent_dims();
+
+    let mut rng = Rng::new(42);
+    let x = HostTensor::new(vec![f, p, c_lat], rng.normal_vec(f * p * c_lat));
+    let raw = HostTensor::new(
+        vec![m.info.text_len, m.info.d_text],
+        rng.normal_vec(m.info.text_len * m.info.d_text),
+    );
+
+    let c = m.t_embed(500.0).unwrap();
+    assert_eq!(c.dims(), &[d]);
+
+    let text = m.text_proj(&raw).unwrap();
+    assert_eq!(text.dims(), &[m.info.text_len, d]);
+
+    let tk = m.text_k(0, BlockKind::Spatial, &text).unwrap();
+    let tv = m.text_v(0, BlockKind::Spatial, &text).unwrap();
+    assert_eq!(tk.dims(), &[m.info.text_len, d]);
+
+    let xd = rt.upload_tensor(&x).unwrap();
+    let mut h = m.embed(&xd).unwrap();
+    assert_eq!(h.dims(), &[f, p, d]);
+
+    for layer in 0..m.info.layers {
+        for kind in BlockKind::ALL {
+            let tk = m.text_k(layer, kind, &text).unwrap();
+            let tv = m.text_v(layer, kind, &text).unwrap();
+            h = m.block_full(layer, kind, &h, &c, &tk, &tv).unwrap();
+        }
+    }
+    let eps = m.final_proj(&h, &c).unwrap();
+    assert_eq!(eps.dims(), &[f, p, c_lat]);
+
+    let host = rt.download(&eps).unwrap();
+    assert!(host.data.iter().all(|v| v.is_finite()), "non-finite output");
+    let std = {
+        let mean: f32 = host.data.iter().sum::<f32>() / host.data.len() as f32;
+        (host.data.iter().map(|v| (v - mean).powi(2)).sum::<f32>()
+            / host.data.len() as f32)
+            .sqrt()
+    };
+    assert!(std > 0.05 && std < 100.0, "implausible output std {std}");
+    let _ = tv;
+}
+
+#[test]
+fn sub_blocks_compose_to_full_block() {
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let Some(m) = load_model(&rt, "opensora-sim", "240p-2s") else { return };
+    let [f, p, d] = m.state_dims();
+    let mut rng = Rng::new(7);
+    let h0 = rt
+        .upload(&rng.normal_vec(f * p * d), &[f, p, d])
+        .unwrap();
+    let c = m.t_embed(250.0).unwrap();
+    let raw = HostTensor::new(
+        vec![m.info.text_len, m.info.d_text],
+        rng.normal_vec(m.info.text_len * m.info.d_text),
+    );
+    let text = m.text_proj(&raw).unwrap();
+
+    for kind in BlockKind::ALL {
+        let tk = m.text_k(2, kind, &text).unwrap();
+        let tv = m.text_v(2, kind, &text).unwrap();
+        let full = m.block_full(2, kind, &h0, &c, &tk, &tv).unwrap();
+        let h1 = m.block_attn(2, kind, &h0, &c).unwrap();
+        let h2 = m.block_cross(2, kind, &h1, &tk, &tv).unwrap();
+        let h3 = m.block_mlp(2, kind, &h2, &c).unwrap();
+
+        let a = rt.download(&full).unwrap();
+        let b = rt.download(&h3).unwrap();
+        let max_diff = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_diff < 1e-4,
+            "{:?}: sub-block composition diverges from full block: {max_diff}",
+            kind
+        );
+    }
+}
+
+#[test]
+fn elementwise_add_sub_roundtrip() {
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let Some(m) = load_model(&rt, "opensora-sim", "240p-2s") else { return };
+    let [f, p, d] = m.state_dims();
+    let mut rng = Rng::new(3);
+    let av = rng.normal_vec(f * p * d);
+    let bv = rng.normal_vec(f * p * d);
+    let a = rt.upload(&av, &[f, p, d]).unwrap();
+    let b = rt.upload(&bv, &[f, p, d]).unwrap();
+    let sum = m.add(&a, &b).unwrap();
+    let back = m.sub(&sum, &b).unwrap();
+    let host = rt.download(&back).unwrap();
+    let max_diff = host
+        .data
+        .iter()
+        .zip(&av)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-5, "add/sub roundtrip error {max_diff}");
+}
+
+#[test]
+fn concurrent_block_execution_is_safe() {
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let Some(m) = load_model(&rt, "opensora-sim", "240p-2s") else { return };
+    let m = Arc::new(m);
+    let [f, p, d] = m.state_dims();
+
+    let mut handles = Vec::new();
+    for tid in 0..4u64 {
+        let m = Arc::clone(&m);
+        let rt = Arc::clone(&rt);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + tid);
+            let c = m.t_embed(100.0 + tid as f32).unwrap();
+            let raw = HostTensor::new(
+                vec![m.info.text_len, m.info.d_text],
+                rng.normal_vec(m.info.text_len * m.info.d_text),
+            );
+            let text = m.text_proj(&raw).unwrap();
+            let tk = m.text_k(0, BlockKind::Spatial, &text).unwrap();
+            let tv = m.text_v(0, BlockKind::Spatial, &text).unwrap();
+            let mut h = rt.upload(&rng.normal_vec(f * p * d), &[f, p, d]).unwrap();
+            for _ in 0..5 {
+                h = m.block_full(0, BlockKind::Spatial, &h, &c, &tk, &tv).unwrap();
+            }
+            let out = rt.download(&h).unwrap();
+            assert!(out.data.iter().all(|v| v.is_finite()));
+        }));
+    }
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+}
+
+#[test]
+fn deterministic_execution_same_inputs_same_outputs() {
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let Some(m) = load_model(&rt, "opensora-sim", "240p-2s") else { return };
+    let [f, p, d] = m.state_dims();
+    let mut rng = Rng::new(11);
+    let hv = rng.normal_vec(f * p * d);
+    let c = m.t_embed(42.0).unwrap();
+    let raw = HostTensor::new(
+        vec![m.info.text_len, m.info.d_text],
+        rng.normal_vec(m.info.text_len * m.info.d_text),
+    );
+    let text = m.text_proj(&raw).unwrap();
+    let tk = m.text_k(1, BlockKind::Temporal, &text).unwrap();
+    let tv = m.text_v(1, BlockKind::Temporal, &text).unwrap();
+
+    let run = || {
+        let h = rt.upload(&hv, &[f, p, d]).unwrap();
+        let out = m
+            .block_full(1, BlockKind::Temporal, &h, &c, &tk, &tv)
+            .unwrap();
+        rt.download(&out).unwrap().data
+    };
+    assert_eq!(run(), run(), "block execution must be deterministic");
+}

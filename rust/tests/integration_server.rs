@@ -1,0 +1,130 @@
+//! Server integration: protocol round-trips, concurrent clients, error
+//! handling, queue/latency telemetry.
+
+use std::sync::Arc;
+
+use foresight::config::Manifest;
+use foresight::runtime::Runtime;
+use foresight::server::{Client, EngineRegistry, Server, ServerConfig};
+use foresight::util::json::Json;
+
+fn start_server(workers: usize) -> Option<Server> {
+    let root = Manifest::default_root();
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return None;
+    }
+    let manifest = Manifest::load(&root).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let registry = Arc::new(
+        EngineRegistry::load(
+            rt,
+            &manifest,
+            &[("opensora-sim".to_string(), "240p-2s".to_string())],
+        )
+        .unwrap(),
+    );
+    Some(
+        Server::start(registry, ServerConfig { addr: "127.0.0.1:0".into(), workers })
+            .unwrap(),
+    )
+}
+
+fn gen_req(policy: &str, prompt: &str, seed: u64, steps: usize) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("model", Json::str("opensora-sim")),
+        ("bucket", Json::str("240p-2s")),
+        ("policy", Json::str(policy)),
+        ("prompt", Json::str(prompt)),
+        ("seed", Json::num(seed as f64)),
+        ("steps", Json::num(steps as f64)),
+    ])
+}
+
+#[test]
+fn ping_generate_stats_roundtrip() {
+    let Some(server) = start_server(1) else { return };
+    let mut c = Client::connect(&server.addr()).unwrap();
+    assert!(c.ping().unwrap());
+
+    let resp = c.call(&gen_req("foresight", "a calm lake", 1, 12)).unwrap();
+    assert_eq!(resp.get("status").unwrap().as_str().unwrap(), "ok", "{resp}");
+    assert_eq!(resp.get("steps").unwrap().as_usize().unwrap(), 12);
+    assert!(resp.get("wall_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(resp.get("reused_units").unwrap().as_f64().unwrap() > 0.0);
+
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("requests").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(stats.get("errors").unwrap().as_usize().unwrap(), 0);
+    assert!(stats.get("latency_mean_s").unwrap().as_f64().unwrap() > 0.0);
+
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let Some(server) = start_server(2) else { return };
+    let addr = server.addr();
+    let mut handles = Vec::new();
+    for cid in 0..3u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let resp = c
+                .call(&gen_req("static", &format!("prompt {cid}"), cid, 8))
+                .unwrap();
+            assert_eq!(resp.get("status").unwrap().as_str().unwrap(), "ok", "{resp}");
+            resp.get("wall_s").unwrap().as_f64().unwrap()
+        }));
+    }
+    for h in handles {
+        assert!(h.join().unwrap() > 0.0);
+    }
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("requests").unwrap().as_usize().unwrap(), 3);
+    server.shutdown();
+}
+
+#[test]
+fn errors_are_reported_not_fatal() {
+    let Some(server) = start_server(1) else { return };
+    let mut c = Client::connect(&server.addr()).unwrap();
+
+    // unknown op
+    let r = c.call(&Json::obj(vec![("op", Json::str("warp"))])).unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "error");
+
+    // unknown model
+    let mut bad = gen_req("foresight", "x", 0, 4);
+    if let Json::Obj(ref mut o) = bad {
+        o.insert("model".into(), Json::str("nope"));
+    }
+    let r3 = c.call(&bad).unwrap();
+    assert_eq!(r3.get("status").unwrap().as_str().unwrap(), "error");
+
+    // unknown policy
+    let r4 = c.call(&gen_req("warp-drive", "x", 0, 4)).unwrap();
+    assert_eq!(r4.get("status").unwrap().as_str().unwrap(), "error");
+
+    // server still alive and serving
+    let ok = c.call(&gen_req("none", "recovery check", 0, 4)).unwrap();
+    assert_eq!(ok.get("status").unwrap().as_str().unwrap(), "ok");
+    server.shutdown();
+}
+
+#[test]
+fn deterministic_across_connections() {
+    let Some(server) = start_server(2) else { return };
+    let addr = server.addr();
+    let run = || {
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c.call(&gen_req("foresight", "same prompt", 99, 10)).unwrap();
+        (
+            r.get("computed_units").unwrap().as_f64().unwrap(),
+            r.get("reused_units").unwrap().as_f64().unwrap(),
+        )
+    };
+    assert_eq!(run(), run(), "same request must make identical decisions");
+    server.shutdown();
+}
