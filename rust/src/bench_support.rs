@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::config::Manifest;
-use crate::engine::{Engine, Request, RunResult};
+use crate::engine::{Engine, HotPath, Request, RunResult};
 use crate::metrics::{self, ClipProxy, Decoder, FeatureNet, Frames};
 use crate::model::LoadedModel;
 use crate::policy::build_policy;
@@ -36,7 +36,9 @@ pub fn scaled(n: usize) -> usize {
 pub struct BenchCtx {
     pub manifest: Manifest,
     rt: Arc<Runtime>,
-    engines: BTreeMap<(String, String), Arc<Engine>>,
+    /// Engines keyed by (model, bucket, hot-path mode); the loaded model is
+    /// shared between modes of the same (model, bucket).
+    engines: BTreeMap<(String, String, String), Arc<Engine>>,
 }
 
 impl BenchCtx {
@@ -46,13 +48,34 @@ impl BenchCtx {
         Ok(Self { manifest, rt, engines: BTreeMap::new() })
     }
 
+    /// The shared PJRT runtime (its [`crate::runtime::TransferStats`] is
+    /// the ground truth for the fig16 transfer-volume assertions).
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
     pub fn engine(&mut self, model: &str, bucket: &str) -> Result<Arc<Engine>> {
-        let key = (model.to_string(), bucket.to_string());
+        self.engine_hot(model, bucket, HotPath::Device)
+    }
+
+    /// Engine pinned to a hot-path mode (the fig16 A/B comparison).
+    pub fn engine_hot(&mut self, model: &str, bucket: &str, hot: HotPath) -> Result<Arc<Engine>> {
+        let key = (model.to_string(), bucket.to_string(), format!("{hot:?}"));
         if let Some(e) = self.engines.get(&key) {
             return Ok(e.clone());
         }
-        let lm = Arc::new(LoadedModel::load(self.rt.clone(), &self.manifest, model, bucket)?);
-        let e = Arc::new(Engine::new(lm, self.manifest.schedule));
+        // Reuse an already-loaded model from the other mode if present so
+        // weights upload once per (model, bucket).
+        let lm = self
+            .engines
+            .iter()
+            .find(|((m, b, _), _)| m == model && b == bucket)
+            .map(|(_, e)| e.model().clone());
+        let lm = match lm {
+            Some(lm) => lm,
+            None => Arc::new(LoadedModel::load(self.rt.clone(), &self.manifest, model, bucket)?),
+        };
+        let e = Arc::new(Engine::with_hot_path(lm, self.manifest.schedule, hot));
         self.engines.insert(key, e.clone());
         Ok(e)
     }

@@ -2,11 +2,19 @@
 //!
 //! Stores DiT-block activations (or sublayer residual deltas for the
 //! fine-grained baselines) per CFG branch, with byte-exact memory
-//! accounting. Foresight's coarse strategy caches 2 entries per layer pair
-//! (spatial + temporal block outputs → the paper's `2LHWF`); PAB-style
-//! fine-grained caching stores up to 6 (3 sublayers × 2 blocks → `6LHWF`),
-//! which is how the paper's 3× memory-reduction claim is reproduced
-//! (asserted in tests and reported by the Table 1 bench).
+//! accounting. Entries are **device-resident only**: Foresight's Eq. 5/6
+//! drift measurement runs as a fused on-device `mse` reduction against the
+//! cached buffer, so the host mirrors the seed engine kept per measured
+//! site are gone (halving Foresight's cache footprint). Foresight's coarse
+//! strategy caches 2 entries per layer pair (spatial + temporal block
+//! outputs → the paper's `2LHWF`); PAB-style fine-grained caching stores up
+//! to 6 (3 sublayers × 2 blocks → `6LHWF`), which is how the paper's 3×
+//! memory-reduction claim is reproduced (asserted in tests and reported by
+//! the Table 1 bench).
+//!
+//! The engine keeps one `FeatureCache` per CFG branch so the two guidance
+//! branches can execute on concurrent threads without sharing mutable
+//! state; keys still carry the branch index for stable telemetry.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -41,11 +49,10 @@ pub struct CacheKey {
     pub unit: Unit,
 }
 
-/// One cached activation: device buffer (for zero-copy reuse) plus an
-/// optional host mirror (needed only when a policy measures MSE against it).
+/// One cached activation: a device buffer shared by reference for zero-copy
+/// reuse and for on-device drift measurement.
 pub struct CacheEntry {
     pub device: Arc<DeviceTensor>,
-    pub host: Option<Vec<f32>>,
     /// Step at which this entry was written (staleness analytics).
     pub step: usize,
 }
@@ -67,21 +74,12 @@ impl FeatureCache {
     }
 
     fn entry_bytes(e: &CacheEntry) -> usize {
-        let dev = e.device.element_count() * 4;
-        let host = e.host.as_ref().map_or(0, |h| h.len() * 4);
-        dev + host
+        e.device.element_count() * 4
     }
 
-    /// Insert or replace an entry; accounting tracks both device and host
-    /// mirrors.
-    pub fn put(
-        &mut self,
-        key: CacheKey,
-        device: Arc<DeviceTensor>,
-        host: Option<Vec<f32>>,
-        step: usize,
-    ) {
-        let entry = CacheEntry { device, host, step };
+    /// Insert or replace an entry.
+    pub fn put(&mut self, key: CacheKey, device: Arc<DeviceTensor>, step: usize) {
+        let entry = CacheEntry { device, step };
         let new_bytes = Self::entry_bytes(&entry);
         if let Some(old) = self.entries.insert(key, entry) {
             self.current_bytes -= Self::entry_bytes(&old);
@@ -99,9 +97,10 @@ impl FeatureCache {
         e
     }
 
-    /// Host mirror of an entry without counting a hit (policy measurement).
-    pub fn peek_host(&self, key: &CacheKey) -> Option<&[f32]> {
-        self.entries.get(key).and_then(|e| e.host.as_deref())
+    /// Look at an entry without counting a hit (used by the measurement
+    /// path, which compares a fresh activation against the cached one).
+    pub fn peek(&self, key: &CacheKey) -> Option<&CacheEntry> {
+        self.entries.get(key)
     }
 
     pub fn contains(&self, key: &CacheKey) -> bool {
@@ -163,16 +162,20 @@ mod tests {
     fn accounting_tracks_put_replace_peak() {
         let rt = Runtime::cpu().unwrap();
         let mut c = FeatureCache::new();
-        c.put(key(0, 0, Unit::Block), dev(&rt, 100), None, 0);
+        c.put(key(0, 0, Unit::Block), dev(&rt, 100), 0);
         assert_eq!(c.current_bytes(), 400);
-        // replace with host mirror: 400 device + 400 host
-        c.put(key(0, 0, Unit::Block), dev(&rt, 100), Some(vec![0.0; 100]), 1);
+        // replace with a larger buffer: accounting follows the new size
+        c.put(key(0, 0, Unit::Block), dev(&rt, 200), 1);
         assert_eq!(c.current_bytes(), 800);
         assert_eq!(c.peak_bytes(), 800);
         assert_eq!(c.len(), 1);
         // second entry
-        c.put(key(0, 1, Unit::Block), dev(&rt, 50), None, 1);
+        c.put(key(0, 1, Unit::Block), dev(&rt, 50), 1);
         assert_eq!(c.current_bytes(), 1000);
+        // replace back down: current shrinks, peak stays
+        c.put(key(0, 0, Unit::Block), dev(&rt, 100), 2);
+        assert_eq!(c.current_bytes(), 600);
+        assert_eq!(c.peak_bytes(), 1000);
         c.clear();
         assert_eq!(c.current_bytes(), 0);
         assert_eq!(c.peak_bytes(), 1000, "peak survives clear");
@@ -189,7 +192,6 @@ mod tests {
                 coarse.put(
                     CacheKey { branch: 0, layer: l, kind, unit: Unit::Block },
                     dev(&rt, 10),
-                    None,
                     0,
                 );
             }
@@ -204,7 +206,6 @@ mod tests {
                     fine.put(
                         CacheKey { branch: 0, layer: l, kind, unit: Unit::Sub(s) },
                         dev(&rt, 10),
-                        None,
                         0,
                     );
                 }
@@ -218,13 +219,15 @@ mod tests {
     }
 
     #[test]
-    fn hits_and_stores_counted() {
+    fn hits_stores_and_peek_counted() {
         let rt = Runtime::cpu().unwrap();
         let mut c = FeatureCache::new();
         let k = key(1, 2, Unit::Sub(SubUnit::Mlp));
         assert!(c.get(&k).is_none());
         assert_eq!(c.hits, 0);
-        c.put(k, dev(&rt, 10), None, 3);
+        c.put(k, dev(&rt, 10), 3);
+        assert!(c.peek(&k).is_some(), "peek sees the entry");
+        assert_eq!(c.hits, 0, "peek must not count a hit");
         assert!(c.get(&k).is_some());
         assert_eq!(c.hits, 1);
         assert_eq!(c.stores, 1);
@@ -235,7 +238,7 @@ mod tests {
     fn branches_are_isolated() {
         let rt = Runtime::cpu().unwrap();
         let mut c = FeatureCache::new();
-        c.put(key(0, 0, Unit::Block), dev(&rt, 10), None, 0);
+        c.put(key(0, 0, Unit::Block), dev(&rt, 10), 0);
         assert!(!c.contains(&key(1, 0, Unit::Block)));
         assert!(c.contains(&key(0, 0, Unit::Block)));
     }

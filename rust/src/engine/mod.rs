@@ -8,17 +8,48 @@
 //! blocks cost zero FLOPs and zero dispatches; that is the entire speedup
 //! mechanism of the paper.
 //!
-//! Hot-path properties (EXPERIMENTS.md §Perf):
-//! * activations stay device-resident across blocks and steps; the host
-//!   only sees the per-step `eps` (for sampler math) and, for Foresight,
-//!   the block outputs it must measure (Eq. 5/6 MSEs);
+//! # Hot path
+//!
+//! The denoising loop is **device-resident**: activations never visit the
+//! host between the initial latent upload and the per-step epsilon
+//! download. Per step the host↔device traffic is exactly
+//!
+//! * **up**: the current latent (`F·P·C·4` bytes) + the 4-byte timestep;
+//! * **down**: one combined epsilon (`F·P·C·4` bytes) — the CFG combine
+//!   `uncond + s·(cond − uncond)` runs as a fused executable, so only one
+//!   branch result crosses the bus — plus, for measuring policies
+//!   (Foresight), **4 bytes per measured site**: the Eq. 5/6 drift MSE is a
+//!   fused on-device reduction against the cached activation.
+//!
+//! The seed engine instead downloaded every measured block output in full
+//! (`F·P·D·4` bytes per site per step, `D ≫ C`) and both branch epsilons;
+//! that staging survives as [`HotPath::Host`] so
+//! `benches/fig16_hotpath.rs` and the engine-equivalence test can A/B the
+//! two pipelines — final latents are bit-identical for a fixed seed.
+//!
+//! # Branch parallelism
+//!
+//! Under [`HotPath::Device`] the two CFG branches of a step execute on
+//! concurrent scoped threads: each branch owns its own [`FeatureCache`]
+//! (keys are branch-disjoint) and the policy is consulted through a mutex.
+//! Policy state is keyed per (layer, kind, branch), so interleaving the
+//! branches never changes a decision — decisions for step `t` depend only
+//! on observations from steps `< t`, which both orderings deliver
+//! identically. Text K/V precompute parallelizes the same way at request
+//! start. When a [`StepObserver`] is attached (analysis runs) the engine
+//! drops to sequential branches so observer callbacks arrive in the
+//! deterministic seed order.
+//!
+//! Other hot-path properties (EXPERIMENTS.md §Perf):
 //! * text K/V are precomputed once per request per (layer, kind, branch);
 //! * the patch embedding runs once per step, shared across CFG branches;
-//! * measurement scratch buffers are allocated once per request.
+//! * every engine-visible transfer is metered in [`RunStats`]
+//!   (`h2d_bytes`/`d2h_bytes`), cross-checkable against the runtime's
+//!   [`crate::runtime::TransferStats`].
 
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::cache::{CacheKey, FeatureCache, Unit};
@@ -48,6 +79,19 @@ impl Request {
     }
 }
 
+/// Where per-step reductions (drift MSE, CFG combine) execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HotPath {
+    /// Device-resident (default): fused on-device MSE + CFG combine, one
+    /// epsilon download per step, CFG branches on concurrent threads.
+    #[default]
+    Device,
+    /// Seed-era staging: full activation downloads for measurement, both
+    /// branch epsilons downloaded, host combine loop, sequential branches.
+    /// Kept for A/B benchmarking (`fig16_hotpath`) and equivalence tests.
+    Host,
+}
+
 /// Counters and timings for one run.
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
@@ -60,6 +104,14 @@ pub struct RunStats {
     pub fallback_units: u64,
     pub cache_peak_bytes: usize,
     pub cache_entries_per_layer: f64,
+    /// Host→device bytes moved by this run (latents, timesteps, text,
+    /// CFG scale).
+    pub h2d_bytes: u64,
+    pub h2d_calls: u64,
+    /// Device→host bytes moved by this run (epsilons, drift measurements,
+    /// observer downloads).
+    pub d2h_bytes: u64,
+    pub d2h_calls: u64,
 }
 
 impl RunStats {
@@ -70,6 +122,24 @@ impl RunStats {
             0.0
         } else {
             self.reused_units as f64 / total as f64
+        }
+    }
+
+    /// Mean device→host bytes per denoising step.
+    pub fn d2h_bytes_per_step(&self) -> f64 {
+        if self.per_step_s.is_empty() {
+            0.0
+        } else {
+            self.d2h_bytes as f64 / self.per_step_s.len() as f64
+        }
+    }
+
+    /// Mean host→device bytes per denoising step.
+    pub fn h2d_bytes_per_step(&self) -> f64 {
+        if self.per_step_s.is_empty() {
+            0.0
+        } else {
+            self.h2d_bytes as f64 / self.per_step_s.len() as f64
         }
     }
 }
@@ -86,7 +156,9 @@ pub struct RunResult {
 }
 
 /// Observer hook for the feature-dynamics analyses (Figs. 2/3/11-14):
-/// receives host copies of computed block outputs.
+/// receives host copies of computed block outputs. Attaching an observer
+/// switches the engine to sequential CFG branches so callbacks arrive in
+/// deterministic (branch, layer, kind) order.
 pub trait StepObserver: Send {
     /// Which CFG branch to observe (downloads are expensive; default cond).
     fn wants_branch(&self, branch: usize) -> bool {
@@ -100,6 +172,7 @@ pub trait StepObserver: Send {
 pub struct Engine {
     model: Arc<LoadedModel>,
     schedule: ScheduleConfig,
+    hot_path: HotPath,
 }
 
 /// Per-branch request context (text conditioning).
@@ -108,13 +181,83 @@ struct BranchCtx {
     text_kv: Vec<[(Arc<DeviceTensor>, Arc<DeviceTensor>); 2]>,
 }
 
+/// Step-constant inputs shared by both branch threads.
+struct StepCtx<'a> {
+    step: usize,
+    granularity: Granularity,
+    cache_mode: CacheMode,
+    needs_measure: bool,
+    c: &'a Arc<DeviceTensor>,
+    h0: &'a Arc<DeviceTensor>,
+}
+
+/// Per-branch counters, merged into [`RunStats`] after the branches join.
+#[derive(Debug, Default)]
+struct BranchStats {
+    computed: u64,
+    reused: u64,
+    fallback: u64,
+    d2h_bytes: u64,
+    d2h_calls: u64,
+}
+
+impl BranchStats {
+    fn merge_into(&self, s: &mut RunStats) {
+        s.computed_units += self.computed;
+        s.reused_units += self.reused;
+        s.fallback_units += self.fallback;
+        s.d2h_bytes += self.d2h_bytes;
+        s.d2h_calls += self.d2h_calls;
+    }
+}
+
+/// What one CFG branch produces for one step.
+struct BranchRun {
+    eps: DeviceTensor,
+    decisions: Vec<bool>,
+    stats: BranchStats,
+}
+
+/// Host mirrors of measured activations ([`HotPath::Host`] only).
+type HostMirror = BTreeMap<CacheKey, Vec<f32>>;
+
 impl Engine {
     pub fn new(model: Arc<LoadedModel>, schedule: ScheduleConfig) -> Self {
-        Self { model, schedule }
+        Self::with_hot_path(model, schedule, HotPath::Device)
+    }
+
+    /// Engine pinned to a specific hot-path mode (A/B benches, equivalence
+    /// tests).
+    pub fn with_hot_path(model: Arc<LoadedModel>, schedule: ScheduleConfig, hot_path: HotPath) -> Self {
+        Self { model, schedule, hot_path }
     }
 
     pub fn model(&self) -> &Arc<LoadedModel> {
         &self.model
+    }
+
+    pub fn hot_path(&self) -> HotPath {
+        self.hot_path
+    }
+
+    /// Precompute one branch's text conditioning (projection + per-layer
+    /// cross-attention K/V).
+    fn branch_ctx(&self, raw: &HostTensor) -> Result<BranchCtx> {
+        let m = &self.model;
+        let text = Arc::new(m.text_proj(raw)?);
+        let mut text_kv = Vec::with_capacity(m.info.layers);
+        for layer in 0..m.info.layers {
+            let mut pair = Vec::with_capacity(2);
+            for kind in BlockKind::ALL {
+                let tk = Arc::new(m.text_k(layer, kind, &text)?);
+                let tv = Arc::new(m.text_v(layer, kind, &text)?);
+                pair.push((tk, tv));
+            }
+            let pair: [(Arc<DeviceTensor>, Arc<DeviceTensor>); 2] =
+                pair.try_into().map_err(|_| anyhow!("kv pair"))?;
+            text_kv.push(pair);
+        }
+        Ok(BranchCtx { text_kv })
     }
 
     /// Run one request under `policy`, optionally streaming block outputs
@@ -131,116 +274,159 @@ impl Engine {
         let steps = req.steps.unwrap_or(info.steps);
         let cfg_scale = req.cfg_scale.unwrap_or(info.cfg_scale) as f32;
         let smp = sampler::build(info.sampler, &self.schedule, steps);
-        let [f, p, d] = m.state_dims();
+        let [f, p, _d] = m.state_dims();
         let [_, _, c_lat] = m.latent_dims();
-        let state_elems = f * p * d;
         let latent_elems = f * p * c_lat;
 
         policy.begin_request(info.layers, steps);
         let granularity = policy.granularity();
         let cache_mode = policy.cache_mode();
-        let needs_host = policy.needs_measurement();
+        let needs_measure = policy.needs_measurement();
+        let policy_name = policy.name();
+
+        let mut stats = RunStats { policy: policy_name, ..Default::default() };
 
         // --- request-constant conditioning --------------------------------
+        // The two branch contexts are independent executable chains, so
+        // they precompute concurrently (same thread-safety contract as the
+        // per-step branch parallelism).
         let cond_raw = workload::embed_prompt(&req.prompt, info.d_text, info.text_len);
         let uncond_raw = HostTensor::zeros(vec![info.text_len, info.d_text]);
-        let mut branches = Vec::with_capacity(2);
-        for raw in [&cond_raw, &uncond_raw] {
-            let text = Arc::new(m.text_proj(raw)?);
-            let mut text_kv = Vec::with_capacity(info.layers);
-            for layer in 0..info.layers {
-                let mut pair = Vec::with_capacity(2);
-                for kind in BlockKind::ALL {
-                    let tk = Arc::new(m.text_k(layer, kind, &text)?);
-                    let tv = Arc::new(m.text_v(layer, kind, &text)?);
-                    pair.push((tk, tv));
-                }
-                let pair: [(Arc<DeviceTensor>, Arc<DeviceTensor>); 2] =
-                    pair.try_into().map_err(|_| anyhow!("kv pair"))?;
-                text_kv.push(pair);
+        let (ctx_cond, ctx_uncond) = std::thread::scope(|sc| {
+            let hu = sc.spawn(|| self.branch_ctx(&uncond_raw));
+            let rc = self.branch_ctx(&cond_raw);
+            let ru = match hu.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!("uncond branch-ctx thread panicked")),
+            };
+            (rc, ru)
+        });
+        let branches = [ctx_cond?, ctx_uncond?];
+        stats.h2d_bytes += 2 * (info.text_len * info.d_text * 4) as u64;
+        stats.h2d_calls += 2;
+
+        // Fused CFG combine (scale is a rank-0 runtime argument, uploaded
+        // once per request).
+        let (cfg_exec, cfg_scale_dev) = match self.hot_path {
+            HotPath::Device => {
+                let exe = rt.cfg_combine(&[f, p, c_lat])?;
+                let sd = rt.upload(&[cfg_scale], &[])?;
+                stats.h2d_bytes += 4;
+                stats.h2d_calls += 1;
+                (Some(exe), Some(sd))
             }
-            branches.push(BranchCtx { text_kv });
-        }
+            HotPath::Host => (None, None),
+        };
 
         // --- initial latents ----------------------------------------------
         let mut latent_rng = Rng::from_seed_and_label(req.seed, "latents");
         let mut x = latent_rng.normal_vec(latent_elems);
 
         // --- run state ------------------------------------------------------
-        let mut cache = FeatureCache::new();
-        let mut stats = RunStats { policy: policy.name(), ..Default::default() };
+        // One cache (and, in Host mode, one measurement mirror) per CFG
+        // branch: branch keys are disjoint, which is what lets the branches
+        // run on concurrent threads without shared mutable state.
+        let mut caches = [FeatureCache::new(), FeatureCache::new()];
+        let mut mirrors: [HostMirror; 2] = [BTreeMap::new(), BTreeMap::new()];
         let mut reuse_map: Vec<Vec<bool>> = Vec::with_capacity(steps);
-        let mut scratch = vec![0.0f32; state_elems];
         let mut eps = vec![0.0f32; latent_elems];
-        let mut eps_cond = vec![0.0f32; latent_elems];
+        // Only the host-staged combine needs the second epsilon buffer.
+        let mut eps_cond = match self.hot_path {
+            HotPath::Host => vec![0.0f32; latent_elems],
+            HotPath::Device => Vec::new(),
+        };
+
+        let parallel = self.hot_path == HotPath::Device && observer.is_none();
+        let policy_mx = Mutex::new(policy);
 
         let t_start = Instant::now();
         for step in 0..steps {
             let t_step = Instant::now();
             let t_val = smp.t_value(step);
             let c = Arc::new(m.t_embed(t_val)?);
+            stats.h2d_bytes += 4;
+            stats.h2d_calls += 1;
             let x_dev = rt.upload(&x, &[f, p, c_lat])?;
+            stats.h2d_bytes += (latent_elems * 4) as u64;
+            stats.h2d_calls += 1;
             let h0 = Arc::new(m.embed(&x_dev)?);
+            let ctx = StepCtx { step, granularity, cache_mode, needs_measure, c: &c, h0: &h0 };
 
-            let mut step_decisions: Vec<bool> = Vec::new();
-            for branch in 0..2usize {
-                let bctx = &branches[branch];
-                let mut h = h0.clone();
-                for layer in 0..info.layers {
-                    for kind in BlockKind::ALL {
-                        let (tk, tv) = &bctx.text_kv[layer][kind.index()];
-                        match granularity {
-                            Granularity::Coarse => {
-                                let site = Site { layer, kind, unit: Unit::Block, branch };
-                                let action = policy.action(step, site);
-                                if branch == 0 {
-                                    step_decisions.push(action.is_reuse());
-                                }
-                                h = self.apply_coarse(
-                                    step, site, action, cache_mode, needs_host, h, &c, tk,
-                                    tv, &mut cache, policy, &mut stats, &mut scratch,
-                                )?;
-                            }
-                            Granularity::Fine => {
-                                for sub in SubUnit::ALL {
-                                    let site =
-                                        Site { layer, kind, unit: Unit::Sub(sub), branch };
-                                    let action = policy.action(step, site);
-                                    if branch == 0 {
-                                        step_decisions.push(action.is_reuse());
-                                    }
-                                    h = self.apply_fine(
-                                        site, action, h, &c, tk, tv, &mut cache,
-                                        &mut stats, step,
-                                    )?;
-                                }
-                            }
-                        }
-                        if let Some(obs) = observer.as_deref_mut() {
-                            if obs.wants_branch(branch) {
-                                rt.download_into(&h, &mut scratch)?;
-                                obs.on_block(step, layer, kind, &scratch);
-                            }
-                        }
-                    }
-                }
-                let eps_dev = m.final_proj(&h, &c)?;
-                let dst = if branch == 0 { &mut eps_cond } else { &mut eps };
-                rt.download_into(&eps_dev, dst)?;
-            }
+            let [cache_cond, cache_uncond] = &mut caches;
+            let [mirror_cond, mirror_uncond] = &mut mirrors;
+            // One scoped spawn+join per step (~tens of µs) against ~2·L
+            // block dispatches (~ms each) per branch — <1% overhead on the
+            // shipped buckets. A persistent per-request branch worker fed
+            // over a channel would remove it if profiling ever shows
+            // otherwise.
+            let (r_cond, r_uncond) = if parallel {
+                std::thread::scope(|sc| {
+                    let hu = sc.spawn(|| {
+                        self.run_branch(
+                            &ctx, 1, &branches[1], cache_uncond, mirror_uncond, &policy_mx,
+                            None,
+                        )
+                    });
+                    let rc = self.run_branch(
+                        &ctx, 0, &branches[0], cache_cond, mirror_cond, &policy_mx, None,
+                    );
+                    let ru = match hu.join() {
+                        Ok(r) => r,
+                        Err(_) => Err(anyhow!("uncond CFG branch thread panicked")),
+                    };
+                    (rc, ru)
+                })
+            } else {
+                let rc = self.run_branch(
+                    &ctx, 0, &branches[0], cache_cond, mirror_cond, &policy_mx,
+                    observer.as_deref_mut(),
+                );
+                let ru = self.run_branch(
+                    &ctx, 1, &branches[1], cache_uncond, mirror_uncond, &policy_mx,
+                    observer.as_deref_mut(),
+                );
+                (rc, ru)
+            };
+            let b_cond = r_cond?;
+            let b_uncond = r_uncond?;
+            b_cond.stats.merge_into(&mut stats);
+            b_uncond.stats.merge_into(&mut stats);
 
             // CFG combine: eps = uncond + s * (cond - uncond)
-            for i in 0..latent_elems {
-                eps[i] += cfg_scale * (eps_cond[i] - eps[i]);
+            match (&cfg_exec, &cfg_scale_dev) {
+                (Some(exe), Some(sd)) => {
+                    let combined = exe.run(&[&b_uncond.eps, &b_cond.eps, sd])?;
+                    rt.download_into(&combined, &mut eps)?;
+                    stats.d2h_bytes += (latent_elems * 4) as u64;
+                    stats.d2h_calls += 1;
+                }
+                _ => {
+                    rt.download_into(&b_cond.eps, &mut eps_cond)?;
+                    rt.download_into(&b_uncond.eps, &mut eps)?;
+                    stats.d2h_bytes += 2 * (latent_elems * 4) as u64;
+                    stats.d2h_calls += 2;
+                    for i in 0..latent_elems {
+                        eps[i] += cfg_scale * (eps_cond[i] - eps[i]);
+                    }
+                }
             }
             smp.step(&mut x, &eps, step);
-            reuse_map.push(step_decisions);
+            reuse_map.push(b_cond.decisions);
             stats.per_step_s.push(t_step.elapsed().as_secs_f64());
         }
 
         stats.wall_s = t_start.elapsed().as_secs_f64();
-        stats.cache_peak_bytes = cache.peak_bytes();
-        stats.cache_entries_per_layer = cache.entries_per_layer(info.layers);
+        let mirror_bytes: usize = mirrors
+            .iter()
+            .map(|mm| mm.values().map(|v| v.len() * 4).sum::<usize>())
+            .sum();
+        stats.cache_peak_bytes =
+            caches.iter().map(|cc| cc.peak_bytes()).sum::<usize>() + mirror_bytes;
+        stats.cache_entries_per_layer = caches
+            .iter()
+            .map(|cc| cc.entries_per_layer(info.layers))
+            .fold(0.0, f64::max);
+        let policy = policy_mx.into_inner().unwrap();
         Ok(RunResult {
             latents: HostTensor::new(vec![f, p, c_lat], x),
             stats,
@@ -249,67 +435,147 @@ impl Engine {
         })
     }
 
+    /// Execute one CFG branch of one step: every (layer, kind[, sublayer])
+    /// site in order, then the final projection to this branch's epsilon.
+    #[allow(clippy::too_many_arguments)]
+    fn run_branch(
+        &self,
+        ctx: &StepCtx<'_>,
+        branch: usize,
+        bctx: &BranchCtx,
+        cache: &mut FeatureCache,
+        mirror: &mut HostMirror,
+        policy: &Mutex<&mut dyn ReusePolicy>,
+        mut observer: Option<&mut dyn StepObserver>,
+    ) -> Result<BranchRun> {
+        let m = &self.model;
+        let info = &m.info;
+        let mut h = ctx.h0.clone();
+        let mut decisions: Vec<bool> = Vec::new();
+        let mut bs = BranchStats::default();
+        let mut obs_scratch: Vec<f32> = Vec::new();
+        for layer in 0..info.layers {
+            for kind in BlockKind::ALL {
+                let (tk, tv) = &bctx.text_kv[layer][kind.index()];
+                match ctx.granularity {
+                    Granularity::Coarse => {
+                        let site = Site { layer, kind, unit: Unit::Block, branch };
+                        let action = policy.lock().unwrap().action(ctx.step, site);
+                        if branch == 0 {
+                            decisions.push(action.is_reuse());
+                        }
+                        h = self.apply_coarse(
+                            ctx, site, action, h, tk, tv, cache, mirror, policy, &mut bs,
+                        )?;
+                    }
+                    Granularity::Fine => {
+                        for sub in SubUnit::ALL {
+                            let site = Site { layer, kind, unit: Unit::Sub(sub), branch };
+                            let action = policy.lock().unwrap().action(ctx.step, site);
+                            if branch == 0 {
+                                decisions.push(action.is_reuse());
+                            }
+                            h = self.apply_fine(ctx, site, action, h, tk, tv, cache, &mut bs)?;
+                        }
+                    }
+                }
+                if let Some(obs) = observer.as_deref_mut() {
+                    if obs.wants_branch(branch) {
+                        obs_scratch.resize(h.element_count(), 0.0);
+                        m.runtime().download_into(&h, &mut obs_scratch)?;
+                        bs.d2h_bytes += (obs_scratch.len() * 4) as u64;
+                        bs.d2h_calls += 1;
+                        obs.on_block(ctx.step, layer, kind, &obs_scratch);
+                    }
+                }
+            }
+        }
+        let eps = m.final_proj(&h, ctx.c)?;
+        Ok(BranchRun { eps, decisions, stats: bs })
+    }
+
     /// Execute / reuse one coarse (whole-block) site.
     #[allow(clippy::too_many_arguments)]
     fn apply_coarse(
         &self,
-        step: usize,
+        ctx: &StepCtx<'_>,
         site: Site,
         action: Action,
-        cache_mode: CacheMode,
-        needs_host: bool,
         h: Arc<DeviceTensor>,
-        c: &Arc<DeviceTensor>,
         tk: &Arc<DeviceTensor>,
         tv: &Arc<DeviceTensor>,
         cache: &mut FeatureCache,
-        policy: &mut dyn ReusePolicy,
-        stats: &mut RunStats,
-        scratch: &mut [f32],
+        mirror: &mut HostMirror,
+        policy: &Mutex<&mut dyn ReusePolicy>,
+        bs: &mut BranchStats,
     ) -> Result<Arc<DeviceTensor>> {
         let m = &self.model;
-        let key = CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
+        let key =
+            CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
 
         let effective = match action {
             Action::Reuse | Action::ReuseResidual if !cache.contains(&key) => {
-                stats.fallback_units += 1;
-                Action::Compute { update_cache: true, measure: needs_host }
+                bs.fallback += 1;
+                Action::Compute { update_cache: true, measure: ctx.needs_measure }
             }
             a => a,
         };
 
         match effective {
             Action::Reuse => {
-                stats.reused_units += 1;
+                bs.reused += 1;
                 let e = cache.get(&key).expect("checked above");
                 Ok(e.device.clone())
             }
             Action::ReuseResidual => {
-                stats.reused_units += 1;
+                bs.reused += 1;
                 let delta = cache.get(&key).expect("checked above").device.clone();
                 Ok(Arc::new(m.add(&h, &delta)?))
             }
             Action::Compute { update_cache, measure } => {
-                stats.computed_units += 1;
-                let out = Arc::new(m.block_full(site.layer, site.kind, &h, c, tk, tv)?);
-                if measure {
-                    m.runtime().download_into(&out, scratch)?;
-                    if let Some(prev) = cache.peek_host(&key) {
-                        let mse = mse_f32(scratch, prev);
-                        policy.observe_mse(step, site, mse);
+                bs.computed += 1;
+                let out = Arc::new(m.block_full(site.layer, site.kind, &h, ctx.c, tk, tv)?);
+                // Drift is only meaningful against a cached *output*
+                // (Eq. 6 compares features, not residual deltas); a
+                // measuring Delta-mode policy would otherwise observe
+                // MSE(out, out_prev − h_prev) — garbage.
+                if measure && ctx.cache_mode == CacheMode::Output {
+                    match self.hot_path {
+                        HotPath::Device => {
+                            // Eq. 5/6 drift as a fused on-device reduction
+                            // against the cached activation: 4 bytes down.
+                            if let Some(prev) = cache.peek(&key) {
+                                let mse = m.state_mse(&out, &prev.device)?;
+                                bs.d2h_bytes += 4;
+                                bs.d2h_calls += 1;
+                                policy.lock().unwrap().observe_mse(ctx.step, site, mse);
+                            }
+                        }
+                        HotPath::Host => {
+                            // Seed-era staging: pull the whole activation
+                            // down and diff against a host mirror (F·P·D·4
+                            // bytes per measured site — the cost
+                            // fig16_hotpath quantifies).
+                            let mut scratch = vec![0.0f32; out.element_count()];
+                            m.runtime().download_into(&out, &mut scratch)?;
+                            bs.d2h_bytes += (scratch.len() * 4) as u64;
+                            bs.d2h_calls += 1;
+                            if let Some(prev) = mirror.get(&key) {
+                                let mse = mse_f32(&scratch, prev);
+                                policy.lock().unwrap().observe_mse(ctx.step, site, mse);
+                            }
+                            if update_cache {
+                                mirror.insert(key, scratch);
+                            }
+                        }
                     }
                 }
                 if update_cache {
-                    let (dev, host) = match cache_mode {
-                        CacheMode::Output => (
-                            out.clone(),
-                            if needs_host { Some(scratch.to_vec()) } else { None },
-                        ),
-                        CacheMode::Delta => {
-                            (Arc::new(m.sub(&out, &h)?), None)
-                        }
+                    let dev = match ctx.cache_mode {
+                        CacheMode::Output => out.clone(),
+                        CacheMode::Delta => Arc::new(m.sub(&out, &h)?),
                     };
-                    cache.put(key, dev, host, step);
+                    cache.put(key, dev, ctx.step);
                 }
                 Ok(out)
             }
@@ -321,25 +587,25 @@ impl Engine {
     #[allow(clippy::too_many_arguments)]
     fn apply_fine(
         &self,
+        ctx: &StepCtx<'_>,
         site: Site,
         action: Action,
         h: Arc<DeviceTensor>,
-        c: &Arc<DeviceTensor>,
         tk: &Arc<DeviceTensor>,
         tv: &Arc<DeviceTensor>,
         cache: &mut FeatureCache,
-        stats: &mut RunStats,
-        step: usize,
+        bs: &mut BranchStats,
     ) -> Result<Arc<DeviceTensor>> {
         let m = &self.model;
         let Unit::Sub(sub) = site.unit else {
             return Err(anyhow!("fine path requires sub unit"));
         };
-        let key = CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
+        let key =
+            CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
 
         let effective = match action {
             Action::Reuse | Action::ReuseResidual if !cache.contains(&key) => {
-                stats.fallback_units += 1;
+                bs.fallback += 1;
                 Action::Compute { update_cache: true, measure: false }
             }
             Action::Reuse => Action::ReuseResidual, // fine reuse is delta-based
@@ -348,20 +614,20 @@ impl Engine {
 
         match effective {
             Action::ReuseResidual => {
-                stats.reused_units += 1;
+                bs.reused += 1;
                 let delta = cache.get(&key).expect("checked above").device.clone();
                 Ok(Arc::new(m.add(&h, &delta)?))
             }
             Action::Compute { update_cache, .. } => {
-                stats.computed_units += 1;
+                bs.computed += 1;
                 let out = Arc::new(match sub {
-                    SubUnit::Attn => m.block_attn(site.layer, site.kind, &h, c)?,
+                    SubUnit::Attn => m.block_attn(site.layer, site.kind, &h, ctx.c)?,
                     SubUnit::Cross => m.block_cross(site.layer, site.kind, &h, tk, tv)?,
-                    SubUnit::Mlp => m.block_mlp(site.layer, site.kind, &h, c)?,
+                    SubUnit::Mlp => m.block_mlp(site.layer, site.kind, &h, ctx.c)?,
                 });
                 if update_cache {
                     let delta = Arc::new(m.sub(&out, &h)?);
-                    cache.put(key, delta, None, step);
+                    cache.put(key, delta, ctx.step);
                 }
                 Ok(out)
             }

@@ -15,6 +15,32 @@
 //!
 //! Start with [`engine::Engine`] for single requests or [`server`] for the
 //! TCP serving front-end; `examples/quickstart.rs` shows the 20-line path.
+//!
+//! # Hot path
+//!
+//! The denoising loop is **device-resident**: between the per-step latent
+//! upload (`F·P·C·4` bytes) and the single combined-epsilon download
+//! (`F·P·C·4` bytes), no activation crosses the host↔device bus.
+//!
+//! * Foresight's Eq. 5/6 drift MSE runs as a fused on-device reduction
+//!   ([`runtime::Runtime::mse`]) against the cached activation — a 4-byte
+//!   scalar download per measured site instead of the seed's full
+//!   `F·P·D·4` feature download (`D ≫ C`, so this is the dominant term:
+//!   ~`2·L·2` measured sites per step).
+//! * The classifier-free-guidance combine `uncond + s·(cond − uncond)` is
+//!   a fused executable ([`runtime::Runtime::cfg_combine`]), halving the
+//!   epsilon traffic; `scale`/`axpy` primitives are in place for sampler
+//!   offload.
+//! * The two CFG branches of each step execute on concurrent scoped
+//!   threads with branch-disjoint caches and policy state (see
+//!   [`engine`] module docs for the determinism argument), as does the
+//!   per-request text-K/V precompute.
+//!
+//! Every transfer is metered: per run in [`engine::RunStats`]
+//! (`h2d_bytes`/`d2h_bytes`) and globally in
+//! [`runtime::TransferStats`]. `benches/fig16_hotpath.rs` A/Bs this
+//! pipeline against the seed-era host staging ([`engine::HotPath::Host`])
+//! and asserts the ≥10× transfer reduction with bit-identical latents.
 
 pub mod analysis;
 pub mod cache;

@@ -98,6 +98,12 @@ fn cmd_generate(args: &[String]) -> Result<()> {
     );
     println!("cache peak   : {:.1} KiB", s.cache_peak_bytes as f64 / 1024.0);
     println!("entries/layer: {:.1}", s.cache_entries_per_layer);
+    println!(
+        "host transfer: {:.1} KiB up / {:.1} KiB down ({:.2} KiB down/step)",
+        s.h2d_bytes as f64 / 1024.0,
+        s.d2h_bytes as f64 / 1024.0,
+        s.d2h_bytes_per_step() / 1024.0
+    );
     Ok(())
 }
 

@@ -97,6 +97,7 @@ pub struct LoadedModel {
     blocks: Vec<[BlockArgs; 2]>, // [layer][kind]
     add_exec: Arc<Executable>,
     sub_exec: Arc<Executable>,
+    mse_exec: Arc<Executable>,
 }
 
 fn load_weight_args(
@@ -185,6 +186,7 @@ impl LoadedModel {
         let dims = [bucket.frames, bucket.tokens, info.d_model];
         let add_exec = rt.elementwise_binary("add", &dims)?;
         let sub_exec = rt.elementwise_binary("sub", &dims)?;
+        let mse_exec = rt.mse(&dims)?;
 
         Ok(Self {
             info,
@@ -198,6 +200,7 @@ impl LoadedModel {
             blocks,
             add_exec,
             sub_exec,
+            mse_exec,
         })
     }
 
@@ -322,6 +325,14 @@ impl LoadedModel {
         self.sub_exec.run(&[a, b])
     }
 
+    /// Device-side `mean((a−b)²)` over two block states, downloaded as one
+    /// f32 (Foresight's Eq. 5/6 drift metric: 4 bytes on the wire instead
+    /// of the full `F·P·D·4` activation).
+    pub fn state_mse(&self, a: &DeviceTensor, b: &DeviceTensor) -> Result<f64> {
+        let out = self.mse_exec.run(&[a, b])?;
+        Ok(self.rt.read_scalar(&out)? as f64)
+    }
+
     /// Per-executable (calls, seconds) snapshot for the Fig. 9 breakdown.
     pub fn op_stats(&self) -> Vec<(String, u64, f64)> {
         let mut out = Vec::new();
@@ -343,6 +354,7 @@ impl LoadedModel {
         push(&self.pieces.final_);
         push(&self.add_exec);
         push(&self.sub_exec);
+        push(&self.mse_exec);
         out
     }
 
@@ -364,6 +376,7 @@ impl LoadedModel {
         self.pieces.final_.stats.reset();
         self.add_exec.stats.reset();
         self.sub_exec.stats.reset();
+        self.mse_exec.stats.reset();
     }
 
     /// Analytical FLOP count of one full DiT block dispatch (used by the

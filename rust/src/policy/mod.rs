@@ -53,8 +53,10 @@ pub enum Action {
     Compute {
         /// Refresh the cache with this unit's new activation.
         update_cache: bool,
-        /// Report MSE(new, cached) back via `observe_mse` (needs a host
-        /// mirror in the cache — only Foresight pays this).
+        /// Report MSE(new, cached) back via `observe_mse`. On the
+        /// device-resident hot path this is a fused on-device reduction
+        /// against the cached buffer (a 4-byte scalar download — only
+        /// Foresight pays it).
         measure: bool,
     },
     /// Feed the cached output forward (coarse output-mode reuse, Eq. 4).
@@ -88,7 +90,7 @@ pub trait ReusePolicy: Send {
     fn cache_mode(&self) -> CacheMode;
 
     /// True when the policy consumes MSE observations (the engine then
-    /// keeps host mirrors of cached activations).
+    /// measures computed activations against the cached device buffers).
     fn needs_measurement(&self) -> bool {
         false
     }

@@ -6,11 +6,21 @@
 //! device-resident buffers. HLO **text** (not serialized proto) is the
 //! interchange format — see python/compile/aot.py for why.
 //!
+//! Besides the AOT artifacts, the runtime builds small **fused executables**
+//! at run time (cached per shape): elementwise add/sub for residual reuse,
+//! an `mse` reduction so Foresight's drift measurement downloads one f32
+//! instead of a full activation, a `cfg_combine` fusion so each denoising
+//! step downloads one epsilon instead of two, and `scale`/`axpy` primitives
+//! for sampler offload. Every host↔device copy is metered in
+//! [`TransferStats`] (see `engine` module docs §Hot path for the byte
+//! model).
+//!
 //! Thread-safety: the PJRT CPU client and its loaded executables are
 //! internally thread-safe, but the `xla` crate wraps raw pointers and so
 //! doesn't declare `Send`/`Sync`. [`Runtime`] asserts those bounds via the
 //! `Shared` wrapper below; the serving integration test exercises
-//! concurrent execution from multiple workers.
+//! concurrent execution from multiple workers, and the engine executes the
+//! two CFG branches of one request on concurrent scoped threads.
 
 pub mod tensor;
 
@@ -78,6 +88,67 @@ impl ExecStats {
     }
 }
 
+/// Cumulative host↔device transfer telemetry for one [`Runtime`]. Uploads
+/// and downloads are the engine's only host-side costs once the hot path is
+/// device-resident, so benches assert on these counters directly
+/// (`benches/fig16_hotpath.rs`).
+#[derive(Debug, Default)]
+pub struct TransferStats {
+    pub h2d_calls: AtomicU64,
+    pub h2d_bytes: AtomicU64,
+    pub d2h_calls: AtomicU64,
+    pub d2h_bytes: AtomicU64,
+}
+
+impl TransferStats {
+    fn record_h2d(&self, bytes: usize) {
+        self.h2d_calls.fetch_add(1, Ordering::Relaxed);
+        self.h2d_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    fn record_d2h(&self, bytes: usize) {
+        self.d2h_calls.fetch_add(1, Ordering::Relaxed);
+        self.d2h_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_calls: self.h2d_calls.load(Ordering::Relaxed),
+            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
+            d2h_calls: self.d2h_calls.load(Ordering::Relaxed),
+            d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.h2d_calls.store(0, Ordering::Relaxed);
+        self.h2d_bytes.store(0, Ordering::Relaxed);
+        self.d2h_calls.store(0, Ordering::Relaxed);
+        self.d2h_bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of [`TransferStats`] counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub h2d_calls: u64,
+    pub h2d_bytes: u64,
+    pub d2h_calls: u64,
+    pub d2h_bytes: u64,
+}
+
+impl TransferSnapshot {
+    /// Counter deltas accumulated since `earlier` was taken.
+    pub fn delta_since(&self, earlier: &TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_calls: self.h2d_calls - earlier.h2d_calls,
+            h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
+            d2h_calls: self.d2h_calls - earlier.d2h_calls,
+            d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
+        }
+    }
+}
+
 /// One compiled HLO module ready to execute.
 pub struct Executable {
     name: String,
@@ -139,37 +210,40 @@ fn array_dims(shape: &xla::Shape) -> Result<Vec<usize>> {
 
 /// Count parameters in the HLO entry computation layout line, e.g.
 /// `entry_computation_layout={(f32[8,48]{1,0}, f32[96]{0})->f32[8,48]{1,0}}`.
-fn parse_entry_arity(hlo_text: &str) -> usize {
-    if let Some(start) = hlo_text.find("entry_computation_layout={(") {
-        let rest = &hlo_text[start + "entry_computation_layout={(".len()..];
-        if let Some(end) = rest.find(")->") {
-            let params = &rest[..end];
-            if params.trim().is_empty() {
-                return 0;
-            }
-            let mut depth = 0usize;
-            let mut count = 1usize;
-            for ch in params.chars() {
-                match ch {
-                    '[' | '{' | '(' => depth += 1,
-                    ']' | '}' | ')' => depth = depth.saturating_sub(1),
-                    ',' if depth == 0 => count += 1,
-                    _ => {}
-                }
-            }
-            return count;
+///
+/// Returns `None` when the text carries no entry layout at all — such an
+/// artifact is malformed (aot.py always emits one) and must be rejected at
+/// load time rather than aborting inside PJRT at dispatch time.
+fn parse_entry_arity(hlo_text: &str) -> Option<usize> {
+    let start = hlo_text.find("entry_computation_layout={(")?;
+    let rest = &hlo_text[start + "entry_computation_layout={(".len()..];
+    let end = rest.find(")->")?;
+    let params = &rest[..end];
+    if params.trim().is_empty() {
+        return Some(0);
+    }
+    let mut depth = 0usize;
+    let mut count = 1usize;
+    for ch in params.chars() {
+        match ch {
+            '[' | '{' | '(' => depth += 1,
+            ']' | '}' | ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => count += 1,
+            _ => {}
         }
     }
-    0
+    Some(count)
 }
 
-/// The PJRT runtime: client + executable cache + elementwise helpers.
+/// The PJRT runtime: client + executable cache + fused-executable builder.
 pub struct Runtime {
     client: Shared<xla::PjRtClient>,
     /// Compiled executables keyed by absolute artifact path.
     cache: Mutex<BTreeMap<PathBuf, Arc<Executable>>>,
-    /// Runtime-built elementwise binaries keyed by (op, dims).
-    elementwise: Mutex<BTreeMap<(String, Vec<usize>), Arc<Executable>>>,
+    /// Runtime-built fused executables keyed by (op, dims).
+    fused: Mutex<BTreeMap<(String, Vec<usize>), Arc<Executable>>>,
+    /// Host↔device copy counters (see [`TransferStats`]).
+    transfers: TransferStats,
 }
 
 impl Runtime {
@@ -179,7 +253,8 @@ impl Runtime {
         Ok(Self {
             client: Shared(client),
             cache: Mutex::new(BTreeMap::new()),
-            elementwise: Mutex::new(BTreeMap::new()),
+            fused: Mutex::new(BTreeMap::new()),
+            transfers: TransferStats::default(),
         })
     }
 
@@ -187,13 +262,29 @@ impl Runtime {
         self.client.0.platform_name()
     }
 
+    /// Cumulative host↔device transfer counters for this runtime.
+    pub fn transfer_stats(&self) -> &TransferStats {
+        &self.transfers
+    }
+
     /// Load + compile an HLO text artifact (cached by path).
+    ///
+    /// Fails at load time — with a readable error — when the artifact
+    /// carries no `entry_computation_layout`, instead of compiling an
+    /// executable whose arity check can never pass.
     pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(path) {
             return Ok(e.clone());
         }
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {}", path.display()))?;
+        let arity = parse_entry_arity(&text).ok_or_else(|| {
+            anyhow!(
+                "{}: no entry_computation_layout in HLO text — artifact is \
+                 malformed or truncated; regenerate with python/compile/aot.py",
+                path.display()
+            )
+        })?;
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
         )
@@ -212,7 +303,6 @@ impl Runtime {
                     .to_string()
             })
             .unwrap_or_default();
-        let arity = parse_entry_arity(&text);
         let exec = Arc::new(Executable {
             name,
             exe: Shared(exe),
@@ -233,6 +323,7 @@ impl Runtime {
             .0
             .buffer_from_host_buffer(data, dims, None)
             .map_err(|e| anyhow!("upload: {e:?}"))?;
+        self.transfers.record_h2d(data.len() * 4);
         Ok(DeviceTensor { buf: Shared(buf), dims: dims.to_vec() })
     }
 
@@ -264,45 +355,142 @@ impl Runtime {
             .to_literal_sync()
             .map_err(|e| anyhow!("download (to_literal): {e:?}"))?;
         lit.copy_raw_to(dst)
-            .map_err(|e| anyhow!("download (copy_raw): {e:?}"))
+            .map_err(|e| anyhow!("download (copy_raw): {e:?}"))?;
+        self.transfers.record_d2h(dst.len() * 4);
+        Ok(())
+    }
+
+    /// Download a single-element tensor as one f32 (4 bytes on the wire —
+    /// the Foresight drift measurement path).
+    pub fn read_scalar(&self, t: &DeviceTensor) -> Result<f32> {
+        if t.element_count() != 1 {
+            return Err(anyhow!(
+                "read_scalar on tensor with {} elements",
+                t.element_count()
+            ));
+        }
+        let mut out = [0.0f32; 1];
+        self.download_into(t, &mut out)?;
+        Ok(out[0])
+    }
+
+    /// Get or build one fused executable. Supported ops and their argument
+    /// contracts (all f32; `dims`-shaped unless noted):
+    ///
+    /// | op            | args                         | result            |
+    /// |---------------|------------------------------|-------------------|
+    /// | `add`         | `(x, y)`                     | `x + y`           |
+    /// | `sub`         | `(x, y)`                     | `x - y`           |
+    /// | `mse`         | `(x, y)`                     | `mean((x-y)²)` [] |
+    /// | `cfg_combine` | `(uncond, cond, scale [])`   | `u + s·(c - u)`   |
+    /// | `scale`       | `(x, alpha [])`              | `alpha·x`         |
+    /// | `axpy`        | `(x, y, alpha [])`           | `alpha·x + y`     |
+    ///
+    /// Scalars are passed as rank-0 parameters (implicit XLA broadcast), so
+    /// one compiled executable serves every request regardless of CFG scale.
+    fn fused_executable(&self, op: &str, dims: &[usize]) -> Result<Arc<Executable>> {
+        let key = (op.to_string(), dims.to_vec());
+        if let Some(e) = self.fused.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let b = xla::XlaBuilder::new(&format!("fused_{op}"));
+        let idims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let param = |i: i64, pdims: &[i64], name: &str| {
+            b.parameter(i, xla::ElementType::F32, pdims, name)
+                .map_err(|e| anyhow!("fused {op} param {name}: {e:?}"))
+        };
+        // All xla builder calls share one error type, so the closure's
+        // parameter type is inferred from the call sites.
+        let err = |stage: &str, e| anyhow!("fused {op} {stage}: {e:?}");
+        let (root, arity) = match op {
+            "add" => {
+                let x = param(0, &idims, "x")?;
+                let y = param(1, &idims, "y")?;
+                (x.add_(&y).map_err(|e| err("add", e))?, 2)
+            }
+            "sub" => {
+                let x = param(0, &idims, "x")?;
+                let y = param(1, &idims, "y")?;
+                (x.sub_(&y).map_err(|e| err("sub", e))?, 2)
+            }
+            "mse" => {
+                let x = param(0, &idims, "x")?;
+                let y = param(1, &idims, "y")?;
+                let d = x.sub_(&y).map_err(|e| err("sub", e))?;
+                let sq = d.mul_(&d).map_err(|e| err("square", e))?;
+                let all: Vec<i64> = (0..idims.len() as i64).collect();
+                (sq.reduce_mean(&all, false).map_err(|e| err("mean", e))?, 2)
+            }
+            "cfg_combine" => {
+                let u = param(0, &idims, "uncond")?;
+                let c = param(1, &idims, "cond")?;
+                let s = param(2, &[], "scale")?;
+                let diff = c.sub_(&u).map_err(|e| err("sub", e))?;
+                let scaled = diff.mul_(&s).map_err(|e| err("scale", e))?;
+                (u.add_(&scaled).map_err(|e| err("add", e))?, 3)
+            }
+            "scale" => {
+                let x = param(0, &idims, "x")?;
+                let a = param(1, &[], "alpha")?;
+                (x.mul_(&a).map_err(|e| err("mul", e))?, 2)
+            }
+            "axpy" => {
+                let x = param(0, &idims, "x")?;
+                let y = param(1, &idims, "y")?;
+                let a = param(2, &[], "alpha")?;
+                let ax = x.mul_(&a).map_err(|e| err("mul", e))?;
+                (ax.add_(&y).map_err(|e| err("add", e))?, 3)
+            }
+            other => return Err(anyhow!("unknown fused op {other}")),
+        };
+        let comp = root.build().map_err(|e| err("build", e))?;
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile fused_{op}: {e:?}"))?;
+        let exec = Arc::new(Executable {
+            name: format!("fused_{op}{dims:?}"),
+            exe: Shared(exe),
+            arity,
+            stats: ExecStats::default(),
+        });
+        self.fused.lock().unwrap().insert(key, exec.clone());
+        Ok(exec)
     }
 
     /// Runtime-built elementwise binary op over identically-shaped tensors
     /// (used for Δ-DiT / PAB residual-delta reuse so the add/sub stays on
     /// device instead of round-tripping through the host).
     pub fn elementwise_binary(&self, op: &str, dims: &[usize]) -> Result<Arc<Executable>> {
-        let key = (op.to_string(), dims.to_vec());
-        if let Some(e) = self.elementwise.lock().unwrap().get(&key) {
-            return Ok(e.clone());
+        match op {
+            "add" | "sub" => self.fused_executable(op, dims),
+            other => Err(anyhow!("unknown elementwise op {other}")),
         }
-        let b = xla::XlaBuilder::new(&format!("ew_{op}"));
-        let idims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        let x = b
-            .parameter(0, xla::ElementType::F32, &idims, "x")
-            .map_err(|e| anyhow!("builder: {e:?}"))?;
-        let y = b
-            .parameter(1, xla::ElementType::F32, &idims, "y")
-            .map_err(|e| anyhow!("builder: {e:?}"))?;
-        let z = match op {
-            "add" => x.add_(&y),
-            "sub" => x.sub_(&y),
-            _ => return Err(anyhow!("unknown elementwise op {op}")),
-        }
-        .map_err(|e| anyhow!("builder {op}: {e:?}"))?;
-        let comp = z.build().map_err(|e| anyhow!("build: {e:?}"))?;
-        let exe = self
-            .client
-            .0
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile ew_{op}: {e:?}"))?;
-        let exec = Arc::new(Executable {
-            name: format!("ew_{op}{dims:?}"),
-            exe: Shared(exe),
-            arity: 2,
-            stats: ExecStats::default(),
-        });
-        self.elementwise.lock().unwrap().insert(key, exec.clone());
-        Ok(exec)
+    }
+
+    /// `mean((a−b)²)` over two `dims`-shaped tensors → rank-0 scalar.
+    /// Foresight's Eq. 5/6 drift metric; pairs with [`Self::read_scalar`]
+    /// so measurement costs a 4-byte download instead of the full feature.
+    pub fn mse(&self, dims: &[usize]) -> Result<Arc<Executable>> {
+        self.fused_executable("mse", dims)
+    }
+
+    /// Classifier-free-guidance combine `uncond + s·(cond − uncond)` with
+    /// the scale as a rank-0 runtime argument (args: uncond, cond, scale).
+    pub fn cfg_combine(&self, dims: &[usize]) -> Result<Arc<Executable>> {
+        self.fused_executable("cfg_combine", dims)
+    }
+
+    /// `alpha·x` with scalar alpha as a runtime argument (args: x, alpha).
+    pub fn scale(&self, dims: &[usize]) -> Result<Arc<Executable>> {
+        self.fused_executable("scale", dims)
+    }
+
+    /// `alpha·x + y` with scalar alpha as a runtime argument (args: x, y,
+    /// alpha) — the sampler-update primitive for future device offload.
+    pub fn axpy(&self, dims: &[usize]) -> Result<Arc<Executable>> {
+        self.fused_executable("axpy", dims)
     }
 
     /// Number of compiled artifacts currently cached.
@@ -314,14 +502,173 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{prop_assert, prop_assert_close, proptest_cases};
+    use crate::util::stats::mse_f32;
+    use std::panic::AssertUnwindSafe;
 
     #[test]
     fn arity_parser_counts_params() {
         let h = "HloModule m, entry_computation_layout={(f32[8,48,96]{2,1,0}, f32[96]{0}, f32[16,96]{1,0})->f32[8,48,96]{2,1,0}}";
-        assert_eq!(parse_entry_arity(h), 3);
+        assert_eq!(parse_entry_arity(h), Some(3));
         let h0 = "HloModule m, entry_computation_layout={()->f32[2]{0}}";
-        assert_eq!(parse_entry_arity(h0), 0);
+        assert_eq!(parse_entry_arity(h0), Some(0));
         let h1 = "HloModule m, entry_computation_layout={(f32[])->f32[]}";
-        assert_eq!(parse_entry_arity(h1), 1);
+        assert_eq!(parse_entry_arity(h1), Some(1));
+    }
+
+    #[test]
+    fn arity_parser_rejects_missing_layout() {
+        assert_eq!(parse_entry_arity("HloModule m\nENTRY e { ROOT c = f32[] constant(1) }"), None);
+        assert_eq!(parse_entry_arity(""), None);
+    }
+
+    #[test]
+    fn load_hlo_rejects_artifact_without_entry_layout() {
+        let rt = Runtime::cpu().unwrap();
+        let dir = std::env::temp_dir().join("foresight_rt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("malformed.hlo.txt");
+        std::fs::write(&path, "HloModule borked\n\nENTRY e { ROOT c = f32[] constant(1) }\n")
+            .unwrap();
+        let err = rt.load_hlo(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("entry_computation_layout"),
+            "expected a load-time arity diagnostic, got: {err}"
+        );
+    }
+
+    #[test]
+    fn transfer_counters_track_uploads_and_downloads() {
+        let rt = Runtime::cpu().unwrap();
+        let before = rt.transfer_stats().snapshot();
+        let t = rt.upload(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+        let mut out = [0.0f32; 4];
+        rt.download_into(&t, &mut out).unwrap();
+        let d = rt.transfer_stats().snapshot().delta_since(&before);
+        assert_eq!(d.h2d_bytes, 16);
+        assert_eq!(d.h2d_calls, 1);
+        assert_eq!(d.d2h_bytes, 16);
+        assert_eq!(d.d2h_calls, 1);
+        assert_eq!(out, [1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn device_mse_exact_on_grid_values() {
+        // Multiples of 0.25 with a power-of-two element count sum exactly
+        // in f32, so device and host must agree to the last bit.
+        let rt = Runtime::cpu().unwrap();
+        let dims = [4usize, 16];
+        let n = 64;
+        let a: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * 0.25).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i % 5) as f32 * 0.25).collect();
+        let da = rt.upload(&a, &dims).unwrap();
+        let db = rt.upload(&b, &dims).unwrap();
+        let exe = rt.mse(&dims).unwrap();
+        let out = exe.run(&[&da, &db]).unwrap();
+        assert_eq!(out.dims(), &[] as &[usize]);
+        let dev = rt.read_scalar(&out).unwrap() as f64;
+        let host = mse_f32(&a, &b);
+        assert!((dev - host).abs() < 1e-12, "device {dev} vs host {host}");
+    }
+
+    #[test]
+    fn prop_device_mse_matches_host_mse() {
+        // Satellite property: the on-device `mse` executable matches the
+        // host reference within 1e-6 across random shapes and values.
+        let rt = Runtime::cpu().unwrap();
+        let rt = AssertUnwindSafe(&rt);
+        proptest_cases(80, |g| {
+            let rank = g.usize_in(1..=3);
+            let dims: Vec<usize> = (0..rank).map(|_| g.usize_in(1..=6)).collect();
+            let n: usize = dims.iter().product();
+            let a = g.vec_f32(n, -1.0, 1.0);
+            let b = g.vec_f32(n, -1.0, 1.0);
+            let da = rt.upload(&a, &dims).unwrap();
+            let db = rt.upload(&b, &dims).unwrap();
+            let exe = rt.mse(&dims).unwrap();
+            let dev = rt.read_scalar(&exe.run(&[&da, &db]).unwrap()).unwrap() as f64;
+            let host = mse_f32(&a, &b);
+            prop_assert_close(dev, host, 1e-6, "device mse vs host mse_f32");
+        });
+    }
+
+    #[test]
+    fn prop_cfg_combine_matches_host_loop() {
+        let rt = Runtime::cpu().unwrap();
+        let rt = AssertUnwindSafe(&rt);
+        proptest_cases(60, |g| {
+            let n = g.usize_in(1..=64);
+            let u = g.vec_f32(n, -2.0, 2.0);
+            let c = g.vec_f32(n, -2.0, 2.0);
+            let s = g.f32_in(0.0, 10.0);
+            let du = rt.upload(&u, &[n]).unwrap();
+            let dc = rt.upload(&c, &[n]).unwrap();
+            let ds = rt.upload(&[s], &[]).unwrap();
+            let exe = rt.cfg_combine(&[n]).unwrap();
+            let out = exe.run(&[&du, &dc, &ds]).unwrap();
+            let mut dev = vec![0.0f32; n];
+            rt.download_into(&out, &mut dev).unwrap();
+            for i in 0..n {
+                let host = u[i] + s * (c[i] - u[i]);
+                prop_assert_close(dev[i] as f64, host as f64, 1e-6, "cfg combine element");
+            }
+        });
+    }
+
+    #[test]
+    fn scale_and_axpy_primitives() {
+        let rt = Runtime::cpu().unwrap();
+        let x = rt.upload(&[1.0, -2.0, 3.0], &[3]).unwrap();
+        let y = rt.upload(&[10.0, 10.0, 10.0], &[3]).unwrap();
+        let a = rt.upload(&[0.5], &[]).unwrap();
+
+        let scaled = rt.scale(&[3]).unwrap().run(&[&x, &a]).unwrap();
+        let mut out = [0.0f32; 3];
+        rt.download_into(&scaled, &mut out).unwrap();
+        assert_eq!(out, [0.5, -1.0, 1.5]);
+
+        let axpy = rt.axpy(&[3]).unwrap().run(&[&x, &y, &a]).unwrap();
+        rt.download_into(&axpy, &mut out).unwrap();
+        assert_eq!(out, [10.5, 9.0, 11.5]);
+    }
+
+    #[test]
+    fn fused_executables_are_cached_per_shape() {
+        let rt = Runtime::cpu().unwrap();
+        let a = rt.mse(&[4, 4]).unwrap();
+        let b = rt.mse(&[4, 4]).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same (op, dims) must hit the cache");
+        let c = rt.mse(&[8]).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn fused_arity_is_enforced() {
+        let rt = Runtime::cpu().unwrap();
+        let x = rt.upload(&[1.0, 2.0], &[2]).unwrap();
+        let exe = rt.cfg_combine(&[2]).unwrap();
+        assert_eq!(exe.arity(), 3);
+        let err = exe.run(&[&x, &x]).unwrap_err().to_string();
+        assert!(err.contains("expected 3 args"), "{err}");
+    }
+
+    #[test]
+    fn prop_device_mse_sees_asymmetry() {
+        // mse(a, b) == mse(b, a) and mse(a, a) == 0 on device.
+        let rt = Runtime::cpu().unwrap();
+        let rt = AssertUnwindSafe(&rt);
+        proptest_cases(30, |g| {
+            let n = g.usize_in(1..=32);
+            let a = g.vec_f32(n, -1.0, 1.0);
+            let b = g.vec_f32(n, -1.0, 1.0);
+            let da = rt.upload(&a, &[n]).unwrap();
+            let db = rt.upload(&b, &[n]).unwrap();
+            let exe = rt.mse(&[n]).unwrap();
+            let ab = rt.read_scalar(&exe.run(&[&da, &db]).unwrap()).unwrap();
+            let ba = rt.read_scalar(&exe.run(&[&db, &da]).unwrap()).unwrap();
+            let aa = rt.read_scalar(&exe.run(&[&da, &da]).unwrap()).unwrap();
+            prop_assert((ab - ba).abs() < 1e-9, "mse must be symmetric");
+            prop_assert(aa == 0.0, "mse(a, a) must be exactly zero");
+        });
     }
 }

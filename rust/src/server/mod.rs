@@ -74,10 +74,12 @@ struct Telemetry {
 }
 
 /// The running server; dropping it (or calling [`Server::shutdown`]) stops
-/// the listener and workers.
+/// the listener and workers. Shutdown broadcasts on the queue condvar so
+/// idle workers wake and exit immediately instead of polling.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    queue: Queue,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -95,6 +97,18 @@ impl Default for ServerConfig {
 }
 
 type Queue = Arc<(Mutex<VecDeque<Job>>, Condvar)>;
+
+/// Set the stop flag under the queue lock and wake every waiting worker.
+/// Taking the lock first closes the race where a worker has checked `stop`
+/// but not yet parked on the condvar (the notify would otherwise be lost
+/// and shutdown's joins would hang). Shared by [`Server::shutdown`]/drop
+/// and the wire-level `shutdown` op so the protocol exists once.
+fn signal_stop(queue: &Queue, stop: &AtomicBool) {
+    let (lock, cv) = &**queue;
+    let _guard = lock.lock().unwrap();
+    stop.store(true, Ordering::SeqCst);
+    cv.notify_all();
+}
 
 impl Server {
     /// Start the listener + worker pool.
@@ -120,6 +134,10 @@ impl Server {
                         let job = {
                             let (lock, cv) = &*queue;
                             let mut q = lock.lock().unwrap();
+                            // Plain wait (no timeout): enqueue notifies one
+                            // worker, shutdown sets `stop` under the queue
+                            // lock and notifies all, so no wakeup is lost
+                            // and idle workers never spin.
                             loop {
                                 if let Some(j) = q.pop_front() {
                                     break j;
@@ -127,10 +145,7 @@ impl Server {
                                 if stop.load(Ordering::SeqCst) {
                                     return;
                                 }
-                                let (nq, _timeout) = cv
-                                    .wait_timeout(q, std::time::Duration::from_millis(50))
-                                    .unwrap();
-                                q = nq;
+                                q = cv.wait(q).unwrap();
                             }
                         };
                         let queue_s = job.enqueued.elapsed().as_secs_f64();
@@ -175,7 +190,7 @@ impl Server {
             );
         }
 
-        Ok(Server { addr, stop, handles })
+        Ok(Server { addr, stop, queue, handles })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -184,7 +199,7 @@ impl Server {
 
     /// Stop accepting and join all threads.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        signal_stop(&self.queue, &self.stop);
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -193,7 +208,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        signal_stop(&self.queue, &self.stop);
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -281,21 +296,35 @@ fn handle_line(
                 ])
             }
             "shutdown" => {
-                stop.store(true, Ordering::SeqCst);
+                signal_stop(queue, stop);
                 let r = Json::obj(vec![("status", Json::str("ok")), ("stopping", Json::Bool(true))]);
                 writeln!(writer, "{r}")?;
                 return Ok(false);
             }
             "generate" => {
                 let (tx, rx) = mpsc::channel();
-                {
+                // Check `stop` under the queue lock: workers only exit
+                // after observing `stop` (set under the same lock), so a
+                // job pushed while `stop` is still false here is
+                // guaranteed a live worker — enqueueing after shutdown
+                // would otherwise block rx.recv() forever and deadlock
+                // the join in Server::shutdown.
+                let enqueued = {
                     let (lock, cv) = &**queue;
-                    lock.lock()
-                        .unwrap()
-                        .push_back(Job { payload, enqueued: Instant::now(), reply: tx });
-                    cv.notify_one();
+                    let mut q = lock.lock().unwrap();
+                    if stop.load(Ordering::SeqCst) {
+                        false
+                    } else {
+                        q.push_back(Job { payload, enqueued: Instant::now(), reply: tx });
+                        cv.notify_one();
+                        true
+                    }
+                };
+                if enqueued {
+                    rx.recv().unwrap_or_else(|_| err_json("worker dropped"))
+                } else {
+                    err_json("server is shutting down")
                 }
-                rx.recv().unwrap_or_else(|_| err_json("worker dropped"))
             }
             other => err_json(&format!("unknown op '{other}'")),
         };
@@ -339,6 +368,8 @@ fn handle_generate(
             ("reused_units", Json::num(s.reused_units as f64)),
             ("reuse_fraction", Json::num(s.reuse_fraction())),
             ("cache_peak_bytes", Json::num(s.cache_peak_bytes as f64)),
+            ("h2d_bytes", Json::num(s.h2d_bytes as f64)),
+            ("d2h_bytes", Json::num(s.d2h_bytes as f64)),
         ]))
     })();
 

@@ -117,22 +117,30 @@ pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
 
 /// Mean squared error between two equal-length f32 slices.
 ///
-/// Chunked accumulation in f64 keeps the result stable and lets LLVM
-/// autovectorise the inner loop (hot path: the Foresight δ update, Eq. 6).
+/// The difference is taken in f32 (matching the device-side `mse` fused
+/// executable bit-for-bit), then squared and accumulated in f64 so this is
+/// a rounding-stable reference the runtime property tests can compare the
+/// device reduction against at 1e-6. Four independent f64 lanes break the
+/// loop-carried dependency so the hot HotPath::Host measurement path still
+/// autovectorises.
 pub fn mse_f32(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
     if a.is_empty() {
         return 0.0;
     }
-    let mut acc = 0.0f64;
-    const CHUNK: usize = 4096;
-    for (ca, cb) in a.chunks(CHUNK).zip(b.chunks(CHUNK)) {
-        let mut s = 0.0f32;
-        for i in 0..ca.len() {
-            let d = ca[i] - cb[i];
-            s += d * d;
+    let mut lanes = [0.0f64; 4];
+    let (a4, a_tail) = a.split_at(a.len() - a.len() % 4);
+    let (b4, b_tail) = b.split_at(a4.len());
+    for (ca, cb) in a4.chunks_exact(4).zip(b4.chunks_exact(4)) {
+        for l in 0..4 {
+            let d = (ca[l] - cb[l]) as f64;
+            lanes[l] += d * d;
         }
-        acc += s as f64;
+    }
+    let mut acc = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    for (x, y) in a_tail.iter().zip(b_tail) {
+        let d = (x - y) as f64;
+        acc += d * d;
     }
     acc / a.len() as f64
 }

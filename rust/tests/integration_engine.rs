@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use foresight::config::Manifest;
-use foresight::engine::{Engine, Request};
+use foresight::engine::{Engine, HotPath, Request};
 use foresight::model::LoadedModel;
 use foresight::policy::{self, build_policy};
 use foresight::runtime::Runtime;
@@ -21,6 +21,15 @@ fn engine(model: &str, bucket: &str) -> Option<Engine> {
     let rt = Arc::new(Runtime::cpu().unwrap());
     let m = Arc::new(LoadedModel::load(rt, &manifest, model, bucket).unwrap());
     Some(Engine::new(m, manifest.schedule))
+}
+
+/// The same loaded model behind both hot-path modes (device-resident vs.
+/// seed-era host staging).
+fn engines_both_modes(model: &str, bucket: &str) -> Option<(Engine, Engine)> {
+    let dev = engine(model, bucket)?;
+    let manifest = Manifest::load(&Manifest::default_root()).unwrap();
+    let host = Engine::with_hot_path(dev.model().clone(), manifest.schedule, HotPath::Host);
+    Some((dev, host))
 }
 
 fn run(eng: &Engine, spec: &str, prompt: &str, seed: u64) -> foresight::engine::RunResult {
@@ -162,6 +171,60 @@ fn per_step_latency_drops_on_reuse_steps() {
     assert!(
         reuse_avg < compute_avg,
         "reuse steps should be cheaper: {reuse_avg} vs {compute_avg}"
+    );
+}
+
+#[test]
+fn device_and_host_hot_paths_are_bitwise_equivalent() {
+    // The satellite equivalence check: the device-resident refactor (fused
+    // MSE + fused CFG combine + parallel branches) must not change a single
+    // bit of the final latents for any shipped policy.
+    //
+    // Known sensitivity if this ever fails: (a) device drift MSE (XLA f32
+    // reduce) and host mse_f32 (f64 accumulation) agree to ~1e-6, so a
+    // Foresight δ landing within that band of γλ could flip one decision
+    // — diagnose via the reuse_map assert below firing first; (b) an XLA
+    // build that FMA-fuses cfg_combine's mul+add would break bitwise
+    // equality for every policy — diagnose via `none` failing too.
+    let Some((dev, host)) = engines_both_modes("opensora-sim", "240p-2s") else { return };
+    for spec in ["none", "static:n=1,r=2", "foresight:n=1,r=2,gamma=0.5"] {
+        let d = run(&dev, spec, "hot path equivalence prompt", 21);
+        let h = run(&host, spec, "hot path equivalence prompt", 21);
+        assert_eq!(
+            d.latents.data, h.latents.data,
+            "{spec}: device and host hot paths diverged"
+        );
+        assert_eq!(d.reuse_map, h.reuse_map, "{spec}: decisions diverged");
+        assert!(
+            d.stats.d2h_bytes <= h.stats.d2h_bytes,
+            "{spec}: device path must not download more than host staging \
+             ({} vs {})",
+            d.stats.d2h_bytes,
+            h.stats.d2h_bytes
+        );
+    }
+}
+
+#[test]
+fn device_hot_path_slashes_foresight_transfers_and_cache() {
+    let Some((dev, host)) = engines_both_modes("opensora-sim", "240p-2s") else { return };
+    let d = run(&dev, "foresight", "transfer accounting prompt", 4);
+    let h = run(&host, "foresight", "transfer accounting prompt", 4);
+    // ≥10× fewer device→host bytes per step (acceptance criterion): the
+    // F·P·D·4 per-site measurement downloads collapse to 4-byte scalars.
+    let reduction = h.stats.d2h_bytes_per_step() / d.stats.d2h_bytes_per_step();
+    assert!(
+        reduction >= 10.0,
+        "expected ≥10x d2h reduction, got {reduction:.1}x \
+         (host {} B/step, device {} B/step)",
+        h.stats.d2h_bytes_per_step(),
+        d.stats.d2h_bytes_per_step()
+    );
+    // Dropping the host mirrors halves the measured cache footprint.
+    let ratio = h.stats.cache_peak_bytes as f64 / d.stats.cache_peak_bytes as f64;
+    assert!(
+        (ratio - 2.0).abs() < 0.05,
+        "expected host-mode cache ≈2x device-mode cache, got {ratio:.2}x"
     );
 }
 

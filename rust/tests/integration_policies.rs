@@ -303,6 +303,72 @@ fn prop_prompt_embedding_shape_and_determinism() {
 }
 
 #[test]
+fn prop_decisions_invariant_under_branch_interleaving() {
+    // The engine runs the two CFG branches on concurrent threads, so the
+    // per-site action/observe calls of one step can interleave across
+    // branches in any order. Policy state is keyed per (layer, kind,
+    // branch); this property drives a policy once branch-sequentially and
+    // once branch-interleaved per site and asserts identical decisions —
+    // the determinism contract the parallel hot path relies on.
+    proptest_cases(40, |g: &mut Gen| {
+        let layers = g.usize_in(1..=6);
+        let steps = g.usize_in(10..=50);
+        let spec = *g.pick(&["static", "foresight", "delta-dit"]);
+        let info = fake_model(layers);
+        let mse_for = |step: usize, layer: usize, branch: usize| {
+            1.0 / (1.0 + step as f64 + layer as f64 * 0.3 + branch as f64 * 0.7)
+        };
+
+        let drive = |interleave: bool| -> Vec<bool> {
+            let mut p = build_policy(spec, &info, steps).unwrap();
+            p.begin_request(layers, steps);
+            let mut out = Vec::new();
+            for step in 0..steps {
+                let do_site = |p: &mut dyn ReusePolicy,
+                               out: &mut Vec<bool>,
+                               branch: usize,
+                               layer: usize,
+                               kind: BlockKind| {
+                    let site = coarse_site(layer, kind, branch);
+                    let a = p.action(step, site);
+                    if branch == 0 {
+                        out.push(a.is_reuse());
+                    }
+                    if let Action::Compute { measure: true, .. } = a {
+                        p.observe_mse(step, site, mse_for(step, layer, branch));
+                    }
+                };
+                if interleave {
+                    // per-site alternation with branch 1 leading — the
+                    // finest-grained reordering two branch threads sharing
+                    // the policy mutex can produce within a step
+                    for layer in 0..layers {
+                        for kind in BlockKind::ALL {
+                            do_site(p.as_mut(), &mut out, 1, layer, kind);
+                            do_site(p.as_mut(), &mut out, 0, layer, kind);
+                        }
+                    }
+                } else {
+                    for branch in [0usize, 1] {
+                        for layer in 0..layers {
+                            for kind in BlockKind::ALL {
+                                do_site(p.as_mut(), &mut out, branch, layer, kind);
+                            }
+                        }
+                    }
+                }
+            }
+            out
+        };
+
+        prop_assert(
+            drive(false) == drive(true),
+            format!("{spec}: decisions depend on CFG-branch interleaving"),
+        );
+    });
+}
+
+#[test]
 fn prop_foresight_lambda_matches_eq5_weighting() {
     // With constant warmup MSE m, Eq. 5 gives λ = m * (1 + 0.1 + 0.01).
     proptest_cases(40, |g: &mut Gen| {

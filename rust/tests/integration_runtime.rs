@@ -210,3 +210,32 @@ fn deterministic_execution_same_inputs_same_outputs() {
     };
     assert_eq!(run(), run(), "block execution must be deterministic");
 }
+
+#[test]
+fn state_mse_matches_host_reference_on_real_activations() {
+    // The device-side drift reduction (Foresight Eq. 5/6) against the host
+    // oracle, at full state size, on realistic block outputs — and at the
+    // advertised 4-bytes-per-measurement transfer cost.
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let Some(m) = load_model(&rt, "opensora-sim", "240p-2s") else { return };
+    let [f, p, d] = m.state_dims();
+    let mut rng = Rng::new(17);
+    let av = rng.normal_vec(f * p * d);
+    let bv = rng.normal_vec(f * p * d);
+    let a = rt.upload(&av, &[f, p, d]).unwrap();
+    let b = rt.upload(&bv, &[f, p, d]).unwrap();
+
+    let before = rt.transfer_stats().snapshot();
+    let dev = m.state_mse(&a, &b).unwrap();
+    let delta = rt.transfer_stats().snapshot().delta_since(&before);
+    assert_eq!(delta.d2h_bytes, 4, "state_mse must download exactly one f32");
+
+    let host = foresight::util::stats::mse_f32(&av, &bv);
+    let tol = 1e-5 * (1.0 + host.abs());
+    assert!(
+        (dev - host).abs() < tol,
+        "device mse {dev} vs host {host} (n={})",
+        f * p * d
+    );
+    assert_eq!(m.state_mse(&a, &a).unwrap(), 0.0);
+}

@@ -114,6 +114,20 @@ fn errors_are_reported_not_fatal() {
 }
 
 #[test]
+fn shutdown_is_prompt_with_idle_workers() {
+    // Workers park on the queue condvar; shutdown must notify them rather
+    // than relying on a poll interval, so joining an idle pool is fast.
+    let Some(server) = start_server(4) else { return };
+    let t0 = std::time::Instant::now();
+    server.shutdown();
+    let took = t0.elapsed();
+    assert!(
+        took < std::time::Duration::from_secs(1),
+        "idle shutdown should be immediate, took {took:?}"
+    );
+}
+
+#[test]
 fn deterministic_across_connections() {
     let Some(server) = start_server(2) else { return };
     let addr = server.addr();
