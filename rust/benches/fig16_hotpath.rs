@@ -4,13 +4,16 @@
 //!
 //! The device path measures Foresight's Eq. 5/6 drift with a fused
 //! on-device MSE (4 bytes down per measured site instead of `F·P·D·4`),
-//! combines CFG branches on device (one epsilon download per step instead
-//! of two) and runs the two branches on concurrent threads. This bench
-//! asserts the headline claims: ≥10× fewer device→host bytes per step for
-//! Foresight, a wall-clock win, and bit-identical final latents for a
-//! fixed seed under every shipped policy.
+//! combines CFG branches on device, steps the sampler on device over the
+//! resident latent, and runs the two branches on a persistent worker
+//! thread. This bench asserts the headline claims: ≥10× fewer device→host
+//! bytes per step for Foresight, a wall-clock win, and final latents
+//! matching the host staging to ≤1e-6 per element for a fixed seed under
+//! every shipped policy (the sampler steps on device now, so agreement is
+//! to f32 rounding rather than bit-exact; `fig17_resident` covers the
+//! steady-state transfer A/B).
 
-use foresight::bench_support::BenchCtx;
+use foresight::bench_support::{first_latent_mismatch, BenchCtx};
 use foresight::engine::{HotPath, Request};
 use foresight::policy::build_policy;
 use foresight::util::benchkit::{MdTable, Report};
@@ -73,11 +76,13 @@ fn main() -> anyhow::Result<()> {
         );
         let host = run(&mut ctx, HotPath::Host, spec, 7)?;
 
-        let identical = dev.latents.data == host.latents.data;
+        let mismatch = first_latent_mismatch(&dev.latents.data, &host.latents.data, 1e-6);
         assert!(
-            identical,
-            "{name}: device and host hot paths must produce bit-identical latents"
+            mismatch.is_none(),
+            "{name}: device and host hot paths must agree to ≤1e-6 per element \
+             (first mismatch: {mismatch:?})"
         );
+        let close = mismatch.is_none();
         let reduction = host.stats.d2h_bytes_per_step() / dev.stats.d2h_bytes_per_step().max(1.0);
         let speedup = host.stats.wall_s / dev.stats.wall_s;
         if spec.starts_with("foresight") {
@@ -92,7 +97,7 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.2}", r.stats.d2h_bytes_per_step() / 1024.0),
                 format!("{:.2}", r.stats.h2d_bytes_per_step() / 1024.0),
                 if mode == "device" { format!("{reduction:.1}x") } else { "1.0x".into() },
-                if identical { "bit-identical".into() } else { "DIVERGED".into() },
+                if close { "≤1e-6".into() } else { "DIVERGED".into() },
             ]);
         }
     }

@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::config::Manifest;
-use crate::engine::{Engine, HotPath, Request, RunResult};
+use crate::engine::{Engine, HotPath, Request, RunResult, RunStats};
 use crate::metrics::{self, ClipProxy, Decoder, FeatureNet, Frames};
 use crate::model::LoadedModel;
 use crate::policy::build_policy;
@@ -49,7 +49,7 @@ impl BenchCtx {
     }
 
     /// The shared PJRT runtime (its [`crate::runtime::TransferStats`] is
-    /// the ground truth for the fig16 transfer-volume assertions).
+    /// the ground truth for the fig16/fig17 transfer-volume assertions).
     pub fn runtime(&self) -> &Arc<Runtime> {
         &self.rt
     }
@@ -84,6 +84,38 @@ impl BenchCtx {
         let b = &engine.model().bucket;
         Decoder::new(b.ph, b.pw, engine.model().info.latent_channels)
     }
+}
+
+/// Marginal per-step transfer bytes `(h2d, d2h)` between two runs of the
+/// same request at different step counts. Differencing the two runs
+/// cancels everything that does not scale with the step count (text
+/// conditioning, the initial latent, the CFG scale, the final download),
+/// isolating the steady-state per-step bus traffic — the quantity
+/// `fig17_resident` A/Bs across [`HotPath`] modes. Per-step scalars that
+/// upload at request start (timesteps, sampler coefficients) scale with
+/// the step count and are correctly charged here.
+pub fn steady_state_bytes_per_step(short: &RunStats, long: &RunStats) -> (f64, f64) {
+    let ds = long.per_step_s.len().saturating_sub(short.per_step_s.len()).max(1) as f64;
+    (
+        long.h2d_bytes.saturating_sub(short.h2d_bytes) as f64 / ds,
+        long.d2h_bytes.saturating_sub(short.d2h_bytes) as f64 / ds,
+    )
+}
+
+/// First element pair violating the relative tolerance
+/// `|a − b| ≤ tol·(1 + |b|)`, or `None` when the slices agree — the one
+/// shared device-vs-host latent equivalence criterion (fig16, fig17 and
+/// the engine equivalence test all call this so the tolerance cannot
+/// drift apart between them). Panics on length mismatch.
+pub fn first_latent_mismatch(a: &[f32], b: &[f32], tol: f64) -> Option<(usize, f32, f32)> {
+    assert_eq!(a.len(), b.len(), "latent length mismatch");
+    a.iter().zip(b).enumerate().find_map(|(i, (&x, &y))| {
+        if ((x - y).abs() as f64) > tol * (1.0 + y.abs() as f64) {
+            Some((i, x, y))
+        } else {
+            None
+        }
+    })
 }
 
 /// One generation under a policy spec.

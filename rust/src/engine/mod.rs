@@ -10,35 +10,44 @@
 //!
 //! # Hot path
 //!
-//! The denoising loop is **device-resident**: activations never visit the
-//! host between the initial latent upload and the per-step epsilon
-//! download. Per step the host↔device traffic is exactly
+//! Under [`HotPath::Device`] the denoising state is **device-resident for
+//! the whole request**: the initial latent uploads once, every step feeds
+//! `h0 = embed(x)` straight from the resident latent, the CFG combine
+//! `uncond + s·(cond − uncond)` and the sampler update (a single `axpy`
+//! for rflow Euler, the fused `ddim_step` for DDIM) chain as fused
+//! executables over device buffers, and the final latent downloads exactly
+//! once after the last step.
 //!
-//! * **up**: the current latent (`F·P·C·4` bytes) + the 4-byte timestep;
-//! * **down**: one combined epsilon (`F·P·C·4` bytes) — the CFG combine
-//!   `uncond + s·(cond − uncond)` runs as a fused executable, so only one
-//!   branch result crosses the bus — plus, for measuring policies
-//!   (Foresight), **4 bytes per measured site**: the Eq. 5/6 drift MSE is a
-//!   fused on-device reduction against the cached activation.
+//! Request-start uploads (all amortized over the run): the text
+//! conditioning, the CFG scale, the DDIM clamp bounds, and — because
+//! `t_value(i)` and the step coefficients are known for all steps up
+//! front — the per-step timestep scalars and sampler coefficients
+//! (4 bytes each). Steady-state per-step bus traffic is therefore **zero
+//! latent bytes**; the only recurring transfer is 4 bytes down per
+//! measured site for measuring policies (Foresight's Eq. 5/6 drift MSE is
+//! a fused on-device reduction against the cached activation), plus
+//! observer downloads on analysis runs.
 //!
-//! The seed engine instead downloaded every measured block output in full
-//! (`F·P·D·4` bytes per site per step, `D ≫ C`) and both branch epsilons;
-//! that staging survives as [`HotPath::Host`] so
-//! `benches/fig16_hotpath.rs` and the engine-equivalence test can A/B the
-//! two pipelines — final latents are bit-identical for a fixed seed.
+//! The seed engine instead uploaded the full latent (`F·P·C·4` bytes) and
+//! downloaded an epsilon of the same size every step and advanced `x` in a
+//! host loop; that staging survives as [`HotPath::Host`] so
+//! `benches/fig17_resident.rs` (steady-state traffic ≥100× lower) and
+//! `benches/fig16_hotpath.rs` can A/B the two pipelines — final latents
+//! agree to ≤1e-6 per element, decisions identically.
 //!
 //! # Branch parallelism
 //!
-//! Under [`HotPath::Device`] the two CFG branches of a step execute on
-//! concurrent scoped threads: each branch owns its own [`FeatureCache`]
-//! (keys are branch-disjoint) and the policy is consulted through a mutex.
-//! Policy state is keyed per (layer, kind, branch), so interleaving the
-//! branches never changes a decision — decisions for step `t` depend only
-//! on observations from steps `< t`, which both orderings deliver
-//! identically. Text K/V precompute parallelizes the same way at request
-//! start. When a [`StepObserver`] is attached (analysis runs) the engine
-//! drops to sequential branches so observer callbacks arrive in the
-//! deterministic seed order.
+//! Under [`HotPath::Device`] the uncond CFG branch runs on a **persistent
+//! per-request worker thread** fed over a channel (one spawn per request,
+//! not per step) while the cond branch runs on the caller's thread. Each
+//! branch owns its own [`FeatureCache`] (keys are branch-disjoint) and the
+//! policy is consulted through a mutex. Policy state is keyed per (layer,
+//! kind, branch), so interleaving the branches never changes a decision —
+//! decisions for step `t` depend only on observations from steps `< t`,
+//! which both orderings deliver identically. Text K/V precompute
+//! parallelizes the same way at request start. When a [`StepObserver`] is
+//! attached (analysis runs) the engine drops to sequential branches so
+//! observer callbacks arrive in the deterministic seed order.
 //!
 //! Other hot-path properties (EXPERIMENTS.md §Perf):
 //! * text K/V are precomputed once per request per (layer, kind, branch);
@@ -49,7 +58,7 @@
 
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use crate::cache::{CacheKey, FeatureCache, Unit};
@@ -57,7 +66,7 @@ use crate::config::ScheduleConfig;
 use crate::model::{BlockKind, LoadedModel, SubUnit};
 use crate::policy::{Action, CacheMode, Granularity, ReusePolicy, Site};
 use crate::runtime::{DeviceTensor, HostTensor};
-use crate::sampler;
+use crate::sampler::{self, Sampler};
 use crate::util::prng::Rng;
 use crate::util::stats::mse_f32;
 use crate::workload;
@@ -79,16 +88,19 @@ impl Request {
     }
 }
 
-/// Where per-step reductions (drift MSE, CFG combine) execute.
+/// Where the denoising state lives and per-step reductions execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum HotPath {
-    /// Device-resident (default): fused on-device MSE + CFG combine, one
-    /// epsilon download per step, CFG branches on concurrent threads.
+    /// Device-resident (default): the latent uploads once per request,
+    /// sampler steps / CFG combine / drift MSE run as fused executables,
+    /// the final latent downloads once, and the CFG branches run on a
+    /// persistent worker thread.
     #[default]
     Device,
-    /// Seed-era staging: full activation downloads for measurement, both
-    /// branch epsilons downloaded, host combine loop, sequential branches.
-    /// Kept for A/B benchmarking (`fig16_hotpath`) and equivalence tests.
+    /// Seed-era staging: per-step latent upload, full activation downloads
+    /// for measurement, both branch epsilons downloaded, host combine and
+    /// host sampler loop, sequential branches. Kept for A/B benchmarking
+    /// (`fig16_hotpath`, `fig17_resident`) and equivalence tests.
     Host,
 }
 
@@ -104,12 +116,16 @@ pub struct RunStats {
     pub fallback_units: u64,
     pub cache_peak_bytes: usize,
     pub cache_entries_per_layer: f64,
-    /// Host→device bytes moved by this run (latents, timesteps, text,
-    /// CFG scale).
+    /// Host→device bytes moved by this run. Under [`HotPath::Device`]:
+    /// text, CFG scale, the initial latent, and the per-step scalars
+    /// (timesteps + sampler coefficients), all at request start. Under
+    /// [`HotPath::Host`]: the full latent every step.
     pub h2d_bytes: u64,
     pub h2d_calls: u64,
-    /// Device→host bytes moved by this run (epsilons, drift measurements,
-    /// observer downloads).
+    /// Device→host bytes moved by this run. Under [`HotPath::Device`]:
+    /// 4-byte drift measurements, observer downloads, and one final
+    /// latent. Under [`HotPath::Host`]: both branch epsilons every step
+    /// plus full measured activations.
     pub d2h_bytes: u64,
     pub d2h_calls: u64,
 }
@@ -181,6 +197,16 @@ struct BranchCtx {
     text_kv: Vec<[(Arc<DeviceTensor>, Arc<DeviceTensor>); 2]>,
 }
 
+/// Request-constant knobs shared by the host and device step loops.
+#[derive(Clone, Copy)]
+struct RunParams {
+    steps: usize,
+    cfg_scale: f32,
+    granularity: Granularity,
+    cache_mode: CacheMode,
+    needs_measure: bool,
+}
+
 /// Step-constant inputs shared by both branch threads.
 struct StepCtx<'a> {
     step: usize,
@@ -221,6 +247,9 @@ struct BranchRun {
 /// Host mirrors of measured activations ([`HotPath::Host`] only).
 type HostMirror = BTreeMap<CacheKey, Vec<f32>>;
 
+/// What the branch worker receives per step: (step, t-embedding, h0).
+type BranchJob = (usize, Arc<DeviceTensor>, Arc<DeviceTensor>);
+
 impl Engine {
     pub fn new(model: Arc<LoadedModel>, schedule: ScheduleConfig) -> Self {
         Self::with_hot_path(model, schedule, HotPath::Device)
@@ -238,6 +267,12 @@ impl Engine {
 
     pub fn hot_path(&self) -> HotPath {
         self.hot_path
+    }
+
+    /// The denoising-schedule constants this engine samples under (the
+    /// server validates wire-level step counts against these).
+    pub fn schedule(&self) -> &ScheduleConfig {
+        &self.schedule
     }
 
     /// Precompute one branch's text conditioning (projection + per-layer
@@ -266,25 +301,22 @@ impl Engine {
         &self,
         req: &Request,
         policy: &mut dyn ReusePolicy,
-        mut observer: Option<&mut dyn StepObserver>,
+        observer: Option<&mut dyn StepObserver>,
     ) -> Result<RunResult> {
-        let m = &self.model;
-        let info = &m.info;
-        let rt = m.runtime().clone();
+        let info = &self.model.info;
         let steps = req.steps.unwrap_or(info.steps);
         let cfg_scale = req.cfg_scale.unwrap_or(info.cfg_scale) as f32;
         let smp = sampler::build(info.sampler, &self.schedule, steps);
-        let [f, p, _d] = m.state_dims();
-        let [_, _, c_lat] = m.latent_dims();
-        let latent_elems = f * p * c_lat;
 
         policy.begin_request(info.layers, steps);
-        let granularity = policy.granularity();
-        let cache_mode = policy.cache_mode();
-        let needs_measure = policy.needs_measurement();
-        let policy_name = policy.name();
-
-        let mut stats = RunStats { policy: policy_name, ..Default::default() };
+        let mut stats = RunStats { policy: policy.name(), ..Default::default() };
+        let rp = RunParams {
+            steps,
+            cfg_scale,
+            granularity: policy.granularity(),
+            cache_mode: policy.cache_mode(),
+            needs_measure: policy.needs_measurement(),
+        };
 
         // --- request-constant conditioning --------------------------------
         // The two branch contexts are independent executable chains, so
@@ -305,110 +337,308 @@ impl Engine {
         stats.h2d_bytes += 2 * (info.text_len * info.d_text * 4) as u64;
         stats.h2d_calls += 2;
 
-        // Fused CFG combine (scale is a rank-0 runtime argument, uploaded
-        // once per request).
-        let (cfg_exec, cfg_scale_dev) = match self.hot_path {
-            HotPath::Device => {
-                let exe = rt.cfg_combine(&[f, p, c_lat])?;
-                let sd = rt.upload(&[cfg_scale], &[])?;
-                stats.h2d_bytes += 4;
-                stats.h2d_calls += 1;
-                (Some(exe), Some(sd))
-            }
-            HotPath::Host => (None, None),
-        };
+        match self.hot_path {
+            HotPath::Device => self.generate_device(req, rp, smp, branches, policy, observer, stats),
+            HotPath::Host => self.generate_host(req, rp, smp, branches, policy, observer, stats),
+        }
+    }
 
-        // --- initial latents ----------------------------------------------
+    /// The resident-latent step loop (see module docs §Hot path): the
+    /// latent `x` is a [`DeviceTensor`] for the entire request.
+    #[allow(clippy::too_many_arguments)]
+    fn generate_device(
+        &self,
+        req: &Request,
+        rp: RunParams,
+        smp: Box<dyn Sampler>,
+        branches: [BranchCtx; 2],
+        policy: &mut dyn ReusePolicy,
+        mut observer: Option<&mut dyn StepObserver>,
+        mut stats: RunStats,
+    ) -> Result<RunResult> {
+        let m = &self.model;
+        let info = &m.info;
+        let rt = m.runtime().clone();
+        let [f, p, _d] = m.state_dims();
+        let [_, _, c_lat] = m.latent_dims();
+        let dims = [f, p, c_lat];
+        let latent_elems = f * p * c_lat;
+
+        // Fused per-request executables: CFG combine + the sampler step
+        // (scale / schedule scalars are rank-0 runtime arguments).
+        let cfg_exec = rt.cfg_combine(&dims)?;
+        let cfg_scale_dev = rt.upload(&[rp.cfg_scale], &[])?;
+        stats.h2d_bytes += 4;
+        stats.h2d_calls += 1;
+        let stepper = sampler::DeviceStepper::new(&rt, smp.kind(), &dims)?;
+        stats.h2d_bytes += stepper.setup_h2d_bytes();
+        stats.h2d_calls += stepper.setup_h2d_calls();
+
+        // --- initial latents: uploaded once, resident until the end -------
         let mut latent_rng = Rng::from_seed_and_label(req.seed, "latents");
-        let mut x = latent_rng.normal_vec(latent_elems);
+        let x_init = latent_rng.normal_vec(latent_elems);
+        let mut x_dev = rt.upload(&x_init, &dims)?;
+        stats.h2d_bytes += (latent_elems * 4) as u64;
+        stats.h2d_calls += 1;
 
-        // --- run state ------------------------------------------------------
-        // One cache (and, in Host mode, one measurement mirror) per CFG
-        // branch: branch keys are disjoint, which is what lets the branches
-        // run on concurrent threads without shared mutable state.
-        let mut caches = [FeatureCache::new(), FeatureCache::new()];
-        let mut mirrors: [HostMirror; 2] = [BTreeMap::new(), BTreeMap::new()];
-        let mut reuse_map: Vec<Vec<bool>> = Vec::with_capacity(steps);
-        let mut eps = vec![0.0f32; latent_elems];
-        // Only the host-staged combine needs the second epsilon buffer.
-        let mut eps_cond = match self.hot_path {
-            HotPath::Host => vec![0.0f32; latent_elems],
-            HotPath::Device => Vec::new(),
-        };
+        // Every t_value and step coefficient is known up front, so the
+        // timestep embeddings and the per-step sampler scalars upload once
+        // at request start (4 bytes per scalar).
+        let t_values: Vec<f32> = (0..rp.steps).map(|i| smp.t_value(i)).collect();
+        let c_steps = m.t_embeds(&t_values)?;
+        stats.h2d_bytes += 4 * rp.steps as u64;
+        stats.h2d_calls += rp.steps as u64;
+        let mut coeffs = Vec::with_capacity(rp.steps);
+        for i in 0..rp.steps {
+            let cf = stepper.upload_coeffs(&smp.step_coeffs(i))?;
+            stats.h2d_bytes += 4 * cf.len() as u64;
+            stats.h2d_calls += cf.len() as u64;
+            coeffs.push(cf);
+        }
 
-        let parallel = self.hot_path == HotPath::Device && observer.is_none();
+        let parallel = observer.is_none();
+        let mut cache_cond = FeatureCache::new();
+        // Host mirrors are a HotPath::Host concern (apply_coarse only
+        // writes them in its Host arm); the resident loop passes empty
+        // scratch maps to satisfy run_branch's shared signature.
+        let mut mirror_scratch: HostMirror = BTreeMap::new();
+        let mut reuse_map: Vec<Vec<bool>> = Vec::with_capacity(rp.steps);
         let policy_mx = Mutex::new(policy);
 
         let t_start = Instant::now();
-        for step in 0..steps {
+        // The uncond branch runs on one persistent worker thread per
+        // request, fed per step over a channel; the worker owns the uncond
+        // cache for the whole loop and hands it back at join. (Replaces
+        // the seed-era per-step thread::scope spawn.)
+        let uncond_cache: Result<FeatureCache> = std::thread::scope(|sc| {
+            let (worker, tx_job, rx_res) = if parallel {
+                let (tx_job, rx_job) = mpsc::channel::<BranchJob>();
+                let (tx_res, rx_res) = mpsc::channel::<Result<BranchRun>>();
+                let bctx = &branches[1];
+                let policy_ref = &policy_mx;
+                let handle = sc.spawn(move || {
+                    let mut cache = FeatureCache::new();
+                    let mut mirror: HostMirror = BTreeMap::new();
+                    while let Ok((step, c, h0)) = rx_job.recv() {
+                        let ctx = StepCtx {
+                            step,
+                            granularity: rp.granularity,
+                            cache_mode: rp.cache_mode,
+                            needs_measure: rp.needs_measure,
+                            c: &c,
+                            h0: &h0,
+                        };
+                        let r = self.run_branch(
+                            &ctx, 1, bctx, &mut cache, &mut mirror, policy_ref, None,
+                        );
+                        let failed = r.is_err();
+                        if tx_res.send(r).is_err() || failed {
+                            break;
+                        }
+                    }
+                    cache
+                });
+                (Some(handle), Some(tx_job), Some(rx_res))
+            } else {
+                (None, None, None)
+            };
+            let mut seq_uncond_cache: Option<FeatureCache> =
+                if parallel { None } else { Some(FeatureCache::new()) };
+            let mut seq_uncond_mirror: HostMirror = BTreeMap::new();
+
+            // The step loop proper. Errors break out (instead of `?`-ing
+            // straight out of the scope closure) so the worker is always
+            // joined below — a worker panic must surface as an Err from
+            // generate, not as a re-raised panic at scope exit.
+            let mut loop_err: Option<anyhow::Error> = None;
+            {
+                let mut do_step = |step: usize| -> Result<()> {
+                    let t_step = Instant::now();
+                    let c = c_steps[step].clone();
+                    let h0 = Arc::new(m.embed(&x_dev)?);
+                    // Feed the worker first so both branches overlap.
+                    if let Some(tx) = &tx_job {
+                        tx.send((step, c.clone(), h0.clone()))
+                            .map_err(|_| anyhow!("uncond branch worker exited early"))?;
+                    }
+                    let ctx = StepCtx {
+                        step,
+                        granularity: rp.granularity,
+                        cache_mode: rp.cache_mode,
+                        needs_measure: rp.needs_measure,
+                        c: &c,
+                        h0: &h0,
+                    };
+                    let b_cond = self.run_branch(
+                        &ctx,
+                        0,
+                        &branches[0],
+                        &mut cache_cond,
+                        &mut mirror_scratch,
+                        &policy_mx,
+                        observer.as_deref_mut(),
+                    )?;
+                    let b_uncond = if let Some(rx) = &rx_res {
+                        rx.recv()
+                            .map_err(|_| anyhow!("uncond branch worker disconnected"))??
+                    } else {
+                        let cu = seq_uncond_cache.as_mut().expect("sequential uncond cache");
+                        self.run_branch(
+                            &ctx,
+                            1,
+                            &branches[1],
+                            cu,
+                            &mut seq_uncond_mirror,
+                            &policy_mx,
+                            observer.as_deref_mut(),
+                        )?
+                    };
+                    b_cond.stats.merge_into(&mut stats);
+                    b_uncond.stats.merge_into(&mut stats);
+
+                    // eps = uncond + s·(cond − uncond), then the sampler
+                    // step — both fused; no latent byte crosses the bus.
+                    let eps_dev =
+                        cfg_exec.run(&[&b_uncond.eps, &b_cond.eps, &cfg_scale_dev])?;
+                    x_dev = smp.step_device(&stepper, &x_dev, &eps_dev, &coeffs[step])?;
+
+                    reuse_map.push(b_cond.decisions);
+                    stats.per_step_s.push(t_step.elapsed().as_secs_f64());
+                    Ok(())
+                };
+                for step in 0..rp.steps {
+                    if let Err(e) = do_step(step) {
+                        loop_err = Some(e);
+                        break;
+                    }
+                }
+            }
+
+            // Disconnect, then join: the worker drains and returns its
+            // cache state; a panic inside it becomes the root-cause Err.
+            drop(tx_job);
+            drop(rx_res);
+            let joined: Result<FeatureCache> = match (worker, seq_uncond_cache) {
+                (Some(h), _) => {
+                    h.join().map_err(|_| anyhow!("uncond CFG branch worker panicked"))
+                }
+                (None, Some(cache)) => Ok(cache),
+                (None, None) => Err(anyhow!("no uncond branch state")),
+            };
+            match (loop_err, joined) {
+                (_, Err(e)) => Err(e),
+                (Some(e), Ok(_)) => Err(e),
+                (None, Ok(cache)) => Ok(cache),
+            }
+        });
+        let cache_uncond = uncond_cache?;
+        debug_assert!(
+            mirror_scratch.is_empty(),
+            "host mirrors must stay empty under HotPath::Device"
+        );
+
+        // --- final latent: downloaded exactly once per request -------------
+        let mut x = vec![0.0f32; latent_elems];
+        rt.download_into(&x_dev, &mut x)?;
+        stats.d2h_bytes += (latent_elems * 4) as u64;
+        stats.d2h_calls += 1;
+        stats.wall_s = t_start.elapsed().as_secs_f64();
+
+        stats.cache_peak_bytes = cache_cond.peak_bytes() + cache_uncond.peak_bytes();
+        stats.cache_entries_per_layer = cache_cond
+            .entries_per_layer(info.layers)
+            .max(cache_uncond.entries_per_layer(info.layers));
+        let policy = policy_mx.into_inner().unwrap();
+        Ok(RunResult {
+            latents: HostTensor::new(vec![f, p, c_lat], x),
+            stats,
+            reuse_map,
+            thresholds: policy.thresholds(),
+        })
+    }
+
+    /// The seed-era host-staged step loop, kept verbatim for A/B
+    /// benchmarking and equivalence tests: per-step latent upload, both
+    /// branch epsilons downloaded, host CFG combine, host sampler step,
+    /// sequential branches.
+    #[allow(clippy::too_many_arguments)]
+    fn generate_host(
+        &self,
+        req: &Request,
+        rp: RunParams,
+        smp: Box<dyn Sampler>,
+        branches: [BranchCtx; 2],
+        policy: &mut dyn ReusePolicy,
+        mut observer: Option<&mut dyn StepObserver>,
+        mut stats: RunStats,
+    ) -> Result<RunResult> {
+        let m = &self.model;
+        let info = &m.info;
+        let rt = m.runtime().clone();
+        let [f, p, _d] = m.state_dims();
+        let [_, _, c_lat] = m.latent_dims();
+        let latent_elems = f * p * c_lat;
+
+        let mut latent_rng = Rng::from_seed_and_label(req.seed, "latents");
+        let mut x = latent_rng.normal_vec(latent_elems);
+
+        // One cache (and one measurement mirror) per CFG branch.
+        let mut caches = [FeatureCache::new(), FeatureCache::new()];
+        let mut mirrors: [HostMirror; 2] = [BTreeMap::new(), BTreeMap::new()];
+        let mut reuse_map: Vec<Vec<bool>> = Vec::with_capacity(rp.steps);
+        let mut eps = vec![0.0f32; latent_elems];
+        let mut eps_cond = vec![0.0f32; latent_elems];
+        let policy_mx = Mutex::new(policy);
+
+        let t_start = Instant::now();
+        for step in 0..rp.steps {
             let t_step = Instant::now();
-            let t_val = smp.t_value(step);
-            let c = Arc::new(m.t_embed(t_val)?);
+            let c = Arc::new(m.t_embed(smp.t_value(step))?);
             stats.h2d_bytes += 4;
             stats.h2d_calls += 1;
             let x_dev = rt.upload(&x, &[f, p, c_lat])?;
             stats.h2d_bytes += (latent_elems * 4) as u64;
             stats.h2d_calls += 1;
             let h0 = Arc::new(m.embed(&x_dev)?);
-            let ctx = StepCtx { step, granularity, cache_mode, needs_measure, c: &c, h0: &h0 };
+            let ctx = StepCtx {
+                step,
+                granularity: rp.granularity,
+                cache_mode: rp.cache_mode,
+                needs_measure: rp.needs_measure,
+                c: &c,
+                h0: &h0,
+            };
 
             let [cache_cond, cache_uncond] = &mut caches;
             let [mirror_cond, mirror_uncond] = &mut mirrors;
-            // One scoped spawn+join per step (~tens of µs) against ~2·L
-            // block dispatches (~ms each) per branch — <1% overhead on the
-            // shipped buckets. A persistent per-request branch worker fed
-            // over a channel would remove it if profiling ever shows
-            // otherwise.
-            let (r_cond, r_uncond) = if parallel {
-                std::thread::scope(|sc| {
-                    let hu = sc.spawn(|| {
-                        self.run_branch(
-                            &ctx, 1, &branches[1], cache_uncond, mirror_uncond, &policy_mx,
-                            None,
-                        )
-                    });
-                    let rc = self.run_branch(
-                        &ctx, 0, &branches[0], cache_cond, mirror_cond, &policy_mx, None,
-                    );
-                    let ru = match hu.join() {
-                        Ok(r) => r,
-                        Err(_) => Err(anyhow!("uncond CFG branch thread panicked")),
-                    };
-                    (rc, ru)
-                })
-            } else {
-                let rc = self.run_branch(
-                    &ctx, 0, &branches[0], cache_cond, mirror_cond, &policy_mx,
-                    observer.as_deref_mut(),
-                );
-                let ru = self.run_branch(
-                    &ctx, 1, &branches[1], cache_uncond, mirror_uncond, &policy_mx,
-                    observer.as_deref_mut(),
-                );
-                (rc, ru)
-            };
-            let b_cond = r_cond?;
-            let b_uncond = r_uncond?;
+            let b_cond = self.run_branch(
+                &ctx,
+                0,
+                &branches[0],
+                cache_cond,
+                mirror_cond,
+                &policy_mx,
+                observer.as_deref_mut(),
+            )?;
+            let b_uncond = self.run_branch(
+                &ctx,
+                1,
+                &branches[1],
+                cache_uncond,
+                mirror_uncond,
+                &policy_mx,
+                observer.as_deref_mut(),
+            )?;
             b_cond.stats.merge_into(&mut stats);
             b_uncond.stats.merge_into(&mut stats);
 
-            // CFG combine: eps = uncond + s * (cond - uncond)
-            match (&cfg_exec, &cfg_scale_dev) {
-                (Some(exe), Some(sd)) => {
-                    let combined = exe.run(&[&b_uncond.eps, &b_cond.eps, sd])?;
-                    rt.download_into(&combined, &mut eps)?;
-                    stats.d2h_bytes += (latent_elems * 4) as u64;
-                    stats.d2h_calls += 1;
-                }
-                _ => {
-                    rt.download_into(&b_cond.eps, &mut eps_cond)?;
-                    rt.download_into(&b_uncond.eps, &mut eps)?;
-                    stats.d2h_bytes += 2 * (latent_elems * 4) as u64;
-                    stats.d2h_calls += 2;
-                    for i in 0..latent_elems {
-                        eps[i] += cfg_scale * (eps_cond[i] - eps[i]);
-                    }
-                }
+            // Host CFG combine: eps = uncond + s * (cond - uncond)
+            rt.download_into(&b_cond.eps, &mut eps_cond)?;
+            rt.download_into(&b_uncond.eps, &mut eps)?;
+            stats.d2h_bytes += 2 * (latent_elems * 4) as u64;
+            stats.d2h_calls += 2;
+            for i in 0..latent_elems {
+                eps[i] += rp.cfg_scale * (eps_cond[i] - eps[i]);
             }
             smp.step(&mut x, &eps, step);
             reuse_map.push(b_cond.decisions);

@@ -18,29 +18,41 @@
 //!
 //! # Hot path
 //!
-//! The denoising loop is **device-resident**: between the per-step latent
-//! upload (`F·P·C·4` bytes) and the single combined-epsilon download
-//! (`F·P·C·4` bytes), no activation crosses the host↔device bus.
+//! The denoising state is **device-resident for the whole request**: the
+//! initial latent uploads once, every step runs entirely over device
+//! buffers, and the final latent downloads once. In steady state no latent
+//! byte crosses the host↔device bus at all.
 //!
+//! * The sampler itself steps on device: rflow Euler is a single fused
+//!   `axpy` ([`runtime::Runtime::axpy`]) and DDIM a fused `ddim_step`
+//!   ([`runtime::Runtime::ddim_step`]) — x0-prediction, clamp and
+//!   re-noising in one dispatch — with the per-step schedule scalars
+//!   uploaded as rank-0 runtime arguments at request start
+//!   ([`sampler::DeviceStepper`]). Timestep embeddings precompute at
+//!   request start too, since every `t_value(i)` is known up front.
+//! * The classifier-free-guidance combine `uncond + s·(cond − uncond)` is
+//!   a fused executable ([`runtime::Runtime::cfg_combine`]) feeding the
+//!   sampler step directly; neither epsilon is ever downloaded.
 //! * Foresight's Eq. 5/6 drift MSE runs as a fused on-device reduction
 //!   ([`runtime::Runtime::mse`]) against the cached activation — a 4-byte
 //!   scalar download per measured site instead of the seed's full
-//!   `F·P·D·4` feature download (`D ≫ C`, so this is the dominant term:
-//!   ~`2·L·2` measured sites per step).
-//! * The classifier-free-guidance combine `uncond + s·(cond − uncond)` is
-//!   a fused executable ([`runtime::Runtime::cfg_combine`]), halving the
-//!   epsilon traffic; `scale`/`axpy` primitives are in place for sampler
-//!   offload.
-//! * The two CFG branches of each step execute on concurrent scoped
-//!   threads with branch-disjoint caches and policy state (see
-//!   [`engine`] module docs for the determinism argument), as does the
-//!   per-request text-K/V precompute.
+//!   `F·P·D·4` feature download. This is the only recurring per-step
+//!   transfer, and only for measuring policies.
+//! * The uncond CFG branch of each step runs on a persistent per-request
+//!   worker thread fed over a channel, with branch-disjoint caches and
+//!   policy state (see [`engine`] module docs for the determinism
+//!   argument); the per-request text-K/V precompute parallelizes the same
+//!   way.
 //!
 //! Every transfer is metered: per run in [`engine::RunStats`]
 //! (`h2d_bytes`/`d2h_bytes`) and globally in
-//! [`runtime::TransferStats`]. `benches/fig16_hotpath.rs` A/Bs this
-//! pipeline against the seed-era host staging ([`engine::HotPath::Host`])
-//! and asserts the ≥10× transfer reduction with bit-identical latents.
+//! [`runtime::TransferStats`]. `benches/fig17_resident.rs` A/Bs the
+//! resident loop against the seed-era host staging
+//! ([`engine::HotPath::Host`], which still uploads the latent and
+//! downloads both epsilons every step) and asserts a ≥100× steady-state
+//! per-step transfer reduction for both sampler families with final
+//! latents matching to ≤1e-6; `benches/fig16_hotpath.rs` covers the
+//! measurement-traffic half of that story per policy.
 
 pub mod analysis;
 pub mod cache;

@@ -236,6 +236,14 @@ impl LoadedModel {
         self.run_with_weights(&self.pieces.t_embed, &[&ts], &self.t_embed_w)
     }
 
+    /// Timestep embeddings for a whole schedule in one pass. The
+    /// resident-latent engine calls this at request start — every
+    /// `t_value(i)` is known up front, so the per-step scalar uploads
+    /// (4 bytes each) all happen before the step loop begins.
+    pub fn t_embeds(&self, ts: &[f32]) -> Result<Vec<Arc<DeviceTensor>>> {
+        ts.iter().map(|&t| Ok(Arc::new(self.t_embed(t)?))).collect()
+    }
+
     /// Raw prompt embedding [S, d_text] → text tokens [S, D].
     pub fn text_proj(&self, raw: &HostTensor) -> Result<DeviceTensor> {
         let raw = self.rt.upload_tensor(raw)?;

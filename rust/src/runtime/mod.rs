@@ -9,11 +9,13 @@
 //! Besides the AOT artifacts, the runtime builds small **fused executables**
 //! at run time (cached per shape): elementwise add/sub for residual reuse,
 //! an `mse` reduction so Foresight's drift measurement downloads one f32
-//! instead of a full activation, a `cfg_combine` fusion so each denoising
-//! step downloads one epsilon instead of two, and `scale`/`axpy` primitives
-//! for sampler offload. Every host↔device copy is metered in
-//! [`TransferStats`] (see `engine` module docs §Hot path for the byte
-//! model).
+//! instead of a full activation, a `cfg_combine` fusion so only fused
+//! results ever leave the device, and the sampler-step primitives —
+//! `scale`/`axpy` (rflow Euler is a single axpy) and the fused `ddim_step`
+//! (x0-prediction, clamp, re-noising in one dispatch) — that let the
+//! engine keep the latent device-resident for a whole request. Every
+//! host↔device copy is metered in [`TransferStats`] (see `engine` module
+//! docs §Hot path for the byte model).
 //!
 //! Thread-safety: the PJRT CPU client and its loaded executables are
 //! internally thread-safe, but the `xla` crate wraps raw pointers and so
@@ -385,9 +387,12 @@ impl Runtime {
     /// | `cfg_combine` | `(uncond, cond, scale [])`   | `u + s·(c - u)`   |
     /// | `scale`       | `(x, alpha [])`              | `alpha·x`         |
     /// | `axpy`        | `(x, y, alpha [])`           | `alpha·x + y`     |
+    /// | `ddim_step`   | `(x, eps, sqrt_at [], sqrt_1mat [], sqrt_aprev [], sqrt_1maprev [], lo [], hi [])` | eta-0 DDIM update |
     ///
     /// Scalars are passed as rank-0 parameters (implicit XLA broadcast), so
-    /// one compiled executable serves every request regardless of CFG scale.
+    /// one compiled executable serves every request regardless of CFG scale
+    /// or schedule position — the denoising-schedule scalars are runtime
+    /// arguments, not compile-time constants.
     fn fused_executable(&self, op: &str, dims: &[usize]) -> Result<Arc<Executable>> {
         let key = (op.to_string(), dims.to_vec());
         if let Some(e) = self.fused.lock().unwrap().get(&key) {
@@ -441,6 +446,30 @@ impl Runtime {
                 let ax = x.mul_(&a).map_err(|e| err("mul", e))?;
                 (ax.add_(&y).map_err(|e| err("add", e))?, 3)
             }
+            "ddim_step" => {
+                // Fused deterministic DDIM update (eta = 0): x0-prediction,
+                // the clamp, and re-noising in one dispatch. The schedule
+                // scalars AND the clamp bounds are rank-0 runtime arguments
+                // so one compiled executable serves every (schedule, step);
+                // the op order mirrors sampler::Ddim::step exactly so host
+                // and device trajectories agree to f32 rounding.
+                let x = param(0, &idims, "x")?;
+                let eps = param(1, &idims, "eps")?;
+                let sqrt_at = param(2, &[], "sqrt_at")?;
+                let sqrt_1mat = param(3, &[], "sqrt_1mat")?;
+                let sqrt_aprev = param(4, &[], "sqrt_aprev")?;
+                let sqrt_1maprev = param(5, &[], "sqrt_1maprev")?;
+                let lo = param(6, &[], "clamp_lo")?;
+                let hi = param(7, &[], "clamp_hi")?;
+                let noise = eps.mul_(&sqrt_1mat).map_err(|e| err("noise", e))?;
+                let num = x.sub_(&noise).map_err(|e| err("x0 numerator", e))?;
+                let x0 = num.div_(&sqrt_at).map_err(|e| err("x0 divide", e))?;
+                let x0 = x0.max_(&lo).map_err(|e| err("clamp lo", e))?;
+                let x0 = x0.min_(&hi).map_err(|e| err("clamp hi", e))?;
+                let signal = x0.mul_(&sqrt_aprev).map_err(|e| err("signal", e))?;
+                let renoise = eps.mul_(&sqrt_1maprev).map_err(|e| err("renoise", e))?;
+                (signal.add_(&renoise).map_err(|e| err("add", e))?, 8)
+            }
             other => return Err(anyhow!("unknown fused op {other}")),
         };
         let comp = root.build().map_err(|e| err("build", e))?;
@@ -488,9 +517,20 @@ impl Runtime {
     }
 
     /// `alpha·x + y` with scalar alpha as a runtime argument (args: x, y,
-    /// alpha) — the sampler-update primitive for future device offload.
+    /// alpha) — one rflow Euler step over the resident latent
+    /// (`x' = dt·v + x`; see [`crate::sampler::DeviceStepper`]).
     pub fn axpy(&self, dims: &[usize]) -> Result<Arc<Executable>> {
         self.fused_executable("axpy", dims)
+    }
+
+    /// One fused eta-0 DDIM step over the resident latent:
+    /// `x' = sqrt_aprev·clamp((x − sqrt_1mat·eps)/sqrt_at, lo, hi)
+    /// + sqrt_1maprev·eps`, with every scalar a rank-0 runtime argument
+    /// (args: x, eps, sqrt_at, sqrt_1mat, sqrt_aprev, sqrt_1maprev, lo,
+    /// hi). Pairs with `axpy` so neither sampler family ever round-trips
+    /// the latent through the host (see [`crate::sampler::DeviceStepper`]).
+    pub fn ddim_step(&self, dims: &[usize]) -> Result<Arc<Executable>> {
+        self.fused_executable("ddim_step", dims)
     }
 
     /// Number of compiled artifacts currently cached.
@@ -630,6 +670,46 @@ mod tests {
         let axpy = rt.axpy(&[3]).unwrap().run(&[&x, &y, &a]).unwrap();
         rt.download_into(&axpy, &mut out).unwrap();
         assert_eq!(out, [10.5, 9.0, 11.5]);
+    }
+
+    #[test]
+    fn ddim_step_fused_matches_host_formula() {
+        let rt = Runtime::cpu().unwrap();
+        let dims = [5usize];
+        // x0 for the ±6-style clamp window is exercised by the large |x|
+        // entries below.
+        let x = [0.5f32, -7.5, 7.5, 1.0, -0.25];
+        let eps = [0.1f32, -0.3, 0.2, 0.0, 0.7];
+        let (sat, s1mat, saprev, s1maprev) = (0.9f32, 0.435f32, 0.95f32, 0.312f32);
+        let (lo, hi) = (-6.0f32, 6.0f32);
+        let dx = rt.upload(&x, &dims).unwrap();
+        let de = rt.upload(&eps, &dims).unwrap();
+        let scalars: Vec<_> = [sat, s1mat, saprev, s1maprev, lo, hi]
+            .iter()
+            .map(|&v| rt.upload(&[v], &[]).unwrap())
+            .collect();
+        let exe = rt.ddim_step(&dims).unwrap();
+        assert_eq!(exe.arity(), 8);
+        let out = exe
+            .run(&[
+                &dx, &de, &scalars[0], &scalars[1], &scalars[2], &scalars[3], &scalars[4],
+                &scalars[5],
+            ])
+            .unwrap();
+        let mut dev = [0.0f32; 5];
+        rt.download_into(&out, &mut dev).unwrap();
+        for i in 0..5 {
+            let x0 = ((x[i] - s1mat * eps[i]) / sat).clamp(lo, hi);
+            let host = saprev * x0 + s1maprev * eps[i];
+            assert!(
+                (dev[i] - host).abs() <= 1e-6 * (1.0 + host.abs()),
+                "elem {i}: device {} vs host {host}",
+                dev[i]
+            );
+        }
+        // the clamp actually fired for the out-of-range elements
+        let x0_unclamped = (x[1] - s1mat * eps[1]) / sat;
+        assert!(x0_unclamped < lo, "test vector must exercise the clamp");
     }
 
     #[test]

@@ -1,12 +1,67 @@
-//! Denoising samplers (host-side math, no Python).
+//! Denoising samplers: host reference stepping + fused device stepping.
 //!
 //! The paper's setups (§4.1): OpenSora uses rectified-flow (rflow) Euler
-//! sampling with 30 steps; Latte and CogVideoX use DDIM with 50 steps. Both
-//! are implemented here over host f32 latents; the model executables only
-//! ever see `(x_t, t)` pairs, so samplers and the reuse policies compose
-//! freely.
+//! sampling with 30 steps; Latte and CogVideoX use DDIM with 50 steps.
+//!
+//! Each sampler exposes two equivalent step paths:
+//!
+//! * [`Sampler::step`] — the host f32 reference, used by
+//!   [`crate::engine::HotPath::Host`] and as the ground truth in the
+//!   property tests;
+//! * [`Sampler::step_device`] — the resident-latent path: the per-step
+//!   update runs as one fused executable ([`crate::runtime::Runtime::axpy`]
+//!   for rflow Euler, [`crate::runtime::Runtime::ddim_step`] for DDIM) over
+//!   a device latent, with the schedule scalars exported through
+//!   [`Sampler::step_coeffs`] and uploaded as rank-0 runtime arguments
+//!   (4 bytes each, all at request start). Nothing else crosses the
+//!   host↔device bus; the two paths agree to ≤1e-6 per element.
+//!
+//! The model executables only ever see `(x_t, t)` pairs, so samplers and
+//! the reuse policies compose freely.
+
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 use crate::config::{SamplerKind, ScheduleConfig};
+use crate::runtime::{DeviceTensor, Executable, Runtime};
+
+/// x0-prediction clamp bounds shared by the host and device DDIM steps
+/// (keeps random-weight trajectories bounded; uploading the same constants
+/// to the device guarantees the two paths cannot drift apart here).
+pub const X0_CLAMP: (f32, f32) = (-6.0, 6.0);
+
+/// The scalar coefficients of one denoising step, exported so the fused
+/// device step executable can advance the resident latent without any
+/// host-side math. Every coefficient is known at request start.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepCoeffs {
+    /// rflow Euler: `x' = dt·v + x` (`axpy` with `dt` as the runtime
+    /// scalar; `dt` is negative — sigma descends toward 0).
+    Rflow { dt: f32 },
+    /// eta-0 DDIM: `x' = sqrt_aprev·clamp((x − sqrt_1mat·eps)/sqrt_at,
+    /// ±6) + sqrt_1maprev·eps`.
+    Ddim { sqrt_at: f32, sqrt_1mat: f32, sqrt_aprev: f32, sqrt_1maprev: f32 },
+}
+
+impl StepCoeffs {
+    /// Which sampler family these coefficients drive.
+    pub fn kind(&self) -> SamplerKind {
+        match self {
+            StepCoeffs::Rflow { .. } => SamplerKind::Rflow,
+            StepCoeffs::Ddim { .. } => SamplerKind::Ddim,
+        }
+    }
+
+    /// Scalar values in the device executable's argument order.
+    pub fn values(&self) -> Vec<f32> {
+        match *self {
+            StepCoeffs::Rflow { dt } => vec![dt],
+            StepCoeffs::Ddim { sqrt_at, sqrt_1mat, sqrt_aprev, sqrt_1maprev } => {
+                vec![sqrt_at, sqrt_1mat, sqrt_aprev, sqrt_1maprev]
+            }
+        }
+    }
+}
 
 /// A denoising schedule instance for one request.
 pub trait Sampler: Send {
@@ -20,8 +75,144 @@ pub trait Sampler: Send {
     fn t_value(&self, i: usize) -> f32;
 
     /// Advance `x` in place given the model output at step `i`
-    /// (noise prediction for DDIM, velocity for rflow).
+    /// (noise prediction for DDIM, velocity for rflow). Host reference
+    /// path; the resident-latent engine uses [`Sampler::step_device`].
     fn step(&self, x: &mut [f32], model_out: &[f32], i: usize);
+
+    /// Export step `i`'s scalar coefficients for the fused device step.
+    fn step_coeffs(&self, i: usize) -> StepCoeffs;
+
+    /// Advance the device-resident latent through the fused step
+    /// executable. `coeffs` must come from this sampler's
+    /// [`Sampler::step_coeffs`] (uploaded via
+    /// [`DeviceStepper::upload_coeffs`]); no latent bytes cross the bus.
+    fn step_device(
+        &self,
+        stepper: &DeviceStepper,
+        x: &DeviceTensor,
+        eps: &DeviceTensor,
+        coeffs: &DeviceCoeffs,
+    ) -> Result<DeviceTensor> {
+        stepper.step(x, eps, coeffs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Device stepping
+// ---------------------------------------------------------------------------
+
+/// One step's scalar coefficients resident on device (rank-0 tensors,
+/// 4 bytes each, uploaded once at request start).
+pub struct DeviceCoeffs {
+    kind: SamplerKind,
+    scalars: Vec<DeviceTensor>,
+}
+
+impl DeviceCoeffs {
+    /// Number of rank-0 scalars (1 for rflow, 4 for DDIM) — the per-step
+    /// upload cost in 4-byte units.
+    pub fn len(&self) -> usize {
+        self.scalars.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scalars.is_empty()
+    }
+}
+
+/// Device-side sampler stepping: owns the fused step executable for one
+/// latent shape plus the request-constant scalar arguments (the DDIM x0
+/// clamp bounds). Built once per request by the resident-latent engine.
+pub struct DeviceStepper {
+    kind: SamplerKind,
+    exec: Arc<Executable>,
+    /// DDIM clamp bounds, uploaded once (8 bytes per request).
+    bounds: Option<(DeviceTensor, DeviceTensor)>,
+    rt: Arc<Runtime>,
+}
+
+impl DeviceStepper {
+    /// Build the fused step executable for `dims`-shaped latents.
+    pub fn new(rt: &Arc<Runtime>, kind: SamplerKind, dims: &[usize]) -> Result<Self> {
+        let (exec, bounds) = match kind {
+            SamplerKind::Rflow => (rt.axpy(dims)?, None),
+            SamplerKind::Ddim => {
+                let lo = rt.upload(&[X0_CLAMP.0], &[])?;
+                let hi = rt.upload(&[X0_CLAMP.1], &[])?;
+                (rt.ddim_step(dims)?, Some((lo, hi)))
+            }
+        };
+        Ok(Self { kind, exec, bounds, rt: rt.clone() })
+    }
+
+    pub fn kind(&self) -> SamplerKind {
+        self.kind
+    }
+
+    /// Host→device bytes uploaded by construction (the DDIM clamp bounds);
+    /// the engine mirrors these into its per-run byte meter.
+    pub fn setup_h2d_bytes(&self) -> u64 {
+        if self.bounds.is_some() {
+            8
+        } else {
+            0
+        }
+    }
+
+    /// Upload calls made by construction (see [`Self::setup_h2d_bytes`]).
+    pub fn setup_h2d_calls(&self) -> u64 {
+        if self.bounds.is_some() {
+            2
+        } else {
+            0
+        }
+    }
+
+    /// Upload one step's scalars (4 bytes each, one call per scalar).
+    pub fn upload_coeffs(&self, c: &StepCoeffs) -> Result<DeviceCoeffs> {
+        if c.kind() != self.kind {
+            return Err(anyhow!(
+                "coeff kind {:?} does not match stepper kind {:?}",
+                c.kind(),
+                self.kind
+            ));
+        }
+        let scalars = c
+            .values()
+            .iter()
+            .map(|&v| self.rt.upload(&[v], &[]))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeviceCoeffs { kind: self.kind, scalars })
+    }
+
+    /// One fused step: `x' = f(x, eps; coeffs)` entirely on device.
+    pub fn step(
+        &self,
+        x: &DeviceTensor,
+        eps: &DeviceTensor,
+        c: &DeviceCoeffs,
+    ) -> Result<DeviceTensor> {
+        if c.kind != self.kind {
+            return Err(anyhow!(
+                "coeffs for {:?} fed to a {:?} stepper",
+                c.kind,
+                self.kind
+            ));
+        }
+        match self.kind {
+            // axpy computes alpha·x + y; host order x + dt·v is bitwise
+            // identical (f32 add commutes).
+            SamplerKind::Rflow => self.exec.run(&[eps, x, &c.scalars[0]]),
+            SamplerKind::Ddim => {
+                let (lo, hi) = self
+                    .bounds
+                    .as_ref()
+                    .expect("ddim stepper uploads clamp bounds at construction");
+                let s = &c.scalars;
+                self.exec.run(&[x, eps, &s[0], &s[1], &s[2], &s[3], lo, hi])
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -93,20 +284,30 @@ impl Sampler for Ddim {
 
     fn step(&self, x: &mut [f32], eps: &[f32], i: usize) {
         assert_eq!(x.len(), eps.len());
-        let t = self.timesteps[i];
-        let t_prev = self.timesteps.get(i + 1).copied();
-        let a_t = self.abar(Some(t));
-        let a_prev = self.abar(t_prev);
-        let sqrt_at = a_t.sqrt() as f32;
-        let sqrt_1mat = (1.0 - a_t).sqrt() as f32;
-        let sqrt_aprev = a_prev.sqrt() as f32;
-        let sqrt_1maprev = (1.0 - a_prev).sqrt() as f32;
+        let StepCoeffs::Ddim { sqrt_at, sqrt_1mat, sqrt_aprev, sqrt_1maprev } =
+            self.step_coeffs(i)
+        else {
+            unreachable!("ddim exports ddim coefficients")
+        };
         for (xv, ev) in x.iter_mut().zip(eps) {
             // x0-prediction then jump to t_prev (eta = 0)
             let x0 = (*xv - sqrt_1mat * ev) / sqrt_at;
             // clamp x0 to keep random-weight trajectories bounded
-            let x0 = x0.clamp(-6.0, 6.0);
+            let x0 = x0.clamp(X0_CLAMP.0, X0_CLAMP.1);
             *xv = sqrt_aprev * x0 + sqrt_1maprev * ev;
+        }
+    }
+
+    fn step_coeffs(&self, i: usize) -> StepCoeffs {
+        let t = self.timesteps[i];
+        let t_prev = self.timesteps.get(i + 1).copied();
+        let a_t = self.abar(Some(t));
+        let a_prev = self.abar(t_prev);
+        StepCoeffs::Ddim {
+            sqrt_at: a_t.sqrt() as f32,
+            sqrt_1mat: (1.0 - a_t).sqrt() as f32,
+            sqrt_aprev: a_prev.sqrt() as f32,
+            sqrt_1maprev: (1.0 - a_prev).sqrt() as f32,
         }
     }
 }
@@ -155,10 +356,16 @@ impl Sampler for Rflow {
 
     fn step(&self, x: &mut [f32], velocity: &[f32], i: usize) {
         assert_eq!(x.len(), velocity.len());
-        let dt = (self.sigmas[i + 1] - self.sigmas[i]) as f32; // negative
+        let StepCoeffs::Rflow { dt } = self.step_coeffs(i) else {
+            unreachable!("rflow exports rflow coefficients")
+        };
         for (xv, vv) in x.iter_mut().zip(velocity) {
             *xv += dt * vv;
         }
+    }
+
+    fn step_coeffs(&self, i: usize) -> StepCoeffs {
+        StepCoeffs::Rflow { dt: (self.sigmas[i + 1] - self.sigmas[i]) as f32 }
     }
 }
 
@@ -173,6 +380,8 @@ pub fn build(kind: SamplerKind, sched: &ScheduleConfig, steps: usize) -> Box<dyn
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{prop_assert_close, proptest_cases};
+    use std::panic::AssertUnwindSafe;
 
     fn sched() -> ScheduleConfig {
         ScheduleConfig { train_timesteps: 1000, beta_start: 1e-4, beta_end: 2e-2 }
@@ -239,5 +448,101 @@ mod tests {
     fn build_dispatches() {
         assert_eq!(build(SamplerKind::Ddim, &sched(), 10).n_steps(), 10);
         assert_eq!(build(SamplerKind::Rflow, &sched(), 10).n_steps(), 10);
+    }
+
+    #[test]
+    fn exported_coeffs_reproduce_the_host_step() {
+        // Applying the exported scalars by hand must be exactly the host
+        // step — if this drifts, the fused device step is computing a
+        // different schedule than the reference.
+        let d = Ddim::new(&sched(), 20);
+        let eps = vec![0.2f32, -0.1, 0.4, 0.9];
+        let mut x = vec![0.3f32, -2.0, 5.0, -0.7];
+        let mut manual = x.clone();
+        for i in 0..d.n_steps() {
+            let StepCoeffs::Ddim { sqrt_at, sqrt_1mat, sqrt_aprev, sqrt_1maprev } =
+                d.step_coeffs(i)
+            else {
+                panic!("ddim coeffs expected")
+            };
+            for (xv, ev) in manual.iter_mut().zip(&eps) {
+                let x0 = ((*xv - sqrt_1mat * ev) / sqrt_at).clamp(X0_CLAMP.0, X0_CLAMP.1);
+                *xv = sqrt_aprev * x0 + sqrt_1maprev * ev;
+            }
+            d.step(&mut x, &eps, i);
+            assert_eq!(x, manual, "step {i}");
+        }
+
+        let r = Rflow::new(12);
+        let dt_total: f32 = (0..r.n_steps())
+            .map(|i| {
+                let StepCoeffs::Rflow { dt } = r.step_coeffs(i) else { panic!() };
+                dt
+            })
+            .sum();
+        assert!((dt_total + 1.0).abs() < 1e-5, "rflow dts must integrate to -1: {dt_total}");
+    }
+
+    #[test]
+    fn prop_device_stepping_matches_host_sampler() {
+        // Satellite property: chaining the fused device step (axpy for
+        // rflow, ddim_step for DDIM) matches the host Sampler::step
+        // reference to ≤1e-6 across random latents, shapes and step
+        // counts.
+        let rt = std::sync::Arc::new(Runtime::cpu().unwrap());
+        let rt = AssertUnwindSafe(&rt);
+        let sc = sched();
+        proptest_cases(30, |g| {
+            let kind = *g.pick(&[SamplerKind::Rflow, SamplerKind::Ddim]);
+            let steps = g.usize_in(2..=6);
+            let smp = build(kind, &sc, steps);
+            let n = g.usize_in(1..=32);
+            let dims = [n];
+            let stepper = DeviceStepper::new(*rt, kind, &dims).unwrap();
+            let mut x_host = g.vec_f32(n, -2.0, 2.0);
+            let mut x_dev = rt.upload(&x_host, &dims).unwrap();
+            for i in 0..steps {
+                let eps = g.vec_f32(n, -2.0, 2.0);
+                let eps_dev = rt.upload(&eps, &dims).unwrap();
+                let coeffs = stepper.upload_coeffs(&smp.step_coeffs(i)).unwrap();
+                x_dev = smp.step_device(&stepper, &x_dev, &eps_dev, &coeffs).unwrap();
+                smp.step(&mut x_host, &eps, i);
+            }
+            let mut out = vec![0.0f32; n];
+            rt.download_into(&x_dev, &mut out).unwrap();
+            for i in 0..n {
+                prop_assert_close(
+                    out[i] as f64,
+                    x_host[i] as f64,
+                    1e-6,
+                    "device vs host sampler step",
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn stepper_rejects_mismatched_coeffs() {
+        let rt = std::sync::Arc::new(Runtime::cpu().unwrap());
+        let dims = [4usize];
+        let rf = DeviceStepper::new(&rt, SamplerKind::Rflow, &dims).unwrap();
+        assert_eq!(rf.setup_h2d_bytes(), 0);
+        let dd = DeviceStepper::new(&rt, SamplerKind::Ddim, &dims).unwrap();
+        assert_eq!(dd.setup_h2d_bytes(), 8);
+        let err = rf
+            .upload_coeffs(&StepCoeffs::Ddim {
+                sqrt_at: 1.0,
+                sqrt_1mat: 0.0,
+                sqrt_aprev: 1.0,
+                sqrt_1maprev: 0.0,
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not match"), "{err}");
+        // cross-feeding uploaded coeffs is rejected too
+        let cf = rf.upload_coeffs(&StepCoeffs::Rflow { dt: -0.1 }).unwrap();
+        assert_eq!(cf.len(), 1);
+        let x = rt.upload(&[1.0, 2.0, 3.0, 4.0], &dims).unwrap();
+        assert!(dd.step(&x, &x, &cf).is_err());
     }
 }

@@ -9,9 +9,16 @@
 //! Protocol ops:
 //! * `{"op":"ping"}` → `{"status":"ok","pong":true}`
 //! * `{"op":"generate","model":..,"bucket":..,"policy":..,"prompt":..,
-//!    "seed":..,"steps"?:..}` → run stats
+//!    "seed":..,"steps"?:..,"cfg_scale"?:..}` → run stats (including the
+//!    `h2d_bytes`/`h2d_calls`/`d2h_bytes`/`d2h_calls` transfer meters)
 //! * `{"op":"stats"}` → server-level counters + latency percentiles
 //! * `{"op":"shutdown"}` → stops the server
+//!
+//! `generate` payloads are validated before a sampler is built: `steps`
+//! must be a positive integer no larger than the preset's training
+//! schedule, `seed` and `cfg_scale` must be finite numbers. A malformed
+//! field is a per-request `{"status":"error"}` response, never a worker
+//! panic.
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
@@ -165,8 +172,19 @@ impl Server {
                 std::thread::Builder::new()
                     .name("foresight-server-accept".to_string())
                     .spawn(move || {
-                        let mut conn_handles = Vec::new();
+                        let mut conn_handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
                         while !stop_accept.load(Ordering::SeqCst) {
+                            // Reap finished connection handlers each pass so
+                            // the handle list tracks live connections instead
+                            // of growing for the server's lifetime.
+                            let mut i = 0;
+                            while i < conn_handles.len() {
+                                if conn_handles[i].is_finished() {
+                                    let _ = conn_handles.swap_remove(i).join();
+                                } else {
+                                    i += 1;
+                                }
+                            }
                             match listener.accept() {
                                 Ok((stream, _peer)) => {
                                     let queue = Arc::clone(&queue);
@@ -345,15 +363,62 @@ fn handle_generate(
     let bucket = get_str("bucket").unwrap_or_else(|| "240p-2s".to_string());
     let policy_spec = get_str("policy").unwrap_or_else(|| "foresight".to_string());
     let prompt = get_str("prompt").unwrap_or_default();
-    let seed = payload.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
-    let steps = payload.get("steps").and_then(|v| v.as_usize());
 
     let run = (|| -> Result<Json> {
+        // Wire validation before any sampler is built: a `steps: 0` (or
+        // out-of-schedule DDIM step count) used to trip the sampler
+        // constructor's assert, panic the worker, and turn every later
+        // request on that worker into "worker dropped".
+        let seed = match payload.get("seed") {
+            None => 0,
+            Some(v) => {
+                let s = v.as_f64().ok_or_else(|| anyhow!("seed must be a number"))?;
+                if !s.is_finite() || s < 0.0 {
+                    return Err(anyhow!("seed must be a finite non-negative number, got {s}"));
+                }
+                s as u64
+            }
+        };
+        let steps = match payload.get("steps") {
+            None => None,
+            Some(v) => {
+                let s = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("steps must be a positive integer"))?;
+                if !s.is_finite() || s < 1.0 || s.fract() != 0.0 {
+                    return Err(anyhow!("steps must be a positive integer, got {s}"));
+                }
+                Some(s as usize)
+            }
+        };
+        let cfg_scale = match payload.get("cfg_scale") {
+            None => None,
+            Some(v) => {
+                let c = v.as_f64().ok_or_else(|| anyhow!("cfg_scale must be a number"))?;
+                if !c.is_finite() {
+                    return Err(anyhow!("cfg_scale must be finite, got {c}"));
+                }
+                Some(c)
+            }
+        };
+
         let engine = registry.get(&model, &bucket)?;
         let info = &engine.model().info;
+        if let Some(s) = steps {
+            // One bound for both samplers: DDIM's constructor asserts it,
+            // and an absurd rflow step count would only allocate
+            // gigabyte-scale sigma tables before doing useless work.
+            let t_train = engine.schedule().train_timesteps;
+            if s > t_train {
+                return Err(anyhow!(
+                    "steps must be <= {t_train} (the training schedule length), got {s}"
+                ));
+            }
+        }
         let mut policy = build_policy(&policy_spec, info, steps.unwrap_or(info.steps))?;
         let mut req = Request::new(&prompt, seed);
         req.steps = steps;
+        req.cfg_scale = cfg_scale;
         let result = engine.generate(&req, policy.as_mut(), None)?;
         let s = &result.stats;
         Ok(Json::obj(vec![
@@ -369,7 +434,9 @@ fn handle_generate(
             ("reuse_fraction", Json::num(s.reuse_fraction())),
             ("cache_peak_bytes", Json::num(s.cache_peak_bytes as f64)),
             ("h2d_bytes", Json::num(s.h2d_bytes as f64)),
+            ("h2d_calls", Json::num(s.h2d_calls as f64)),
             ("d2h_bytes", Json::num(s.d2h_bytes as f64)),
+            ("d2h_calls", Json::num(s.d2h_calls as f64)),
         ]))
     })();
 

@@ -114,6 +114,81 @@ fn errors_are_reported_not_fatal() {
 }
 
 #[test]
+fn invalid_generate_requests_are_rejected_without_killing_workers() {
+    // `steps: 0` used to trip the sampler constructor's assert, panic the
+    // worker, and turn every later request on that worker into "worker
+    // dropped". With a single worker, a successful request after each
+    // rejection proves the worker survived validation.
+    let Some(server) = start_server(1) else { return };
+    let mut c = Client::connect(&server.addr()).unwrap();
+
+    let r = c.call(&gen_req("none", "x", 0, 0)).unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "error", "{r}");
+    assert!(
+        r.get("error").unwrap().as_str().unwrap().contains("steps"),
+        "{r}"
+    );
+
+    // non-numeric cfg_scale is rejected, not panicked on
+    let mut bad = gen_req("none", "x", 0, 4);
+    if let Json::Obj(ref mut o) = bad {
+        o.insert("cfg_scale".into(), Json::str("very"));
+    }
+    let r2 = c.call(&bad).unwrap();
+    assert_eq!(r2.get("status").unwrap().as_str().unwrap(), "error", "{r2}");
+
+    // non-numeric seed likewise
+    let mut bad_seed = gen_req("none", "x", 0, 4);
+    if let Json::Obj(ref mut o) = bad_seed {
+        o.insert("seed".into(), Json::str("tomorrow"));
+    }
+    let r3 = c.call(&bad_seed).unwrap();
+    assert_eq!(r3.get("status").unwrap().as_str().unwrap(), "error", "{r3}");
+
+    // the same (only) worker still serves valid requests afterwards
+    let ok = c.call(&gen_req("none", "recovery", 1, 4)).unwrap();
+    assert_eq!(ok.get("status").unwrap().as_str().unwrap(), "ok", "{ok}");
+
+    // errors were counted, not fatal
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("errors").unwrap().as_usize().unwrap(), 3);
+    server.shutdown();
+}
+
+#[test]
+fn cfg_scale_is_plumbed_and_transfer_counters_echoed() {
+    let Some(server) = start_server(1) else { return };
+    let mut c = Client::connect(&server.addr()).unwrap();
+
+    let mut req = gen_req("none", "counter prompt", 3, 6);
+    if let Json::Obj(ref mut o) = req {
+        o.insert("cfg_scale".into(), Json::num(4.5));
+    }
+    let r = c.call(&req).unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+    // the transfer meters ride along in the response
+    for k in ["h2d_bytes", "h2d_calls", "d2h_bytes", "d2h_calls"] {
+        assert!(
+            r.get(k).unwrap().as_f64().unwrap() > 0.0,
+            "{k} missing or zero: {r}"
+        );
+    }
+    // transfer volume is cfg-scale-independent: the same request with the
+    // preset default moves exactly the same bytes (the scale is a rank-0
+    // runtime argument, not a recompile)
+    let r2 = c.call(&gen_req("none", "counter prompt", 3, 6)).unwrap();
+    assert_eq!(r2.get("status").unwrap().as_str().unwrap(), "ok", "{r2}");
+    for k in ["h2d_bytes", "d2h_bytes"] {
+        assert_eq!(
+            r.get(k).unwrap().as_f64().unwrap(),
+            r2.get(k).unwrap().as_f64().unwrap(),
+            "{k} must not depend on cfg_scale"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
 fn shutdown_is_prompt_with_idle_workers() {
     // Workers park on the queue condvar; shutdown must notify them rather
     // than relying on a poll interval, so joining an idle pool is fast.
