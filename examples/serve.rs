@@ -29,7 +29,12 @@ fn main() -> anyhow::Result<()> {
         &manifest,
         &[("opensora-sim".to_string(), "240p-2s".to_string())],
     )?);
-    let server = Server::start(registry, ServerConfig { addr: "127.0.0.1:0".into(), workers: 2 })?;
+    // Default config: micro-batching on (max_batch 4, short gather window)
+    // — concurrent same-policy clients coalesce into shared engine passes.
+    let server = Server::start(
+        registry,
+        ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, ..ServerConfig::default() },
+    )?;
     let addr = server.addr();
     println!("server up on {addr}; {CLIENTS} clients × {REQUESTS_PER_CLIENT} requests\n");
 
@@ -40,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     let mut handles = Vec::new();
     for cid in 0..CLIENTS {
         let prompts: Vec<String> = prompts.iter().map(|p| p.text.clone()).collect();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<(f64, f64, f64)>> {
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<(f64, f64, f64, f64)>> {
             let mut client = Client::connect(&addr)?;
             assert!(client.ping()?);
             let mut out = Vec::new();
@@ -63,7 +68,8 @@ fn main() -> anyhow::Result<()> {
                 );
                 let wall = resp.get("wall_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
                 let queue = resp.get("queue_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
-                out.push((e2e, wall, queue));
+                let batch = resp.get("batch_size").and_then(|v| v.as_f64()).unwrap_or(1.0);
+                out.push((e2e, wall, queue, batch));
             }
             Ok(out)
         }));
@@ -72,11 +78,13 @@ fn main() -> anyhow::Result<()> {
     let mut e2e = Vec::new();
     let mut exec = Vec::new();
     let mut queued = Vec::new();
+    let mut batch_sizes = Vec::new();
     for h in handles {
-        for (a, b, c) in h.join().expect("client thread")? {
+        for (a, b, c, d) in h.join().expect("client thread")? {
             e2e.push(a);
             exec.push(b);
             queued.push(c);
+            batch_sizes.push(d);
         }
     }
     let total_s = t0.elapsed().as_secs_f64();
@@ -100,6 +108,7 @@ fn main() -> anyhow::Result<()> {
         stats::mean(&exec)
     );
     println!("queueing          : mean {:.2}s", stats::mean(&queued));
+    println!("batch size        : mean {:.2}", stats::mean(&batch_sizes));
     println!("server stats      : {sstats}");
 
     let _ = client.call(&Json::obj(vec![("op", Json::str("shutdown"))]));

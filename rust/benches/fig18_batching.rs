@@ -1,0 +1,211 @@
+//! **Figure 18 (repo-original)**: micro-batched serving throughput.
+//!
+//! Runs the same four Foresight requests (distinct prompts and seeds)
+//! through [`Engine::generate_batch`] at B ∈ {1, 2, 4} and through the
+//! sequential device path, and asserts the batching contract:
+//!
+//! * per-request latents from the B=4 batch match the sequential
+//!   [`HotPath::Device`] path to ≤1e-6 per element (the batched trajectory
+//!   is elementwise-identical — stack/lane are pure data movement);
+//! * per-request d2h transfer stays at the resident steady-state budget —
+//!   byte-for-byte equal to the sequential run (4 B per measured site plus
+//!   one final latent), i.e. batching adds **zero** download traffic; the
+//!   as-if h2d meter matches too (engine docs §Micro-batching);
+//! * batched wall-clock per request at B=4 is below the sequential
+//!   per-request wall-clock, and requests/s scales sub-linearly in wall
+//!   time across B (the lanes share one step loop, one batched
+//!   `cfg_combine` + sampler step per step, and co-run their site sweeps).
+//!
+//! `FORESIGHT_BENCH_STEPS` overrides the step count (CI smoke mode runs a
+//! reduced schedule). Exits cleanly with a SKIP note when the AOT
+//! artifacts are absent (e.g. hosted CI).
+
+use foresight::bench_support::{first_latent_mismatch, BenchCtx};
+use foresight::engine::{Engine, Request, RunResult};
+use foresight::policy::{build_policy, ReusePolicy};
+use foresight::util::benchkit::{MdTable, Report};
+
+const MODEL: (&str, &str) = ("opensora-sim", "240p-2s");
+const POLICY: &str = "foresight:n=1,r=2,gamma=0.5";
+const BATCH_SIZES: [usize; 3] = [1, 2, 4];
+const PROMPTS: [&str; 4] = [
+    "a paper lantern drifting over a midnight lake",
+    "a fox darting through fresh snow at dawn",
+    "waves crashing against a basalt cliff in a storm",
+    "a quiet greenhouse, sunlight through fogged glass",
+];
+
+fn bench_steps() -> usize {
+    std::env::var("FORESIGHT_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10)
+        .max(2)
+}
+
+fn requests(n: usize, steps: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let mut r = Request::new(PROMPTS[i % PROMPTS.len()], 100 + i as u64);
+            r.steps = Some(steps);
+            r
+        })
+        .collect()
+}
+
+fn policies(engine: &Engine, n: usize, steps: usize) -> anyhow::Result<Vec<Box<dyn ReusePolicy>>> {
+    let info = engine.model().info.clone();
+    (0..n).map(|_| build_policy(POLICY, &info, steps)).collect()
+}
+
+fn run_batch(engine: &Engine, n: usize, steps: usize) -> anyhow::Result<(f64, Vec<RunResult>)> {
+    let reqs = requests(n, steps);
+    let mut pols = policies(engine, n, steps)?;
+    let t0 = std::time::Instant::now();
+    let results = engine.generate_batch(&reqs, &mut pols)?;
+    Ok((t0.elapsed().as_secs_f64(), results))
+}
+
+fn run_sequential(
+    engine: &Engine,
+    n: usize,
+    steps: usize,
+) -> anyhow::Result<(f64, Vec<RunResult>)> {
+    let reqs = requests(n, steps);
+    let mut out = Vec::with_capacity(n);
+    let t0 = std::time::Instant::now();
+    for (req, mut pol) in reqs.iter().zip(policies(engine, n, steps)?) {
+        out.push(engine.generate(req, pol.as_mut(), None)?);
+    }
+    Ok((t0.elapsed().as_secs_f64(), out))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = match BenchCtx::new() {
+        Ok(c) => c,
+        Err(e) => {
+            println!("[fig18] SKIP: artifacts unavailable ({e:#}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let steps = bench_steps();
+    let engine = ctx.engine(MODEL.0, MODEL.1)?;
+    let nmax = *BATCH_SIZES.iter().max().unwrap();
+
+    // Warm the compile caches for every shape this bench touches: the
+    // sequential [F,P,C] fused ops and each batch size's [B,F,P,C]
+    // variants (first-use compiles would otherwise skew the timings).
+    let _ = run_sequential(&engine, 1, 2)?;
+    for &b in &BATCH_SIZES {
+        let _ = run_batch(&engine, b, 2)?;
+    }
+
+    let mut report = Report::new(
+        "fig18",
+        "Figure 18 — micro-batched serving: throughput and per-request equivalence",
+    );
+    let mut t = MdTable::new(&[
+        "B",
+        "Wall(s)",
+        "Wall/req (s)",
+        "Requests/s",
+        "Speedup vs B=1",
+        "d2h B/req",
+        "Latents",
+    ]);
+
+    // Sequential reference (two passes, keep the faster — dispatch noise).
+    let (seq_wall_a, seq_results) = run_sequential(&engine, nmax, steps)?;
+    let (seq_wall_b, _) = run_sequential(&engine, nmax, steps)?;
+    let seq_wall = seq_wall_a.min(seq_wall_b);
+    let seq_per_req = seq_wall / nmax as f64;
+
+    let mut per_req_at = vec![0.0f64; BATCH_SIZES.len()];
+    let mut batch4: Option<Vec<RunResult>> = None;
+    for (bi, &b) in BATCH_SIZES.iter().enumerate() {
+        let (wall_a, results) = run_batch(&engine, b, steps)?;
+        let (wall_b, _) = run_batch(&engine, b, steps)?;
+        let wall = wall_a.min(wall_b);
+        let per_req = wall / b as f64;
+        per_req_at[bi] = per_req;
+        let d2h_per_req = results.iter().map(|r| r.stats.d2h_bytes).sum::<u64>() / b as u64;
+        let close = results
+            .iter()
+            .zip(&seq_results)
+            .all(|(br, sr)| {
+                first_latent_mismatch(&br.latents.data, &sr.latents.data, 1e-6).is_none()
+            });
+        t.row(vec![
+            format!("{b}"),
+            format!("{wall:.3}"),
+            format!("{per_req:.3}"),
+            format!("{:.2}", b as f64 / wall),
+            format!("{:.2}x", per_req_at[0] / per_req),
+            format!("{d2h_per_req}"),
+            if close { "≤1e-6".into() } else { "DIVERGED".into() },
+        ]);
+        if b == nmax {
+            batch4 = Some(results);
+        }
+    }
+    let batch4 = batch4.expect("B=4 measured");
+    let batch4_per_req = per_req_at[BATCH_SIZES.len() - 1];
+
+    // --- acceptance: per-request results match the sequential device path
+    for (lane, (br, sr)) in batch4.iter().zip(&seq_results).enumerate() {
+        let mismatch = first_latent_mismatch(&br.latents.data, &sr.latents.data, 1e-6);
+        assert!(
+            mismatch.is_none(),
+            "lane {lane}: batched latents diverged from the sequential device \
+             path (first mismatch: {mismatch:?})"
+        );
+        // decisions (and thus unit counters) must be identical too
+        assert_eq!(
+            (br.stats.computed_units, br.stats.reused_units, br.stats.fallback_units),
+            (sr.stats.computed_units, sr.stats.reused_units, sr.stats.fallback_units),
+            "lane {lane}: batched reuse decisions diverged from sequential"
+        );
+    }
+
+    // --- acceptance: per-request transfers stay at the resident budget.
+    // d2h is byte-for-byte the sequential cost (drift scalars + one final
+    // latent); the as-if h2d meter matches the standalone cost by
+    // construction (engine docs §Micro-batching).
+    for (lane, (br, sr)) in batch4.iter().zip(&seq_results).enumerate() {
+        assert_eq!(
+            br.stats.d2h_bytes, sr.stats.d2h_bytes,
+            "lane {lane}: batching changed the per-request d2h budget"
+        );
+        assert_eq!(
+            br.stats.h2d_bytes, sr.stats.h2d_bytes,
+            "lane {lane}: batching changed the per-request (as-if) h2d budget"
+        );
+    }
+
+    // --- acceptance: batching buys wall-clock per request at B=4.
+    assert!(
+        batch4_per_req < seq_per_req,
+        "expected batched wall/request at B=4 ({batch4_per_req:.3}s) below the \
+         sequential per-request wall ({seq_per_req:.3}s)"
+    );
+
+    t.row(vec![
+        "seq".into(),
+        format!("{seq_wall:.3}"),
+        format!("{seq_per_req:.3}"),
+        format!("{:.2}", nmax as f64 / seq_wall),
+        "—".into(),
+        format!("{}", seq_results.iter().map(|r| r.stats.d2h_bytes).sum::<u64>() / nmax as u64),
+        "ref".into(),
+    ]);
+    report.table("micro-batched throughput (requests/s) and equivalence", &t);
+    report.csv("series", &t);
+    report.text(&format!(
+        "\nB=4 serves each request in {batch4_per_req:.3}s vs {seq_per_req:.3}s \
+         sequentially ({:.2}x): one shared step loop, one batched cfg_combine + \
+         sampler step per step, per-request latents and transfer budgets unchanged.",
+        seq_per_req / batch4_per_req
+    ));
+    report.finish()?;
+    Ok(())
+}

@@ -55,6 +55,42 @@
 //! * every engine-visible transfer is metered in [`RunStats`]
 //!   (`h2d_bytes`/`d2h_bytes`), cross-checkable against the runtime's
 //!   [`crate::runtime::TransferStats`].
+//!
+//! # Micro-batching
+//!
+//! [`Engine::generate_batch`] runs `B` *compatible* requests (same step
+//! count and CFG scale — the server's `BatchKey` guarantees this, the
+//! engine re-validates) through **one resident step loop**. Each request
+//! keeps its own reuse policy, [`FeatureCache`]s and drift observations,
+//! so one request reusing a block while a neighbor recomputes stays
+//! correct: the Eq. 5/6 drift MSE reduces **per request** against that
+//! request's cached activation, never pooled across the batch.
+//!
+//! Per-request initial latents upload individually (one call each, as in
+//! the sequential path) and are stacked on device into one `[B, F, P, C]`
+//! resident tensor ([`crate::runtime::Runtime::stack`]). Per step, each
+//! lane is sliced back out ([`crate::runtime::Runtime::lane`]) to feed the
+//! fixed-shape patch embedding, the `2B` (lane, CFG-branch) site sweeps
+//! run on persistent worker threads, and then a **single** batched
+//! `cfg_combine` and a single batched sampler step advance all `B`
+//! resident lanes in one dispatch each — the fused-op cache is
+//! batch-shape-aware, so these are the same builders at `[B, F, P, C]`.
+//! Timestep embeddings, sampler coefficients, the CFG scale and the
+//! all-zeros uncond text context upload/precompute once per batch (they
+//! are identical across compatible requests); only the cond text context
+//! is per-lane.
+//!
+//! The batched trajectory is elementwise-identical to running each request
+//! alone under [`HotPath::Device`] (stack/lane are pure data movement and
+//! every batched op is elementwise), so per-request latents agree with the
+//! sequential device path to f32 exactness; `benches/fig18_batching.rs`
+//! asserts ≤1e-6. **Byte model:** each request's [`RunStats`] reports the
+//! cost it would pay standalone (batch-shared scalar uploads are charged
+//! to every lane), so per-request budgets stay comparable across batch
+//! sizes; the runtime-level [`crate::runtime::TransferStats`] meter shows
+//! the true, smaller batched totals — the difference is the amortization
+//! win. `wall_s`/`per_step_s` report the whole batch's wall clock (the
+//! lanes co-run).
 
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -341,6 +377,311 @@ impl Engine {
             HotPath::Device => self.generate_device(req, rp, smp, branches, policy, observer, stats),
             HotPath::Host => self.generate_host(req, rp, smp, branches, policy, observer, stats),
         }
+    }
+
+    /// Run `B` compatible requests through one micro-batched resident step
+    /// loop (see module docs §Micro-batching). `reqs[i]` is decided by
+    /// `policies[i]`; policies may differ per request (per-lane state is
+    /// fully disjoint), but every request must resolve to the same step
+    /// count and CFG scale — the quantities baked into the shared batched
+    /// executables. Returns one [`RunResult`] per request, in order.
+    ///
+    /// Falls back to sequential [`Engine::generate`] calls for `B <= 1`
+    /// and under [`HotPath::Host`] (the host staging has no batched
+    /// pipeline). Observers are a single-request analysis feature and are
+    /// not supported here.
+    pub fn generate_batch(
+        &self,
+        reqs: &[Request],
+        policies: &mut [Box<dyn ReusePolicy>],
+    ) -> Result<Vec<RunResult>> {
+        if reqs.len() != policies.len() {
+            return Err(anyhow!(
+                "generate_batch: {} requests but {} policies",
+                reqs.len(),
+                policies.len()
+            ));
+        }
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if reqs.len() == 1 || self.hot_path == HotPath::Host {
+            let mut out = Vec::with_capacity(reqs.len());
+            for (req, policy) in reqs.iter().zip(policies.iter_mut()) {
+                out.push(self.generate(req, policy.as_mut(), None)?);
+            }
+            return Ok(out);
+        }
+
+        let m = &self.model;
+        let info = &m.info;
+        let nb = reqs.len();
+        let steps = reqs[0].steps.unwrap_or(info.steps);
+        let cfg_scale = reqs[0].cfg_scale.unwrap_or(info.cfg_scale) as f32;
+        for r in reqs.iter().skip(1) {
+            if r.steps.unwrap_or(info.steps) != steps {
+                return Err(anyhow!(
+                    "generate_batch: all requests must agree on steps \
+                     (got {} and {})",
+                    steps,
+                    r.steps.unwrap_or(info.steps)
+                ));
+            }
+            if r.cfg_scale.unwrap_or(info.cfg_scale) as f32 != cfg_scale {
+                return Err(anyhow!(
+                    "generate_batch: all requests must agree on cfg_scale"
+                ));
+            }
+        }
+        let smp = sampler::build(info.sampler, &self.schedule, steps);
+        let rt = m.runtime().clone();
+        let [f, p, _d] = m.state_dims();
+        let [_, _, c_lat] = m.latent_dims();
+        let dims = [f, p, c_lat];
+        let bdims = [nb, f, p, c_lat];
+        let latent_elems = f * p * c_lat;
+
+        // Per-lane decision state + run params + as-if-standalone stats
+        // (see module docs §Micro-batching for the byte model).
+        let mut statses: Vec<RunStats> = Vec::with_capacity(nb);
+        let mut rps: Vec<RunParams> = Vec::with_capacity(nb);
+        for policy in policies.iter_mut() {
+            policy.begin_request(info.layers, steps);
+            statses.push(RunStats { policy: policy.name(), ..Default::default() });
+            rps.push(RunParams {
+                steps,
+                cfg_scale,
+                granularity: policy.granularity(),
+                cache_mode: policy.cache_mode(),
+                needs_measure: policy.needs_measurement(),
+            });
+        }
+
+        // Text conditioning: the cond context is per-lane (per-prompt); the
+        // uncond context is the same all-zeros embedding for every request,
+        // so ONE shared context serves the whole batch (its K/V tensors are
+        // read-only Arcs) and precomputes concurrently with the cond
+        // chain. Each lane is still charged the standalone two text
+        // uploads (the as-if byte model; the runtime meter records the
+        // single shared upload).
+        let uncond_raw = HostTensor::zeros(vec![info.text_len, info.d_text]);
+        let cond_raws: Vec<HostTensor> = reqs
+            .iter()
+            .map(|r| workload::embed_prompt(&r.prompt, info.d_text, info.text_len))
+            .collect();
+        let (ru, rcs) = std::thread::scope(|sc| {
+            let hu = sc.spawn(|| self.branch_ctx(&uncond_raw));
+            let rcs: Vec<Result<BranchCtx>> =
+                cond_raws.iter().map(|cr| self.branch_ctx(cr)).collect();
+            let ru = match hu.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!("uncond branch-ctx thread panicked")),
+            };
+            (ru, rcs)
+        });
+        let uncond_ctx = ru?;
+        let mut cond_ctxs: Vec<BranchCtx> = Vec::with_capacity(nb);
+        for (i, rc) in rcs.into_iter().enumerate() {
+            cond_ctxs.push(rc?);
+            statses[i].h2d_bytes += 2 * (info.text_len * info.d_text * 4) as u64;
+            statses[i].h2d_calls += 2;
+        }
+
+        // Batch-shared fused executables and device constants: the same
+        // builders as the sequential path, asked for [B, F, P, C] shapes.
+        let cfg_exec = rt.cfg_combine(&bdims)?;
+        let cfg_scale_dev = rt.upload(&[cfg_scale], &[])?;
+        let stepper = sampler::DeviceStepper::new(&rt, smp.kind(), &bdims)?;
+        let stack_exec = rt.stack(&dims, nb)?;
+        let mut lane_execs = Vec::with_capacity(nb);
+        for i in 0..nb {
+            lane_execs.push(rt.lane(&bdims, i)?);
+        }
+
+        // Initial latents: one upload per request, stacked on device.
+        let mut x_dev = {
+            let mut lane_latents = Vec::with_capacity(nb);
+            for (i, req) in reqs.iter().enumerate() {
+                let mut latent_rng = Rng::from_seed_and_label(req.seed, "latents");
+                let x_init = latent_rng.normal_vec(latent_elems);
+                lane_latents.push(rt.upload(&x_init, &dims)?);
+                statses[i].h2d_bytes += (latent_elems * 4) as u64 + 4 + stepper.setup_h2d_bytes();
+                statses[i].h2d_calls += 2 + stepper.setup_h2d_calls();
+            }
+            let lane_refs: Vec<&DeviceTensor> = lane_latents.iter().collect();
+            stack_exec.run(&lane_refs)?
+        };
+
+        // Shared per-step scalars (identical across compatible requests):
+        // uploaded once per batch, charged as-if-standalone per lane.
+        let t_values: Vec<f32> = (0..steps).map(|i| smp.t_value(i)).collect();
+        let c_steps = m.t_embeds(&t_values)?;
+        let mut coeffs = Vec::with_capacity(steps);
+        let mut coeff_scalars = 0u64;
+        for i in 0..steps {
+            let cf = stepper.upload_coeffs(&smp.step_coeffs(i))?;
+            coeff_scalars += cf.len() as u64;
+            coeffs.push(cf);
+        }
+        for s in statses.iter_mut() {
+            s.h2d_bytes += 4 * steps as u64 + 4 * coeff_scalars;
+            s.h2d_calls += steps as u64 + coeff_scalars;
+        }
+
+        let pols: Vec<Mutex<&mut dyn ReusePolicy>> =
+            policies.iter_mut().map(|p| Mutex::new(p.as_mut())).collect();
+        let mut reuse_maps: Vec<Vec<Vec<bool>>> =
+            (0..nb).map(|_| Vec::with_capacity(steps)).collect();
+
+        let t_start = Instant::now();
+        // One persistent worker per (lane, CFG branch), lane-major order —
+        // the batched generalization of the single-request uncond worker.
+        // Each worker owns its lane-branch cache for the whole loop and
+        // hands it back at join.
+        let caches: Result<Vec<FeatureCache>> = std::thread::scope(|sc| {
+            let mut tx_jobs: Vec<mpsc::Sender<BranchJob>> = Vec::with_capacity(2 * nb);
+            let mut rx_ress: Vec<mpsc::Receiver<Result<BranchRun>>> = Vec::with_capacity(2 * nb);
+            let mut workers = Vec::with_capacity(2 * nb);
+            for lane in 0..nb {
+                for branch in 0..2usize {
+                    let (tx_job, rx_job) = mpsc::channel::<BranchJob>();
+                    let (tx_res, rx_res) = mpsc::channel::<Result<BranchRun>>();
+                    let bctx = if branch == 0 { &cond_ctxs[lane] } else { &uncond_ctx };
+                    let policy_ref = &pols[lane];
+                    let rp = rps[lane];
+                    workers.push(sc.spawn(move || {
+                        let mut cache = FeatureCache::new();
+                        let mut mirror: HostMirror = BTreeMap::new();
+                        while let Ok((step, c, h0)) = rx_job.recv() {
+                            let ctx = StepCtx {
+                                step,
+                                granularity: rp.granularity,
+                                cache_mode: rp.cache_mode,
+                                needs_measure: rp.needs_measure,
+                                c: &c,
+                                h0: &h0,
+                            };
+                            let r = self.run_branch(
+                                &ctx, branch, bctx, &mut cache, &mut mirror, policy_ref, None,
+                            );
+                            let failed = r.is_err();
+                            if tx_res.send(r).is_err() || failed {
+                                break;
+                            }
+                        }
+                        cache
+                    }));
+                    tx_jobs.push(tx_job);
+                    rx_ress.push(rx_res);
+                }
+            }
+
+            // Same errors-break-out-then-join discipline as the
+            // single-request loop: a worker panic must surface as an Err,
+            // never a re-raised panic at scope exit.
+            let mut loop_err: Option<anyhow::Error> = None;
+            {
+                let mut do_step = |step: usize| -> Result<()> {
+                    let t_step = Instant::now();
+                    let c = c_steps[step].clone();
+                    // Per-lane patch embeddings from the stacked latent.
+                    let mut h0s = Vec::with_capacity(nb);
+                    for lane_exec in &lane_execs {
+                        let xl = lane_exec.run(&[&x_dev])?;
+                        h0s.push(Arc::new(m.embed(&xl)?));
+                    }
+                    for lane in 0..nb {
+                        for branch in 0..2usize {
+                            tx_jobs[2 * lane + branch]
+                                .send((step, c.clone(), h0s[lane].clone()))
+                                .map_err(|_| anyhow!("branch worker exited early"))?;
+                        }
+                    }
+                    let mut eps_cond = Vec::with_capacity(nb);
+                    let mut eps_uncond = Vec::with_capacity(nb);
+                    for lane in 0..nb {
+                        let bc = rx_ress[2 * lane]
+                            .recv()
+                            .map_err(|_| anyhow!("cond branch worker disconnected"))??;
+                        let bu = rx_ress[2 * lane + 1]
+                            .recv()
+                            .map_err(|_| anyhow!("uncond branch worker disconnected"))??;
+                        bc.stats.merge_into(&mut statses[lane]);
+                        bu.stats.merge_into(&mut statses[lane]);
+                        reuse_maps[lane].push(bc.decisions);
+                        eps_cond.push(bc.eps);
+                        eps_uncond.push(bu.eps);
+                    }
+                    // One batched CFG combine + one batched sampler step
+                    // advance every resident lane; no latent byte crosses
+                    // the bus.
+                    let ur: Vec<&DeviceTensor> = eps_uncond.iter().collect();
+                    let cr: Vec<&DeviceTensor> = eps_cond.iter().collect();
+                    let u_stack = stack_exec.run(&ur)?;
+                    let c_stack = stack_exec.run(&cr)?;
+                    let eps_b = cfg_exec.run(&[&u_stack, &c_stack, &cfg_scale_dev])?;
+                    x_dev = smp.step_device(&stepper, &x_dev, &eps_b, &coeffs[step])?;
+                    let dt = t_step.elapsed().as_secs_f64();
+                    for s in statses.iter_mut() {
+                        s.per_step_s.push(dt);
+                    }
+                    Ok(())
+                };
+                for step in 0..steps {
+                    if let Err(e) = do_step(step) {
+                        loop_err = Some(e);
+                        break;
+                    }
+                }
+            }
+
+            drop(tx_jobs);
+            drop(rx_ress);
+            let mut caches = Vec::with_capacity(2 * nb);
+            let mut join_err: Option<anyhow::Error> = None;
+            for w in workers {
+                match w.join() {
+                    Ok(cache) => caches.push(cache),
+                    Err(_) => join_err = Some(anyhow!("CFG branch worker panicked")),
+                }
+            }
+            match (loop_err, join_err) {
+                (_, Some(e)) => Err(e),
+                (Some(e), None) => Err(e),
+                (None, None) => Ok(caches),
+            }
+        });
+        let caches = caches?;
+
+        // Final latents: one batched download, split per lane on the host;
+        // each lane is charged its own latent (exactly the standalone
+        // download it would have paid).
+        let mut all = vec![0.0f32; nb * latent_elems];
+        rt.download_into(&x_dev, &mut all)?;
+        let wall = t_start.elapsed().as_secs_f64();
+
+        let mut out = Vec::with_capacity(nb);
+        for (lane, pol) in pols.into_iter().enumerate() {
+            let policy = pol.into_inner().unwrap();
+            let s = &mut statses[lane];
+            s.d2h_bytes += (latent_elems * 4) as u64;
+            s.d2h_calls += 1;
+            s.wall_s = wall;
+            let cache_cond = &caches[2 * lane];
+            let cache_uncond = &caches[2 * lane + 1];
+            s.cache_peak_bytes = cache_cond.peak_bytes() + cache_uncond.peak_bytes();
+            s.cache_entries_per_layer = cache_cond
+                .entries_per_layer(info.layers)
+                .max(cache_uncond.entries_per_layer(info.layers));
+            let data = all[lane * latent_elems..(lane + 1) * latent_elems].to_vec();
+            out.push(RunResult {
+                latents: HostTensor::new(vec![f, p, c_lat], data),
+                stats: std::mem::take(s),
+                reuse_map: std::mem::take(&mut reuse_maps[lane]),
+                thresholds: policy.thresholds(),
+            });
+        }
+        Ok(out)
     }
 
     /// The resident-latent step loop (see module docs §Hot path): the

@@ -53,6 +53,28 @@
 //! per-step transfer reduction for both sampler families with final
 //! latents matching to ≤1e-6; `benches/fig16_hotpath.rs` covers the
 //! measurement-traffic half of that story per policy.
+//!
+//! # Micro-batched serving
+//!
+//! Under load the [`server`]'s workers don't dispatch requests one at a
+//! time: on dequeue they coalesce up to `max_batch` *compatible* pending
+//! `generate` jobs — same model, bucket, policy spec, steps and CFG scale,
+//! keyed by the scheduler's `BatchKey` over the raw wire fields — within a
+//! short gather window and run them as **one**
+//! [`engine::Engine::generate_batch`] pass. The engine stacks the
+//! per-request resident latents along a leading batch axis
+//! ([`runtime::Runtime::stack`] / [`runtime::Runtime::lane`]), advances
+//! all lanes with a single batched `cfg_combine` and a single batched
+//! sampler step per denoising step (the fused-op cache is
+//! batch-shape-aware), and keeps every request's reuse policy, feature
+//! caches and Eq. 5/6 drift observations fully per-lane — a request
+//! reusing a block while its neighbor recomputes is the designed case,
+//! and per-request latents match the sequential device path to ≤1e-6.
+//! Responses echo the `batch_size` they were served at;
+//! `benches/fig18_batching.rs` asserts the equivalence, the unchanged
+//! per-request transfer budget, and the per-request wall-clock win at
+//! B=4. See [`engine`] §Micro-batching for the batched byte model and
+//! [`server`] §Batch scheduler for the compatibility rule.
 
 pub mod analysis;
 pub mod cache;

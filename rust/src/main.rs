@@ -116,6 +116,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "opensora-sim:240p-2s",
             "comma list of model:bucket pairs to load",
         )
+        .opt(
+            "max-batch",
+            "4",
+            "max compatible generates coalesced per engine pass (1 disables)",
+        )
+        .opt(
+            "gather-ms",
+            "2",
+            "batch gather window in milliseconds (0 = only already-queued jobs)",
+        )
         .parse(args)
         .map_err(|e| anyhow!("{e}"))?;
 
@@ -136,6 +146,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         ServerConfig {
             addr: p.get("addr").to_string(),
             workers: p.get_usize("workers").map_err(|e| anyhow!(e))?,
+            max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?,
+            gather_window_ms: p.get_u64("gather-ms").map_err(|e| anyhow!(e))?,
+            ..ServerConfig::default()
         },
     )?;
     println!("foresight server listening on {}", server.addr());

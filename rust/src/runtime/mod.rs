@@ -17,6 +17,15 @@
 //! host↔device copy is metered in [`TransferStats`] (see `engine` module
 //! docs §Hot path for the byte model).
 //!
+//! The fused-op cache is **batch-shape-aware**: because executables are
+//! keyed by `(op, dims)` and every op is elementwise (or reduces over all
+//! axes), the same builders serve a micro-batch of `B` stacked requests by
+//! simply being asked for `[B, F, P, C]`-shaped variants. Two batching
+//! primitives complete the set: [`Runtime::stack`] concatenates `B`
+//! per-request tensors along a new leading batch axis and
+//! [`Runtime::lane`] slices one request's lane back out (both pure device
+//! data movement — no bytes cross the bus).
+//!
 //! Thread-safety: the PJRT CPU client and its loaded executables are
 //! internally thread-safe, but the `xla` crate wraps raw pointers and so
 //! doesn't declare `Send`/`Sync`. [`Runtime`] asserts those bounds via the
@@ -393,6 +402,10 @@ impl Runtime {
     /// one compiled executable serves every request regardless of CFG scale
     /// or schedule position — the denoising-schedule scalars are runtime
     /// arguments, not compile-time constants.
+    ///
+    /// The parametric batching primitives `stack{B}` / `lane{i}` live in
+    /// [`Runtime::stack`] and [`Runtime::lane`] (same cache, parametric
+    /// keys).
     fn fused_executable(&self, op: &str, dims: &[usize]) -> Result<Arc<Executable>> {
         let key = (op.to_string(), dims.to_vec());
         if let Some(e) = self.fused.lock().unwrap().get(&key) {
@@ -531,6 +544,99 @@ impl Runtime {
     /// the latent through the host (see [`crate::sampler::DeviceStepper`]).
     pub fn ddim_step(&self, dims: &[usize]) -> Result<Arc<Executable>> {
         self.fused_executable("ddim_step", dims)
+    }
+
+    /// Stack `batch` identically-shaped `dims` tensors along a new leading
+    /// batch axis (args: `x0..x{batch-1}`; result `[batch, dims...]`).
+    /// Pure device-side data movement — the micro-batching engine uses it
+    /// to assemble the `[B, F, P, C]` latent and epsilon stacks without
+    /// any host round-trip. Cached per `(batch, dims)` like every fused op.
+    pub fn stack(&self, dims: &[usize], batch: usize) -> Result<Arc<Executable>> {
+        if batch == 0 {
+            return Err(anyhow!("stack needs at least one input"));
+        }
+        let key = (format!("stack{batch}"), dims.to_vec());
+        if let Some(e) = self.fused.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let b = xla::XlaBuilder::new(&format!("fused_stack{batch}"));
+        let idims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let mut lane_dims: Vec<i64> = vec![1];
+        lane_dims.extend_from_slice(&idims);
+        let mut parts = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let p = b
+                .parameter(i as i64, xla::ElementType::F32, &idims, &format!("x{i}"))
+                .map_err(|e| anyhow!("fused stack param x{i}: {e:?}"))?;
+            parts.push(
+                p.reshape(&lane_dims)
+                    .map_err(|e| anyhow!("fused stack reshape: {e:?}"))?,
+            );
+        }
+        let root = if batch == 1 {
+            parts.pop().expect("exactly one part")
+        } else {
+            let (first, rest) = parts.split_first().expect("batch >= 2");
+            first
+                .concat_in_dim(rest, 0)
+                .map_err(|e| anyhow!("fused stack concat: {e:?}"))?
+        };
+        let comp = root.build().map_err(|e| anyhow!("fused stack build: {e:?}"))?;
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile fused_stack{batch}: {e:?}"))?;
+        let exec = Arc::new(Executable {
+            name: format!("fused_stack{batch}{dims:?}"),
+            exe: Shared(exe),
+            arity: batch,
+            stats: ExecStats::default(),
+        });
+        self.fused.lock().unwrap().insert(key, exec.clone());
+        Ok(exec)
+    }
+
+    /// Slice lane `index` out of a `[batch, dims...]`-shaped tensor as a
+    /// `dims...`-shaped tensor (args: `x`) — the inverse of
+    /// [`Runtime::stack`], used per step to feed each request's resident
+    /// lane to the fixed-shape patch-embedding executable.
+    pub fn lane(&self, batched_dims: &[usize], index: usize) -> Result<Arc<Executable>> {
+        if batched_dims.is_empty() || index >= batched_dims[0] {
+            return Err(anyhow!(
+                "lane {index} out of range for batched dims {batched_dims:?}"
+            ));
+        }
+        let key = (format!("lane{index}"), batched_dims.to_vec());
+        if let Some(e) = self.fused.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let b = xla::XlaBuilder::new(&format!("fused_lane{index}"));
+        let idims: Vec<i64> = batched_dims.iter().map(|&d| d as i64).collect();
+        let inner: Vec<i64> = idims[1..].to_vec();
+        let x = b
+            .parameter(0, xla::ElementType::F32, &idims, "x")
+            .map_err(|e| anyhow!("fused lane param x: {e:?}"))?;
+        let sl = x
+            .slice_in_dim(index as i64, index as i64 + 1, 1, 0)
+            .map_err(|e| anyhow!("fused lane slice: {e:?}"))?;
+        let root = sl
+            .reshape(&inner)
+            .map_err(|e| anyhow!("fused lane reshape: {e:?}"))?;
+        let comp = root.build().map_err(|e| anyhow!("fused lane build: {e:?}"))?;
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile fused_lane{index}: {e:?}"))?;
+        let exec = Arc::new(Executable {
+            name: format!("fused_lane{index}{batched_dims:?}"),
+            exe: Shared(exe),
+            arity: 1,
+            stats: ExecStats::default(),
+        });
+        self.fused.lock().unwrap().insert(key, exec.clone());
+        Ok(exec)
     }
 
     /// Number of compiled artifacts currently cached.
@@ -730,6 +836,52 @@ mod tests {
         assert_eq!(exe.arity(), 3);
         let err = exe.run(&[&x, &x]).unwrap_err().to_string();
         assert!(err.contains("expected 3 args"), "{err}");
+    }
+
+    #[test]
+    fn stack_then_lane_roundtrips() {
+        let rt = Runtime::cpu().unwrap();
+        let dims = [2usize, 3];
+        let a: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..6).map(|i| 10.0 + i as f32).collect();
+        let c: Vec<f32> = (0..6).map(|i| -(i as f32)).collect();
+        let da = rt.upload(&a, &dims).unwrap();
+        let db = rt.upload(&b, &dims).unwrap();
+        let dc = rt.upload(&c, &dims).unwrap();
+
+        let stack = rt.stack(&dims, 3).unwrap();
+        assert_eq!(stack.arity(), 3);
+        let stacked = stack.run(&[&da, &db, &dc]).unwrap();
+        assert_eq!(stacked.dims(), &[3, 2, 3]);
+
+        // the stacked layout is lane-major: [a..., b..., c...]
+        let mut all = vec![0.0f32; 18];
+        rt.download_into(&stacked, &mut all).unwrap();
+        assert_eq!(&all[0..6], &a[..]);
+        assert_eq!(&all[6..12], &b[..]);
+        assert_eq!(&all[12..18], &c[..]);
+
+        // each lane slices back out exactly
+        for (i, want) in [&a, &b, &c].into_iter().enumerate() {
+            let lane = rt.lane(&[3, 2, 3], i).unwrap();
+            let out = lane.run(&[&stacked]).unwrap();
+            assert_eq!(out.dims(), &[2, 3]);
+            let mut got = vec![0.0f32; 6];
+            rt.download_into(&out, &mut got).unwrap();
+            assert_eq!(&got, want, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn stack_of_one_reshapes_and_lane_bounds_checked() {
+        let rt = Runtime::cpu().unwrap();
+        let x = rt.upload(&[1.0, 2.0], &[2]).unwrap();
+        let s1 = rt.stack(&[2], 1).unwrap();
+        let out = s1.run(&[&x]).unwrap();
+        assert_eq!(out.dims(), &[1, 2]);
+        assert!(rt.stack(&[2], 0).is_err());
+        assert!(rt.lane(&[2, 4], 2).is_err(), "lane index must be < batch");
+        assert!(rt.lane(&[], 0).is_err());
     }
 
     #[test]

@@ -1,8 +1,9 @@
-//! TCP JSON-lines serving front-end: router, request queue, worker pool.
+//! TCP JSON-lines serving front-end: router, request queue, batch
+//! scheduler, worker pool.
 //!
 //! This is the L3 deployment surface: a newline-delimited JSON protocol
 //! over TCP (one request object per line, one response object per line),
-//! a FIFO queue with a fixed worker pool executing generations, and
+//! a FIFO queue whose workers **micro-batch** compatible generations, and
 //! aggregate latency telemetry. Python is never involved; workers drive
 //! the PJRT executables directly.
 //!
@@ -10,15 +11,54 @@
 //! * `{"op":"ping"}` → `{"status":"ok","pong":true}`
 //! * `{"op":"generate","model":..,"bucket":..,"policy":..,"prompt":..,
 //!    "seed":..,"steps"?:..,"cfg_scale"?:..}` → run stats (including the
-//!    `h2d_bytes`/`h2d_calls`/`d2h_bytes`/`d2h_calls` transfer meters)
+//!    `h2d_bytes`/`h2d_calls`/`d2h_bytes`/`d2h_calls` transfer meters,
+//!    the `batch_size` the request was served at, and a `latent_l2`
+//!    checksum of the final latent for wire-level equivalence checks)
 //! * `{"op":"stats"}` → server-level counters + latency percentiles
 //! * `{"op":"shutdown"}` → stops the server
 //!
+//! # Batch scheduler
+//!
+//! When a worker dequeues a `generate` job it derives a [`BatchKey`] from
+//! the raw wire fields — model, bucket, policy spec, `steps`, `cfg_scale`
+//! — and coalesces up to [`ServerConfig::max_batch`] pending jobs with the
+//! **identical** key into one [`Engine::generate_batch`] pass, waiting up
+//! to [`ServerConfig::gather_window_ms`] for stragglers (the window is the
+//! only latency a lone request can pay for batching). The key compares
+//! raw values: an absent field and its explicit default are conservatively
+//! treated as incompatible, and a job whose fields cannot be keyed (wrong
+//! types) dispatches solo so validation fails it individually.
+//! Incompatible jobs are not pulled into the batch — they stay queued for
+//! the other workers (with a single worker they wait out the gather
+//! window, so worst-case added latency is `gather_window_ms` per pass).
+//! Seeds and prompts are deliberately *not* part of the key:
+//! per-request latents, text conditioning, policy state and drift
+//! measurements stay per-lane inside the engine (see the `engine` module
+//! docs §Micro-batching, which also defines the batched byte model: each
+//! response's transfer meters report the request's standalone cost, while
+//! the runtime's global meter shows the amortized batch total). Every
+//! `generate` response echoes `batch_size`, the number of requests served
+//! by its engine pass.
+//!
 //! `generate` payloads are validated before a sampler is built: `steps`
 //! must be a positive integer no larger than the preset's training
-//! schedule, `seed` and `cfg_scale` must be finite numbers. A malformed
-//! field is a per-request `{"status":"error"}` response, never a worker
-//! panic.
+//! schedule, `seed` must be a non-negative **integer** (fractional seeds
+//! used to truncate silently), `cfg_scale` must be a finite number. A
+//! malformed field is a per-request `{"status":"error"}` response, never a
+//! worker panic — and never poisons the rest of its batch.
+//!
+//! # Robustness
+//!
+//! The accept loop retries transient `accept(2)` failures (connection
+//! aborts/resets, EMFILE/ENFILE/ENOBUFS/ENOMEM under load) with capped
+//! exponential backoff instead of silently killing the listener, counting
+//! them in the `stats` op's `accept_errors`; only genuinely fatal errors
+//! (the listener itself is gone) stop it. Latency/queue telemetry lives in
+//! bounded [`Reservoir`]s (exact until [`ServerConfig::telemetry_reservoir`]
+//! samples, then uniform reservoir sampling), so sustained traffic cannot
+//! grow server memory without bound; the `stats` op reports p50/p95/p99
+//! latency, mean/p95 queueing, and the reservoir's `latency_samples` /
+//! `latency_seen` accounting.
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
@@ -26,15 +66,21 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::Manifest;
-use crate::engine::{Engine, Request};
+use crate::engine::{Engine, Request, RunResult};
 use crate::model::LoadedModel;
-use crate::policy::build_policy;
+use crate::policy::{build_policy, ReusePolicy};
 use crate::runtime::Runtime;
 use crate::util::json::{self, Json};
-use crate::util::stats;
+use crate::util::stats::{self, Reservoir};
+
+/// Wire-level defaults applied when a `generate` payload omits a field
+/// (shared by validation and the batch key so they can never disagree).
+const DEFAULT_MODEL: &str = "opensora-sim";
+const DEFAULT_BUCKET: &str = "240p-2s";
+const DEFAULT_POLICY: &str = "foresight";
 
 /// Engines per (model, bucket), loaded once and shared by all workers.
 pub struct EngineRegistry {
@@ -72,12 +118,83 @@ struct Job {
     reply: mpsc::Sender<Json>,
 }
 
-#[derive(Default)]
+/// Micro-batch compatibility key (module docs §Batch scheduler): every
+/// field that shapes the shared device pass, compared on the **raw** wire
+/// values. `None` in `steps`/`cfg_bits` means the field was absent (all
+/// absent requests resolve to the same preset default, so they batch).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct BatchKey {
+    model: String,
+    bucket: String,
+    policy: String,
+    steps: Option<u64>,
+    cfg_bits: Option<u64>,
+}
+
+/// Key a `generate` payload for batching, or `None` when it cannot be
+/// keyed (non-generate op, or fields of the wrong type / out of range —
+/// those dispatch solo and fail validation individually).
+fn batch_key(payload: &Json) -> Option<BatchKey> {
+    if payload.get("op").and_then(|o| o.as_str()) != Some("generate") {
+        return None;
+    }
+    let get_str = |k: &str, default: &str| -> Option<String> {
+        match payload.get(k) {
+            None => Some(default.to_string()),
+            Some(v) => v.as_str().map(str::to_string),
+        }
+    };
+    let model = get_str("model", DEFAULT_MODEL)?;
+    let bucket = get_str("bucket", DEFAULT_BUCKET)?;
+    let policy = get_str("policy", DEFAULT_POLICY)?;
+    let steps = match payload.get("steps") {
+        None => None,
+        Some(v) => {
+            let s = v.as_f64()?;
+            if !s.is_finite() || s < 1.0 || s.fract() != 0.0 {
+                return None;
+            }
+            Some(s as u64)
+        }
+    };
+    let cfg_bits = match payload.get("cfg_scale") {
+        None => None,
+        Some(v) => {
+            let c = v.as_f64()?;
+            if !c.is_finite() {
+                return None;
+            }
+            Some(c.to_bits())
+        }
+    };
+    Some(BatchKey { model, bucket, policy, steps, cfg_bits })
+}
+
 struct Telemetry {
     requests: AtomicU64,
     errors: AtomicU64,
-    latencies_s: Mutex<Vec<f64>>,
-    queue_s: Mutex<Vec<f64>>,
+    /// Transient accept(2) failures retried by the listener loop.
+    accept_errors: AtomicU64,
+    /// Engine passes dispatched (a batch of any size counts once).
+    batches: AtomicU64,
+    /// Requests that shared an engine pass with at least one other.
+    batched_requests: AtomicU64,
+    latencies_s: Mutex<Reservoir>,
+    queue_s: Mutex<Reservoir>,
+}
+
+impl Telemetry {
+    fn new(reservoir_cap: usize) -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            accept_errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            latencies_s: Mutex::new(Reservoir::new(reservoir_cap)),
+            queue_s: Mutex::new(Reservoir::new(reservoir_cap)),
+        }
+    }
 }
 
 /// The running server; dropping it (or calling [`Server::shutdown`]) stops
@@ -95,11 +212,27 @@ pub struct ServerConfig {
     /// Bind address; use port 0 for an ephemeral port (tests).
     pub addr: String,
     pub workers: usize,
+    /// Maximum compatible `generate` jobs coalesced into one engine pass
+    /// (1 disables micro-batching).
+    pub max_batch: usize,
+    /// How long a worker waits for more compatible jobs after dequeuing
+    /// the first, in milliseconds (0 = only coalesce what is already
+    /// queued). This is the upper bound on batching-induced latency.
+    pub gather_window_ms: u64,
+    /// Latency/queue telemetry reservoir capacity: exact percentiles below
+    /// this many samples, uniform reservoir sampling above.
+    pub telemetry_reservoir: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:0".to_string(), workers: 2 }
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            max_batch: 4,
+            gather_window_ms: 2,
+            telemetry_reservoir: 4096,
+        }
     }
 }
 
@@ -117,6 +250,28 @@ fn signal_stop(queue: &Queue, stop: &AtomicBool) {
     cv.notify_all();
 }
 
+/// Transient accept(2) failures worth retrying: per-connection errors the
+/// kernel reports on the listening socket (the peer aborted before we
+/// accepted) and resource-pressure conditions that clear on their own —
+/// EMFILE/ENFILE when a loaded server briefly exhausts file descriptors,
+/// ENOBUFS/ENOMEM under memory pressure. Anything else means the listener
+/// itself is broken (EBADF, EINVAL, ...) and retrying would spin forever.
+fn accept_should_retry(e: &std::io::Error) -> bool {
+    use std::io::ErrorKind;
+    if matches!(
+        e.kind(),
+        ErrorKind::ConnectionAborted
+            | ErrorKind::ConnectionReset
+            | ErrorKind::Interrupted
+            | ErrorKind::TimedOut
+    ) {
+        return true;
+    }
+    // ENOMEM(12)/ENFILE(23)/EMFILE(24)/ENOBUFS(105) have no stable
+    // ErrorKind mapping across Rust versions; match the raw errno.
+    matches!(e.raw_os_error(), Some(12 | 23 | 24 | 105))
+}
+
 impl Server {
     /// Start the listener + worker pool.
     pub fn start(registry: Arc<EngineRegistry>, cfg: ServerConfig) -> Result<Server> {
@@ -125,8 +280,10 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let queue: Queue = Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
-        let telemetry = Arc::new(Telemetry::default());
+        let telemetry = Arc::new(Telemetry::new(cfg.telemetry_reservoir));
         let mut handles = Vec::new();
+        let max_batch = cfg.max_batch.max(1);
+        let gather_window = Duration::from_millis(cfg.gather_window_ms);
 
         // worker pool
         for wid in 0..cfg.workers.max(1) {
@@ -138,14 +295,17 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("foresight-server-worker-{wid}"))
                     .spawn(move || loop {
-                        let job = {
+                        // Dequeue one job, then gather compatible ones
+                        // (module docs §Batch scheduler).
+                        let batch: Vec<Job> = {
                             let (lock, cv) = &*queue;
                             let mut q = lock.lock().unwrap();
-                            // Plain wait (no timeout): enqueue notifies one
-                            // worker, shutdown sets `stop` under the queue
-                            // lock and notifies all, so no wakeup is lost
-                            // and idle workers never spin.
-                            loop {
+                            // Plain wait (no timeout) for the first job:
+                            // enqueue notifies one worker, shutdown sets
+                            // `stop` under the queue lock and notifies all,
+                            // so no wakeup is lost and idle workers never
+                            // spin.
+                            let first = loop {
                                 if let Some(j) = q.pop_front() {
                                     break j;
                                 }
@@ -153,11 +313,39 @@ impl Server {
                                     return;
                                 }
                                 q = cv.wait(q).unwrap();
+                            };
+                            let key = batch_key(&first.payload);
+                            let mut batch = vec![first];
+                            if let Some(key) = key.filter(|_| max_batch > 1) {
+                                let deadline = Instant::now() + gather_window;
+                                loop {
+                                    // Pull every currently-queued job with
+                                    // the identical key, preserving FIFO
+                                    // order; incompatible jobs stay queued
+                                    // for other workers.
+                                    let mut i = 0;
+                                    while i < q.len() && batch.len() < max_batch {
+                                        if batch_key(&q[i].payload).as_ref() == Some(&key) {
+                                            batch.push(q.remove(i).expect("index in bounds"));
+                                        } else {
+                                            i += 1;
+                                        }
+                                    }
+                                    if batch.len() >= max_batch || stop.load(Ordering::SeqCst) {
+                                        break;
+                                    }
+                                    let now = Instant::now();
+                                    if now >= deadline {
+                                        break;
+                                    }
+                                    let (guard, _timed_out) =
+                                        cv.wait_timeout(q, deadline - now).unwrap();
+                                    q = guard;
+                                }
                             }
+                            batch
                         };
-                        let queue_s = job.enqueued.elapsed().as_secs_f64();
-                        let resp = handle_generate(&registry, &job.payload, queue_s, &telemetry);
-                        let _ = job.reply.send(resp);
+                        handle_generate_batch(&registry, batch, &telemetry);
                     })
                     .expect("spawn worker"),
             );
@@ -173,6 +361,7 @@ impl Server {
                     .name("foresight-server-accept".to_string())
                     .spawn(move || {
                         let mut conn_handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                        let mut consecutive_errs = 0u32;
                         while !stop_accept.load(Ordering::SeqCst) {
                             // Reap finished connection handlers each pass so
                             // the handle list tracks live connections instead
@@ -187,6 +376,7 @@ impl Server {
                             }
                             match listener.accept() {
                                 Ok((stream, _peer)) => {
+                                    consecutive_errs = 0;
                                     let queue = Arc::clone(&queue);
                                     let stop = Arc::clone(&stop_accept);
                                     let telemetry = Arc::clone(&telemetry);
@@ -195,9 +385,29 @@ impl Server {
                                     }));
                                 }
                                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                    std::thread::sleep(std::time::Duration::from_millis(10));
+                                    std::thread::sleep(Duration::from_millis(10));
                                 }
-                                Err(_) => break,
+                                Err(e) if accept_should_retry(&e) => {
+                                    // Transient (ECONNABORTED, EMFILE under
+                                    // load, ...): back off exponentially —
+                                    // capped so shutdown stays prompt — and
+                                    // keep listening rather than silently
+                                    // killing the accept loop.
+                                    telemetry.accept_errors.fetch_add(1, Ordering::Relaxed);
+                                    let delay = Duration::from_millis(
+                                        5u64.saturating_mul(1 << consecutive_errs.min(6)),
+                                    );
+                                    consecutive_errs = consecutive_errs.saturating_add(1);
+                                    std::thread::sleep(delay.min(Duration::from_millis(250)));
+                                }
+                                Err(e) => {
+                                    // Fatal: the listening socket itself is
+                                    // gone; existing connections keep
+                                    // draining through their own threads.
+                                    telemetry.accept_errors.fetch_add(1, Ordering::Relaxed);
+                                    eprintln!("[server] accept loop stopping: {e}");
+                                    break;
+                                }
                             }
                         }
                         for h in conn_handles {
@@ -301,16 +511,32 @@ fn handle_line(
         let resp = match op {
             "ping" => Json::obj(vec![("status", Json::str("ok")), ("pong", Json::Bool(true))]),
             "stats" => {
-                let lat = telemetry.latencies_s.lock().unwrap().clone();
-                let qs = telemetry.queue_s.lock().unwrap().clone();
+                let (lat, lat_seen) = {
+                    let r = telemetry.latencies_s.lock().unwrap();
+                    (r.samples().to_vec(), r.seen())
+                };
+                let qs = telemetry.queue_s.lock().unwrap().samples().to_vec();
                 Json::obj(vec![
                     ("status", Json::str("ok")),
                     ("requests", Json::num(telemetry.requests.load(Ordering::Relaxed) as f64)),
                     ("errors", Json::num(telemetry.errors.load(Ordering::Relaxed) as f64)),
+                    (
+                        "accept_errors",
+                        Json::num(telemetry.accept_errors.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("batches", Json::num(telemetry.batches.load(Ordering::Relaxed) as f64)),
+                    (
+                        "batched_requests",
+                        Json::num(telemetry.batched_requests.load(Ordering::Relaxed) as f64),
+                    ),
                     ("latency_p50_s", Json::num(stats::percentile(&lat, 50.0))),
                     ("latency_p95_s", Json::num(stats::percentile(&lat, 95.0))),
+                    ("latency_p99_s", Json::num(stats::percentile(&lat, 99.0))),
                     ("latency_mean_s", Json::num(stats::mean(&lat))),
+                    ("latency_samples", Json::num(lat.len() as f64)),
+                    ("latency_seen", Json::num(lat_seen as f64)),
                     ("queue_mean_s", Json::num(stats::mean(&qs))),
+                    ("queue_p95_s", Json::num(stats::percentile(&qs, 95.0))),
                 ])
             }
             "shutdown" => {
@@ -334,7 +560,10 @@ fn handle_line(
                         false
                     } else {
                         q.push_back(Job { payload, enqueued: Instant::now(), reply: tx });
-                        cv.notify_one();
+                        // notify_all, not notify_one: a gathering worker
+                        // parked on the same condvar must also see new
+                        // arrivals inside its window.
+                        cv.notify_all();
                         true
                     }
                 };
@@ -351,60 +580,159 @@ fn handle_line(
     Ok(true)
 }
 
-fn handle_generate(
-    registry: &EngineRegistry,
-    payload: &Json,
+/// A `generate` payload after wire validation, ready for dispatch.
+#[derive(Debug)]
+struct GenerateParams {
+    model: String,
+    bucket: String,
+    policy_spec: String,
+    req: Request,
+}
+
+/// Wire validation before any sampler is built: a `steps: 0` (or
+/// out-of-schedule DDIM step count) used to trip the sampler
+/// constructor's assert, panic the worker, and turn every later request
+/// on that worker into "worker dropped"; a fractional seed used to
+/// truncate silently. (The schedule upper bound on `steps` needs the
+/// engine and is checked at dispatch.)
+fn parse_generate(payload: &Json) -> Result<GenerateParams> {
+    // Routing fields must be strings when present (absent = default). A
+    // wrong-typed field is unkeyable for the batch scheduler, so it must
+    // also fail validation here — silently substituting the default would
+    // serve the wrong model.
+    let field_str = |k: &str, default: &str| -> Result<String> {
+        match payload.get(k) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("{k} must be a string")),
+        }
+    };
+    let model = field_str("model", DEFAULT_MODEL)?;
+    let bucket = field_str("bucket", DEFAULT_BUCKET)?;
+    let policy_spec = field_str("policy", DEFAULT_POLICY)?;
+    let prompt = payload
+        .get("prompt")
+        .and_then(|v| v.as_str())
+        .unwrap_or_default()
+        .to_string();
+
+    let seed = match payload.get("seed") {
+        None => 0,
+        Some(v) => {
+            let s = v.as_f64().ok_or_else(|| anyhow!("seed must be a number"))?;
+            // Reject fractions the same way `steps` does: `1.5 as u64`
+            // would silently truncate to 1 and serve the wrong video.
+            if !s.is_finite() || s < 0.0 || s.fract() != 0.0 {
+                return Err(anyhow!(
+                    "seed must be a finite non-negative integer, got {s}"
+                ));
+            }
+            s as u64
+        }
+    };
+    let steps = match payload.get("steps") {
+        None => None,
+        Some(v) => {
+            let s = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("steps must be a positive integer"))?;
+            if !s.is_finite() || s < 1.0 || s.fract() != 0.0 {
+                return Err(anyhow!("steps must be a positive integer, got {s}"));
+            }
+            Some(s as usize)
+        }
+    };
+    let cfg_scale = match payload.get("cfg_scale") {
+        None => None,
+        Some(v) => {
+            let c = v.as_f64().ok_or_else(|| anyhow!("cfg_scale must be a number"))?;
+            if !c.is_finite() {
+                return Err(anyhow!("cfg_scale must be finite, got {c}"));
+            }
+            Some(c)
+        }
+    };
+
+    let mut req = Request::new(&prompt, seed);
+    req.steps = steps;
+    req.cfg_scale = cfg_scale;
+    Ok(GenerateParams { model, bucket, policy_spec, req })
+}
+
+/// One `generate` response object (module docs list the fields).
+fn generate_response(
+    model: &str,
+    bucket: &str,
+    r: &RunResult,
     queue_s: f64,
-    telemetry: &Telemetry,
+    batch_size: usize,
 ) -> Json {
-    telemetry.requests.fetch_add(1, Ordering::Relaxed);
-    let get_str = |k: &str| payload.get(k).and_then(|v| v.as_str()).map(str::to_string);
-    let model = get_str("model").unwrap_or_else(|| "opensora-sim".to_string());
-    let bucket = get_str("bucket").unwrap_or_else(|| "240p-2s".to_string());
-    let policy_spec = get_str("policy").unwrap_or_else(|| "foresight".to_string());
-    let prompt = get_str("prompt").unwrap_or_default();
+    let s = &r.stats;
+    let latent_l2 = r
+        .latents
+        .data
+        .iter()
+        .map(|&v| v as f64 * v as f64)
+        .sum::<f64>()
+        .sqrt();
+    Json::obj(vec![
+        ("status", Json::str("ok")),
+        ("model", Json::str(model)),
+        ("bucket", Json::str(bucket)),
+        ("policy", Json::str(&s.policy)),
+        ("wall_s", Json::num(s.wall_s)),
+        ("queue_s", Json::num(queue_s)),
+        ("steps", Json::num(s.per_step_s.len() as f64)),
+        ("computed_units", Json::num(s.computed_units as f64)),
+        ("reused_units", Json::num(s.reused_units as f64)),
+        ("reuse_fraction", Json::num(s.reuse_fraction())),
+        ("cache_peak_bytes", Json::num(s.cache_peak_bytes as f64)),
+        ("h2d_bytes", Json::num(s.h2d_bytes as f64)),
+        ("h2d_calls", Json::num(s.h2d_calls as f64)),
+        ("d2h_bytes", Json::num(s.d2h_bytes as f64)),
+        ("d2h_calls", Json::num(s.d2h_calls as f64)),
+        ("batch_size", Json::num(batch_size as f64)),
+        ("latent_l2", Json::num(latent_l2)),
+    ])
+}
 
-    let run = (|| -> Result<Json> {
-        // Wire validation before any sampler is built: a `steps: 0` (or
-        // out-of-schedule DDIM step count) used to trip the sampler
-        // constructor's assert, panic the worker, and turn every later
-        // request on that worker into "worker dropped".
-        let seed = match payload.get("seed") {
-            None => 0,
-            Some(v) => {
-                let s = v.as_f64().ok_or_else(|| anyhow!("seed must be a number"))?;
-                if !s.is_finite() || s < 0.0 {
-                    return Err(anyhow!("seed must be a finite non-negative number, got {s}"));
-                }
-                s as u64
+/// Dispatch one gathered batch of `generate` jobs (size ≥ 1). Per-job
+/// validation failures are answered individually and never poison the
+/// rest of the batch; surviving jobs share one engine pass.
+fn handle_generate_batch(registry: &EngineRegistry, jobs: Vec<Job>, telemetry: &Telemetry) {
+    let mut parsed: Vec<(Job, f64, GenerateParams)> = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        telemetry.requests.fetch_add(1, Ordering::Relaxed);
+        let queue_s = job.enqueued.elapsed().as_secs_f64();
+        match parse_generate(&job.payload) {
+            Ok(p) => parsed.push((job, queue_s, p)),
+            Err(e) => {
+                telemetry.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(err_json(&format!("{e:#}")));
             }
-        };
-        let steps = match payload.get("steps") {
-            None => None,
-            Some(v) => {
-                let s = v
-                    .as_f64()
-                    .ok_or_else(|| anyhow!("steps must be a positive integer"))?;
-                if !s.is_finite() || s < 1.0 || s.fract() != 0.0 {
-                    return Err(anyhow!("steps must be a positive integer, got {s}"));
-                }
-                Some(s as usize)
-            }
-        };
-        let cfg_scale = match payload.get("cfg_scale") {
-            None => None,
-            Some(v) => {
-                let c = v.as_f64().ok_or_else(|| anyhow!("cfg_scale must be a number"))?;
-                if !c.is_finite() {
-                    return Err(anyhow!("cfg_scale must be finite, got {c}"));
-                }
-                Some(c)
-            }
-        };
+        }
+    }
+    if parsed.is_empty() {
+        return;
+    }
+    telemetry.batches.fetch_add(1, Ordering::Relaxed);
+    let batch_size = parsed.len();
+    if batch_size >= 2 {
+        telemetry
+            .batched_requests
+            .fetch_add(batch_size as u64, Ordering::Relaxed);
+    }
 
-        let engine = registry.get(&model, &bucket)?;
+    let run = (|| -> Result<Vec<RunResult>> {
+        // The batch scheduler only groups identical (model, bucket,
+        // policy, steps, cfg_scale) keys, so the first job's fields speak
+        // for the whole batch.
+        let first = &parsed[0].2;
+        let engine = registry.get(&first.model, &first.bucket)?;
         let info = &engine.model().info;
-        if let Some(s) = steps {
+        if let Some(s) = first.req.steps {
             // One bound for both samplers: DDIM's constructor asserts it,
             // and an absurd rflow step count would only allocate
             // gigabyte-scale sigma tables before doing useless work.
@@ -415,42 +743,30 @@ fn handle_generate(
                 ));
             }
         }
-        let mut policy = build_policy(&policy_spec, info, steps.unwrap_or(info.steps))?;
-        let mut req = Request::new(&prompt, seed);
-        req.steps = steps;
-        req.cfg_scale = cfg_scale;
-        let result = engine.generate(&req, policy.as_mut(), None)?;
-        let s = &result.stats;
-        Ok(Json::obj(vec![
-            ("status", Json::str("ok")),
-            ("model", Json::str(&model)),
-            ("bucket", Json::str(&bucket)),
-            ("policy", Json::str(&s.policy)),
-            ("wall_s", Json::num(s.wall_s)),
-            ("queue_s", Json::num(queue_s)),
-            ("steps", Json::num(s.per_step_s.len() as f64)),
-            ("computed_units", Json::num(s.computed_units as f64)),
-            ("reused_units", Json::num(s.reused_units as f64)),
-            ("reuse_fraction", Json::num(s.reuse_fraction())),
-            ("cache_peak_bytes", Json::num(s.cache_peak_bytes as f64)),
-            ("h2d_bytes", Json::num(s.h2d_bytes as f64)),
-            ("h2d_calls", Json::num(s.h2d_calls as f64)),
-            ("d2h_bytes", Json::num(s.d2h_bytes as f64)),
-            ("d2h_calls", Json::num(s.d2h_calls as f64)),
-        ]))
+        let steps = first.req.steps.unwrap_or(info.steps);
+        let mut policies: Vec<Box<dyn ReusePolicy>> = parsed
+            .iter()
+            .map(|(_, _, p)| build_policy(&p.policy_spec, info, steps))
+            .collect::<Result<_>>()?;
+        let reqs: Vec<Request> = parsed.iter().map(|(_, _, p)| p.req.clone()).collect();
+        engine.generate_batch(&reqs, &mut policies)
     })();
 
     match run {
-        Ok(resp) => {
-            if let Some(w) = resp.get("wall_s").and_then(|v| v.as_f64()) {
-                telemetry.latencies_s.lock().unwrap().push(w);
+        Ok(results) => {
+            for ((job, queue_s, p), r) in parsed.into_iter().zip(results) {
+                let resp = generate_response(&p.model, &p.bucket, &r, queue_s, batch_size);
+                telemetry.latencies_s.lock().unwrap().push(r.stats.wall_s);
                 telemetry.queue_s.lock().unwrap().push(queue_s);
+                let _ = job.reply.send(resp);
             }
-            resp
         }
         Err(e) => {
-            telemetry.errors.fetch_add(1, Ordering::Relaxed);
-            err_json(&format!("{e:#}"))
+            let msg = format!("{e:#}");
+            for (job, _, _) in parsed {
+                telemetry.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(err_json(&msg));
+            }
         }
     }
 }
@@ -482,5 +798,100 @@ impl Client {
     pub fn ping(&mut self) -> Result<bool> {
         let r = self.call(&Json::obj(vec![("op", Json::str("ping"))]))?;
         Ok(r.get("pong").and_then(|v| v.as_bool()).unwrap_or(false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen_payload(fields: Vec<(&str, Json)>) -> Json {
+        let mut all = vec![("op", Json::str("generate"))];
+        all.extend(fields);
+        Json::obj(all)
+    }
+
+    #[test]
+    fn batch_key_groups_identical_raw_fields() {
+        let a = gen_payload(vec![
+            ("policy", Json::str("foresight")),
+            ("steps", Json::num(12.0)),
+            ("seed", Json::num(1.0)),
+            ("prompt", Json::str("a lake")),
+        ]);
+        let b = gen_payload(vec![
+            ("policy", Json::str("foresight")),
+            ("steps", Json::num(12.0)),
+            ("seed", Json::num(999.0)),
+            ("prompt", Json::str("a storm")),
+        ]);
+        // seeds and prompts are not part of the key
+        assert_eq!(batch_key(&a), batch_key(&b));
+        assert!(batch_key(&a).is_some());
+    }
+
+    #[test]
+    fn batch_key_separates_incompatible_fields() {
+        let base = gen_payload(vec![("steps", Json::num(12.0))]);
+        for other in [
+            gen_payload(vec![("steps", Json::num(10.0))]),
+            gen_payload(vec![("steps", Json::num(12.0)), ("policy", Json::str("static"))]),
+            gen_payload(vec![("steps", Json::num(12.0)), ("cfg_scale", Json::num(3.0))]),
+            gen_payload(vec![("steps", Json::num(12.0)), ("bucket", Json::str("other"))]),
+            gen_payload(vec![]), // absent steps ≠ explicit steps
+        ] {
+            assert_ne!(batch_key(&base), batch_key(&other), "{other}");
+        }
+    }
+
+    #[test]
+    fn batch_key_rejects_unkeyable_payloads() {
+        // wrong-typed fields dispatch solo (validation fails them there)
+        assert!(batch_key(&gen_payload(vec![("steps", Json::str("ten"))])).is_none());
+        assert!(batch_key(&gen_payload(vec![("steps", Json::num(2.5))])).is_none());
+        assert!(batch_key(&gen_payload(vec![("model", Json::num(4.0))])).is_none());
+        assert!(batch_key(&Json::obj(vec![("op", Json::str("ping"))])).is_none());
+    }
+
+    #[test]
+    fn parse_generate_rejects_fractional_seed() {
+        let err = parse_generate(&gen_payload(vec![("seed", Json::num(1.5))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("seed"), "{err}");
+        let err = parse_generate(&gen_payload(vec![("seed", Json::num(-3.0))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("seed"), "{err}");
+        // integral-valued floats are fine
+        let p = parse_generate(&gen_payload(vec![("seed", Json::num(7.0))])).unwrap();
+        assert_eq!(p.req.seed, 7);
+    }
+
+    #[test]
+    fn parse_generate_rejects_wrong_typed_routing_fields() {
+        // Unkeyable for the batch scheduler ⇒ must also fail validation
+        // (not silently fall back to the default model).
+        for k in ["model", "bucket", "policy"] {
+            let err = parse_generate(&gen_payload(vec![(k, Json::num(4.0))]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(k), "{k}: {err}");
+        }
+        // absent routing fields still default
+        let p = parse_generate(&gen_payload(vec![])).unwrap();
+        assert_eq!(p.model, DEFAULT_MODEL);
+        assert_eq!(p.policy_spec, DEFAULT_POLICY);
+    }
+
+    #[test]
+    fn accept_retry_classification() {
+        use std::io::{Error, ErrorKind};
+        assert!(accept_should_retry(&Error::new(ErrorKind::ConnectionAborted, "x")));
+        assert!(accept_should_retry(&Error::new(ErrorKind::ConnectionReset, "x")));
+        assert!(accept_should_retry(&Error::from_raw_os_error(24))); // EMFILE
+        assert!(accept_should_retry(&Error::from_raw_os_error(23))); // ENFILE
+        assert!(!accept_should_retry(&Error::from_raw_os_error(9))); // EBADF
+        assert!(!accept_should_retry(&Error::new(ErrorKind::InvalidInput, "x")));
     }
 }

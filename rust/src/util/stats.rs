@@ -1,5 +1,7 @@
 //! Statistics helpers shared by metrics, benches and telemetry.
 
+use crate::util::prng::Rng;
+
 /// Online mean/variance accumulator (Welford).
 #[derive(Debug, Clone, Default)]
 pub struct Welford {
@@ -110,6 +112,68 @@ pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
         0.0
     } else {
         num / (da.sqrt() * db.sqrt())
+    }
+}
+
+/// Bounded sample store for long-running telemetry: keeps every value
+/// exactly until `cap`, then switches to reservoir sampling (Vitter's
+/// Algorithm R) so memory stays O(cap) under sustained traffic while the
+/// kept set remains a uniform random sample of everything ever pushed —
+/// percentiles computed over it stay meaningful for the whole run, not
+/// just a recent window. Deterministically seeded (no clock, no OS
+/// entropy), so telemetry never perturbs reproducibility tests.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            seen: 0,
+            samples: Vec::new(),
+            rng: Rng::from_seed_and_label(0x5EED, "telemetry-reservoir"),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // Algorithm R: the i-th value replaces a kept sample with
+            // probability cap/i, keeping the reservoir uniform.
+            let j = (self.rng.next_u64() % self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Values currently held (≤ cap). Order is not meaningful.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Total values ever pushed (can exceed [`Reservoir::len`]).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
     }
 }
 
@@ -231,5 +295,61 @@ mod tests {
     #[test]
     fn fmt_mean_pm_std_shape() {
         assert_eq!(fmt_mean_pm_std(&[1.0, 1.0, 1.0]), "1.00 (± 0.00)");
+    }
+
+    #[test]
+    fn reservoir_exact_below_cap() {
+        let mut r = Reservoir::new(8);
+        for i in 0..5 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.seen(), 5);
+        assert_eq!(r.samples(), &[0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn reservoir_caps_memory_and_counts_seen() {
+        let mut r = Reservoir::new(16);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 16, "reservoir must never exceed its cap");
+        assert_eq!(r.capacity(), 16);
+        assert_eq!(r.seen(), 10_000);
+        assert!(r.samples().iter().all(|&x| (0.0..10_000.0).contains(&x)));
+    }
+
+    #[test]
+    fn reservoir_sample_is_roughly_uniform() {
+        // Push 0..n uniformly; the kept sample's mean should approximate
+        // the stream mean (n-1)/2 — Algorithm R keeps a uniform sample,
+        // not a recency window.
+        let mut r = Reservoir::new(512);
+        let n = 50_000usize;
+        for i in 0..n {
+            r.push(i as f64);
+        }
+        let m = mean(r.samples());
+        let expect = (n - 1) as f64 / 2.0;
+        // stderr of a 512-sample mean over U[0, n) ≈ n/(sqrt(12*512)) ≈ 640
+        assert!(
+            (m - expect).abs() < 4_000.0,
+            "reservoir mean {m} too far from stream mean {expect}"
+        );
+        // old values must still be represented (not a tail window)
+        assert!(
+            r.samples().iter().any(|&x| x < (n / 2) as f64),
+            "reservoir degenerated into a recency window"
+        );
+    }
+
+    #[test]
+    fn reservoir_zero_cap_clamps_to_one() {
+        let mut r = Reservoir::new(0);
+        r.push(1.0);
+        r.push(2.0);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.seen(), 2);
     }
 }

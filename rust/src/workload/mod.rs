@@ -21,7 +21,7 @@ const MOTION_WORDS: &[&str] = &[
     "jump", "jumping", "fly", "flying", "explode", "explosion", "dance",
     "dancing", "chase", "chasing", "gallop", "sprint", "swirl", "tumble",
     "bounce", "bounces", "frolic", "frolics", "surf", "surfing", "drone",
-    "pan", "pans", "zoom", "circles", "crashing", "splash", "flicker",
+    "pan", "pans", "zoom", "circles", "splash", "flicker",
 ];
 
 /// Motion/scene-dynamics statistic of a prompt, in [0, 1].
@@ -224,6 +224,15 @@ mod tests {
         assert_eq!(a1.data, a2.data);
         assert_ne!(a1.data, b.data);
         assert_eq!(a1.dims, vec![16, 64]);
+    }
+
+    #[test]
+    fn motion_words_are_unique() {
+        // A doubled entry ("crashing" shipped twice in the seed) is
+        // harmless for the contains() lookup but signals a drifting word
+        // bank; keep the list a set.
+        let set: std::collections::BTreeSet<_> = MOTION_WORDS.iter().collect();
+        assert_eq!(set.len(), MOTION_WORDS.len(), "MOTION_WORDS contains duplicates");
     }
 
     #[test]

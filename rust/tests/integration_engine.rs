@@ -331,6 +331,101 @@ fn device_hot_path_slashes_foresight_transfers_and_cache() {
 }
 
 #[test]
+fn generate_batch_matches_sequential_device_path() {
+    // Tentpole acceptance at the engine level: a micro-batch of requests —
+    // even under *different* policies, so one lane reuses while a neighbor
+    // recomputes — reproduces each request's sequential device run:
+    // identical decisions, identical unit/byte accounting (the as-if byte
+    // model), latents to ≤1e-6 (elementwise-identical in practice).
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let info = eng.model().info.clone();
+    let steps = 10usize;
+    let specs = ["foresight:n=1,r=2,gamma=0.5", "static:n=2,r=3", "none"];
+    let prompts = ["a calm lake at dawn", "a storm crashing over cliffs", "a quiet library"];
+
+    let mut reqs = Vec::new();
+    let mut pols = Vec::new();
+    for (i, (spec, prompt)) in specs.iter().zip(prompts).enumerate() {
+        let mut r = Request::new(prompt, 40 + i as u64);
+        r.steps = Some(steps);
+        reqs.push(r);
+        pols.push(build_policy(spec, &info, steps).unwrap());
+    }
+    let batch = eng.generate_batch(&reqs, &mut pols).unwrap();
+    assert_eq!(batch.len(), 3);
+
+    for (lane, (spec, prompt)) in specs.iter().zip(prompts).enumerate() {
+        let seq = run_steps(&eng, spec, prompt, 40 + lane as u64, Some(steps));
+        let b = &batch[lane];
+        assert_eq!(b.reuse_map, seq.reuse_map, "lane {lane} ({spec}): decisions diverged");
+        let mismatch = foresight::bench_support::first_latent_mismatch(
+            &b.latents.data,
+            &seq.latents.data,
+            1e-6,
+        );
+        if let Some((i, a, c)) = mismatch {
+            panic!("lane {lane} ({spec}): latent {i} diverged: batch {a} vs sequential {c}");
+        }
+        assert_eq!(b.stats.computed_units, seq.stats.computed_units, "lane {lane}");
+        assert_eq!(b.stats.reused_units, seq.stats.reused_units, "lane {lane}");
+        assert_eq!(b.stats.fallback_units, seq.stats.fallback_units, "lane {lane}");
+        // the as-if byte model: per-request meters equal the standalone run
+        assert_eq!(b.stats.h2d_bytes, seq.stats.h2d_bytes, "lane {lane}: h2d budget");
+        assert_eq!(b.stats.d2h_bytes, seq.stats.d2h_bytes, "lane {lane}: d2h budget");
+        assert_eq!(b.stats.cache_peak_bytes, seq.stats.cache_peak_bytes, "lane {lane}");
+        assert_eq!(b.stats.per_step_s.len(), steps, "lane {lane}");
+    }
+}
+
+#[test]
+fn generate_batch_rejects_incompatible_requests() {
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let info = eng.model().info.clone();
+    let mk_pols = |n: usize, steps: usize| -> Vec<Box<dyn policy::ReusePolicy>> {
+        (0..n).map(|_| build_policy("none", &info, steps).unwrap()).collect()
+    };
+    fn expect_fail(r: anyhow::Result<Vec<foresight::engine::RunResult>>, what: &str) -> String {
+        match r {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("{what}: unexpectedly succeeded"),
+        }
+    }
+
+    // mismatched step counts
+    let mut a = Request::new("x", 1);
+    a.steps = Some(8);
+    let mut b = Request::new("y", 2);
+    b.steps = Some(10);
+    let mut pols = mk_pols(2, 8);
+    let err = expect_fail(eng.generate_batch(&[a.clone(), b], &mut pols), "mixed steps");
+    assert!(err.contains("steps"), "{err}");
+
+    // mismatched cfg scales
+    let mut c = Request::new("z", 3);
+    c.steps = Some(8);
+    c.cfg_scale = Some(3.0);
+    let mut pols = mk_pols(2, 8);
+    let err = expect_fail(eng.generate_batch(&[a.clone(), c], &mut pols), "mixed cfg");
+    assert!(err.contains("cfg_scale"), "{err}");
+
+    // request/policy arity mismatch
+    let mut pols = mk_pols(1, 8);
+    let err = expect_fail(
+        eng.generate_batch(&[a.clone(), a.clone()], &mut pols),
+        "request/policy arity mismatch",
+    );
+    assert!(err.contains("policies"), "{err}");
+
+    // empty batch is a no-op, batch of one falls back to the single path
+    assert!(eng.generate_batch(&[], &mut []).unwrap().is_empty());
+    let mut pols = mk_pols(1, 8);
+    let one = eng.generate_batch(&[a], &mut pols).unwrap();
+    assert_eq!(one.len(), 1);
+    let seq = run_steps(&eng, "none", "x", 1, Some(8));
+    assert_eq!(one[0].latents.data, seq.latents.data, "B=1 must equal the single path");
+}
+
+#[test]
 fn step_override_is_respected() {
     let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
     let info = eng.model().info.clone();

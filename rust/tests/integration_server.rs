@@ -8,7 +8,7 @@ use foresight::runtime::Runtime;
 use foresight::server::{Client, EngineRegistry, Server, ServerConfig};
 use foresight::util::json::Json;
 
-fn start_server(workers: usize) -> Option<Server> {
+fn start_server_with(cfg: ServerConfig) -> Option<Server> {
     let root = Manifest::default_root();
     if !root.join("manifest.json").exists() {
         eprintln!("SKIP: no artifacts — run `make artifacts`");
@@ -24,10 +24,15 @@ fn start_server(workers: usize) -> Option<Server> {
         )
         .unwrap(),
     );
-    Some(
-        Server::start(registry, ServerConfig { addr: "127.0.0.1:0".into(), workers })
-            .unwrap(),
-    )
+    Some(Server::start(registry, cfg).unwrap())
+}
+
+fn start_server(workers: usize) -> Option<Server> {
+    start_server_with(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        ..ServerConfig::default()
+    })
 }
 
 fn gen_req(policy: &str, prompt: &str, seed: u64, steps: usize) -> Json {
@@ -53,6 +58,9 @@ fn ping_generate_stats_roundtrip() {
     assert_eq!(resp.get("steps").unwrap().as_usize().unwrap(), 12);
     assert!(resp.get("wall_s").unwrap().as_f64().unwrap() > 0.0);
     assert!(resp.get("reused_units").unwrap().as_f64().unwrap() > 0.0);
+    // wire-visible batching + equivalence fields ride along
+    assert!(resp.get("batch_size").unwrap().as_usize().unwrap() >= 1);
+    assert!(resp.get("latent_l2").unwrap().as_f64().unwrap() > 0.0);
 
     let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
     assert_eq!(stats.get("requests").unwrap().as_usize().unwrap(), 1);
@@ -145,13 +153,26 @@ fn invalid_generate_requests_are_rejected_without_killing_workers() {
     let r3 = c.call(&bad_seed).unwrap();
     assert_eq!(r3.get("status").unwrap().as_str().unwrap(), "error", "{r3}");
 
+    // fractional seed is rejected like fractional steps — `1.5 as u64`
+    // used to truncate silently to seed 1 and serve the wrong video
+    let mut frac_seed = gen_req("none", "x", 0, 4);
+    if let Json::Obj(ref mut o) = frac_seed {
+        o.insert("seed".into(), Json::num(1.5));
+    }
+    let r4 = c.call(&frac_seed).unwrap();
+    assert_eq!(r4.get("status").unwrap().as_str().unwrap(), "error", "{r4}");
+    assert!(
+        r4.get("error").unwrap().as_str().unwrap().contains("seed"),
+        "{r4}"
+    );
+
     // the same (only) worker still serves valid requests afterwards
     let ok = c.call(&gen_req("none", "recovery", 1, 4)).unwrap();
     assert_eq!(ok.get("status").unwrap().as_str().unwrap(), "ok", "{ok}");
 
     // errors were counted, not fatal
     let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
-    assert_eq!(stats.get("errors").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(stats.get("errors").unwrap().as_usize().unwrap(), 4);
     server.shutdown();
 }
 
@@ -200,6 +221,157 @@ fn shutdown_is_prompt_with_idle_workers() {
         took < std::time::Duration::from_secs(1),
         "idle shutdown should be immediate, took {took:?}"
     );
+}
+
+#[test]
+fn compatible_concurrent_clients_batch_and_match_sequential() {
+    // K concurrent clients with the same (model, bucket, policy, steps)
+    // but distinct prompts/seeds must coalesce into shared engine passes
+    // and receive exactly the results a sequential server would have
+    // produced (latent checksum ≤1e-6, identical decision counters).
+    let Some(server) = start_server_with(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 4,
+        gather_window_ms: 500,
+        ..ServerConfig::default()
+    }) else {
+        return;
+    };
+    let addr = server.addr();
+    const K: u64 = 3;
+    let req_for = |cid: u64| gen_req("foresight", &format!("batched prompt {cid}"), cid, 8);
+
+    // Sequential reference: one client, one request at a time.
+    let mut reference = Vec::new();
+    {
+        let mut c = Client::connect(&addr).unwrap();
+        for cid in 0..K {
+            let r = c.call(&req_for(cid)).unwrap();
+            assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+            reference.push((
+                r.get("latent_l2").unwrap().as_f64().unwrap(),
+                r.get("computed_units").unwrap().as_f64().unwrap(),
+                r.get("reused_units").unwrap().as_f64().unwrap(),
+            ));
+        }
+    }
+
+    // Concurrent phase: pre-connect every client, then fire simultaneously
+    // so all K jobs are queued well inside the gather window.
+    let mut handles = Vec::new();
+    for cid in 0..K {
+        let req = req_for(cid);
+        let mut c = Client::connect(&addr).unwrap();
+        assert!(c.ping().unwrap());
+        handles.push(std::thread::spawn(move || {
+            let r = c.call(&req).unwrap();
+            (cid, r)
+        }));
+    }
+    let mut max_batch_seen = 0usize;
+    for h in handles {
+        let (cid, r) = h.join().unwrap();
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+        let (l2, computed, reused) = reference[cid as usize];
+        let got_l2 = r.get("latent_l2").unwrap().as_f64().unwrap();
+        assert!(
+            (got_l2 - l2).abs() <= 1e-6 * (1.0 + l2.abs()),
+            "client {cid}: batched latent_l2 {got_l2} vs sequential {l2}"
+        );
+        assert_eq!(r.get("computed_units").unwrap().as_f64().unwrap(), computed, "{cid}");
+        assert_eq!(r.get("reused_units").unwrap().as_f64().unwrap(), reused, "{cid}");
+        max_batch_seen = max_batch_seen.max(r.get("batch_size").unwrap().as_usize().unwrap());
+    }
+    // With one worker and a wide gather window, the simultaneous clients
+    // must actually have shared an engine pass.
+    assert!(
+        max_batch_seen >= 2,
+        "expected at least one multi-request pass, max batch_size {max_batch_seen}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn incompatible_requests_are_never_cross_batched() {
+    // Clients whose requests differ in a BatchKey field (steps, policy)
+    // must each be served by their own engine pass — batch_size 1 for all,
+    // with the per-request parameters honored.
+    let Some(server) = start_server_with(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 4,
+        gather_window_ms: 300,
+        ..ServerConfig::default()
+    }) else {
+        return;
+    };
+    let addr = server.addr();
+    let cases: Vec<Json> = vec![
+        gen_req("none", "mixed a", 1, 6),
+        gen_req("none", "mixed b", 2, 7),   // different steps
+        gen_req("static", "mixed c", 3, 6), // different policy
+    ];
+    let mut handles = Vec::new();
+    for (i, req) in cases.into_iter().enumerate() {
+        let mut c = Client::connect(&addr).unwrap();
+        assert!(c.ping().unwrap());
+        handles.push(std::thread::spawn(move || (i, c.call(&req).unwrap())));
+    }
+    for h in handles {
+        let (i, r) = h.join().unwrap();
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "case {i}: {r}");
+        assert_eq!(
+            r.get("batch_size").unwrap().as_usize().unwrap(),
+            1,
+            "case {i}: incompatible requests must never share a pass: {r}"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn stats_reservoir_caps_samples_and_reports_percentiles() {
+    // The latency/queue telemetry is a bounded reservoir: exact until the
+    // cap, sampled (but still counting everything seen) beyond it.
+    let Some(server) = start_server_with(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 1, // isolate telemetry from batching
+        gather_window_ms: 0,
+        telemetry_reservoir: 4,
+    }) else {
+        return;
+    };
+    let mut c = Client::connect(&server.addr()).unwrap();
+    for seed in 0..6u64 {
+        let r = c.call(&gen_req("none", "stats probe", seed, 2)).unwrap();
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+        assert_eq!(r.get("batch_size").unwrap().as_usize().unwrap(), 1);
+    }
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("requests").unwrap().as_usize().unwrap(), 6);
+    assert_eq!(
+        stats.get("latency_samples").unwrap().as_usize().unwrap(),
+        4,
+        "reservoir must cap at its configured size: {stats}"
+    );
+    assert_eq!(stats.get("latency_seen").unwrap().as_usize().unwrap(), 6);
+    for k in ["latency_p50_s", "latency_p95_s", "latency_p99_s", "latency_mean_s"] {
+        assert!(
+            stats.get(k).unwrap().as_f64().unwrap() > 0.0,
+            "{k} missing or zero: {stats}"
+        );
+    }
+    // p99 dominates p50 over the same reservoir
+    assert!(
+        stats.get("latency_p99_s").unwrap().as_f64().unwrap()
+            >= stats.get("latency_p50_s").unwrap().as_f64().unwrap()
+    );
+    // queue percentiles exist (near-zero on an idle single client is fine)
+    assert!(stats.get("queue_p95_s").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(stats.get("accept_errors").unwrap().as_f64().unwrap() >= 0.0);
+    server.shutdown();
 }
 
 #[test]
