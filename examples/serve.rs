@@ -5,11 +5,19 @@
 //! AOT HLO executables (L1/L2), dispatched by the Rust coordinator's
 //! router + worker pool (L3), with Python nowhere on the request path.
 //!
+//! Also demonstrates the autotune lifecycle end to end: a tuned
+//! [`ProfileStore`] is written to disk, loaded back (exactly what
+//! `foresight serve --profiles <path>` does), and part of the client
+//! traffic requests `policy: "auto"` — resolved to the tuned spec before
+//! batching, with the resolution echoed in each response and counted in
+//! the server stats.
+//!
 //! Run with: `cargo run --release --example serve`
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use foresight::autotune::{ProfileKey, ProfileStore, TunedProfile};
 use foresight::config::Manifest;
 use foresight::runtime::Runtime;
 use foresight::server::{Client, EngineRegistry, Server, ServerConfig};
@@ -20,26 +28,66 @@ use foresight::workload;
 const CLIENTS: usize = 4;
 const REQUESTS_PER_CLIENT: usize = 3;
 
+/// Write a tuned profile store to disk and load it back — the same file
+/// `foresight autotune --out <path>` produces and `serve --profiles
+/// <path>` consumes. (A real deployment would run the `autotune`
+/// subcommand; the fixed spec here keeps the example fast.)
+fn demo_profiles(manifest: &Manifest) -> anyhow::Result<Arc<ProfileStore>> {
+    let info = manifest.model("opensora-sim")?;
+    let mut store = ProfileStore::new();
+    store.insert(TunedProfile {
+        key: ProfileKey {
+            model: "opensora-sim".into(),
+            bucket: "240p-2s".into(),
+            sampler: info.sampler.name().into(),
+            steps: info.steps,
+        },
+        spec: "foresight:n=2,r=3,gamma=0.5,warmup=0.15".into(),
+        min_psnr: 30.0,
+        profile_version: 1,
+        frontier: vec![],
+    });
+    let path = std::env::temp_dir().join("foresight-serve-example-profiles.json");
+    store.save(&path)?;
+    let loaded = ProfileStore::load(&path)?;
+    println!(
+        "profile store: {} profile(s), version {} (via {})",
+        loaded.len(),
+        loaded.version(),
+        path.display()
+    );
+    Ok(Arc::new(loaded))
+}
+
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(&Manifest::default_root())?;
     let rt = Arc::new(Runtime::cpu()?);
     println!("loading engines on PJRT ({}) ...", rt.platform());
+    let profiles = demo_profiles(&manifest)?;
     let registry = Arc::new(EngineRegistry::load(
         rt,
         &manifest,
         &[("opensora-sim".to_string(), "240p-2s".to_string())],
     )?);
     // Default config: micro-batching on (max_batch 4, short gather window)
-    // — concurrent same-policy clients coalesce into shared engine passes.
+    // — concurrent same-policy clients coalesce into shared engine passes,
+    // and `auto` requests batch with anything resolving to the same spec.
     let server = Server::start(
         registry,
-        ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, ..ServerConfig::default() },
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            profiles: Some(profiles),
+            ..ServerConfig::default()
+        },
     )?;
     let addr = server.addr();
     println!("server up on {addr}; {CLIENTS} clients × {REQUESTS_PER_CLIENT} requests\n");
 
     let prompts = workload::vbench_prompts(2);
-    let policies = ["foresight", "static", "foresight:n=2,r=3", "pab"];
+    // `auto` rides alongside explicit specs: it resolves through the
+    // loaded profile store before the batch key is formed.
+    let policies = ["auto", "foresight", "static", "auto"];
 
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -51,11 +99,12 @@ fn main() -> anyhow::Result<()> {
             let mut out = Vec::new();
             for i in 0..REQUESTS_PER_CLIENT {
                 let idx = cid * REQUESTS_PER_CLIENT + i;
+                let policy = policies[idx % policies.len()];
                 let req = Json::obj(vec![
                     ("op", Json::str("generate")),
                     ("model", Json::str("opensora-sim")),
                     ("bucket", Json::str("240p-2s")),
-                    ("policy", Json::str(policies[idx % policies.len()])),
+                    ("policy", Json::str(policy)),
                     ("prompt", Json::str(&prompts[idx % prompts.len()])),
                     ("seed", Json::num(idx as f64)),
                 ]);
@@ -66,6 +115,14 @@ fn main() -> anyhow::Result<()> {
                     resp.get("status").and_then(|s| s.as_str()) == Some("ok"),
                     "request failed: {resp}"
                 );
+                if policy == "auto" && idx == 0 {
+                    println!(
+                        "auto resolution: {} (match {}, profile v{})",
+                        resp.get("resolved_policy").and_then(|v| v.as_str()).unwrap_or("?"),
+                        resp.get("profile_match").and_then(|v| v.as_str()).unwrap_or("?"),
+                        resp.get("profile_version").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    );
+                }
                 let wall = resp.get("wall_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
                 let queue = resp.get("queue_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
                 let batch = resp.get("batch_size").and_then(|v| v.as_f64()).unwrap_or(1.0);
@@ -109,6 +166,12 @@ fn main() -> anyhow::Result<()> {
     );
     println!("queueing          : mean {:.2}s", stats::mean(&queued));
     println!("batch size        : mean {:.2}", stats::mean(&batch_sizes));
+    println!(
+        "auto resolution   : {} tuned / {} fallback (store v{})",
+        sstats.get("auto_resolved").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        sstats.get("auto_fallbacks").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        sstats.get("profile_store_version").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    );
     println!("server stats      : {sstats}");
 
     let _ = client.call(&Json::obj(vec![("op", Json::str("shutdown"))]));

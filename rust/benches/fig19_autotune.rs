@@ -1,0 +1,154 @@
+//! **Figure 19 (repo-original)**: profile-guided autotuning.
+//!
+//! Profiles a small policy grid on one (model, bucket, steps) key —
+//! Foresight (γ, warmup) points beside the static baseline and the fixed
+//! serving default — and asserts the autotune contract:
+//!
+//! * the tuned selection **Pareto-dominates or matches** the fixed default
+//!   on the same sweep measurements: when the default meets the quality
+//!   budget, the tuned config is at least as fast and also inside the
+//!   budget; when the default misses the budget, the tuned config has at
+//!   least the default's quality — either way `policy=auto` never serves
+//!   something strictly worse than today's hardcoded spec;
+//! * the chosen spec round-trips through `build_policy` (the serving path
+//!   parses exactly what the profiler emitted);
+//! * the persisted `ProfileStore` round-trips: save → load → the exact
+//!   lookup returns the identical spec and profile version.
+//!
+//! `FORESIGHT_BENCH_STEPS` overrides the step count (CI smoke mode runs a
+//! reduced schedule). Exits cleanly with a SKIP note when the AOT
+//! artifacts are absent (e.g. hosted CI).
+
+use foresight::autotune::{
+    pareto_frontier, profile_engine, sweep_table, GridSpec, ProfileOptions, ProfileStore,
+    DEFAULT_KNOBS,
+};
+use foresight::bench_support::BenchCtx;
+use foresight::policy::build_policy;
+use foresight::util::benchkit::Report;
+
+const MODEL: (&str, &str) = ("opensora-sim", "240p-2s");
+const MIN_PSNR: f64 = 25.0;
+
+fn bench_steps() -> usize {
+    std::env::var("FORESIGHT_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10)
+        .max(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = match BenchCtx::new() {
+        Ok(c) => c,
+        Err(e) => {
+            println!("[fig19] SKIP: artifacts unavailable ({e:#}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let steps = bench_steps();
+    let engine = ctx.engine(MODEL.0, MODEL.1)?;
+    let info = engine.model().info.clone();
+
+    let opts = ProfileOptions {
+        steps: Some(steps),
+        prompts: 2,
+        min_psnr: MIN_PSNR,
+        grid: GridSpec {
+            nr: vec![(1, 2)],
+            gammas: vec![0.25, 1.0, 2.0],
+            warmups: vec![0.15],
+            static_nr: vec![(1, 2)],
+        },
+    };
+    let outcome = profile_engine(&engine, &opts)?;
+    let profile = &outcome.profile;
+    let points = &outcome.points;
+
+    let mut report = Report::new(
+        "fig19",
+        "Figure 19 — profile-guided autotune: tuned config vs the fixed default",
+    );
+    let t = sweep_table(&outcome);
+    report.table(
+        &format!("sweep at {} (budget PSNR >= {MIN_PSNR} dB)", profile.key),
+        &t,
+    );
+    report.csv("series", &t);
+
+    // --- acceptance: the sweep includes the fixed serving default and the
+    // frontier is well-formed.
+    let default_spec = DEFAULT_KNOBS.spec();
+    let default_pt = points
+        .iter()
+        .find(|p| p.spec == default_spec)
+        .expect("sweep always includes the serving default");
+    let chosen = points
+        .iter()
+        .find(|p| p.spec == profile.spec)
+        .expect("chosen spec is a sweep point");
+    assert!(!profile.frontier.is_empty(), "empty Pareto frontier");
+    assert_eq!(
+        pareto_frontier(points),
+        profile.frontier,
+        "stored frontier must be the frontier of the sweep"
+    );
+
+    // --- acceptance: tuned Pareto-dominates or matches the fixed default
+    // on the same measurements.
+    if default_pt.psnr >= MIN_PSNR {
+        assert!(
+            chosen.psnr >= MIN_PSNR,
+            "tuned config broke the quality budget: {:.2} < {MIN_PSNR}",
+            chosen.psnr
+        );
+        assert!(
+            chosen.wall_s <= default_pt.wall_s,
+            "tuned config ({}, {:.3}s) slower than the fixed default ({:.3}s)",
+            chosen.spec,
+            chosen.wall_s,
+            default_pt.wall_s
+        );
+    } else {
+        assert!(
+            chosen.psnr >= default_pt.psnr,
+            "default misses the budget, so the tuned config must be at least \
+             as good: {:.2} vs {:.2}",
+            chosen.psnr,
+            default_pt.psnr
+        );
+    }
+
+    // --- acceptance: the chosen spec is servable (round-trips the parser).
+    build_policy(&profile.spec, &info, steps).expect("chosen spec must parse");
+
+    // --- acceptance: persisted store round-trips to identical lookups.
+    let path = std::path::Path::new("results").join("fig19_profiles.json");
+    let mut store = ProfileStore::new();
+    store.insert(outcome.profile.clone());
+    store.save(&path)?;
+    let loaded = ProfileStore::load(&path)?;
+    let looked = loaded
+        .lookup(MODEL.0, MODEL.1, info.sampler.name(), steps)
+        .expect("saved profile must be found");
+    assert_eq!(looked.kind(), "exact");
+    assert_eq!(looked.profile().spec, profile.spec);
+    assert_eq!(looked.profile().profile_version, 1);
+
+    report.text(&format!(
+        "\nTuned: `{}` at {:.3}s / PSNR {:.2} dB vs default `{}` at {:.3}s / \
+         PSNR {:.2} dB ({} sweep points, {} on the frontier). Store saved to \
+         {} and verified via load + exact lookup.",
+        chosen.spec,
+        chosen.wall_s,
+        chosen.psnr,
+        default_spec,
+        default_pt.wall_s,
+        default_pt.psnr,
+        points.len(),
+        profile.frontier.len(),
+        path.display()
+    ));
+    report.finish()?;
+    Ok(())
+}

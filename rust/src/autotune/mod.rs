@@ -1,0 +1,492 @@
+//! Profile-guided autotuning: sweep reuse-policy configurations offline,
+//! pick the fastest one inside a quality budget, persist the result, and
+//! serve it when a request asks for `policy=auto`.
+//!
+//! The paper's pitch is that Foresight "adapts to generation parameters
+//! such as resolution and denoising schedules" — but a static spec string
+//! with fixed γ/warmup serves every bucket and schedule with the same
+//! knobs. AdaCache (Kahatapitiya et al., 2024) and "Model Reveals What to
+//! Cache" (Ma et al., 2025) both make the case for closing that gap by
+//! *profiling*: the trade-off between reuse aggressiveness and quality is
+//! stable per generation configuration, so it can be measured once and
+//! reused for every request with that configuration.
+//!
+//! The lifecycle has three stages:
+//!
+//! 1. **Profile** ([`profile_engine`], CLI `foresight autotune`): run a
+//!    small [`crate::workload`] prompt panel through the [`Engine`] under
+//!    every candidate configuration of a [`GridSpec`] — Foresight
+//!    (γ, warmup) × (N, R) points plus the static baseline's knobs —
+//!    scoring each with mean wall-clock and
+//!    [`crate::engine::RunStats::reuse_fraction`] on the speed axis and
+//!    PSNR/SSIM/LPIPS vs the NoReuse baseline (the
+//!    [`crate::metrics::QualityReport`] columns) on the quality axis.
+//! 2. **Select + persist**: [`pareto_frontier`] keeps the undominated
+//!    (speed × quality) points; [`select`] picks the fastest one whose
+//!    PSNR meets the budget (deterministic tie-breaks), and the result —
+//!    chosen spec, budget, full frontier — lands in a schema-versioned
+//!    [`ProfileStore`] keyed by (model, bucket, sampler, steps).
+//! 3. **Serve**: the server loads the store at startup (`--profiles`) and
+//!    resolves `policy=auto` requests through
+//!    [`ProfileStore::lookup`] — exact key, else nearest same
+//!    (model, sampler) profile, else the built-in default with a counted
+//!    fallback — *before* batch-key construction, so identically-resolved
+//!    requests still micro-batch together.
+//!
+//! Every spec the grid can emit round-trips through
+//! [`crate::policy::build_policy`] to an identical policy (property-tested
+//! in `tests/integration_policies.rs`); `benches/fig19_autotune.rs` proves
+//! the tuned profile Pareto-dominates or matches the fixed default.
+
+pub mod store;
+
+pub use store::{
+    ProfileKey, ProfileMatch, ProfilePoint, ProfileStore, TunedProfile, SCHEMA_VERSION,
+};
+
+use anyhow::{Context, Result};
+use std::cmp::Ordering;
+
+use crate::engine::{Engine, Request};
+use crate::metrics::{self, Decoder, FeatureNet, Frames};
+use crate::policy::build_policy;
+use crate::util::benchkit::MdTable;
+use crate::util::stats;
+use crate::workload;
+
+/// One policy configuration the autotuner can try. `spec()` renders the
+/// canonical spec string; parsing it back via
+/// [`crate::policy::build_policy`] yields an identical policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Knobs {
+    NoReuse,
+    Static { n: usize, r: usize },
+    Foresight { n: usize, r: usize, gamma: f64, warmup: f64 },
+}
+
+/// The serving default (`policy=foresight` with no args): N=1, R=2, γ=0.5,
+/// warmup 15%. Always part of the sweep so the tuned pick is provably no
+/// worse than what a config-less request gets today.
+pub const DEFAULT_KNOBS: Knobs = Knobs::Foresight { n: 1, r: 2, gamma: 0.5, warmup: 0.15 };
+
+impl Knobs {
+    /// Canonical spec string (`build_policy` input).
+    pub fn spec(&self) -> String {
+        match self {
+            Knobs::NoReuse => "none".to_string(),
+            Knobs::Static { n, r } => format!("static:n={n},r={r}"),
+            Knobs::Foresight { n, r, gamma, warmup } => {
+                format!("foresight:n={n},r={r},gamma={gamma},warmup={warmup}")
+            }
+        }
+    }
+}
+
+/// Sweep bounds for one profiling run.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    /// Foresight (N, R) cycle shapes.
+    pub nr: Vec<(usize, usize)>,
+    /// Foresight threshold scalings γ (Eq. 7).
+    pub gammas: Vec<f64>,
+    /// Foresight warmup fractions.
+    pub warmups: Vec<f64>,
+    /// Static baseline (N, R) points.
+    pub static_nr: Vec<(usize, usize)>,
+}
+
+impl GridSpec {
+    /// The paper's ablation ranges (Tables 2-3): a laptop-scale sweep.
+    pub fn paper_default() -> Self {
+        Self {
+            nr: vec![(1, 2), (2, 3)],
+            gammas: vec![0.25, 0.5, 1.0, 2.0],
+            warmups: vec![0.15],
+            static_nr: vec![(1, 2), (2, 3)],
+        }
+    }
+
+    /// Minimal grid for smoke runs (CI, `fig19` reduced mode).
+    pub fn tiny() -> Self {
+        Self {
+            nr: vec![(1, 2)],
+            gammas: vec![0.5, 1.0],
+            warmups: vec![0.15],
+            static_nr: vec![(1, 2)],
+        }
+    }
+
+    /// Every candidate configuration, deduplicated by spec, with the
+    /// serving default always included. `NoReuse` is *not* listed — the
+    /// profiler measures it as the quality baseline and adds its point
+    /// itself.
+    pub fn candidates(&self) -> Vec<Knobs> {
+        let mut out = vec![DEFAULT_KNOBS];
+        for &(n, r) in &self.static_nr {
+            out.push(Knobs::Static { n, r });
+        }
+        for &(n, r) in &self.nr {
+            for &gamma in &self.gammas {
+                for &warmup in &self.warmups {
+                    out.push(Knobs::Foresight { n, r, gamma, warmup });
+                }
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        out.retain(|k| seen.insert(k.spec()));
+        out
+    }
+}
+
+/// Options for one profiling run.
+#[derive(Debug, Clone)]
+pub struct ProfileOptions {
+    /// Denoising steps to profile at (`None` = model preset).
+    pub steps: Option<usize>,
+    /// Prompt-panel size (minimum 2; see [`prompt_panel`]).
+    pub prompts: usize,
+    /// Quality budget: minimum mean PSNR (dB) vs the NoReuse baseline.
+    pub min_psnr: f64,
+    pub grid: GridSpec,
+}
+
+impl Default for ProfileOptions {
+    fn default() -> Self {
+        Self {
+            steps: None,
+            prompts: 4,
+            min_psnr: 30.0,
+            grid: GridSpec::paper_default(),
+        }
+    }
+}
+
+/// Everything one profiling run produced: the tuned profile (chosen spec +
+/// frontier) plus the full sweep for reporting.
+#[derive(Debug, Clone)]
+pub struct ProfileOutcome {
+    pub profile: TunedProfile,
+    /// All measured points (`none` baseline first), not just the frontier.
+    pub points: Vec<ProfilePoint>,
+}
+
+/// The profiling prompt panel: `n` prompts (minimum 2) from the
+/// VBench-proxy generator, drawn at least two deep per category so both
+/// the static and the dynamic end of the reuse-potential spectrum are
+/// represented (the template generator alternates styles by parity), and
+/// deepened per category for panels larger than the 11 categories.
+pub fn prompt_panel(n: usize) -> Vec<workload::PromptSpec> {
+    let n = n.max(2);
+    let cats = workload::VBENCH_CATEGORIES.len();
+    let per_category = ((n + cats - 1) / cats).max(2);
+    workload::vbench_prompts(per_category)
+        .into_iter()
+        .take(n)
+        .collect()
+}
+
+/// Render one sweep as a markdown table (shared by `foresight autotune`
+/// and `benches/fig19_autotune.rs` so the two reports cannot drift):
+/// one row per measured point, `*` marking the Pareto frontier and `<==`
+/// the chosen configuration.
+pub fn sweep_table(outcome: &ProfileOutcome) -> MdTable {
+    let frontier: std::collections::BTreeSet<&str> = outcome
+        .profile
+        .frontier
+        .iter()
+        .map(|f| f.spec.as_str())
+        .collect();
+    let mut t = MdTable::new(&[
+        "spec", "wall(s)", "reuse", "PSNR", "SSIM", "LPIPS", "frontier", "chosen",
+    ]);
+    for pt in &outcome.points {
+        t.row(vec![
+            pt.spec.clone(),
+            format!("{:.3}", pt.wall_s),
+            format!("{:.0}%", 100.0 * pt.reuse_fraction),
+            format!("{:.2}", pt.psnr),
+            format!("{:.4}", pt.ssim),
+            format!("{:.4}", pt.lpips),
+            if frontier.contains(pt.spec.as_str()) {
+                "*".into()
+            } else {
+                "".into()
+            },
+            if pt.spec == outcome.profile.spec {
+                "<==".into()
+            } else {
+                "".into()
+            },
+        ]);
+    }
+    t
+}
+
+/// `q` strictly Pareto-dominates `p` on (wall ↓, psnr ↑).
+fn dominates(q: &ProfilePoint, p: &ProfilePoint) -> bool {
+    q.spec != p.spec
+        && q.wall_s <= p.wall_s
+        && q.psnr >= p.psnr
+        && (q.wall_s < p.wall_s || q.psnr > p.psnr)
+}
+
+fn by_wall_then_spec(a: &ProfilePoint, b: &ProfilePoint) -> Ordering {
+    a.wall_s
+        .partial_cmp(&b.wall_s)
+        .unwrap_or(Ordering::Equal)
+        .then_with(|| a.spec.cmp(&b.spec))
+}
+
+/// The undominated (speed × quality) points, fastest first; ties resolved
+/// by spec so the frontier is deterministic.
+pub fn pareto_frontier(points: &[ProfilePoint]) -> Vec<ProfilePoint> {
+    let mut out: Vec<ProfilePoint> = points
+        .iter()
+        .filter(|p| !points.iter().any(|q| dominates(q, p)))
+        .cloned()
+        .collect();
+    out.sort_by(by_wall_then_spec);
+    out.dedup_by(|a, b| a.spec == b.spec);
+    out
+}
+
+/// Deterministic budgeted selection: the fastest point whose PSNR meets
+/// `min_psnr` (ties → lexicographically smallest spec). When nothing meets
+/// the budget — only possible if the baseline itself was excluded — the
+/// highest-quality point wins, speed then spec as tie-breaks.
+pub fn select(points: &[ProfilePoint], min_psnr: f64) -> Option<&ProfilePoint> {
+    let within = points.iter().filter(|p| p.psnr >= min_psnr);
+    if let Some(best) = within.min_by(|a, b| by_wall_then_spec(a, b)) {
+        return Some(best);
+    }
+    points.iter().min_by(|a, b| {
+        b.psnr
+            .partial_cmp(&a.psnr)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| by_wall_then_spec(a, b))
+    })
+}
+
+/// Profile one engine (= one loaded (model, bucket)) at one step count:
+/// baseline first, then every grid candidate, then Pareto selection. The
+/// returned [`ProfileOutcome`] carries both the tuned profile (ready for
+/// [`ProfileStore::insert`]) and the full sweep for reporting.
+pub fn profile_engine(engine: &Engine, opts: &ProfileOptions) -> Result<ProfileOutcome> {
+    let info = engine.model().info.clone();
+    let bucket = engine.model().bucket.clone();
+    let steps = opts.steps.unwrap_or(info.steps);
+    // Same bound the server enforces at the wire: the sampler constructors
+    // assert on out-of-schedule step counts, and a profiling run must fail
+    // cleanly, not panic (`foresight autotune --steps 0`).
+    let t_train = engine.schedule().train_timesteps;
+    if !(1..=t_train).contains(&steps) {
+        return Err(anyhow::anyhow!(
+            "autotune: steps must be in 1..={t_train} (the training schedule length), got {steps}"
+        ));
+    }
+    // A nan/inf budget would silently select the NoReuse baseline and then
+    // serialize as invalid JSON (the minimal writer has no non-finite
+    // representation) — reject it up front.
+    if !opts.min_psnr.is_finite() {
+        return Err(anyhow::anyhow!(
+            "autotune: min_psnr budget must be finite, got {}",
+            opts.min_psnr
+        ));
+    }
+    let panel = prompt_panel(opts.prompts);
+    let dec = Decoder::new(bucket.ph, bucket.pw, info.latent_channels);
+    let net = FeatureNet::new();
+
+    let run = |spec: &str, prompt: &str, seed: u64, run_steps: usize| {
+        let mut policy = build_policy(spec, &info, run_steps)
+            .with_context(|| format!("autotune candidate '{spec}'"))?;
+        let mut req = Request::new(prompt, seed);
+        req.steps = Some(run_steps);
+        engine.generate(&req, policy.as_mut(), None)
+    };
+
+    // Warm the fused-executable caches so the first measured candidate is
+    // not charged the compile time.
+    let _ = run("none", "autotune warmup prompt", 0, steps.min(2).max(1))?;
+
+    // NoReuse baseline: the quality reference and the first sweep point
+    // (PSNR vs itself saturates at the metric cap, so it always satisfies
+    // any sensible budget — selection can never come up empty).
+    let mut base_wall = Vec::with_capacity(panel.len());
+    let mut base_frames: Vec<Frames> = Vec::with_capacity(panel.len());
+    for p in &panel {
+        let r = run("none", &p.text, p.id as u64, steps)?;
+        base_wall.push(r.stats.wall_s);
+        base_frames.push(dec.decode(&r.latents));
+    }
+    let mut points = vec![ProfilePoint {
+        spec: Knobs::NoReuse.spec(),
+        wall_s: stats::mean(&base_wall),
+        reuse_fraction: 0.0,
+        psnr: 100.0,
+        ssim: 1.0,
+        lpips: 0.0,
+    }];
+
+    for knobs in opts.grid.candidates() {
+        let spec = knobs.spec();
+        let mut wall = Vec::with_capacity(panel.len());
+        let (mut reuse, mut psnr, mut ssim, mut lpips) = (0.0, 0.0, 0.0, 0.0);
+        for (i, p) in panel.iter().enumerate() {
+            let r = run(&spec, &p.text, p.id as u64, steps)?;
+            wall.push(r.stats.wall_s);
+            reuse += r.stats.reuse_fraction();
+            let fr = dec.decode(&r.latents);
+            psnr += metrics::psnr(&base_frames[i], &fr);
+            ssim += metrics::ssim(&base_frames[i], &fr);
+            lpips += metrics::lpips(&net, &base_frames[i], &fr);
+        }
+        let n = panel.len() as f64;
+        points.push(ProfilePoint {
+            spec,
+            wall_s: stats::mean(&wall),
+            reuse_fraction: reuse / n,
+            psnr: psnr / n,
+            ssim: ssim / n,
+            lpips: lpips / n,
+        });
+    }
+
+    let frontier = pareto_frontier(&points);
+    let chosen = select(&points, opts.min_psnr)
+        .expect("sweep contains the baseline point")
+        .clone();
+    Ok(ProfileOutcome {
+        profile: TunedProfile {
+            key: ProfileKey {
+                model: info.name.clone(),
+                bucket: bucket.name.clone(),
+                sampler: info.sampler.name().to_string(),
+                steps,
+            },
+            spec: chosen.spec,
+            min_psnr: opts.min_psnr,
+            profile_version: 1,
+            frontier,
+        },
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelInfo, SamplerKind};
+    use std::collections::BTreeMap;
+
+    fn point(spec: &str, wall_s: f64, psnr: f64) -> ProfilePoint {
+        ProfilePoint { spec: spec.into(), wall_s, reuse_fraction: 0.0, psnr, ssim: 1.0, lpips: 0.0 }
+    }
+
+    fn model() -> ModelInfo {
+        ModelInfo {
+            name: "m".into(),
+            layers: 6,
+            d_model: 96,
+            n_heads: 4,
+            d_text: 64,
+            text_len: 16,
+            latent_channels: 8,
+            mlp_ratio: 4,
+            t_freq_dim: 128,
+            sampler: SamplerKind::Rflow,
+            steps: 30,
+            cfg_scale: 7.5,
+            weights_dir: "w".into(),
+            piece_params: BTreeMap::new(),
+            buckets: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn every_grid_candidate_parses_via_build_policy() {
+        let m = model();
+        for knobs in GridSpec::paper_default().candidates() {
+            let spec = knobs.spec();
+            let p = build_policy(&spec, &m, 30).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert!(!p.name().is_empty());
+        }
+        assert!(build_policy(&Knobs::NoReuse.spec(), &m, 30).is_ok());
+    }
+
+    #[test]
+    fn grid_includes_serving_default_and_dedupes() {
+        let grid = GridSpec {
+            nr: vec![(1, 2), (1, 2)],
+            gammas: vec![0.5, 0.5],
+            warmups: vec![0.15],
+            static_nr: vec![(1, 2)],
+        };
+        let cands = grid.candidates();
+        let specs: Vec<String> = cands.iter().map(|k| k.spec()).collect();
+        let unique: std::collections::BTreeSet<_> = specs.iter().collect();
+        assert_eq!(specs.len(), unique.len(), "duplicates survived: {specs:?}");
+        assert!(specs.contains(&DEFAULT_KNOBS.spec()));
+        // the duplicated grid axes collapse to default + static
+        assert_eq!(specs.len(), 2, "{specs:?}");
+    }
+
+    #[test]
+    fn pareto_frontier_drops_dominated_points() {
+        let points = vec![
+            point("a", 1.0, 40.0), // frontier: fastest
+            point("b", 2.0, 45.0), // frontier: best quality
+            point("c", 1.5, 39.0), // dominated by a (slower, worse)
+            point("d", 1.0, 40.0), // metric tie with a: both kept
+        ];
+        let f = pareto_frontier(&points);
+        let specs: Vec<&str> = f.iter().map(|p| p.spec.as_str()).collect();
+        assert_eq!(specs, vec!["a", "d", "b"]);
+    }
+
+    #[test]
+    fn select_is_budgeted_and_deterministic() {
+        let points = vec![
+            point("none", 3.0, 100.0),
+            point("fast-bad", 1.0, 20.0),
+            point("mid", 1.5, 35.0),
+            point("mid-tie", 1.5, 36.0),
+        ];
+        // fastest within budget; wall tie broken by spec ("mid" < "mid-tie")
+        assert_eq!(select(&points, 30.0).unwrap().spec, "mid");
+        // generous budget: the overall fastest wins
+        assert_eq!(select(&points, 10.0).unwrap().spec, "fast-bad");
+        // impossible budget: best quality wins
+        assert_eq!(select(&points, 1000.0).unwrap().spec, "none");
+        assert!(select(&[], 30.0).is_none());
+    }
+
+    #[test]
+    fn prompt_panel_mixes_static_and_dynamic_prompts() {
+        for n in [1, 2, 4, 11, 26] {
+            let panel = prompt_panel(n);
+            assert_eq!(panel.len(), n.max(2), "panel size for n={n}");
+            let complexities: Vec<f64> = panel
+                .iter()
+                .map(|p| crate::workload::motion_complexity(&p.text))
+                .collect();
+            let min = complexities.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = complexities.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                min < max,
+                "panel of {n} must span static and dynamic prompts \
+                 (complexities {complexities:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn knobs_specs_are_canonical() {
+        assert_eq!(Knobs::NoReuse.spec(), "none");
+        assert_eq!(Knobs::Static { n: 2, r: 3 }.spec(), "static:n=2,r=3");
+        assert_eq!(
+            Knobs::Foresight { n: 1, r: 2, gamma: 0.5, warmup: 0.15 }.spec(),
+            "foresight:n=1,r=2,gamma=0.5,warmup=0.15"
+        );
+    }
+}

@@ -1,0 +1,496 @@
+//! Versioned, JSON-persisted profile store — the artifact the offline
+//! profiler writes and the server loads at startup (`--profiles`).
+//!
+//! One [`TunedProfile`] per (model, bucket, sampler, steps) generation
+//! configuration: the chosen policy spec, the quality budget it was tuned
+//! under, and the full Pareto frontier the selection was made from (kept so
+//! operators can re-pick under a different budget without re-profiling).
+//!
+//! # Schema compatibility
+//!
+//! The on-disk document carries a `schema_version`. Loading is
+//! forward-compatible within a schema version — unknown fields anywhere in
+//! the document are ignored, so newer writers can add fields without
+//! breaking older readers — while a different `schema_version` (or a
+//! missing one) is rejected with a clean error instead of being
+//! misinterpreted. The store-level `version` is a monotonic generation
+//! counter bumped on every mutation; servers echo it so operators can tell
+//! which profile generation served a request.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// On-disk schema version this build reads and writes.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One generation configuration: the granularity profiles are keyed at.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ProfileKey {
+    pub model: String,
+    pub bucket: String,
+    /// Sampler family name (`rflow` / `ddim`, [`crate::config::SamplerKind`]).
+    pub sampler: String,
+    pub steps: usize,
+}
+
+impl std::fmt::Display for ProfileKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/{}/{}@{}",
+            self.model, self.bucket, self.sampler, self.steps
+        )
+    }
+}
+
+/// One measured policy configuration: mean metrics over the prompt panel.
+/// Quality metrics compare against the NoReuse baseline of the same run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfilePoint {
+    /// Concrete policy spec, parseable by [`crate::policy::build_policy`].
+    pub spec: String,
+    pub wall_s: f64,
+    pub reuse_fraction: f64,
+    pub psnr: f64,
+    pub ssim: f64,
+    pub lpips: f64,
+}
+
+/// The tuned outcome for one [`ProfileKey`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedProfile {
+    pub key: ProfileKey,
+    /// The chosen spec: fastest frontier point within the quality budget.
+    pub spec: String,
+    /// Quality budget (minimum mean PSNR vs the NoReuse baseline, dB) the
+    /// selection was made under.
+    pub min_psnr: f64,
+    /// Bumped every time this key is re-profiled into the same store.
+    pub profile_version: u64,
+    /// The Pareto frontier of the sweep (speed × quality), sorted fastest
+    /// first.
+    pub frontier: Vec<ProfilePoint>,
+}
+
+/// How a [`ProfileStore::lookup`] matched.
+#[derive(Debug, Clone, Copy)]
+pub enum ProfileMatch<'a> {
+    /// The exact (model, bucket, sampler, steps) key was profiled.
+    Exact(&'a TunedProfile),
+    /// No exact key; the nearest profile of the same (model, sampler) —
+    /// closest step count, deterministic tie-breaks — was substituted.
+    Nearest(&'a TunedProfile),
+}
+
+impl<'a> ProfileMatch<'a> {
+    pub fn profile(&self) -> &'a TunedProfile {
+        match *self {
+            ProfileMatch::Exact(p) | ProfileMatch::Nearest(p) => p,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ProfileMatch::Exact(_) => "exact",
+            ProfileMatch::Nearest(_) => "nearest",
+        }
+    }
+}
+
+/// The profile collection: load/save/merge plus lookup-with-fallback.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileStore {
+    version: u64,
+    profiles: BTreeMap<ProfileKey, TunedProfile>,
+}
+
+impl ProfileStore {
+    pub fn new() -> Self {
+        Self { version: 0, profiles: BTreeMap::new() }
+    }
+
+    /// Store generation counter (bumped on every mutation; echoed by the
+    /// server's `stats` op and `generate` responses).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TunedProfile> {
+        self.profiles.values()
+    }
+
+    /// Insert (or re-profile) one key. An existing entry's
+    /// `profile_version` is continued (`old + 1`) so repeat profiling is
+    /// visible in responses; fresh entries keep the caller's version
+    /// (minimum 1). Bumps the store generation.
+    pub fn insert(&mut self, mut profile: TunedProfile) {
+        profile.profile_version = match self.profiles.get(&profile.key) {
+            Some(old) => old.profile_version + 1,
+            None => profile.profile_version.max(1),
+        };
+        self.profiles.insert(profile.key.clone(), profile);
+        self.version += 1;
+    }
+
+    /// Merge another store into this one: per key, the higher
+    /// `profile_version` wins (ties keep the incoming entry — the caller
+    /// merges the fresher store *in*). The generation advances past both
+    /// inputs so a merged store never reports an older version than either
+    /// source.
+    pub fn merge(&mut self, other: &ProfileStore) {
+        for (key, incoming) in &other.profiles {
+            let keep_existing = self
+                .profiles
+                .get(key)
+                .is_some_and(|have| have.profile_version > incoming.profile_version);
+            if !keep_existing {
+                self.profiles.insert(key.clone(), incoming.clone());
+            }
+        }
+        self.version = self.version.max(other.version) + 1;
+    }
+
+    /// Lookup with fallback: exact key first, then the nearest profile of
+    /// the same (model, sampler) — minimum |Δsteps|, ties broken toward
+    /// fewer steps then lexicographic bucket, so resolution is
+    /// deterministic. `None` means the caller should serve its built-in
+    /// default (and count the fallback).
+    pub fn lookup(
+        &self,
+        model: &str,
+        bucket: &str,
+        sampler: &str,
+        steps: usize,
+    ) -> Option<ProfileMatch<'_>> {
+        let exact = ProfileKey {
+            model: model.to_string(),
+            bucket: bucket.to_string(),
+            sampler: sampler.to_string(),
+            steps,
+        };
+        if let Some(p) = self.profiles.get(&exact) {
+            return Some(ProfileMatch::Exact(p));
+        }
+        self.profiles
+            .values()
+            .filter(|p| p.key.model == model && p.key.sampler == sampler)
+            .min_by_key(|p| {
+                (
+                    (p.key.steps as i64 - steps as i64).unsigned_abs(),
+                    p.key.steps,
+                    p.key.bucket.clone(),
+                )
+            })
+            .map(ProfileMatch::Nearest)
+    }
+
+    // --- JSON (de)serialization -------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let profiles = self.profiles.values().map(profile_to_json).collect();
+        Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("version", Json::num(self.version as f64)),
+            ("profiles", Json::Arr(profiles)),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a store document. Unknown fields are ignored (forward
+    /// compatibility); a missing or different `schema_version` is a clean
+    /// error.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let j = json::parse(text).map_err(|e| anyhow!("profile store: {e}"))?;
+        let schema = j
+            .get("schema_version")
+            .ok_or_else(|| anyhow!("profile store: missing schema_version"))?
+            .as_u64()
+            .ok_or_else(|| anyhow!("profile store: schema_version is not an integer"))?;
+        if schema != SCHEMA_VERSION {
+            return Err(anyhow!(
+                "profile store schema_version {schema} is not supported \
+                 (this build reads version {SCHEMA_VERSION})"
+            ));
+        }
+        // Absent `version` is forward-compatible (generation 0); a present
+        // but non-integer one is corruption and must not silently reset
+        // the monotonic generation lineage.
+        let version = match j.get("version") {
+            None => 0,
+            Some(v) => v.as_u64().ok_or_else(|| {
+                anyhow!("profile store: version is not a non-negative integer")
+            })?,
+        };
+        let mut profiles = BTreeMap::new();
+        if let Some(pj) = j.get("profiles") {
+            // Present but wrong-typed is corruption (a truncated edit),
+            // not an empty store.
+            let arr = pj
+                .as_arr()
+                .ok_or_else(|| anyhow!("profile store: profiles is not an array"))?;
+            for (i, pj) in arr.iter().enumerate() {
+                let p = profile_from_json(pj)
+                    .with_context(|| format!("profile store: profiles[{i}]"))?;
+                profiles.insert(p.key.clone(), p);
+            }
+        }
+        Ok(Self { version, profiles })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read profile store {}", path.display()))?;
+        Self::from_json_str(&text)
+            .with_context(|| format!("parse profile store {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("create {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("write profile store {}", path.display()))
+    }
+}
+
+fn point_to_json(p: &ProfilePoint) -> Json {
+    Json::obj(vec![
+        ("spec", Json::str(&p.spec)),
+        ("wall_s", Json::num(p.wall_s)),
+        ("reuse_fraction", Json::num(p.reuse_fraction)),
+        ("psnr", Json::num(p.psnr)),
+        ("ssim", Json::num(p.ssim)),
+        ("lpips", Json::num(p.lpips)),
+    ])
+}
+
+fn profile_to_json(p: &TunedProfile) -> Json {
+    Json::obj(vec![
+        ("model", Json::str(&p.key.model)),
+        ("bucket", Json::str(&p.key.bucket)),
+        ("sampler", Json::str(&p.key.sampler)),
+        ("steps", Json::num(p.key.steps as f64)),
+        ("spec", Json::str(&p.spec)),
+        ("min_psnr", Json::num(p.min_psnr)),
+        ("profile_version", Json::num(p.profile_version as f64)),
+        ("frontier", Json::Arr(p.frontier.iter().map(point_to_json).collect())),
+    ])
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing or non-string field '{key}'"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("missing or non-numeric field '{key}'"))
+}
+
+fn point_from_json(j: &Json) -> Result<ProfilePoint> {
+    Ok(ProfilePoint {
+        spec: req_str(j, "spec")?,
+        wall_s: req_f64(j, "wall_s")?,
+        reuse_fraction: req_f64(j, "reuse_fraction")?,
+        psnr: req_f64(j, "psnr")?,
+        ssim: req_f64(j, "ssim")?,
+        lpips: req_f64(j, "lpips")?,
+    })
+}
+
+fn profile_from_json(j: &Json) -> Result<TunedProfile> {
+    let steps = j
+        .get("steps")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow!("missing or non-integer field 'steps'"))? as usize;
+    let profile_version = j
+        .get("profile_version")
+        .and_then(|v| v.as_u64())
+        .unwrap_or(1)
+        .max(1);
+    let mut frontier = Vec::new();
+    if let Some(arr) = j.get("frontier").and_then(|f| f.as_arr()) {
+        for (i, fj) in arr.iter().enumerate() {
+            frontier.push(point_from_json(fj).with_context(|| format!("frontier[{i}]"))?);
+        }
+    }
+    Ok(TunedProfile {
+        key: ProfileKey {
+            model: req_str(j, "model")?,
+            bucket: req_str(j, "bucket")?,
+            sampler: req_str(j, "sampler")?,
+            steps,
+        },
+        spec: req_str(j, "spec")?,
+        min_psnr: req_f64(j, "min_psnr")?,
+        profile_version,
+        frontier,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(model: &str, bucket: &str, steps: usize) -> ProfileKey {
+        ProfileKey {
+            model: model.into(),
+            bucket: bucket.into(),
+            sampler: "rflow".into(),
+            steps,
+        }
+    }
+
+    fn profile(model: &str, bucket: &str, steps: usize, spec: &str) -> TunedProfile {
+        TunedProfile {
+            key: key(model, bucket, steps),
+            spec: spec.into(),
+            min_psnr: 30.0,
+            profile_version: 1,
+            frontier: vec![ProfilePoint {
+                spec: spec.into(),
+                wall_s: 1.25,
+                reuse_fraction: 0.5,
+                psnr: 38.5,
+                ssim: 0.99,
+                lpips: 0.01,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_lookups() {
+        let mut store = ProfileStore::new();
+        store.insert(profile("m", "b1", 30, "foresight:n=1,r=2,gamma=1,warmup=0.15"));
+        store.insert(profile("m", "b2", 12, "static:n=1,r=2"));
+        let back = ProfileStore::from_json_str(&store.to_json_string()).unwrap();
+        assert_eq!(back.version(), store.version());
+        assert_eq!(back.len(), 2);
+        for (model, bucket, steps) in [("m", "b1", 30), ("m", "b2", 12)] {
+            let a = store.lookup(model, bucket, "rflow", steps).unwrap();
+            let b = back.lookup(model, bucket, "rflow", steps).unwrap();
+            assert_eq!(a.profile(), b.profile(), "{model}/{bucket}@{steps}");
+            assert_eq!(a.kind(), "exact");
+        }
+    }
+
+    #[test]
+    fn rejects_incompatible_schema_versions_cleanly() {
+        let err = ProfileStore::from_json_str(r#"{"schema_version": 99, "profiles": []}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("schema_version 99"), "{err}");
+        assert!(err.contains(&SCHEMA_VERSION.to_string()), "{err}");
+        let err = ProfileStore::from_json_str(r#"{"profiles": []}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing schema_version"), "{err}");
+        // fractional versions are not integers
+        assert!(ProfileStore::from_json_str(r#"{"schema_version": 1.5}"#).is_err());
+        // a present but corrupt store generation must error, not reset to 0
+        let err = ProfileStore::from_json_str(r#"{"schema_version": 1, "version": 2.5}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("version"), "{err}");
+        // absent version stays forward-compatible
+        let ok = ProfileStore::from_json_str(r#"{"schema_version": 1, "profiles": []}"#).unwrap();
+        assert_eq!(ok.version(), 0);
+        // present but wrong-typed profiles is corruption, not an empty store
+        let err = ProfileStore::from_json_str(r#"{"schema_version": 1, "profiles": {}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("profiles"), "{err}");
+    }
+
+    #[test]
+    fn unknown_fields_are_ignored() {
+        let mut store = ProfileStore::new();
+        store.insert(profile("m", "b", 30, "static:n=1,r=2"));
+        let mut text = store.to_json_string();
+        // simulate a newer writer: extra top-level and per-profile fields
+        text = text.replacen('{', r#"{"future_top_level": {"x": 1},"#, 1);
+        text = text.replacen(r#""bucket""#, r#""future_field": [1, 2], "bucket""#, 1);
+        let back = ProfileStore::from_json_str(&text).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(
+            back.lookup("m", "b", "rflow", 30).unwrap().profile().spec,
+            "static:n=1,r=2"
+        );
+    }
+
+    #[test]
+    fn lookup_falls_back_to_nearest_same_model_sampler() {
+        let mut store = ProfileStore::new();
+        store.insert(profile("m", "b1", 10, "static:n=1,r=2"));
+        store.insert(profile("m", "b1", 30, "foresight:n=1,r=2,gamma=1,warmup=0.15"));
+        // exact
+        assert_eq!(store.lookup("m", "b1", "rflow", 30).unwrap().kind(), "exact");
+        // nearest by |Δsteps|: 26 → 30
+        let m = store.lookup("m", "b2", "rflow", 26).unwrap();
+        assert_eq!(m.kind(), "nearest");
+        assert_eq!(m.profile().key.steps, 30);
+        // equidistant 20 → tie toward fewer steps (10)
+        assert_eq!(store.lookup("m", "b2", "rflow", 20).unwrap().profile().key.steps, 10);
+        // other model or sampler: no match at all
+        assert!(store.lookup("other", "b1", "rflow", 30).is_none());
+        assert!(store.lookup("m", "b1", "ddim", 30).is_none());
+    }
+
+    #[test]
+    fn insert_continues_profile_versions_and_bumps_generation() {
+        let mut store = ProfileStore::new();
+        store.insert(profile("m", "b", 30, "static:n=1,r=2"));
+        let v1 = store.version();
+        store.insert(profile("m", "b", 30, "foresight:n=1,r=2,gamma=1,warmup=0.15"));
+        let p = store.lookup("m", "b", "rflow", 30).unwrap();
+        assert_eq!(p.profile().profile_version, 2, "re-profiling continues the version");
+        assert_eq!(p.profile().spec, "foresight:n=1,r=2,gamma=1,warmup=0.15");
+        assert!(store.version() > v1);
+    }
+
+    #[test]
+    fn merge_keeps_higher_profile_versions() {
+        let mut a = ProfileStore::new();
+        a.insert(profile("m", "b", 30, "static:n=1,r=2"));
+        a.insert(profile("m", "b", 30, "static:n=2,r=3")); // version 2
+
+        let mut b = ProfileStore::new();
+        b.insert(profile("m", "b", 30, "foresight:n=1,r=2,gamma=1,warmup=0.15")); // version 1
+        b.insert(profile("m", "other", 12, "static:n=1,r=2"));
+
+        let va = a.version();
+        a.merge(&b);
+        // existing v2 beats incoming v1; the new key arrives
+        assert_eq!(a.lookup("m", "b", "rflow", 30).unwrap().profile().spec, "static:n=2,r=3");
+        assert_eq!(a.lookup("m", "other", "rflow", 12).unwrap().kind(), "exact");
+        assert!(a.version() > va.max(b.version()));
+    }
+
+    #[test]
+    fn empty_store_roundtrip() {
+        let store = ProfileStore::new();
+        let back = ProfileStore::from_json_str(&store.to_json_string()).unwrap();
+        assert!(back.is_empty());
+        assert!(back.lookup("m", "b", "rflow", 30).is_none());
+    }
+}

@@ -45,6 +45,14 @@ impl SamplerKind {
     }
 }
 
+/// Profile-store keys and reports serialize the sampler by this name;
+/// [`SamplerKind::parse`] accepts it back.
+impl std::fmt::Display for SamplerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// One compilation bucket (static shapes).
 #[derive(Debug, Clone)]
 pub struct BucketInfo {
@@ -278,5 +286,12 @@ mod tests {
     fn sampler_kind_parse() {
         assert_eq!(SamplerKind::parse("rflow").unwrap(), SamplerKind::Rflow);
         assert!(SamplerKind::parse("euler").is_err());
+    }
+
+    #[test]
+    fn sampler_kind_display_roundtrips_through_parse() {
+        for kind in [SamplerKind::Rflow, SamplerKind::Ddim] {
+            assert_eq!(SamplerKind::parse(&kind.to_string()).unwrap(), kind);
+        }
     }
 }

@@ -75,8 +75,36 @@
 //! per-request transfer budget, and the per-request wall-clock win at
 //! B=4. See [`engine`] §Micro-batching for the batched byte model and
 //! [`server`] §Batch scheduler for the compatibility rule.
+//!
+//! # Autotune
+//!
+//! Reuse knobs (γ, warmup, N/R) are not one-size-fits-all: the right
+//! trade-off shifts with resolution bucket, sampler family and step count.
+//! The [`autotune`] subsystem closes that loop in three stages:
+//!
+//! * **profile** — `foresight autotune` (or [`autotune::profile_engine`])
+//!   sweeps a [`autotune::GridSpec`] of policy configurations over a small
+//!   prompt panel, scoring wall-clock/reuse against PSNR/SSIM/LPIPS vs the
+//!   NoReuse baseline, and keeps the Pareto frontier;
+//! * **persist** — the fastest configuration within a PSNR budget is
+//!   recorded (with the full frontier) in a schema-versioned JSON
+//!   [`autotune::ProfileStore`] keyed by (model, bucket, sampler, steps);
+//!   stores `load`/`save`/`merge` and tolerate unknown fields, so newer
+//!   writers stay readable;
+//! * **serve** — `foresight serve --profiles <path>` loads the store and
+//!   the wire accepts `policy: "auto"`, resolved to the tuned concrete
+//!   spec *before* the batch key is formed (identically-resolved requests
+//!   still micro-batch); unmatched keys fall back to the nearest
+//!   same-(model, sampler) profile, then to the built-in default, with
+//!   resolution and fallback counts in the `stats` op and the resolved
+//!   spec + profile version echoed per response.
+//!
+//! `benches/fig19_autotune.rs` asserts the tuned choice Pareto-dominates
+//! or matches the fixed default; `examples/serve.rs` shows the
+//! profile → persist → serve path end to end.
 
 pub mod analysis;
+pub mod autotune;
 pub mod cache;
 pub mod config;
 pub mod engine;

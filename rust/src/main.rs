@@ -3,13 +3,16 @@
 //! Subcommands:
 //! * `generate` — run one prompt through a policy, print run stats
 //! * `serve`    — start the TCP JSON-lines serving front-end
+//! * `autotune` — profile policy configurations, write tuned profiles
 //! * `analyze`  — dump feature-dynamics statistics (Fig. 2-style CSV)
 //! * `info`     — list models/buckets available in the artifact manifest
 
 use anyhow::{anyhow, Result};
+use std::path::Path;
 use std::sync::Arc;
 
 use foresight::analysis::DynamicsRecorder;
+use foresight::autotune::{profile_engine, sweep_table, GridSpec, ProfileOptions, ProfileStore};
 use foresight::config::Manifest;
 use foresight::engine::{Engine, Request};
 use foresight::model::{BlockKind, LoadedModel};
@@ -30,6 +33,7 @@ fn main() {
     let run = match cmd.as_str() {
         "generate" => cmd_generate(&rest),
         "serve" => cmd_serve(&rest),
+        "autotune" => cmd_autotune(&rest),
         "analyze" => cmd_analyze(&rest),
         "info" => cmd_info(&rest),
         "--help" | "-h" | "help" => {
@@ -49,6 +53,7 @@ fn usage() -> String {
      Commands:\n\
      \x20 generate   run one prompt under a reuse policy\n\
      \x20 serve      start the TCP JSON-lines server\n\
+     \x20 autotune   profile policy configurations, write tuned profiles\n\
      \x20 analyze    dump feature-dynamics CSV (Fig. 2 style)\n\
      \x20 info       list available models and buckets\n\n\
      Run `foresight <command> --help` for options."
@@ -126,6 +131,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "2",
             "batch gather window in milliseconds (0 = only already-queued jobs)",
         )
+        .opt(
+            "profiles",
+            "",
+            "tuned profile store (autotune output) enabling policy=auto",
+        )
         .parse(args)
         .map_err(|e| anyhow!("{e}"))?;
 
@@ -140,6 +150,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 .ok_or_else(|| anyhow!("--models entries must be model:bucket, got '{s}'"))
         })
         .collect::<Result<_>>()?;
+    let profiles = match p.get("profiles") {
+        "" => None,
+        path => {
+            let store = ProfileStore::load(Path::new(path))?;
+            println!(
+                "loaded {} tuned profile(s), store version {} ({path})",
+                store.len(),
+                store.version()
+            );
+            Some(Arc::new(store))
+        }
+    };
     let registry = Arc::new(EngineRegistry::load(rt, &manifest, &pairs)?);
     let server = Server::start(
         registry,
@@ -148,6 +170,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             workers: p.get_usize("workers").map_err(|e| anyhow!(e))?,
             max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?,
             gather_window_ms: p.get_u64("gather-ms").map_err(|e| anyhow!(e))?,
+            profiles,
             ..ServerConfig::default()
         },
     )?;
@@ -157,6 +180,100 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Parse `1:2,2:3` into (N, R) pairs.
+fn parse_nr_list(raw: &[String], flag: &str) -> Result<Vec<(usize, usize)>> {
+    raw.iter()
+        .map(|s| {
+            let (n, r) = s
+                .split_once(':')
+                .ok_or_else(|| anyhow!("--{flag} entries must be n:r, got '{s}'"))?;
+            Ok((
+                n.parse().map_err(|_| anyhow!("--{flag}: bad n in '{s}'"))?,
+                r.parse().map_err(|_| anyhow!("--{flag}: bad r in '{s}'"))?,
+            ))
+        })
+        .collect()
+}
+
+fn parse_f64_list(raw: &[String], flag: &str) -> Result<Vec<f64>> {
+    raw.iter()
+        .map(|s| {
+            s.parse()
+                .map_err(|_| anyhow!("--{flag}: '{s}' is not a number"))
+        })
+        .collect()
+}
+
+fn cmd_autotune(args: &[String]) -> Result<()> {
+    let p = Cli::new(
+        "foresight autotune",
+        "profile policy configurations for one (model, bucket, steps); write tuned profiles",
+    )
+    .opt("model", "opensora-sim", "model preset")
+    .opt("bucket", "240p-2s", "shape bucket")
+    .opt("steps", "", "denoising steps to profile at (default: preset)")
+    .opt("gammas", "0.25,0.5,1,2", "comma list of Foresight gamma values")
+    .opt("warmups", "0.15", "comma list of Foresight warmup fractions")
+    .opt("nr", "1:2,2:3", "comma list of Foresight n:r cycle shapes")
+    .opt("static-nr", "1:2,2:3", "comma list of static-baseline n:r points")
+    .opt("prompts", "4", "prompt-panel size")
+    .opt("min-psnr", "30", "quality budget: min mean PSNR (dB) vs NoReuse")
+    .opt("out", "results/profiles.json", "profile store output path")
+    .flag("merge", "merge into an existing store at --out instead of replacing it")
+    .parse(args)
+    .map_err(|e| anyhow!("{e}"))?;
+
+    // Like the fig benches: a clean SKIP (not an error) without the AOT
+    // artifacts, so CI smoke runs pass on hosted runners.
+    let root = Manifest::default_root();
+    if !root.join("manifest.json").exists() {
+        println!(
+            "[autotune] SKIP: artifacts unavailable ({}); run `make artifacts`",
+            root.display()
+        );
+        return Ok(());
+    }
+
+    let engine = load_engine(p.get("model"), p.get("bucket"))?;
+    let opts = ProfileOptions {
+        steps: if p.get("steps").is_empty() {
+            None
+        } else {
+            Some(p.get_usize("steps").map_err(|e| anyhow!(e))?)
+        },
+        prompts: p.get_usize("prompts").map_err(|e| anyhow!(e))?,
+        min_psnr: p.get_f64("min-psnr").map_err(|e| anyhow!(e))?,
+        grid: GridSpec {
+            nr: parse_nr_list(&p.get_list("nr"), "nr")?,
+            gammas: parse_f64_list(&p.get_list("gammas"), "gammas")?,
+            warmups: parse_f64_list(&p.get_list("warmups"), "warmups")?,
+            static_nr: parse_nr_list(&p.get_list("static-nr"), "static-nr")?,
+        },
+    };
+    let outcome = profile_engine(&engine, &opts)?;
+    let profile = &outcome.profile;
+
+    println!("profiled {} (budget: PSNR >= {} dB)\n", profile.key, profile.min_psnr);
+    println!("{}", sweep_table(&outcome).to_markdown());
+
+    let out = Path::new(p.get("out"));
+    let mut store = if p.get_flag("merge") && out.exists() {
+        ProfileStore::load(out)?
+    } else {
+        ProfileStore::new()
+    };
+    store.insert(outcome.profile);
+    store.save(out)?;
+    println!(
+        "wrote {} ({} profile(s), store version {})",
+        out.display(),
+        store.len(),
+        store.version()
+    );
+    println!("serve it with: foresight serve --profiles {} (requests: policy=auto)", out.display());
+    Ok(())
 }
 
 fn cmd_analyze(args: &[String]) -> Result<()> {

@@ -7,6 +7,8 @@
 //! Within the active region, deltas refresh every `k` steps and are reused
 //! in between.
 
+use anyhow::{anyhow, Result};
+
 use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
 
 pub struct DeltaDit {
@@ -20,9 +22,15 @@ pub struct DeltaDit {
 }
 
 impl DeltaDit {
-    pub fn new(k: usize, b: usize, range: usize) -> Self {
-        assert!(k >= 1 && range >= 1);
-        Self { k, b, range, layers: 0 }
+    /// Validated constructor (wire-reachable via [`super::build_policy`]).
+    pub fn new(k: usize, b: usize, range: usize) -> Result<Self> {
+        if k < 1 {
+            return Err(anyhow!("delta-dit: cache interval k must be >= 1, got {k}"));
+        }
+        if range < 1 {
+            return Err(anyhow!("delta-dit: block range must be >= 1, got {range}"));
+        }
+        Ok(Self { k, b, range, layers: 0 })
     }
 
     fn in_region(&self, step: usize, layer: usize) -> bool {
@@ -81,7 +89,7 @@ mod tests {
 
     #[test]
     fn outline_stage_reuses_back_blocks_only() {
-        let mut p = DeltaDit::new(2, 25, 2);
+        let mut p = DeltaDit::new(2, 25, 2).unwrap();
         p.begin_request(8, 30);
         // step 1 (odd → reuse-eligible), outline stage
         assert!(!p.action(1, site(0)).is_reuse(), "front must compute in outline");
@@ -92,7 +100,7 @@ mod tests {
 
     #[test]
     fn detail_stage_flips_to_front_blocks() {
-        let mut p = DeltaDit::new(2, 25, 2);
+        let mut p = DeltaDit::new(2, 25, 2).unwrap();
         p.begin_request(8, 30);
         // step 26: detail stage, phase = 1 → reuse-eligible
         assert!(p.action(26, site(0)).is_reuse());
@@ -103,7 +111,7 @@ mod tests {
 
     #[test]
     fn refresh_every_k_steps() {
-        let mut p = DeltaDit::new(2, 25, 1);
+        let mut p = DeltaDit::new(2, 25, 1).unwrap();
         p.begin_request(4, 30);
         for step in 0..24 {
             let a = p.action(step, site(3));
@@ -118,7 +126,7 @@ mod tests {
 
     #[test]
     fn stage_boundary_resets_refresh_phase() {
-        let mut p = DeltaDit::new(2, 25, 1);
+        let mut p = DeltaDit::new(2, 25, 1).unwrap();
         p.begin_request(4, 30);
         // first detail-stage step must refresh the (new) front-region delta
         assert_eq!(

@@ -12,6 +12,7 @@
 //!   steps each site reuses iff `δ ≤ γ·λ` (Eq. 7); sites that compute
 //!   anyway also refresh δ and the cache (Alg. 1 lines 19-21).
 
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
@@ -40,11 +41,22 @@ pub struct Foresight {
 }
 
 impl Foresight {
-    pub fn new(n: usize, r: usize, gamma: f64, warmup_frac: f64) -> Self {
-        assert!(r >= 1, "compute interval must be >= 1");
-        assert!(gamma > 0.0, "gamma must be positive");
-        assert!((0.0..1.0).contains(&warmup_frac));
-        Self {
+    /// Validated constructor: every parameter is reachable from wire input
+    /// via [`super::build_policy`], so out-of-range values must surface as
+    /// request errors, never as a worker-killing panic.
+    pub fn new(n: usize, r: usize, gamma: f64, warmup_frac: f64) -> Result<Self> {
+        if r < 1 {
+            return Err(anyhow!("foresight: compute interval r must be >= 1, got {r}"));
+        }
+        if !(gamma.is_finite() && gamma > 0.0) {
+            return Err(anyhow!("foresight: gamma must be a finite number > 0, got {gamma}"));
+        }
+        if !(warmup_frac.is_finite() && (0.0..1.0).contains(&warmup_frac)) {
+            return Err(anyhow!(
+                "foresight: warmup must be a fraction in [0, 1), got {warmup_frac}"
+            ));
+        }
+        Ok(Self {
             n,
             r,
             gamma,
@@ -52,12 +64,12 @@ impl Foresight {
             warmup_steps: 0,
             steps: 0,
             state: BTreeMap::new(),
-        }
+        })
     }
 
     /// Paper default configuration N=1, R=2, γ=0.5, W=15%.
     pub fn paper_default() -> Self {
-        Self::new(1, 2, 0.5, 0.15)
+        Self::new(1, 2, 0.5, 0.15).expect("paper defaults are valid")
     }
 
     fn key(site: Site) -> (usize, BlockKind, usize) {
@@ -179,7 +191,7 @@ mod tests {
 
     #[test]
     fn refresh_steps_always_compute() {
-        let mut p = Foresight::new(1, 2, 0.5, 0.15);
+        let mut p = Foresight::new(1, 2, 0.5, 0.15).unwrap();
         p.begin_request(2, 30);
         let w = p.warmup_steps();
         // make reuse very attractive
@@ -196,7 +208,7 @@ mod tests {
 
     #[test]
     fn threshold_gate_controls_reuse() {
-        let mut p = Foresight::new(1, 2, 1.0, 0.15);
+        let mut p = Foresight::new(1, 2, 1.0, 0.15).unwrap();
         p.begin_request(2, 40);
         let w = p.warmup_steps();
         // warmup MSEs of 1.0 → λ = 1.11 (1 + 0.1 + 0.01 over last 3 steps)
@@ -221,7 +233,7 @@ mod tests {
     fn gamma_scales_strictness() {
         // Same δ/λ: strict gamma computes, lax gamma reuses (Table 3).
         for (gamma, expect_reuse) in [(0.25, false), (2.0, true)] {
-            let mut p = Foresight::new(1, 2, gamma, 0.15);
+            let mut p = Foresight::new(1, 2, gamma, 0.15).unwrap();
             p.begin_request(1, 40);
             let w = p.warmup_steps();
             for step in 1..w {
@@ -237,7 +249,7 @@ mod tests {
     fn delta_initialised_to_lambda_reuses_first_window() {
         // Right after warmup δ=λ, so with γ=1 the first reuse-eligible step
         // reuses (δ ≤ γλ).
-        let mut p = Foresight::new(1, 2, 1.0, 0.15);
+        let mut p = Foresight::new(1, 2, 1.0, 0.15).unwrap();
         p.begin_request(1, 40);
         let w = p.warmup_steps();
         for step in 1..w {
@@ -251,14 +263,14 @@ mod tests {
 
     #[test]
     fn warmup_clamped_to_at_least_three() {
-        let mut p = Foresight::new(1, 2, 0.5, 0.05);
+        let mut p = Foresight::new(1, 2, 0.5, 0.05).unwrap();
         p.begin_request(1, 20); // 5% of 20 = 1 → clamp to 3
         assert_eq!(p.warmup_steps(), 3);
     }
 
     #[test]
     fn branches_tracked_independently() {
-        let mut p = Foresight::new(1, 2, 1.0, 0.15);
+        let mut p = Foresight::new(1, 2, 1.0, 0.15).unwrap();
         p.begin_request(1, 40);
         let w = p.warmup_steps();
         let cond = Site { branch: 0, ..site(0) };

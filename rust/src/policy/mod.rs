@@ -115,6 +115,17 @@ pub trait ReusePolicy: Send {
 ///
 /// Examples: `none`, `static`, `static:n=2,r=3`,
 /// `foresight:n=1,r=2,gamma=0.5,warmup=0.15`, `delta-dit`, `tgate`, `pab`.
+///
+/// Parsing is strict so errors are actionable at the wire and so the
+/// `autotune` subsystem can round-trip every spec it emits:
+/// * a malformed numeric value names the policy and field
+///   (`policy 'foresight': arg gamma='abc' is not a number`);
+/// * an arg key the policy does not define is rejected instead of being
+///   silently ignored (`foresight:g=0.5` used to fall back to the default
+///   gamma without a word);
+/// * out-of-range values (negative `r`, `gamma<=0`, `warmup` outside
+///   `[0,1)`, inverted `pab` ranges, ...) surface as `Result` errors from
+///   the validated policy constructors — never as a worker-killing panic.
 pub fn build_policy(spec: &str, model: &ModelInfo, steps: usize) -> Result<Box<dyn ReusePolicy>> {
     let (name, args) = match spec.split_once(':') {
         Some((n, a)) => (n, a),
@@ -124,55 +135,78 @@ pub fn build_policy(spec: &str, model: &ModelInfo, steps: usize) -> Result<Box<d
     for pair in args.split(',').filter(|s| !s.is_empty()) {
         let (k, v) = pair
             .split_once('=')
-            .ok_or_else(|| anyhow!("policy arg '{pair}' is not key=val"))?;
+            .ok_or_else(|| anyhow!("policy '{name}': arg '{pair}' is not key=val"))?;
         kv.insert(k.trim().to_string(), v.trim().to_string());
     }
+    let known_keys = |known: &[&str]| -> Result<()> {
+        for k in kv.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(anyhow!(
+                    "policy '{name}': unknown arg '{k}' (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    };
     let get_f = |k: &str, default: f64| -> Result<f64> {
         match kv.get(k) {
-            Some(v) => v.parse().map_err(|_| anyhow!("policy arg {k}={v} not a number")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("policy '{name}': arg {k}='{v}' is not a number")),
             None => Ok(default),
         }
     };
     let get_u = |k: &str, default: usize| -> Result<usize> {
         match kv.get(k) {
-            Some(v) => v.parse().map_err(|_| anyhow!("policy arg {k}={v} not an integer")),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow!("policy '{name}': arg {k}='{v}' is not a non-negative integer")
+            }),
             None => Ok(default),
         }
     };
 
     match name {
-        "none" | "baseline" => Ok(Box::new(NoReuse::new())),
+        "none" | "baseline" => {
+            known_keys(&[])?;
+            Ok(Box::new(NoReuse::new()))
+        }
         "static" => {
+            known_keys(&["n", "r"])?;
             let n = get_u("n", 1)?;
             let r = get_u("r", n + 1)?;
-            Ok(Box::new(StaticReuse::new(n, r)))
+            Ok(Box::new(StaticReuse::new(n, r)?))
         }
         "foresight" => {
+            known_keys(&["n", "r", "gamma", "warmup"])?;
             let n = get_u("n", 1)?;
             let r = get_u("r", n + 1)?;
             let gamma = get_f("gamma", 0.5)?;
             let warmup_frac = get_f("warmup", 0.15)?;
-            Ok(Box::new(Foresight::new(n, r, gamma, warmup_frac)))
+            Ok(Box::new(Foresight::new(n, r, gamma, warmup_frac)?))
         }
         "delta-dit" | "delta_dit" => {
             // Table 5: k=2; gate b=25/30 (OpenSora) or 48/50; block range
             // ~20% of layers.
+            known_keys(&["k", "b", "range"])?;
             let k = get_u("k", 2)?;
             let default_b = ((steps as f64) * if steps <= 30 { 0.83 } else { 0.96 }) as usize;
             let b = get_u("b", default_b.max(1))?;
-            let range = get_u("range", ((model.layers as f64) * 0.2).ceil() as usize)?;
-            Ok(Box::new(DeltaDit::new(k, b, range.max(1))))
+            let range = get_u("range", ((model.layers as f64) * 0.2).ceil().max(1.0) as usize)?;
+            Ok(Box::new(DeltaDit::new(k, b, range)?))
         }
         "tgate" | "t-gate" => {
             // Table 6: k=2, gate m = 0.4*steps for both 30- and 50-step setups.
+            known_keys(&["k", "m"])?;
             let k = get_u("k", 2)?;
-            let m = get_u("m", ((steps as f64) * 0.4) as usize)?;
-            Ok(Box::new(TGate::new(k, m.max(1))))
+            let m = get_u("m", (((steps as f64) * 0.4) as usize).max(1))?;
+            Ok(Box::new(TGate::new(k, m)?))
         }
         "pab" => {
             // Table 7: spatial α=2, temporal β=4, cross γ=6; broadcast range
             // t∈[930,450] of 1000 → step fractions [0.07, 0.55]; MLP blocks
             // 0..5 with interval 2.
+            known_keys(&["alpha", "beta", "gamma", "lo", "hi", "mlp_interval"])?;
             let alpha = get_u("alpha", 2)?;
             let beta = get_u("beta", 4)?;
             let gamma_c = get_u("gamma", 6)?;
@@ -182,7 +216,7 @@ pub fn build_policy(spec: &str, model: &ModelInfo, steps: usize) -> Result<Box<d
             let mlp_blocks: Vec<usize> = (0..model.layers.min(5)).collect();
             Ok(Box::new(Pab::new(
                 alpha, beta, gamma_c, lo, hi, mlp_blocks, mlp_interval, steps,
-            )))
+            )?))
         }
         other => Err(anyhow!(
             "unknown policy '{other}' (expected none|static|foresight|delta-dit|tgate|pab)"
@@ -256,6 +290,53 @@ mod tests {
         assert!(build_policy("warp-drive", &m, 30).is_err());
         assert!(build_policy("static:nope", &m, 30).is_err());
         assert!(build_policy("static:n=abc", &m, 30).is_err());
+    }
+
+    #[test]
+    fn malformed_numeric_args_name_the_field() {
+        let m = model();
+        let err = build_policy("foresight:gamma=abc", &m, 30).unwrap_err().to_string();
+        assert!(err.contains("foresight") && err.contains("gamma") && err.contains("abc"), "{err}");
+        let err = build_policy("static:r=-1", &m, 30).unwrap_err().to_string();
+        assert!(err.contains("static") && err.contains("r='-1'"), "{err}");
+        let err = build_policy("pab:lo=wide", &m, 30).unwrap_err().to_string();
+        assert!(err.contains("pab") && err.contains("lo"), "{err}");
+    }
+
+    #[test]
+    fn unknown_arg_keys_are_rejected_not_ignored() {
+        // `foresight:g=0.5` used to silently fall back to the default gamma;
+        // the autotuner round-trips specs, so typos must be loud.
+        let m = model();
+        let err = build_policy("foresight:g=0.5", &m, 30).unwrap_err().to_string();
+        assert!(err.contains("unknown arg 'g'") && err.contains("gamma"), "{err}");
+        assert!(build_policy("none:n=1", &m, 30).is_err());
+        assert!(build_policy("tgate:gamma=1", &m, 30).is_err());
+    }
+
+    #[test]
+    fn out_of_range_params_error_instead_of_panicking() {
+        // Every one of these used to trip an assert! in a policy
+        // constructor — reachable from the wire, so they must be Errs.
+        let m = model();
+        for spec in [
+            "foresight:gamma=0",
+            "foresight:gamma=-1",
+            "foresight:warmup=1.5",
+            "foresight:warmup=-0.1",
+            "foresight:r=0",
+            "static:r=0",
+            "delta-dit:k=0",
+            "delta-dit:range=0",
+            "tgate:k=0",
+            "tgate:m=0",
+            "pab:alpha=0",
+            "pab:lo=0.9,hi=0.1",
+            "pab:hi=1.5",
+        ] {
+            let r = build_policy(spec, &m, 30);
+            assert!(r.is_err(), "{spec} should be rejected");
+        }
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! sublayer entries per layer pair (6LHWF) vs Foresight's 2 (2LHWF) —
 //! reproducing the 3× memory-overhead comparison of §4.2.
 
+use anyhow::{anyhow, Result};
+
 use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
 use crate::cache::Unit;
 use crate::model::{BlockKind, SubUnit};
@@ -28,6 +30,7 @@ pub struct Pab {
 }
 
 impl Pab {
+    /// Validated constructor (wire-reachable via [`super::build_policy`]).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         alpha: usize,
@@ -38,12 +41,28 @@ impl Pab {
         mlp_blocks: Vec<usize>,
         mlp_interval: usize,
         steps: usize,
-    ) -> Self {
-        assert!(alpha >= 1 && beta >= 1 && gamma_c >= 1 && mlp_interval >= 1);
-        assert!((0.0..=1.0).contains(&lo_frac) && lo_frac < hi_frac && hi_frac <= 1.0);
+    ) -> Result<Self> {
+        for (name, v) in [
+            ("alpha", alpha),
+            ("beta", beta),
+            ("gamma", gamma_c),
+            ("mlp_interval", mlp_interval),
+        ] {
+            if v < 1 {
+                return Err(anyhow!("pab: broadcast rate {name} must be >= 1, got {v}"));
+            }
+        }
+        if !(lo_frac.is_finite() && hi_frac.is_finite()) {
+            return Err(anyhow!("pab: broadcast range must be finite"));
+        }
+        if !((0.0..=1.0).contains(&lo_frac) && lo_frac < hi_frac && hi_frac <= 1.0) {
+            return Err(anyhow!(
+                "pab: broadcast range must satisfy 0 <= lo < hi <= 1, got lo={lo_frac} hi={hi_frac}"
+            ));
+        }
         let lo = (steps as f64 * lo_frac).round() as usize;
         let hi = (steps as f64 * hi_frac).round() as usize;
-        Self { alpha, beta, gamma_c, lo, hi, lo_frac, hi_frac, mlp_blocks, mlp_interval }
+        Ok(Self { alpha, beta, gamma_c, lo, hi, lo_frac, hi_frac, mlp_blocks, mlp_interval })
     }
 
     fn rate_for(&self, kind: BlockKind, sub: SubUnit) -> Option<usize> {
@@ -121,7 +140,7 @@ mod tests {
     use super::*;
 
     fn pab(steps: usize) -> Pab {
-        Pab::new(2, 4, 6, 0.07, 0.55, vec![0, 1, 2, 3, 4], 2, steps)
+        Pab::new(2, 4, 6, 0.07, 0.55, vec![0, 1, 2, 3, 4], 2, steps).unwrap()
     }
 
     fn site(layer: usize, kind: BlockKind, sub: SubUnit) -> Site {

@@ -3,6 +3,8 @@
 //! outputs verbatim for the N = R-1 steps in between, uniformly across all
 //! layers — exactly the behaviour whose limitations §3.3 analyses.
 
+use anyhow::{anyhow, Result};
+
 use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
 
 pub struct StaticReuse {
@@ -11,9 +13,12 @@ pub struct StaticReuse {
 }
 
 impl StaticReuse {
-    pub fn new(n: usize, r: usize) -> Self {
-        assert!(r >= 1);
-        Self { n, r }
+    /// Validated constructor (wire-reachable via [`super::build_policy`]).
+    pub fn new(n: usize, r: usize) -> Result<Self> {
+        if r < 1 {
+            return Err(anyhow!("static: compute interval r must be >= 1, got {r}"));
+        }
+        Ok(Self { n, r })
     }
 }
 
@@ -53,7 +58,7 @@ mod tests {
 
     #[test]
     fn n1r2_alternates() {
-        let mut p = StaticReuse::new(1, 2);
+        let mut p = StaticReuse::new(1, 2).unwrap();
         p.begin_request(4, 30);
         for step in 0..30 {
             let a = p.action(step, site());
@@ -63,7 +68,7 @@ mod tests {
 
     #[test]
     fn n2r3_two_reuse_steps_per_cycle() {
-        let mut p = StaticReuse::new(2, 3);
+        let mut p = StaticReuse::new(2, 3).unwrap();
         p.begin_request(4, 30);
         let reused = (0..30).filter(|&s| p.action(s, site()).is_reuse()).count();
         assert_eq!(reused, 20);
@@ -71,7 +76,7 @@ mod tests {
 
     #[test]
     fn uniform_across_layers() {
-        let mut p = StaticReuse::new(1, 2);
+        let mut p = StaticReuse::new(1, 2).unwrap();
         p.begin_request(8, 30);
         for step in 0..30 {
             let mut actions = vec![];

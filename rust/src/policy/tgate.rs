@@ -12,6 +12,8 @@
 //!
 //! MLP sublayers always compute (T-GATE only touches attention).
 
+use anyhow::{anyhow, Result};
+
 use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
 use crate::cache::Unit;
 use crate::model::SubUnit;
@@ -24,9 +26,15 @@ pub struct TGate {
 }
 
 impl TGate {
-    pub fn new(k: usize, m: usize) -> Self {
-        assert!(k >= 1 && m >= 1);
-        Self { k, m }
+    /// Validated constructor (wire-reachable via [`super::build_policy`]).
+    pub fn new(k: usize, m: usize) -> Result<Self> {
+        if k < 1 {
+            return Err(anyhow!("tgate: cache interval k must be >= 1, got {k}"));
+        }
+        if m < 1 {
+            return Err(anyhow!("tgate: gate step m must be >= 1, got {m}"));
+        }
+        Ok(Self { k, m })
     }
 }
 
@@ -85,7 +93,7 @@ mod tests {
 
     #[test]
     fn phase1_sa_broadcast_ca_live() {
-        let mut p = TGate::new(2, 12);
+        let mut p = TGate::new(2, 12).unwrap();
         p.begin_request(6, 30);
         for step in 0..12 {
             let sa = p.action(step, site(SubUnit::Attn));
@@ -98,7 +106,7 @@ mod tests {
 
     #[test]
     fn phase2_ca_gated_sa_live() {
-        let mut p = TGate::new(2, 12);
+        let mut p = TGate::new(2, 12).unwrap();
         p.begin_request(6, 30);
         for step in 12..30 {
             assert!(!p.action(step, site(SubUnit::Attn)).is_reuse(), "SA step {step}");
@@ -108,7 +116,7 @@ mod tests {
 
     #[test]
     fn mlp_always_computes() {
-        let mut p = TGate::new(2, 12);
+        let mut p = TGate::new(2, 12).unwrap();
         p.begin_request(6, 30);
         for step in 0..30 {
             assert!(!p.action(step, site(SubUnit::Mlp)).is_reuse());

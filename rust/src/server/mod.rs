@@ -12,10 +12,36 @@
 //! * `{"op":"generate","model":..,"bucket":..,"policy":..,"prompt":..,
 //!    "seed":..,"steps"?:..,"cfg_scale"?:..}` → run stats (including the
 //!    `h2d_bytes`/`h2d_calls`/`d2h_bytes`/`d2h_calls` transfer meters,
-//!    the `batch_size` the request was served at, and a `latent_l2`
-//!    checksum of the final latent for wire-level equivalence checks)
+//!    the `batch_size` the request was served at, the concrete
+//!    `policy_spec` that was executed, and a `latent_l2` checksum of the
+//!    final latent for wire-level equivalence checks)
 //! * `{"op":"stats"}` → server-level counters + latency percentiles
 //! * `{"op":"shutdown"}` → stops the server
+//!
+//! # `policy=auto` resolution
+//!
+//! With a [`crate::autotune::ProfileStore`] loaded
+//! ([`ServerConfig::profiles`], CLI `serve --profiles <path>`), a
+//! `generate` request may send `policy: "auto"`. The connection handler
+//! resolves it to a concrete spec **at enqueue time, before the batch key
+//! is derived**: the payload's `policy` field is rewritten to the tuned
+//! spec, so identically-resolved requests carry identical raw fields and
+//! micro-batch together — with each other and with requests that sent the
+//! same concrete spec explicitly. Resolution follows
+//! [`crate::autotune::ProfileStore::lookup`]: exact
+//! (model, bucket, sampler, steps) profile, else the nearest profile of
+//! the same (model, sampler), else [`DEFAULT_POLICY`] with a counted
+//! fallback. A matched profile whose spec this build cannot parse (a
+//! hand-edited or newer-format store) also falls back to the default with
+//! a counted fallback rather than failing every auto request at dispatch.
+//! Auto responses additionally echo `policy_requested: "auto"`,
+//! the `resolved_policy`, the `profile_version`/`profile_store_version`
+//! behind it, the `profile_match` kind (`exact`/`nearest`/`default`) and
+//! `profile_fallback`; the `stats` op reports `profile_store_version`,
+//! `profiles_loaded`, `auto_resolved` and `auto_fallbacks` so operators
+//! can see when `auto` traffic is served untuned. Resolution happens
+//! before wire validation (it only needs a concrete spec), so a request
+//! that later fails validation may still tick the resolution counters.
 //!
 //! # Batch scheduler
 //!
@@ -68,6 +94,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::autotune::ProfileStore;
 use crate::config::Manifest;
 use crate::engine::{Engine, Request, RunResult};
 use crate::model::LoadedModel;
@@ -80,7 +107,10 @@ use crate::util::stats::{self, Reservoir};
 /// (shared by validation and the batch key so they can never disagree).
 const DEFAULT_MODEL: &str = "opensora-sim";
 const DEFAULT_BUCKET: &str = "240p-2s";
-const DEFAULT_POLICY: &str = "foresight";
+pub const DEFAULT_POLICY: &str = "foresight";
+/// The sentinel spec resolved through the profile store (module docs
+/// §`policy=auto` resolution).
+pub const AUTO_POLICY: &str = "auto";
 
 /// Engines per (model, bucket), loaded once and shared by all workers.
 pub struct EngineRegistry {
@@ -116,6 +146,85 @@ struct Job {
     payload: Json,
     enqueued: Instant,
     reply: mpsc::Sender<Json>,
+    /// Present when the request sent `policy:"auto"` (the payload's policy
+    /// field has already been rewritten to `auto.spec`).
+    auto: Option<AutoInfo>,
+}
+
+/// Outcome of resolving a `policy:"auto"` request at enqueue time.
+#[derive(Debug, Clone)]
+struct AutoInfo {
+    /// The concrete spec `auto` resolved to.
+    spec: String,
+    /// Generation counter of the store that resolved it (0 = no store).
+    store_version: u64,
+    /// `profile_version` of the matched profile (0 on fallback).
+    profile_version: u64,
+    /// `exact` | `nearest` | `default`.
+    matched: &'static str,
+    /// True when no profile matched and [`DEFAULT_POLICY`] was served.
+    fallback: bool,
+}
+
+/// Resolve `policy:"auto"` against the loaded profile store, rewriting the
+/// payload's `policy` field to the concrete spec so the batch key and wire
+/// validation only ever see concrete specs. Returns `None` for non-auto
+/// payloads. Counts the resolution (or fallback) in the telemetry.
+fn resolve_auto(payload: &mut Json, ctx: &ServeCtx) -> Option<AutoInfo> {
+    if payload.get("policy").and_then(|p| p.as_str()) != Some(AUTO_POLICY) {
+        return None;
+    }
+    let str_field = |k: &str, default: &str| -> String {
+        // A wrong-typed field resolves via the default here; the request
+        // still fails wire validation at dispatch, this just guarantees a
+        // concrete spec.
+        payload
+            .get(k)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    };
+    let model = str_field("model", DEFAULT_MODEL);
+    let bucket = str_field("bucket", DEFAULT_BUCKET);
+    let resolved = ctx.registry.get(&model, &bucket).ok().and_then(|engine| {
+        let info = &engine.model().info;
+        let steps = match payload.get("steps").and_then(|v| v.as_f64()) {
+            Some(s) if s.is_finite() && s >= 1.0 && s.fract() == 0.0 => s as usize,
+            // absent (or malformed — rejected later anyway): the preset
+            // default, which is what the request would run at.
+            _ => info.steps,
+        };
+        let store = ctx.profiles.as_deref()?;
+        let m = store.lookup(&model, &bucket, info.sampler.name(), steps)?;
+        // A stored spec this build cannot parse (hand-edited store, or a
+        // newer writer's syntax) must not poison every auto request with a
+        // dispatch error counted as a successful resolution — serve the
+        // default and count the fallback instead.
+        build_policy(&m.profile().spec, info, steps).ok()?;
+        Some(AutoInfo {
+            spec: m.profile().spec.clone(),
+            store_version: store.version(),
+            profile_version: m.profile().profile_version,
+            matched: m.kind(),
+            fallback: false,
+        })
+    });
+    let auto = resolved.unwrap_or_else(|| AutoInfo {
+        spec: DEFAULT_POLICY.to_string(),
+        store_version: ctx.profiles.as_deref().map_or(0, |s| s.version()),
+        profile_version: 0,
+        matched: "default",
+        fallback: true,
+    });
+    if auto.fallback {
+        ctx.telemetry.auto_fallbacks.fetch_add(1, Ordering::Relaxed);
+    } else {
+        ctx.telemetry.auto_resolved.fetch_add(1, Ordering::Relaxed);
+    }
+    if let Json::Obj(o) = payload {
+        o.insert("policy".to_string(), Json::Str(auto.spec.clone()));
+    }
+    Some(auto)
 }
 
 /// Micro-batch compatibility key (module docs §Batch scheduler): every
@@ -179,6 +288,11 @@ struct Telemetry {
     batches: AtomicU64,
     /// Requests that shared an engine pass with at least one other.
     batched_requests: AtomicU64,
+    /// `policy=auto` requests resolved to a tuned profile.
+    auto_resolved: AtomicU64,
+    /// `policy=auto` requests served [`DEFAULT_POLICY`] because no profile
+    /// matched (or no store was loaded) — untuned traffic.
+    auto_fallbacks: AtomicU64,
     latencies_s: Mutex<Reservoir>,
     queue_s: Mutex<Reservoir>,
 }
@@ -191,10 +305,21 @@ impl Telemetry {
             accept_errors: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
+            auto_resolved: AtomicU64::new(0),
+            auto_fallbacks: AtomicU64::new(0),
             latencies_s: Mutex::new(Reservoir::new(reservoir_cap)),
             queue_s: Mutex::new(Reservoir::new(reservoir_cap)),
         }
     }
+}
+
+/// Shared context a connection handler needs to route one protocol line.
+struct ServeCtx {
+    queue: Queue,
+    stop: Arc<AtomicBool>,
+    telemetry: Arc<Telemetry>,
+    registry: Arc<EngineRegistry>,
+    profiles: Option<Arc<ProfileStore>>,
 }
 
 /// The running server; dropping it (or calling [`Server::shutdown`]) stops
@@ -222,6 +347,10 @@ pub struct ServerConfig {
     /// Latency/queue telemetry reservoir capacity: exact percentiles below
     /// this many samples, uniform reservoir sampling above.
     pub telemetry_reservoir: usize,
+    /// Tuned reuse profiles for `policy=auto` resolution (module docs
+    /// §`policy=auto` resolution). `None`: every `auto` request falls back
+    /// to [`DEFAULT_POLICY`] and is counted in `auto_fallbacks`.
+    pub profiles: Option<Arc<ProfileStore>>,
 }
 
 impl Default for ServerConfig {
@@ -232,6 +361,7 @@ impl Default for ServerConfig {
             max_batch: 4,
             gather_window_ms: 2,
             telemetry_reservoir: 4096,
+            profiles: None,
         }
     }
 }
@@ -354,8 +484,13 @@ impl Server {
         // accept loop
         {
             let stop_accept = Arc::clone(&stop);
-            let queue = Arc::clone(&queue);
-            let telemetry = Arc::clone(&telemetry);
+            let ctx = Arc::new(ServeCtx {
+                queue: Arc::clone(&queue),
+                stop: Arc::clone(&stop),
+                telemetry: Arc::clone(&telemetry),
+                registry: Arc::clone(&registry),
+                profiles: cfg.profiles.clone(),
+            });
             handles.push(
                 std::thread::Builder::new()
                     .name("foresight-server-accept".to_string())
@@ -377,11 +512,9 @@ impl Server {
                             match listener.accept() {
                                 Ok((stream, _peer)) => {
                                     consecutive_errs = 0;
-                                    let queue = Arc::clone(&queue);
-                                    let stop = Arc::clone(&stop_accept);
-                                    let telemetry = Arc::clone(&telemetry);
+                                    let ctx = Arc::clone(&ctx);
                                     conn_handles.push(std::thread::spawn(move || {
-                                        let _ = handle_conn(stream, queue, stop, telemetry);
+                                        let _ = handle_conn(stream, ctx);
                                     }));
                                 }
                                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -447,12 +580,7 @@ fn err_json(msg: &str) -> Json {
     Json::obj(vec![("status", Json::str("error")), ("error", Json::str(msg))])
 }
 
-fn handle_conn(
-    mut stream: TcpStream,
-    queue: Queue,
-    stop: Arc<AtomicBool>,
-    telemetry: Arc<Telemetry>,
-) -> Result<()> {
+fn handle_conn(mut stream: TcpStream, ctx: Arc<ServeCtx>) -> Result<()> {
     use std::io::Read;
     // Poll with a read timeout so idle connections notice server shutdown
     // instead of blocking forever in a read (which would deadlock
@@ -469,11 +597,11 @@ fn handle_conn(
             if line.is_empty() {
                 continue;
             }
-            if !handle_line(&line, &mut writer, &queue, &stop, &telemetry)? {
+            if !handle_line(&line, &mut writer, &ctx)? {
                 break 'conn;
             }
         }
-        if stop.load(Ordering::SeqCst) {
+        if ctx.stop.load(Ordering::SeqCst) {
             break;
         }
         match stream.read(&mut chunk) {
@@ -492,23 +620,22 @@ fn handle_conn(
 }
 
 /// Process one protocol line; returns false when the connection should end.
-fn handle_line(
-    line: &str,
-    writer: &mut TcpStream,
-    queue: &Queue,
-    stop: &Arc<AtomicBool>,
-    telemetry: &Arc<Telemetry>,
-) -> Result<bool> {
+fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<bool> {
     {
-        let payload = match json::parse(line) {
+        let telemetry = &ctx.telemetry;
+        let mut payload = match json::parse(line) {
             Ok(j) => j,
             Err(e) => {
                 writeln!(writer, "{}", err_json(&format!("bad json: {e}")))?;
                 return Ok(true);
             }
         };
-        let op = payload.get("op").and_then(|o| o.as_str()).unwrap_or("");
-        let resp = match op {
+        let op = payload
+            .get("op")
+            .and_then(|o| o.as_str())
+            .unwrap_or("")
+            .to_string();
+        let resp = match op.as_str() {
             "ping" => Json::obj(vec![("status", Json::str("ok")), ("pong", Json::Bool(true))]),
             "stats" => {
                 let (lat, lat_seen) = {
@@ -529,6 +656,22 @@ fn handle_line(
                         "batched_requests",
                         Json::num(telemetry.batched_requests.load(Ordering::Relaxed) as f64),
                     ),
+                    (
+                        "profile_store_version",
+                        Json::num(ctx.profiles.as_deref().map_or(0, |s| s.version()) as f64),
+                    ),
+                    (
+                        "profiles_loaded",
+                        Json::num(ctx.profiles.as_deref().map_or(0, |s| s.len()) as f64),
+                    ),
+                    (
+                        "auto_resolved",
+                        Json::num(telemetry.auto_resolved.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "auto_fallbacks",
+                        Json::num(telemetry.auto_fallbacks.load(Ordering::Relaxed) as f64),
+                    ),
                     ("latency_p50_s", Json::num(stats::percentile(&lat, 50.0))),
                     ("latency_p95_s", Json::num(stats::percentile(&lat, 95.0))),
                     ("latency_p99_s", Json::num(stats::percentile(&lat, 99.0))),
@@ -540,12 +683,16 @@ fn handle_line(
                 ])
             }
             "shutdown" => {
-                signal_stop(queue, stop);
+                signal_stop(&ctx.queue, &ctx.stop);
                 let r = Json::obj(vec![("status", Json::str("ok")), ("stopping", Json::Bool(true))]);
                 writeln!(writer, "{r}")?;
                 return Ok(false);
             }
             "generate" => {
+                // Resolve `policy:"auto"` to a concrete spec before the
+                // job is queued, so the batch key (derived from the raw
+                // payload) groups identically-resolved requests.
+                let auto = resolve_auto(&mut payload, ctx);
                 let (tx, rx) = mpsc::channel();
                 // Check `stop` under the queue lock: workers only exit
                 // after observing `stop` (set under the same lock), so a
@@ -554,12 +701,12 @@ fn handle_line(
                 // would otherwise block rx.recv() forever and deadlock
                 // the join in Server::shutdown.
                 let enqueued = {
-                    let (lock, cv) = &**queue;
+                    let (lock, cv) = &*ctx.queue;
                     let mut q = lock.lock().unwrap();
-                    if stop.load(Ordering::SeqCst) {
+                    if ctx.stop.load(Ordering::SeqCst) {
                         false
                     } else {
-                        q.push_back(Job { payload, enqueued: Instant::now(), reply: tx });
+                        q.push_back(Job { payload, enqueued: Instant::now(), reply: tx, auto });
                         // notify_all, not notify_one: a gathering worker
                         // parked on the same condvar must also see new
                         // arrivals inside its window.
@@ -662,12 +809,17 @@ fn parse_generate(payload: &Json) -> Result<GenerateParams> {
 }
 
 /// One `generate` response object (module docs list the fields).
+/// `policy_spec` is the concrete spec that was executed (post-`auto`
+/// resolution); `auto` adds the resolution echo fields when the request
+/// asked for `policy=auto`.
 fn generate_response(
     model: &str,
     bucket: &str,
     r: &RunResult,
     queue_s: f64,
     batch_size: usize,
+    policy_spec: &str,
+    auto: Option<&AutoInfo>,
 ) -> Json {
     let s = &r.stats;
     let latent_l2 = r
@@ -677,11 +829,12 @@ fn generate_response(
         .map(|&v| v as f64 * v as f64)
         .sum::<f64>()
         .sqrt();
-    Json::obj(vec![
+    let mut fields = vec![
         ("status", Json::str("ok")),
         ("model", Json::str(model)),
         ("bucket", Json::str(bucket)),
         ("policy", Json::str(&s.policy)),
+        ("policy_spec", Json::str(policy_spec)),
         ("wall_s", Json::num(s.wall_s)),
         ("queue_s", Json::num(queue_s)),
         ("steps", Json::num(s.per_step_s.len() as f64)),
@@ -695,7 +848,18 @@ fn generate_response(
         ("d2h_calls", Json::num(s.d2h_calls as f64)),
         ("batch_size", Json::num(batch_size as f64)),
         ("latent_l2", Json::num(latent_l2)),
-    ])
+    ];
+    if let Some(a) = auto {
+        fields.extend([
+            ("policy_requested", Json::str(AUTO_POLICY)),
+            ("resolved_policy", Json::str(&a.spec)),
+            ("profile_version", Json::num(a.profile_version as f64)),
+            ("profile_store_version", Json::num(a.store_version as f64)),
+            ("profile_match", Json::str(a.matched)),
+            ("profile_fallback", Json::Bool(a.fallback)),
+        ]);
+    }
+    Json::obj(fields)
 }
 
 /// Dispatch one gathered batch of `generate` jobs (size ≥ 1). Per-job
@@ -755,7 +919,15 @@ fn handle_generate_batch(registry: &EngineRegistry, jobs: Vec<Job>, telemetry: &
     match run {
         Ok(results) => {
             for ((job, queue_s, p), r) in parsed.into_iter().zip(results) {
-                let resp = generate_response(&p.model, &p.bucket, &r, queue_s, batch_size);
+                let resp = generate_response(
+                    &p.model,
+                    &p.bucket,
+                    &r,
+                    queue_s,
+                    batch_size,
+                    &p.policy_spec,
+                    job.auto.as_ref(),
+                );
                 telemetry.latencies_s.lock().unwrap().push(r.stats.wall_s);
                 telemetry.queue_s.lock().unwrap().push(queue_s);
                 let _ = job.reply.send(resp);

@@ -32,6 +32,17 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// Exact non-negative integer, or `None` for fractional / negative /
+    /// non-numeric values (used for schema and profile versions, where a
+    /// silent truncation would corrupt the comparison).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self.as_f64() {
+            Some(n) if n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n < 2f64.powi(53) => {
+                Some(n as u64)
+            }
+            _ => None,
+        }
+    }
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -447,5 +458,15 @@ mod tests {
     fn integer_formatting_is_stable() {
         assert_eq!(Json::Num(30.0).to_string(), "30");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn as_u64_is_exact() {
+        assert_eq!(Json::Num(3.0).as_u64(), Some(3));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Json::str("3").as_u64(), None);
     }
 }

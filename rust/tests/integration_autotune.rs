@@ -1,0 +1,104 @@
+//! Autotune integration: profile a tiny grid on the real engine, select
+//! within the quality budget, persist the store to disk, reload it, and
+//! check the serving-side lookup contract. SKIPs without AOT artifacts.
+
+use std::sync::Arc;
+
+use foresight::autotune::{
+    pareto_frontier, profile_engine, GridSpec, ProfileOptions, ProfileStore, DEFAULT_KNOBS,
+};
+use foresight::config::Manifest;
+use foresight::engine::Engine;
+use foresight::model::LoadedModel;
+use foresight::runtime::Runtime;
+
+const STEPS: usize = 6;
+
+fn load_engine() -> Option<Engine> {
+    let root = Manifest::default_root();
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return None;
+    }
+    let manifest = Manifest::load(&root).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let lm = Arc::new(LoadedModel::load(rt, &manifest, "opensora-sim", "240p-2s").unwrap());
+    Some(Engine::new(lm, manifest.schedule))
+}
+
+#[test]
+fn profile_select_persist_reload() {
+    let Some(engine) = load_engine() else { return };
+    let opts = ProfileOptions {
+        steps: Some(STEPS),
+        prompts: 2,
+        min_psnr: 25.0,
+        grid: GridSpec::tiny(),
+    };
+    let outcome = profile_engine(&engine, &opts).unwrap();
+    let profile = &outcome.profile;
+
+    // The sweep holds the baseline and the serving default; the stored
+    // frontier is exactly the Pareto frontier of the sweep.
+    assert!(outcome.points.iter().any(|p| p.spec == "none"));
+    let default_spec = DEFAULT_KNOBS.spec();
+    let def = outcome
+        .points
+        .iter()
+        .find(|p| p.spec == default_spec)
+        .expect("sweep includes the serving default");
+    assert_eq!(pareto_frontier(&outcome.points), profile.frontier);
+
+    // Budgeted selection Pareto-dominates or matches the fixed default.
+    let chosen = outcome
+        .points
+        .iter()
+        .find(|p| p.spec == profile.spec)
+        .expect("chosen spec is a sweep point");
+    if def.psnr >= opts.min_psnr {
+        assert!(chosen.psnr >= opts.min_psnr, "{:.2}", chosen.psnr);
+        assert!(
+            chosen.wall_s <= def.wall_s,
+            "tuned {:.3}s slower than default {:.3}s",
+            chosen.wall_s,
+            def.wall_s
+        );
+    } else {
+        assert!(chosen.psnr >= def.psnr, "{:.2} vs {:.2}", chosen.psnr, def.psnr);
+    }
+
+    // Key matches the engine's identity.
+    let info = &engine.model().info;
+    let bucket = &engine.model().bucket.name;
+    assert_eq!(profile.key.model, info.name);
+    assert_eq!(&profile.key.bucket, bucket);
+    assert_eq!(profile.key.sampler, info.sampler.name());
+    assert_eq!(profile.key.steps, STEPS);
+
+    // Filesystem round trip: save → load → identical exact lookup.
+    let path = std::env::temp_dir()
+        .join(format!("foresight-autotune-test-{}.json", std::process::id()));
+    let mut store = ProfileStore::new();
+    store.insert(outcome.profile.clone());
+    store.save(&path).unwrap();
+    let loaded = ProfileStore::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(loaded.version(), store.version());
+    let from_disk = loaded
+        .lookup(&info.name, bucket, info.sampler.name(), STEPS)
+        .expect("saved profile must resolve");
+    let in_memory = store
+        .lookup(&info.name, bucket, info.sampler.name(), STEPS)
+        .unwrap();
+    assert_eq!(from_disk.kind(), "exact");
+    assert_eq!(from_disk.profile(), in_memory.profile());
+
+    // The nearest-steps fallback reaches the same profile from a
+    // neighboring step count (the serving path for unprofiled steps).
+    let near = loaded
+        .lookup(&info.name, "some-other-bucket", info.sampler.name(), STEPS + 2)
+        .expect("nearest fallback must resolve");
+    assert_eq!(near.kind(), "nearest");
+    assert_eq!(near.profile().spec, profile.spec);
+}

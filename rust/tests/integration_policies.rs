@@ -2,11 +2,12 @@
 //! through thousands of synthetic decision trajectories with the in-tree
 //! proptest-lite harness — no PJRT runtime needed.
 
+use foresight::autotune::{GridSpec, Knobs};
 use foresight::cache::Unit;
 use foresight::config::{SamplerKind, ScheduleConfig};
 use foresight::model::{BlockKind, SubUnit};
 use foresight::policy::{
-    build_policy, Action, Foresight, Granularity, Pab, ReusePolicy, Site, StaticReuse,
+    build_policy, Action, Foresight, Granularity, NoReuse, Pab, ReusePolicy, Site, StaticReuse,
 };
 use foresight::sampler;
 use foresight::util::json::{self, Json};
@@ -117,7 +118,7 @@ fn prop_foresight_never_reuses_in_warmup_and_refresh() {
         let r = g.usize_in(2..=5);
         let gamma = g.f64_in(0.1, 2.0);
         let wf = g.f64_in(0.05, 0.4);
-        let mut p = Foresight::new(r - 1, r, gamma, wf);
+        let mut p = Foresight::new(r - 1, r, gamma, wf).unwrap();
         let decisions = drive_coarse(&mut p, layers, steps, |s, l| {
             1.0 / (1.0 + s as f64 + l as f64)
         });
@@ -147,7 +148,7 @@ fn prop_foresight_reuse_monotone_in_gamma() {
         let g2 = g1 + g.f64_in(0.0, 1.0);
         let traj: Vec<f64> = (0..steps).map(|s| 1.0 / (1.0 + s as f64)).collect();
         let count = |gamma: f64| {
-            let mut p = Foresight::new(1, 2, gamma, 0.15);
+            let mut p = Foresight::new(1, 2, gamma, 0.15).unwrap();
             drive_coarse(&mut p, layers, steps, |s, _| traj[s])
                 .iter()
                 .flatten()
@@ -168,7 +169,7 @@ fn prop_static_reuse_pattern_exact() {
         let layers = g.usize_in(1..=8);
         let steps = g.usize_in(4..=60);
         let r = g.usize_in(1..=6);
-        let mut p = StaticReuse::new(r.saturating_sub(1), r);
+        let mut p = StaticReuse::new(r.saturating_sub(1), r).unwrap();
         let decisions = drive_coarse(&mut p, layers, steps, |_, _| 0.0);
         for (step, row) in decisions.iter().enumerate() {
             let expect = step % r != 0;
@@ -188,7 +189,7 @@ fn prop_pab_hierarchy_holds() {
         let alpha = g.usize_in(2..=3);
         let beta = alpha + g.usize_in(1..=3);
         let gamma_c = beta + g.usize_in(1..=3);
-        let mut p = Pab::new(alpha, beta, gamma_c, 0.1, 0.6, vec![0], 2, steps);
+        let mut p = Pab::new(alpha, beta, gamma_c, 0.1, 0.6, vec![0], 2, steps).unwrap();
         p.begin_request(layers, steps);
         let mut counts = [0usize; 3]; // spatial-attn, temporal-attn, cross
         for step in 0..steps {
@@ -369,12 +370,74 @@ fn prop_decisions_invariant_under_branch_interleaving() {
 }
 
 #[test]
+fn prop_autotune_grid_specs_round_trip_to_identical_policies() {
+    // Every configuration the autotuner can emit must parse back via
+    // build_policy to a policy *identical* to the directly-constructed
+    // one: same display name, same decisions over a synthetic trajectory.
+    // (All autotune knobs are coarse-granularity policies.)
+    proptest_cases(80, |g: &mut Gen| {
+        let knobs = match g.usize_in(0..=2) {
+            0 => Knobs::NoReuse,
+            1 => Knobs::Static { n: g.usize_in(1..=4), r: g.usize_in(1..=6) },
+            _ => {
+                let n = g.usize_in(1..=4);
+                // round to grid-like precision so spec strings stay short;
+                // Rust float Display round-trips exactly either way
+                let gamma = (g.f64_in(0.05, 2.0) * 100.0).round() / 100.0;
+                let warmup = (g.f64_in(0.01, 0.45) * 100.0).round() / 100.0;
+                Knobs::Foresight { n, r: n + 1, gamma, warmup }
+            }
+        };
+        let spec = knobs.spec();
+        let layers = g.usize_in(1..=6);
+        let steps = g.usize_in(8..=50);
+        let info = fake_model(layers);
+
+        let mut direct: Box<dyn ReusePolicy> = match &knobs {
+            Knobs::NoReuse => Box::new(NoReuse::new()),
+            Knobs::Static { n, r } => Box::new(StaticReuse::new(*n, *r).unwrap()),
+            Knobs::Foresight { n, r, gamma, warmup } => {
+                Box::new(Foresight::new(*n, *r, *gamma, *warmup).unwrap())
+            }
+        };
+        let mut parsed = build_policy(&spec, &info, steps)
+            .unwrap_or_else(|e| panic!("emitted spec '{spec}' failed to parse: {e}"));
+        prop_assert(
+            parsed.name() == direct.name(),
+            format!("'{spec}': parsed name {} != direct {}", parsed.name(), direct.name()),
+        );
+        let mse = |s: usize, l: usize| 1.0 / (1.0 + s as f64 + 0.3 * l as f64);
+        let d_parsed = drive_coarse(parsed.as_mut(), layers, steps, mse);
+        let d_direct = drive_coarse(direct.as_mut(), layers, steps, mse);
+        prop_assert(
+            d_parsed == d_direct,
+            format!("'{spec}': parsed and direct policies diverged"),
+        );
+    });
+}
+
+#[test]
+fn default_grid_candidates_all_round_trip() {
+    // The deterministic counterpart over the exact default grids.
+    let info = fake_model(4);
+    for grid in [GridSpec::paper_default(), GridSpec::tiny()] {
+        for knobs in grid.candidates() {
+            let spec = knobs.spec();
+            let p1 = build_policy(&spec, &info, 30)
+                .unwrap_or_else(|e| panic!("{spec}: {e}"));
+            let p2 = build_policy(&spec, &info, 30).unwrap();
+            assert_eq!(p1.name(), p2.name(), "{spec}");
+        }
+    }
+}
+
+#[test]
 fn prop_foresight_lambda_matches_eq5_weighting() {
     // With constant warmup MSE m, Eq. 5 gives λ = m * (1 + 0.1 + 0.01).
     proptest_cases(40, |g: &mut Gen| {
         let m = g.f64_in(0.01, 5.0);
         let steps = g.usize_in(20..=60);
-        let mut p = Foresight::new(1, 2, 0.5, 0.15);
+        let mut p = Foresight::new(1, 2, 0.5, 0.15).unwrap();
         p.begin_request(1, steps);
         let w = p.warmup_steps();
         for step in 1..w {

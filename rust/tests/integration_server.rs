@@ -3,6 +3,7 @@
 
 use std::sync::Arc;
 
+use foresight::autotune::{ProfileKey, ProfileStore, TunedProfile};
 use foresight::config::Manifest;
 use foresight::runtime::Runtime;
 use foresight::server::{Client, EngineRegistry, Server, ServerConfig};
@@ -371,6 +372,174 @@ fn stats_reservoir_caps_samples_and_reports_percentiles() {
     // queue percentiles exist (near-zero on an idle single client is fine)
     assert!(stats.get("queue_p95_s").unwrap().as_f64().unwrap() >= 0.0);
     assert!(stats.get("accept_errors").unwrap().as_f64().unwrap() >= 0.0);
+    server.shutdown();
+}
+
+/// A store with one tuned profile for opensora-sim/240p-2s at `steps`,
+/// under both sampler names so the test doesn't hardcode the preset's
+/// sampler family.
+fn tuned_store(steps: usize, spec: &str) -> Arc<ProfileStore> {
+    let mut store = ProfileStore::new();
+    for sampler in ["rflow", "ddim"] {
+        store.insert(TunedProfile {
+            key: ProfileKey {
+                model: "opensora-sim".into(),
+                bucket: "240p-2s".into(),
+                sampler: sampler.into(),
+                steps,
+            },
+            spec: spec.into(),
+            min_psnr: 25.0,
+            profile_version: 1,
+            frontier: vec![],
+        });
+    }
+    Arc::new(store)
+}
+
+#[test]
+fn policy_auto_without_profiles_falls_back_and_counts() {
+    let Some(server) = start_server(1) else { return };
+    let mut c = Client::connect(&server.addr()).unwrap();
+    let r = c.call(&gen_req("auto", "auto fallback probe", 1, 6)).unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+    assert_eq!(r.get("policy_requested").unwrap().as_str().unwrap(), "auto");
+    assert_eq!(r.get("resolved_policy").unwrap().as_str().unwrap(), "foresight");
+    assert_eq!(r.get("policy_spec").unwrap().as_str().unwrap(), "foresight");
+    assert!(r.get("profile_fallback").unwrap().as_bool().unwrap(), "{r}");
+    assert_eq!(r.get("profile_match").unwrap().as_str().unwrap(), "default");
+    assert_eq!(r.get("profile_version").unwrap().as_usize().unwrap(), 0);
+
+    // explicit requests carry the concrete spec but no auto echo
+    let r2 = c.call(&gen_req("static:n=1,r=2", "explicit", 2, 6)).unwrap();
+    assert_eq!(r2.get("policy_spec").unwrap().as_str().unwrap(), "static:n=1,r=2");
+    assert!(r2.get("policy_requested").is_none(), "{r2}");
+
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("auto_fallbacks").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(stats.get("auto_resolved").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(stats.get("profile_store_version").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(stats.get("profiles_loaded").unwrap().as_usize().unwrap(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn policy_auto_resolves_tuned_spec_and_batches_with_explicit() {
+    const STEPS: usize = 8;
+    const TUNED: &str = "static:n=1,r=2";
+    let Some(server) = start_server_with(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 4,
+        gather_window_ms: 500,
+        profiles: Some(tuned_store(STEPS, TUNED)),
+        ..ServerConfig::default()
+    }) else {
+        return;
+    };
+    let addr = server.addr();
+
+    // Two `auto` requests and one explicit request with the tuned spec,
+    // fired simultaneously at a single worker: `auto` resolves *before*
+    // the batch key is formed, so all three carry identical raw policy
+    // fields and must share an engine pass.
+    let mut handles = Vec::new();
+    for (cid, policy) in [(0u64, "auto"), (1, "auto"), (2, TUNED)] {
+        let req = gen_req(policy, &format!("auto batch {cid}"), cid, STEPS);
+        let mut c = Client::connect(&addr).unwrap();
+        assert!(c.ping().unwrap());
+        handles.push(std::thread::spawn(move || (cid, c.call(&req).unwrap())));
+    }
+    let mut max_batch_seen = 0usize;
+    for h in handles {
+        let (cid, r) = h.join().unwrap();
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{cid}: {r}");
+        assert_eq!(r.get("policy_spec").unwrap().as_str().unwrap(), TUNED, "{cid}: {r}");
+        if cid < 2 {
+            assert_eq!(r.get("policy_requested").unwrap().as_str().unwrap(), "auto");
+            assert_eq!(r.get("resolved_policy").unwrap().as_str().unwrap(), TUNED);
+            assert_eq!(r.get("profile_match").unwrap().as_str().unwrap(), "exact");
+            assert_eq!(r.get("profile_version").unwrap().as_usize().unwrap(), 1);
+            assert!(!r.get("profile_fallback").unwrap().as_bool().unwrap(), "{r}");
+        } else {
+            assert!(r.get("policy_requested").is_none(), "{r}");
+        }
+        max_batch_seen = max_batch_seen.max(r.get("batch_size").unwrap().as_usize().unwrap());
+    }
+    assert!(
+        max_batch_seen >= 2,
+        "auto-resolved and explicit requests with the same concrete spec \
+         must share an engine pass, max batch_size {max_batch_seen}"
+    );
+
+    // No exact profile at steps=6: the nearest same-(model, sampler)
+    // profile (steps=8) is substituted, counted as a resolution.
+    let mut c = Client::connect(&addr).unwrap();
+    let r = c.call(&gen_req("auto", "nearest probe", 9, 6)).unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+    assert_eq!(r.get("profile_match").unwrap().as_str().unwrap(), "nearest");
+    assert_eq!(r.get("resolved_policy").unwrap().as_str().unwrap(), TUNED);
+
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("auto_resolved").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(stats.get("auto_fallbacks").unwrap().as_usize().unwrap(), 0);
+    assert!(stats.get("profile_store_version").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(stats.get("profiles_loaded").unwrap().as_usize().unwrap(), 2);
+    server.shutdown();
+}
+
+#[test]
+fn policy_auto_with_unparseable_stored_spec_falls_back() {
+    // A hand-edited (or newer-format) store whose tuned spec this build
+    // cannot parse must not turn auto traffic into dispatch errors counted
+    // as successful resolutions — it serves the default, counted as a
+    // fallback.
+    const STEPS: usize = 6;
+    let Some(server) = start_server_with(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        profiles: Some(tuned_store(STEPS, "warp-drive:q=1")),
+        ..ServerConfig::default()
+    }) else {
+        return;
+    };
+    let mut c = Client::connect(&server.addr()).unwrap();
+    let r = c.call(&gen_req("auto", "corrupt store probe", 1, STEPS)).unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+    assert_eq!(r.get("resolved_policy").unwrap().as_str().unwrap(), "foresight");
+    assert!(r.get("profile_fallback").unwrap().as_bool().unwrap(), "{r}");
+    assert_eq!(r.get("profile_match").unwrap().as_str().unwrap(), "default");
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("auto_fallbacks").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(stats.get("auto_resolved").unwrap().as_usize().unwrap(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn wire_reachable_policy_params_cannot_panic_workers() {
+    // Each of these used to trip an assert! in a policy constructor at
+    // dispatch time, killing the worker thread. With a single worker, a
+    // successful request after the batch of rejections proves the worker
+    // survived them all.
+    let Some(server) = start_server(1) else { return };
+    let mut c = Client::connect(&server.addr()).unwrap();
+    for bad in [
+        "foresight:gamma=-1",
+        "foresight:gamma=0",
+        "foresight:warmup=1.5",
+        "foresight:r=0",
+        "static:r=0",
+        "delta-dit:k=0",
+        "tgate:m=0",
+        "pab:lo=0.9,hi=0.1",
+        "foresight:g=0.5", // unknown key: rejected, not silently ignored
+        "foresight:gamma=abc",
+    ] {
+        let r = c.call(&gen_req(bad, "bad params", 0, 4)).unwrap();
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "error", "{bad}: {r}");
+    }
+    let ok = c.call(&gen_req("foresight:gamma=0.5", "recovery", 1, 4)).unwrap();
+    assert_eq!(ok.get("status").unwrap().as_str().unwrap(), "ok", "{ok}");
     server.shutdown();
 }
 
