@@ -69,9 +69,11 @@ fn main() -> anyhow::Result<()> {
         &manifest,
         &[("opensora-sim".to_string(), "240p-2s".to_string())],
     )?);
-    // Default config: micro-batching on (max_batch 4, short gather window)
-    // — concurrent same-policy clients coalesce into shared engine passes,
-    // and `auto` requests batch with anything resolving to the same spec.
+    // Default config: continuous step-level batching (max_batch 4, no
+    // admission window) — concurrent clients coalesce into shared device
+    // passes at step boundaries even across different policies/steps, and
+    // late arrivals join in-flight cohorts instead of queueing behind
+    // them.
     let server = Server::start(
         registry,
         ServerConfig {
@@ -166,6 +168,13 @@ fn main() -> anyhow::Result<()> {
     );
     println!("queueing          : mean {:.2}s", stats::mean(&queued));
     println!("batch size        : mean {:.2}", stats::mean(&batch_sizes));
+    println!(
+        "scheduler         : occupancy mean {:.2} / max {:.0}, {} joins, {} regroups",
+        sstats.get("occupancy_mean").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        sstats.get("occupancy_max").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        sstats.get("joins").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        sstats.get("regroups").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    );
     println!(
         "auto resolution   : {} tuned / {} fallback (store v{})",
         sstats.get("auto_resolved").and_then(|v| v.as_f64()).unwrap_or(0.0),

@@ -2,21 +2,39 @@
 //!
 //! This is where the paper's system comes together. For every request the
 //! engine runs `T` denoising steps with classifier-free guidance; at each
-//! step, for each (layer, block, CFG-branch) — or sublayer for fine-grained
-//! baselines — it asks the [`ReusePolicy`] whether to dispatch the block
-//! executable or serve the activation from the [`FeatureCache`]. Reused
-//! blocks cost zero FLOPs and zero dispatches; that is the entire speedup
-//! mechanism of the paper.
+//! step, for each (layer, block, CFG-branch) — or sublayer for
+//! fine-grained baselines — it asks the [`ReusePolicy`] whether to
+//! dispatch the block executable or serve the activation from the
+//! [`crate::cache::FeatureCache`]. Reused blocks cost zero FLOPs and zero
+//! dispatches; that is the entire speedup mechanism of the paper.
+//!
+//! # Sessions: one step implementation for every path
+//!
+//! All denoising is step-driven through [`session::Session`]: a started
+//! request holding its resident latent, per-branch feature caches (owned
+//! by two persistent, policy-free branch worker threads), its policy
+//! state, the precomputed timestep embeddings and sampler coefficients
+//! for the whole schedule, and a cursor. [`Engine::generate`] and
+//! [`Engine::generate_batch`] are thin drivers: admit → step to
+//! completion → finish. [`session::step_many`] advances any set of
+//! same-(model, bucket, sampler) sessions one step in **one fused device
+//! pass** — sessions carry their own CFG scalar and schedule cursor, so
+//! requests with different step counts and CFG scales can share a pass;
+//! the server's continuous scheduler admits and retires lanes at step
+//! boundaries. The lockstep [`Engine::generate_batch`] survives as the
+//! ≤1e-6 equivalence oracle the fig18/fig20 benches and the engine tests
+//! drive.
 //!
 //! # Hot path
 //!
 //! Under [`HotPath::Device`] the denoising state is **device-resident for
-//! the whole request**: the initial latent uploads once, every step feeds
-//! `h0 = embed(x)` straight from the resident latent, the CFG combine
-//! `uncond + s·(cond − uncond)` and the sampler update (a single `axpy`
-//! for rflow Euler, the fused `ddim_step` for DDIM) chain as fused
-//! executables over device buffers, and the final latent downloads exactly
-//! once after the last step.
+//! the whole request**: the initial latent uploads once at admit, every
+//! step feeds `h0 = embed(x)` straight from the resident latent, the CFG
+//! combine `uncond + s·(cond − uncond)` and the sampler update (a single
+//! `axpy` for rflow Euler, the fused `ddim_step` for DDIM; their
+//! multi-lane `cohort_*_step` forms for cohorts) chain as fused
+//! executables over device buffers, and the final latent downloads
+//! exactly once at [`session::Session::finish`].
 //!
 //! Request-start uploads (all amortized over the run): the text
 //! conditioning, the CFG scale, the DDIM clamp bounds, and — because
@@ -26,86 +44,52 @@
 //! latent bytes**; the only recurring transfer is 4 bytes down per
 //! measured site for measuring policies (Foresight's Eq. 5/6 drift MSE is
 //! a fused on-device reduction against the cached activation), plus
-//! observer downloads on analysis runs.
+//! observer downloads on analysis runs. This per-session byte model is
+//! independent of cohort size — see the `session` module docs.
 //!
 //! The seed engine instead uploaded the full latent (`F·P·C·4` bytes) and
-//! downloaded an epsilon of the same size every step and advanced `x` in a
-//! host loop; that staging survives as [`HotPath::Host`] so
-//! `benches/fig17_resident.rs` (steady-state traffic ≥100× lower) and
+//! downloaded an epsilon of the same size every step and advanced `x` in
+//! a host loop; that staging survives as [`HotPath::Host`] (an
+//! inline-sequential session) so `benches/fig17_resident.rs` and
 //! `benches/fig16_hotpath.rs` can A/B the two pipelines — final latents
 //! agree to ≤1e-6 per element, decisions identically.
 //!
-//! # Branch parallelism
+//! # Branch parallelism without a policy lock
 //!
-//! Under [`HotPath::Device`] the uncond CFG branch runs on a **persistent
-//! per-request worker thread** fed over a channel (one spawn per request,
-//! not per step) while the cond branch runs on the caller's thread. Each
-//! branch owns its own [`FeatureCache`] (keys are branch-disjoint) and the
-//! policy is consulted through a mutex. Policy state is keyed per (layer,
-//! kind, branch), so interleaving the branches never changes a decision —
-//! decisions for step `t` depend only on observations from steps `< t`,
-//! which both orderings deliver identically. Text K/V precompute
-//! parallelizes the same way at request start. When a [`StepObserver`] is
-//! attached (analysis runs) the engine drops to sequential branches so
-//! observer callbacks arrive in the deterministic seed order.
+//! Each device session owns one persistent worker thread per CFG branch,
+//! fed per step over a channel. The workers never touch the policy:
+//! decisions for step `t` depend only on observations from steps `< t`
+//! and policy state is keyed per (layer, kind, branch), so the
+//! coordinator precomputes both branches' actions before dispatch and
+//! applies the returned drift observations after the join — the same
+//! decisions as any branch interleaving, with zero locking on the sweep
+//! path. Each branch owns its own cache (keys are branch-disjoint). Text
+//! K/V precompute parallelizes the same way at admit. When a
+//! [`StepObserver`] is attached (analysis runs) the session drops to
+//! inline sequential branches so callbacks arrive in the deterministic
+//! seed order.
 //!
 //! Other hot-path properties (EXPERIMENTS.md §Perf):
 //! * text K/V are precomputed once per request per (layer, kind, branch);
-//! * the patch embedding runs once per step, shared across CFG branches;
+//! * the patch embedding runs once per step per lane, shared across CFG
+//!   branches;
 //! * every engine-visible transfer is metered in [`RunStats`]
 //!   (`h2d_bytes`/`d2h_bytes`), cross-checkable against the runtime's
 //!   [`crate::runtime::TransferStats`].
-//!
-//! # Micro-batching
-//!
-//! [`Engine::generate_batch`] runs `B` *compatible* requests (same step
-//! count and CFG scale — the server's `BatchKey` guarantees this, the
-//! engine re-validates) through **one resident step loop**. Each request
-//! keeps its own reuse policy, [`FeatureCache`]s and drift observations,
-//! so one request reusing a block while a neighbor recomputes stays
-//! correct: the Eq. 5/6 drift MSE reduces **per request** against that
-//! request's cached activation, never pooled across the batch.
-//!
-//! Per-request initial latents upload individually (one call each, as in
-//! the sequential path) and are stacked on device into one `[B, F, P, C]`
-//! resident tensor ([`crate::runtime::Runtime::stack`]). Per step, each
-//! lane is sliced back out ([`crate::runtime::Runtime::lane`]) to feed the
-//! fixed-shape patch embedding, the `2B` (lane, CFG-branch) site sweeps
-//! run on persistent worker threads, and then a **single** batched
-//! `cfg_combine` and a single batched sampler step advance all `B`
-//! resident lanes in one dispatch each — the fused-op cache is
-//! batch-shape-aware, so these are the same builders at `[B, F, P, C]`.
-//! Timestep embeddings, sampler coefficients, the CFG scale and the
-//! all-zeros uncond text context upload/precompute once per batch (they
-//! are identical across compatible requests); only the cond text context
-//! is per-lane.
-//!
-//! The batched trajectory is elementwise-identical to running each request
-//! alone under [`HotPath::Device`] (stack/lane are pure data movement and
-//! every batched op is elementwise), so per-request latents agree with the
-//! sequential device path to f32 exactness; `benches/fig18_batching.rs`
-//! asserts ≤1e-6. **Byte model:** each request's [`RunStats`] reports the
-//! cost it would pay standalone (batch-shared scalar uploads are charged
-//! to every lane), so per-request budgets stay comparable across batch
-//! sizes; the runtime-level [`crate::runtime::TransferStats`] meter shows
-//! the true, smaller batched totals — the difference is the amortization
-//! win. `wall_s`/`per_step_s` report the whole batch's wall clock (the
-//! lanes co-run).
 
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::sync::Arc;
 
-use crate::cache::{CacheKey, FeatureCache, Unit};
 use crate::config::ScheduleConfig;
-use crate::model::{BlockKind, LoadedModel, SubUnit};
-use crate::policy::{Action, CacheMode, Granularity, ReusePolicy, Site};
-use crate::runtime::{DeviceTensor, HostTensor};
-use crate::sampler::{self, Sampler};
-use crate::util::prng::Rng;
-use crate::util::stats::mse_f32;
-use crate::workload;
+use crate::model::{BlockKind, LoadedModel};
+use crate::policy::ReusePolicy;
+use crate::runtime::HostTensor;
+
+pub mod session;
+
+pub use session::{step_many, step_many_refs, Session, StepReport};
+use session::PolicyShim;
 
 /// One generation request.
 #[derive(Debug, Clone)]
@@ -129,14 +113,15 @@ impl Request {
 pub enum HotPath {
     /// Device-resident (default): the latent uploads once per request,
     /// sampler steps / CFG combine / drift MSE run as fused executables,
-    /// the final latent downloads once, and the CFG branches run on a
-    /// persistent worker thread.
+    /// the final latent downloads once, and the CFG branches run on
+    /// persistent worker threads.
     #[default]
     Device,
-    /// Seed-era staging: per-step latent upload, full activation downloads
-    /// for measurement, both branch epsilons downloaded, host combine and
-    /// host sampler loop, sequential branches. Kept for A/B benchmarking
-    /// (`fig16_hotpath`, `fig17_resident`) and equivalence tests.
+    /// Seed-era staging: per-step latent upload, full activation
+    /// downloads for measurement, both branch epsilons downloaded, host
+    /// combine and host sampler loop, sequential branches. Kept for A/B
+    /// benchmarking (`fig16_hotpath`, `fig17_resident`) and equivalence
+    /// tests.
     Host,
 }
 
@@ -154,7 +139,7 @@ pub struct RunStats {
     pub cache_entries_per_layer: f64,
     /// Host→device bytes moved by this run. Under [`HotPath::Device`]:
     /// text, CFG scale, the initial latent, and the per-step scalars
-    /// (timesteps + sampler coefficients), all at request start. Under
+    /// (timesteps + sampler coefficients), all at admit. Under
     /// [`HotPath::Host`]: the full latent every step.
     pub h2d_bytes: u64,
     pub h2d_calls: u64,
@@ -209,8 +194,8 @@ pub struct RunResult {
 
 /// Observer hook for the feature-dynamics analyses (Figs. 2/3/11-14):
 /// receives host copies of computed block outputs. Attaching an observer
-/// switches the engine to sequential CFG branches so callbacks arrive in
-/// deterministic (branch, layer, kind) order.
+/// switches the session to inline sequential CFG branches so callbacks
+/// arrive in deterministic (branch, layer, kind) order.
 pub trait StepObserver: Send {
     /// Which CFG branch to observe (downloads are expensive; default cond).
     fn wants_branch(&self, branch: usize) -> bool {
@@ -226,65 +211,6 @@ pub struct Engine {
     schedule: ScheduleConfig,
     hot_path: HotPath,
 }
-
-/// Per-branch request context (text conditioning).
-struct BranchCtx {
-    /// Precomputed cross-attention K/V per (layer, kind-index).
-    text_kv: Vec<[(Arc<DeviceTensor>, Arc<DeviceTensor>); 2]>,
-}
-
-/// Request-constant knobs shared by the host and device step loops.
-#[derive(Clone, Copy)]
-struct RunParams {
-    steps: usize,
-    cfg_scale: f32,
-    granularity: Granularity,
-    cache_mode: CacheMode,
-    needs_measure: bool,
-}
-
-/// Step-constant inputs shared by both branch threads.
-struct StepCtx<'a> {
-    step: usize,
-    granularity: Granularity,
-    cache_mode: CacheMode,
-    needs_measure: bool,
-    c: &'a Arc<DeviceTensor>,
-    h0: &'a Arc<DeviceTensor>,
-}
-
-/// Per-branch counters, merged into [`RunStats`] after the branches join.
-#[derive(Debug, Default)]
-struct BranchStats {
-    computed: u64,
-    reused: u64,
-    fallback: u64,
-    d2h_bytes: u64,
-    d2h_calls: u64,
-}
-
-impl BranchStats {
-    fn merge_into(&self, s: &mut RunStats) {
-        s.computed_units += self.computed;
-        s.reused_units += self.reused;
-        s.fallback_units += self.fallback;
-        s.d2h_bytes += self.d2h_bytes;
-        s.d2h_calls += self.d2h_calls;
-    }
-}
-
-/// What one CFG branch produces for one step.
-struct BranchRun {
-    eps: DeviceTensor,
-    decisions: Vec<bool>,
-    stats: BranchStats,
-}
-
-/// Host mirrors of measured activations ([`HotPath::Host`] only).
-type HostMirror = BTreeMap<CacheKey, Vec<f32>>;
-
-/// What the branch worker receives per step: (step, t-embedding, h0).
-type BranchJob = (usize, Arc<DeviceTensor>, Arc<DeviceTensor>);
 
 impl Engine {
     pub fn new(model: Arc<LoadedModel>, schedule: ScheduleConfig) -> Self {
@@ -311,80 +237,43 @@ impl Engine {
         &self.schedule
     }
 
-    /// Precompute one branch's text conditioning (projection + per-layer
-    /// cross-attention K/V).
-    fn branch_ctx(&self, raw: &HostTensor) -> Result<BranchCtx> {
-        let m = &self.model;
-        let text = Arc::new(m.text_proj(raw)?);
-        let mut text_kv = Vec::with_capacity(m.info.layers);
-        for layer in 0..m.info.layers {
-            let mut pair = Vec::with_capacity(2);
-            for kind in BlockKind::ALL {
-                let tk = Arc::new(m.text_k(layer, kind, &text)?);
-                let tv = Arc::new(m.text_v(layer, kind, &text)?);
-                pair.push((tk, tv));
-            }
-            let pair: [(Arc<DeviceTensor>, Arc<DeviceTensor>); 2] =
-                pair.try_into().map_err(|_| anyhow!("kv pair"))?;
-            text_kv.push(pair);
-        }
-        Ok(BranchCtx { text_kv })
+    /// Start a session for `req` owned by `policy` (the server's
+    /// continuous scheduler calls this directly; `generate` wraps it for
+    /// borrowed policies). Device engines get parallel branch workers;
+    /// [`HotPath::Host`] engines get an inline-sequential session.
+    pub fn admit<'p>(
+        &self,
+        req: &Request,
+        policy: Box<dyn ReusePolicy + 'p>,
+    ) -> Result<Session<'p>> {
+        Session::admit_full(self, req, policy, self.hot_path == HotPath::Device)
     }
 
     /// Run one request under `policy`, optionally streaming block outputs
-    /// to `observer`.
+    /// to `observer`: admit one session, step it to completion, finish.
     pub fn generate(
         &self,
         req: &Request,
         policy: &mut dyn ReusePolicy,
-        observer: Option<&mut dyn StepObserver>,
+        mut observer: Option<&mut dyn StepObserver>,
     ) -> Result<RunResult> {
-        let info = &self.model.info;
-        let steps = req.steps.unwrap_or(info.steps);
-        let cfg_scale = req.cfg_scale.unwrap_or(info.cfg_scale) as f32;
-        let smp = sampler::build(info.sampler, &self.schedule, steps);
-
-        policy.begin_request(info.layers, steps);
-        let mut stats = RunStats { policy: policy.name(), ..Default::default() };
-        let rp = RunParams {
-            steps,
-            cfg_scale,
-            granularity: policy.granularity(),
-            cache_mode: policy.cache_mode(),
-            needs_measure: policy.needs_measurement(),
-        };
-
-        // --- request-constant conditioning --------------------------------
-        // The two branch contexts are independent executable chains, so
-        // they precompute concurrently (same thread-safety contract as the
-        // per-step branch parallelism).
-        let cond_raw = workload::embed_prompt(&req.prompt, info.d_text, info.text_len);
-        let uncond_raw = HostTensor::zeros(vec![info.text_len, info.d_text]);
-        let (ctx_cond, ctx_uncond) = std::thread::scope(|sc| {
-            let hu = sc.spawn(|| self.branch_ctx(&uncond_raw));
-            let rc = self.branch_ctx(&cond_raw);
-            let ru = match hu.join() {
-                Ok(r) => r,
-                Err(_) => Err(anyhow!("uncond branch-ctx thread panicked")),
-            };
-            (rc, ru)
-        });
-        let branches = [ctx_cond?, ctx_uncond?];
-        stats.h2d_bytes += 2 * (info.text_len * info.d_text * 4) as u64;
-        stats.h2d_calls += 2;
-
-        match self.hot_path {
-            HotPath::Device => self.generate_device(req, rp, smp, branches, policy, observer, stats),
-            HotPath::Host => self.generate_host(req, rp, smp, branches, policy, observer, stats),
+        let parallel = observer.is_none() && self.hot_path == HotPath::Device;
+        let mut s = Session::admit_full(self, req, Box::new(PolicyShim(policy)), parallel)?;
+        while !s.is_done() {
+            s.step(observer.as_deref_mut())?;
         }
+        s.finish()
     }
 
-    /// Run `B` compatible requests through one micro-batched resident step
-    /// loop (see module docs §Micro-batching). `reqs[i]` is decided by
-    /// `policies[i]`; policies may differ per request (per-lane state is
-    /// fully disjoint), but every request must resolve to the same step
-    /// count and CFG scale — the quantities baked into the shared batched
-    /// executables. Returns one [`RunResult`] per request, in order.
+    /// Run `B` compatible requests through one lockstep session cohort
+    /// (the ≤1e-6 equivalence oracle for the batched pass — see the
+    /// `session` module docs). `reqs[i]` is decided by `policies[i]`;
+    /// policies may differ per request (per-session state is fully
+    /// disjoint), but this lockstep driver requires every request to
+    /// resolve to the same step count and CFG scale so all lanes start
+    /// and finish together. (The server's continuous scheduler drives
+    /// sessions directly and has no such restriction.) Returns one
+    /// [`RunResult`] per request, in order.
     ///
     /// Falls back to sequential [`Engine::generate`] calls for `B <= 1`
     /// and under [`HotPath::Host`] (the host staging has no batched
@@ -413,9 +302,7 @@ impl Engine {
             return Ok(out);
         }
 
-        let m = &self.model;
-        let info = &m.info;
-        let nb = reqs.len();
+        let info = &self.model.info;
         let steps = reqs[0].steps.unwrap_or(info.steps);
         let cfg_scale = reqs[0].cfg_scale.unwrap_or(info.cfg_scale) as f32;
         for r in reqs.iter().skip(1) {
@@ -433,776 +320,21 @@ impl Engine {
                 ));
             }
         }
-        let smp = sampler::build(info.sampler, &self.schedule, steps);
-        let rt = m.runtime().clone();
-        let [f, p, _d] = m.state_dims();
-        let [_, _, c_lat] = m.latent_dims();
-        let dims = [f, p, c_lat];
-        let bdims = [nb, f, p, c_lat];
-        let latent_elems = f * p * c_lat;
 
-        // Per-lane decision state + run params + as-if-standalone stats
-        // (see module docs §Micro-batching for the byte model).
-        let mut statses: Vec<RunStats> = Vec::with_capacity(nb);
-        let mut rps: Vec<RunParams> = Vec::with_capacity(nb);
-        for policy in policies.iter_mut() {
-            policy.begin_request(info.layers, steps);
-            statses.push(RunStats { policy: policy.name(), ..Default::default() });
-            rps.push(RunParams {
-                steps,
-                cfg_scale,
-                granularity: policy.granularity(),
-                cache_mode: policy.cache_mode(),
-                needs_measure: policy.needs_measurement(),
-            });
+        let mut sessions: Vec<Session<'_>> = Vec::with_capacity(reqs.len());
+        for (req, policy) in reqs.iter().zip(policies.iter_mut()) {
+            sessions.push(Session::admit_full(
+                self,
+                req,
+                Box::new(PolicyShim(policy.as_mut())),
+                true,
+            )?);
         }
-
-        // Text conditioning: the cond context is per-lane (per-prompt); the
-        // uncond context is the same all-zeros embedding for every request,
-        // so ONE shared context serves the whole batch (its K/V tensors are
-        // read-only Arcs) and precomputes concurrently with the cond
-        // chain. Each lane is still charged the standalone two text
-        // uploads (the as-if byte model; the runtime meter records the
-        // single shared upload).
-        let uncond_raw = HostTensor::zeros(vec![info.text_len, info.d_text]);
-        let cond_raws: Vec<HostTensor> = reqs
-            .iter()
-            .map(|r| workload::embed_prompt(&r.prompt, info.d_text, info.text_len))
-            .collect();
-        let (ru, rcs) = std::thread::scope(|sc| {
-            let hu = sc.spawn(|| self.branch_ctx(&uncond_raw));
-            let rcs: Vec<Result<BranchCtx>> =
-                cond_raws.iter().map(|cr| self.branch_ctx(cr)).collect();
-            let ru = match hu.join() {
-                Ok(r) => r,
-                Err(_) => Err(anyhow!("uncond branch-ctx thread panicked")),
-            };
-            (ru, rcs)
-        });
-        let uncond_ctx = ru?;
-        let mut cond_ctxs: Vec<BranchCtx> = Vec::with_capacity(nb);
-        for (i, rc) in rcs.into_iter().enumerate() {
-            cond_ctxs.push(rc?);
-            statses[i].h2d_bytes += 2 * (info.text_len * info.d_text * 4) as u64;
-            statses[i].h2d_calls += 2;
+        // Identical step counts → strict lockstep: every session crosses
+        // every boundary together and they all finish at once.
+        while !sessions[0].is_done() {
+            session::step_many(&mut sessions)?;
         }
-
-        // Batch-shared fused executables and device constants: the same
-        // builders as the sequential path, asked for [B, F, P, C] shapes.
-        let cfg_exec = rt.cfg_combine(&bdims)?;
-        let cfg_scale_dev = rt.upload(&[cfg_scale], &[])?;
-        let stepper = sampler::DeviceStepper::new(&rt, smp.kind(), &bdims)?;
-        let stack_exec = rt.stack(&dims, nb)?;
-        let mut lane_execs = Vec::with_capacity(nb);
-        for i in 0..nb {
-            lane_execs.push(rt.lane(&bdims, i)?);
-        }
-
-        // Initial latents: one upload per request, stacked on device.
-        let mut x_dev = {
-            let mut lane_latents = Vec::with_capacity(nb);
-            for (i, req) in reqs.iter().enumerate() {
-                let mut latent_rng = Rng::from_seed_and_label(req.seed, "latents");
-                let x_init = latent_rng.normal_vec(latent_elems);
-                lane_latents.push(rt.upload(&x_init, &dims)?);
-                statses[i].h2d_bytes += (latent_elems * 4) as u64 + 4 + stepper.setup_h2d_bytes();
-                statses[i].h2d_calls += 2 + stepper.setup_h2d_calls();
-            }
-            let lane_refs: Vec<&DeviceTensor> = lane_latents.iter().collect();
-            stack_exec.run(&lane_refs)?
-        };
-
-        // Shared per-step scalars (identical across compatible requests):
-        // uploaded once per batch, charged as-if-standalone per lane.
-        let t_values: Vec<f32> = (0..steps).map(|i| smp.t_value(i)).collect();
-        let c_steps = m.t_embeds(&t_values)?;
-        let mut coeffs = Vec::with_capacity(steps);
-        let mut coeff_scalars = 0u64;
-        for i in 0..steps {
-            let cf = stepper.upload_coeffs(&smp.step_coeffs(i))?;
-            coeff_scalars += cf.len() as u64;
-            coeffs.push(cf);
-        }
-        for s in statses.iter_mut() {
-            s.h2d_bytes += 4 * steps as u64 + 4 * coeff_scalars;
-            s.h2d_calls += steps as u64 + coeff_scalars;
-        }
-
-        let pols: Vec<Mutex<&mut dyn ReusePolicy>> =
-            policies.iter_mut().map(|p| Mutex::new(p.as_mut())).collect();
-        let mut reuse_maps: Vec<Vec<Vec<bool>>> =
-            (0..nb).map(|_| Vec::with_capacity(steps)).collect();
-
-        let t_start = Instant::now();
-        // One persistent worker per (lane, CFG branch), lane-major order —
-        // the batched generalization of the single-request uncond worker.
-        // Each worker owns its lane-branch cache for the whole loop and
-        // hands it back at join.
-        let caches: Result<Vec<FeatureCache>> = std::thread::scope(|sc| {
-            let mut tx_jobs: Vec<mpsc::Sender<BranchJob>> = Vec::with_capacity(2 * nb);
-            let mut rx_ress: Vec<mpsc::Receiver<Result<BranchRun>>> = Vec::with_capacity(2 * nb);
-            let mut workers = Vec::with_capacity(2 * nb);
-            for lane in 0..nb {
-                for branch in 0..2usize {
-                    let (tx_job, rx_job) = mpsc::channel::<BranchJob>();
-                    let (tx_res, rx_res) = mpsc::channel::<Result<BranchRun>>();
-                    let bctx = if branch == 0 { &cond_ctxs[lane] } else { &uncond_ctx };
-                    let policy_ref = &pols[lane];
-                    let rp = rps[lane];
-                    workers.push(sc.spawn(move || {
-                        let mut cache = FeatureCache::new();
-                        let mut mirror: HostMirror = BTreeMap::new();
-                        while let Ok((step, c, h0)) = rx_job.recv() {
-                            let ctx = StepCtx {
-                                step,
-                                granularity: rp.granularity,
-                                cache_mode: rp.cache_mode,
-                                needs_measure: rp.needs_measure,
-                                c: &c,
-                                h0: &h0,
-                            };
-                            let r = self.run_branch(
-                                &ctx, branch, bctx, &mut cache, &mut mirror, policy_ref, None,
-                            );
-                            let failed = r.is_err();
-                            if tx_res.send(r).is_err() || failed {
-                                break;
-                            }
-                        }
-                        cache
-                    }));
-                    tx_jobs.push(tx_job);
-                    rx_ress.push(rx_res);
-                }
-            }
-
-            // Same errors-break-out-then-join discipline as the
-            // single-request loop: a worker panic must surface as an Err,
-            // never a re-raised panic at scope exit.
-            let mut loop_err: Option<anyhow::Error> = None;
-            {
-                let mut do_step = |step: usize| -> Result<()> {
-                    let t_step = Instant::now();
-                    let c = c_steps[step].clone();
-                    // Per-lane patch embeddings from the stacked latent.
-                    let mut h0s = Vec::with_capacity(nb);
-                    for lane_exec in &lane_execs {
-                        let xl = lane_exec.run(&[&x_dev])?;
-                        h0s.push(Arc::new(m.embed(&xl)?));
-                    }
-                    for lane in 0..nb {
-                        for branch in 0..2usize {
-                            tx_jobs[2 * lane + branch]
-                                .send((step, c.clone(), h0s[lane].clone()))
-                                .map_err(|_| anyhow!("branch worker exited early"))?;
-                        }
-                    }
-                    let mut eps_cond = Vec::with_capacity(nb);
-                    let mut eps_uncond = Vec::with_capacity(nb);
-                    for lane in 0..nb {
-                        let bc = rx_ress[2 * lane]
-                            .recv()
-                            .map_err(|_| anyhow!("cond branch worker disconnected"))??;
-                        let bu = rx_ress[2 * lane + 1]
-                            .recv()
-                            .map_err(|_| anyhow!("uncond branch worker disconnected"))??;
-                        bc.stats.merge_into(&mut statses[lane]);
-                        bu.stats.merge_into(&mut statses[lane]);
-                        reuse_maps[lane].push(bc.decisions);
-                        eps_cond.push(bc.eps);
-                        eps_uncond.push(bu.eps);
-                    }
-                    // One batched CFG combine + one batched sampler step
-                    // advance every resident lane; no latent byte crosses
-                    // the bus.
-                    let ur: Vec<&DeviceTensor> = eps_uncond.iter().collect();
-                    let cr: Vec<&DeviceTensor> = eps_cond.iter().collect();
-                    let u_stack = stack_exec.run(&ur)?;
-                    let c_stack = stack_exec.run(&cr)?;
-                    let eps_b = cfg_exec.run(&[&u_stack, &c_stack, &cfg_scale_dev])?;
-                    x_dev = smp.step_device(&stepper, &x_dev, &eps_b, &coeffs[step])?;
-                    let dt = t_step.elapsed().as_secs_f64();
-                    for s in statses.iter_mut() {
-                        s.per_step_s.push(dt);
-                    }
-                    Ok(())
-                };
-                for step in 0..steps {
-                    if let Err(e) = do_step(step) {
-                        loop_err = Some(e);
-                        break;
-                    }
-                }
-            }
-
-            drop(tx_jobs);
-            drop(rx_ress);
-            let mut caches = Vec::with_capacity(2 * nb);
-            let mut join_err: Option<anyhow::Error> = None;
-            for w in workers {
-                match w.join() {
-                    Ok(cache) => caches.push(cache),
-                    Err(_) => join_err = Some(anyhow!("CFG branch worker panicked")),
-                }
-            }
-            match (loop_err, join_err) {
-                (_, Some(e)) => Err(e),
-                (Some(e), None) => Err(e),
-                (None, None) => Ok(caches),
-            }
-        });
-        let caches = caches?;
-
-        // Final latents: one batched download, split per lane on the host;
-        // each lane is charged its own latent (exactly the standalone
-        // download it would have paid).
-        let mut all = vec![0.0f32; nb * latent_elems];
-        rt.download_into(&x_dev, &mut all)?;
-        let wall = t_start.elapsed().as_secs_f64();
-
-        let mut out = Vec::with_capacity(nb);
-        for (lane, pol) in pols.into_iter().enumerate() {
-            let policy = pol.into_inner().unwrap();
-            let s = &mut statses[lane];
-            s.d2h_bytes += (latent_elems * 4) as u64;
-            s.d2h_calls += 1;
-            s.wall_s = wall;
-            let cache_cond = &caches[2 * lane];
-            let cache_uncond = &caches[2 * lane + 1];
-            s.cache_peak_bytes = cache_cond.peak_bytes() + cache_uncond.peak_bytes();
-            s.cache_entries_per_layer = cache_cond
-                .entries_per_layer(info.layers)
-                .max(cache_uncond.entries_per_layer(info.layers));
-            let data = all[lane * latent_elems..(lane + 1) * latent_elems].to_vec();
-            out.push(RunResult {
-                latents: HostTensor::new(vec![f, p, c_lat], data),
-                stats: std::mem::take(s),
-                reuse_map: std::mem::take(&mut reuse_maps[lane]),
-                thresholds: policy.thresholds(),
-            });
-        }
-        Ok(out)
-    }
-
-    /// The resident-latent step loop (see module docs §Hot path): the
-    /// latent `x` is a [`DeviceTensor`] for the entire request.
-    #[allow(clippy::too_many_arguments)]
-    fn generate_device(
-        &self,
-        req: &Request,
-        rp: RunParams,
-        smp: Box<dyn Sampler>,
-        branches: [BranchCtx; 2],
-        policy: &mut dyn ReusePolicy,
-        mut observer: Option<&mut dyn StepObserver>,
-        mut stats: RunStats,
-    ) -> Result<RunResult> {
-        let m = &self.model;
-        let info = &m.info;
-        let rt = m.runtime().clone();
-        let [f, p, _d] = m.state_dims();
-        let [_, _, c_lat] = m.latent_dims();
-        let dims = [f, p, c_lat];
-        let latent_elems = f * p * c_lat;
-
-        // Fused per-request executables: CFG combine + the sampler step
-        // (scale / schedule scalars are rank-0 runtime arguments).
-        let cfg_exec = rt.cfg_combine(&dims)?;
-        let cfg_scale_dev = rt.upload(&[rp.cfg_scale], &[])?;
-        stats.h2d_bytes += 4;
-        stats.h2d_calls += 1;
-        let stepper = sampler::DeviceStepper::new(&rt, smp.kind(), &dims)?;
-        stats.h2d_bytes += stepper.setup_h2d_bytes();
-        stats.h2d_calls += stepper.setup_h2d_calls();
-
-        // --- initial latents: uploaded once, resident until the end -------
-        let mut latent_rng = Rng::from_seed_and_label(req.seed, "latents");
-        let x_init = latent_rng.normal_vec(latent_elems);
-        let mut x_dev = rt.upload(&x_init, &dims)?;
-        stats.h2d_bytes += (latent_elems * 4) as u64;
-        stats.h2d_calls += 1;
-
-        // Every t_value and step coefficient is known up front, so the
-        // timestep embeddings and the per-step sampler scalars upload once
-        // at request start (4 bytes per scalar).
-        let t_values: Vec<f32> = (0..rp.steps).map(|i| smp.t_value(i)).collect();
-        let c_steps = m.t_embeds(&t_values)?;
-        stats.h2d_bytes += 4 * rp.steps as u64;
-        stats.h2d_calls += rp.steps as u64;
-        let mut coeffs = Vec::with_capacity(rp.steps);
-        for i in 0..rp.steps {
-            let cf = stepper.upload_coeffs(&smp.step_coeffs(i))?;
-            stats.h2d_bytes += 4 * cf.len() as u64;
-            stats.h2d_calls += cf.len() as u64;
-            coeffs.push(cf);
-        }
-
-        let parallel = observer.is_none();
-        let mut cache_cond = FeatureCache::new();
-        // Host mirrors are a HotPath::Host concern (apply_coarse only
-        // writes them in its Host arm); the resident loop passes empty
-        // scratch maps to satisfy run_branch's shared signature.
-        let mut mirror_scratch: HostMirror = BTreeMap::new();
-        let mut reuse_map: Vec<Vec<bool>> = Vec::with_capacity(rp.steps);
-        let policy_mx = Mutex::new(policy);
-
-        let t_start = Instant::now();
-        // The uncond branch runs on one persistent worker thread per
-        // request, fed per step over a channel; the worker owns the uncond
-        // cache for the whole loop and hands it back at join. (Replaces
-        // the seed-era per-step thread::scope spawn.)
-        let uncond_cache: Result<FeatureCache> = std::thread::scope(|sc| {
-            let (worker, tx_job, rx_res) = if parallel {
-                let (tx_job, rx_job) = mpsc::channel::<BranchJob>();
-                let (tx_res, rx_res) = mpsc::channel::<Result<BranchRun>>();
-                let bctx = &branches[1];
-                let policy_ref = &policy_mx;
-                let handle = sc.spawn(move || {
-                    let mut cache = FeatureCache::new();
-                    let mut mirror: HostMirror = BTreeMap::new();
-                    while let Ok((step, c, h0)) = rx_job.recv() {
-                        let ctx = StepCtx {
-                            step,
-                            granularity: rp.granularity,
-                            cache_mode: rp.cache_mode,
-                            needs_measure: rp.needs_measure,
-                            c: &c,
-                            h0: &h0,
-                        };
-                        let r = self.run_branch(
-                            &ctx, 1, bctx, &mut cache, &mut mirror, policy_ref, None,
-                        );
-                        let failed = r.is_err();
-                        if tx_res.send(r).is_err() || failed {
-                            break;
-                        }
-                    }
-                    cache
-                });
-                (Some(handle), Some(tx_job), Some(rx_res))
-            } else {
-                (None, None, None)
-            };
-            let mut seq_uncond_cache: Option<FeatureCache> =
-                if parallel { None } else { Some(FeatureCache::new()) };
-            let mut seq_uncond_mirror: HostMirror = BTreeMap::new();
-
-            // The step loop proper. Errors break out (instead of `?`-ing
-            // straight out of the scope closure) so the worker is always
-            // joined below — a worker panic must surface as an Err from
-            // generate, not as a re-raised panic at scope exit.
-            let mut loop_err: Option<anyhow::Error> = None;
-            {
-                let mut do_step = |step: usize| -> Result<()> {
-                    let t_step = Instant::now();
-                    let c = c_steps[step].clone();
-                    let h0 = Arc::new(m.embed(&x_dev)?);
-                    // Feed the worker first so both branches overlap.
-                    if let Some(tx) = &tx_job {
-                        tx.send((step, c.clone(), h0.clone()))
-                            .map_err(|_| anyhow!("uncond branch worker exited early"))?;
-                    }
-                    let ctx = StepCtx {
-                        step,
-                        granularity: rp.granularity,
-                        cache_mode: rp.cache_mode,
-                        needs_measure: rp.needs_measure,
-                        c: &c,
-                        h0: &h0,
-                    };
-                    let b_cond = self.run_branch(
-                        &ctx,
-                        0,
-                        &branches[0],
-                        &mut cache_cond,
-                        &mut mirror_scratch,
-                        &policy_mx,
-                        observer.as_deref_mut(),
-                    )?;
-                    let b_uncond = if let Some(rx) = &rx_res {
-                        rx.recv()
-                            .map_err(|_| anyhow!("uncond branch worker disconnected"))??
-                    } else {
-                        let cu = seq_uncond_cache.as_mut().expect("sequential uncond cache");
-                        self.run_branch(
-                            &ctx,
-                            1,
-                            &branches[1],
-                            cu,
-                            &mut seq_uncond_mirror,
-                            &policy_mx,
-                            observer.as_deref_mut(),
-                        )?
-                    };
-                    b_cond.stats.merge_into(&mut stats);
-                    b_uncond.stats.merge_into(&mut stats);
-
-                    // eps = uncond + s·(cond − uncond), then the sampler
-                    // step — both fused; no latent byte crosses the bus.
-                    let eps_dev =
-                        cfg_exec.run(&[&b_uncond.eps, &b_cond.eps, &cfg_scale_dev])?;
-                    x_dev = smp.step_device(&stepper, &x_dev, &eps_dev, &coeffs[step])?;
-
-                    reuse_map.push(b_cond.decisions);
-                    stats.per_step_s.push(t_step.elapsed().as_secs_f64());
-                    Ok(())
-                };
-                for step in 0..rp.steps {
-                    if let Err(e) = do_step(step) {
-                        loop_err = Some(e);
-                        break;
-                    }
-                }
-            }
-
-            // Disconnect, then join: the worker drains and returns its
-            // cache state; a panic inside it becomes the root-cause Err.
-            drop(tx_job);
-            drop(rx_res);
-            let joined: Result<FeatureCache> = match (worker, seq_uncond_cache) {
-                (Some(h), _) => {
-                    h.join().map_err(|_| anyhow!("uncond CFG branch worker panicked"))
-                }
-                (None, Some(cache)) => Ok(cache),
-                (None, None) => Err(anyhow!("no uncond branch state")),
-            };
-            match (loop_err, joined) {
-                (_, Err(e)) => Err(e),
-                (Some(e), Ok(_)) => Err(e),
-                (None, Ok(cache)) => Ok(cache),
-            }
-        });
-        let cache_uncond = uncond_cache?;
-        debug_assert!(
-            mirror_scratch.is_empty(),
-            "host mirrors must stay empty under HotPath::Device"
-        );
-
-        // --- final latent: downloaded exactly once per request -------------
-        let mut x = vec![0.0f32; latent_elems];
-        rt.download_into(&x_dev, &mut x)?;
-        stats.d2h_bytes += (latent_elems * 4) as u64;
-        stats.d2h_calls += 1;
-        stats.wall_s = t_start.elapsed().as_secs_f64();
-
-        stats.cache_peak_bytes = cache_cond.peak_bytes() + cache_uncond.peak_bytes();
-        stats.cache_entries_per_layer = cache_cond
-            .entries_per_layer(info.layers)
-            .max(cache_uncond.entries_per_layer(info.layers));
-        let policy = policy_mx.into_inner().unwrap();
-        Ok(RunResult {
-            latents: HostTensor::new(vec![f, p, c_lat], x),
-            stats,
-            reuse_map,
-            thresholds: policy.thresholds(),
-        })
-    }
-
-    /// The seed-era host-staged step loop, kept verbatim for A/B
-    /// benchmarking and equivalence tests: per-step latent upload, both
-    /// branch epsilons downloaded, host CFG combine, host sampler step,
-    /// sequential branches.
-    #[allow(clippy::too_many_arguments)]
-    fn generate_host(
-        &self,
-        req: &Request,
-        rp: RunParams,
-        smp: Box<dyn Sampler>,
-        branches: [BranchCtx; 2],
-        policy: &mut dyn ReusePolicy,
-        mut observer: Option<&mut dyn StepObserver>,
-        mut stats: RunStats,
-    ) -> Result<RunResult> {
-        let m = &self.model;
-        let info = &m.info;
-        let rt = m.runtime().clone();
-        let [f, p, _d] = m.state_dims();
-        let [_, _, c_lat] = m.latent_dims();
-        let latent_elems = f * p * c_lat;
-
-        let mut latent_rng = Rng::from_seed_and_label(req.seed, "latents");
-        let mut x = latent_rng.normal_vec(latent_elems);
-
-        // One cache (and one measurement mirror) per CFG branch.
-        let mut caches = [FeatureCache::new(), FeatureCache::new()];
-        let mut mirrors: [HostMirror; 2] = [BTreeMap::new(), BTreeMap::new()];
-        let mut reuse_map: Vec<Vec<bool>> = Vec::with_capacity(rp.steps);
-        let mut eps = vec![0.0f32; latent_elems];
-        let mut eps_cond = vec![0.0f32; latent_elems];
-        let policy_mx = Mutex::new(policy);
-
-        let t_start = Instant::now();
-        for step in 0..rp.steps {
-            let t_step = Instant::now();
-            let c = Arc::new(m.t_embed(smp.t_value(step))?);
-            stats.h2d_bytes += 4;
-            stats.h2d_calls += 1;
-            let x_dev = rt.upload(&x, &[f, p, c_lat])?;
-            stats.h2d_bytes += (latent_elems * 4) as u64;
-            stats.h2d_calls += 1;
-            let h0 = Arc::new(m.embed(&x_dev)?);
-            let ctx = StepCtx {
-                step,
-                granularity: rp.granularity,
-                cache_mode: rp.cache_mode,
-                needs_measure: rp.needs_measure,
-                c: &c,
-                h0: &h0,
-            };
-
-            let [cache_cond, cache_uncond] = &mut caches;
-            let [mirror_cond, mirror_uncond] = &mut mirrors;
-            let b_cond = self.run_branch(
-                &ctx,
-                0,
-                &branches[0],
-                cache_cond,
-                mirror_cond,
-                &policy_mx,
-                observer.as_deref_mut(),
-            )?;
-            let b_uncond = self.run_branch(
-                &ctx,
-                1,
-                &branches[1],
-                cache_uncond,
-                mirror_uncond,
-                &policy_mx,
-                observer.as_deref_mut(),
-            )?;
-            b_cond.stats.merge_into(&mut stats);
-            b_uncond.stats.merge_into(&mut stats);
-
-            // Host CFG combine: eps = uncond + s * (cond - uncond)
-            rt.download_into(&b_cond.eps, &mut eps_cond)?;
-            rt.download_into(&b_uncond.eps, &mut eps)?;
-            stats.d2h_bytes += 2 * (latent_elems * 4) as u64;
-            stats.d2h_calls += 2;
-            for i in 0..latent_elems {
-                eps[i] += rp.cfg_scale * (eps_cond[i] - eps[i]);
-            }
-            smp.step(&mut x, &eps, step);
-            reuse_map.push(b_cond.decisions);
-            stats.per_step_s.push(t_step.elapsed().as_secs_f64());
-        }
-
-        stats.wall_s = t_start.elapsed().as_secs_f64();
-        let mirror_bytes: usize = mirrors
-            .iter()
-            .map(|mm| mm.values().map(|v| v.len() * 4).sum::<usize>())
-            .sum();
-        stats.cache_peak_bytes =
-            caches.iter().map(|cc| cc.peak_bytes()).sum::<usize>() + mirror_bytes;
-        stats.cache_entries_per_layer = caches
-            .iter()
-            .map(|cc| cc.entries_per_layer(info.layers))
-            .fold(0.0, f64::max);
-        let policy = policy_mx.into_inner().unwrap();
-        Ok(RunResult {
-            latents: HostTensor::new(vec![f, p, c_lat], x),
-            stats,
-            reuse_map,
-            thresholds: policy.thresholds(),
-        })
-    }
-
-    /// Execute one CFG branch of one step: every (layer, kind[, sublayer])
-    /// site in order, then the final projection to this branch's epsilon.
-    #[allow(clippy::too_many_arguments)]
-    fn run_branch(
-        &self,
-        ctx: &StepCtx<'_>,
-        branch: usize,
-        bctx: &BranchCtx,
-        cache: &mut FeatureCache,
-        mirror: &mut HostMirror,
-        policy: &Mutex<&mut dyn ReusePolicy>,
-        mut observer: Option<&mut dyn StepObserver>,
-    ) -> Result<BranchRun> {
-        let m = &self.model;
-        let info = &m.info;
-        let mut h = ctx.h0.clone();
-        let mut decisions: Vec<bool> = Vec::new();
-        let mut bs = BranchStats::default();
-        let mut obs_scratch: Vec<f32> = Vec::new();
-        for layer in 0..info.layers {
-            for kind in BlockKind::ALL {
-                let (tk, tv) = &bctx.text_kv[layer][kind.index()];
-                match ctx.granularity {
-                    Granularity::Coarse => {
-                        let site = Site { layer, kind, unit: Unit::Block, branch };
-                        let action = policy.lock().unwrap().action(ctx.step, site);
-                        if branch == 0 {
-                            decisions.push(action.is_reuse());
-                        }
-                        h = self.apply_coarse(
-                            ctx, site, action, h, tk, tv, cache, mirror, policy, &mut bs,
-                        )?;
-                    }
-                    Granularity::Fine => {
-                        for sub in SubUnit::ALL {
-                            let site = Site { layer, kind, unit: Unit::Sub(sub), branch };
-                            let action = policy.lock().unwrap().action(ctx.step, site);
-                            if branch == 0 {
-                                decisions.push(action.is_reuse());
-                            }
-                            h = self.apply_fine(ctx, site, action, h, tk, tv, cache, &mut bs)?;
-                        }
-                    }
-                }
-                if let Some(obs) = observer.as_deref_mut() {
-                    if obs.wants_branch(branch) {
-                        obs_scratch.resize(h.element_count(), 0.0);
-                        m.runtime().download_into(&h, &mut obs_scratch)?;
-                        bs.d2h_bytes += (obs_scratch.len() * 4) as u64;
-                        bs.d2h_calls += 1;
-                        obs.on_block(ctx.step, layer, kind, &obs_scratch);
-                    }
-                }
-            }
-        }
-        let eps = m.final_proj(&h, ctx.c)?;
-        Ok(BranchRun { eps, decisions, stats: bs })
-    }
-
-    /// Execute / reuse one coarse (whole-block) site.
-    #[allow(clippy::too_many_arguments)]
-    fn apply_coarse(
-        &self,
-        ctx: &StepCtx<'_>,
-        site: Site,
-        action: Action,
-        h: Arc<DeviceTensor>,
-        tk: &Arc<DeviceTensor>,
-        tv: &Arc<DeviceTensor>,
-        cache: &mut FeatureCache,
-        mirror: &mut HostMirror,
-        policy: &Mutex<&mut dyn ReusePolicy>,
-        bs: &mut BranchStats,
-    ) -> Result<Arc<DeviceTensor>> {
-        let m = &self.model;
-        let key =
-            CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
-
-        let effective = match action {
-            Action::Reuse | Action::ReuseResidual if !cache.contains(&key) => {
-                bs.fallback += 1;
-                Action::Compute { update_cache: true, measure: ctx.needs_measure }
-            }
-            a => a,
-        };
-
-        match effective {
-            Action::Reuse => {
-                bs.reused += 1;
-                let e = cache.get(&key).expect("checked above");
-                Ok(e.device.clone())
-            }
-            Action::ReuseResidual => {
-                bs.reused += 1;
-                let delta = cache.get(&key).expect("checked above").device.clone();
-                Ok(Arc::new(m.add(&h, &delta)?))
-            }
-            Action::Compute { update_cache, measure } => {
-                bs.computed += 1;
-                let out = Arc::new(m.block_full(site.layer, site.kind, &h, ctx.c, tk, tv)?);
-                // Drift is only meaningful against a cached *output*
-                // (Eq. 6 compares features, not residual deltas); a
-                // measuring Delta-mode policy would otherwise observe
-                // MSE(out, out_prev − h_prev) — garbage.
-                if measure && ctx.cache_mode == CacheMode::Output {
-                    match self.hot_path {
-                        HotPath::Device => {
-                            // Eq. 5/6 drift as a fused on-device reduction
-                            // against the cached activation: 4 bytes down.
-                            if let Some(prev) = cache.peek(&key) {
-                                let mse = m.state_mse(&out, &prev.device)?;
-                                bs.d2h_bytes += 4;
-                                bs.d2h_calls += 1;
-                                policy.lock().unwrap().observe_mse(ctx.step, site, mse);
-                            }
-                        }
-                        HotPath::Host => {
-                            // Seed-era staging: pull the whole activation
-                            // down and diff against a host mirror (F·P·D·4
-                            // bytes per measured site — the cost
-                            // fig16_hotpath quantifies).
-                            let mut scratch = vec![0.0f32; out.element_count()];
-                            m.runtime().download_into(&out, &mut scratch)?;
-                            bs.d2h_bytes += (scratch.len() * 4) as u64;
-                            bs.d2h_calls += 1;
-                            if let Some(prev) = mirror.get(&key) {
-                                let mse = mse_f32(&scratch, prev);
-                                policy.lock().unwrap().observe_mse(ctx.step, site, mse);
-                            }
-                            if update_cache {
-                                mirror.insert(key, scratch);
-                            }
-                        }
-                    }
-                }
-                if update_cache {
-                    let dev = match ctx.cache_mode {
-                        CacheMode::Output => out.clone(),
-                        CacheMode::Delta => Arc::new(m.sub(&out, &h)?),
-                    };
-                    cache.put(key, dev, ctx.step);
-                }
-                Ok(out)
-            }
-        }
-    }
-
-    /// Execute / reuse one fine (sublayer) site. Fine policies always cache
-    /// residual deltas.
-    #[allow(clippy::too_many_arguments)]
-    fn apply_fine(
-        &self,
-        ctx: &StepCtx<'_>,
-        site: Site,
-        action: Action,
-        h: Arc<DeviceTensor>,
-        tk: &Arc<DeviceTensor>,
-        tv: &Arc<DeviceTensor>,
-        cache: &mut FeatureCache,
-        bs: &mut BranchStats,
-    ) -> Result<Arc<DeviceTensor>> {
-        let m = &self.model;
-        let Unit::Sub(sub) = site.unit else {
-            return Err(anyhow!("fine path requires sub unit"));
-        };
-        let key =
-            CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
-
-        let effective = match action {
-            Action::Reuse | Action::ReuseResidual if !cache.contains(&key) => {
-                bs.fallback += 1;
-                Action::Compute { update_cache: true, measure: false }
-            }
-            Action::Reuse => Action::ReuseResidual, // fine reuse is delta-based
-            a => a,
-        };
-
-        match effective {
-            Action::ReuseResidual => {
-                bs.reused += 1;
-                let delta = cache.get(&key).expect("checked above").device.clone();
-                Ok(Arc::new(m.add(&h, &delta)?))
-            }
-            Action::Compute { update_cache, .. } => {
-                bs.computed += 1;
-                let out = Arc::new(match sub {
-                    SubUnit::Attn => m.block_attn(site.layer, site.kind, &h, ctx.c)?,
-                    SubUnit::Cross => m.block_cross(site.layer, site.kind, &h, tk, tv)?,
-                    SubUnit::Mlp => m.block_mlp(site.layer, site.kind, &h, ctx.c)?,
-                });
-                if update_cache {
-                    let delta = Arc::new(m.sub(&out, &h)?);
-                    cache.put(key, delta, ctx.step);
-                }
-                Ok(out)
-            }
-            Action::Reuse => unreachable!("mapped to ReuseResidual above"),
-        }
+        sessions.into_iter().map(|s| s.finish()).collect()
     }
 }

@@ -1,0 +1,1215 @@
+//! Step-driven generation sessions — the one denoising-step
+//! implementation behind every generate path.
+//!
+//! A [`Session`] is a started request: its resident latent, per-branch
+//! [`FeatureCache`]s (owned by the session's persistent branch workers),
+//! its reuse policy, the precomputed timestep embeddings and sampler
+//! coefficients for its whole schedule, and a **cursor**. The engine's
+//! public paths are thin drivers over this module:
+//!
+//! * [`crate::engine::Engine::generate`] admits one session and steps it
+//!   to completion (inline-sequential when an observer is attached or
+//!   under [`HotPath::Host`], parallel branch workers otherwise);
+//! * [`crate::engine::Engine::generate_batch`] admits `B` compatible
+//!   sessions and drives them in lockstep through [`step_many`] — the
+//!   ≤1e-6 equivalence oracle for the batched pass;
+//! * the server's continuous scheduler
+//!   (`crate::server`, `scheduler` submodule) admits and retires sessions
+//!   at **step boundaries**, so requests with different step counts, CFG
+//!   scales or policies share device passes without waiting for each
+//!   other.
+//!
+//! # Cohort stepping
+//!
+//! [`step_many`] advances any set of same-(model, bucket, sampler)
+//! sessions one step in one fused device pass. The cohort's latents live
+//! stacked as one `[B, F, P, C]` resident tensor; when membership is
+//! unchanged since the previous step the stacked tensor is **reused**
+//! as-is, when lanes retired it is compacted in one dispatch
+//! ([`crate::runtime::Runtime::regroup`]), and on joins it is restacked
+//! from lane tensors via the existing
+//! [`crate::runtime::Runtime::stack`]/[`crate::runtime::Runtime::lane`]
+//! ops. Each step then runs per-lane patch embeddings, `2B` concurrent
+//! branch sweeps on the sessions' persistent workers, and **one** fused
+//! multi-lane advance (`cohort_rflow_step`/`cohort_ddim_step`) whose
+//! per-lane rank-0 arguments are each session's own CFG scale and the
+//! sampler coefficients at each session's own cursor — which is what lets
+//! mixed `steps`/`cfg_scale` requests share a pass.
+//!
+//! # Policy-free branch workers
+//!
+//! Branch workers never touch the policy. Decisions for step `t` depend
+//! only on observations from steps `< t` (the engine's long-standing
+//! branch-interleaving contract, and policy state is keyed per site), so
+//! the coordinator precomputes the whole step's actions for both CFG
+//! branches before dispatch and applies the returned drift observations
+//! after both branches join. This keeps the policy borrowed at the driver
+//! (no locking on the sweep path) while the workers own their caches for
+//! the session's whole life and are plain `'static` threads that survive
+//! across scheduler calls.
+//!
+//! # Byte model
+//!
+//! A session charges exactly the standalone cost of its request: text
+//! conditioning, CFG scale, sampler setup, the initial latent and the
+//! per-step scalars at admit; 4-byte drift scalars per measured site
+//! while stepping; one final-latent download at [`Session::finish`]. The
+//! former micro-batch "as-if-standalone" byte model is therefore now the
+//! *actual* per-session transfer behavior — per-request [`RunStats`]
+//! meters are unchanged and independent of cohort size.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::cache::{CacheKey, FeatureCache, Unit};
+use crate::config::SamplerKind;
+use crate::model::{BlockKind, LoadedModel, SubUnit};
+use crate::policy::{sites_for, Action, CacheMode, Granularity, ReusePolicy, Site};
+use crate::runtime::{DeviceTensor, Executable, HostTensor};
+use crate::sampler::{self, DeviceCoeffs, DeviceStepper, Sampler};
+use crate::util::prng::Rng;
+use crate::util::stats::mse_f32;
+use crate::workload;
+
+use super::{Engine, HotPath, Request, RunResult, RunStats, StepObserver};
+
+/// Per-branch request context (precomputed cross-attention K/V).
+pub(crate) struct BranchCtx {
+    text_kv: Vec<[(Arc<DeviceTensor>, Arc<DeviceTensor>); 2]>,
+}
+
+/// Precompute one branch's text conditioning (projection + per-layer
+/// cross-attention K/V).
+fn branch_ctx(m: &LoadedModel, raw: &HostTensor) -> Result<BranchCtx> {
+    let text = Arc::new(m.text_proj(raw)?);
+    let mut text_kv = Vec::with_capacity(m.info.layers);
+    for layer in 0..m.info.layers {
+        let mut pair = Vec::with_capacity(2);
+        for kind in BlockKind::ALL {
+            let tk = Arc::new(m.text_k(layer, kind, &text)?);
+            let tv = Arc::new(m.text_v(layer, kind, &text)?);
+            pair.push((tk, tv));
+        }
+        let pair: [(Arc<DeviceTensor>, Arc<DeviceTensor>); 2] =
+            pair.try_into().map_err(|_| anyhow!("kv pair"))?;
+        text_kv.push(pair);
+    }
+    Ok(BranchCtx { text_kv })
+}
+
+/// Request-constant knobs shared by every step of one session.
+#[derive(Clone, Copy)]
+struct RunParams {
+    steps: usize,
+    cfg_scale: f32,
+    granularity: Granularity,
+    cache_mode: CacheMode,
+    needs_measure: bool,
+}
+
+/// Step-constant inputs shared by both branch sweeps.
+struct StepCtx<'a> {
+    step: usize,
+    granularity: Granularity,
+    cache_mode: CacheMode,
+    needs_measure: bool,
+    c: &'a Arc<DeviceTensor>,
+    h0: &'a Arc<DeviceTensor>,
+}
+
+/// Per-branch counters, merged into [`RunStats`] after the branches join.
+#[derive(Debug, Default)]
+struct BranchStats {
+    computed: u64,
+    reused: u64,
+    fallback: u64,
+    d2h_bytes: u64,
+    d2h_calls: u64,
+}
+
+impl BranchStats {
+    fn merge_into(&self, s: &mut RunStats) {
+        s.computed_units += self.computed;
+        s.reused_units += self.reused;
+        s.fallback_units += self.fallback;
+        s.d2h_bytes += self.d2h_bytes;
+        s.d2h_calls += self.d2h_calls;
+    }
+}
+
+/// What one CFG branch produces for one step: its epsilon, counters, and
+/// the drift observations for the coordinator to feed back to the policy.
+struct BranchOut {
+    eps: DeviceTensor,
+    stats: BranchStats,
+    observations: Vec<(Site, f64)>,
+}
+
+/// Host mirrors of measured activations ([`HotPath::Host`] only).
+type HostMirror = BTreeMap<CacheKey, Vec<f32>>;
+
+/// What a branch worker receives per step:
+/// (step, t-embedding, h0, precomputed site actions in sweep order).
+type WorkerJob = (usize, Arc<DeviceTensor>, Arc<DeviceTensor>, Vec<Action>);
+
+/// One persistent policy-free branch executor thread. Owns its
+/// [`FeatureCache`] for the session's whole life and hands it back at
+/// [`BranchWorker::shutdown`]; dropping the worker (error paths) still
+/// disconnects and joins so no thread leaks.
+struct BranchWorker {
+    tx: Option<mpsc::Sender<WorkerJob>>,
+    rx: mpsc::Receiver<Result<BranchOut>>,
+    handle: Option<JoinHandle<FeatureCache>>,
+}
+
+impl BranchWorker {
+    fn spawn(model: Arc<LoadedModel>, bctx: Arc<BranchCtx>, branch: usize, rp: RunParams) -> Self {
+        let (tx_job, rx_job) = mpsc::channel::<WorkerJob>();
+        let (tx_res, rx_res) = mpsc::channel::<Result<BranchOut>>();
+        let handle = std::thread::Builder::new()
+            .name(format!("foresight-session-branch-{branch}"))
+            .spawn(move || {
+                let mut cache = FeatureCache::new();
+                let mut mirror: HostMirror = BTreeMap::new();
+                while let Ok((step, c, h0, actions)) = rx_job.recv() {
+                    let ctx = StepCtx {
+                        step,
+                        granularity: rp.granularity,
+                        cache_mode: rp.cache_mode,
+                        needs_measure: rp.needs_measure,
+                        c: &c,
+                        h0: &h0,
+                    };
+                    let r = sweep_branch(
+                        &model,
+                        HotPath::Device,
+                        &ctx,
+                        branch,
+                        &bctx,
+                        &actions,
+                        &mut cache,
+                        &mut mirror,
+                        None,
+                    );
+                    let failed = r.is_err();
+                    if tx_res.send(r).is_err() || failed {
+                        break;
+                    }
+                }
+                cache
+            })
+            .expect("spawn session branch worker");
+        Self { tx: Some(tx_job), rx: rx_res, handle: Some(handle) }
+    }
+
+    fn send(&self, job: WorkerJob) -> Result<()> {
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("session branch worker already shut down"))?
+            .send(job)
+            .map_err(|_| anyhow!("session branch worker exited early"))
+    }
+
+    fn recv(&self) -> Result<BranchOut> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("session branch worker disconnected"))?
+    }
+
+    /// Disconnect, join, and recover the branch's cache. A panic inside
+    /// the worker surfaces as an `Err`, never a re-raised panic.
+    fn shutdown(&mut self) -> Result<FeatureCache> {
+        self.tx.take();
+        match self.handle.take() {
+            Some(h) => h
+                .join()
+                .map_err(|_| anyhow!("session CFG branch worker panicked")),
+            None => Err(anyhow!("session branch worker already joined")),
+        }
+    }
+}
+
+impl Drop for BranchWorker {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// How a session executes its two CFG branch sweeps.
+enum Exec {
+    /// Two persistent policy-free worker threads (cond, uncond) — the
+    /// device hot path, cohort-capable.
+    Workers([BranchWorker; 2]),
+    /// Sequential sweeps on the caller's thread — observer runs and
+    /// [`HotPath::Host`]; caches and mirrors live in the session.
+    Inline {
+        caches: [FeatureCache; 2],
+        mirrors: [HostMirror; 2],
+    },
+}
+
+/// Where a session's denoising state currently lives.
+enum Latent {
+    /// Device-resident, this session alone (`[F, P, C]`).
+    DeviceOwn(DeviceTensor),
+    /// One lane of a cohort's shared stacked tensor (`[B, F, P, C]`).
+    DeviceStacked { stack: Arc<DeviceTensor>, lane: usize },
+    /// Host-resident (seed-era [`HotPath::Host`] staging).
+    Host(Vec<f32>),
+}
+
+/// Device-path request-constant executables and uploads.
+struct DeviceGear {
+    stepper: DeviceStepper,
+    cfg_exec: Arc<Executable>,
+    cfg_scale_dev: DeviceTensor,
+    /// Timestep embeddings for every step, uploaded at admit.
+    c_steps: Vec<Arc<DeviceTensor>>,
+    /// Sampler step coefficients for every step, uploaded at admit.
+    coeffs: Vec<DeviceCoeffs>,
+}
+
+/// A started generation request (see module docs).
+pub struct Session<'p> {
+    model: Arc<LoadedModel>,
+    hot_path: HotPath,
+    policy: Box<dyn ReusePolicy + 'p>,
+    rp: RunParams,
+    smp: Box<dyn Sampler>,
+    gear: Option<DeviceGear>,
+    exec: Exec,
+    latent: Latent,
+    branches: [Arc<BranchCtx>; 2],
+    /// Decision sites per CFG branch, in sweep order.
+    sites: [Vec<Site>; 2],
+    cursor: usize,
+    stats: RunStats,
+    reuse_map: Vec<Vec<bool>>,
+    dims: [usize; 3],
+    latent_elems: usize,
+    /// Largest cohort this session ever shared a step with (≥ 1).
+    peak_lanes: usize,
+    /// Set on any step error: a failed step may have already swept its
+    /// branches (mutating caches and policy state), so retrying the same
+    /// cursor would double-run `policy.action` and measure drift against
+    /// the just-refreshed cache — silently corrupting decisions instead
+    /// of failing. Poisoned sessions refuse further steps.
+    poisoned: bool,
+    t_start: Instant,
+}
+
+/// What one [`step_many`] call did (scheduler telemetry).
+#[derive(Debug, Clone, Copy)]
+pub struct StepReport {
+    /// Lanes advanced by this pass.
+    pub occupancy: usize,
+    /// True when the resident stack had to be rebuilt or compacted
+    /// (cohort membership changed since the previous step).
+    pub restacked: bool,
+}
+
+impl<'p> Session<'p> {
+    /// Start a request: reset the policy, precompute both branches' text
+    /// conditioning (concurrently), upload the request-constant device
+    /// state, and — on the parallel device path — spawn the two
+    /// persistent branch workers.
+    pub(crate) fn admit_full(
+        engine: &Engine,
+        req: &Request,
+        mut policy: Box<dyn ReusePolicy + 'p>,
+        parallel: bool,
+    ) -> Result<Session<'p>> {
+        let m = engine.model.clone();
+        let info = &m.info;
+        let steps = req.steps.unwrap_or(info.steps);
+        let cfg_scale = req.cfg_scale.unwrap_or(info.cfg_scale) as f32;
+        let smp = sampler::build(info.sampler, &engine.schedule, steps);
+
+        policy.begin_request(info.layers, steps);
+        let mut stats = RunStats { policy: policy.name(), ..Default::default() };
+        let rp = RunParams {
+            steps,
+            cfg_scale,
+            granularity: policy.granularity(),
+            cache_mode: policy.cache_mode(),
+            needs_measure: policy.needs_measurement(),
+        };
+        let sites = [
+            sites_for(info.layers, rp.granularity, 0),
+            sites_for(info.layers, rp.granularity, 1),
+        ];
+
+        // Request-constant conditioning: the two branch contexts are
+        // independent executable chains, so they precompute concurrently.
+        let cond_raw = workload::embed_prompt(&req.prompt, info.d_text, info.text_len);
+        let uncond_raw = HostTensor::zeros(vec![info.text_len, info.d_text]);
+        let (rc, ru) = std::thread::scope(|sc| {
+            let hu = sc.spawn(|| branch_ctx(&m, &uncond_raw));
+            let rc = branch_ctx(&m, &cond_raw);
+            let ru = match hu.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!("uncond branch-ctx thread panicked")),
+            };
+            (rc, ru)
+        });
+        let branches = [Arc::new(rc?), Arc::new(ru?)];
+        stats.h2d_bytes += 2 * (info.text_len * info.d_text * 4) as u64;
+        stats.h2d_calls += 2;
+
+        let [f, p, _d] = m.state_dims();
+        let [_, _, c_lat] = m.latent_dims();
+        let dims = [f, p, c_lat];
+        let latent_elems = f * p * c_lat;
+        let rt = m.runtime().clone();
+
+        let (gear, latent) = match engine.hot_path {
+            HotPath::Device => {
+                let cfg_exec = rt.cfg_combine(&dims)?;
+                let cfg_scale_dev = rt.upload(&[rp.cfg_scale], &[])?;
+                stats.h2d_bytes += 4;
+                stats.h2d_calls += 1;
+                let stepper = DeviceStepper::new(&rt, smp.kind(), &dims)?;
+                stats.h2d_bytes += stepper.setup_h2d_bytes();
+                stats.h2d_calls += stepper.setup_h2d_calls();
+
+                // Initial latent: uploaded once, resident until finish.
+                let mut latent_rng = Rng::from_seed_and_label(req.seed, "latents");
+                let x_init = latent_rng.normal_vec(latent_elems);
+                let x_dev = rt.upload(&x_init, &dims)?;
+                stats.h2d_bytes += (latent_elems * 4) as u64;
+                stats.h2d_calls += 1;
+
+                // Every t_value and step coefficient is known up front, so
+                // the timestep embeddings and per-step sampler scalars
+                // upload once at admit (4 bytes per scalar).
+                let t_values: Vec<f32> = (0..steps).map(|i| smp.t_value(i)).collect();
+                let c_steps = m.t_embeds(&t_values)?;
+                stats.h2d_bytes += 4 * steps as u64;
+                stats.h2d_calls += steps as u64;
+                let mut coeffs = Vec::with_capacity(steps);
+                for i in 0..steps {
+                    let cf = stepper.upload_coeffs(&smp.step_coeffs(i))?;
+                    stats.h2d_bytes += 4 * cf.len() as u64;
+                    stats.h2d_calls += cf.len() as u64;
+                    coeffs.push(cf);
+                }
+                (
+                    Some(DeviceGear { stepper, cfg_exec, cfg_scale_dev, c_steps, coeffs }),
+                    Latent::DeviceOwn(x_dev),
+                )
+            }
+            HotPath::Host => {
+                let mut latent_rng = Rng::from_seed_and_label(req.seed, "latents");
+                (None, Latent::Host(latent_rng.normal_vec(latent_elems)))
+            }
+        };
+
+        let exec = if parallel && engine.hot_path == HotPath::Device {
+            Exec::Workers([
+                BranchWorker::spawn(m.clone(), branches[0].clone(), 0, rp),
+                BranchWorker::spawn(m.clone(), branches[1].clone(), 1, rp),
+            ])
+        } else {
+            Exec::Inline {
+                caches: [FeatureCache::new(), FeatureCache::new()],
+                mirrors: [BTreeMap::new(), BTreeMap::new()],
+            }
+        };
+
+        Ok(Session {
+            model: m,
+            hot_path: engine.hot_path,
+            policy,
+            rp,
+            smp,
+            gear,
+            exec,
+            latent,
+            branches,
+            sites,
+            cursor: 0,
+            stats,
+            reuse_map: Vec::with_capacity(steps),
+            dims,
+            latent_elems,
+            peak_lanes: 1,
+            poisoned: false,
+            t_start: Instant::now(),
+        })
+    }
+
+    /// Total denoising steps in this session's schedule.
+    pub fn steps(&self) -> usize {
+        self.rp.steps
+    }
+
+    /// Next step to execute (== [`Session::steps`] when done).
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.cursor >= self.rp.steps
+    }
+
+    /// Largest cohort this session ever shared a device pass with.
+    pub fn peak_lanes(&self) -> usize {
+        self.peak_lanes
+    }
+
+    /// Precompute both branches' site actions for the current step. Safe
+    /// before the sweeps because decisions for step `t` depend only on
+    /// observations from steps `< t` (module docs §Policy-free workers).
+    fn plan_step(&mut self) -> (Vec<Action>, Vec<Action>, Vec<bool>) {
+        let step = self.cursor;
+        let pol = &mut self.policy;
+        let actions0: Vec<Action> =
+            self.sites[0].iter().map(|site| pol.action(step, *site)).collect();
+        let actions1: Vec<Action> =
+            self.sites[1].iter().map(|site| pol.action(step, *site)).collect();
+        let decisions: Vec<bool> = actions0.iter().map(|a| a.is_reuse()).collect();
+        (actions0, actions1, decisions)
+    }
+
+    /// Feed the branches' drift observations back to the policy (cond
+    /// branch first, then uncond — per-site state makes the cross-branch
+    /// order immaterial, see the engine docs' interleaving argument).
+    fn absorb(&mut self, oc: &BranchOut, ou: &BranchOut, decisions: Vec<bool>) {
+        let step = self.cursor;
+        for (site, mse) in oc.observations.iter().chain(ou.observations.iter()) {
+            self.policy.observe_mse(step, *site, *mse);
+        }
+        oc.stats.merge_into(&mut self.stats);
+        ou.stats.merge_into(&mut self.stats);
+        self.reuse_map.push(decisions);
+    }
+
+    /// Advance this session one step on its own (no cohort). Drives all
+    /// three historical loop bodies: the resident device path (parallel
+    /// workers or inline for observer runs) and the seed-era host staging.
+    ///
+    /// A step error **poisons** the session (caches/policy state may have
+    /// advanced past the cursor): further steps refuse, and callers
+    /// should drop it rather than retry.
+    pub fn step(&mut self, observer: Option<&mut dyn StepObserver>) -> Result<()> {
+        if self.poisoned {
+            return Err(anyhow!("session poisoned by an earlier step error"));
+        }
+        if self.is_done() {
+            return Err(anyhow!("session already finished its schedule"));
+        }
+        let r = match self.hot_path {
+            HotPath::Device => self.step_device_single(observer),
+            HotPath::Host => self.step_host(observer),
+        };
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    /// One resident-latent step for a lone session: embed, both branch
+    /// sweeps, fused `cfg_combine` → fused sampler step. No latent byte
+    /// crosses the bus.
+    fn step_device_single(&mut self, observer: Option<&mut dyn StepObserver>) -> Result<()> {
+        let t_step = Instant::now();
+        let step = self.cursor;
+
+        // A session left stacked by a shrunken cohort owns its lane again.
+        if let Latent::DeviceStacked { .. } = &self.latent {
+            let own = match &self.latent {
+                Latent::DeviceStacked { stack, lane } => {
+                    let rt = self.model.runtime();
+                    rt.lane(stack.dims(), *lane)?.run(&[stack.as_ref()])?
+                }
+                _ => unreachable!("matched above"),
+            };
+            self.latent = Latent::DeviceOwn(own);
+        }
+
+        let c = self
+            .gear
+            .as_ref()
+            .ok_or_else(|| anyhow!("device step on a host session"))?
+            .c_steps[step]
+            .clone();
+        let (actions0, actions1, decisions) = self.plan_step();
+
+        let x = match &self.latent {
+            Latent::DeviceOwn(t) => t,
+            _ => return Err(anyhow!("device step without a resident latent")),
+        };
+        let h0 = Arc::new(self.model.embed(x)?);
+
+        let (oc, ou) = match &mut self.exec {
+            Exec::Workers(ws) => {
+                if observer.is_some() {
+                    return Err(anyhow!("observer runs require an inline session"));
+                }
+                // Feed both workers before waiting so the branches overlap.
+                ws[0].send((step, c.clone(), h0.clone(), actions0))?;
+                ws[1].send((step, c.clone(), h0.clone(), actions1))?;
+                (ws[0].recv()?, ws[1].recv()?)
+            }
+            Exec::Inline { caches, mirrors } => {
+                let ctx = StepCtx {
+                    step,
+                    granularity: self.rp.granularity,
+                    cache_mode: self.rp.cache_mode,
+                    needs_measure: self.rp.needs_measure,
+                    c: &c,
+                    h0: &h0,
+                };
+                let [cache_c, cache_u] = caches;
+                let [mir_c, mir_u] = mirrors;
+                let mut observer = observer;
+                let oc = sweep_branch(
+                    &self.model,
+                    self.hot_path,
+                    &ctx,
+                    0,
+                    &self.branches[0],
+                    &actions0,
+                    cache_c,
+                    mir_c,
+                    observer.as_deref_mut(),
+                )?;
+                let ou = sweep_branch(
+                    &self.model,
+                    self.hot_path,
+                    &ctx,
+                    1,
+                    &self.branches[1],
+                    &actions1,
+                    cache_u,
+                    mir_u,
+                    observer.as_deref_mut(),
+                )?;
+                (oc, ou)
+            }
+        };
+
+        // eps = uncond + s·(cond − uncond), then the sampler step — both
+        // fused over the resident latent.
+        let next = {
+            let gear = self.gear.as_ref().expect("device gear checked above");
+            let eps = gear.cfg_exec.run(&[&ou.eps, &oc.eps, &gear.cfg_scale_dev])?;
+            let x = match &self.latent {
+                Latent::DeviceOwn(t) => t,
+                _ => unreachable!("materialized above"),
+            };
+            self.smp
+                .step_device(&gear.stepper, x, &eps, &gear.coeffs[step])?
+        };
+        self.latent = Latent::DeviceOwn(next);
+
+        self.absorb(&oc, &ou, decisions);
+        self.stats.per_step_s.push(t_step.elapsed().as_secs_f64());
+        self.cursor += 1;
+        Ok(())
+    }
+
+    /// One seed-era host-staged step, kept verbatim as the A/B oracle:
+    /// per-step latent upload, sequential branches, both epsilons
+    /// downloaded, host CFG combine, host sampler step.
+    fn step_host(&mut self, observer: Option<&mut dyn StepObserver>) -> Result<()> {
+        let t_step = Instant::now();
+        let step = self.cursor;
+        let rt = self.model.runtime().clone();
+
+        let c = Arc::new(self.model.t_embed(self.smp.t_value(step))?);
+        self.stats.h2d_bytes += 4;
+        self.stats.h2d_calls += 1;
+        let x_dev = match &self.latent {
+            Latent::Host(x) => rt.upload(x, &self.dims)?,
+            _ => return Err(anyhow!("host step on a device session")),
+        };
+        self.stats.h2d_bytes += (self.latent_elems * 4) as u64;
+        self.stats.h2d_calls += 1;
+        let h0 = Arc::new(self.model.embed(&x_dev)?);
+
+        let (actions0, actions1, decisions) = self.plan_step();
+        let ctx = StepCtx {
+            step,
+            granularity: self.rp.granularity,
+            cache_mode: self.rp.cache_mode,
+            needs_measure: self.rp.needs_measure,
+            c: &c,
+            h0: &h0,
+        };
+        let Exec::Inline { caches, mirrors } = &mut self.exec else {
+            return Err(anyhow!("host sessions run inline"));
+        };
+        let [cache_c, cache_u] = caches;
+        let [mir_c, mir_u] = mirrors;
+        let mut observer = observer;
+        let oc = sweep_branch(
+            &self.model,
+            HotPath::Host,
+            &ctx,
+            0,
+            &self.branches[0],
+            &actions0,
+            cache_c,
+            mir_c,
+            observer.as_deref_mut(),
+        )?;
+        let ou = sweep_branch(
+            &self.model,
+            HotPath::Host,
+            &ctx,
+            1,
+            &self.branches[1],
+            &actions1,
+            cache_u,
+            mir_u,
+            observer.as_deref_mut(),
+        )?;
+
+        // Host CFG combine: eps = uncond + s·(cond − uncond).
+        let mut eps_cond = vec![0.0f32; self.latent_elems];
+        let mut eps = vec![0.0f32; self.latent_elems];
+        rt.download_into(&oc.eps, &mut eps_cond)?;
+        rt.download_into(&ou.eps, &mut eps)?;
+        self.stats.d2h_bytes += 2 * (self.latent_elems * 4) as u64;
+        self.stats.d2h_calls += 2;
+        for i in 0..self.latent_elems {
+            eps[i] += self.rp.cfg_scale * (eps_cond[i] - eps[i]);
+        }
+        let Latent::Host(x_host) = &mut self.latent else {
+            unreachable!("checked above");
+        };
+        self.smp.step(x_host, &eps, step);
+
+        self.absorb(&oc, &ou, decisions);
+        self.stats.per_step_s.push(t_step.elapsed().as_secs_f64());
+        self.cursor += 1;
+        Ok(())
+    }
+
+    /// Download the final latent (exactly once), recover the branch
+    /// caches from the workers, and assemble the [`RunResult`]. Valid at
+    /// any cursor (the scheduler only calls it on done sessions).
+    pub fn finish(mut self) -> Result<RunResult> {
+        let rt = self.model.runtime().clone();
+        let layers = self.model.info.layers;
+
+        let x: Vec<f32> = match std::mem::replace(&mut self.latent, Latent::Host(Vec::new())) {
+            Latent::DeviceOwn(t) => {
+                let mut out = vec![0.0f32; self.latent_elems];
+                rt.download_into(&t, &mut out)?;
+                self.stats.d2h_bytes += (self.latent_elems * 4) as u64;
+                self.stats.d2h_calls += 1;
+                out
+            }
+            Latent::DeviceStacked { stack, lane } => {
+                let t = rt.lane(stack.dims(), lane)?.run(&[stack.as_ref()])?;
+                let mut out = vec![0.0f32; self.latent_elems];
+                rt.download_into(&t, &mut out)?;
+                self.stats.d2h_bytes += (self.latent_elems * 4) as u64;
+                self.stats.d2h_calls += 1;
+                out
+            }
+            Latent::Host(x) => x,
+        };
+        self.stats.wall_s = self.t_start.elapsed().as_secs_f64();
+
+        let (cache_bytes, entries) = match &mut self.exec {
+            Exec::Workers(ws) => {
+                let cc = ws[0].shutdown()?;
+                let cu = ws[1].shutdown()?;
+                (
+                    cc.peak_bytes() + cu.peak_bytes(),
+                    cc.entries_per_layer(layers).max(cu.entries_per_layer(layers)),
+                )
+            }
+            Exec::Inline { caches, mirrors } => {
+                // Host mirrors count toward the measured footprint (they
+                // stay empty under HotPath::Device).
+                let mirror_bytes: usize = mirrors
+                    .iter()
+                    .map(|mm| mm.values().map(|v| v.len() * 4).sum::<usize>())
+                    .sum();
+                (
+                    caches.iter().map(|c| c.peak_bytes()).sum::<usize>() + mirror_bytes,
+                    caches
+                        .iter()
+                        .map(|c| c.entries_per_layer(layers))
+                        .fold(0.0, f64::max),
+                )
+            }
+        };
+        self.stats.cache_peak_bytes = cache_bytes;
+        self.stats.cache_entries_per_layer = entries;
+
+        let [f, p, c_lat] = self.dims;
+        Ok(RunResult {
+            latents: HostTensor::new(vec![f, p, c_lat], x),
+            stats: std::mem::take(&mut self.stats),
+            reuse_map: std::mem::take(&mut self.reuse_map),
+            thresholds: self.policy.thresholds(),
+        })
+    }
+}
+
+/// Advance every session in the slice one step as one cohort (see module
+/// docs §Cohort stepping). All sessions must share the loaded model and
+/// sampler family, be device-resident with parallel workers, and not be
+/// done; step counts, cursors, CFG scales and policies may differ freely.
+///
+/// An error **poisons every session in the cohort** (a partially-executed
+/// step may have advanced caches and policy state past the cursors):
+/// poisoned sessions refuse further steps, so callers must drop them.
+pub fn step_many<'p>(sessions: &mut [Session<'p>]) -> Result<StepReport> {
+    let mut refs: Vec<&mut Session<'p>> = sessions.iter_mut().collect();
+    step_many_refs(&mut refs)
+}
+
+/// [`step_many`] over a slice of mutable session references (the form the
+/// server's scheduler uses, where sessions live inside per-lane state).
+pub fn step_many_refs<'p>(sessions: &mut [&mut Session<'p>]) -> Result<StepReport> {
+    let r = step_many_inner(sessions);
+    if r.is_err() {
+        for s in sessions.iter_mut() {
+            s.poisoned = true;
+        }
+    }
+    r
+}
+
+fn step_many_inner<'p>(sessions: &mut [&mut Session<'p>]) -> Result<StepReport> {
+    if sessions.is_empty() {
+        return Err(anyhow!("step_many on an empty cohort"));
+    }
+    if sessions.len() == 1 {
+        let restacked = matches!(sessions[0].latent, Latent::DeviceStacked { .. });
+        sessions[0].step(None)?;
+        return Ok(StepReport { occupancy: 1, restacked });
+    }
+
+    let nb = sessions.len();
+    let model = sessions[0].model.clone();
+    let dims = sessions[0].dims;
+    let kind = sessions[0].smp.kind();
+    for s in sessions.iter() {
+        if !Arc::ptr_eq(&s.model, &model) {
+            return Err(anyhow!("step_many: sessions must share one loaded model"));
+        }
+        if s.dims != dims {
+            return Err(anyhow!("step_many: sessions must share one shape bucket"));
+        }
+        if s.smp.kind() != kind {
+            return Err(anyhow!("step_many: sessions must share a sampler family"));
+        }
+        if s.hot_path != HotPath::Device || s.gear.is_none() {
+            return Err(anyhow!("step_many: sessions must be device-resident"));
+        }
+        if !matches!(s.exec, Exec::Workers(_)) {
+            return Err(anyhow!(
+                "step_many: sessions must use parallel branch workers (no observer)"
+            ));
+        }
+        if s.is_done() {
+            return Err(anyhow!("step_many: session already finished its schedule"));
+        }
+        if s.poisoned {
+            return Err(anyhow!("step_many: session poisoned by an earlier step error"));
+        }
+    }
+
+    let rt = model.runtime().clone();
+    let [f, p, c_lat] = dims;
+    let bdims = [nb, f, p, c_lat];
+    let t_step = Instant::now();
+
+    // --- (re)assemble the resident stack ------------------------------
+    // Unchanged membership: reuse the stacked tensor from the previous
+    // step. Shrunken/reordered cohort over the same stack: one fused
+    // regroup dispatch. Otherwise (joins, fresh cohort): restack from
+    // lane tensors via the stack/lane ops.
+    // The shared stack (and each member's lane) when every session sits
+    // in the same stacked tensor; None as soon as any session owns its
+    // latent or sits in a different stack.
+    let same_stack: Option<(Arc<DeviceTensor>, Vec<usize>)> = match &sessions[0].latent {
+        Latent::DeviceStacked { stack, .. } => {
+            let st = stack.clone();
+            sessions
+                .iter()
+                .map(|s| match &s.latent {
+                    Latent::DeviceStacked { stack, lane } if Arc::ptr_eq(stack, &st) => {
+                        Some(*lane)
+                    }
+                    _ => None,
+                })
+                .collect::<Option<Vec<usize>>>()
+                .map(|lanes| (st, lanes))
+        }
+        _ => None,
+    };
+    let (stack_arc, restacked): (Arc<DeviceTensor>, bool) = if let Some((st, lanes)) = same_stack
+    {
+        if st.dims()[0] == nb && lanes.iter().enumerate().all(|(i, &l)| l == i) {
+            // Membership unchanged since the previous step: reuse as-is.
+            (st, false)
+        } else {
+            // Shrunken/permuted cohort over one stack: one fused
+            // compaction dispatch.
+            let compacted = rt.regroup(st.dims(), &lanes)?.run(&[st.as_ref()])?;
+            (Arc::new(compacted), true)
+        }
+    } else {
+        let mut extracted: Vec<Option<DeviceTensor>> = Vec::with_capacity(nb);
+        for s in sessions.iter() {
+            extracted.push(match &s.latent {
+                Latent::DeviceStacked { stack, lane } => {
+                    Some(rt.lane(stack.dims(), *lane)?.run(&[stack.as_ref()])?)
+                }
+                Latent::DeviceOwn(_) => None,
+                Latent::Host(_) => {
+                    return Err(anyhow!("step_many: host session in a device cohort"))
+                }
+            });
+        }
+        let refs: Vec<&DeviceTensor> = sessions
+            .iter()
+            .zip(&extracted)
+            .map(|(s, e)| match (&s.latent, e) {
+                (Latent::DeviceOwn(t), _) => t,
+                (_, Some(t)) => t,
+                _ => unreachable!("stacked lanes were extracted above"),
+            })
+            .collect();
+        (Arc::new(rt.stack(&dims, nb)?.run(&refs)?), true)
+    };
+
+    // --- per-lane patch embeddings from the stacked latent ------------
+    let mut h0s = Vec::with_capacity(nb);
+    for i in 0..nb {
+        let xi = rt.lane(&bdims, i)?.run(&[stack_arc.as_ref()])?;
+        h0s.push(Arc::new(model.embed(&xi)?));
+    }
+
+    // --- dispatch all 2B branch sweeps, then collect in lane order ----
+    let mut decisions_all: Vec<Vec<bool>> = Vec::with_capacity(nb);
+    for (i, s) in sessions.iter_mut().enumerate() {
+        let step = s.cursor;
+        let c = s.gear.as_ref().expect("validated device gear").c_steps[step].clone();
+        let (actions0, actions1, decisions) = s.plan_step();
+        decisions_all.push(decisions);
+        let Exec::Workers(ws) = &mut s.exec else {
+            unreachable!("validated workers");
+        };
+        ws[0].send((step, c.clone(), h0s[i].clone(), actions0))?;
+        ws[1].send((step, c, h0s[i].clone(), actions1))?;
+    }
+    let mut eps_c: Vec<DeviceTensor> = Vec::with_capacity(nb);
+    let mut eps_u: Vec<DeviceTensor> = Vec::with_capacity(nb);
+    for (i, s) in sessions.iter_mut().enumerate() {
+        let (oc, ou) = {
+            let Exec::Workers(ws) = &mut s.exec else {
+                unreachable!("validated workers");
+            };
+            (ws[0].recv()?, ws[1].recv()?)
+        };
+        s.absorb(&oc, &ou, std::mem::take(&mut decisions_all[i]));
+        eps_c.push(oc.eps);
+        eps_u.push(ou.eps);
+    }
+
+    // --- one fused multi-lane advance ---------------------------------
+    // Per-lane scalars: each session's CFG scale and the coefficients at
+    // each session's own cursor — mixed schedules share the dispatch.
+    let stack_exec = rt.stack(&dims, nb)?;
+    let u_refs: Vec<&DeviceTensor> = eps_u.iter().collect();
+    let c_refs: Vec<&DeviceTensor> = eps_c.iter().collect();
+    let u_stack = stack_exec.run(&u_refs)?;
+    let c_stack = stack_exec.run(&c_refs)?;
+    let new_stack = {
+        let mut args: Vec<&DeviceTensor> = vec![stack_arc.as_ref(), &u_stack, &c_stack];
+        for s in sessions.iter() {
+            let gear = s.gear.as_ref().expect("validated device gear");
+            args.push(&gear.cfg_scale_dev);
+            for t in gear.coeffs[s.cursor].scalars() {
+                args.push(t);
+            }
+        }
+        let exec = match kind {
+            SamplerKind::Rflow => rt.cohort_rflow_step(&dims, nb)?,
+            SamplerKind::Ddim => {
+                let (lo, hi) = sessions[0]
+                    .gear
+                    .as_ref()
+                    .expect("validated device gear")
+                    .stepper
+                    .clamp_bounds()
+                    .ok_or_else(|| anyhow!("ddim stepper missing clamp bounds"))?;
+                args.push(lo);
+                args.push(hi);
+                rt.cohort_ddim_step(&dims, nb)?
+            }
+        };
+        Arc::new(exec.run(&args)?)
+    };
+
+    let dt = t_step.elapsed().as_secs_f64();
+    for (i, s) in sessions.iter_mut().enumerate() {
+        s.latent = Latent::DeviceStacked { stack: new_stack.clone(), lane: i };
+        s.stats.per_step_s.push(dt);
+        s.cursor += 1;
+        s.peak_lanes = s.peak_lanes.max(nb);
+    }
+    Ok(StepReport { occupancy: nb, restacked })
+}
+
+/// Borrow-bridging adapter: lets `Engine::generate`/`generate_batch` keep
+/// their `&mut dyn ReusePolicy` signatures while sessions own a boxed
+/// policy — every call forwards to (and mutates) the caller's instance.
+pub(crate) struct PolicyShim<'a>(pub(crate) &'a mut dyn ReusePolicy);
+
+impl ReusePolicy for PolicyShim<'_> {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    fn granularity(&self) -> Granularity {
+        self.0.granularity()
+    }
+    fn cache_mode(&self) -> CacheMode {
+        self.0.cache_mode()
+    }
+    fn needs_measurement(&self) -> bool {
+        self.0.needs_measurement()
+    }
+    fn begin_request(&mut self, layers: usize, steps: usize) {
+        self.0.begin_request(layers, steps)
+    }
+    fn action(&mut self, step: usize, site: Site) -> Action {
+        self.0.action(step, site)
+    }
+    fn observe_mse(&mut self, step: usize, site: Site, mse: f64) {
+        self.0.observe_mse(step, site, mse)
+    }
+    fn thresholds(&self) -> Option<BTreeMap<(usize, BlockKind, usize), f64>> {
+        self.0.thresholds()
+    }
+}
+
+/// Execute one CFG branch of one step: every (layer, kind[, sublayer])
+/// site in order — driven by the precomputed `actions` — then the final
+/// projection to this branch's epsilon. Drift MSEs are *collected*, not
+/// fed to the policy (the coordinator applies them after the join).
+#[allow(clippy::too_many_arguments)]
+fn sweep_branch(
+    m: &LoadedModel,
+    hot_path: HotPath,
+    ctx: &StepCtx<'_>,
+    branch: usize,
+    bctx: &BranchCtx,
+    actions: &[Action],
+    cache: &mut FeatureCache,
+    mirror: &mut HostMirror,
+    mut observer: Option<&mut dyn StepObserver>,
+) -> Result<BranchOut> {
+    let info = &m.info;
+    let mut h = ctx.h0.clone();
+    let mut bs = BranchStats::default();
+    let mut observations: Vec<(Site, f64)> = Vec::new();
+    let mut obs_scratch: Vec<f32> = Vec::new();
+    let mut ai = 0usize;
+    for layer in 0..info.layers {
+        for kind in BlockKind::ALL {
+            let (tk, tv) = &bctx.text_kv[layer][kind.index()];
+            match ctx.granularity {
+                Granularity::Coarse => {
+                    let site = Site { layer, kind, unit: Unit::Block, branch };
+                    let action = *actions
+                        .get(ai)
+                        .ok_or_else(|| anyhow!("branch action list too short"))?;
+                    ai += 1;
+                    h = apply_coarse(
+                        m,
+                        hot_path,
+                        ctx,
+                        site,
+                        action,
+                        h,
+                        tk,
+                        tv,
+                        cache,
+                        mirror,
+                        &mut observations,
+                        &mut bs,
+                    )?;
+                }
+                Granularity::Fine => {
+                    for sub in SubUnit::ALL {
+                        let site = Site { layer, kind, unit: Unit::Sub(sub), branch };
+                        let action = *actions
+                            .get(ai)
+                            .ok_or_else(|| anyhow!("branch action list too short"))?;
+                        ai += 1;
+                        h = apply_fine(m, ctx, site, action, h, tk, tv, cache, &mut bs)?;
+                    }
+                }
+            }
+            if let Some(obs) = observer.as_deref_mut() {
+                if obs.wants_branch(branch) {
+                    obs_scratch.resize(h.element_count(), 0.0);
+                    m.runtime().download_into(&h, &mut obs_scratch)?;
+                    bs.d2h_bytes += (obs_scratch.len() * 4) as u64;
+                    bs.d2h_calls += 1;
+                    obs.on_block(ctx.step, layer, kind, &obs_scratch);
+                }
+            }
+        }
+    }
+    if ai != actions.len() {
+        return Err(anyhow!(
+            "branch action list length mismatch: {} given, {} consumed",
+            actions.len(),
+            ai
+        ));
+    }
+    let eps = m.final_proj(&h, ctx.c)?;
+    Ok(BranchOut { eps, stats: bs, observations })
+}
+
+/// Execute / reuse one coarse (whole-block) site.
+#[allow(clippy::too_many_arguments)]
+fn apply_coarse(
+    m: &LoadedModel,
+    hot_path: HotPath,
+    ctx: &StepCtx<'_>,
+    site: Site,
+    action: Action,
+    h: Arc<DeviceTensor>,
+    tk: &Arc<DeviceTensor>,
+    tv: &Arc<DeviceTensor>,
+    cache: &mut FeatureCache,
+    mirror: &mut HostMirror,
+    observations: &mut Vec<(Site, f64)>,
+    bs: &mut BranchStats,
+) -> Result<Arc<DeviceTensor>> {
+    let key =
+        CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
+
+    let effective = match action {
+        Action::Reuse | Action::ReuseResidual if !cache.contains(&key) => {
+            bs.fallback += 1;
+            Action::Compute { update_cache: true, measure: ctx.needs_measure }
+        }
+        a => a,
+    };
+
+    match effective {
+        Action::Reuse => {
+            bs.reused += 1;
+            let e = cache.get(&key).expect("checked above");
+            Ok(e.device.clone())
+        }
+        Action::ReuseResidual => {
+            bs.reused += 1;
+            let delta = cache.get(&key).expect("checked above").device.clone();
+            Ok(Arc::new(m.add(&h, &delta)?))
+        }
+        Action::Compute { update_cache, measure } => {
+            bs.computed += 1;
+            let out = Arc::new(m.block_full(site.layer, site.kind, &h, ctx.c, tk, tv)?);
+            // Drift is only meaningful against a cached *output* (Eq. 6
+            // compares features, not residual deltas).
+            if measure && ctx.cache_mode == CacheMode::Output {
+                match hot_path {
+                    HotPath::Device => {
+                        // Eq. 5/6 drift as a fused on-device reduction
+                        // against the cached activation: 4 bytes down.
+                        if let Some(prev) = cache.peek(&key) {
+                            let mse = m.state_mse(&out, &prev.device)?;
+                            bs.d2h_bytes += 4;
+                            bs.d2h_calls += 1;
+                            observations.push((site, mse));
+                        }
+                    }
+                    HotPath::Host => {
+                        // Seed-era staging: pull the whole activation down
+                        // and diff against a host mirror (F·P·D·4 bytes
+                        // per measured site).
+                        let mut scratch = vec![0.0f32; out.element_count()];
+                        m.runtime().download_into(&out, &mut scratch)?;
+                        bs.d2h_bytes += (scratch.len() * 4) as u64;
+                        bs.d2h_calls += 1;
+                        if let Some(prev) = mirror.get(&key) {
+                            observations.push((site, mse_f32(&scratch, prev)));
+                        }
+                        if update_cache {
+                            mirror.insert(key, scratch);
+                        }
+                    }
+                }
+            }
+            if update_cache {
+                let dev = match ctx.cache_mode {
+                    CacheMode::Output => out.clone(),
+                    CacheMode::Delta => Arc::new(m.sub(&out, &h)?),
+                };
+                cache.put(key, dev, ctx.step);
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Execute / reuse one fine (sublayer) site. Fine policies always cache
+/// residual deltas.
+#[allow(clippy::too_many_arguments)]
+fn apply_fine(
+    m: &LoadedModel,
+    ctx: &StepCtx<'_>,
+    site: Site,
+    action: Action,
+    h: Arc<DeviceTensor>,
+    tk: &Arc<DeviceTensor>,
+    tv: &Arc<DeviceTensor>,
+    cache: &mut FeatureCache,
+    bs: &mut BranchStats,
+) -> Result<Arc<DeviceTensor>> {
+    let Unit::Sub(sub) = site.unit else {
+        return Err(anyhow!("fine path requires sub unit"));
+    };
+    let key =
+        CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
+
+    let effective = match action {
+        Action::Reuse | Action::ReuseResidual if !cache.contains(&key) => {
+            bs.fallback += 1;
+            Action::Compute { update_cache: true, measure: false }
+        }
+        Action::Reuse => Action::ReuseResidual, // fine reuse is delta-based
+        a => a,
+    };
+
+    match effective {
+        Action::ReuseResidual => {
+            bs.reused += 1;
+            let delta = cache.get(&key).expect("checked above").device.clone();
+            Ok(Arc::new(m.add(&h, &delta)?))
+        }
+        Action::Compute { update_cache, .. } => {
+            bs.computed += 1;
+            let out = Arc::new(match sub {
+                SubUnit::Attn => m.block_attn(site.layer, site.kind, &h, ctx.c)?,
+                SubUnit::Cross => m.block_cross(site.layer, site.kind, &h, tk, tv)?,
+                SubUnit::Mlp => m.block_mlp(site.layer, site.kind, &h, ctx.c)?,
+            });
+            if update_cache {
+                let delta = Arc::new(m.sub(&out, &h)?);
+                cache.put(key, delta, ctx.step);
+            }
+            Ok(out)
+        }
+    }
+}

@@ -54,27 +54,37 @@
 //! latents matching to ≤1e-6; `benches/fig16_hotpath.rs` covers the
 //! measurement-traffic half of that story per policy.
 //!
-//! # Micro-batched serving
+//! # Serving: continuous step-level batching
 //!
-//! Under load the [`server`]'s workers don't dispatch requests one at a
-//! time: on dequeue they coalesce up to `max_batch` *compatible* pending
-//! `generate` jobs — same model, bucket, policy spec, steps and CFG scale,
-//! keyed by the scheduler's `BatchKey` over the raw wire fields — within a
-//! short gather window and run them as **one**
-//! [`engine::Engine::generate_batch`] pass. The engine stacks the
-//! per-request resident latents along a leading batch axis
-//! ([`runtime::Runtime::stack`] / [`runtime::Runtime::lane`]), advances
-//! all lanes with a single batched `cfg_combine` and a single batched
-//! sampler step per denoising step (the fused-op cache is
-//! batch-shape-aware), and keeps every request's reuse policy, feature
-//! caches and Eq. 5/6 drift observations fully per-lane — a request
-//! reusing a block while its neighbor recomputes is the designed case,
-//! and per-request latents match the sequential device path to ≤1e-6.
-//! Responses echo the `batch_size` they were served at;
-//! `benches/fig18_batching.rs` asserts the equivalence, the unchanged
-//! per-request transfer budget, and the per-request wall-clock win at
-//! B=4. See [`engine`] §Micro-batching for the batched byte model and
-//! [`server`] §Batch scheduler for the compatibility rule.
+//! Every generate path is a thin driver over **sessions**
+//! ([`engine::session::Session`]): a started request holding its resident
+//! latent, per-branch caches (owned by two persistent policy-free branch
+//! workers), policy state, precomputed per-step scalars, and a cursor.
+//! [`engine::session::step_many`] advances any set of
+//! same-(model, bucket, sampler) sessions one denoising step in one fused
+//! device pass: the cohort's latents live stacked on device
+//! ([`runtime::Runtime::stack`] / [`runtime::Runtime::lane`], compacted in
+//! one dispatch by [`runtime::Runtime::regroup`] when lanes retire, and
+//! the stacked tensor is reused across steps while membership holds), and
+//! the multi-lane advance takes each session's **own** CFG scale and
+//! sampler coefficients as per-lane rank-0 arguments — so requests with
+//! different step counts, CFG scales and policies share passes.
+//!
+//! The [`server`] batches **continuously**: a worker never waits a gather
+//! window out (an empty queue parks on a condvar); new compatible
+//! requests join the in-flight cohort at the next step boundary up to
+//! `max_batch`, and finished lanes retire and answer immediately instead
+//! of waiting for batchmates. Responses echo `batch_size` (the largest
+//! cohort the request shared a pass with), and the `stats` op exposes
+//! `lanes_active`, per-step occupancy, `joins`/`retires`/`regroups`.
+//! Per-request [`engine::RunStats`] transfer meters report the standalone
+//! byte cost regardless of cohort size (the session byte model).
+//! [`engine::Engine::generate_batch`] survives as the lockstep
+//! equivalence oracle: `benches/fig18_batching.rs` asserts ≤1e-6 latents
+//! and unchanged budgets, and `benches/fig20_continuous.rs` replays
+//! staggered mixed-step arrivals to assert latency/throughput is no worse
+//! than the retired gather-window discipline. See [`engine`] §Sessions
+//! and [`server`] §Continuous batching.
 //!
 //! # Autotune
 //!

@@ -124,12 +124,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt(
             "max-batch",
             "4",
-            "max compatible generates coalesced per engine pass (1 disables)",
+            "max sessions sharing one cohort's device pass (1 disables)",
+        )
+        .opt(
+            "admit-ms",
+            "",
+            "wait before a fresh cohort's first step for batchmates, ms (default 0 = step immediately; late arrivals join at step boundaries)",
         )
         .opt(
             "gather-ms",
-            "2",
-            "batch gather window in milliseconds (0 = only already-queued jobs)",
+            "",
+            "DEPRECATED alias for --admit-ms (the lockstep gather window is gone)",
         )
         .opt(
             "profiles",
@@ -162,6 +167,33 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Some(Arc::new(store))
         }
     };
+    // `--gather-ms` survives as a deprecated alias: the continuous
+    // scheduler has no lockstep gather window, so its value maps onto the
+    // fresh-cohort admission window. Both flags default to empty so an
+    // *explicit* `--admit-ms` (including `--admit-ms 0`) always wins over
+    // the alias.
+    let admit_ms = match (p.get("admit-ms"), p.get("gather-ms")) {
+        ("", "") => 0,
+        (explicit, "") => explicit
+            .parse()
+            .map_err(|_| anyhow!("--admit-ms: expected integer, got '{explicit}'"))?,
+        (explicit, _legacy) if !explicit.is_empty() => {
+            eprintln!("warning: --gather-ms is deprecated and ignored because --admit-ms is set");
+            explicit
+                .parse()
+                .map_err(|_| anyhow!("--admit-ms: expected integer, got '{explicit}'"))?
+        }
+        (_, legacy) => {
+            let legacy: u64 = legacy
+                .parse()
+                .map_err(|_| anyhow!("--gather-ms: expected integer, got '{legacy}'"))?;
+            eprintln!(
+                "warning: --gather-ms is deprecated; treating it as --admit-ms {legacy} \
+                 (requests now also join in-flight batches at step boundaries)"
+            );
+            legacy
+        }
+    };
     let registry = Arc::new(EngineRegistry::load(rt, &manifest, &pairs)?);
     let server = Server::start(
         registry,
@@ -169,7 +201,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             addr: p.get("addr").to_string(),
             workers: p.get_usize("workers").map_err(|e| anyhow!(e))?,
             max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?,
-            gather_window_ms: p.get_u64("gather-ms").map_err(|e| anyhow!(e))?,
+            admit_window_ms: admit_ms,
             profiles,
             ..ServerConfig::default()
         },

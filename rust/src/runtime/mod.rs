@@ -597,6 +597,182 @@ impl Runtime {
         Ok(exec)
     }
 
+    /// Advance `batch` stacked rflow lanes in **one** fused dispatch, with
+    /// per-lane scalars: for each lane `i`,
+    /// `x'_i = dt_i·(u_i + s_i·(c_i − u_i)) + x_i` — the CFG combine and
+    /// Euler update of the single-lane path, applied per lane so a cohort
+    /// of sessions at *different* schedule cursors / CFG scales still
+    /// shares one device pass. Args: `x`, `u`, `c` (each
+    /// `[batch, dims...]`), then `(s_i, dt_i)` rank-0 pairs lane-major
+    /// (arity `3 + 2·batch`). Built from slice/concat + elementwise ops,
+    /// so each lane's arithmetic is the same f32 op sequence as
+    /// `cfg_combine` + `axpy` on that lane alone.
+    pub fn cohort_rflow_step(&self, dims: &[usize], batch: usize) -> Result<Arc<Executable>> {
+        self.cohort_step("rflow", dims, batch)
+    }
+
+    /// Advance `batch` stacked eta-0 DDIM lanes in one fused dispatch with
+    /// per-lane scalars. Args: `x`, `u`, `c` (each `[batch, dims...]`),
+    /// then per lane `(s_i, sqrt_at_i, sqrt_1mat_i, sqrt_aprev_i,
+    /// sqrt_1maprev_i)` lane-major, then the shared clamp bounds
+    /// `(lo, hi)` (arity `3 + 5·batch + 2`). Per-lane op order mirrors
+    /// [`Runtime::ddim_step`] exactly.
+    pub fn cohort_ddim_step(&self, dims: &[usize], batch: usize) -> Result<Arc<Executable>> {
+        self.cohort_step("ddim", dims, batch)
+    }
+
+    fn cohort_step(&self, family: &str, dims: &[usize], batch: usize) -> Result<Arc<Executable>> {
+        if batch == 0 {
+            return Err(anyhow!("cohort step needs at least one lane"));
+        }
+        let key = (format!("cohort_{family}{batch}"), dims.to_vec());
+        if let Some(e) = self.fused.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let b = xla::XlaBuilder::new(&format!("fused_cohort_{family}{batch}"));
+        let err = |stage: &str, e| anyhow!("fused cohort_{family} {stage}: {e:?}");
+        let mut bdims: Vec<i64> = vec![batch as i64];
+        bdims.extend(dims.iter().map(|&d| d as i64));
+        let param = |i: i64, pdims: &[i64], name: &str| {
+            b.parameter(i, xla::ElementType::F32, pdims, name)
+                .map_err(|e| anyhow!("fused cohort_{family} param {name}: {e:?}"))
+        };
+        let x = param(0, &bdims, "x")?;
+        let u = param(1, &bdims, "u")?;
+        let c = param(2, &bdims, "c")?;
+        let per_lane = match family {
+            "rflow" => 2usize,
+            "ddim" => 5usize,
+            other => return Err(anyhow!("unknown cohort step family {other}")),
+        };
+        // Per-lane rank-0 scalar parameters, lane-major.
+        let mut scalars = Vec::with_capacity(batch * per_lane);
+        for lane in 0..batch {
+            for k in 0..per_lane {
+                let idx = (3 + lane * per_lane + k) as i64;
+                scalars.push(param(idx, &[], &format!("s{lane}_{k}"))?);
+            }
+        }
+        // Shared trailing DDIM clamp bounds.
+        let bounds = if family == "ddim" {
+            let base = (3 + batch * per_lane) as i64;
+            Some((param(base, &[], "clamp_lo")?, param(base + 1, &[], "clamp_hi")?))
+        } else {
+            None
+        };
+        let arity = 3 + batch * per_lane + if bounds.is_some() { 2 } else { 0 };
+
+        let mut parts = Vec::with_capacity(batch);
+        for lane in 0..batch {
+            let (lo_i, hi_i) = (lane as i64, lane as i64 + 1);
+            let xi = x.slice_in_dim(lo_i, hi_i, 1, 0).map_err(|e| err("slice x", e))?;
+            let ui = u.slice_in_dim(lo_i, hi_i, 1, 0).map_err(|e| err("slice u", e))?;
+            let ci = c.slice_in_dim(lo_i, hi_i, 1, 0).map_err(|e| err("slice c", e))?;
+            let s = &scalars[lane * per_lane..(lane + 1) * per_lane];
+            // CFG combine, same op order as `cfg_combine`.
+            let diff = ci.sub_(&ui).map_err(|e| err("cfg sub", e))?;
+            let scaled = diff.mul_(&s[0]).map_err(|e| err("cfg scale", e))?;
+            let eps = ui.add_(&scaled).map_err(|e| err("cfg add", e))?;
+            let next = match family {
+                "rflow" => {
+                    // Same op order as `axpy(eps, x, dt)`.
+                    let ax = eps.mul_(&s[1]).map_err(|e| err("axpy mul", e))?;
+                    ax.add_(&xi).map_err(|e| err("axpy add", e))?
+                }
+                _ => {
+                    // Same op order as `ddim_step`.
+                    let (lo, hi) = bounds.as_ref().expect("ddim bounds");
+                    let noise = eps.mul_(&s[2]).map_err(|e| err("noise", e))?;
+                    let num = xi.sub_(&noise).map_err(|e| err("x0 numerator", e))?;
+                    let x0 = num.div_(&s[1]).map_err(|e| err("x0 divide", e))?;
+                    let x0 = x0.max_(lo).map_err(|e| err("clamp lo", e))?;
+                    let x0 = x0.min_(hi).map_err(|e| err("clamp hi", e))?;
+                    let signal = x0.mul_(&s[3]).map_err(|e| err("signal", e))?;
+                    let renoise = eps.mul_(&s[4]).map_err(|e| err("renoise", e))?;
+                    signal.add_(&renoise).map_err(|e| err("add", e))?
+                }
+            };
+            parts.push(next);
+        }
+        let root = if batch == 1 {
+            parts.pop().expect("exactly one lane")
+        } else {
+            let (first, rest) = parts.split_first().expect("batch >= 2");
+            first.concat_in_dim(rest, 0).map_err(|e| err("concat", e))?
+        };
+        let comp = root.build().map_err(|e| err("build", e))?;
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile fused_cohort_{family}{batch}: {e:?}"))?;
+        let exec = Arc::new(Executable {
+            name: format!("fused_cohort_{family}{batch}{dims:?}"),
+            exe: Shared(exe),
+            arity,
+            stats: ExecStats::default(),
+        });
+        self.fused.lock().unwrap().insert(key, exec.clone());
+        Ok(exec)
+    }
+
+    /// Regroup (compact / permute) the lanes of a `[batch, dims...]`
+    /// stacked tensor in **one** dispatch: output lane `j` is input lane
+    /// `keep[j]`, result `[keep.len(), dims...]`. The continuous scheduler
+    /// uses this when a lane retires mid-cohort: the survivors' stacked
+    /// state compacts without round-tripping each lane through
+    /// [`Runtime::lane`] + [`Runtime::stack`] (one dispatch instead of
+    /// `batch + 1`). Pure device-side data movement.
+    pub fn regroup(&self, batched_dims: &[usize], keep: &[usize]) -> Result<Arc<Executable>> {
+        if batched_dims.is_empty() || keep.is_empty() {
+            return Err(anyhow!("regroup needs a batched tensor and at least one lane"));
+        }
+        let batch = batched_dims[0];
+        if let Some(&bad) = keep.iter().find(|&&i| i >= batch) {
+            return Err(anyhow!("regroup lane {bad} out of range for batch {batch}"));
+        }
+        let key = (format!("regroup{keep:?}"), batched_dims.to_vec());
+        if let Some(e) = self.fused.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let b = xla::XlaBuilder::new("fused_regroup");
+        let idims: Vec<i64> = batched_dims.iter().map(|&d| d as i64).collect();
+        let x = b
+            .parameter(0, xla::ElementType::F32, &idims, "x")
+            .map_err(|e| anyhow!("fused regroup param x: {e:?}"))?;
+        let mut parts = Vec::with_capacity(keep.len());
+        for &i in keep {
+            parts.push(
+                x.slice_in_dim(i as i64, i as i64 + 1, 1, 0)
+                    .map_err(|e| anyhow!("fused regroup slice lane {i}: {e:?}"))?,
+            );
+        }
+        let root = if parts.len() == 1 {
+            parts.pop().expect("exactly one lane")
+        } else {
+            let (first, rest) = parts.split_first().expect("len >= 2");
+            first
+                .concat_in_dim(rest, 0)
+                .map_err(|e| anyhow!("fused regroup concat: {e:?}"))?
+        };
+        let comp = root
+            .build()
+            .map_err(|e| anyhow!("fused regroup build: {e:?}"))?;
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile fused_regroup: {e:?}"))?;
+        let exec = Arc::new(Executable {
+            name: format!("fused_regroup{keep:?}{batched_dims:?}"),
+            exe: Shared(exe),
+            arity: 1,
+            stats: ExecStats::default(),
+        });
+        self.fused.lock().unwrap().insert(key, exec.clone());
+        Ok(exec)
+    }
+
     /// Slice lane `index` out of a `[batch, dims...]`-shaped tensor as a
     /// `dims...`-shaped tensor (args: `x`) — the inverse of
     /// [`Runtime::stack`], used per step to feed each request's resident
@@ -882,6 +1058,166 @@ mod tests {
         assert!(rt.stack(&[2], 0).is_err());
         assert!(rt.lane(&[2, 4], 2).is_err(), "lane index must be < batch");
         assert!(rt.lane(&[], 0).is_err());
+    }
+
+    #[test]
+    fn cohort_rflow_step_matches_per_lane_ops() {
+        // One fused cohort dispatch with per-lane (scale, dt) must equal
+        // chaining cfg_combine + axpy on each lane alone — the invariant
+        // that lets sessions at different cursors share a device pass.
+        let rt = Runtime::cpu().unwrap();
+        let dims = [2usize, 3];
+        let n = 6;
+        let batch = 3;
+        let lanes_x: Vec<Vec<f32>> = (0..batch)
+            .map(|l| (0..n).map(|i| (l * n + i) as f32 * 0.25 - 1.0).collect())
+            .collect();
+        let lanes_u: Vec<Vec<f32>> = (0..batch)
+            .map(|l| (0..n).map(|i| ((l + i) % 5) as f32 * 0.5 - 1.0).collect())
+            .collect();
+        let lanes_c: Vec<Vec<f32>> = (0..batch)
+            .map(|l| (0..n).map(|i| ((l * 2 + i) % 7) as f32 * 0.3 - 0.9).collect())
+            .collect();
+        let scales = [7.5f32, 1.0, 3.25];
+        let dts = [-0.1f32, -0.4, -0.02];
+
+        let up = |v: &Vec<f32>| rt.upload(v, &dims).unwrap();
+        let dx: Vec<_> = lanes_x.iter().map(up).collect();
+        let du: Vec<_> = lanes_u.iter().map(up).collect();
+        let dc: Vec<_> = lanes_c.iter().map(up).collect();
+        let stack = rt.stack(&dims, batch).unwrap();
+        let xs = stack.run(&dx.iter().collect::<Vec<_>>()).unwrap();
+        let us = stack.run(&du.iter().collect::<Vec<_>>()).unwrap();
+        let cs = stack.run(&dc.iter().collect::<Vec<_>>()).unwrap();
+
+        let mut scalars = Vec::new();
+        for l in 0..batch {
+            scalars.push(rt.upload(&[scales[l]], &[]).unwrap());
+            scalars.push(rt.upload(&[dts[l]], &[]).unwrap());
+        }
+        let exe = rt.cohort_rflow_step(&dims, batch).unwrap();
+        assert_eq!(exe.arity(), 3 + 2 * batch);
+        let mut args: Vec<&DeviceTensor> = vec![&xs, &us, &cs];
+        args.extend(scalars.iter());
+        let out = exe.run(&args).unwrap();
+        assert_eq!(out.dims(), &[batch, 2, 3]);
+        let mut got = vec![0.0f32; batch * n];
+        rt.download_into(&out, &mut got).unwrap();
+
+        // reference: per-lane cfg_combine + axpy
+        let cfg = rt.cfg_combine(&dims).unwrap();
+        let axpy = rt.axpy(&dims).unwrap();
+        for l in 0..batch {
+            let s = rt.upload(&[scales[l]], &[]).unwrap();
+            let dt = rt.upload(&[dts[l]], &[]).unwrap();
+            let eps = cfg.run(&[&du[l], &dc[l], &s]).unwrap();
+            let next = axpy.run(&[&eps, &dx[l], &dt]).unwrap();
+            let mut want = vec![0.0f32; n];
+            rt.download_into(&next, &mut want).unwrap();
+            assert_eq!(&got[l * n..(l + 1) * n], &want[..], "lane {l}");
+        }
+    }
+
+    #[test]
+    fn cohort_ddim_step_matches_per_lane_ops() {
+        let rt = Runtime::cpu().unwrap();
+        let dims = [4usize];
+        let batch = 2;
+        let lanes_x = [vec![0.5f32, -7.5, 7.5, 1.0], vec![-0.25f32, 2.0, -3.0, 0.0]];
+        let lanes_u = [vec![0.1f32, -0.3, 0.2, 0.0], vec![0.7f32, 0.2, -0.1, 0.4]];
+        let lanes_c = [vec![0.2f32, -0.1, 0.4, 0.9], vec![-0.5f32, 0.3, 0.2, -0.2]];
+        // distinct per-lane schedules (different cursors)
+        let per_lane = [
+            [4.0f32, 0.9, 0.435, 0.95, 0.312],  // s, sqrt_at, sqrt_1mat, sqrt_aprev, sqrt_1maprev
+            [7.5f32, 0.7, 0.714, 0.8, 0.6],
+        ];
+        let (lo_v, hi_v) = (-6.0f32, 6.0f32);
+
+        let up = |v: &Vec<f32>| rt.upload(v, &dims).unwrap();
+        let dx: Vec<_> = lanes_x.iter().map(up).collect();
+        let du: Vec<_> = lanes_u.iter().map(up).collect();
+        let dc: Vec<_> = lanes_c.iter().map(up).collect();
+        let stack = rt.stack(&dims, batch).unwrap();
+        let xs = stack.run(&dx.iter().collect::<Vec<_>>()).unwrap();
+        let us = stack.run(&du.iter().collect::<Vec<_>>()).unwrap();
+        let cs = stack.run(&dc.iter().collect::<Vec<_>>()).unwrap();
+        let mut scalars = Vec::new();
+        for l in 0..batch {
+            for v in per_lane[l] {
+                scalars.push(rt.upload(&[v], &[]).unwrap());
+            }
+        }
+        let lo = rt.upload(&[lo_v], &[]).unwrap();
+        let hi = rt.upload(&[hi_v], &[]).unwrap();
+        let exe = rt.cohort_ddim_step(&dims, batch).unwrap();
+        assert_eq!(exe.arity(), 3 + 5 * batch + 2);
+        let mut args: Vec<&DeviceTensor> = vec![&xs, &us, &cs];
+        args.extend(scalars.iter());
+        args.push(&lo);
+        args.push(&hi);
+        let out = exe.run(&args).unwrap();
+        let mut got = vec![0.0f32; batch * 4];
+        rt.download_into(&out, &mut got).unwrap();
+
+        let cfg = rt.cfg_combine(&dims).unwrap();
+        let step = rt.ddim_step(&dims).unwrap();
+        for l in 0..batch {
+            let s = rt.upload(&[per_lane[l][0]], &[]).unwrap();
+            let eps = cfg.run(&[&du[l], &dc[l], &s]).unwrap();
+            let coeffs: Vec<_> = per_lane[l][1..]
+                .iter()
+                .map(|&v| rt.upload(&[v], &[]).unwrap())
+                .collect();
+            let next = step
+                .run(&[&dx[l], &eps, &coeffs[0], &coeffs[1], &coeffs[2], &coeffs[3], &lo, &hi])
+                .unwrap();
+            let mut want = vec![0.0f32; 4];
+            rt.download_into(&next, &mut want).unwrap();
+            assert_eq!(&got[l * 4..(l + 1) * 4], &want[..], "lane {l}");
+        }
+    }
+
+    #[test]
+    fn regroup_compacts_and_permutes_lanes() {
+        let rt = Runtime::cpu().unwrap();
+        let dims = [2usize, 2];
+        let lanes: Vec<Vec<f32>> = (0..4)
+            .map(|l| (0..4).map(|i| (l * 10 + i) as f32).collect())
+            .collect();
+        let dl: Vec<_> = lanes.iter().map(|v| rt.upload(v, &dims).unwrap()).collect();
+        let stacked = rt
+            .stack(&dims, 4)
+            .unwrap()
+            .run(&dl.iter().collect::<Vec<_>>())
+            .unwrap();
+        let bdims = [4usize, 2, 2];
+
+        // drop lane 1, keep order (retirement compaction)
+        let rg = rt.regroup(&bdims, &[0, 2, 3]).unwrap();
+        let out = rg.run(&[&stacked]).unwrap();
+        assert_eq!(out.dims(), &[3, 2, 2]);
+        let mut got = vec![0.0f32; 12];
+        rt.download_into(&out, &mut got).unwrap();
+        assert_eq!(&got[0..4], &lanes[0][..]);
+        assert_eq!(&got[4..8], &lanes[2][..]);
+        assert_eq!(&got[8..12], &lanes[3][..]);
+
+        // single-lane keep and arbitrary permutation
+        let one = rt.regroup(&bdims, &[2]).unwrap().run(&[&stacked]).unwrap();
+        assert_eq!(one.dims(), &[1, 2, 2]);
+        let mut g1 = vec![0.0f32; 4];
+        rt.download_into(&one, &mut g1).unwrap();
+        assert_eq!(&g1, &lanes[2]);
+        let perm = rt.regroup(&bdims, &[3, 0]).unwrap().run(&[&stacked]).unwrap();
+        let mut g2 = vec![0.0f32; 8];
+        rt.download_into(&perm, &mut g2).unwrap();
+        assert_eq!(&g2[0..4], &lanes[3][..]);
+        assert_eq!(&g2[4..8], &lanes[0][..]);
+
+        // bounds checking
+        assert!(rt.regroup(&bdims, &[4]).is_err());
+        assert!(rt.regroup(&bdims, &[]).is_err());
+        assert!(rt.regroup(&[], &[0]).is_err());
     }
 
     #[test]

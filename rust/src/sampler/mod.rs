@@ -118,6 +118,15 @@ impl DeviceCoeffs {
     pub fn is_empty(&self) -> bool {
         self.scalars.is_empty()
     }
+
+    /// The resident rank-0 scalar tensors in the device executable's
+    /// argument order — the session cohort step feeds these per lane into
+    /// the fused multi-lane advance ([`crate::runtime::Runtime`]'s
+    /// `cohort_rflow_step`/`cohort_ddim_step`), indexed by each session's
+    /// own schedule cursor.
+    pub fn scalars(&self) -> &[DeviceTensor] {
+        &self.scalars
+    }
 }
 
 /// Device-side sampler stepping: owns the fused step executable for one
@@ -166,6 +175,14 @@ impl DeviceStepper {
         } else {
             0
         }
+    }
+
+    /// The resident DDIM x0-clamp bound scalars `(lo, hi)`; `None` for
+    /// samplers without a clamp (rflow). The session cohort step reuses
+    /// these as the shared trailing arguments of the fused multi-lane
+    /// DDIM advance.
+    pub fn clamp_bounds(&self) -> Option<&(DeviceTensor, DeviceTensor)> {
+        self.bounds.as_ref()
     }
 
     /// Upload one step's scalars (4 bytes each, one call per scalar).

@@ -1,11 +1,11 @@
-//! TCP JSON-lines serving front-end: router, request queue, batch
-//! scheduler, worker pool.
+//! TCP JSON-lines serving front-end: router, request queue, continuous
+//! (step-level) batching scheduler, worker pool.
 //!
 //! This is the L3 deployment surface: a newline-delimited JSON protocol
 //! over TCP (one request object per line, one response object per line),
-//! a FIFO queue whose workers **micro-batch** compatible generations, and
-//! aggregate latency telemetry. Python is never involved; workers drive
-//! the PJRT executables directly.
+//! a FIFO queue whose workers drive **session cohorts** one denoising
+//! step at a time, and aggregate latency telemetry. Python is never
+//! involved; workers drive the PJRT executables directly.
 //!
 //! Protocol ops:
 //! * `{"op":"ping"}` → `{"status":"ok","pong":true}`
@@ -23,11 +23,12 @@
 //! With a [`crate::autotune::ProfileStore`] loaded
 //! ([`ServerConfig::profiles`], CLI `serve --profiles <path>`), a
 //! `generate` request may send `policy: "auto"`. The connection handler
-//! resolves it to a concrete spec **at enqueue time, before the batch key
-//! is derived**: the payload's `policy` field is rewritten to the tuned
-//! spec, so identically-resolved requests carry identical raw fields and
-//! micro-batch together — with each other and with requests that sent the
-//! same concrete spec explicitly. Resolution follows
+//! resolves it to a concrete spec **at enqueue time**: the payload's
+//! `policy` field is rewritten to the tuned spec before the job is
+//! queued, so the scheduler and the response only ever see concrete
+//! specs. (Under continuous batching the policy no longer gates pass
+//! sharing at all — auto requests batch with any same-(model, bucket)
+//! traffic.) Resolution follows
 //! [`crate::autotune::ProfileStore::lookup`]: exact
 //! (model, bucket, sampler, steps) profile, else the nearest profile of
 //! the same (model, sampler), else [`DEFAULT_POLICY`] with a counted
@@ -43,28 +44,30 @@
 //! before wire validation (it only needs a concrete spec), so a request
 //! that later fails validation may still tick the resolution counters.
 //!
-//! # Batch scheduler
+//! # Continuous batching
 //!
-//! When a worker dequeues a `generate` job it derives a [`BatchKey`] from
-//! the raw wire fields — model, bucket, policy spec, `steps`, `cfg_scale`
-//! — and coalesces up to [`ServerConfig::max_batch`] pending jobs with the
-//! **identical** key into one [`Engine::generate_batch`] pass, waiting up
-//! to [`ServerConfig::gather_window_ms`] for stragglers (the window is the
-//! only latency a lone request can pay for batching). The key compares
-//! raw values: an absent field and its explicit default are conservatively
-//! treated as incompatible, and a job whose fields cannot be keyed (wrong
-//! types) dispatches solo so validation fails it individually.
-//! Incompatible jobs are not pulled into the batch — they stay queued for
-//! the other workers (with a single worker they wait out the gather
-//! window, so worst-case added latency is `gather_window_ms` per pass).
-//! Seeds and prompts are deliberately *not* part of the key:
-//! per-request latents, text conditioning, policy state and drift
-//! measurements stay per-lane inside the engine (see the `engine` module
-//! docs §Micro-batching, which also defines the batched byte model: each
-//! response's transfer meters report the request's standalone cost, while
-//! the runtime's global meter shows the amortized batch total). Every
-//! `generate` response echoes `batch_size`, the number of requests served
-//! by its engine pass.
+//! Workers batch at **step granularity**, not request granularity (the
+//! `scheduler` submodule). A worker blocks for the first `generate` job —
+//! an empty queue waits on a condvar, never out a window — starts a
+//! [`crate::engine::session::Session`] for it, and then advances its
+//! cohort one denoising step per pass. At every step boundary it admits
+//! queued *compatible* jobs (same raw `model`/`bucket` — the only fields
+//! that pin the shared device pass) up to [`ServerConfig::max_batch`],
+//! and retires finished lanes immediately: requests with **different**
+//! `steps`, `cfg_scale` or `policy` now share passes, a late arrival
+//! joins an in-flight batch at the next boundary, and a short request
+//! never waits for a long batchmate to finish. A job whose routing
+//! fields cannot be keyed (wrong types) dispatches solo so validation
+//! fails it individually; seeds and prompts are deliberately never part
+//! of the key — per-request latents, text conditioning, policy state and
+//! drift measurements are per-session inside the engine, and each
+//! response's transfer meters report the request's standalone cost
+//! (unchanged by batching; see the `engine::session` docs §Byte model).
+//! Every `generate` response echoes `batch_size`: the largest cohort the
+//! request ever shared a device pass with. [`ServerConfig::admit_window_ms`]
+//! (default 0) optionally lets a *fresh* cohort linger for batchmates
+//! before its first step; the legacy `--gather-ms` flag maps onto it
+//! with a deprecation warning.
 //!
 //! `generate` payloads are validated before a sampler is built: `steps`
 //! must be a positive integer no larger than the preset's training
@@ -84,7 +87,15 @@
 //! samples, then uniform reservoir sampling), so sustained traffic cannot
 //! grow server memory without bound; the `stats` op reports p50/p95/p99
 //! latency, mean/p95 queueing, and the reservoir's `latency_samples` /
-//! `latency_seen` accounting.
+//! `latency_seen` accounting. Scheduler occupancy is observable the same
+//! way: `lanes_active` (gauge), `occupancy_mean`/`occupancy_max` (per-step
+//! cohort size over a reservoir), and the `joins` / `retires` / `regroups`
+//! counters expose how much continuous batching is actually happening.
+//!
+//! [`Client`] sets socket read/write timeouts
+//! ([`Client::DEFAULT_TIMEOUT`], overridable via
+//! [`Client::connect_with_timeout`]) so a hung server fails a bench or
+//! the autotune CLI with an error instead of stalling it forever.
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
@@ -98,10 +109,12 @@ use crate::autotune::ProfileStore;
 use crate::config::Manifest;
 use crate::engine::{Engine, Request, RunResult};
 use crate::model::LoadedModel;
-use crate::policy::{build_policy, ReusePolicy};
+use crate::policy::build_policy;
 use crate::runtime::Runtime;
 use crate::util::json::{self, Json};
 use crate::util::stats::{self, Reservoir};
+
+mod scheduler;
 
 /// Wire-level defaults applied when a `generate` payload omits a field
 /// (shared by validation and the batch key so they can never disagree).
@@ -227,23 +240,13 @@ fn resolve_auto(payload: &mut Json, ctx: &ServeCtx) -> Option<AutoInfo> {
     Some(auto)
 }
 
-/// Micro-batch compatibility key (module docs §Batch scheduler): every
-/// field that shapes the shared device pass, compared on the **raw** wire
-/// values. `None` in `steps`/`cfg_bits` means the field was absent (all
-/// absent requests resolve to the same preset default, so they batch).
-#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
-struct BatchKey {
-    model: String,
-    bucket: String,
-    policy: String,
-    steps: Option<u64>,
-    cfg_bits: Option<u64>,
-}
-
-/// Key a `generate` payload for batching, or `None` when it cannot be
-/// keyed (non-generate op, or fields of the wrong type / out of range —
-/// those dispatch solo and fail validation individually).
-fn batch_key(payload: &Json) -> Option<BatchKey> {
+/// Cohort compatibility key (module docs §Continuous batching): only the
+/// fields that pin the shared device pass — the engine a session runs on.
+/// `steps`, `cfg_scale` and `policy` are per-session state and batch
+/// freely. Compared on the **raw** wire values; `None` when the payload
+/// cannot be keyed (non-generate op, wrong-typed routing fields — those
+/// dispatch solo and fail validation individually).
+fn cohort_key(payload: &Json) -> Option<(String, String)> {
     if payload.get("op").and_then(|o| o.as_str()) != Some("generate") {
         return None;
     }
@@ -255,28 +258,7 @@ fn batch_key(payload: &Json) -> Option<BatchKey> {
     };
     let model = get_str("model", DEFAULT_MODEL)?;
     let bucket = get_str("bucket", DEFAULT_BUCKET)?;
-    let policy = get_str("policy", DEFAULT_POLICY)?;
-    let steps = match payload.get("steps") {
-        None => None,
-        Some(v) => {
-            let s = v.as_f64()?;
-            if !s.is_finite() || s < 1.0 || s.fract() != 0.0 {
-                return None;
-            }
-            Some(s as u64)
-        }
-    };
-    let cfg_bits = match payload.get("cfg_scale") {
-        None => None,
-        Some(v) => {
-            let c = v.as_f64()?;
-            if !c.is_finite() {
-                return None;
-            }
-            Some(c.to_bits())
-        }
-    };
-    Some(BatchKey { model, bucket, policy, steps, cfg_bits })
+    Some((model, bucket))
 }
 
 struct Telemetry {
@@ -284,10 +266,25 @@ struct Telemetry {
     errors: AtomicU64,
     /// Transient accept(2) failures retried by the listener loop.
     accept_errors: AtomicU64,
-    /// Engine passes dispatched (a batch of any size counts once).
+    /// Cohorts started (a cohort of any size counts once).
     batches: AtomicU64,
-    /// Requests that shared an engine pass with at least one other.
+    /// Requests that shared a device pass with at least one other.
     batched_requests: AtomicU64,
+    /// Sessions currently in flight across all workers (gauge).
+    lanes_active: AtomicU64,
+    /// Sessions admitted into an already-stepping cohort (mid-flight).
+    joins: AtomicU64,
+    /// Sessions finished and answered.
+    retires: AtomicU64,
+    /// Cohort steps that rebuilt/compacted the resident stack because
+    /// membership changed since the previous step.
+    regroups: AtomicU64,
+    /// Largest per-step cohort occupancy ever observed (a true running
+    /// max — the reservoir below is a uniform sample and cannot carry a
+    /// max statistic once it evicts).
+    occupancy_peak: AtomicU64,
+    /// Per-step cohort occupancy (lanes advanced per pass).
+    occupancy: Mutex<Reservoir>,
     /// `policy=auto` requests resolved to a tuned profile.
     auto_resolved: AtomicU64,
     /// `policy=auto` requests served [`DEFAULT_POLICY`] because no profile
@@ -305,6 +302,12 @@ impl Telemetry {
             accept_errors: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
+            lanes_active: AtomicU64::new(0),
+            joins: AtomicU64::new(0),
+            retires: AtomicU64::new(0),
+            regroups: AtomicU64::new(0),
+            occupancy_peak: AtomicU64::new(0),
+            occupancy: Mutex::new(Reservoir::new(reservoir_cap)),
             auto_resolved: AtomicU64::new(0),
             auto_fallbacks: AtomicU64::new(0),
             latencies_s: Mutex::new(Reservoir::new(reservoir_cap)),
@@ -337,13 +340,16 @@ pub struct ServerConfig {
     /// Bind address; use port 0 for an ephemeral port (tests).
     pub addr: String,
     pub workers: usize,
-    /// Maximum compatible `generate` jobs coalesced into one engine pass
-    /// (1 disables micro-batching).
+    /// Maximum sessions sharing one cohort's device pass (1 disables
+    /// batching entirely).
     pub max_batch: usize,
-    /// How long a worker waits for more compatible jobs after dequeuing
-    /// the first, in milliseconds (0 = only coalesce what is already
-    /// queued). This is the upper bound on batching-induced latency.
-    pub gather_window_ms: u64,
+    /// Optional wait before a *fresh* cohort's first step for batchmates,
+    /// in milliseconds (module docs §Continuous batching). 0 (default):
+    /// start stepping immediately — late arrivals join at step boundaries
+    /// anyway, so unlike the retired gather window this costs a lone
+    /// request nothing. Replaces `gather_window_ms`; the CLI keeps
+    /// `--gather-ms` as a deprecated alias.
+    pub admit_window_ms: u64,
     /// Latency/queue telemetry reservoir capacity: exact percentiles below
     /// this many samples, uniform reservoir sampling above.
     pub telemetry_reservoir: usize,
@@ -359,7 +365,7 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:0".to_string(),
             workers: 2,
             max_batch: 4,
-            gather_window_ms: 2,
+            admit_window_ms: 0,
             telemetry_reservoir: 4096,
             profiles: None,
         }
@@ -413,70 +419,22 @@ impl Server {
         let telemetry = Arc::new(Telemetry::new(cfg.telemetry_reservoir));
         let mut handles = Vec::new();
         let max_batch = cfg.max_batch.max(1);
-        let gather_window = Duration::from_millis(cfg.gather_window_ms);
+        let admit_window = Duration::from_millis(cfg.admit_window_ms);
 
-        // worker pool
+        // worker pool: each worker drives session cohorts one step at a
+        // time (scheduler module docs).
         for wid in 0..cfg.workers.max(1) {
-            let queue = Arc::clone(&queue);
-            let stop = Arc::clone(&stop);
-            let registry = Arc::clone(&registry);
-            let telemetry = Arc::clone(&telemetry);
+            let wctx = scheduler::WorkerCtx {
+                queue: Arc::clone(&queue),
+                stop: Arc::clone(&stop),
+                registry: Arc::clone(&registry),
+                telemetry: Arc::clone(&telemetry),
+                cfg: scheduler::SchedConfig { max_batch, admit_window },
+            };
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("foresight-server-worker-{wid}"))
-                    .spawn(move || loop {
-                        // Dequeue one job, then gather compatible ones
-                        // (module docs §Batch scheduler).
-                        let batch: Vec<Job> = {
-                            let (lock, cv) = &*queue;
-                            let mut q = lock.lock().unwrap();
-                            // Plain wait (no timeout) for the first job:
-                            // enqueue notifies one worker, shutdown sets
-                            // `stop` under the queue lock and notifies all,
-                            // so no wakeup is lost and idle workers never
-                            // spin.
-                            let first = loop {
-                                if let Some(j) = q.pop_front() {
-                                    break j;
-                                }
-                                if stop.load(Ordering::SeqCst) {
-                                    return;
-                                }
-                                q = cv.wait(q).unwrap();
-                            };
-                            let key = batch_key(&first.payload);
-                            let mut batch = vec![first];
-                            if let Some(key) = key.filter(|_| max_batch > 1) {
-                                let deadline = Instant::now() + gather_window;
-                                loop {
-                                    // Pull every currently-queued job with
-                                    // the identical key, preserving FIFO
-                                    // order; incompatible jobs stay queued
-                                    // for other workers.
-                                    let mut i = 0;
-                                    while i < q.len() && batch.len() < max_batch {
-                                        if batch_key(&q[i].payload).as_ref() == Some(&key) {
-                                            batch.push(q.remove(i).expect("index in bounds"));
-                                        } else {
-                                            i += 1;
-                                        }
-                                    }
-                                    if batch.len() >= max_batch || stop.load(Ordering::SeqCst) {
-                                        break;
-                                    }
-                                    let now = Instant::now();
-                                    if now >= deadline {
-                                        break;
-                                    }
-                                    let (guard, _timed_out) =
-                                        cv.wait_timeout(q, deadline - now).unwrap();
-                                    q = guard;
-                                }
-                            }
-                            batch
-                        };
-                        handle_generate_batch(&registry, batch, &telemetry);
-                    })
+                    .spawn(move || scheduler::run_worker(&wctx))
                     .expect("spawn worker"),
             );
         }
@@ -643,6 +601,8 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                     (r.samples().to_vec(), r.seen())
                 };
                 let qs = telemetry.queue_s.lock().unwrap().samples().to_vec();
+                let occ = telemetry.occupancy.lock().unwrap().samples().to_vec();
+                let occ_max = telemetry.occupancy_peak.load(Ordering::Relaxed) as f64;
                 Json::obj(vec![
                     ("status", Json::str("ok")),
                     ("requests", Json::num(telemetry.requests.load(Ordering::Relaxed) as f64)),
@@ -656,6 +616,15 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                         "batched_requests",
                         Json::num(telemetry.batched_requests.load(Ordering::Relaxed) as f64),
                     ),
+                    (
+                        "lanes_active",
+                        Json::num(telemetry.lanes_active.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("joins", Json::num(telemetry.joins.load(Ordering::Relaxed) as f64)),
+                    ("retires", Json::num(telemetry.retires.load(Ordering::Relaxed) as f64)),
+                    ("regroups", Json::num(telemetry.regroups.load(Ordering::Relaxed) as f64)),
+                    ("occupancy_mean", Json::num(stats::mean(&occ))),
+                    ("occupancy_max", Json::num(occ_max)),
                     (
                         "profile_store_version",
                         Json::num(ctx.profiles.as_deref().map_or(0, |s| s.version()) as f64),
@@ -862,87 +831,6 @@ fn generate_response(
     Json::obj(fields)
 }
 
-/// Dispatch one gathered batch of `generate` jobs (size ≥ 1). Per-job
-/// validation failures are answered individually and never poison the
-/// rest of the batch; surviving jobs share one engine pass.
-fn handle_generate_batch(registry: &EngineRegistry, jobs: Vec<Job>, telemetry: &Telemetry) {
-    let mut parsed: Vec<(Job, f64, GenerateParams)> = Vec::with_capacity(jobs.len());
-    for job in jobs {
-        telemetry.requests.fetch_add(1, Ordering::Relaxed);
-        let queue_s = job.enqueued.elapsed().as_secs_f64();
-        match parse_generate(&job.payload) {
-            Ok(p) => parsed.push((job, queue_s, p)),
-            Err(e) => {
-                telemetry.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = job.reply.send(err_json(&format!("{e:#}")));
-            }
-        }
-    }
-    if parsed.is_empty() {
-        return;
-    }
-    telemetry.batches.fetch_add(1, Ordering::Relaxed);
-    let batch_size = parsed.len();
-    if batch_size >= 2 {
-        telemetry
-            .batched_requests
-            .fetch_add(batch_size as u64, Ordering::Relaxed);
-    }
-
-    let run = (|| -> Result<Vec<RunResult>> {
-        // The batch scheduler only groups identical (model, bucket,
-        // policy, steps, cfg_scale) keys, so the first job's fields speak
-        // for the whole batch.
-        let first = &parsed[0].2;
-        let engine = registry.get(&first.model, &first.bucket)?;
-        let info = &engine.model().info;
-        if let Some(s) = first.req.steps {
-            // One bound for both samplers: DDIM's constructor asserts it,
-            // and an absurd rflow step count would only allocate
-            // gigabyte-scale sigma tables before doing useless work.
-            let t_train = engine.schedule().train_timesteps;
-            if s > t_train {
-                return Err(anyhow!(
-                    "steps must be <= {t_train} (the training schedule length), got {s}"
-                ));
-            }
-        }
-        let steps = first.req.steps.unwrap_or(info.steps);
-        let mut policies: Vec<Box<dyn ReusePolicy>> = parsed
-            .iter()
-            .map(|(_, _, p)| build_policy(&p.policy_spec, info, steps))
-            .collect::<Result<_>>()?;
-        let reqs: Vec<Request> = parsed.iter().map(|(_, _, p)| p.req.clone()).collect();
-        engine.generate_batch(&reqs, &mut policies)
-    })();
-
-    match run {
-        Ok(results) => {
-            for ((job, queue_s, p), r) in parsed.into_iter().zip(results) {
-                let resp = generate_response(
-                    &p.model,
-                    &p.bucket,
-                    &r,
-                    queue_s,
-                    batch_size,
-                    &p.policy_spec,
-                    job.auto.as_ref(),
-                );
-                telemetry.latencies_s.lock().unwrap().push(r.stats.wall_s);
-                telemetry.queue_s.lock().unwrap().push(queue_s);
-                let _ = job.reply.send(resp);
-            }
-        }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for (job, _, _) in parsed {
-                telemetry.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = job.reply.send(err_json(&msg));
-            }
-        }
-    }
-}
-
 /// Blocking JSON-lines client for the server (used by examples and tests).
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -950,18 +838,49 @@ pub struct Client {
 }
 
 impl Client {
+    /// Default socket read/write timeout: generous enough for a queued
+    /// full-schedule generation under load, finite so a hung server fails
+    /// a bench or the autotune CLI instead of stalling it forever.
+    pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(120);
+
     pub fn connect(addr: &SocketAddr) -> Result<Self> {
+        Self::connect_with_timeout(addr, Some(Self::DEFAULT_TIMEOUT))
+    }
+
+    /// Connect with an explicit socket timeout (`None` = block forever,
+    /// the pre-timeout behavior).
+    pub fn connect_with_timeout(addr: &SocketAddr, timeout: Option<Duration>) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connect")?;
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
         let writer = stream.try_clone()?;
         Ok(Self { reader: BufReader::new(stream), writer })
+    }
+
+    /// Adjust the socket timeout of an existing connection.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        let stream = self.reader.get_ref();
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
+        Ok(())
     }
 
     /// Send one request object; wait for one response line.
     pub fn call(&mut self, req: &Json) -> Result<Json> {
         writeln!(self.writer, "{req}")?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        if line.is_empty() {
+        match self.reader.read_line(&mut line) {
+            Ok(0) => return Err(anyhow!("server closed connection")),
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Err(anyhow!("timed out waiting for server response"));
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
             return Err(anyhow!("server closed connection"));
         }
         json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))
@@ -984,45 +903,79 @@ mod tests {
     }
 
     #[test]
-    fn batch_key_groups_identical_raw_fields() {
+    fn cohort_key_groups_across_steps_cfg_policy_seed_prompt() {
+        // Only (model, bucket) pin the shared device pass: sessions carry
+        // their own schedule cursor, CFG scalar and policy, so everything
+        // else batches freely under the continuous scheduler.
         let a = gen_payload(vec![
             ("policy", Json::str("foresight")),
             ("steps", Json::num(12.0)),
+            ("cfg_scale", Json::num(3.0)),
             ("seed", Json::num(1.0)),
             ("prompt", Json::str("a lake")),
         ]);
         let b = gen_payload(vec![
-            ("policy", Json::str("foresight")),
-            ("steps", Json::num(12.0)),
+            ("policy", Json::str("static")),
+            ("steps", Json::num(7.0)),
             ("seed", Json::num(999.0)),
             ("prompt", Json::str("a storm")),
         ]);
-        // seeds and prompts are not part of the key
-        assert_eq!(batch_key(&a), batch_key(&b));
-        assert!(batch_key(&a).is_some());
+        assert_eq!(cohort_key(&a), cohort_key(&b));
+        assert!(cohort_key(&a).is_some());
+        // absent routing fields resolve to the wire defaults
+        assert_eq!(
+            cohort_key(&gen_payload(vec![])),
+            Some((DEFAULT_MODEL.to_string(), DEFAULT_BUCKET.to_string()))
+        );
     }
 
     #[test]
-    fn batch_key_separates_incompatible_fields() {
-        let base = gen_payload(vec![("steps", Json::num(12.0))]);
+    fn cohort_key_separates_models_and_buckets() {
+        let base = gen_payload(vec![]);
         for other in [
-            gen_payload(vec![("steps", Json::num(10.0))]),
-            gen_payload(vec![("steps", Json::num(12.0)), ("policy", Json::str("static"))]),
-            gen_payload(vec![("steps", Json::num(12.0)), ("cfg_scale", Json::num(3.0))]),
-            gen_payload(vec![("steps", Json::num(12.0)), ("bucket", Json::str("other"))]),
-            gen_payload(vec![]), // absent steps ≠ explicit steps
+            gen_payload(vec![("bucket", Json::str("other"))]),
+            gen_payload(vec![("model", Json::str("latte-sim"))]),
         ] {
-            assert_ne!(batch_key(&base), batch_key(&other), "{other}");
+            assert_ne!(cohort_key(&base), cohort_key(&other), "{other}");
         }
     }
 
     #[test]
-    fn batch_key_rejects_unkeyable_payloads() {
-        // wrong-typed fields dispatch solo (validation fails them there)
-        assert!(batch_key(&gen_payload(vec![("steps", Json::str("ten"))])).is_none());
-        assert!(batch_key(&gen_payload(vec![("steps", Json::num(2.5))])).is_none());
-        assert!(batch_key(&gen_payload(vec![("model", Json::num(4.0))])).is_none());
-        assert!(batch_key(&Json::obj(vec![("op", Json::str("ping"))])).is_none());
+    fn cohort_key_rejects_unkeyable_payloads() {
+        // wrong-typed routing fields dispatch solo (validation fails them)
+        assert!(cohort_key(&gen_payload(vec![("model", Json::num(4.0))])).is_none());
+        assert!(cohort_key(&gen_payload(vec![("bucket", Json::num(4.0))])).is_none());
+        assert!(cohort_key(&Json::obj(vec![("op", Json::str("ping"))])).is_none());
+    }
+
+    #[test]
+    fn client_call_times_out_against_unresponsive_server() {
+        // A listener that accepts but never replies must fail a call
+        // within the configured timeout instead of hanging the caller
+        // forever (the pre-timeout behavior this regression test pins).
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || {
+            // Keep the accepted connection open, silently, long enough to
+            // outlive the client's timeout.
+            let conn = listener.accept();
+            std::thread::sleep(Duration::from_millis(1200));
+            drop(conn);
+        });
+        let mut c = Client::connect_with_timeout(&addr, Some(Duration::from_millis(150))).unwrap();
+        let t0 = Instant::now();
+        let err = c
+            .call(&Json::obj(vec![("op", Json::str("ping"))]))
+            .unwrap_err()
+            .to_string();
+        let took = t0.elapsed();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(
+            took < Duration::from_millis(1000),
+            "timeout did not bound the call: {took:?}"
+        );
+        let _ = hold.join();
     }
 
     #[test]

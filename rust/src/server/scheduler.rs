@@ -1,0 +1,297 @@
+//! Continuous (step-level) batching scheduler — the server's worker loop.
+//!
+//! Each worker drives one **cohort** of generation sessions per iteration
+//! instead of dispatching whole requests: it blocks for the first
+//! `generate` job (no window is waited out on an empty queue), starts a
+//! session for it, and then advances the cohort one denoising step at a
+//! time via [`session::step_many_refs`]. At every step boundary it
+//! non-blockingly admits queued compatible jobs — same (model, bucket),
+//! the only fields that pin the device pass; `steps`, `cfg_scale` and
+//! `policy` are per-session state — up to `max_batch` lanes, and retires
+//! finished lanes **immediately**: a short request that joined a long
+//! batch returns as soon as its own schedule completes, and a request
+//! that arrives `k` steps into an in-flight batch joins at the next
+//! boundary instead of waiting a full request out.
+//!
+//! Boundary admission takes only the FIFO **prefix** of compatible jobs:
+//! the moment a different-(model, bucket) job reaches the queue head, the
+//! cohort stops admitting and drains within its lanes' remaining
+//! schedules — sustained compatible traffic cannot starve a queued
+//! request for another engine behind a forever-refilled cohort.
+//!
+//! An optional admission window (`ServerConfig::admit_window_ms`,
+//! default 0) lets a *fresh* cohort linger briefly for batchmates before
+//! its first step — the continuous analogue of the retired gather window,
+//! kept for deployments that prefer fuller first stacks over first-step
+//! latency. It never applies to an in-flight cohort, ends early when the
+//! cohort fills, and at the default of 0 a lone request starts stepping
+//! immediately — the old always-paid gather wait is opt-in now.
+//!
+//! Per-job validation failures are answered individually at admission and
+//! never poison the cohort; a step error fails every in-flight lane (the
+//! cohort's shared pass is poisoned — see the `session` module docs) but
+//! leaves the worker serving.
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::engine::{session, Session};
+use crate::policy::build_policy;
+
+use super::{
+    cohort_key, err_json, generate_response, parse_generate, EngineRegistry, GenerateParams, Job,
+    Queue, Telemetry,
+};
+
+/// Scheduler knobs (from `ServerConfig`).
+pub(super) struct SchedConfig {
+    pub max_batch: usize,
+    pub admit_window: Duration,
+}
+
+/// Everything one scheduler worker thread needs.
+pub(super) struct WorkerCtx {
+    pub queue: Queue,
+    pub stop: Arc<AtomicBool>,
+    pub registry: Arc<EngineRegistry>,
+    pub telemetry: Arc<Telemetry>,
+    pub cfg: SchedConfig,
+}
+
+/// One in-flight lane: a started session plus everything needed to answer
+/// its client when it retires.
+struct Lane {
+    session: Session<'static>,
+    job: Job,
+    /// Queue wait measured at admission (time to *join* a pass, not to
+    /// finish one).
+    queue_s: f64,
+    params: GenerateParams,
+}
+
+/// The worker loop: serve cohorts until shutdown.
+pub(super) fn run_worker(ctx: &WorkerCtx) {
+    loop {
+        // Block for the first job — a plain condvar wait, so an empty
+        // queue costs nothing and shutdown wakes us immediately.
+        let first = {
+            let (lock, cv) = &*ctx.queue;
+            let mut q = lock.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if ctx.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = cv.wait(q).unwrap();
+            }
+        };
+        let key = cohort_key(&first.payload);
+
+        // Optional admission window before the fresh cohort's first step.
+        // Jobs are only *gathered* here — nobody's session starts until
+        // the window closes, so the wait lands in every member's queue_s
+        // (as the retired gather window did), never in wall_s.
+        let mut jobs = vec![first];
+        if let Some(key) = key.as_ref() {
+            if ctx.cfg.max_batch > 1 && !ctx.cfg.admit_window.is_zero() {
+                let deadline = Instant::now() + ctx.cfg.admit_window;
+                let (lock, cv) = &*ctx.queue;
+                let mut q = lock.lock().unwrap();
+                loop {
+                    let mut i = 0;
+                    while i < q.len() && jobs.len() < ctx.cfg.max_batch {
+                        if cohort_key(&q[i].payload).as_ref() == Some(key) {
+                            jobs.push(q.remove(i).expect("index in bounds"));
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    if jobs.len() >= ctx.cfg.max_batch || ctx.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, _timed_out) = cv.wait_timeout(q, deadline - now).unwrap();
+                    q = guard;
+                }
+            }
+        }
+        let mut lanes: Vec<Lane> = Vec::new();
+        for job in jobs {
+            admit(ctx, job, &mut lanes, false);
+        }
+        if !lanes.is_empty() {
+            ctx.telemetry.batches.fetch_add(1, Ordering::Relaxed);
+        }
+
+        // Drive the cohort: join at boundaries, retire eagerly.
+        let mut stepped = false;
+        while !lanes.is_empty() {
+            if let Some(key) = key.as_ref() {
+                if !ctx.stop.load(Ordering::SeqCst) && lanes.len() < ctx.cfg.max_batch {
+                    for job in pull_compatible_prefix(ctx, key, ctx.cfg.max_batch - lanes.len()) {
+                        admit(ctx, job, &mut lanes, stepped);
+                    }
+                }
+            }
+            let report = {
+                let mut refs: Vec<&mut Session<'static>> =
+                    lanes.iter_mut().map(|l| &mut l.session).collect();
+                session::step_many_refs(&mut refs)
+            };
+            match report {
+                Ok(rep) => {
+                    ctx.telemetry
+                        .occupancy
+                        .lock()
+                        .unwrap()
+                        .push(rep.occupancy as f64);
+                    ctx.telemetry
+                        .occupancy_peak
+                        .fetch_max(rep.occupancy as u64, Ordering::Relaxed);
+                    // A fresh cohort's very first stack build is not a
+                    // membership change; only count regroups after a
+                    // previous step existed.
+                    if stepped && rep.restacked && rep.occupancy > 1 {
+                        ctx.telemetry.regroups.fetch_add(1, Ordering::Relaxed);
+                    }
+                    stepped = true;
+                }
+                Err(e) => {
+                    // A step error poisons the cohort's shared pass:
+                    // answer every in-flight lane, drop the sessions
+                    // (their worker threads are reaped on drop), keep
+                    // serving.
+                    let msg = format!("{e:#}");
+                    let n = lanes.len() as u64;
+                    ctx.telemetry.errors.fetch_add(n, Ordering::Relaxed);
+                    ctx.telemetry.lanes_active.fetch_sub(n, Ordering::Relaxed);
+                    for lane in lanes.drain(..) {
+                        let _ = lane.job.reply.send(err_json(&msg));
+                    }
+                    break;
+                }
+            }
+            let mut i = 0;
+            while i < lanes.len() {
+                if lanes[i].session.is_done() {
+                    let lane = lanes.remove(i);
+                    retire(ctx, lane);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Pull up to `n` jobs with the given cohort key from the **front** of
+/// the queue, stopping at the first incompatible job. The fence is the
+/// fairness guarantee: once a different-key job reaches the queue head,
+/// this cohort admits nothing more and drains within its lanes' remaining
+/// schedules, so sustained compatible traffic can never starve a queued
+/// request for another (model, bucket) behind a forever-refilled cohort.
+/// Non-blocking.
+fn pull_compatible_prefix(ctx: &WorkerCtx, key: &(String, String), n: usize) -> Vec<Job> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let (lock, _cv) = &*ctx.queue;
+    let mut q = lock.lock().unwrap();
+    let mut out = Vec::new();
+    while out.len() < n {
+        match q.front() {
+            Some(job) if cohort_key(&job.payload).as_ref() == Some(key) => {
+                out.push(q.pop_front().expect("front checked"));
+            }
+            _ => break,
+        }
+    }
+    out
+}
+
+/// Validate one job and start its session; answer the client directly on
+/// failure (a bad request never poisons its batchmates).
+///
+/// Admission runs synchronously on the worker, so a mid-flight join
+/// stalls the in-flight lanes for one request startup (text/K-V
+/// precompute + uploads). Overlapping admission with the in-flight step
+/// is a known follow-up optimization; at today's request-startup cost it
+/// is well under one denoising step.
+fn admit(ctx: &WorkerCtx, job: Job, lanes: &mut Vec<Lane>, midflight: bool) {
+    ctx.telemetry.requests.fetch_add(1, Ordering::Relaxed);
+    let queue_s = job.enqueued.elapsed().as_secs_f64();
+    match try_start(ctx, &job) {
+        Ok((session, params)) => {
+            ctx.telemetry.lanes_active.fetch_add(1, Ordering::Relaxed);
+            if midflight {
+                ctx.telemetry.joins.fetch_add(1, Ordering::Relaxed);
+            }
+            lanes.push(Lane { session, job, queue_s, params });
+        }
+        Err(e) => {
+            ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = job.reply.send(err_json(&format!("{e:#}")));
+        }
+    }
+}
+
+/// Wire validation + policy construction + session admission.
+fn try_start(ctx: &WorkerCtx, job: &Job) -> Result<(Session<'static>, GenerateParams)> {
+    let p = parse_generate(&job.payload)?;
+    let engine = ctx.registry.get(&p.model, &p.bucket)?;
+    let info = &engine.model().info;
+    if let Some(s) = p.req.steps {
+        // One bound for both samplers: DDIM's constructor asserts it, and
+        // an absurd rflow step count would only allocate gigabyte-scale
+        // sigma tables before doing useless work.
+        let t_train = engine.schedule().train_timesteps;
+        if s > t_train {
+            return Err(anyhow!(
+                "steps must be <= {t_train} (the training schedule length), got {s}"
+            ));
+        }
+    }
+    let steps = p.req.steps.unwrap_or(info.steps);
+    let policy = build_policy(&p.policy_spec, info, steps)?;
+    let session = engine.admit(&p.req, policy)?;
+    Ok((session, p))
+}
+
+/// Finish a completed lane and answer its client. `batch_size` in the
+/// response reports the largest cohort the request ever shared a device
+/// pass with.
+fn retire(ctx: &WorkerCtx, lane: Lane) {
+    ctx.telemetry.lanes_active.fetch_sub(1, Ordering::Relaxed);
+    let peak = lane.session.peak_lanes();
+    match lane.session.finish() {
+        Ok(r) => {
+            let resp = generate_response(
+                &lane.params.model,
+                &lane.params.bucket,
+                &r,
+                lane.queue_s,
+                peak,
+                &lane.params.policy_spec,
+                lane.job.auto.as_ref(),
+            );
+            ctx.telemetry.retires.fetch_add(1, Ordering::Relaxed);
+            if peak >= 2 {
+                ctx.telemetry.batched_requests.fetch_add(1, Ordering::Relaxed);
+            }
+            ctx.telemetry.latencies_s.lock().unwrap().push(r.stats.wall_s);
+            ctx.telemetry.queue_s.lock().unwrap().push(lane.queue_s);
+            let _ = lane.job.reply.send(resp);
+        }
+        Err(e) => {
+            ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = lane.job.reply.send(err_json(&format!("{e:#}")));
+        }
+    }
+}

@@ -436,3 +436,111 @@ fn step_override_is_respected() {
     assert_eq!(r.stats.per_step_s.len(), 10);
     assert_eq!(r.stats.computed_units, 10 * 2 * 12);
 }
+
+#[test]
+fn session_cohort_staggered_mixed_steps_matches_standalone() {
+    // Continuous-batching acceptance at the engine level (property-style,
+    // fig18-oracle tolerance): a cohort where request B is admitted k
+    // steps after request A is already in flight — with mixed step
+    // counts, CFG scales and policies — must produce, for every request,
+    // latents ≤1e-6 vs that request run standalone, with identical reuse
+    // decisions and identical per-request transfer meters.
+    use foresight::engine::{step_many_refs, Session};
+    use foresight::util::proptest::proptest_cases;
+    use std::panic::AssertUnwindSafe;
+
+    let Some(eng) = engine("opensora-sim", "240p-2s") else { return };
+    let info = eng.model().info.clone();
+    let eng = AssertUnwindSafe(&eng);
+    let info = AssertUnwindSafe(&info);
+    let specs = [
+        "foresight:n=1,r=2,gamma=0.5",
+        "static:n=1,r=2",
+        "none",
+    ];
+
+    proptest_cases(3, |g| {
+        let eng: &foresight::engine::Engine = *eng;
+        let info: &foresight::config::ModelInfo = *info;
+        let steps_a = g.usize_in(6..=9);
+        let steps_b = g.usize_in(4..=7);
+        let offset = g.usize_in(1..=3); // steps A runs alone before B joins
+        let spec_a = *g.pick(&specs);
+        let spec_b = *g.pick(&specs);
+        let cfg_b = if g.bool() { Some(3.5) } else { None };
+
+        let mut ra = Request::new("staggered lane a", 101);
+        ra.steps = Some(steps_a);
+        let mut rb = Request::new("staggered lane b", 202);
+        rb.steps = Some(steps_b);
+        rb.cfg_scale = cfg_b;
+
+        // Standalone oracles.
+        let solo_a = run_request(eng, spec_a, &ra, info);
+        let solo_b = run_request(eng, spec_b, &rb, info);
+
+        // Cohort: A steps alone, then B joins mid-flight; each retires on
+        // its own schedule.
+        let mut sa = eng
+            .admit(&ra, build_policy(spec_a, info, steps_a).unwrap())
+            .unwrap();
+        for _ in 0..offset {
+            step_many_refs(&mut [&mut sa]).unwrap();
+        }
+        let mut sb = eng
+            .admit(&rb, build_policy(spec_b, info, steps_b).unwrap())
+            .unwrap();
+        let mut joined = false;
+        while !(sa.is_done() && sb.is_done()) {
+            let mut refs: Vec<&mut Session> = Vec::new();
+            if !sa.is_done() {
+                refs.push(&mut sa);
+            }
+            if !sb.is_done() {
+                refs.push(&mut sb);
+            }
+            joined |= refs.len() == 2;
+            step_many_refs(&mut refs).unwrap();
+        }
+        assert!(joined, "cohort never actually shared a pass");
+        assert!(sa.peak_lanes() >= 2 && sb.peak_lanes() >= 2);
+        let got_a = sa.finish().unwrap();
+        let got_b = sb.finish().unwrap();
+
+        for (lane, (got, solo)) in [("a", (&got_a, &solo_a)), ("b", (&got_b, &solo_b))] {
+            assert_eq!(got.reuse_map, solo.reuse_map, "lane {lane}: decisions diverged");
+            assert_eq!(
+                (got.stats.computed_units, got.stats.reused_units, got.stats.fallback_units),
+                (solo.stats.computed_units, solo.stats.reused_units, solo.stats.fallback_units),
+                "lane {lane}: unit counters diverged"
+            );
+            assert_eq!(got.stats.h2d_bytes, solo.stats.h2d_bytes, "lane {lane}: h2d budget");
+            assert_eq!(got.stats.d2h_bytes, solo.stats.d2h_bytes, "lane {lane}: d2h budget");
+            assert_eq!(
+                got.stats.cache_peak_bytes, solo.stats.cache_peak_bytes,
+                "lane {lane}: cache footprint"
+            );
+            let mismatch = foresight::bench_support::first_latent_mismatch(
+                &got.latents.data,
+                &solo.latents.data,
+                1e-6,
+            );
+            assert!(
+                mismatch.is_none(),
+                "lane {lane}: cohort latents diverged from standalone \
+                 (first mismatch: {mismatch:?})"
+            );
+        }
+    });
+}
+
+fn run_request(
+    eng: &foresight::engine::Engine,
+    spec: &str,
+    req: &Request,
+    info: &foresight::config::ModelInfo,
+) -> foresight::engine::RunResult {
+    let steps = req.steps.unwrap_or(info.steps);
+    let mut pol = build_policy(spec, info, steps).unwrap();
+    eng.generate(req, pol.as_mut(), None).unwrap()
+}

@@ -227,14 +227,14 @@ fn shutdown_is_prompt_with_idle_workers() {
 #[test]
 fn compatible_concurrent_clients_batch_and_match_sequential() {
     // K concurrent clients with the same (model, bucket, policy, steps)
-    // but distinct prompts/seeds must coalesce into shared engine passes
+    // but distinct prompts/seeds must coalesce into shared device passes
     // and receive exactly the results a sequential server would have
     // produced (latent checksum ≤1e-6, identical decision counters).
     let Some(server) = start_server_with(ServerConfig {
         addr: "127.0.0.1:0".into(),
         workers: 1,
         max_batch: 4,
-        gather_window_ms: 500,
+        admit_window_ms: 500,
         ..ServerConfig::default()
     }) else {
         return;
@@ -294,40 +294,146 @@ fn compatible_concurrent_clients_batch_and_match_sequential() {
 }
 
 #[test]
-fn incompatible_requests_are_never_cross_batched() {
-    // Clients whose requests differ in a BatchKey field (steps, policy)
-    // must each be served by their own engine pass — batch_size 1 for all,
-    // with the per-request parameters honored.
+fn mixed_steps_cfg_policy_requests_share_passes_and_match_solo() {
+    // The continuous scheduler's headline: requests that differ in steps,
+    // cfg_scale AND policy share device passes (each session carries its
+    // own schedule cursor and CFG scalar), each finishing on its own
+    // schedule with exactly its standalone result.
     let Some(server) = start_server_with(ServerConfig {
         addr: "127.0.0.1:0".into(),
         workers: 1,
         max_batch: 4,
-        gather_window_ms: 300,
+        admit_window_ms: 500,
         ..ServerConfig::default()
     }) else {
         return;
     };
     let addr = server.addr();
-    let cases: Vec<Json> = vec![
+    let mut cases: Vec<Json> = vec![
         gen_req("none", "mixed a", 1, 6),
-        gen_req("none", "mixed b", 2, 7),   // different steps
+        gen_req("none", "mixed b", 2, 9),   // different steps
         gen_req("static", "mixed c", 3, 6), // different policy
     ];
+    if let Json::Obj(ref mut o) = cases[2] {
+        o.insert("cfg_scale".into(), Json::num(3.5)); // different cfg too
+    }
+
+    // Solo references first (fresh server state not needed: sessions are
+    // per-request, so solo vs cohort must be identical).
+    let mut reference = Vec::new();
+    {
+        let mut c = Client::connect(&addr).unwrap();
+        for (i, req) in cases.iter().enumerate() {
+            let r = c.call(req).unwrap();
+            assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "solo {i}: {r}");
+            reference.push((
+                r.get("latent_l2").unwrap().as_f64().unwrap(),
+                r.get("steps").unwrap().as_usize().unwrap(),
+                r.get("computed_units").unwrap().as_f64().unwrap(),
+            ));
+        }
+    }
+
     let mut handles = Vec::new();
     for (i, req) in cases.into_iter().enumerate() {
         let mut c = Client::connect(&addr).unwrap();
         assert!(c.ping().unwrap());
         handles.push(std::thread::spawn(move || (i, c.call(&req).unwrap())));
     }
+    let mut max_batch_seen = 0usize;
     for h in handles {
         let (i, r) = h.join().unwrap();
         assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "case {i}: {r}");
-        assert_eq!(
-            r.get("batch_size").unwrap().as_usize().unwrap(),
-            1,
-            "case {i}: incompatible requests must never share a pass: {r}"
+        let (l2, steps, computed) = reference[i];
+        assert_eq!(r.get("steps").unwrap().as_usize().unwrap(), steps, "case {i}");
+        assert_eq!(r.get("computed_units").unwrap().as_f64().unwrap(), computed, "case {i}");
+        let got = r.get("latent_l2").unwrap().as_f64().unwrap();
+        assert!(
+            (got - l2).abs() <= 1e-6 * (1.0 + l2.abs()),
+            "case {i}: cohort latent_l2 {got} vs solo {l2}"
         );
+        max_batch_seen = max_batch_seen.max(r.get("batch_size").unwrap().as_usize().unwrap());
     }
+    assert!(
+        max_batch_seen >= 2,
+        "mixed-parameter requests must share a pass under the continuous \
+         scheduler, max batch_size {max_batch_seen}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn request_admitted_midflight_joins_and_both_finish() {
+    // A request that arrives while a cohort is already stepping must join
+    // at a step boundary (not wait the in-flight request out), share the
+    // pass, retire on its own schedule, and return its standalone result.
+    let Some(server) = start_server_with(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 4,
+        admit_window_ms: 0,
+        ..ServerConfig::default()
+    }) else {
+        return;
+    };
+    let addr = server.addr();
+    let joiner = gen_req("foresight", "midflight joiner", 5, 6);
+
+    // Solo reference for the joiner.
+    let ref_l2 = {
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c.call(&joiner).unwrap();
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+        r.get("latent_l2").unwrap().as_f64().unwrap()
+    };
+
+    // Occupy the only worker with a long schedule.
+    let long_req = gen_req("foresight", "long hauler", 6, 30);
+    let mut c_long = Client::connect(&addr).unwrap();
+    let h_long = std::thread::spawn(move || c_long.call(&long_req).unwrap());
+
+    // Wait until the long request is actually in flight, then join.
+    let mut c = Client::connect(&addr).unwrap();
+    let t0 = std::time::Instant::now();
+    loop {
+        let s = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+        if s.get("lanes_active").unwrap().as_usize().unwrap() >= 1 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "long request never started: {s}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let r = c.call(&joiner).unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+    assert!(
+        r.get("batch_size").unwrap().as_usize().unwrap() >= 2,
+        "joiner should have shared an in-flight pass: {r}"
+    );
+    assert_eq!(r.get("steps").unwrap().as_usize().unwrap(), 6, "{r}");
+    let got = r.get("latent_l2").unwrap().as_f64().unwrap();
+    assert!(
+        (got - ref_l2).abs() <= 1e-6 * (1.0 + ref_l2.abs()),
+        "joiner diverged from its solo run: {got} vs {ref_l2}"
+    );
+
+    let r_long = h_long.join().unwrap();
+    assert_eq!(r_long.get("status").unwrap().as_str().unwrap(), "ok", "{r_long}");
+    assert_eq!(r_long.get("steps").unwrap().as_usize().unwrap(), 30, "{r_long}");
+    assert!(
+        r_long.get("batch_size").unwrap().as_usize().unwrap() >= 2,
+        "the in-flight request should have seen the joiner: {r_long}"
+    );
+
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert!(
+        stats.get("joins").unwrap().as_usize().unwrap() >= 1,
+        "mid-flight join must be counted: {stats}"
+    );
+    assert!(stats.get("retires").unwrap().as_usize().unwrap() >= 3, "{stats}");
+    assert!(stats.get("occupancy_max").unwrap().as_f64().unwrap() >= 2.0, "{stats}");
     server.shutdown();
 }
 
@@ -339,8 +445,9 @@ fn stats_reservoir_caps_samples_and_reports_percentiles() {
         addr: "127.0.0.1:0".into(),
         workers: 1,
         max_batch: 1, // isolate telemetry from batching
-        gather_window_ms: 0,
+        admit_window_ms: 0,
         telemetry_reservoir: 4,
+        profiles: None,
     }) else {
         return;
     };
@@ -431,7 +538,7 @@ fn policy_auto_resolves_tuned_spec_and_batches_with_explicit() {
         addr: "127.0.0.1:0".into(),
         workers: 1,
         max_batch: 4,
-        gather_window_ms: 500,
+        admit_window_ms: 500,
         profiles: Some(tuned_store(STEPS, TUNED)),
         ..ServerConfig::default()
     }) else {
