@@ -34,6 +34,7 @@ use foresight::bench_support::{first_latent_mismatch, BenchCtx};
 use foresight::engine::{step_many_refs, Engine, Request, RunResult, Session};
 use foresight::policy::{build_policy, ReusePolicy};
 use foresight::util::benchkit::{MdTable, Report};
+use foresight::util::json::Json;
 use foresight::util::prng::Rng;
 use foresight::util::stats;
 
@@ -283,6 +284,22 @@ fn main() -> anyhow::Result<()> {
         "fig20",
         "Figure 20 — continuous step-level batching vs lockstep gather-window",
     );
+    report.config("model", Json::str(MODEL.0));
+    report.config("bucket", Json::str(MODEL.1));
+    report.config("policy", Json::str(POLICY));
+    report.config("steps", Json::num(steps as f64));
+    report.config("requests", Json::num(N_REQS as f64));
+    report.config("max_batch", Json::num(MAX_BATCH as f64));
+    report.metric("wall_s", cont.makespan);
+    report.metric("throughput_rps", thr_cont);
+    report.metric("p50_s", p50_cont);
+    report.metric("p95_s", p95_cont);
+    report.metric("p99_s", stats::percentile(&cont.latencies, 99.0));
+    report.metric("lockstep_wall_s", lock.makespan);
+    report.metric("lockstep_throughput_rps", thr_lock);
+    report.metric("lockstep_p50_s", p50_lock);
+    report.metric("lockstep_p95_s", p95_lock);
+    report.metric("mean_occupancy", cont.mean_occupancy);
     let mut tbl = MdTable::new(&[
         "Scheduler",
         "Makespan(s)",

@@ -1,0 +1,412 @@
+//! **Figure 21 (repo-original)**: multi-device sharded serving — N runtime
+//! replicas behind the continuous scheduler.
+//!
+//! Replays a fig20-style staggered arrival trace against N ∈ {1, 2, 4}
+//! independent runtime replicas (one PJRT client + executable caches +
+//! transfer meter each — exactly what `--devices N` builds in the server).
+//! Offered load scales with the fleet: N devices see B·N requests at 1/N
+//! the mean arrival gap, so per-device pressure is held constant while
+//! aggregate throughput should scale near-linearly.
+//!
+//! As in fig20, arrival times are virtual (seeded, identical discipline at
+//! every N) and execution costs are real measured walls charged to
+//! per-device virtual clocks, so the comparison is deterministic up to CPU
+//! noise. Routing in the replay is least-loaded — with a single cohort key
+//! and uniform traffic, the fixed point of the server's
+//! cohort-affinity-then-least-loaded rule.
+//!
+//! Asserts the sharding contract:
+//!
+//! * **(a) scaling** — throughput at N devices ≥ 0.70·N× the N=1
+//!   throughput on the matching B·N trace;
+//! * **(b) no single-device regression** — p50 latency at N=1 is no worse
+//!   than the pre-change continuous scheduler on the identical trace
+//!   (same discipline, small noise tolerance);
+//! * **(c) placement-independent latents** — every request served by any
+//!   replica matches its standalone oracle to ≤1e-6, including a session
+//!   force-migrated between replicas mid-request (a work steal);
+//! * **(d) metered steal** — the migrated request's `RunStats` charge
+//!   exactly one extra lane download on the source and one extra lane
+//!   upload on the target (`latent_elems·4` bytes, one call each way)
+//!   versus its never-migrated oracle.
+//!
+//! `FORESIGHT_BENCH_STEPS` overrides the step count (CI smoke mode).
+//! Exits cleanly with a SKIP note when the AOT artifacts are absent.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use foresight::bench_support::first_latent_mismatch;
+use foresight::config::Manifest;
+use foresight::engine::{step_many_refs, Engine, HotPath, Request, RunResult, Session};
+use foresight::policy::{build_policy, ReusePolicy};
+use foresight::runtime::DevicePool;
+use foresight::util::benchkit::{MdTable, Report};
+use foresight::util::json::Json;
+use foresight::util::prng::Rng;
+use foresight::util::stats;
+
+use foresight::model::LoadedModel;
+
+const MODEL: (&str, &str) = ("opensora-sim", "240p-2s");
+const POLICY: &str = "foresight:n=1,r=2,gamma=0.5";
+const MAX_BATCH: usize = 4;
+/// Requests per device — each N-device trace replays B·N requests.
+const B: usize = 4;
+const FLEETS: [usize; 3] = [1, 2, 4];
+const PROMPTS: [&str; 8] = [
+    "a paper lantern drifting over a midnight lake",
+    "a fox darting through fresh snow at dawn",
+    "waves crashing against a basalt cliff in a storm",
+    "a quiet greenhouse, sunlight through fogged glass",
+    "a tram crossing a rainy neon intersection",
+    "dust motes in a sunbeam over an old library",
+    "a glacier calving into a mirror-still fjord",
+    "origami cranes unfolding in reverse slow motion",
+];
+
+fn bench_steps() -> usize {
+    std::env::var("FORESIGHT_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10)
+        .max(4)
+}
+
+/// The shared request list: every fleet size replays a prefix of the same
+/// B·4 requests, so one oracle set covers all three traces.
+fn requests(steps: usize) -> Vec<Request> {
+    (0..B * *FLEETS.last().unwrap())
+        .map(|i| {
+            let mut r = Request::new(PROMPTS[i % PROMPTS.len()], 700 + i as u64);
+            r.steps = Some(steps);
+            r
+        })
+        .collect()
+}
+
+fn policy_for(engine: &Engine, req: &Request) -> anyhow::Result<Box<dyn ReusePolicy>> {
+    let info = &engine.model().info;
+    build_policy(POLICY, info, req.steps.unwrap_or(info.steps))
+}
+
+fn standalone(engine: &Engine, req: &Request) -> anyhow::Result<RunResult> {
+    let mut pol = policy_for(engine, req)?;
+    engine.generate(req, pol.as_mut(), None)
+}
+
+struct SimOutcome {
+    latencies: Vec<f64>,
+    makespan: f64,
+    results: Vec<Option<RunResult>>,
+}
+
+/// Event-driven replay of one device's continuous scheduler (fig20's
+/// discipline): admissions at step boundaries, eager retirement, real
+/// measured pass walls on a virtual arrival clock. `reqs`/`arrivals` are
+/// the subset routed to this device; latencies/results land at `idx`.
+fn device_sim(
+    engine: &Engine,
+    reqs: &[(usize, Request, f64)], // (global idx, request, arrival)
+    latencies: &mut [f64],
+    results: &mut [Option<RunResult>],
+) -> anyhow::Result<f64> {
+    let mut vnow = 0.0f64;
+    let mut next = 0usize;
+    let mut lanes: Vec<(Session<'static>, f64, usize)> = Vec::new();
+    let mut last_done = 0.0f64;
+
+    while next < reqs.len() || !lanes.is_empty() {
+        if lanes.is_empty() && next < reqs.len() && reqs[next].2 > vnow {
+            vnow = reqs[next].2;
+        }
+        while next < reqs.len() && reqs[next].2 <= vnow && lanes.len() < MAX_BATCH {
+            let t0 = Instant::now();
+            let pol = policy_for(engine, &reqs[next].1)?;
+            let s = engine.admit(&reqs[next].1, pol)?;
+            vnow += t0.elapsed().as_secs_f64();
+            lanes.push((s, reqs[next].2, reqs[next].0));
+            next += 1;
+        }
+        let t0 = Instant::now();
+        {
+            let mut refs: Vec<&mut Session> = lanes.iter_mut().map(|(s, _, _)| s).collect();
+            step_many_refs(&mut refs)?;
+        }
+        vnow += t0.elapsed().as_secs_f64();
+        let mut i = 0;
+        while i < lanes.len() {
+            if lanes[i].0.is_done() {
+                let (s, arr, idx) = lanes.remove(i);
+                let t0 = Instant::now();
+                let r = s.finish()?;
+                vnow += t0.elapsed().as_secs_f64();
+                latencies[idx] = vnow - arr;
+                results[idx] = Some(r);
+                last_done = vnow;
+            } else {
+                i += 1;
+            }
+        }
+    }
+    Ok(last_done)
+}
+
+/// Sharded replay: route each arrival to the least-loaded replica (fewest
+/// outstanding requests, ties by ordinal — the uniform-traffic fixed point
+/// of the server's routing), then run every device's continuous replay on
+/// its own virtual clock. Makespan is the latest per-device finish.
+fn sharded_sim(
+    engines: &[Arc<Engine>],
+    reqs: &[Request],
+    arrivals: &[f64],
+    est_service: f64,
+) -> anyhow::Result<SimOutcome> {
+    let n = engines.len();
+    let mut per_dev: Vec<Vec<(usize, Request, f64)>> = vec![Vec::new(); n];
+    // Outstanding-request estimate per device at each arrival, from the
+    // calibrated standalone service time.
+    let mut busy_until: Vec<Vec<f64>> = vec![Vec::new(); n];
+    for (i, (req, &arr)) in reqs.iter().zip(arrivals).enumerate() {
+        let load = |d: usize| busy_until[d].iter().filter(|&&t| t > arr).count();
+        let dev = (0..n).min_by_key(|&d| (load(d), d)).unwrap();
+        busy_until[dev].push(arr + est_service);
+        per_dev[dev].push((i, req.clone(), arr));
+    }
+
+    let mut latencies = vec![0.0f64; reqs.len()];
+    let mut results: Vec<Option<RunResult>> = (0..reqs.len()).map(|_| None).collect();
+    let mut last_done = 0.0f64;
+    for (d, engine) in engines.iter().enumerate() {
+        let done = device_sim(engine, &per_dev[d], &mut latencies, &mut results)?;
+        last_done = last_done.max(done);
+    }
+    Ok(SimOutcome { latencies, makespan: last_done - arrivals[0], results })
+}
+
+/// Seeded Poisson-ish arrivals: B·n requests at mean gap `base_gap / n`
+/// (offered load scales with the fleet).
+fn arrivals_for(n: usize, count: usize, base_gap: f64) -> Vec<f64> {
+    let mut rng = Rng::from_seed_and_label(11, &format!("fig21-arrivals-n{n}"));
+    let mut out = Vec::with_capacity(count);
+    let mut t = 0.0f64;
+    for _ in 0..count {
+        let u = rng.next_f64().clamp(1e-6, 1.0 - 1e-6);
+        t += -(base_gap / n as f64) * u.ln();
+        out.push(t);
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = match Manifest::load(&Manifest::default_root()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("[fig21] SKIP: artifacts unavailable ({e:#}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let steps = bench_steps();
+    let n_max = *FLEETS.last().unwrap();
+
+    // One independent runtime replica per device — the same construction
+    // `--devices N` performs in the server.
+    let pool = DevicePool::cpu(n_max)?;
+    let mut engines: Vec<Arc<Engine>> = Vec::with_capacity(n_max);
+    for rt in pool.devices() {
+        let lm = Arc::new(LoadedModel::load(rt.clone(), &manifest, MODEL.0, MODEL.1)?);
+        engines.push(Arc::new(Engine::with_hot_path(lm, manifest.schedule, HotPath::Device)));
+    }
+
+    let reqs = requests(steps);
+
+    // Standalone oracles on device 0 (identical weights on every replica
+    // ⇒ one oracle set covers all placements), plus wall calibration.
+    let mut oracles = Vec::with_capacity(reqs.len());
+    for r in &reqs {
+        oracles.push(standalone(&engines[0], r)?);
+    }
+    let step_wall = {
+        let s = &oracles[0].stats;
+        s.wall_s / s.per_step_s.len().max(1) as f64
+    };
+    let base_gap = 1.5 * step_wall;
+    let est_service = steps as f64 * step_wall;
+
+    // Warm every replica's fused-shape caches (cohort steps at each
+    // occupancy), then measure. Two passes per fleet size, as in fig20.
+    let mut outcomes: Vec<(usize, SimOutcome)> = Vec::new();
+    for &n in &FLEETS {
+        let sub = &reqs[..B * n];
+        let arrivals = arrivals_for(n, sub.len(), base_gap);
+        let _ = sharded_sim(&engines[..n], sub, &arrivals, est_service)?;
+        let out = sharded_sim(&engines[..n], sub, &arrivals, est_service)?;
+        outcomes.push((n, out));
+    }
+
+    // Baseline: the pre-change (single-device) continuous scheduler on the
+    // identical N=1 trace — fig20's discipline verbatim.
+    let base = {
+        let sub = &reqs[..B];
+        let arrivals = arrivals_for(1, sub.len(), base_gap);
+        let _ = sharded_sim(&engines[..1], sub, &arrivals, est_service)?;
+        sharded_sim(&engines[..1], sub, &arrivals, est_service)?
+    };
+
+    // --- acceptance (c): latents match the standalone oracle regardless
+    // of which replica served the request.
+    for (n, out) in &outcomes {
+        for (i, got) in out.results.iter().enumerate() {
+            let got = got.as_ref().expect("sharded sim finished every request");
+            let want = &oracles[i];
+            let mismatch = first_latent_mismatch(&got.latents.data, &want.latents.data, 1e-6);
+            assert!(
+                mismatch.is_none(),
+                "n={n} request {i}: sharded latents diverged from standalone \
+                 (first mismatch: {mismatch:?})"
+            );
+            assert_eq!(
+                (got.stats.computed_units, got.stats.reused_units),
+                (want.stats.computed_units, want.stats.reused_units),
+                "n={n} request {i}: decisions diverged"
+            );
+        }
+    }
+
+    // --- acceptance (a): near-linear throughput scaling at offered load
+    // B·N (per-device virtual clocks make this deterministic up to noise).
+    let thr: Vec<(usize, f64)> = outcomes
+        .iter()
+        .map(|(n, o)| (*n, (B * n) as f64 / o.makespan))
+        .collect();
+    let thr1 = thr[0].1;
+    for &(n, t) in &thr {
+        assert!(
+            t >= 0.70 * n as f64 * thr1,
+            "n={n}: throughput {t:.2}/s below 0.70x linear scaling from {thr1:.2}/s"
+        );
+    }
+
+    // --- acceptance (b): p50 at N=1 no worse than the pre-change
+    // scheduler on the identical trace.
+    let p50_1 = stats::percentile(&outcomes[0].1.latencies, 50.0);
+    let p50_base = stats::percentile(&base.latencies, 50.0);
+    assert!(
+        p50_1 <= p50_base * 1.10 + 0.05,
+        "sharded n=1 p50 {p50_1:.3}s worse than single-device baseline {p50_base:.3}s"
+    );
+
+    // --- acceptance (c)+(d): a forced mid-request steal. The session
+    // starts on replica 0, migrates to replica 1 at the halfway boundary,
+    // and must finish bit-compatible with its never-migrated oracle while
+    // charging exactly one lane download + one lane upload.
+    let mreq = {
+        let mut r = Request::new("a crane folding itself from paper", 991);
+        r.steps = Some(steps);
+        r
+    };
+    let oracle_m = standalone(&engines[0], &mreq)?;
+    let lane_bytes = {
+        let m = engines[0].model();
+        let [f, p, _] = m.state_dims();
+        let [_, _, c_lat] = m.latent_dims();
+        (f * p * c_lat * 4) as u64
+    };
+    let pol = policy_for(&engines[0], &mreq)?;
+    let mut sess = engines[0].admit(&mreq, pol)?;
+    for _ in 0..steps / 2 {
+        sess.step(None)?;
+    }
+    sess.migrate(&engines[1])?;
+    while !sess.is_done() {
+        sess.step(None)?;
+    }
+    let got = sess.finish()?;
+    let mismatch = first_latent_mismatch(&got.latents.data, &oracle_m.latents.data, 1e-6);
+    assert!(
+        mismatch.is_none(),
+        "migrated session diverged from never-migrated oracle (first mismatch: {mismatch:?})"
+    );
+    assert_eq!(
+        (got.stats.computed_units, got.stats.reused_units),
+        (oracle_m.stats.computed_units, oracle_m.stats.reused_units),
+        "migrated session: decisions diverged"
+    );
+    assert_eq!(
+        got.stats.d2h_bytes,
+        oracle_m.stats.d2h_bytes + lane_bytes,
+        "steal download bytes != one metered lane"
+    );
+    assert_eq!(got.stats.d2h_calls, oracle_m.stats.d2h_calls + 1, "steal download calls != 1");
+    assert_eq!(
+        got.stats.h2d_bytes,
+        oracle_m.stats.h2d_bytes + lane_bytes,
+        "steal upload bytes != one metered lane"
+    );
+    assert_eq!(got.stats.h2d_calls, oracle_m.stats.h2d_calls + 1, "steal upload calls != 1");
+
+    // --- report -------------------------------------------------------
+    let mut report = Report::new(
+        "fig21",
+        "Figure 21 — multi-device sharded serving: throughput scaling and steal correctness",
+    );
+    report.config("model", Json::str(MODEL.0));
+    report.config("bucket", Json::str(MODEL.1));
+    report.config("policy", Json::str(POLICY));
+    report.config("steps", Json::num(steps as f64));
+    report.config("requests_per_device", Json::num(B as f64));
+    report.config("max_batch", Json::num(MAX_BATCH as f64));
+    report.config(
+        "fleets",
+        Json::Arr(FLEETS.iter().map(|&n| Json::num(n as f64)).collect()),
+    );
+
+    let mut tbl = MdTable::new(&[
+        "Devices",
+        "Requests",
+        "Makespan(s)",
+        "Req/s",
+        "Scaling vs N=1",
+        "p50 lat(s)",
+        "p99 lat(s)",
+    ]);
+    for (n, out) in &outcomes {
+        let t = (B * n) as f64 / out.makespan;
+        tbl.row(vec![
+            format!("{n}"),
+            format!("{}", B * n),
+            format!("{:.3}", out.makespan),
+            format!("{t:.2}"),
+            format!("{:.2}x", t / thr1.max(1e-9)),
+            format!("{:.3}", stats::percentile(&out.latencies, 50.0)),
+            format!("{:.3}", stats::percentile(&out.latencies, 99.0)),
+        ]);
+    }
+    report.table("B·N staggered arrivals per fleet size, least-loaded routing", &tbl);
+    report.csv("scaling", &tbl);
+
+    let (n_top, out_top) = outcomes.last().unwrap();
+    report.metric("wall_s", out_top.makespan);
+    report.metric("throughput_rps", (B * n_top) as f64 / out_top.makespan);
+    report.metric("p50_s", stats::percentile(&out_top.latencies, 50.0));
+    report.metric("p99_s", stats::percentile(&out_top.latencies, 99.0));
+    for (n, out) in &outcomes {
+        report.metric(&format!("throughput_rps_n{n}"), (B * n) as f64 / out.makespan);
+        report.metric(&format!("p50_s_n{n}"), stats::percentile(&out.latencies, 50.0));
+    }
+    report.metric("baseline_p50_s", p50_base);
+    report.metric("steal_lane_bytes", lane_bytes as f64);
+
+    report.text(&format!(
+        "\n{} replicas serve {}x the N=1 offered load at {:.2}x the N=1 \
+         throughput; every request matches its standalone oracle to ≤1e-6 \
+         regardless of serving replica, and a forced mid-request steal \
+         charges exactly one lane down + one lane up ({lane_bytes} bytes \
+         each way) while staying bit-compatible.",
+        n_top,
+        n_top,
+        ((B * n_top) as f64 / out_top.makespan) / thr1.max(1e-9),
+    ));
+    report.finish()?;
+    Ok(())
+}

@@ -143,6 +143,42 @@ impl FeatureCache {
         self.entries.clear();
         self.current_bytes = 0;
     }
+
+    // --- device-migration support -------------------------------------
+    //
+    // Session migration (engine::Session::migrate) rebuilds a cache on
+    // another runtime: entries are drained here, round-tripped
+    // device→host→device by the caller, restored into a fresh cache, and
+    // the lifetime accounting is adopted so the migrated request reports
+    // the same policy behavior (stores/hits) and true peak footprint it
+    // would have reported had it never moved.
+
+    /// Remove and return every entry, in key order. Lifetime counters and
+    /// the peak stay behind for [`FeatureCache::adopt_accounting`].
+    pub fn drain_entries(&mut self) -> Vec<(CacheKey, CacheEntry)> {
+        self.current_bytes = 0;
+        std::mem::take(&mut self.entries).into_iter().collect()
+    }
+
+    /// Insert a transferred entry **without** counting a policy store —
+    /// a migration rebuild is data movement, not a caching decision.
+    pub fn restore(&mut self, key: CacheKey, device: Arc<DeviceTensor>, step: usize) {
+        let entry = CacheEntry { device, step };
+        let new_bytes = Self::entry_bytes(&entry);
+        if let Some(old) = self.entries.insert(key, entry) {
+            self.current_bytes -= Self::entry_bytes(&old);
+        }
+        self.current_bytes += new_bytes;
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes);
+    }
+
+    /// Carry a predecessor cache's lifetime counters and peak across a
+    /// migration rebuild.
+    pub fn adopt_accounting(&mut self, prev: &FeatureCache) {
+        self.stores = prev.stores;
+        self.hits = prev.hits;
+        self.peak_bytes = self.peak_bytes.max(prev.peak_bytes);
+    }
 }
 
 #[cfg(test)]
@@ -232,6 +268,34 @@ mod tests {
         assert_eq!(c.hits, 1);
         assert_eq!(c.stores, 1);
         assert_eq!(c.get(&k).unwrap().step, 3);
+    }
+
+    #[test]
+    fn drain_restore_adopt_preserves_accounting() {
+        let rt = Runtime::cpu().unwrap();
+        let mut c = FeatureCache::new();
+        c.put(key(0, 0, Unit::Block), dev(&rt, 100), 0);
+        c.put(key(0, 1, Unit::Block), dev(&rt, 300), 1);
+        c.put(key(0, 0, Unit::Block), dev(&rt, 50), 2); // shrink → peak > current
+        let _ = c.get(&key(0, 1, Unit::Block));
+        let (stores, hits, peak, cur) = (c.stores, c.hits, c.peak_bytes(), c.current_bytes());
+        assert!(peak > cur);
+
+        let entries = c.drain_entries();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(c.current_bytes(), 0);
+
+        let mut m = FeatureCache::new();
+        for (k, e) in entries {
+            m.restore(k, e.device, e.step);
+        }
+        m.adopt_accounting(&c);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.current_bytes(), cur, "byte-identical resident set");
+        assert_eq!(m.peak_bytes(), peak, "peak carried across the rebuild");
+        assert_eq!(m.stores, stores, "restore() is not a policy store");
+        assert_eq!(m.hits, hits);
+        assert_eq!(m.peek(&key(0, 0, Unit::Block)).unwrap().step, 2);
     }
 
     #[test]

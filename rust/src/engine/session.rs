@@ -68,7 +68,7 @@ use crate::cache::{CacheKey, FeatureCache, Unit};
 use crate::config::SamplerKind;
 use crate::model::{BlockKind, LoadedModel, SubUnit};
 use crate::policy::{sites_for, Action, CacheMode, Granularity, ReusePolicy, Site};
-use crate::runtime::{DeviceTensor, Executable, HostTensor};
+use crate::runtime::{DeviceTensor, Executable, HostTensor, Runtime};
 use crate::sampler::{self, DeviceCoeffs, DeviceStepper, Sampler};
 use crate::util::prng::Rng;
 use crate::util::stats::mse_f32;
@@ -167,12 +167,26 @@ struct BranchWorker {
 
 impl BranchWorker {
     fn spawn(model: Arc<LoadedModel>, bctx: Arc<BranchCtx>, branch: usize, rp: RunParams) -> Self {
+        Self::spawn_with_cache(model, bctx, branch, rp, FeatureCache::new())
+    }
+
+    /// Spawn with a pre-populated cache — the device-migration path seeds
+    /// the new worker with the entries transferred from the old device so
+    /// the policy sees exactly the cache state it would have seen had the
+    /// session never moved.
+    fn spawn_with_cache(
+        model: Arc<LoadedModel>,
+        bctx: Arc<BranchCtx>,
+        branch: usize,
+        rp: RunParams,
+        cache: FeatureCache,
+    ) -> Self {
         let (tx_job, rx_job) = mpsc::channel::<WorkerJob>();
         let (tx_res, rx_res) = mpsc::channel::<Result<BranchOut>>();
         let handle = std::thread::Builder::new()
             .name(format!("foresight-session-branch-{branch}"))
             .spawn(move || {
-                let mut cache = FeatureCache::new();
+                let mut cache = cache;
                 let mut mirror: HostMirror = BTreeMap::new();
                 while let Ok((step, c, h0, actions)) = rx_job.recv() {
                     let ctx = StepCtx {
@@ -278,6 +292,10 @@ struct DeviceGear {
 /// A started generation request (see module docs).
 pub struct Session<'p> {
     model: Arc<LoadedModel>,
+    /// Request prompt, kept so device migration can recompute the text
+    /// conditioning on the target runtime (the embedding is deterministic;
+    /// the session stores no other copy of the request).
+    prompt: String,
     hot_path: HotPath,
     policy: Box<dyn ReusePolicy + 'p>,
     rp: RunParams,
@@ -424,6 +442,7 @@ impl<'p> Session<'p> {
 
         Ok(Session {
             model: m,
+            prompt: req.prompt.clone(),
             hot_path: engine.hot_path,
             policy,
             rp,
@@ -756,6 +775,159 @@ impl<'p> Session<'p> {
             thresholds: self.policy.thresholds(),
         })
     }
+
+    /// Move this in-flight session to another device replica (work
+    /// stealing at a step boundary — see the server scheduler docs).
+    ///
+    /// `target` must serve the same (model, bucket) from a *different*
+    /// runtime. The resident lane latent is downloaded on the source and
+    /// uploaded on the target — exactly one extra lane download + upload
+    /// charged to [`RunStats`], the only deviation from the standalone
+    /// byte model a migration introduces. Everything else is
+    /// request-constant state, rebuilt or round-tripped outside the
+    /// per-request meter (each runtime's `TransferStats` still records
+    /// the true bus traffic): cached features move device→host→device
+    /// bit-exactly with their accounting (peak/stores/hits) carried over,
+    /// text conditioning is recomputed from the stored prompt, and the
+    /// sampler gear is rebuilt from the sampler's own coefficients — so
+    /// every subsequent decision, drift measurement and latent byte is
+    /// identical to a never-migrated run (f32 round-trips are lossless).
+    ///
+    /// Any failure mid-transfer poisons the session (state may be split
+    /// across devices); callers must drop it and answer the client.
+    pub fn migrate(&mut self, target: &Engine) -> Result<()> {
+        if self.poisoned {
+            return Err(anyhow!("migrate on a session poisoned by an earlier error"));
+        }
+        if self.is_done() {
+            return Err(anyhow!("migrate on a finished session"));
+        }
+        let dst_m = target.model.clone();
+        if Arc::ptr_eq(&self.model, &dst_m) {
+            return Err(anyhow!("migrate to the session's own device"));
+        }
+        if self.hot_path != HotPath::Device || target.hot_path != HotPath::Device {
+            return Err(anyhow!("migration requires device-resident sessions"));
+        }
+        if !matches!(self.exec, Exec::Workers(_)) {
+            return Err(anyhow!("migration requires parallel branch workers"));
+        }
+        if dst_m.info.name != self.model.info.name {
+            return Err(anyhow!(
+                "migrate across models: {} -> {}",
+                self.model.info.name,
+                dst_m.info.name
+            ));
+        }
+        let [f, p, _d] = dst_m.state_dims();
+        let [_, _, c_lat] = dst_m.latent_dims();
+        if [f, p, c_lat] != self.dims {
+            return Err(anyhow!("migrate across shape buckets"));
+        }
+        if dst_m.info.sampler != self.smp.kind() {
+            return Err(anyhow!("migrate across sampler families"));
+        }
+        let r = self.migrate_inner(dst_m);
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn migrate_inner(&mut self, dst_m: Arc<LoadedModel>) -> Result<()> {
+        let src_rt = self.model.runtime().clone();
+        let dst_rt = dst_m.runtime().clone();
+        let info = &dst_m.info;
+
+        // 1. Lane latent source→host: the metered lane download. A lane
+        //    still stacked in a cohort tensor is extracted first (pure
+        //    device data movement).
+        let mut x_host = vec![0.0f32; self.latent_elems];
+        match std::mem::replace(&mut self.latent, Latent::Host(Vec::new())) {
+            Latent::DeviceOwn(t) => src_rt.download_into(&t, &mut x_host)?,
+            Latent::DeviceStacked { stack, lane } => {
+                let t = src_rt.lane(stack.dims(), lane)?.run(&[stack.as_ref()])?;
+                src_rt.download_into(&t, &mut x_host)?;
+            }
+            Latent::Host(_) => return Err(anyhow!("migrate on a host-resident session")),
+        }
+        self.stats.d2h_bytes += (self.latent_elems * 4) as u64;
+        self.stats.d2h_calls += 1;
+
+        // 2. Recover the branch caches and round-trip every entry onto
+        //    the target (bit-exact; accounting carried over).
+        let (cache_c, cache_u) = match &mut self.exec {
+            Exec::Workers(ws) => (ws[0].shutdown()?, ws[1].shutdown()?),
+            Exec::Inline { .. } => unreachable!("validated by migrate"),
+        };
+        let cache_c = transfer_cache(&src_rt, &dst_rt, cache_c)?;
+        let cache_u = transfer_cache(&src_rt, &dst_rt, cache_u)?;
+
+        // 3. Recompute text conditioning on the target from the stored
+        //    prompt (deterministic embedding + the target's identical
+        //    weights ⇒ identical K/V).
+        let cond_raw = workload::embed_prompt(&self.prompt, info.d_text, info.text_len);
+        let uncond_raw = HostTensor::zeros(vec![info.text_len, info.d_text]);
+        let rc = branch_ctx(&dst_m, &cond_raw)?;
+        let ru = branch_ctx(&dst_m, &uncond_raw)?;
+        self.branches = [Arc::new(rc), Arc::new(ru)];
+
+        // 4. Rebuild the device gear: every t-value and step coefficient
+        //    is recoverable from the sampler, so nothing numeric survives
+        //    from the source copies.
+        let cfg_exec = dst_rt.cfg_combine(&self.dims)?;
+        let cfg_scale_dev = dst_rt.upload(&[self.rp.cfg_scale], &[])?;
+        let stepper = DeviceStepper::new(&dst_rt, self.smp.kind(), &self.dims)?;
+        let t_values: Vec<f32> = (0..self.rp.steps).map(|i| self.smp.t_value(i)).collect();
+        let c_steps = dst_m.t_embeds(&t_values)?;
+        let mut coeffs = Vec::with_capacity(self.rp.steps);
+        for i in 0..self.rp.steps {
+            coeffs.push(stepper.upload_coeffs(&self.smp.step_coeffs(i))?);
+        }
+        self.gear = Some(DeviceGear { stepper, cfg_exec, cfg_scale_dev, c_steps, coeffs });
+
+        // 5. Latent host→target: the metered lane upload.
+        let x_dev = dst_rt.upload(&x_host, &self.dims)?;
+        self.stats.h2d_bytes += (self.latent_elems * 4) as u64;
+        self.stats.h2d_calls += 1;
+        self.latent = Latent::DeviceOwn(x_dev);
+
+        // 6. Fresh workers on the target, seeded with the moved caches.
+        self.exec = Exec::Workers([
+            BranchWorker::spawn_with_cache(
+                dst_m.clone(),
+                self.branches[0].clone(),
+                0,
+                self.rp,
+                cache_c,
+            ),
+            BranchWorker::spawn_with_cache(
+                dst_m.clone(),
+                self.branches[1].clone(),
+                1,
+                self.rp,
+                cache_u,
+            ),
+        ]);
+        self.model = dst_m;
+        Ok(())
+    }
+}
+
+/// Round-trip every cache entry `src`→host→`dst` (f32-lossless), restoring
+/// into a fresh cache that adopts the predecessor's lifetime accounting.
+/// Metered only by the runtimes' `TransferStats` — a migration is
+/// infrastructure traffic, not part of the request's standalone byte model.
+fn transfer_cache(src: &Runtime, dst: &Runtime, mut cache: FeatureCache) -> Result<FeatureCache> {
+    let mut out = FeatureCache::new();
+    for (key, entry) in cache.drain_entries() {
+        let mut host = vec![0.0f32; entry.device.element_count()];
+        src.download_into(&entry.device, &mut host)?;
+        let dev = Arc::new(dst.upload(&host, entry.device.dims())?);
+        out.restore(key, dev, entry.step);
+    }
+    out.adopt_accounting(&cache);
+    Ok(out)
 }
 
 /// Advance every session in the slice one step as one cohort (see module

@@ -86,6 +86,25 @@
 //! than the retired gather-window discipline. See [`engine`] §Sessions
 //! and [`server`] §Continuous batching.
 //!
+//! The scheduler **shards across device replicas**: `foresight serve
+//! --devices N` builds a [`runtime::DevicePool`] of N independent
+//! runtimes (each with its own PJRT client, executable caches and
+//! [`runtime::TransferStats`]), loads every served (model, bucket) once
+//! per ordinal, and pins one continuous-batching worker to each. A
+//! routing front assigns each arrival cohort-affinity-first (a device
+//! already running that key with a spare lane), else least-loaded; idle
+//! devices steal queued jobs for free, and when every queue is empty a
+//! fully idle device takes over a *running* session from the most-loaded
+//! one via [`engine::session::Session::migrate`] — one metered lane
+//! download + upload, bit-exact at the destination. The `stats` op grows
+//! `devices`, `steals` and a `per_device` breakdown (lanes, occupancy,
+//! joins/retires/steals, per-ordinal bus bytes); at the default
+//! `--devices 1` the wire format and scheduler behavior are unchanged.
+//! `benches/fig21_sharded.rs` replays an arrival trace at N ∈ {1, 2, 4}
+//! asserting near-linear throughput scaling, placement-independent
+//! latents (≤1e-6) and the exact one-lane steal charge. See [`server`]
+//! §Sharded topology and the `server::scheduler` module docs.
+//!
 //! # Autotune
 //!
 //! Reuse knobs (γ, warmup, N/R) are not one-size-fits-all: the right

@@ -17,7 +17,7 @@ use foresight::config::Manifest;
 use foresight::engine::{Engine, Request};
 use foresight::model::{BlockKind, LoadedModel};
 use foresight::policy::build_policy;
-use foresight::runtime::Runtime;
+use foresight::runtime::{DevicePool, Runtime};
 use foresight::server::{EngineRegistry, Server, ServerConfig};
 use foresight::util::cli::Cli;
 
@@ -115,7 +115,12 @@ fn cmd_generate(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let p = Cli::new("foresight serve", "start the TCP JSON-lines server")
         .opt("addr", "127.0.0.1:7878", "bind address")
-        .opt("workers", "2", "worker threads")
+        .opt("workers", "2", "worker threads (single-device pool; ignored with --devices > 1)")
+        .opt(
+            "devices",
+            "1",
+            "runtime replicas to shard the scheduler across (1 = classic single-device server)",
+        )
         .opt(
             "models",
             "opensora-sim:240p-2s",
@@ -145,7 +150,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .map_err(|e| anyhow!("{e}"))?;
 
     let manifest = Manifest::load(&Manifest::default_root())?;
-    let rt = Arc::new(Runtime::cpu()?);
+    let devices = p.get_usize("devices").map_err(|e| anyhow!(e))?.max(1);
+    let pool = Arc::new(DevicePool::cpu(devices)?);
     let pairs: Vec<(String, String)> = p
         .get_list("models")
         .iter()
@@ -194,12 +200,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             legacy
         }
     };
-    let registry = Arc::new(EngineRegistry::load(rt, &manifest, &pairs)?);
+    let registry = Arc::new(EngineRegistry::load_pool(pool, &manifest, &pairs)?);
     let server = Server::start(
         registry,
         ServerConfig {
             addr: p.get("addr").to_string(),
             workers: p.get_usize("workers").map_err(|e| anyhow!(e))?,
+            devices,
             max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?,
             admit_window_ms: admit_ms,
             profiles,
@@ -207,7 +214,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         },
     )?;
     println!("foresight server listening on {}", server.addr());
-    println!("loaded: {pairs:?}");
+    println!("loaded: {pairs:?} on {devices} device(s)");
     println!("press Ctrl-C to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

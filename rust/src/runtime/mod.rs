@@ -160,6 +160,65 @@ impl TransferSnapshot {
     }
 }
 
+/// N independent runtime replicas — the unit of data-parallel scale-out.
+///
+/// Each ordinal owns a full [`Runtime`]: its own PJRT client, compiled- and
+/// fused-executable caches, and [`TransferStats`]. Nothing is shared between
+/// ordinals, so per-device transfer counters stay an honest account of what
+/// crossed *that* device's bus, and a model must be loaded once per ordinal
+/// (weights are device-resident state). The sharded server
+/// (`server::scheduler`) runs one worker per ordinal and migrates sessions
+/// between them; `DevicePool::cpu(1)` degenerates to exactly the old
+/// single-runtime world.
+pub struct DevicePool {
+    devices: Vec<Arc<Runtime>>,
+}
+
+impl DevicePool {
+    /// Construct `n.max(1)` independent CPU runtimes.
+    pub fn cpu(n: usize) -> Result<Self> {
+        let n = n.max(1);
+        let mut devices = Vec::with_capacity(n);
+        for _ in 0..n {
+            devices.push(Arc::new(Runtime::cpu()?));
+        }
+        Ok(Self { devices })
+    }
+
+    /// Wrap pre-built runtimes (ordinal = index). Errors on an empty list:
+    /// a pool with no devices can serve nothing.
+    pub fn from_runtimes(devices: Vec<Arc<Runtime>>) -> Result<Self> {
+        if devices.is_empty() {
+            return Err(anyhow!("device pool needs at least one runtime"));
+        }
+        Ok(Self { devices })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        // Constructors reject empty pools.
+        false
+    }
+
+    /// The runtime at `ordinal`; panics on an out-of-range ordinal (device
+    /// counts are fixed at construction and validated at config time).
+    pub fn device(&self, ordinal: usize) -> &Arc<Runtime> {
+        &self.devices[ordinal]
+    }
+
+    pub fn devices(&self) -> &[Arc<Runtime>] {
+        &self.devices
+    }
+
+    /// Per-ordinal transfer counters (index = device ordinal).
+    pub fn transfer_snapshots(&self) -> Vec<TransferSnapshot> {
+        self.devices.iter().map(|d| d.transfer_stats().snapshot()).collect()
+    }
+}
+
 /// One compiled HLO module ready to execute.
 pub struct Executable {
     name: String,

@@ -1,11 +1,54 @@
-//! TCP JSON-lines serving front-end: router, request queue, continuous
-//! (step-level) batching scheduler, worker pool.
+//! TCP JSON-lines serving front-end: routing front, per-device queues,
+//! continuous (step-level) batching scheduler, sharded worker pool.
 //!
 //! This is the L3 deployment surface: a newline-delimited JSON protocol
 //! over TCP (one request object per line, one response object per line),
-//! a FIFO queue whose workers drive **session cohorts** one denoising
-//! step at a time, and aggregate latency telemetry. Python is never
-//! involved; workers drive the PJRT executables directly.
+//! per-device FIFO queues whose workers drive **session cohorts** one
+//! denoising step at a time, and aggregate latency telemetry. Python is
+//! never involved; workers drive the PJRT executables directly.
+//!
+//! # Sharded topology (`--devices N`)
+//!
+//! The server scales out across **N runtime replicas**
+//! ([`crate::runtime::DevicePool`]): each device ordinal owns an
+//! independent PJRT client, executable caches and transfer meters, the
+//! [`EngineRegistry`] loads every (model, bucket) once *per device*, and
+//! the scheduler runs one worker per device over a per-device queue
+//! (`devices: 1`, the default, keeps the classic shared-queue worker
+//! pool on device 0 — behavior and wire responses are byte-compatible
+//! with the single-device server).
+//!
+//! **Routing rules** (admit time, under one router lock): a `generate`
+//! job goes to (1) *cohort affinity* — the device whose in-flight cohort
+//! has the same (model, bucket) key and a spare lane absorbs it at its
+//! next step boundary; fewest active lanes wins, ties to the lowest
+//! ordinal — else (2) *least-loaded* — fewest active lanes, ties broken
+//! by shortest queue (FIFO pressure), then lowest ordinal. Per-device
+//! queues are strict FIFO and boundary admission still takes only the
+//! compatible queue-front **prefix** (scheduler docs), so a routed job is
+//! never reordered behind later arrivals for its device.
+//!
+//! **Steal policy** (step boundaries only): an idle device first takes
+//! the *front* job of the most-loaded device's queue (free — the oldest
+//! queued job just starts earlier, preserving per-key FIFO); when every
+//! queue is empty it asks for a **session migration**, and the
+//! most-loaded device — at its next step boundary, holding ≥ 2 lanes —
+//! moves one in-flight session over via
+//! [`crate::engine::Session::migrate`]: exactly one lane download on the
+//! source plus one upload on the target charged to the request's
+//! `RunStats` (cache/conditioning round-trips are metered only by the
+//! runtimes' `TransferStats`), with latents bit-identical to a
+//! never-migrated run. A device mid-cohort with spare lanes and an empty
+//! queue may also pull compatible queue-front jobs from other devices.
+//!
+//! **Per-device stats schema**: with `devices > 1` the `stats` op adds
+//! `devices` (count), `steals` (sessions migrated, total) and a
+//! `per_device` array of `{device, lanes_active, occupancy_mean,
+//! occupancy_max, joins, retires, steals, h2d_bytes, h2d_calls,
+//! d2h_bytes, d2h_calls}` — transfer counters come straight from each
+//! replica's [`crate::runtime::TransferStats`]. All existing aggregate
+//! fields keep their names and meaning; at `devices: 1` the response is
+//! unchanged.
 //!
 //! Protocol ops:
 //! * `{"op":"ping"}` → `{"status":"ok","pong":true}`
@@ -98,11 +141,11 @@
 //! the autotune CLI with an error instead of stalling it forever.
 
 use anyhow::{anyhow, Context, Result};
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::autotune::ProfileStore;
@@ -110,7 +153,7 @@ use crate::config::Manifest;
 use crate::engine::{Engine, Request, RunResult};
 use crate::model::LoadedModel;
 use crate::policy::build_policy;
-use crate::runtime::Runtime;
+use crate::runtime::{DevicePool, Runtime};
 use crate::util::json::{self, Json};
 use crate::util::stats::{self, Reservoir};
 
@@ -125,29 +168,64 @@ pub const DEFAULT_POLICY: &str = "foresight";
 /// §`policy=auto` resolution).
 pub const AUTO_POLICY: &str = "auto";
 
-/// Engines per (model, bucket), loaded once and shared by all workers.
+/// Engines per (model, bucket) **per device replica**, loaded once and
+/// shared by all workers. Each (model, bucket) pair gets one independent
+/// [`Engine`] on every device of the pool (module docs §Sharded
+/// topology); index `d` of a pair's vector is pinned to pool ordinal `d`.
 pub struct EngineRegistry {
-    engines: BTreeMap<(String, String), Arc<Engine>>,
+    pool: Arc<DevicePool>,
+    engines: BTreeMap<(String, String), Vec<Arc<Engine>>>,
 }
 
 impl EngineRegistry {
-    /// Load the given (model, bucket) pairs from the artifact manifest.
+    /// Load the given (model, bucket) pairs from the artifact manifest
+    /// onto a single runtime (device 0). The single-device entry point
+    /// every pre-sharding caller keeps using.
     pub fn load(rt: Arc<Runtime>, manifest: &Manifest, pairs: &[(String, String)]) -> Result<Self> {
-        let mut engines = BTreeMap::new();
-        for (model, bucket) in pairs {
-            let lm = Arc::new(LoadedModel::load(rt.clone(), manifest, model, bucket)?);
-            engines.insert(
-                (model.clone(), bucket.clone()),
-                Arc::new(Engine::new(lm, manifest.schedule)),
-            );
-        }
-        Ok(Self { engines })
+        Self::load_pool(Arc::new(DevicePool::from_runtimes(vec![rt])?), manifest, pairs)
     }
 
+    /// Load every (model, bucket) pair once per device of the pool.
+    pub fn load_pool(
+        pool: Arc<DevicePool>,
+        manifest: &Manifest,
+        pairs: &[(String, String)],
+    ) -> Result<Self> {
+        let mut engines = BTreeMap::new();
+        for (model, bucket) in pairs {
+            let mut per_dev = Vec::with_capacity(pool.len());
+            for rt in pool.devices() {
+                let lm = Arc::new(LoadedModel::load(rt.clone(), manifest, model, bucket)?);
+                per_dev.push(Arc::new(Engine::new(lm, manifest.schedule)));
+            }
+            engines.insert((model.clone(), bucket.clone()), per_dev);
+        }
+        Ok(Self { pool, engines })
+    }
+
+    /// The device-0 replica (single-device callers).
     pub fn get(&self, model: &str, bucket: &str) -> Result<&Arc<Engine>> {
-        self.engines
+        self.get_on(model, bucket, 0)
+    }
+
+    /// The replica pinned to device ordinal `device`.
+    pub fn get_on(&self, model: &str, bucket: &str, device: usize) -> Result<&Arc<Engine>> {
+        let per_dev = self
+            .engines
             .get(&(model.to_string(), bucket.to_string()))
-            .ok_or_else(|| anyhow!("no engine loaded for {model}/{bucket}"))
+            .ok_or_else(|| anyhow!("no engine loaded for {model}/{bucket}"))?;
+        per_dev
+            .get(device)
+            .ok_or_else(|| anyhow!("no device-{device} replica for {model}/{bucket}"))
+    }
+
+    /// Number of device replicas behind this registry.
+    pub fn devices(&self) -> usize {
+        self.pool.len()
+    }
+
+    pub fn pool(&self) -> &Arc<DevicePool> {
+        &self.pool
     }
 
     pub fn keys(&self) -> Vec<(String, String)> {
@@ -290,12 +368,35 @@ struct Telemetry {
     /// `policy=auto` requests served [`DEFAULT_POLICY`] because no profile
     /// matched (or no store was loaded) — untuned traffic.
     auto_fallbacks: AtomicU64,
+    /// Sessions migrated between devices by work stealing (total; each is
+    /// also credited to the *target* device's [`DeviceTelemetry`]).
+    steals: AtomicU64,
+    /// One entry per device ordinal (module docs §Per-device stats).
+    per_device: Vec<DeviceTelemetry>,
     latencies_s: Mutex<Reservoir>,
     queue_s: Mutex<Reservoir>,
 }
 
+/// Per-device slice of the scheduler telemetry. The aggregate counters
+/// above keep their exact pre-sharding meaning; these split the same
+/// events by the device ordinal whose worker performed them.
+struct DeviceTelemetry {
+    /// Sessions resident on this device right now (gauge).
+    lanes_active: AtomicU64,
+    /// Mid-flight admissions into this device's cohorts.
+    joins: AtomicU64,
+    /// Sessions finished and answered by this device's worker.
+    retires: AtomicU64,
+    /// Sessions migrated *onto* this device by work stealing.
+    steals: AtomicU64,
+    /// Largest per-step cohort occupancy seen on this device.
+    occupancy_peak: AtomicU64,
+    /// Per-step cohort occupancy on this device.
+    occupancy: Mutex<Reservoir>,
+}
+
 impl Telemetry {
-    fn new(reservoir_cap: usize) -> Self {
+    fn new(reservoir_cap: usize, devices: usize) -> Self {
         Self {
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
@@ -310,6 +411,17 @@ impl Telemetry {
             occupancy: Mutex::new(Reservoir::new(reservoir_cap)),
             auto_resolved: AtomicU64::new(0),
             auto_fallbacks: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            per_device: (0..devices.max(1))
+                .map(|_| DeviceTelemetry {
+                    lanes_active: AtomicU64::new(0),
+                    joins: AtomicU64::new(0),
+                    retires: AtomicU64::new(0),
+                    steals: AtomicU64::new(0),
+                    occupancy_peak: AtomicU64::new(0),
+                    occupancy: Mutex::new(Reservoir::new(reservoir_cap)),
+                })
+                .collect(),
             latencies_s: Mutex::new(Reservoir::new(reservoir_cap)),
             queue_s: Mutex::new(Reservoir::new(reservoir_cap)),
         }
@@ -318,20 +430,23 @@ impl Telemetry {
 
 /// Shared context a connection handler needs to route one protocol line.
 struct ServeCtx {
-    queue: Queue,
+    router: Arc<scheduler::Router>,
     stop: Arc<AtomicBool>,
     telemetry: Arc<Telemetry>,
     registry: Arc<EngineRegistry>,
     profiles: Option<Arc<ProfileStore>>,
+    /// Scheduler shards (`devices > 1` adds per-device stats fields).
+    devices: usize,
 }
 
 /// The running server; dropping it (or calling [`Server::shutdown`]) stops
-/// the listener and workers. Shutdown broadcasts on the queue condvar so
-/// idle workers wake and exit immediately instead of polling.
+/// the listener and workers. Shutdown broadcasts on the router condvar so
+/// idle workers on every device wake and exit immediately instead of
+/// polling (see [`scheduler::Router::signal_stop`]).
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    queue: Queue,
+    router: Arc<scheduler::Router>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -339,7 +454,15 @@ pub struct Server {
 pub struct ServerConfig {
     /// Bind address; use port 0 for an ephemeral port (tests).
     pub addr: String,
+    /// Scheduler threads **at `devices: 1`** (the classic worker pool all
+    /// sharing device 0). With `devices > 1` the scheduler is sharded —
+    /// exactly one worker per device — and this field is ignored.
     pub workers: usize,
+    /// Runtime replicas to serve across (module docs §Sharded topology).
+    /// The registry must have been loaded with at least this many devices
+    /// ([`EngineRegistry::load_pool`]). 1 (default): single-device server,
+    /// byte-compatible behavior and wire responses.
+    pub devices: usize,
     /// Maximum sessions sharing one cohort's device pass (1 disables
     /// batching entirely).
     pub max_batch: usize,
@@ -364,26 +487,13 @@ impl Default for ServerConfig {
         Self {
             addr: "127.0.0.1:0".to_string(),
             workers: 2,
+            devices: 1,
             max_batch: 4,
             admit_window_ms: 0,
             telemetry_reservoir: 4096,
             profiles: None,
         }
     }
-}
-
-type Queue = Arc<(Mutex<VecDeque<Job>>, Condvar)>;
-
-/// Set the stop flag under the queue lock and wake every waiting worker.
-/// Taking the lock first closes the race where a worker has checked `stop`
-/// but not yet parked on the condvar (the notify would otherwise be lost
-/// and shutdown's joins would hang). Shared by [`Server::shutdown`]/drop
-/// and the wire-level `shutdown` op so the protocol exists once.
-fn signal_stop(queue: &Queue, stop: &AtomicBool) {
-    let (lock, cv) = &**queue;
-    let _guard = lock.lock().unwrap();
-    stop.store(true, Ordering::SeqCst);
-    cv.notify_all();
 }
 
 /// Transient accept(2) failures worth retrying: per-connection errors the
@@ -411,25 +521,40 @@ fn accept_should_retry(e: &std::io::Error) -> bool {
 impl Server {
     /// Start the listener + worker pool.
     pub fn start(registry: Arc<EngineRegistry>, cfg: ServerConfig) -> Result<Server> {
+        let devices = cfg.devices.max(1);
+        if registry.devices() < devices {
+            return Err(anyhow!(
+                "server configured for {devices} devices but the registry loaded {}",
+                registry.devices()
+            ));
+        }
         let listener = TcpListener::bind(&cfg.addr).context("bind")?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let queue: Queue = Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
-        let telemetry = Arc::new(Telemetry::new(cfg.telemetry_reservoir));
-        let mut handles = Vec::new();
         let max_batch = cfg.max_batch.max(1);
         let admit_window = Duration::from_millis(cfg.admit_window_ms);
+        let router = Arc::new(scheduler::Router::new(devices, max_batch));
+        let telemetry = Arc::new(Telemetry::new(cfg.telemetry_reservoir, devices));
+        let mut handles = Vec::new();
 
-        // worker pool: each worker drives session cohorts one step at a
-        // time (scheduler module docs).
-        for wid in 0..cfg.workers.max(1) {
+        // Scheduler shards: at devices == 1 keep the classic pool —
+        // cfg.workers threads all draining device 0's queue; with
+        // devices > 1 spawn exactly one worker per device (scheduler
+        // module docs §Sharding).
+        let worker_devices: Vec<usize> = if devices == 1 {
+            vec![0; cfg.workers.max(1)]
+        } else {
+            (0..devices).collect()
+        };
+        for (wid, device) in worker_devices.into_iter().enumerate() {
             let wctx = scheduler::WorkerCtx {
-                queue: Arc::clone(&queue),
+                router: Arc::clone(&router),
                 stop: Arc::clone(&stop),
                 registry: Arc::clone(&registry),
                 telemetry: Arc::clone(&telemetry),
                 cfg: scheduler::SchedConfig { max_batch, admit_window },
+                device,
             };
             handles.push(
                 std::thread::Builder::new()
@@ -443,11 +568,12 @@ impl Server {
         {
             let stop_accept = Arc::clone(&stop);
             let ctx = Arc::new(ServeCtx {
-                queue: Arc::clone(&queue),
+                router: Arc::clone(&router),
                 stop: Arc::clone(&stop),
                 telemetry: Arc::clone(&telemetry),
                 registry: Arc::clone(&registry),
                 profiles: cfg.profiles.clone(),
+                devices,
             });
             handles.push(
                 std::thread::Builder::new()
@@ -509,16 +635,18 @@ impl Server {
             );
         }
 
-        Ok(Server { addr, stop, queue, handles })
+        Ok(Server { addr, stop, router, handles })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
 
-    /// Stop accepting and join all threads.
+    /// Stop accepting and join all threads — including every per-device
+    /// scheduler worker, even one mid-cohort (it finishes answering its
+    /// in-flight lanes first; see [`scheduler::Router::signal_stop`]).
     pub fn shutdown(mut self) {
-        signal_stop(&self.queue, &self.stop);
+        self.router.signal_stop(&self.stop);
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -527,7 +655,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        signal_stop(&self.queue, &self.stop);
+        self.router.signal_stop(&self.stop);
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -603,7 +731,7 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                 let qs = telemetry.queue_s.lock().unwrap().samples().to_vec();
                 let occ = telemetry.occupancy.lock().unwrap().samples().to_vec();
                 let occ_max = telemetry.occupancy_peak.load(Ordering::Relaxed) as f64;
-                Json::obj(vec![
+                let mut fields = vec![
                     ("status", Json::str("ok")),
                     ("requests", Json::num(telemetry.requests.load(Ordering::Relaxed) as f64)),
                     ("errors", Json::num(telemetry.errors.load(Ordering::Relaxed) as f64)),
@@ -649,10 +777,50 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                     ("latency_seen", Json::num(lat_seen as f64)),
                     ("queue_mean_s", Json::num(stats::mean(&qs))),
                     ("queue_p95_s", Json::num(stats::percentile(&qs, 95.0))),
-                ])
+                ];
+                // Sharded-only fields (module docs §Per-device stats):
+                // gated on devices > 1 so the single-device response stays
+                // byte-identical to the pre-sharding server.
+                if ctx.devices > 1 {
+                    let xfer = ctx.registry.pool().transfer_snapshots();
+                    let per_device: Vec<Json> = telemetry
+                        .per_device
+                        .iter()
+                        .enumerate()
+                        .map(|(d, t)| {
+                            let occ = t.occupancy.lock().unwrap().samples().to_vec();
+                            let x = &xfer[d];
+                            Json::obj(vec![
+                                ("device", Json::num(d as f64)),
+                                (
+                                    "lanes_active",
+                                    Json::num(t.lanes_active.load(Ordering::Relaxed) as f64),
+                                ),
+                                ("occupancy_mean", Json::num(stats::mean(&occ))),
+                                (
+                                    "occupancy_max",
+                                    Json::num(t.occupancy_peak.load(Ordering::Relaxed) as f64),
+                                ),
+                                ("joins", Json::num(t.joins.load(Ordering::Relaxed) as f64)),
+                                ("retires", Json::num(t.retires.load(Ordering::Relaxed) as f64)),
+                                ("steals", Json::num(t.steals.load(Ordering::Relaxed) as f64)),
+                                ("h2d_bytes", Json::num(x.h2d_bytes as f64)),
+                                ("h2d_calls", Json::num(x.h2d_calls as f64)),
+                                ("d2h_bytes", Json::num(x.d2h_bytes as f64)),
+                                ("d2h_calls", Json::num(x.d2h_calls as f64)),
+                            ])
+                        })
+                        .collect();
+                    fields.extend([
+                        ("devices", Json::num(ctx.devices as f64)),
+                        ("steals", Json::num(telemetry.steals.load(Ordering::Relaxed) as f64)),
+                        ("per_device", Json::Arr(per_device)),
+                    ]);
+                }
+                Json::obj(fields)
             }
             "shutdown" => {
-                signal_stop(&ctx.queue, &ctx.stop);
+                ctx.router.signal_stop(&ctx.stop);
                 let r = Json::obj(vec![("status", Json::str("ok")), ("stopping", Json::Bool(true))]);
                 writeln!(writer, "{r}")?;
                 return Ok(false);
@@ -663,27 +831,14 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                 // payload) groups identically-resolved requests.
                 let auto = resolve_auto(&mut payload, ctx);
                 let (tx, rx) = mpsc::channel();
-                // Check `stop` under the queue lock: workers only exit
-                // after observing `stop` (set under the same lock), so a
-                // job pushed while `stop` is still false here is
-                // guaranteed a live worker — enqueueing after shutdown
-                // would otherwise block rx.recv() forever and deadlock
-                // the join in Server::shutdown.
-                let enqueued = {
-                    let (lock, cv) = &*ctx.queue;
-                    let mut q = lock.lock().unwrap();
-                    if ctx.stop.load(Ordering::SeqCst) {
-                        false
-                    } else {
-                        q.push_back(Job { payload, enqueued: Instant::now(), reply: tx, auto });
-                        // notify_all, not notify_one: a gathering worker
-                        // parked on the same condvar must also see new
-                        // arrivals inside its window.
-                        cv.notify_all();
-                        true
-                    }
-                };
-                if enqueued {
+                // Routing front: the router picks the device queue under
+                // its own lock and checks `stop` there — workers only
+                // exit after observing `stop` (set under the same lock),
+                // so a routed job is guaranteed a live worker;
+                // enqueueing after shutdown would otherwise block
+                // rx.recv() forever and deadlock Server::shutdown's join.
+                let job = Job { payload, enqueued: Instant::now(), reply: tx, auto };
+                if ctx.router.enqueue(job, &ctx.stop) {
                     rx.recv().unwrap_or_else(|_| err_json("worker dropped"))
                 } else {
                     err_json("server is shutting down")

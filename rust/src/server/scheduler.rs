@@ -1,40 +1,98 @@
-//! Continuous (step-level) batching scheduler — the server's worker loop.
+//! Continuous (step-level) batching scheduler, sharded across device
+//! replicas — the server's routing front and worker loop.
 //!
-//! Each worker drives one **cohort** of generation sessions per iteration
-//! instead of dispatching whole requests: it blocks for the first
-//! `generate` job (no window is waited out on an empty queue), starts a
-//! session for it, and then advances the cohort one denoising step at a
-//! time via [`session::step_many_refs`]. At every step boundary it
-//! non-blockingly admits queued compatible jobs — same (model, bucket),
-//! the only fields that pin the device pass; `steps`, `cfg_scale` and
-//! `policy` are per-session state — up to `max_batch` lanes, and retires
-//! finished lanes **immediately**: a short request that joined a long
-//! batch returns as soon as its own schedule completes, and a request
-//! that arrives `k` steps into an in-flight batch joins at the next
-//! boundary instead of waiting a full request out.
+//! # Worker loop
 //!
-//! Boundary admission takes only the FIFO **prefix** of compatible jobs:
-//! the moment a different-(model, bucket) job reaches the queue head, the
-//! cohort stops admitting and drains within its lanes' remaining
-//! schedules — sustained compatible traffic cannot starve a queued
-//! request for another engine behind a forever-refilled cohort.
+//! Each worker is pinned to one device ordinal and drives one **cohort**
+//! of generation sessions per iteration instead of dispatching whole
+//! requests: it blocks for work (an empty queue waits on the router
+//! condvar, never out a window), starts a session for the first job, and
+//! then advances the cohort one denoising step at a time via
+//! [`session::step_many_refs`]. At every step boundary it non-blockingly
+//! admits queued compatible jobs — same (model, bucket), the only fields
+//! that pin the device pass; `steps`, `cfg_scale` and `policy` are
+//! per-session state — up to `max_batch` lanes, and retires finished
+//! lanes **immediately**: a short request that joined a long batch
+//! returns as soon as its own schedule completes, and a request that
+//! arrives `k` steps into an in-flight batch joins at the next boundary
+//! instead of waiting a full request out.
+//!
+//! Boundary admission takes only the FIFO **prefix** of compatible jobs
+//! from the worker's own queue: the moment a different-(model, bucket)
+//! job reaches that queue's head, the cohort stops admitting and drains
+//! within its lanes' remaining schedules — sustained compatible traffic
+//! cannot starve a queued request for another engine behind a
+//! forever-refilled cohort. The fence is per-device now, and the routing
+//! front only ever *appends* to a device's queue in arrival order, so a
+//! job routed to device `d` is never reordered behind later arrivals
+//! for `d`.
 //!
 //! An optional admission window (`ServerConfig::admit_window_ms`,
 //! default 0) lets a *fresh* cohort linger briefly for batchmates before
-//! its first step — the continuous analogue of the retired gather window,
-//! kept for deployments that prefer fuller first stacks over first-step
-//! latency. It never applies to an in-flight cohort, ends early when the
-//! cohort fills, and at the default of 0 a lone request starts stepping
-//! immediately — the old always-paid gather wait is opt-in now.
+//! its first step. It never applies to an in-flight cohort, ends early
+//! when the cohort fills, and at the default of 0 a lone request starts
+//! stepping immediately.
 //!
 //! Per-job validation failures are answered individually at admission and
 //! never poison the cohort; a step error fails every in-flight lane (the
 //! cohort's shared pass is poisoned — see the `session` module docs) but
 //! leaves the worker serving.
+//!
+//! # Sharding (the [`Router`])
+//!
+//! The router owns one FIFO queue **per device** plus each device's
+//! advertised state (active lanes, in-flight cohort key, steal
+//! requests), all behind a single mutex with a **single shared condvar**.
+//! One condvar instead of per-device condvars is deliberate: every
+//! wait-site (idle workers of all devices, admission windows, steal
+//! parks) shares it, so `notify_all` under the router lock *is* the
+//! wake-every-device broadcast — shutdown cannot miss a parked worker,
+//! and an arrival on one queue also wakes thieves on the others. At
+//! `devices == 1` the classic worker pool (several workers, one queue)
+//! runs unchanged through the same code paths.
+//!
+//! Admit-time routing ([`route`]): cohort affinity first — a device whose
+//! in-flight cohort has the job's key and a spare lane absorbs it at its
+//! next step boundary (fewest lanes, ties to the lowest ordinal) — else
+//! least-loaded: fewest active lanes, ties by shortest queue, then lowest
+//! ordinal.
+//!
+//! Work stealing happens only at step boundaries, in two tiers:
+//!
+//! 1. **Job steal** (free): a worker with an empty queue takes the
+//!    *front* job of the most-loaded other device's queue — the oldest
+//!    queued job starts earlier than it would have, preserving per-key
+//!    FIFO order. A front the owner can still coalesce (its key matches
+//!    the owner's in-flight cohort with a spare lane) is never stolen:
+//!    joining that cohort at the owner's next boundary beats a lone pass
+//!    elsewhere. Mid-cohort, a device with spare lanes and an empty
+//!    queue pulls only front jobs matching its cohort key.
+//! 2. **Session migration** (one lane download + one upload): when every
+//!    queue is empty, a fully idle worker raises `wants_work` and parks
+//!    (a device whose advertised cohort grows to ≥ 2 lanes broadcasts on
+//!    the condvar, so a worker that parked before lanes existed to spare
+//!    re-evaluates without polling);
+//!    the most-loaded device holding ≥ 2 lanes reserves the request at
+//!    its next boundary (under the router lock, so no double-give),
+//!    migrates one session off-lock via [`Session::migrate`], and
+//!    deposits the lane in the thief's `incoming` slot. The migration
+//!    charges the request's `RunStats` exactly one extra lane
+//!    download+upload; cache/conditioning round-trips are metered by the
+//!    two runtimes' `TransferStats`. The `steals` counters (global and
+//!    per-device, credited to the *target*) count these migrations only.
+//!
+//! Shutdown: the stop flag is set under the router lock and broadcast on
+//! the shared condvar, so workers parked anywhere wake immediately. A
+//! worker drains its own queue and any deposited lanes before exiting —
+//! every job enqueued before the stop flag was raised is answered — and a
+//! worker mid-cohort finishes stepping its admitted lanes (no new
+//! admissions) so in-flight requests complete rather than erroring.
 
 use anyhow::{anyhow, Result};
+use std::cmp::Reverse;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::engine::{session, Session};
@@ -42,7 +100,7 @@ use crate::policy::build_policy;
 
 use super::{
     cohort_key, err_json, generate_response, parse_generate, EngineRegistry, GenerateParams, Job,
-    Queue, Telemetry,
+    Telemetry,
 };
 
 /// Scheduler knobs (from `ServerConfig`).
@@ -53,11 +111,13 @@ pub(super) struct SchedConfig {
 
 /// Everything one scheduler worker thread needs.
 pub(super) struct WorkerCtx {
-    pub queue: Queue,
+    pub router: Arc<Router>,
     pub stop: Arc<AtomicBool>,
     pub registry: Arc<EngineRegistry>,
     pub telemetry: Arc<Telemetry>,
     pub cfg: SchedConfig,
+    /// Device ordinal this worker is pinned to.
+    pub device: usize,
 }
 
 /// One in-flight lane: a started session plus everything needed to answer
@@ -71,75 +131,179 @@ struct Lane {
     params: GenerateParams,
 }
 
+/// Per-device state the router tracks for routing and stealing. `lanes`
+/// and `cohort` are advertised by the device's worker at step boundaries
+/// ([`publish`]); `wants_work`/`incoming` implement session migration.
+#[derive(Default)]
+struct DevState {
+    /// Active lanes on this device (worker-published; includes deposited
+    /// but not-yet-absorbed migrated lanes).
+    lanes: usize,
+    /// The in-flight (or forming) cohort's (model, bucket) key.
+    cohort: Option<(String, String)>,
+    /// Raised by the device's idle worker to request a migrated session;
+    /// cleared (under the router lock) by whoever hands it work.
+    wants_work: bool,
+    /// Migrated lanes deposited by a victim, absorbed by this device's
+    /// worker at its next wakeup or step boundary.
+    incoming: Vec<Lane>,
+}
+
+struct RouterState {
+    queues: Vec<VecDeque<Job>>,
+    devs: Vec<DevState>,
+}
+
+/// The routing front: per-device FIFO queues + device state behind one
+/// mutex and one shared condvar (module docs §Sharding — the single
+/// condvar makes `notify_all` a wake-every-device broadcast).
+pub(super) struct Router {
+    devices: usize,
+    max_batch: usize,
+    state: Mutex<RouterState>,
+    cv: Condvar,
+}
+
+impl Router {
+    pub(super) fn new(devices: usize, max_batch: usize) -> Self {
+        let devices = devices.max(1);
+        Router {
+            devices,
+            max_batch: max_batch.max(1),
+            state: Mutex::new(RouterState {
+                queues: (0..devices).map(|_| VecDeque::new()).collect(),
+                devs: (0..devices).map(|_| DevState::default()).collect(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub(super) fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Route and enqueue one job (module docs §Sharding). Returns false —
+    /// without enqueueing — when the server is stopping: `stop` is
+    /// checked under the router lock, and workers only exit after
+    /// observing `stop` under the same lock *with their queue empty*, so
+    /// a job enqueued here is guaranteed to be answered.
+    pub(super) fn enqueue(&self, job: Job, stop: &AtomicBool) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if stop.load(Ordering::SeqCst) {
+            return false;
+        }
+        let key = cohort_key(&job.payload);
+        let lens: Vec<usize> = st.queues.iter().map(|q| q.len()).collect();
+        let d = route(&st.devs, &lens, key.as_ref(), self.max_batch);
+        st.queues[d].push_back(job);
+        // notify_all, not notify_one: a gathering worker parked on the
+        // shared condvar must also see new arrivals inside its window,
+        // and idle workers on other devices must re-check for steals.
+        self.cv.notify_all();
+        true
+    }
+
+    /// Set the stop flag under the router lock and wake every waiting
+    /// worker on every device — the single shared condvar makes this one
+    /// `notify_all` the whole-fleet broadcast. Taking the lock first
+    /// closes the race where a worker has checked `stop` but not yet
+    /// parked (the notify would otherwise be lost and shutdown's joins
+    /// would hang). Shared by `Server::shutdown`/drop and the wire-level
+    /// `shutdown` op so the protocol exists once.
+    pub(super) fn signal_stop(&self, stop: &AtomicBool) {
+        let _guard = self.state.lock().unwrap();
+        stop.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+}
+
+/// Admit-time routing (module docs §Sharding): cohort affinity — the
+/// device whose advertised in-flight cohort matches `key` and has a
+/// spare lane, fewest lanes first, ties to the lowest ordinal — else
+/// least-loaded by (active lanes, queue length, ordinal).
+fn route(
+    devs: &[DevState],
+    queue_lens: &[usize],
+    key: Option<&(String, String)>,
+    max_batch: usize,
+) -> usize {
+    if let Some(key) = key {
+        let affine = devs
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.cohort.as_ref() == Some(key) && d.lanes < max_batch)
+            .min_by_key(|&(i, d)| (d.lanes, i))
+            .map(|(i, _)| i);
+        if let Some(i) = affine {
+            return i;
+        }
+    }
+    devs.iter()
+        .enumerate()
+        .min_by_key(|&(i, d)| (d.lanes, queue_lens[i], i))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// What [`acquire_work`] hands the worker loop.
+enum Work {
+    /// A fresh job popped from a queue (own, or stolen from another
+    /// device's front).
+    Job(Job),
+    /// Migrated lanes deposited for this device (all one cohort key).
+    Migrated(Vec<Lane>),
+}
+
+/// Advertise this device's boundary state to the router (lane count and
+/// cohort key drive affinity routing and steal decisions). Growing to a
+/// stealable cohort (≥ 2 lanes) broadcasts on the shared condvar: an idle
+/// worker that parked while no device had lanes to spare re-evaluates and
+/// raises `wants_work`, so session migration stays live without polling.
+fn publish(ctx: &WorkerCtx, lanes: usize, key: Option<&(String, String)>) {
+    let mut st = ctx.router.state.lock().unwrap();
+    let grew = lanes > st.devs[ctx.device].lanes;
+    st.devs[ctx.device].lanes = lanes;
+    st.devs[ctx.device].cohort = key.cloned();
+    if grew && lanes >= 2 && ctx.router.devices() > 1 {
+        ctx.router.cv.notify_all();
+    }
+}
+
 /// The worker loop: serve cohorts until shutdown.
 pub(super) fn run_worker(ctx: &WorkerCtx) {
     loop {
-        // Block for the first job — a plain condvar wait, so an empty
-        // queue costs nothing and shutdown wakes us immediately.
-        let first = {
-            let (lock, cv) = &*ctx.queue;
-            let mut q = lock.lock().unwrap();
-            loop {
-                if let Some(j) = q.pop_front() {
-                    break j;
-                }
-                if ctx.stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                q = cv.wait(q).unwrap();
+        let (mut lanes, key) = match acquire_work(ctx) {
+            None => return,
+            Some(Work::Job(first)) => start_cohort(ctx, first),
+            Some(Work::Migrated(lanes)) => {
+                // Continue migrated sessions as a cohort of their own (no
+                // `batches` tick — their requests' cohorts were already
+                // counted on the source device).
+                let key = Some((
+                    lanes[0].params.model.clone(),
+                    lanes[0].params.bucket.clone(),
+                ));
+                (lanes, key)
             }
         };
-        let key = cohort_key(&first.payload);
-
-        // Optional admission window before the fresh cohort's first step.
-        // Jobs are only *gathered* here — nobody's session starts until
-        // the window closes, so the wait lands in every member's queue_s
-        // (as the retired gather window did), never in wall_s.
-        let mut jobs = vec![first];
-        if let Some(key) = key.as_ref() {
-            if ctx.cfg.max_batch > 1 && !ctx.cfg.admit_window.is_zero() {
-                let deadline = Instant::now() + ctx.cfg.admit_window;
-                let (lock, cv) = &*ctx.queue;
-                let mut q = lock.lock().unwrap();
-                loop {
-                    let mut i = 0;
-                    while i < q.len() && jobs.len() < ctx.cfg.max_batch {
-                        if cohort_key(&q[i].payload).as_ref() == Some(key) {
-                            jobs.push(q.remove(i).expect("index in bounds"));
-                        } else {
-                            i += 1;
-                        }
-                    }
-                    if jobs.len() >= ctx.cfg.max_batch || ctx.stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    let (guard, _timed_out) = cv.wait_timeout(q, deadline - now).unwrap();
-                    q = guard;
-                }
-            }
-        }
-        let mut lanes: Vec<Lane> = Vec::new();
-        for job in jobs {
-            admit(ctx, job, &mut lanes, false);
-        }
-        if !lanes.is_empty() {
-            ctx.telemetry.batches.fetch_add(1, Ordering::Relaxed);
-        }
 
         // Drive the cohort: join at boundaries, retire eagerly.
         let mut stepped = false;
         while !lanes.is_empty() {
             if let Some(key) = key.as_ref() {
-                if !ctx.stop.load(Ordering::SeqCst) && lanes.len() < ctx.cfg.max_batch {
-                    for job in pull_compatible_prefix(ctx, key, ctx.cfg.max_batch - lanes.len()) {
-                        admit(ctx, job, &mut lanes, stepped);
+                if !ctx.stop.load(Ordering::SeqCst) {
+                    if lanes.len() < ctx.cfg.max_batch {
+                        let room = ctx.cfg.max_batch - lanes.len();
+                        let (jobs, migrated) = boundary_intake(ctx, key, room);
+                        for job in jobs {
+                            admit(ctx, job, &mut lanes, stepped);
+                        }
+                        lanes.extend(migrated);
                     }
+                    maybe_give_lane(ctx, &mut lanes);
                 }
             }
+            publish(ctx, lanes.len(), key.as_ref());
             let report = {
                 let mut refs: Vec<&mut Session<'static>> =
                     lanes.iter_mut().map(|l| &mut l.session).collect();
@@ -147,6 +311,7 @@ pub(super) fn run_worker(ctx: &WorkerCtx) {
             };
             match report {
                 Ok(rep) => {
+                    let dt = &ctx.telemetry.per_device[ctx.device];
                     ctx.telemetry
                         .occupancy
                         .lock()
@@ -154,6 +319,9 @@ pub(super) fn run_worker(ctx: &WorkerCtx) {
                         .push(rep.occupancy as f64);
                     ctx.telemetry
                         .occupancy_peak
+                        .fetch_max(rep.occupancy as u64, Ordering::Relaxed);
+                    dt.occupancy.lock().unwrap().push(rep.occupancy as f64);
+                    dt.occupancy_peak
                         .fetch_max(rep.occupancy as u64, Ordering::Relaxed);
                     // A fresh cohort's very first stack build is not a
                     // membership change; only count regroups after a
@@ -172,6 +340,9 @@ pub(super) fn run_worker(ctx: &WorkerCtx) {
                     let n = lanes.len() as u64;
                     ctx.telemetry.errors.fetch_add(n, Ordering::Relaxed);
                     ctx.telemetry.lanes_active.fetch_sub(n, Ordering::Relaxed);
+                    ctx.telemetry.per_device[ctx.device]
+                        .lanes_active
+                        .fetch_sub(n, Ordering::Relaxed);
                     for lane in lanes.drain(..) {
                         let _ = lane.job.reply.send(err_json(&msg));
                     }
@@ -188,32 +359,266 @@ pub(super) fn run_worker(ctx: &WorkerCtx) {
                 }
             }
         }
+        publish(ctx, 0, None);
     }
 }
 
-/// Pull up to `n` jobs with the given cohort key from the **front** of
-/// the queue, stopping at the first incompatible job. The fence is the
-/// fairness guarantee: once a different-key job reaches the queue head,
-/// this cohort admits nothing more and drains within its lanes' remaining
-/// schedules, so sustained compatible traffic can never starve a queued
-/// request for another (model, bucket) behind a forever-refilled cohort.
-/// Non-blocking.
-fn pull_compatible_prefix(ctx: &WorkerCtx, key: &(String, String), n: usize) -> Vec<Job> {
-    if n == 0 {
-        return Vec::new();
+/// Block until this device has work (or shutdown). Priority order: own
+/// queue front, deposited migrated lanes, a job steal from the
+/// most-loaded other queue's front; otherwise raise `wants_work` when a
+/// session migration could help and park on the shared condvar.
+///
+/// The stop flag is only honored once the own queue and deposit slot are
+/// empty, so every job routed here before shutdown is answered (the
+/// enqueue-side guarantee in [`Router::enqueue`]).
+fn acquire_work(ctx: &WorkerCtx) -> Option<Work> {
+    let me = ctx.device;
+    let n = ctx.router.devices();
+    let mut st = ctx.router.state.lock().unwrap();
+    loop {
+        // 1. own queue
+        if let Some(job) = st.queues[me].pop_front() {
+            st.devs[me].wants_work = false;
+            return Some(Work::Job(job));
+        }
+        // 2. migrated lanes deposited for us: absorb the subset sharing
+        //    the first lane's cohort key (different-key leftovers stay
+        //    for the next pass).
+        if !st.devs[me].incoming.is_empty() {
+            let all = std::mem::take(&mut st.devs[me].incoming);
+            let mut taken: Vec<Lane> = Vec::new();
+            for lane in all {
+                let compatible = taken.is_empty()
+                    || (lane.params.model == taken[0].params.model
+                        && lane.params.bucket == taken[0].params.bucket);
+                if compatible {
+                    taken.push(lane);
+                } else {
+                    st.devs[me].incoming.push(lane);
+                }
+            }
+            st.devs[me].wants_work = false;
+            return Some(Work::Migrated(taken));
+        }
+        if ctx.stop.load(Ordering::SeqCst) {
+            // Nothing owed locally. Deposits cannot race this exit:
+            // victims re-check `stop` under this same lock before
+            // depositing, so the slot drained above stays empty.
+            st.devs[me].wants_work = false;
+            return None;
+        }
+        if n > 1 {
+            // 3. job steal: the front job of the most-loaded other
+            //    device's queue (free — the oldest queued job starts
+            //    earlier than it would have; FIFO order is preserved).
+            //    A front the owner can still coalesce — its key matches
+            //    the owner's advertised cohort with a spare lane — is
+            //    left alone: it joins that cohort at the owner's next
+            //    boundary, which beats starting a lone pass here.
+            let victim = (0..n)
+                .filter(|&d| {
+                    d != me
+                        && st.queues[d].front().is_some_and(|j| {
+                            let k = cohort_key(&j.payload);
+                            k.is_none()
+                                || st.devs[d].cohort != k
+                                || st.devs[d].lanes >= ctx.cfg.max_batch
+                        })
+                })
+                .max_by_key(|&d| (st.devs[d].lanes + st.queues[d].len(), Reverse(d)));
+            if let Some(v) = victim {
+                let job = st.queues[v].pop_front().expect("nonempty queue");
+                st.devs[me].wants_work = false;
+                return Some(Work::Job(job));
+            }
+            // 4. every queue is empty: ask for a session migration when
+            //    some other device holds enough lanes to spare one.
+            st.devs[me].wants_work = (0..n).any(|d| d != me && st.devs[d].lanes >= 2);
+        }
+        st = ctx.router.cv.wait(st).unwrap();
     }
-    let (lock, _cv) = &*ctx.queue;
-    let mut q = lock.lock().unwrap();
-    let mut out = Vec::new();
-    while out.len() < n {
-        match q.front() {
+}
+
+/// Start a fresh cohort from its first job: advertise the forming
+/// cohort's key (so admit-time affinity routes same-key arrivals to this
+/// device during the window), optionally gather batchmates for the
+/// admission window, then admit everything collected.
+fn start_cohort(ctx: &WorkerCtx, first: Job) -> (Vec<Lane>, Option<(String, String)>) {
+    let key = cohort_key(&first.payload);
+    let mut jobs = vec![first];
+    if let Some(key) = key.as_ref() {
+        publish(ctx, 0, Some(key));
+        // Jobs are only *gathered* during the window — nobody's session
+        // starts until it closes, so the wait lands in every member's
+        // queue_s (as the retired gather window did), never in wall_s.
+        if ctx.cfg.max_batch > 1 && !ctx.cfg.admit_window.is_zero() {
+            let deadline = Instant::now() + ctx.cfg.admit_window;
+            let mut st = ctx.router.state.lock().unwrap();
+            loop {
+                let q = &mut st.queues[ctx.device];
+                let mut i = 0;
+                while i < q.len() && jobs.len() < ctx.cfg.max_batch {
+                    if cohort_key(&q[i].payload).as_ref() == Some(key) {
+                        jobs.push(q.remove(i).expect("index in bounds"));
+                    } else {
+                        i += 1;
+                    }
+                }
+                if jobs.len() >= ctx.cfg.max_batch || ctx.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timed_out) = ctx.router.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+            }
+        }
+    }
+    let mut lanes = Vec::new();
+    for job in jobs {
+        admit(ctx, job, &mut lanes, false);
+    }
+    if !lanes.is_empty() {
+        ctx.telemetry.batches.fetch_add(1, Ordering::Relaxed);
+    }
+    (lanes, key)
+}
+
+/// Step-boundary intake for an in-flight cohort, all under one router
+/// lock: (a) the FIFO **prefix** of compatible jobs from this device's
+/// own queue — the fence stops at the first different-key job, so a
+/// routed job is never reordered behind later arrivals for this device;
+/// (b) deposited migrated lanes matching this cohort; (c) with an empty
+/// own queue, matching *front* jobs stolen from the most-loaded other
+/// devices (module docs §Sharding tier 1).
+fn boundary_intake(
+    ctx: &WorkerCtx,
+    key: &(String, String),
+    room: usize,
+) -> (Vec<Job>, Vec<Lane>) {
+    let me = ctx.device;
+    let mut jobs = Vec::new();
+    let mut migrated = Vec::new();
+    if room == 0 {
+        return (jobs, migrated);
+    }
+    let mut st = ctx.router.state.lock().unwrap();
+    while jobs.len() < room {
+        match st.queues[me].front() {
             Some(job) if cohort_key(&job.payload).as_ref() == Some(key) => {
-                out.push(q.pop_front().expect("front checked"));
+                jobs.push(st.queues[me].pop_front().expect("front checked"));
             }
             _ => break,
         }
     }
-    out
+    if !st.devs[me].incoming.is_empty() {
+        let all = std::mem::take(&mut st.devs[me].incoming);
+        for lane in all {
+            if jobs.len() + migrated.len() < room
+                && lane.params.model == key.0
+                && lane.params.bucket == key.1
+            {
+                migrated.push(lane);
+            } else {
+                st.devs[me].incoming.push(lane);
+            }
+        }
+    }
+    if st.queues[me].is_empty() {
+        while jobs.len() + migrated.len() < room {
+            let victim = (0..ctx.router.devices())
+                .filter(|&d| {
+                    d != me
+                        && st.queues[d]
+                            .front()
+                            .is_some_and(|j| cohort_key(&j.payload).as_ref() == Some(key))
+                })
+                .max_by_key(|&d| (st.devs[d].lanes + st.queues[d].len(), Reverse(d)));
+            match victim {
+                Some(v) => jobs.push(st.queues[v].pop_front().expect("front checked")),
+                None => break,
+            }
+        }
+    }
+    (jobs, migrated)
+}
+
+/// Victim side of session migration (module docs §Sharding tier 2): at a
+/// step boundary, holding ≥ 2 lanes and at least as loaded as every
+/// other device, hand one session to a device that raised `wants_work`.
+/// The thief is reserved under the router lock (no double-give), the
+/// migration itself runs off-lock, and the lane lands in the thief's
+/// deposit slot — unless the server began stopping meanwhile, in which
+/// case the request is answered with an error rather than stranded on a
+/// worker that may already have exited.
+fn maybe_give_lane(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
+    let me = ctx.device;
+    let n = ctx.router.devices();
+    if lanes.len() < 2 || n == 1 {
+        return;
+    }
+    let thief = {
+        let mut st = ctx.router.state.lock().unwrap();
+        let my_load = lanes.len() + st.queues[me].len();
+        let busier = (0..n).any(|d| d != me && st.devs[d].lanes + st.queues[d].len() > my_load);
+        if busier {
+            return; // not the most-loaded device; its worker should give
+        }
+        match (0..n).find(|&d| d != me && st.devs[d].wants_work) {
+            Some(t) => {
+                st.devs[t].wants_work = false; // reserved
+                t
+            }
+            None => return,
+        }
+    };
+    // Any lane is correct to move; take the newest (its remaining
+    // schedule is typically the longest, amortizing the transfer).
+    let mut lane = lanes.pop().expect("len >= 2");
+    let moved = ctx
+        .registry
+        .get_on(&lane.params.model, &lane.params.bucket, thief)
+        .and_then(|engine| lane.session.migrate(engine));
+    match moved {
+        Ok(()) => {
+            ctx.telemetry.per_device[me]
+                .lanes_active
+                .fetch_sub(1, Ordering::Relaxed);
+            let mut st = ctx.router.state.lock().unwrap();
+            st.devs[me].lanes = st.devs[me].lanes.saturating_sub(1);
+            if ctx.stop.load(Ordering::SeqCst) {
+                // The thief may already have drained its deposit slot and
+                // exited; answer the client instead of stranding the job.
+                drop(st);
+                ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
+                ctx.telemetry.lanes_active.fetch_sub(1, Ordering::Relaxed);
+                let _ = lane.job.reply.send(err_json("server is shutting down"));
+                return;
+            }
+            ctx.telemetry.steals.fetch_add(1, Ordering::Relaxed);
+            let dt = &ctx.telemetry.per_device[thief];
+            dt.steals.fetch_add(1, Ordering::Relaxed);
+            dt.lanes_active.fetch_add(1, Ordering::Relaxed);
+            st.devs[thief].lanes += 1;
+            st.devs[thief].incoming.push(lane);
+            ctx.router.cv.notify_all();
+        }
+        Err(e) => {
+            // The session poisons itself on a failed transfer; answer the
+            // client and wake the thief so it can re-request.
+            ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
+            ctx.telemetry.lanes_active.fetch_sub(1, Ordering::Relaxed);
+            ctx.telemetry.per_device[me]
+                .lanes_active
+                .fetch_sub(1, Ordering::Relaxed);
+            let _ = lane.job.reply.send(err_json(&format!("{e:#}")));
+            let mut st = ctx.router.state.lock().unwrap();
+            st.devs[me].lanes = st.devs[me].lanes.saturating_sub(1);
+            ctx.router.cv.notify_all();
+        }
+    }
 }
 
 /// Validate one job and start its session; answer the client directly on
@@ -229,9 +634,12 @@ fn admit(ctx: &WorkerCtx, job: Job, lanes: &mut Vec<Lane>, midflight: bool) {
     let queue_s = job.enqueued.elapsed().as_secs_f64();
     match try_start(ctx, &job) {
         Ok((session, params)) => {
+            let dt = &ctx.telemetry.per_device[ctx.device];
             ctx.telemetry.lanes_active.fetch_add(1, Ordering::Relaxed);
+            dt.lanes_active.fetch_add(1, Ordering::Relaxed);
             if midflight {
                 ctx.telemetry.joins.fetch_add(1, Ordering::Relaxed);
+                dt.joins.fetch_add(1, Ordering::Relaxed);
             }
             lanes.push(Lane { session, job, queue_s, params });
         }
@@ -242,10 +650,11 @@ fn admit(ctx: &WorkerCtx, job: Job, lanes: &mut Vec<Lane>, midflight: bool) {
     }
 }
 
-/// Wire validation + policy construction + session admission.
+/// Wire validation + policy construction + session admission, on this
+/// worker's device replica.
 fn try_start(ctx: &WorkerCtx, job: &Job) -> Result<(Session<'static>, GenerateParams)> {
     let p = parse_generate(&job.payload)?;
-    let engine = ctx.registry.get(&p.model, &p.bucket)?;
+    let engine = ctx.registry.get_on(&p.model, &p.bucket, ctx.device)?;
     let info = &engine.model().info;
     if let Some(s) = p.req.steps {
         // One bound for both samplers: DDIM's constructor asserts it, and
@@ -266,9 +675,11 @@ fn try_start(ctx: &WorkerCtx, job: &Job) -> Result<(Session<'static>, GeneratePa
 
 /// Finish a completed lane and answer its client. `batch_size` in the
 /// response reports the largest cohort the request ever shared a device
-/// pass with.
+/// pass with (on any device, for a migrated session).
 fn retire(ctx: &WorkerCtx, lane: Lane) {
+    let dt = &ctx.telemetry.per_device[ctx.device];
     ctx.telemetry.lanes_active.fetch_sub(1, Ordering::Relaxed);
+    dt.lanes_active.fetch_sub(1, Ordering::Relaxed);
     let peak = lane.session.peak_lanes();
     match lane.session.finish() {
         Ok(r) => {
@@ -282,6 +693,7 @@ fn retire(ctx: &WorkerCtx, lane: Lane) {
                 lane.job.auto.as_ref(),
             );
             ctx.telemetry.retires.fetch_add(1, Ordering::Relaxed);
+            dt.retires.fetch_add(1, Ordering::Relaxed);
             if peak >= 2 {
                 ctx.telemetry.batched_requests.fetch_add(1, Ordering::Relaxed);
             }
@@ -293,5 +705,63 @@ fn retire(ctx: &WorkerCtx, lane: Lane) {
             ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
             let _ = lane.job.reply.send(err_json(&format!("{e:#}")));
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev(lanes: usize, cohort: Option<(&str, &str)>) -> DevState {
+        DevState {
+            lanes,
+            cohort: cohort.map(|(m, b)| (m.to_string(), b.to_string())),
+            wants_work: false,
+            incoming: Vec::new(),
+        }
+    }
+
+    fn key(m: &str, b: &str) -> (String, String) {
+        (m.to_string(), b.to_string())
+    }
+
+    #[test]
+    fn route_prefers_matching_cohort_with_room() {
+        let devs = [
+            dev(1, None),
+            dev(3, Some(("m", "b"))),
+            dev(2, Some(("m", "b"))),
+        ];
+        // both device 1 and 2 are affine; fewest lanes (device 2) wins
+        // even though device 0 is globally least-loaded.
+        assert_eq!(route(&devs, &[0, 0, 0], Some(&key("m", "b")), 4), 2);
+        // a different key has no affine cohort: least-loaded device 0.
+        assert_eq!(route(&devs, &[0, 0, 0], Some(&key("m", "other")), 4), 0);
+    }
+
+    #[test]
+    fn route_full_cohort_falls_through_to_least_loaded() {
+        let devs = [dev(4, Some(("m", "b"))), dev(2, None)];
+        // the affine cohort has no spare lane (max_batch = 4)
+        assert_eq!(route(&devs, &[0, 0], Some(&key("m", "b")), 4), 1);
+    }
+
+    #[test]
+    fn route_least_loaded_ties_by_queue_then_ordinal() {
+        let devs = [dev(1, None), dev(1, None), dev(1, None)];
+        // equal lanes: shortest queue wins
+        assert_eq!(route(&devs, &[2, 0, 1], None, 4), 1);
+        // full tie: lowest ordinal
+        assert_eq!(route(&devs, &[1, 1, 1], None, 4), 0);
+    }
+
+    #[test]
+    fn route_affinity_ties_break_to_lowest_ordinal() {
+        let devs = [
+            dev(5, None),
+            dev(2, Some(("m", "b"))),
+            dev(2, Some(("m", "b"))),
+        ];
+        assert_eq!(route(&devs, &[0, 0, 0], Some(&key("m", "b")), 4), 1);
     }
 }

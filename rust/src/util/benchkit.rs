@@ -4,11 +4,19 @@
 //! uses this module to time workloads (warmup + measured iterations,
 //! mean/std/percentiles) and to emit the paper-shaped markdown table plus a
 //! CSV series under `results/`.
+//!
+//! Every report additionally writes a machine-readable
+//! `results/BENCH_<slug>.json` — the repo's in-repo perf trajectory. It
+//! always carries the report's CSV series; benches register headline
+//! numbers ([`Report::metric`]: wall/throughput/p50/p99) and their
+//! configuration ([`Report::config`]) so successive runs can be diffed
+//! without parsing markdown.
 
 use std::fmt::Write as _;
 use std::path::Path;
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats;
 
 /// Timing result for one benchmark case.
@@ -107,16 +115,30 @@ impl MdTable {
     }
 }
 
-/// A report file under results/: title, commentary, tables, csv series.
+/// A report file under results/: title, commentary, tables, csv series,
+/// and the machine-readable `BENCH_<slug>.json` companion.
 pub struct Report {
     slug: String,
     md: String,
     csvs: Vec<(String, String)>,
+    /// Bench configuration echoed into the JSON (steps, load, devices…).
+    config: Vec<(String, Json)>,
+    /// Headline numbers (wall/throughput/p50/p99…) for trajectory diffs.
+    metrics: Vec<(String, f64)>,
+    /// Structured copies of the CSV series for the JSON companion.
+    tables: Vec<(String, MdTable)>,
 }
 
 impl Report {
     pub fn new(slug: &str, title: &str) -> Self {
-        Self { slug: slug.to_string(), md: format!("# {title}\n\n"), csvs: Vec::new() }
+        Self {
+            slug: slug.to_string(),
+            md: format!("# {title}\n\n"),
+            csvs: Vec::new(),
+            config: Vec::new(),
+            metrics: Vec::new(),
+            tables: Vec::new(),
+        }
     }
 
     pub fn text(&mut self, t: &str) {
@@ -130,9 +152,21 @@ impl Report {
 
     pub fn csv(&mut self, name: &str, t: &MdTable) {
         self.csvs.push((name.to_string(), t.to_csv()));
+        self.tables.push((name.to_string(), t.clone()));
     }
 
-    /// Write results/<slug>.md (+ any csvs) and echo the report to stdout.
+    /// Record one configuration value for the JSON companion.
+    pub fn config(&mut self, key: &str, value: Json) {
+        self.config.push((key.to_string(), value));
+    }
+
+    /// Record one headline metric for the JSON companion.
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+
+    /// Write results/<slug>.md (+ any csvs) plus the machine-readable
+    /// results/BENCH_<slug>.json, and echo the report to stdout.
     pub fn finish(self) -> std::io::Result<()> {
         let dir = Path::new("results");
         std::fs::create_dir_all(dir)?;
@@ -140,10 +174,55 @@ impl Report {
         for (name, csv) in &self.csvs {
             std::fs::write(dir.join(format!("{}_{}.csv", self.slug, name)), csv)?;
         }
+        let json = bench_json(&self.slug, &self.config, &self.metrics, &self.tables);
+        std::fs::write(
+            dir.join(format!("BENCH_{}.json", self.slug)),
+            format!("{json}\n"),
+        )?;
         println!("{}", self.md);
-        println!("[benchkit] wrote results/{}.md", self.slug);
+        println!(
+            "[benchkit] wrote results/{}.md and results/BENCH_{}.json",
+            self.slug, self.slug
+        );
         Ok(())
     }
+}
+
+/// Assemble the machine-readable bench record (pure; [`Report::finish`]
+/// writes it to `results/BENCH_<slug>.json`).
+pub fn bench_json(
+    slug: &str,
+    config: &[(String, Json)],
+    metrics: &[(String, f64)],
+    tables: &[(String, MdTable)],
+) -> Json {
+    let cfg: Vec<(&str, Json)> = config.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let mets: Vec<(&str, Json)> = metrics
+        .iter()
+        .map(|(k, v)| (k.as_str(), Json::num(*v)))
+        .collect();
+    let tbls: Vec<(&str, Json)> = tables
+        .iter()
+        .map(|(name, t)| {
+            let header = Json::Arr(t.header.iter().map(|h| Json::str(h.as_str())).collect());
+            let rows = Json::Arr(
+                t.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::str(c.as_str())).collect()))
+                    .collect(),
+            );
+            (
+                name.as_str(),
+                Json::obj(vec![("header", header), ("rows", rows)]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str(slug)),
+        ("config", Json::obj(cfg)),
+        ("metrics", Json::obj(mets)),
+        ("tables", Json::obj(tbls)),
+    ])
 }
 
 #[cfg(test)]
@@ -182,5 +261,35 @@ mod tests {
         let mut t = MdTable::new(&["a"]);
         t.row(vec!["x,y".into()]);
         assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn bench_json_round_trips_config_metrics_tables() {
+        let mut t = MdTable::new(&["n", "thr"]);
+        t.row(vec!["1".into(), "2.5".into()]);
+        let j = bench_json(
+            "fig_test",
+            &[("steps".to_string(), Json::num(8.0))],
+            &[("p50_s".to_string(), 0.25)],
+            &[("scaling".to_string(), t)],
+        );
+        // the record must survive its own wire format
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bench").and_then(|v| v.as_str()), Some("fig_test"));
+        assert_eq!(
+            back.get("config").and_then(|c| c.get("steps")).and_then(|v| v.as_f64()),
+            Some(8.0)
+        );
+        assert_eq!(
+            back.get("metrics").and_then(|m| m.get("p50_s")).and_then(|v| v.as_f64()),
+            Some(0.25)
+        );
+        let rows = back
+            .get("tables")
+            .and_then(|t| t.get("scaling"))
+            .and_then(|t| t.get("rows"))
+            .and_then(|r| r.as_arr())
+            .expect("rows present");
+        assert_eq!(rows.len(), 1);
     }
 }

@@ -5,27 +5,46 @@ use std::sync::Arc;
 
 use foresight::autotune::{ProfileKey, ProfileStore, TunedProfile};
 use foresight::config::Manifest;
-use foresight::runtime::Runtime;
+use foresight::runtime::DevicePool;
 use foresight::server::{Client, EngineRegistry, Server, ServerConfig};
 use foresight::util::json::Json;
 
-fn start_server_with(cfg: ServerConfig) -> Option<Server> {
+/// `FORESIGHT_TEST_DEVICES=N` re-runs the whole suite against a sharded
+/// N-replica pool (CI runs it once at N=2); the default stays the classic
+/// single-runtime topology.
+fn test_devices() -> usize {
+    std::env::var("FORESIGHT_TEST_DEVICES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Start a server on `devices` replicas with the given (model, bucket)
+/// pairs loaded on every replica.
+fn start_server_pairs(
+    mut cfg: ServerConfig,
+    devices: usize,
+    pairs: &[(&str, &str)],
+) -> Option<Server> {
     let root = Manifest::default_root();
     if !root.join("manifest.json").exists() {
         eprintln!("SKIP: no artifacts — run `make artifacts`");
         return None;
     }
     let manifest = Manifest::load(&root).unwrap();
-    let rt = Arc::new(Runtime::cpu().unwrap());
-    let registry = Arc::new(
-        EngineRegistry::load(
-            rt,
-            &manifest,
-            &[("opensora-sim".to_string(), "240p-2s".to_string())],
-        )
-        .unwrap(),
-    );
+    let pool = Arc::new(DevicePool::cpu(devices).unwrap());
+    let pairs: Vec<(String, String)> = pairs
+        .iter()
+        .map(|(m, b)| (m.to_string(), b.to_string()))
+        .collect();
+    let registry = Arc::new(EngineRegistry::load_pool(pool, &manifest, &pairs).unwrap());
+    cfg.devices = devices;
     Some(Server::start(registry, cfg).unwrap())
+}
+
+fn start_server_with(cfg: ServerConfig) -> Option<Server> {
+    start_server_pairs(cfg, test_devices(), &[("opensora-sim", "240p-2s")])
 }
 
 fn start_server(workers: usize) -> Option<Server> {
@@ -36,16 +55,20 @@ fn start_server(workers: usize) -> Option<Server> {
     })
 }
 
-fn gen_req(policy: &str, prompt: &str, seed: u64, steps: usize) -> Json {
+fn gen_req_bucket(bucket: &str, policy: &str, prompt: &str, seed: u64, steps: usize) -> Json {
     Json::obj(vec![
         ("op", Json::str("generate")),
         ("model", Json::str("opensora-sim")),
-        ("bucket", Json::str("240p-2s")),
+        ("bucket", Json::str(bucket)),
         ("policy", Json::str(policy)),
         ("prompt", Json::str(prompt)),
         ("seed", Json::num(seed as f64)),
         ("steps", Json::num(steps as f64)),
     ])
+}
+
+fn gen_req(policy: &str, prompt: &str, seed: u64, steps: usize) -> Json {
+    gen_req_bucket("240p-2s", policy, prompt, seed, steps)
 }
 
 #[test]
@@ -648,6 +671,160 @@ fn wire_reachable_policy_params_cannot_panic_workers() {
     let ok = c.call(&gen_req("foresight:gamma=0.5", "recovery", 1, 4)).unwrap();
     assert_eq!(ok.get("status").unwrap().as_str().unwrap(), "ok", "{ok}");
     server.shutdown();
+}
+
+#[test]
+fn per_key_fifo_completion_order_with_interleaved_cohorts() {
+    // Regression for the FIFO-prefix fence under the per-device queue
+    // rework: two interleaved cohort keys (two shape buckets) queued
+    // behind a long request on a single device must complete in per-key
+    // FIFO order — the fence admits only the compatible queue *prefix*,
+    // so A1 B1 A2 B2 may regroup across keys but never within one.
+    // Pinned to one device: cross-device completion order is unordered by
+    // design (that's what routing is for).
+    let Some(server) = start_server_pairs(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            max_batch: 2,
+            admit_window_ms: 0,
+            ..ServerConfig::default()
+        },
+        1,
+        &[("opensora-sim", "240p-2s"), ("opensora-sim", "240p-4s")],
+    ) else {
+        return;
+    };
+    let addr = server.addr();
+
+    // Occupy the only worker so the interleaved arrivals actually queue.
+    let plug = gen_req("foresight", "queue plug", 1, 60);
+    let mut c_plug = Client::connect(&addr).unwrap();
+    let h_plug = std::thread::spawn(move || c_plug.call(&plug).unwrap());
+    {
+        let mut c = Client::connect(&addr).unwrap();
+        let t0 = std::time::Instant::now();
+        loop {
+            let s = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+            if s.get("lanes_active").unwrap().as_usize().unwrap() >= 1 {
+                break;
+            }
+            assert!(t0.elapsed() < std::time::Duration::from_secs(10), "plug never started");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    // Interleave the two keys in a known arrival order: A1 B1 A2 B2.
+    // A1 shares the plug's key and may join its cohort mid-flight; the
+    // fence then parks B1 A2 B2 in arrival order (different-key front)
+    // until the plug drains. Either way the property under test is only
+    // the per-key completion order.
+    let cases = [
+        ("240p-2s", "fifo a1"),
+        ("240p-4s", "fifo b1"),
+        ("240p-2s", "fifo a2"),
+        ("240p-4s", "fifo b2"),
+    ];
+    let mut handles = Vec::new();
+    for (i, (bucket, prompt)) in cases.into_iter().enumerate() {
+        let req = gen_req_bucket(bucket, "none", prompt, i as u64, 4);
+        let mut c = Client::connect(&addr).unwrap();
+        assert!(c.ping().unwrap());
+        handles.push(std::thread::spawn(move || {
+            let r = c.call(&req).unwrap();
+            (i, bucket, std::time::Instant::now(), r)
+        }));
+        // Generous stagger: each request is enqueued (the server reads and
+        // queues it synchronously on its conn thread) well before the next
+        // client fires, fixing the arrival order while the plug steps.
+        std::thread::sleep(std::time::Duration::from_millis(150));
+    }
+
+    let mut done = Vec::new();
+    for h in handles {
+        let (i, bucket, t_done, r) = h.join().unwrap();
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "case {i}: {r}");
+        done.push((i, bucket, t_done));
+    }
+    let plug_r = h_plug.join().unwrap();
+    assert_eq!(plug_r.get("status").unwrap().as_str().unwrap(), "ok", "{plug_r}");
+
+    for key in ["240p-2s", "240p-4s"] {
+        let times: Vec<_> = {
+            let mut of_key: Vec<_> = done.iter().filter(|(_, b, _)| *b == key).collect();
+            of_key.sort_by_key(|(i, _, _)| *i);
+            of_key.iter().map(|(_, _, t)| *t).collect()
+        };
+        assert_eq!(times.len(), 2);
+        assert!(
+            times[0] <= times[1],
+            "per-key FIFO violated for {key}: the later arrival finished first"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_under_load_joins_all_workers_and_answers_all_clients() {
+    // Shutdown with two device workers mid-cohort must wake every parked
+    // worker (the shared condvar broadcast), let in-flight lanes finish,
+    // drain already-queued jobs, and join every worker — watchdogged so a
+    // deadlock fails the test instead of hanging the suite.
+    let Some(server) = start_server_pairs(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            max_batch: 4,
+            admit_window_ms: 0,
+            ..ServerConfig::default()
+        },
+        2,
+        &[("opensora-sim", "240p-2s")],
+    ) else {
+        return;
+    };
+    let addr = server.addr();
+
+    let mut handles = Vec::new();
+    for cid in 0..4u64 {
+        let req = gen_req("foresight", &format!("shutdown load {cid}"), cid, 30);
+        let mut c = Client::connect(&addr).unwrap();
+        assert!(c.ping().unwrap());
+        handles.push(std::thread::spawn(move || c.call(&req)));
+    }
+    // Wait until every request is actually in flight (one shared cohort
+    // key, max_batch 4 ⇒ all four admit), so none races the stop flag at
+    // its enqueue and every answer below must be a served "ok".
+    {
+        let mut c = Client::connect(&addr).unwrap();
+        let t0 = std::time::Instant::now();
+        loop {
+            let s = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+            if s.get("lanes_active").unwrap().as_usize().unwrap() >= 4 {
+                break;
+            }
+            assert!(t0.elapsed() < std::time::Duration::from_secs(20), "load never started: {s}");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        server.shutdown();
+        let _ = tx.send(());
+    });
+    assert!(
+        rx.recv_timeout(std::time::Duration::from_secs(120)).is_ok(),
+        "shutdown under load deadlocked (worker join hung)"
+    );
+
+    // Every client got a definitive answer: jobs enqueued before the stop
+    // flag are served to completion ("ok"); none may hang or lose its
+    // connection mid-request.
+    for h in handles {
+        let r = h.join().unwrap().expect("connection must outlive shutdown");
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+    }
 }
 
 #[test]

@@ -1,0 +1,317 @@
+//! Multi-device sharding integration: device-pool isolation, session
+//! migration correctness (the steal-correctness property), and a
+//! server-level work steal observed through the wire telemetry.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::Arc;
+
+use foresight::bench_support::first_latent_mismatch;
+use foresight::config::Manifest;
+use foresight::engine::{Engine, HotPath, Request, RunResult};
+use foresight::model::LoadedModel;
+use foresight::policy::{build_policy, ReusePolicy};
+use foresight::runtime::DevicePool;
+use foresight::server::{Client, EngineRegistry, Server, ServerConfig};
+use foresight::util::json::Json;
+use foresight::util::proptest::{prop_assert, proptest_cases};
+
+const MODEL: (&str, &str) = ("opensora-sim", "240p-2s");
+
+fn artifacts_present() -> bool {
+    let ok = Manifest::default_root().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+    }
+    ok
+}
+
+/// Two engines for the same (model, bucket) on two independent runtime
+/// replicas — the minimal migration topology.
+fn two_engines() -> anyhow::Result<Vec<Arc<Engine>>> {
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    let pool = DevicePool::cpu(2)?;
+    let mut engines = Vec::with_capacity(2);
+    for rt in pool.devices() {
+        let lm = Arc::new(LoadedModel::load(rt.clone(), &manifest, MODEL.0, MODEL.1)?);
+        engines.push(Arc::new(Engine::with_hot_path(lm, manifest.schedule, HotPath::Device)));
+    }
+    Ok(engines)
+}
+
+fn policy_for(engine: &Engine, spec: &str, steps: usize) -> Box<dyn ReusePolicy> {
+    build_policy(spec, &engine.model().info, steps).unwrap()
+}
+
+fn standalone(engine: &Engine, req: &Request, spec: &str) -> RunResult {
+    let steps = req.steps.unwrap_or(engine.model().info.steps);
+    let mut pol = policy_for(engine, spec, steps);
+    engine.generate(req, pol.as_mut(), None).unwrap()
+}
+
+fn lane_bytes(engine: &Engine) -> u64 {
+    let m = engine.model();
+    let [f, p, _] = m.state_dims();
+    let [_, _, c_lat] = m.latent_dims();
+    (f * p * c_lat * 4) as u64
+}
+
+#[test]
+fn device_pool_replicas_have_isolated_transfer_stats() {
+    // No artifacts needed: the pool is pure runtime state.
+    let pool = DevicePool::cpu(2).unwrap();
+    let before = pool.transfer_snapshots();
+    assert_eq!(before.len(), 2);
+
+    let t = pool.device(0).upload(&[1.0f32, 2.0, 3.0, 4.0], &[4]).unwrap();
+    let mut back = vec![0.0f32; 4];
+    pool.device(0).download_into(&t, &mut back).unwrap();
+    assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+
+    let after = pool.transfer_snapshots();
+    let d0 = after[0].delta_since(&before[0]);
+    assert_eq!(d0.h2d_calls, 1);
+    assert_eq!(d0.h2d_bytes, 16);
+    assert_eq!(d0.d2h_calls, 1);
+    assert_eq!(d0.d2h_bytes, 16);
+    // replica 1 saw none of replica 0's traffic
+    assert_eq!(after[1], before[1], "replica 1's meter moved without traffic");
+}
+
+#[test]
+fn migrated_session_matches_never_migrated_run_and_charges_one_lane_per_hop() {
+    // Steal-correctness property: a session migrated between replicas at
+    // random step boundaries (possibly round-tripping back) finishes with
+    // latents ≤1e-6 of its never-migrated oracle, identical reuse
+    // decisions, and a RunStats byte model charged exactly one extra lane
+    // download+upload per hop.
+    if !artifacts_present() {
+        return;
+    }
+    let engines = AssertUnwindSafe(two_engines().unwrap());
+    let lane = lane_bytes(&engines[0]);
+
+    proptest_cases(4, move |g| {
+        let steps = g.usize_in(4..=10);
+        let seed = g.usize_in(0..=10_000) as u64;
+        let spec = *g.pick(&["none", "static", "foresight:n=1,r=2,gamma=0.5"]);
+        // one or two hops, at strictly increasing interior boundaries
+        let hop1 = g.usize_in(1..=steps - 1);
+        let hops: Vec<usize> = if g.bool() && hop1 + 1 <= steps - 1 {
+            vec![hop1, g.usize_in(hop1 + 1..=steps - 1)]
+        } else {
+            vec![hop1]
+        };
+
+        let mut req = Request::new("a storm front rolling over wheat fields", seed);
+        req.steps = Some(steps);
+        let oracle = standalone(&engines[0], &req, spec);
+
+        let pol = policy_for(&engines[0], spec, steps);
+        let mut sess = engines[0].admit(&req, pol).unwrap();
+        let mut at = 0usize; // engine ordinal currently hosting the session
+        let mut cursor = 0usize;
+        for &hop in &hops {
+            while cursor < hop {
+                sess.step(None).unwrap();
+                cursor += 1;
+            }
+            at = 1 - at;
+            sess.migrate(&engines[at]).unwrap();
+        }
+        while !sess.is_done() {
+            sess.step(None).unwrap();
+        }
+        let got = sess.finish().unwrap();
+
+        let mismatch = first_latent_mismatch(&got.latents.data, &oracle.latents.data, 1e-6);
+        prop_assert(
+            mismatch.is_none(),
+            format!(
+                "steps={steps} spec={spec} hops={hops:?}: latents diverged ({mismatch:?})"
+            ),
+        );
+        prop_assert(
+            (got.stats.computed_units, got.stats.reused_units)
+                == (oracle.stats.computed_units, oracle.stats.reused_units),
+            format!("steps={steps} spec={spec} hops={hops:?}: decisions diverged"),
+        );
+        let h = hops.len() as u64;
+        prop_assert(
+            got.stats.d2h_bytes == oracle.stats.d2h_bytes + h * lane
+                && got.stats.d2h_calls == oracle.stats.d2h_calls + h
+                && got.stats.h2d_bytes == oracle.stats.h2d_bytes + h * lane
+                && got.stats.h2d_calls == oracle.stats.h2d_calls + h,
+            format!(
+                "steps={steps} hops={hops:?}: migration must charge exactly one lane \
+                 down+up per hop (lane={lane}B): got h2d {}B/{} d2h {}B/{} vs oracle \
+                 h2d {}B/{} d2h {}B/{}",
+                got.stats.h2d_bytes,
+                got.stats.h2d_calls,
+                got.stats.d2h_bytes,
+                got.stats.d2h_calls,
+                oracle.stats.h2d_bytes,
+                oracle.stats.h2d_calls,
+                oracle.stats.d2h_bytes,
+                oracle.stats.d2h_calls,
+            ),
+        );
+    });
+}
+
+#[test]
+fn migrate_rejects_same_device_and_shape_mismatch() {
+    if !artifacts_present() {
+        return;
+    }
+    let engines = two_engines().unwrap();
+    let mut req = Request::new("reject probe", 7);
+    req.steps = Some(4);
+    let pol = policy_for(&engines[0], "none", 4);
+    let mut sess = engines[0].admit(&req, pol).unwrap();
+    sess.step(None).unwrap();
+    // same engine: refused without poisoning
+    assert!(sess.migrate(&engines[0]).is_err());
+    // still healthy: finish the run on its own device
+    while !sess.is_done() {
+        sess.step(None).unwrap();
+    }
+    sess.finish().unwrap();
+}
+
+fn gen_req(bucket: &str, policy: &str, prompt: &str, seed: u64, steps: usize) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("model", Json::str(MODEL.0)),
+        ("bucket", Json::str(bucket)),
+        ("policy", Json::str(policy)),
+        ("prompt", Json::str(prompt)),
+        ("seed", Json::num(seed as f64)),
+        ("steps", Json::num(steps as f64)),
+    ])
+}
+
+#[test]
+fn server_steals_a_lane_to_an_idle_replica_and_reports_it() {
+    // End-to-end work steal: device 0 runs a two-lane cohort while device
+    // 1 goes idle; the scheduler migrates one session over, the response
+    // stays bit-compatible with a solo run, and the `stats` op reports the
+    // sharded topology (devices, steals, per_device).
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load(&Manifest::default_root()).unwrap();
+    let pool = Arc::new(DevicePool::cpu(2).unwrap());
+    let pairs = vec![
+        (MODEL.0.to_string(), MODEL.1.to_string()),
+        (MODEL.0.to_string(), "240p-4s".to_string()),
+    ];
+    let registry = Arc::new(EngineRegistry::load_pool(pool, &manifest, &pairs).unwrap());
+    let server = Server::start(
+        registry,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            devices: 2,
+            max_batch: 4,
+            admit_window_ms: 0,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    // Solo references (sequential, before the contended phase).
+    let (ref_x, ref_z) = {
+        let mut c = Client::connect(&addr).unwrap();
+        let rx = c.call(&gen_req(MODEL.1, "foresight", "steal long x", 11, 40)).unwrap();
+        assert_eq!(rx.get("status").unwrap().as_str().unwrap(), "ok", "{rx}");
+        let rz = c.call(&gen_req(MODEL.1, "foresight", "steal joiner z", 12, 40)).unwrap();
+        assert_eq!(rz.get("status").unwrap().as_str().unwrap(), "ok", "{rz}");
+        (
+            rx.get("latent_l2").unwrap().as_f64().unwrap(),
+            rz.get("latent_l2").unwrap().as_f64().unwrap(),
+        )
+    };
+
+    let wait_lanes = |c: &mut Client, want: usize| {
+        let t0 = std::time::Instant::now();
+        loop {
+            let s = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+            if s.get("lanes_active").unwrap().as_usize().unwrap() >= want {
+                return;
+            }
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(20),
+                "never reached {want} active lanes: {s}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    };
+    let mut c = Client::connect(&addr).unwrap();
+
+    // jobX: long request, lands on device 0 (least-loaded, lowest ordinal).
+    let job_x = gen_req(MODEL.1, "foresight", "steal long x", 11, 40);
+    let mut cx = Client::connect(&addr).unwrap();
+    let hx = std::thread::spawn(move || cx.call(&job_x).unwrap());
+    wait_lanes(&mut c, 1);
+    std::thread::sleep(std::time::Duration::from_millis(30));
+
+    // jobY: different bucket, short — keeps device 1 busy while jobZ
+    // routes by affinity, then frees it to raise `wants_work`.
+    let job_y = gen_req("240p-4s", "none", "steal short y", 13, 6);
+    let mut cy = Client::connect(&addr).unwrap();
+    let hy = std::thread::spawn(move || cy.call(&job_y).unwrap());
+    wait_lanes(&mut c, 2);
+
+    // jobZ: same key as jobX → cohort affinity routes it to device 0,
+    // which now holds two lanes; once device 1 idles, one migrates.
+    let job_z = gen_req(MODEL.1, "foresight", "steal joiner z", 12, 40);
+    let mut cz = Client::connect(&addr).unwrap();
+    let hz = std::thread::spawn(move || cz.call(&job_z).unwrap());
+
+    let rx = hx.join().unwrap();
+    let ry = hy.join().unwrap();
+    let rz = hz.join().unwrap();
+    for (name, r) in [("x", &rx), ("y", &ry), ("z", &rz)] {
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "job {name}: {r}");
+    }
+    // Bit-compatibility regardless of which lane migrated.
+    let got_x = rx.get("latent_l2").unwrap().as_f64().unwrap();
+    let got_z = rz.get("latent_l2").unwrap().as_f64().unwrap();
+    assert!(
+        (got_x - ref_x).abs() <= 1e-6 * (1.0 + ref_x.abs()),
+        "job x diverged after sharded serving: {got_x} vs {ref_x}"
+    );
+    assert!(
+        (got_z - ref_z).abs() <= 1e-6 * (1.0 + ref_z.abs()),
+        "job z diverged after sharded serving: {got_z} vs {ref_z}"
+    );
+
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("devices").unwrap().as_usize().unwrap(), 2, "{stats}");
+    assert!(
+        stats.get("steals").unwrap().as_usize().unwrap() >= 1,
+        "no session migration was recorded: {stats}"
+    );
+    let per_dev = stats.get("per_device").unwrap().as_arr().unwrap();
+    assert_eq!(per_dev.len(), 2, "{stats}");
+    let mut dev_steals = 0usize;
+    for (i, d) in per_dev.iter().enumerate() {
+        assert_eq!(d.get("device").unwrap().as_usize().unwrap(), i, "{stats}");
+        assert_eq!(
+            d.get("lanes_active").unwrap().as_usize().unwrap(),
+            0,
+            "lanes must drain on device {i}: {stats}"
+        );
+        dev_steals += d.get("steals").unwrap().as_usize().unwrap();
+        // every replica that served traffic moved bytes over its own bus
+        if d.get("retires").unwrap().as_usize().unwrap() > 0 {
+            assert!(d.get("h2d_bytes").unwrap().as_f64().unwrap() > 0.0, "{stats}");
+        }
+    }
+    assert_eq!(
+        dev_steals,
+        stats.get("steals").unwrap().as_usize().unwrap(),
+        "per-device steal counts must sum to the aggregate: {stats}"
+    );
+    server.shutdown();
+}
