@@ -1,0 +1,639 @@
+//! **Figure 22 (repo-original)**: SLO-aware overload control under
+//! trace-driven load — bounded admission, deadlines, and
+//! quality-for-latency degradation against the *real* server.
+//!
+//! Unlike fig20/fig21 (virtual-clock replays of the scheduler
+//! discipline), this harness starts an actual [`foresight::server::Server`]
+//! (one device, one worker, bounded queue, degradation armed) and replays
+//! open-loop arrival traces from [`foresight::util::loadgen`] through real
+//! TCP clients, so admission control, deadline sweeps and the degrade
+//! valve are exercised end to end on the wire.
+//!
+//! Scenarios and what they pin:
+//!
+//! * **calm** — sequential `policy=auto` traffic with empty queues:
+//!   resolves the tuned spec, never degraded (the baseline p99).
+//! * **bounded admission** (deterministic) — a long request plugs the
+//!   worker while `--max-queue` incompatible jobs fill the queue; the
+//!   next arrival must get the `overloaded` response with a sane
+//!   `retry_after_ms` hint, and the queue must never exceed the bound.
+//! * **degrade valve** (deterministic) — with queue depth at the
+//!   `--degrade` threshold, a `policy=auto` request must resolve to the
+//!   profile's fastest frontier point *within its min-PSNR budget*
+//!   (`degraded:true`, echoing `degraded_from`) — and never to the
+//!   below-budget point, whatever the pressure.
+//! * **bursty / flash crowd** — loadgen traces past capacity with
+//!   retrying clients: every arrival ends with a definitive answer, and
+//!   the flash-crowd p99 of served requests stays a bounded multiple of
+//!   the calm p99 (graceful degradation, not collapse).
+//! * **mixed soak** — two buckets merged with deadlines sprinkled in:
+//!   after the dust settles the server must hold zero lanes, zero queued
+//!   jobs, and close its books: `requests == retires + errors`, with
+//!   client-side tallies matching `retires`/`deadline_misses` exactly.
+//!
+//! `FORESIGHT_BENCH_STEPS` overrides the step count (CI smoke mode).
+//! Exits cleanly with a SKIP note when the AOT artifacts are absent.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use foresight::autotune::{ProfileKey, ProfilePoint, ProfileStore, TunedProfile};
+use foresight::config::Manifest;
+use foresight::runtime::DevicePool;
+use foresight::server::{Backoff, Client, EngineRegistry, Server, ServerConfig};
+use foresight::util::benchkit::{MdTable, Report};
+use foresight::util::json::Json;
+use foresight::util::loadgen::{self, Arrival};
+use foresight::util::stats;
+
+const MODEL: &str = "opensora-sim";
+const BUCKETS: [&str; 2] = ["240p-2s", "240p-4s"];
+/// The profile's tuned spec (what unpressured `auto` serves).
+const TUNED: &str = "foresight:n=1,r=2,gamma=0.5";
+/// In-budget fast tier: the degrade valve's legal target.
+const FAST_GOOD: &str = "static:n=1,r=3";
+/// Below-budget tier: present on the frontier, must never be served.
+const FAST_BAD: &str = "static:n=1,r=6";
+const MAX_BATCH: usize = 4;
+const MAX_QUEUE: usize = 6;
+const DEGRADE_AT: usize = 2;
+
+fn bench_steps() -> usize {
+    std::env::var("FORESIGHT_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10)
+        .max(4)
+}
+
+/// A store with quality headroom: the tuned spec is *not* the fastest
+/// in-budget frontier point, so the degrade valve has somewhere to go.
+/// (Stores written by `foresight autotune` pick the fastest in-budget
+/// point as the spec, which makes degradation a no-op by construction —
+/// an operator wanting the valve hand-pins a higher-quality spec, which
+/// is what this store models.)
+fn headroom_store(steps: usize) -> Arc<ProfileStore> {
+    let mut store = ProfileStore::new();
+    let frontier = vec![
+        ProfilePoint {
+            spec: FAST_BAD.into(),
+            wall_s: 0.5,
+            reuse_fraction: 0.85,
+            psnr: 22.0, // below budget: never servable
+            ssim: 0.80,
+            lpips: 0.30,
+        },
+        ProfilePoint {
+            spec: FAST_GOOD.into(),
+            wall_s: 1.0,
+            reuse_fraction: 0.65,
+            psnr: 31.0, // in budget: the degrade target
+            ssim: 0.92,
+            lpips: 0.12,
+        },
+        ProfilePoint {
+            spec: TUNED.into(),
+            wall_s: 2.0,
+            reuse_fraction: 0.40,
+            psnr: 38.0,
+            ssim: 0.97,
+            lpips: 0.05,
+        },
+    ];
+    for bucket in BUCKETS {
+        for sampler in ["rflow", "ddim"] {
+            store.insert(TunedProfile {
+                key: ProfileKey {
+                    model: MODEL.into(),
+                    bucket: bucket.into(),
+                    sampler: sampler.into(),
+                    steps,
+                },
+                spec: TUNED.into(),
+                min_psnr: 30.0,
+                profile_version: 1,
+                frontier: frontier.clone(),
+            });
+        }
+    }
+    Arc::new(store)
+}
+
+fn gen_req(bucket: &str, policy: &str, prompt: &str, seed: u64, steps: usize) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("model", Json::str(MODEL)),
+        ("bucket", Json::str(bucket)),
+        ("policy", Json::str(policy)),
+        ("prompt", Json::str(prompt)),
+        ("seed", Json::num(seed as f64)),
+        ("steps", Json::num(steps as f64)),
+    ])
+}
+
+fn with_deadline(mut req: Json, deadline_ms: u64) -> Json {
+    if let Json::Obj(ref mut o) = req {
+        o.insert("deadline_ms".into(), Json::num(deadline_ms as f64));
+    }
+    req
+}
+
+fn stats_op(c: &mut Client) -> Json {
+    c.call(&Json::obj(vec![("op", Json::str("stats"))]))
+        .expect("stats op")
+}
+
+fn get_f64(j: &Json, k: &str) -> f64 {
+    j.get(k)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("missing {k}: {j}"))
+}
+
+fn get_str<'a>(j: &'a Json, k: &str) -> &'a str {
+    j.get(k)
+        .and_then(|v| v.as_str())
+        .unwrap_or_else(|| panic!("missing {k}: {j}"))
+}
+
+/// Poll the stats op until `pred` holds (bounds scenario setup races).
+fn wait_stats(addr: &std::net::SocketAddr, what: &str, pred: impl Fn(&Json) -> bool) {
+    let mut c = Client::connect(addr).expect("stats client");
+    let t0 = Instant::now();
+    loop {
+        let s = stats_op(&mut c);
+        if pred(&s) {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "timed out waiting for {what}: {s}"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// One client's final outcome for one arrival.
+struct Outcome {
+    resp: Json,
+    latency_s: f64,
+}
+
+/// What a scenario's outcomes amounted to, for the report/assertions.
+#[derive(Default)]
+struct Tally {
+    ok: usize,
+    deadline: usize,
+    overloaded: usize,
+    other_err: usize,
+    latencies_ok: Vec<f64>,
+}
+
+fn tally(outcomes: &[Outcome]) -> Tally {
+    let mut t = Tally::default();
+    for o in outcomes {
+        match get_str(&o.resp, "status") {
+            "ok" => {
+                t.ok += 1;
+                t.latencies_ok.push(o.latency_s);
+            }
+            _ if o
+                .resp
+                .get("deadline_exceeded")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false) =>
+            {
+                t.deadline += 1
+            }
+            _ if foresight::server::is_overloaded(&o.resp) => t.overloaded += 1,
+            _ => t.other_err += 1,
+        }
+    }
+    t
+}
+
+/// Replay a trace open-loop: one fresh connection per arrival, retrying
+/// overloaded responses per `backoff` (seeded per arrival index so jitter
+/// is deterministic across runs).
+fn replay_trace(
+    addr: std::net::SocketAddr,
+    trace: &[Arrival],
+    req_for: impl Fn(usize, &Arrival) -> Json + Sync,
+    backoff: &Backoff,
+) -> Vec<Outcome> {
+    loadgen::replay(trace, |i, a| {
+        let req = req_for(i, a);
+        let mut c = Client::connect(&addr).expect("client connect");
+        let b = Backoff { seed: i as u64, ..backoff.clone() };
+        let t0 = Instant::now();
+        let resp = c.call_retrying(&req, &b).expect("transport");
+        Outcome { resp, latency_s: t0.elapsed().as_secs_f64() }
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = match Manifest::load(&Manifest::default_root()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("[fig22] SKIP: artifacts unavailable ({e:#}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let steps = bench_steps();
+
+    let pool = Arc::new(DevicePool::cpu(1)?);
+    let pairs: Vec<(String, String)> = BUCKETS
+        .iter()
+        .map(|b| (MODEL.to_string(), b.to_string()))
+        .collect();
+    let registry = Arc::new(EngineRegistry::load_pool(pool, &manifest, &pairs)?);
+    let server = Server::start(
+        registry,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            devices: 1,
+            max_batch: MAX_BATCH,
+            max_queue: MAX_QUEUE,
+            degrade_threshold: DEGRADE_AT,
+            profiles: Some(headroom_store(steps)),
+            ..ServerConfig::default()
+        },
+    )?;
+    let addr = server.addr();
+
+    // Calibrate the service time: rates below are expressed in units of
+    // one solo request so the traces stress the same relative load at
+    // every FORESIGHT_BENCH_STEPS. (One warm pass first so compile/cache
+    // effects don't inflate the unit.)
+    let svc = {
+        let mut c = Client::connect(&addr)?;
+        let req = gen_req(BUCKETS[0], TUNED, "calibration", 1, steps);
+        let r = c.call(&req)?;
+        assert_eq!(get_str(&r, "status"), "ok", "calibration failed: {r}");
+        let t0 = Instant::now();
+        let r = c.call(&req)?;
+        assert_eq!(get_str(&r, "status"), "ok", "{r}");
+        t0.elapsed().as_secs_f64().max(0.02)
+    };
+    let rps = |k: f64| k / svc;
+
+    // --- scenario: calm -------------------------------------------------
+    // Sequential auto traffic against empty queues: tuned spec, no
+    // degradation, the latency baseline every overload bound is relative
+    // to.
+    let calm = {
+        let mut c = Client::connect(&addr)?;
+        let mut lat = Vec::new();
+        for i in 0..6u64 {
+            let t0 = Instant::now();
+            let r = c.call(&gen_req(BUCKETS[0], "auto", &format!("calm {i}"), 10 + i, steps))?;
+            lat.push(t0.elapsed().as_secs_f64());
+            assert_eq!(get_str(&r, "status"), "ok", "calm {i}: {r}");
+            assert_eq!(get_str(&r, "resolved_policy"), TUNED, "calm {i}: {r}");
+            assert_eq!(
+                r.get("degraded").and_then(|v| v.as_bool()),
+                Some(false),
+                "calm traffic must never degrade: {r}"
+            );
+        }
+        lat
+    };
+    let calm_p99 = stats::percentile(&calm, 99.0);
+
+    // --- scenario: bounded admission (deterministic) --------------------
+    // Plug the only worker with a long request; its cohort key fences the
+    // incompatible fillers into the queue. The (MAX_QUEUE+1)-th arrival
+    // must be refused on the wire, not queued.
+    {
+        let plug = gen_req(BUCKETS[0], TUNED, "admission plug", 90, 60.min(steps * 8));
+        let mut c_plug = Client::connect(&addr)?;
+        let h_plug = std::thread::spawn(move || c_plug.call(&plug).expect("plug"));
+        wait_stats(&addr, "plug in flight", |s| get_f64(s, "lanes_active") >= 1.0);
+
+        let mut fillers = Vec::new();
+        for i in 0..MAX_QUEUE as u64 {
+            let req = gen_req(BUCKETS[1], TUNED, &format!("filler {i}"), 100 + i, steps);
+            let mut c = Client::connect(&addr)?;
+            fillers.push(std::thread::spawn(move || c.call(&req).expect("filler")));
+        }
+        wait_stats(&addr, "queue at bound", |s| {
+            get_f64(s, "queue_depth") >= MAX_QUEUE as f64
+        });
+
+        let mut c = Client::connect(&addr)?;
+        let probe = gen_req(BUCKETS[1], TUNED, "one too many", 200, steps);
+        let r = c.call_retrying(&probe, &Backoff::none())?;
+        assert!(
+            foresight::server::is_overloaded(&r),
+            "arrival past --max-queue must be refused: {r}"
+        );
+        let hint = get_f64(&r, "retry_after_ms");
+        assert!(
+            (25.0..=5000.0).contains(&hint),
+            "retry_after_ms outside its clamp: {r}"
+        );
+        assert_eq!(get_f64(&r, "queue_depth"), MAX_QUEUE as f64, "{r}");
+
+        let plug_r = h_plug.join().expect("plug thread");
+        assert_eq!(get_str(&plug_r, "status"), "ok", "{plug_r}");
+        for h in fillers {
+            let r = h.join().expect("filler thread");
+            assert_eq!(get_str(&r, "status"), "ok", "queued filler must be served: {r}");
+        }
+    }
+
+    // --- scenario: degrade valve (deterministic) ------------------------
+    // Queue depth exactly at the threshold: auto must swap to FAST_GOOD
+    // (in budget), echo the swap, and never touch FAST_BAD.
+    {
+        let plug = gen_req(BUCKETS[0], TUNED, "degrade plug", 91, 60.min(steps * 8));
+        let mut c_plug = Client::connect(&addr)?;
+        let h_plug = std::thread::spawn(move || c_plug.call(&plug).expect("plug"));
+        wait_stats(&addr, "plug in flight", |s| get_f64(s, "lanes_active") >= 1.0);
+
+        let mut fillers = Vec::new();
+        for i in 0..DEGRADE_AT as u64 {
+            let req = gen_req(BUCKETS[1], TUNED, &format!("pressure {i}"), 300 + i, steps);
+            let mut c = Client::connect(&addr)?;
+            fillers.push(std::thread::spawn(move || c.call(&req).expect("pressure")));
+        }
+        wait_stats(&addr, "queue at degrade threshold", |s| {
+            get_f64(s, "queue_depth") >= DEGRADE_AT as f64
+        });
+
+        let probe = gen_req(BUCKETS[0], "auto", "degrade probe", 400, steps);
+        let mut c = Client::connect(&addr)?;
+        let h_probe = std::thread::spawn(move || c.call(&probe).expect("probe"));
+
+        let r = h_probe.join().expect("probe thread");
+        assert_eq!(get_str(&r, "status"), "ok", "{r}");
+        assert_eq!(
+            r.get("degraded").and_then(|v| v.as_bool()),
+            Some(true),
+            "auto under queue pressure must degrade: {r}"
+        );
+        assert_eq!(
+            get_str(&r, "resolved_policy"),
+            FAST_GOOD,
+            "degrade must pick the fastest *in-budget* tier: {r}"
+        );
+        assert_eq!(get_str(&r, "degraded_from"), TUNED, "{r}");
+
+        let plug_r = h_plug.join().expect("plug thread");
+        assert_eq!(get_str(&plug_r, "status"), "ok", "{plug_r}");
+        for h in fillers {
+            let r = h.join().expect("pressure thread");
+            assert_eq!(get_str(&r, "status"), "ok", "{r}");
+        }
+
+        let mut c2 = Client::connect(&addr)?;
+        let s = stats_op(&mut c2);
+        assert!(get_f64(&s, "degrade_swaps") >= 1.0, "{s}");
+        assert!(get_f64(&s, "degrade_headroom_s") > 0.0, "{s}");
+        // Pressure gone: auto resolves the tuned spec again.
+        let r = c2.call(&gen_req(BUCKETS[0], "auto", "pressure off", 401, steps))?;
+        assert_eq!(get_str(&r, "resolved_policy"), TUNED, "{r}");
+        assert_eq!(r.get("degraded").and_then(|v| v.as_bool()), Some(false), "{r}");
+    }
+
+    let backoff = Backoff {
+        attempts: 6,
+        base: Duration::from_millis((svc * 250.0) as u64 + 5),
+        cap: Duration::from_secs(2),
+        jitter: true,
+        seed: 0,
+    };
+    let degrade_seen = Arc::new(AtomicUsize::new(0));
+    let resolved_log: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let audit = |r: &Json| {
+        // Global degrade audit, applied to every served auto response in
+        // the trace scenarios: a swap is only ever to the in-budget tier.
+        if get_str(r, "status") == "ok" {
+            if let Some(rp) = r.get("resolved_policy").and_then(|v| v.as_str()) {
+                assert_ne!(
+                    rp, FAST_BAD,
+                    "served a frontier point below the min-PSNR budget: {r}"
+                );
+                resolved_log.lock().unwrap().push(rp.to_string());
+                if r.get("degraded").and_then(|v| v.as_bool()) == Some(true) {
+                    assert_eq!(rp, FAST_GOOD, "{r}");
+                    degrade_seen.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    };
+
+    // --- scenario: bursty ----------------------------------------------
+    let bursty_trace = loadgen::bursty(21, 4.0 * svc, rps(1.0), rps(5.0), 2.0 * svc, 1);
+    let bursty_out = replay_trace(
+        addr,
+        &bursty_trace,
+        |i, _| gen_req(BUCKETS[0], "auto", &format!("bursty {i}"), 1000 + i as u64, steps),
+        &backoff,
+    );
+    for o in &bursty_out {
+        audit(&o.resp);
+    }
+    let bursty_t = tally(&bursty_out);
+    assert_eq!(
+        bursty_t.other_err, 0,
+        "bursty traffic must only see ok/overloaded/deadline answers"
+    );
+    assert_eq!(
+        bursty_t.ok + bursty_t.overloaded,
+        bursty_trace.len(),
+        "every bursty arrival must end with a definitive answer"
+    );
+
+    // --- scenario: flash crowd ------------------------------------------
+    let flash_trace =
+        loadgen::flash_crowd(22, 5.0 * svc, rps(0.8), 1.0 * svc, 1.0 * svc, rps(10.0), 1);
+    let flash_out = replay_trace(
+        addr,
+        &flash_trace,
+        |i, _| gen_req(BUCKETS[0], "auto", &format!("flash {i}"), 2000 + i as u64, steps),
+        &backoff,
+    );
+    for o in &flash_out {
+        audit(&o.resp);
+    }
+    let flash_t = tally(&flash_out);
+    assert_eq!(flash_t.other_err, 0);
+    assert!(flash_t.ok >= 1, "the flash crowd must serve someone");
+    let flash_p99 = stats::percentile(&flash_t.latencies_ok, 99.0);
+    // Graceful, not unbounded: with the queue capped at MAX_QUEUE and
+    // excess refused at the door, a *served* request's latency is bounded
+    // by one queue drain plus retries — far under the whole-spike wait an
+    // unbounded queue would impose. The multiplier is generous for CI
+    // noise; the property is the *existence* of a load-independent bound.
+    assert!(
+        flash_p99 <= calm_p99 * 20.0 + 2.0,
+        "flash-crowd p99 {flash_p99:.3}s not gracefully bounded \
+         (calm p99 {calm_p99:.3}s)"
+    );
+
+    // --- scenario: mixed soak -------------------------------------------
+    // Two buckets merged (class -> bucket), deadlines sprinkled in: every
+    // 5th arrival carries a 1 ms deadline (a guaranteed miss — admitted,
+    // then answered by a deadline sweep, never hogging a lane), the rest
+    // a generous one. Afterwards the books must close exactly.
+    let soak_trace = loadgen::merge(&[
+        loadgen::ramp(23, 4.0 * svc, rps(0.5), rps(3.0), 1),
+        loadgen::rate_trace(24, "fig22-soak-4s", 4.0 * svc, 1, |_| rps(1.0))
+            .into_iter()
+            .map(|a| Arrival { at_s: a.at_s, class: 1 })
+            .collect(),
+    ]);
+    let soak_out = replay_trace(
+        addr,
+        &soak_trace,
+        |i, a| {
+            let bucket = BUCKETS[a.class.min(1)];
+            let policy = if i % 2 == 0 { "auto" } else { TUNED };
+            let req = gen_req(bucket, policy, &format!("soak {i}"), 3000 + i as u64, steps);
+            if i % 5 == 4 {
+                with_deadline(req, 1)
+            } else {
+                with_deadline(req, 120_000)
+            }
+        },
+        &backoff,
+    );
+    for o in &soak_out {
+        audit(&o.resp);
+    }
+    let soak_t = tally(&soak_out);
+    assert_eq!(soak_t.other_err, 0, "soak saw unexpected errors");
+    assert!(
+        soak_t.deadline >= soak_trace.len() / 5,
+        "every 1 ms deadline must miss: {} misses of {} tight arrivals",
+        soak_t.deadline,
+        soak_trace.len() / 5
+    );
+
+    // --- final accounting ------------------------------------------------
+    // The server must be fully drained and its ledgers must close against
+    // the client-side tallies of everything this harness ever sent.
+    let total_ok = 2 /* calibration */ + calm.len() + 2 /* plugs */ + MAX_QUEUE
+        + DEGRADE_AT + 1 /* degrade probe */ + 1 /* pressure-off */
+        + bursty_t.ok + flash_t.ok + soak_t.ok;
+    let total_deadline = bursty_t.deadline + flash_t.deadline + soak_t.deadline;
+    let total_overloaded_final =
+        1 /* admission probe */ + bursty_t.overloaded + flash_t.overloaded + soak_t.overloaded;
+
+    let mut c = Client::connect(&addr)?;
+    let s = stats_op(&mut c);
+    let requests = get_f64(&s, "requests");
+    let retires = get_f64(&s, "retires");
+    let errors = get_f64(&s, "errors");
+    let rejects = get_f64(&s, "rejects");
+    let misses = get_f64(&s, "deadline_misses");
+    let peak = get_f64(&s, "queue_depth_peak");
+
+    assert_eq!(get_f64(&s, "lanes_active"), 0.0, "stalled sessions: {s}");
+    assert_eq!(get_f64(&s, "queue_depth"), 0.0, "stranded queue jobs: {s}");
+    assert_eq!(
+        requests,
+        retires + errors,
+        "admitted-request ledger must close: {s}"
+    );
+    assert_eq!(retires, total_ok as f64, "server retires vs client ok tally: {s}");
+    assert_eq!(misses, total_deadline as f64, "deadline ledger vs client tally: {s}");
+    assert_eq!(errors, misses, "soak errors must all be deadline misses: {s}");
+    assert!(
+        rejects >= total_overloaded_final as f64,
+        "every overloaded answer is a counted reject (retries add more): {s}"
+    );
+    assert_eq!(
+        peak,
+        MAX_QUEUE as f64,
+        "bounded admission: the queue was driven exactly to --max-queue \
+         and must never exceed it: {s}"
+    );
+    // Every client-observed degraded response cost at least one resolve
+    // swap; the deterministic valve scenario adds one more (retries and
+    // rejected-after-resolve attempts can only push the server count up).
+    let swaps = get_f64(&s, "degrade_swaps");
+    assert!(
+        swaps >= degrade_seen.load(Ordering::Relaxed) as f64 + 1.0,
+        "degrade_swaps below the client-observed floor: {s}"
+    );
+
+    server.shutdown();
+
+    // --- report ----------------------------------------------------------
+    let mut report = Report::new(
+        "fig22_overload",
+        "Figure 22 — SLO-aware overload control: bounded admission, deadlines, degradation",
+    );
+    report.config("model", Json::str(MODEL));
+    report.config(
+        "buckets",
+        Json::Arr(BUCKETS.iter().map(|b| Json::str(b)).collect()),
+    );
+    report.config("steps", Json::num(steps as f64));
+    report.config("max_batch", Json::num(MAX_BATCH as f64));
+    report.config("max_queue", Json::num(MAX_QUEUE as f64));
+    report.config("degrade_threshold", Json::num(DEGRADE_AT as f64));
+    report.config("tuned_spec", Json::str(TUNED));
+    report.config("degrade_spec", Json::str(FAST_GOOD));
+    report.config("service_unit_s", Json::num(svc));
+
+    let mut tbl = MdTable::new(&[
+        "Scenario",
+        "Arrivals",
+        "Served",
+        "Deadline miss",
+        "Refused (final)",
+        "p50 lat(s)",
+        "p99 lat(s)",
+    ]);
+    let calm_t = Tally {
+        ok: calm.len(),
+        deadline: 0,
+        overloaded: 0,
+        other_err: 0,
+        latencies_ok: calm.clone(),
+    };
+    for (name, n, t) in [
+        ("calm", calm.len(), &calm_t),
+        ("bursty", bursty_trace.len(), &bursty_t),
+        ("flash-crowd", flash_trace.len(), &flash_t),
+        ("mixed-soak", soak_trace.len(), &soak_t),
+    ] {
+        tbl.row(vec![
+            name.to_string(),
+            format!("{n}"),
+            format!("{}", t.ok),
+            format!("{}", t.deadline),
+            format!("{}", t.overloaded),
+            format!("{:.3}", stats::percentile(&t.latencies_ok, 50.0)),
+            format!("{:.3}", stats::percentile(&t.latencies_ok, 99.0)),
+        ]);
+    }
+    report.table("Open-loop traces against the live server (retrying clients)", &tbl);
+    report.csv("scenarios", &tbl);
+
+    report.metric("calm_p99_s", calm_p99);
+    report.metric("flash_p99_s", flash_p99);
+    report.metric("queue_depth_peak", peak);
+    report.metric("rejects", rejects);
+    report.metric("deadline_misses", misses);
+    report.metric("degrade_swaps", swaps);
+    report.metric("degrade_headroom_s", get_f64(&s, "degrade_headroom_s"));
+    report.metric("requests", requests);
+    report.metric("retires", retires);
+
+    let auto_served = resolved_log.lock().unwrap().len();
+    report.text(&format!(
+        "\nThe queue never exceeded --max-queue ({MAX_QUEUE}); the flash-crowd \
+         p99 stayed within 20x calm p99 + 2s ({flash_p99:.3}s vs {calm_p99:.3}s); \
+         {swaps:.0} degrade swap(s) served only the in-budget tier \
+         ({auto_served} auto responses audited, none below the min-PSNR \
+         budget); every deadline miss and reject is accounted and the soak \
+         drained to zero lanes and zero queued jobs."
+    ));
+    report.finish()?;
+    Ok(())
+}

@@ -267,6 +267,32 @@ pub fn select(points: &[ProfilePoint], min_psnr: f64) -> Option<&ProfilePoint> {
     })
 }
 
+/// The overload tier (server `--degrade`): the fastest frontier point of a
+/// tuned profile that still meets the profile's **own** min-PSNR budget.
+///
+/// Under queue pressure the server may serve `policy=auto` requests at this
+/// point instead of the stored spec, trading measured PSNR headroom for
+/// latency — but never *below* the budget the operator tuned with, so a
+/// degraded response is still within the quality contract. Stores written
+/// by `foresight autotune` record the fastest in-budget point as the spec
+/// itself, so degradation is only a real swap for stores whose spec was
+/// chosen conservatively (a stricter serve-time budget, a hand-edited
+/// store, or a merged older profile); callers detect that by comparing the
+/// returned spec against [`TunedProfile::spec`].
+///
+/// Returns `None` when no frontier point meets the budget (the profile
+/// then has no in-budget tier to fall to, degraded or otherwise).
+pub fn degrade_select(profile: &TunedProfile) -> Option<&ProfilePoint> {
+    // The frontier is persisted fastest-first, but hand-edited or merged
+    // stores may not honor that — select defensively rather than trusting
+    // order, with the same (wall, spec) determinism as `select`.
+    profile
+        .frontier
+        .iter()
+        .filter(|p| p.psnr >= profile.min_psnr)
+        .min_by(|a, b| by_wall_then_spec(a, b))
+}
+
 /// Profile one engine (= one loaded (model, bucket)) at one step count:
 /// baseline first, then every grid candidate, then Pareto selection. The
 /// returned [`ProfileOutcome`] carries both the tuned profile (ready for
@@ -459,6 +485,73 @@ mod tests {
         // impossible budget: best quality wins
         assert_eq!(select(&points, 1000.0).unwrap().spec, "none");
         assert!(select(&[], 30.0).is_none());
+    }
+
+    fn tuned(spec: &str, min_psnr: f64, frontier: Vec<ProfilePoint>) -> TunedProfile {
+        TunedProfile {
+            key: ProfileKey {
+                model: "m".into(),
+                bucket: "240p-2s".into(),
+                sampler: "rflow".into(),
+                steps: 30,
+            },
+            spec: spec.into(),
+            min_psnr,
+            profile_version: 1,
+            frontier,
+        }
+    }
+
+    #[test]
+    fn degrade_select_picks_fastest_in_budget_tier() {
+        // A store with quality headroom: the stored spec is the conservative
+        // point, and a faster point still meets the budget. A faster-still
+        // point *below* budget must never be selected.
+        let p = tuned(
+            "tuned",
+            30.0,
+            vec![
+                point("fast-bad", 0.5, 22.0), // below budget: forbidden
+                point("fast-good", 1.0, 31.0),
+                point("tuned", 2.0, 38.0),
+            ],
+        );
+        assert_eq!(degrade_select(&p).unwrap().spec, "fast-good");
+    }
+
+    #[test]
+    fn degrade_select_is_order_independent_and_deterministic() {
+        // Frontier order reversed (merged/hand-edited stores may not be
+        // sorted) and a wall tie: same answer, spec tie-break.
+        let p = tuned(
+            "tuned",
+            30.0,
+            vec![
+                point("tuned", 2.0, 38.0),
+                point("b-tie", 1.0, 33.0),
+                point("a-tie", 1.0, 31.0),
+            ],
+        );
+        assert_eq!(degrade_select(&p).unwrap().spec, "a-tie");
+    }
+
+    #[test]
+    fn degrade_select_none_when_nothing_meets_budget() {
+        let p = tuned("tuned", 50.0, vec![point("fast-bad", 0.5, 22.0), point("tuned", 2.0, 38.0)]);
+        assert!(degrade_select(&p).is_none());
+        assert!(degrade_select(&tuned("tuned", 30.0, vec![])).is_none());
+    }
+
+    #[test]
+    fn degrade_select_matches_spec_for_autotune_written_stores() {
+        // `foresight autotune` stores the fastest in-budget point as the
+        // spec itself — degradation must then be a no-op (same spec back),
+        // never a below-budget escape hatch.
+        let frontier =
+            vec![point("fast-bad", 0.5, 22.0), point("tuned", 1.0, 35.0), point("hq", 2.0, 40.0)];
+        let chosen = select(&frontier, 30.0).unwrap().spec.clone();
+        let p = tuned(&chosen, 30.0, frontier);
+        assert_eq!(degrade_select(&p).unwrap().spec, p.spec);
     }
 
     #[test]

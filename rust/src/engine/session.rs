@@ -482,6 +482,30 @@ impl<'p> Session<'p> {
         self.peak_lanes
     }
 
+    /// True once a step or migration error has poisoned this session:
+    /// caches/policy state may have advanced past the cursor (or be split
+    /// across devices), so it refuses further steps and callers must
+    /// answer the client and drop it. The server's scheduler checks this
+    /// at step boundaries so a poisoned lane can never poison a shared
+    /// cohort pass.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// Early-retire an unfinished session (deadline expiry, shutdown,
+    /// poisoning): reap both persistent branch workers *now* instead of
+    /// waiting for `Drop`, without downloading the latent or assembling a
+    /// [`RunResult`]. The freed lane (device tensors, caches, worker
+    /// threads) is released before this returns, so a scheduler that
+    /// abandons an expired lane immediately recovers its capacity.
+    pub fn abandon(mut self) {
+        if let Exec::Workers(ws) = &mut self.exec {
+            for w in ws {
+                let _ = w.shutdown();
+            }
+        }
+    }
+
     /// Precompute both branches' site actions for the current step. Safe
     /// before the sweeps because decisions for step `t` depend only on
     /// observations from steps `< t` (module docs §Policy-free workers).

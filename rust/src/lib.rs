@@ -105,6 +105,32 @@
 //! latents (≤1e-6) and the exact one-lane steal charge. See [`server`]
 //! §Sharded topology and the `server::scheduler` module docs.
 //!
+//! Under overload the server **degrades before it collapses**. Per-device
+//! queues are bounded (`--max-queue`): a request arriving with every
+//! candidate queue at the bound is refused immediately with the
+//! `overloaded` backpressure response (`retry_after_ms` drain-time hint,
+//! `queue_depth`), counted in the `stats` op's `rejects` — and
+//! [`server::Client::call_retrying`] retries those transparently with
+//! capped exponential backoff honoring the hint
+//! ([`server::Backoff`]; `Backoff::none()` opts out). Requests may carry
+//! a `deadline_ms` budget: a job whose deadline passes — in the queue, at
+//! admission, or mid-flight — is answered with
+//! `{"status":"error", "deadline_exceeded":true}` at the next step
+//! boundary instead of consuming device passes (mid-flight lanes retire
+//! early via [`engine::session::Session::abandon`]), counted in
+//! `deadline_misses`. And under queue pressure (`--degrade` threshold),
+//! `policy:"auto"` resolves to the profile's fastest frontier point still
+//! inside its own autotune min-PSNR budget — responses echo
+//! `degraded`/`degraded_from`, `stats` counts `degrade_swaps` and the
+//! recovered `degrade_headroom_s`, and `queue_depth`/`queue_depth_peak`
+//! expose the pressure itself. `benches/fig22_overload.rs` drives all
+//! three valves with trace-driven open-loop load (bursty ramps and a
+//! flash crowd via [`util::loadgen`]) against a live server, asserting
+//! the queue never exceeds its bound, misses are answered early, the
+//! degradation valve never picks an out-of-budget tier, and a mixed soak
+//! drains to zero lanes with the ledger balancing. See [`server`]
+//! §Overload control.
+//!
 //! # Autotune
 //!
 //! Reuse knobs (γ, warmup, N/R) are not one-size-fits-all: the right

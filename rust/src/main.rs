@@ -133,13 +133,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         )
         .opt(
             "admit-ms",
-            "",
+            "0",
             "wait before a fresh cohort's first step for batchmates, ms (default 0 = step immediately; late arrivals join at step boundaries)",
         )
         .opt(
-            "gather-ms",
-            "",
-            "DEPRECATED alias for --admit-ms (the lockstep gather window is gone)",
+            "max-queue",
+            "0",
+            "per-device queue bound; requests beyond it get the overloaded backpressure response (0 = unbounded)",
+        )
+        .opt(
+            "degrade",
+            "0",
+            "queue-pressure threshold for policy=auto degradation to a faster in-budget profile point (0 = disabled)",
         )
         .opt(
             "profiles",
@@ -173,33 +178,6 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Some(Arc::new(store))
         }
     };
-    // `--gather-ms` survives as a deprecated alias: the continuous
-    // scheduler has no lockstep gather window, so its value maps onto the
-    // fresh-cohort admission window. Both flags default to empty so an
-    // *explicit* `--admit-ms` (including `--admit-ms 0`) always wins over
-    // the alias.
-    let admit_ms = match (p.get("admit-ms"), p.get("gather-ms")) {
-        ("", "") => 0,
-        (explicit, "") => explicit
-            .parse()
-            .map_err(|_| anyhow!("--admit-ms: expected integer, got '{explicit}'"))?,
-        (explicit, _legacy) if !explicit.is_empty() => {
-            eprintln!("warning: --gather-ms is deprecated and ignored because --admit-ms is set");
-            explicit
-                .parse()
-                .map_err(|_| anyhow!("--admit-ms: expected integer, got '{explicit}'"))?
-        }
-        (_, legacy) => {
-            let legacy: u64 = legacy
-                .parse()
-                .map_err(|_| anyhow!("--gather-ms: expected integer, got '{legacy}'"))?;
-            eprintln!(
-                "warning: --gather-ms is deprecated; treating it as --admit-ms {legacy} \
-                 (requests now also join in-flight batches at step boundaries)"
-            );
-            legacy
-        }
-    };
     let registry = Arc::new(EngineRegistry::load_pool(pool, &manifest, &pairs)?);
     let server = Server::start(
         registry,
@@ -208,8 +186,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             workers: p.get_usize("workers").map_err(|e| anyhow!(e))?,
             devices,
             max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?,
-            admit_window_ms: admit_ms,
+            admit_window_ms: p.get_u64("admit-ms").map_err(|e| anyhow!(e))?,
             profiles,
+            max_queue: p.get_usize("max-queue").map_err(|e| anyhow!(e))?,
+            degrade_threshold: p.get_usize("degrade").map_err(|e| anyhow!(e))?,
             ..ServerConfig::default()
         },
     )?;

@@ -53,11 +53,18 @@
 //! Protocol ops:
 //! * `{"op":"ping"}` → `{"status":"ok","pong":true}`
 //! * `{"op":"generate","model":..,"bucket":..,"policy":..,"prompt":..,
-//!    "seed":..,"steps"?:..,"cfg_scale"?:..}` → run stats (including the
+//!    "seed":..,"steps"?:..,"cfg_scale"?:..,"deadline_ms"?:..}` → run
+//!    stats (including the
 //!    `h2d_bytes`/`h2d_calls`/`d2h_bytes`/`d2h_calls` transfer meters,
 //!    the `batch_size` the request was served at, the concrete
 //!    `policy_spec` that was executed, and a `latent_l2` checksum of the
-//!    final latent for wire-level equivalence checks)
+//!    final latent for wire-level equivalence checks). `deadline_ms`
+//!    (optional, positive integer) is a completion deadline measured
+//!    from arrival; a request that cannot finish in time is answered
+//!    `{"status":"error", "deadline_exceeded":true, ...}` instead of
+//!    occupying a lane (§Overload control). At capacity the request is
+//!    refused with `{"status":"error", "overloaded":true,
+//!    "retry_after_ms":.., "queue_depth":..}` without being queued.
 //! * `{"op":"stats"}` → server-level counters + latency percentiles
 //! * `{"op":"shutdown"}` → stops the server
 //!
@@ -109,8 +116,49 @@
 //! Every `generate` response echoes `batch_size`: the largest cohort the
 //! request ever shared a device pass with. [`ServerConfig::admit_window_ms`]
 //! (default 0) optionally lets a *fresh* cohort linger for batchmates
-//! before its first step; the legacy `--gather-ms` flag maps onto it
-//! with a deprecation warning.
+//! before its first step.
+//!
+//! # Overload control
+//!
+//! Three mechanisms keep the server answering in bounded time instead of
+//! queueing without limit (the scheduler module docs describe the
+//! enforcement points):
+//!
+//! * **Bounded admission** ([`ServerConfig::max_queue`], CLI
+//!   `--max-queue`; 0 = unbounded): a `generate` whose routed device
+//!   queue *and* the globally shortest queue are both at the bound is
+//!   answered `{"status":"error", "overloaded":true,
+//!   "retry_after_ms":.., "queue_depth":..}` immediately — never queued,
+//!   never blocking the connection. `retry_after_ms` estimates one drain
+//!   of the shortest queue from the observed mean latency. Rejects count
+//!   in the `stats` op's `rejects` (deliberately *not* in
+//!   `requests`/`errors`: the job was never admitted);
+//!   `queue_depth`/`queue_depth_peak` expose current and high-water
+//!   depths (per-device `queue_depth` under `per_device`). [`Client`]
+//!   retries overloaded responses transparently with capped exponential
+//!   backoff + jitter honoring the hint ([`Client::call_retrying`],
+//!   [`Backoff`]; [`Backoff::none`] opts out).
+//! * **Deadlines** (wire `deadline_ms`, a positive integer of
+//!   milliseconds from arrival): checked at admission and at every
+//!   cohort step boundary — both for queued jobs and for in-flight
+//!   lanes, which retire early ([`crate::engine::Session::abandon`])
+//!   rather than spending further device passes on a result nobody is
+//!   waiting for. Expired requests are answered `{"status":"error",
+//!   "deadline_exceeded":true}` and counted in `deadline_misses` (and
+//!   `errors`).
+//! * **Quality-for-latency degradation**
+//!   ([`ServerConfig::degrade_threshold`], CLI `--degrade`; 0 =
+//!   disabled): when every device queue holds ≥ threshold jobs, a
+//!   `policy=auto` request resolves to the matched profile's fastest
+//!   frontier point still within its **own min-PSNR budget**
+//!   ([`crate::autotune::degrade_select`]) instead of the tuned spec —
+//!   the Foresight quality/latency dial used as an overload valve, never
+//!   below the tuned quality contract. Note stores written by `foresight
+//!   autotune` already persist the fastest in-budget point as the spec,
+//!   so a real swap needs a store with quality headroom (a stricter
+//!   serve-time budget or hand-tuned spec). Swapped responses echo
+//!   `degraded:true` + `degraded_from`; `stats` counts `degrade_swaps`
+//!   and `degrade_headroom_s` (profiled wall-clock recovered).
 //!
 //! `generate` payloads are validated before a sampler is built: `steps`
 //! must be a positive integer no larger than the preset's training
@@ -236,6 +284,10 @@ impl EngineRegistry {
 struct Job {
     payload: Json,
     enqueued: Instant,
+    /// Absolute completion deadline (wire `deadline_ms`, measured from
+    /// arrival). Enforced by the scheduler at admission and at every step
+    /// boundary; `None` = no deadline.
+    deadline: Option<Instant>,
     reply: mpsc::Sender<Json>,
     /// Present when the request sent `policy:"auto"` (the payload's policy
     /// field has already been rewritten to `auto.spec`).
@@ -255,6 +307,12 @@ struct AutoInfo {
     matched: &'static str,
     /// True when no profile matched and [`DEFAULT_POLICY`] was served.
     fallback: bool,
+    /// True when queue pressure degraded the resolution to a faster
+    /// in-budget frontier point (module docs §Overload control).
+    degraded: bool,
+    /// The spec the profile would have served without pressure (set only
+    /// when `degraded`).
+    degraded_from: Option<String>,
 }
 
 /// Resolve `policy:"auto"` against the loaded profile store, rewriting the
@@ -292,12 +350,50 @@ fn resolve_auto(payload: &mut Json, ctx: &ServeCtx) -> Option<AutoInfo> {
         // dispatch error counted as a successful resolution — serve the
         // default and count the fallback instead.
         build_policy(&m.profile().spec, info, steps).ok()?;
+        let mut spec = m.profile().spec.clone();
+        let mut degraded = false;
+        let mut degraded_from = None;
+        // Load-adaptive degradation (module docs §Overload control): under
+        // queue pressure, serve the profile's fastest frontier point that
+        // still meets its own min-PSNR budget. The *minimum* queue depth
+        // is the pressure signal — with job steals live, one empty queue
+        // means the next arrival need not wait. A swap only happens when
+        // the tier differs from the tuned spec and parses in this build;
+        // the recovered headroom is the frontier's measured wall delta.
+        if ctx.degrade_threshold > 0
+            && ctx
+                .router
+                .queue_depths()
+                .iter()
+                .min()
+                .is_some_and(|&d| d >= ctx.degrade_threshold)
+        {
+            if let Some(tier) = crate::autotune::degrade_select(m.profile()) {
+                if tier.spec != spec && build_policy(&tier.spec, info, steps).is_ok() {
+                    let normal_wall = m
+                        .profile()
+                        .frontier
+                        .iter()
+                        .find(|p| p.spec == spec)
+                        .map_or(tier.wall_s, |p| p.wall_s);
+                    let headroom_us = ((normal_wall - tier.wall_s).max(0.0) * 1e6) as u64;
+                    ctx.telemetry.degrade_swaps.fetch_add(1, Ordering::Relaxed);
+                    ctx.telemetry
+                        .degrade_headroom_us
+                        .fetch_add(headroom_us, Ordering::Relaxed);
+                    degraded_from = Some(std::mem::replace(&mut spec, tier.spec.clone()));
+                    degraded = true;
+                }
+            }
+        }
         Some(AutoInfo {
-            spec: m.profile().spec.clone(),
+            spec,
             store_version: store.version(),
             profile_version: m.profile().profile_version,
             matched: m.kind(),
             fallback: false,
+            degraded,
+            degraded_from,
         })
     });
     let auto = resolved.unwrap_or_else(|| AutoInfo {
@@ -306,6 +402,8 @@ fn resolve_auto(payload: &mut Json, ctx: &ServeCtx) -> Option<AutoInfo> {
         profile_version: 0,
         matched: "default",
         fallback: true,
+        degraded: false,
+        degraded_from: None,
     });
     if auto.fallback {
         ctx.telemetry.auto_fallbacks.fetch_add(1, Ordering::Relaxed);
@@ -371,6 +469,23 @@ struct Telemetry {
     /// Sessions migrated between devices by work stealing (total; each is
     /// also credited to the *target* device's [`DeviceTelemetry`]).
     steals: AtomicU64,
+    /// `generate` jobs refused at admission because every candidate queue
+    /// sat at `--max-queue` (the `overloaded` wire response). Rejected
+    /// jobs are **not** counted in `requests`/`errors` — they were never
+    /// admitted.
+    rejects: AtomicU64,
+    /// Admitted jobs answered with the deadline-exceeded error (expired
+    /// while queued or in flight). Each also counts in `errors`.
+    deadline_misses: AtomicU64,
+    /// `policy=auto` resolutions swapped to a faster in-budget frontier
+    /// point under queue pressure (module docs §Overload control).
+    degrade_swaps: AtomicU64,
+    /// Cumulative profiled wall-clock recovered by those swaps, in µs
+    /// (the frontier's measured per-request delta, not a live wall
+    /// measurement).
+    degrade_headroom_us: AtomicU64,
+    /// Deepest any device queue has ever been at enqueue time.
+    queue_depth_peak: AtomicU64,
     /// One entry per device ordinal (module docs §Per-device stats).
     per_device: Vec<DeviceTelemetry>,
     latencies_s: Mutex<Reservoir>,
@@ -412,6 +527,11 @@ impl Telemetry {
             auto_resolved: AtomicU64::new(0),
             auto_fallbacks: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            rejects: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+            degrade_swaps: AtomicU64::new(0),
+            degrade_headroom_us: AtomicU64::new(0),
+            queue_depth_peak: AtomicU64::new(0),
             per_device: (0..devices.max(1))
                 .map(|_| DeviceTelemetry {
                     lanes_active: AtomicU64::new(0),
@@ -437,6 +557,9 @@ struct ServeCtx {
     profiles: Option<Arc<ProfileStore>>,
     /// Scheduler shards (`devices > 1` adds per-device stats fields).
     devices: usize,
+    /// Queue-pressure threshold for auto degradation
+    /// ([`ServerConfig::degrade_threshold`]); 0 = disabled.
+    degrade_threshold: usize,
 }
 
 /// The running server; dropping it (or calling [`Server::shutdown`]) stops
@@ -470,8 +593,8 @@ pub struct ServerConfig {
     /// in milliseconds (module docs §Continuous batching). 0 (default):
     /// start stepping immediately — late arrivals join at step boundaries
     /// anyway, so unlike the retired gather window this costs a lone
-    /// request nothing. Replaces `gather_window_ms`; the CLI keeps
-    /// `--gather-ms` as a deprecated alias.
+    /// request nothing. (The retired `--gather-ms` alias is gone; the CLI
+    /// flag is `--admit-ms`.)
     pub admit_window_ms: u64,
     /// Latency/queue telemetry reservoir capacity: exact percentiles below
     /// this many samples, uniform reservoir sampling above.
@@ -480,6 +603,17 @@ pub struct ServerConfig {
     /// §`policy=auto` resolution). `None`: every `auto` request falls back
     /// to [`DEFAULT_POLICY`] and is counted in `auto_fallbacks`.
     pub profiles: Option<Arc<ProfileStore>>,
+    /// Per-device queue bound (CLI `--max-queue`). A `generate` arriving
+    /// when both its routed queue and the globally shortest queue sit at
+    /// this bound is refused with the `overloaded` wire response instead
+    /// of queued (module docs §Overload control). 0 (default): unbounded.
+    pub max_queue: usize,
+    /// Queue-pressure threshold for load-adaptive `policy=auto`
+    /// degradation (CLI `--degrade`): when **every** device queue holds at
+    /// least this many jobs, auto requests resolve to the matched
+    /// profile's fastest frontier point still within its min-PSNR budget
+    /// instead of the tuned spec. 0 (default): disabled.
+    pub degrade_threshold: usize,
 }
 
 impl Default for ServerConfig {
@@ -492,6 +626,8 @@ impl Default for ServerConfig {
             admit_window_ms: 0,
             telemetry_reservoir: 4096,
             profiles: None,
+            max_queue: 0,
+            degrade_threshold: 0,
         }
     }
 }
@@ -534,7 +670,7 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let max_batch = cfg.max_batch.max(1);
         let admit_window = Duration::from_millis(cfg.admit_window_ms);
-        let router = Arc::new(scheduler::Router::new(devices, max_batch));
+        let router = Arc::new(scheduler::Router::new(devices, max_batch, cfg.max_queue));
         let telemetry = Arc::new(Telemetry::new(cfg.telemetry_reservoir, devices));
         let mut handles = Vec::new();
 
@@ -574,6 +710,7 @@ impl Server {
                 registry: Arc::clone(&registry),
                 profiles: cfg.profiles.clone(),
                 devices,
+                degrade_threshold: cfg.degrade_threshold,
             });
             handles.push(
                 std::thread::Builder::new()
@@ -666,6 +803,63 @@ fn err_json(msg: &str) -> Json {
     Json::obj(vec![("status", Json::str("error")), ("error", Json::str(msg))])
 }
 
+/// The deadline-exceeded error (module docs §Overload control): a normal
+/// `{"status":"error"}` plus the machine-readable `deadline_exceeded`
+/// marker so clients can distinguish it from validation or engine errors.
+pub(crate) fn deadline_err_json() -> Json {
+    Json::obj(vec![
+        ("status", Json::str("error")),
+        ("error", Json::str("deadline exceeded before completion")),
+        ("deadline_exceeded", Json::Bool(true)),
+    ])
+}
+
+/// The `overloaded` backpressure response (module docs §Overload
+/// control): `retry_after_ms` is a drain-time hint, `queue_depth` the
+/// shortest queue the client is competing for.
+fn overloaded_json(retry_after_ms: u64, depth: usize) -> Json {
+    Json::obj(vec![
+        ("status", Json::str("error")),
+        ("error", Json::str("overloaded: every device queue is at capacity")),
+        ("overloaded", Json::Bool(true)),
+        ("retry_after_ms", Json::num(retry_after_ms as f64)),
+        ("queue_depth", Json::num(depth as f64)),
+    ])
+}
+
+/// Retry-after hint for an `overloaded` response: roughly one drain of
+/// the shortest queue — mean observed request latency × depth ÷ devices —
+/// clamped to [25 ms, 5 s]. Before any latency sample exists, 50 ms per
+/// queued job.
+fn retry_after_hint(telemetry: &Telemetry, depth: usize, devices: usize) -> u64 {
+    let lat = telemetry.latencies_s.lock().unwrap().samples().to_vec();
+    let est_ms = if lat.is_empty() {
+        50.0 * depth.max(1) as f64
+    } else {
+        stats::mean(&lat) * 1000.0 * depth.max(1) as f64 / devices.max(1) as f64
+    };
+    (est_ms as u64).clamp(25, 5000)
+}
+
+/// Wire validation for `deadline_ms`: a positive integer number of
+/// milliseconds, measured from arrival (the same shape rules as `steps` —
+/// fractional or non-finite values are rejected, never truncated).
+/// Absent = no deadline.
+fn parse_deadline_ms(payload: &Json) -> Result<Option<Duration>> {
+    match payload.get("deadline_ms") {
+        None => Ok(None),
+        Some(v) => {
+            let d = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("deadline_ms must be a positive integer"))?;
+            if !d.is_finite() || d < 1.0 || d.fract() != 0.0 {
+                return Err(anyhow!("deadline_ms must be a positive integer, got {d}"));
+            }
+            Ok(Some(Duration::from_millis(d as u64)))
+        }
+    }
+}
+
 fn handle_conn(mut stream: TcpStream, ctx: Arc<ServeCtx>) -> Result<()> {
     use std::io::Read;
     // Poll with a read timeout so idle connections notice server shutdown
@@ -731,6 +925,7 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                 let qs = telemetry.queue_s.lock().unwrap().samples().to_vec();
                 let occ = telemetry.occupancy.lock().unwrap().samples().to_vec();
                 let occ_max = telemetry.occupancy_peak.load(Ordering::Relaxed) as f64;
+                let depths = ctx.router.queue_depths();
                 let mut fields = vec![
                     ("status", Json::str("ok")),
                     ("requests", Json::num(telemetry.requests.load(Ordering::Relaxed) as f64)),
@@ -769,6 +964,24 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                         "auto_fallbacks",
                         Json::num(telemetry.auto_fallbacks.load(Ordering::Relaxed) as f64),
                     ),
+                    ("rejects", Json::num(telemetry.rejects.load(Ordering::Relaxed) as f64)),
+                    (
+                        "deadline_misses",
+                        Json::num(telemetry.deadline_misses.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "degrade_swaps",
+                        Json::num(telemetry.degrade_swaps.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "degrade_headroom_s",
+                        Json::num(telemetry.degrade_headroom_us.load(Ordering::Relaxed) as f64 / 1e6),
+                    ),
+                    ("queue_depth", Json::num(depths.iter().sum::<usize>() as f64)),
+                    (
+                        "queue_depth_peak",
+                        Json::num(telemetry.queue_depth_peak.load(Ordering::Relaxed) as f64),
+                    ),
                     ("latency_p50_s", Json::num(stats::percentile(&lat, 50.0))),
                     ("latency_p95_s", Json::num(stats::percentile(&lat, 95.0))),
                     ("latency_p99_s", Json::num(stats::percentile(&lat, 99.0))),
@@ -804,6 +1017,7 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                                 ("joins", Json::num(t.joins.load(Ordering::Relaxed) as f64)),
                                 ("retires", Json::num(t.retires.load(Ordering::Relaxed) as f64)),
                                 ("steals", Json::num(t.steals.load(Ordering::Relaxed) as f64)),
+                                ("queue_depth", Json::num(depths[d] as f64)),
                                 ("h2d_bytes", Json::num(x.h2d_bytes as f64)),
                                 ("h2d_calls", Json::num(x.h2d_calls as f64)),
                                 ("d2h_bytes", Json::num(x.d2h_bytes as f64)),
@@ -826,22 +1040,53 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                 return Ok(false);
             }
             "generate" => {
+                // `deadline_ms` is validated before enqueue (the absolute
+                // deadline rides on the Job, not the payload); a malformed
+                // value is a counted per-request error like any other
+                // wire-validation failure.
+                let deadline_in = match parse_deadline_ms(&payload) {
+                    Ok(d) => d,
+                    Err(e) => {
+                        telemetry.requests.fetch_add(1, Ordering::Relaxed);
+                        telemetry.errors.fetch_add(1, Ordering::Relaxed);
+                        writeln!(writer, "{}", err_json(&format!("{e:#}")))?;
+                        return Ok(true);
+                    }
+                };
                 // Resolve `policy:"auto"` to a concrete spec before the
                 // job is queued, so the batch key (derived from the raw
                 // payload) groups identically-resolved requests.
                 let auto = resolve_auto(&mut payload, ctx);
                 let (tx, rx) = mpsc::channel();
+                let enqueued = Instant::now();
                 // Routing front: the router picks the device queue under
                 // its own lock and checks `stop` there — workers only
                 // exit after observing `stop` (set under the same lock),
                 // so a routed job is guaranteed a live worker;
                 // enqueueing after shutdown would otherwise block
                 // rx.recv() forever and deadlock Server::shutdown's join.
-                let job = Job { payload, enqueued: Instant::now(), reply: tx, auto };
-                if ctx.router.enqueue(job, &ctx.stop) {
-                    rx.recv().unwrap_or_else(|_| err_json("worker dropped"))
-                } else {
-                    err_json("server is shutting down")
+                let job = Job {
+                    payload,
+                    enqueued,
+                    deadline: deadline_in.map(|d| enqueued + d),
+                    reply: tx,
+                    auto,
+                };
+                match ctx.router.enqueue(job, &ctx.stop) {
+                    scheduler::EnqueueOutcome::Queued { depth } => {
+                        telemetry
+                            .queue_depth_peak
+                            .fetch_max(depth as u64, Ordering::Relaxed);
+                        rx.recv().unwrap_or_else(|_| err_json("worker dropped"))
+                    }
+                    scheduler::EnqueueOutcome::Overloaded { depth } => {
+                        // Bounded admission (module docs §Overload
+                        // control): refused *before* counting as an
+                        // admitted request — `rejects` is its own ledger.
+                        telemetry.rejects.fetch_add(1, Ordering::Relaxed);
+                        overloaded_json(retry_after_hint(telemetry, depth, ctx.devices), depth)
+                    }
+                    scheduler::EnqueueOutcome::Stopping => err_json("server is shutting down"),
                 }
             }
             other => err_json(&format!("unknown op '{other}'")),
@@ -981,9 +1226,76 @@ fn generate_response(
             ("profile_store_version", Json::num(a.store_version as f64)),
             ("profile_match", Json::str(a.matched)),
             ("profile_fallback", Json::Bool(a.fallback)),
+            ("degraded", Json::Bool(a.degraded)),
         ]);
+        if let Some(from) = &a.degraded_from {
+            fields.push(("degraded_from", Json::str(from)));
+        }
     }
     Json::obj(fields)
+}
+
+/// True when a response is the server's `overloaded` backpressure reply
+/// (module docs §Overload control).
+pub fn is_overloaded(resp: &Json) -> bool {
+    resp.get("overloaded").and_then(|v| v.as_bool()).unwrap_or(false)
+}
+
+/// Client-side retry policy for `overloaded` responses
+/// ([`Client::call_retrying`]): capped exponential backoff with jitter,
+/// honoring the server's `retry_after_ms` hint as the floor of each
+/// delay. [`Backoff::none`] opts out entirely (one attempt, the
+/// overloaded response returned as-is).
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    /// Total attempts (the initial call counts as one); 0 behaves as 1.
+    pub attempts: u32,
+    /// First retry delay; doubles per retry.
+    pub base: Duration,
+    /// Upper bound on any single delay (applied after the hint floor, so
+    /// a hostile or buggy hint cannot stall a client for minutes).
+    pub cap: Duration,
+    /// Randomize each delay uniformly in [delay/2, delay] — decorrelates
+    /// clients that got the same hint. Disable for deterministic tests.
+    pub jitter: bool,
+    /// Seed for the jitter PRNG (deterministic per client).
+    pub seed: u64,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self {
+            attempts: 5,
+            base: Duration::from_millis(25),
+            cap: Duration::from_secs(2),
+            jitter: true,
+            seed: 0,
+        }
+    }
+}
+
+impl Backoff {
+    /// Opt out of retrying: a single attempt, overloaded responses
+    /// returned to the caller untouched.
+    pub fn none() -> Self {
+        Self { attempts: 1, ..Self::default() }
+    }
+
+    /// Delay before 0-based retry `retry`: `max(hint, base · 2^retry)`
+    /// capped at `cap`, then jittered into [delay/2, delay].
+    fn delay(&self, retry: u32, hint_ms: Option<u64>, rng: &mut crate::util::prng::Rng) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32.checked_shl(retry).unwrap_or(u32::MAX));
+        let hinted = hint_ms.map_or(exp, |h| exp.max(Duration::from_millis(h)));
+        let capped = hinted.min(self.cap);
+        if !self.jitter || capped.is_zero() {
+            return capped;
+        }
+        let half = capped / 2;
+        let span_ms = (capped - half).as_millis() as usize;
+        half + Duration::from_millis(rng.next_below(span_ms + 1) as u64)
+    }
 }
 
 /// Blocking JSON-lines client for the server (used by examples and tests).
@@ -1039,6 +1351,31 @@ impl Client {
             return Err(anyhow!("server closed connection"));
         }
         json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    /// [`Client::call`], retrying `overloaded` responses per `backoff`
+    /// (module docs §Overload control). Any non-overloaded response — ok,
+    /// deadline-exceeded, validation error — returns immediately; once
+    /// the attempt budget is spent the last overloaded response is
+    /// returned as a value (not an `Err`) so callers can inspect
+    /// `retry_after_ms`/`queue_depth`. Transport errors still `Err`.
+    pub fn call_retrying(&mut self, req: &Json, backoff: &Backoff) -> Result<Json> {
+        let attempts = backoff.attempts.max(1);
+        let mut rng = crate::util::prng::Rng::from_seed_and_label(backoff.seed, "client-backoff");
+        let mut last = self.call(req)?;
+        for retry in 0..attempts.saturating_sub(1) {
+            if !is_overloaded(&last) {
+                return Ok(last);
+            }
+            let hint = last
+                .get("retry_after_ms")
+                .and_then(|v| v.as_f64())
+                .filter(|h| h.is_finite() && *h >= 0.0)
+                .map(|h| h as u64);
+            std::thread::sleep(backoff.delay(retry, hint, &mut rng));
+            last = self.call(req)?;
+        }
+        Ok(last)
     }
 
     pub fn ping(&mut self) -> Result<bool> {
@@ -1162,6 +1499,118 @@ mod tests {
         let p = parse_generate(&gen_payload(vec![])).unwrap();
         assert_eq!(p.model, DEFAULT_MODEL);
         assert_eq!(p.policy_spec, DEFAULT_POLICY);
+    }
+
+    #[test]
+    fn parse_deadline_ms_validates_shape() {
+        for bad in [0.0, -5.0, 1.5, f64::NAN, f64::INFINITY] {
+            let err = parse_deadline_ms(&gen_payload(vec![("deadline_ms", Json::num(bad))]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("deadline_ms"), "{bad}: {err}");
+        }
+        let err = parse_deadline_ms(&gen_payload(vec![("deadline_ms", Json::str("soon"))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("deadline_ms"), "{err}");
+        assert_eq!(
+            parse_deadline_ms(&gen_payload(vec![("deadline_ms", Json::num(2000.0))])).unwrap(),
+            Some(Duration::from_millis(2000))
+        );
+        assert_eq!(parse_deadline_ms(&gen_payload(vec![])).unwrap(), None);
+    }
+
+    #[test]
+    fn overloaded_response_shape_and_detection() {
+        let r = overloaded_json(120, 7);
+        assert_eq!(r.get("status").and_then(|v| v.as_str()), Some("error"));
+        assert!(is_overloaded(&r));
+        assert_eq!(r.get("retry_after_ms").and_then(|v| v.as_f64()), Some(120.0));
+        assert_eq!(r.get("queue_depth").and_then(|v| v.as_f64()), Some(7.0));
+        // ordinary errors and ok responses are not overloaded
+        assert!(!is_overloaded(&err_json("boom")));
+        assert!(!is_overloaded(&deadline_err_json()));
+        assert!(deadline_err_json()
+            .get("deadline_exceeded")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false));
+    }
+
+    #[test]
+    fn backoff_delay_honors_hint_cap_and_jitter_bounds() {
+        let mut rng = crate::util::prng::Rng::from_seed_and_label(1, "t");
+        let b = Backoff {
+            attempts: 5,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(100),
+            jitter: false,
+            seed: 0,
+        };
+        // pure exponential without a hint
+        assert_eq!(b.delay(0, None, &mut rng), Duration::from_millis(10));
+        assert_eq!(b.delay(2, None, &mut rng), Duration::from_millis(40));
+        // the hint floors the delay...
+        assert_eq!(b.delay(0, Some(60), &mut rng), Duration::from_millis(60));
+        // ...but the cap still bounds a hostile hint and deep retries
+        assert_eq!(b.delay(0, Some(60_000), &mut rng), Duration::from_millis(100));
+        assert_eq!(b.delay(30, None, &mut rng), Duration::from_millis(100));
+        // jitter stays within [delay/2, delay]
+        let j = Backoff { jitter: true, ..b.clone() };
+        for retry in 0..4 {
+            let d = j.delay(retry, Some(80), &mut rng);
+            assert!(
+                d >= Duration::from_millis(40) && d <= Duration::from_millis(100),
+                "retry {retry}: {d:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn call_retrying_backs_off_against_saturated_listener_and_opts_out() {
+        // A permanently saturated server: every generate is answered with
+        // the overloaded backpressure response. The retrying client must
+        // make exactly `attempts` calls and then surface the overloaded
+        // response as a value; Backoff::none() must make exactly one.
+        use std::net::TcpListener;
+        use std::sync::atomic::AtomicUsize;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let served = Arc::new(AtomicUsize::new(0));
+        let served_srv = Arc::clone(&served);
+        let srv = std::thread::spawn(move || {
+            for conn in listener.incoming().take(2) {
+                let stream = conn.unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut line = String::new();
+                while {
+                    line.clear();
+                    reader.read_line(&mut line).map(|n| n > 0).unwrap_or(false)
+                } {
+                    served_srv.fetch_add(1, Ordering::SeqCst);
+                    writeln!(writer, "{}", overloaded_json(1, 3)).unwrap();
+                }
+            }
+        });
+        let req = gen_payload(vec![]);
+        let backoff = Backoff {
+            attempts: 3,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(5),
+            jitter: false,
+            seed: 0,
+        };
+        let mut c = Client::connect(&addr).unwrap();
+        let resp = c.call_retrying(&req, &backoff).unwrap();
+        assert!(is_overloaded(&resp), "{resp}");
+        drop(c);
+        assert_eq!(served.load(Ordering::SeqCst), 3, "3 attempts expected");
+        let mut c = Client::connect(&addr).unwrap();
+        let resp = c.call_retrying(&req, &Backoff::none()).unwrap();
+        assert!(is_overloaded(&resp), "{resp}");
+        drop(c);
+        assert_eq!(served.load(Ordering::SeqCst), 4, "opt-out must not retry");
+        let _ = srv.join();
     }
 
     #[test]

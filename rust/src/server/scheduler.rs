@@ -87,6 +87,26 @@
 //! every job enqueued before the stop flag was raised is answered — and a
 //! worker mid-cohort finishes stepping its admitted lanes (no new
 //! admissions) so in-flight requests complete rather than erroring.
+//! Expired-deadline jobs met during the drain are answered with the
+//! deadline error like any other admission.
+//!
+//! # Overload control
+//!
+//! Queues are bounded (`--max-queue`, 0 = unbounded): [`Router::enqueue`]
+//! refuses a job — [`EnqueueOutcome::Overloaded`], turned into the wire
+//! `overloaded` backpressure response by the connection handler — only
+//! when the routed queue *and* the globally shortest queue are both at
+//! the bound, so capacity anywhere in the fleet is used before a reject.
+//!
+//! Per-request deadlines (`deadline_ms`) are enforced at three points,
+//! all without consuming a device pass: at admission ([`admit`] answers
+//! an already-expired job before starting its session), at every step
+//! boundary for the device's own queue ([`sweep_expired_queue`]), and at
+//! every step boundary for in-flight lanes ([`sweep_dead_lanes`] — an
+//! expired session retires early via [`Session::abandon`], freeing its
+//! lane for the next intake in the same boundary). Expirations count in
+//! `deadline_misses` (and `errors`); rejected-at-capacity jobs count in
+//! `rejects` only — they were never admitted.
 
 use anyhow::{anyhow, Result};
 use std::cmp::Reverse;
@@ -99,8 +119,8 @@ use crate::engine::{session, Session};
 use crate::policy::build_policy;
 
 use super::{
-    cohort_key, err_json, generate_response, parse_generate, EngineRegistry, GenerateParams, Job,
-    Telemetry,
+    cohort_key, deadline_err_json, err_json, generate_response, parse_generate, EngineRegistry,
+    GenerateParams, Job, Telemetry,
 };
 
 /// Scheduler knobs (from `ServerConfig`).
@@ -154,22 +174,38 @@ struct RouterState {
     devs: Vec<DevState>,
 }
 
+/// What [`Router::enqueue`] did with a job. `Overloaded` and `Stopping`
+/// mean the job was **not** enqueued — the caller still owns its reply
+/// channel and must answer the client itself.
+pub(super) enum EnqueueOutcome {
+    /// Queued; `depth` is the chosen device queue's length after the push.
+    Queued { depth: usize },
+    /// Every candidate queue sits at `--max-queue`; `depth` is the
+    /// shortest queue's length (what the client is behind if it retries).
+    Overloaded { depth: usize },
+    /// The server is stopping.
+    Stopping,
+}
+
 /// The routing front: per-device FIFO queues + device state behind one
 /// mutex and one shared condvar (module docs §Sharding — the single
 /// condvar makes `notify_all` a wake-every-device broadcast).
 pub(super) struct Router {
     devices: usize,
     max_batch: usize,
+    /// Per-device queue bound (`--max-queue`); 0 = unbounded.
+    max_queue: usize,
     state: Mutex<RouterState>,
     cv: Condvar,
 }
 
 impl Router {
-    pub(super) fn new(devices: usize, max_batch: usize) -> Self {
+    pub(super) fn new(devices: usize, max_batch: usize, max_queue: usize) -> Self {
         let devices = devices.max(1);
         Router {
             devices,
             max_batch: max_batch.max(1),
+            max_queue,
             state: Mutex::new(RouterState {
                 queues: (0..devices).map(|_| VecDeque::new()).collect(),
                 devs: (0..devices).map(|_| DevState::default()).collect(),
@@ -182,25 +218,45 @@ impl Router {
         self.devices
     }
 
-    /// Route and enqueue one job (module docs §Sharding). Returns false —
-    /// without enqueueing — when the server is stopping: `stop` is
-    /// checked under the router lock, and workers only exit after
-    /// observing `stop` under the same lock *with their queue empty*, so
-    /// a job enqueued here is guaranteed to be answered.
-    pub(super) fn enqueue(&self, job: Job, stop: &AtomicBool) -> bool {
+    /// Current per-device queue depths (the `stats` op's `queue_depth`
+    /// and the degradation pressure signal). The pressure read uses the
+    /// **minimum**: with job steals live, a single empty queue means the
+    /// next arrival need not wait, whatever the others hold.
+    pub(super) fn queue_depths(&self) -> Vec<usize> {
+        let st = self.state.lock().unwrap();
+        st.queues.iter().map(|q| q.len()).collect()
+    }
+
+    /// Route and enqueue one job (module docs §Sharding and §Overload).
+    /// Admission is bounded: when the routed device's queue is at
+    /// `max_queue`, the job falls back to the globally shortest queue
+    /// (steals make any queue a valid home), and only if *that* is full
+    /// too is the job refused with [`EnqueueOutcome::Overloaded`].
+    /// `stop` is checked under the router lock, and workers only exit
+    /// after observing `stop` under the same lock *with their queue
+    /// empty*, so a `Queued` job is guaranteed to be answered.
+    pub(super) fn enqueue(&self, job: Job, stop: &AtomicBool) -> EnqueueOutcome {
         let mut st = self.state.lock().unwrap();
         if stop.load(Ordering::SeqCst) {
-            return false;
+            return EnqueueOutcome::Stopping;
         }
         let key = cohort_key(&job.payload);
         let lens: Vec<usize> = st.queues.iter().map(|q| q.len()).collect();
-        let d = route(&st.devs, &lens, key.as_ref(), self.max_batch);
+        let mut d = route(&st.devs, &lens, key.as_ref(), self.max_batch);
+        if self.max_queue > 0 && lens[d] >= self.max_queue {
+            let shortest = (0..lens.len()).min_by_key(|&i| (lens[i], i)).unwrap_or(d);
+            if lens[shortest] >= self.max_queue {
+                return EnqueueOutcome::Overloaded { depth: lens[shortest] };
+            }
+            d = shortest;
+        }
         st.queues[d].push_back(job);
+        let depth = st.queues[d].len();
         // notify_all, not notify_one: a gathering worker parked on the
         // shared condvar must also see new arrivals inside its window,
         // and idle workers on other devices must re-check for steals.
         self.cv.notify_all();
-        true
+        EnqueueOutcome::Queued { depth }
     }
 
     /// Set the stop flag under the router lock and wake every waiting
@@ -290,8 +346,12 @@ pub(super) fn run_worker(ctx: &WorkerCtx) {
         // Drive the cohort: join at boundaries, retire eagerly.
         let mut stepped = false;
         while !lanes.is_empty() {
+            // Deadline/poison sweeps run before intake so freed lanes are
+            // immediately re-fillable in the same boundary.
+            sweep_dead_lanes(ctx, &mut lanes);
             if let Some(key) = key.as_ref() {
                 if !ctx.stop.load(Ordering::SeqCst) {
+                    sweep_expired_queue(ctx);
                     if lanes.len() < ctx.cfg.max_batch {
                         let room = ctx.cfg.max_batch - lanes.len();
                         let (jobs, migrated) = boundary_intake(ctx, key, room);
@@ -302,6 +362,12 @@ pub(super) fn run_worker(ctx: &WorkerCtx) {
                     }
                     maybe_give_lane(ctx, &mut lanes);
                 }
+            }
+            // The sweeps may have emptied the cohort (every lane expired,
+            // nothing admitted): `step_many_refs` rejects an empty slice,
+            // so fall back to acquiring fresh work instead.
+            if lanes.is_empty() {
+                break;
             }
             publish(ctx, lanes.len(), key.as_ref());
             let report = {
@@ -606,18 +672,94 @@ fn maybe_give_lane(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
             ctx.router.cv.notify_all();
         }
         Err(e) => {
-            // The session poisons itself on a failed transfer; answer the
-            // client and wake the thief so it can re-request.
-            ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
-            ctx.telemetry.lanes_active.fetch_sub(1, Ordering::Relaxed);
-            ctx.telemetry.per_device[me]
-                .lanes_active
-                .fetch_sub(1, Ordering::Relaxed);
-            let _ = lane.job.reply.send(err_json(&format!("{e:#}")));
-            let mut st = ctx.router.state.lock().unwrap();
-            st.devs[me].lanes = st.devs[me].lanes.saturating_sub(1);
-            ctx.router.cv.notify_all();
+            if lane.session.is_poisoned() {
+                // The transfer itself failed (`migrate_inner`): the
+                // session is unusable on either device — answer the
+                // client now (we are at a step boundary) and wake the
+                // thief so it can re-request elsewhere.
+                ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
+                ctx.telemetry.lanes_active.fetch_sub(1, Ordering::Relaxed);
+                ctx.telemetry.per_device[me]
+                    .lanes_active
+                    .fetch_sub(1, Ordering::Relaxed);
+                lane.session.abandon();
+                let _ = lane.job.reply.send(err_json(&format!("{e:#}")));
+                let mut st = ctx.router.state.lock().unwrap();
+                st.devs[me].lanes = st.devs[me].lanes.saturating_sub(1);
+                ctx.router.cv.notify_all();
+            } else {
+                // A precheck refusal (mismatched engine, sampler, …)
+                // leaves the session untouched and healthy: keep serving
+                // it locally rather than failing a correct request. The
+                // broadcast lets the parked thief re-evaluate other
+                // victims.
+                lanes.push(lane);
+                let _guard = ctx.router.state.lock().unwrap();
+                ctx.router.cv.notify_all();
+            }
         }
+    }
+}
+
+/// Step-boundary sweep of lanes that must stop consuming device passes:
+/// sessions past their request deadline (answered with the
+/// deadline-exceeded error, counted in `deadline_misses`) and sessions
+/// poisoned outside the step path (e.g. a failed migration transfer) that
+/// would otherwise error the whole cohort on the next step. Both retire
+/// their branch workers eagerly via [`Session::abandon`].
+fn sweep_dead_lanes(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
+    let now = Instant::now();
+    let mut i = 0;
+    while i < lanes.len() {
+        let expired = lanes[i].job.deadline.is_some_and(|d| d <= now);
+        if !expired && !lanes[i].session.is_poisoned() {
+            i += 1;
+            continue;
+        }
+        let lane = lanes.remove(i);
+        ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
+        ctx.telemetry.lanes_active.fetch_sub(1, Ordering::Relaxed);
+        ctx.telemetry.per_device[ctx.device]
+            .lanes_active
+            .fetch_sub(1, Ordering::Relaxed);
+        let resp = if expired {
+            ctx.telemetry.deadline_misses.fetch_add(1, Ordering::Relaxed);
+            deadline_err_json()
+        } else {
+            err_json("session poisoned (failed migration); request aborted")
+        };
+        lane.session.abandon();
+        let _ = lane.job.reply.send(resp);
+    }
+}
+
+/// Step-boundary sweep of this device's **queue**: jobs whose deadline
+/// passed while waiting are answered with the deadline-exceeded error
+/// right away instead of occupying a lane first. Removal preserves the
+/// FIFO order of the surviving jobs. The replies go out off-lock.
+fn sweep_expired_queue(ctx: &WorkerCtx) {
+    let mut expired = Vec::new();
+    {
+        let mut st = ctx.router.state.lock().unwrap();
+        let q = &mut st.queues[ctx.device];
+        if q.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < q.len() {
+            if q[i].deadline.is_some_and(|d| d <= now) {
+                expired.push(q.remove(i).expect("index in bounds"));
+            } else {
+                i += 1;
+            }
+        }
+    }
+    for job in expired {
+        ctx.telemetry.requests.fetch_add(1, Ordering::Relaxed);
+        ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
+        ctx.telemetry.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        let _ = job.reply.send(deadline_err_json());
     }
 }
 
@@ -631,6 +773,14 @@ fn maybe_give_lane(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
 /// is well under one denoising step.
 fn admit(ctx: &WorkerCtx, job: Job, lanes: &mut Vec<Lane>, midflight: bool) {
     ctx.telemetry.requests.fetch_add(1, Ordering::Relaxed);
+    if job.deadline.is_some_and(|d| d <= Instant::now()) {
+        // Expired while queued (or the client sent an already-hopeless
+        // deadline): answer without spending a session start on it.
+        ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
+        ctx.telemetry.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        let _ = job.reply.send(deadline_err_json());
+        return;
+    }
     let queue_s = job.enqueued.elapsed().as_secs_f64();
     match try_start(ctx, &job) {
         Ok((session, params)) => {

@@ -1,0 +1,251 @@
+//! Trace-driven open-loop load generation (the fig22 overload harness).
+//!
+//! Production traffic is bursty, diurnal and adversarial — a Poisson-ish
+//! steady drip (fig20/fig21) never exercises admission control. This
+//! module generates deterministic arrival traces with the shapes that
+//! break servers — sustained bursts, ramps past capacity, flash crowds —
+//! and replays them **open-loop**: every arrival fires at its scheduled
+//! time whether or not earlier requests have completed, so a slow server
+//! faces growing concurrency exactly as it would behind real clients,
+//! instead of the closed-loop self-throttling a simple request loop
+//! produces.
+//!
+//! Traces are pure data (`Vec<Arrival>`), generated from a seed via
+//! [`crate::util::prng::Rng`] — the same trace replays identically across
+//! runs and machines. Rates are shaped by a time-varying rate function
+//! sampled with exponential inter-arrival gaps (a piecewise approximation
+//! of a nonhomogeneous Poisson process; exact enough for a load harness).
+//! `class` tags each arrival with a caller-defined request class index
+//! (fig22 maps classes to resolution buckets for mixed-bucket traffic).
+
+use std::time::{Duration, Instant};
+
+use crate::util::prng::Rng;
+
+/// One scheduled request: fire at `at_s` seconds after trace start, using
+/// the caller's request template `class` (an index the generator fills
+/// uniformly; callers map it to buckets/models/policies).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrival {
+    pub at_s: f64,
+    pub class: usize,
+}
+
+/// Arrivals over `[0, duration_s)` following `rate(t)` requests/second,
+/// sampled with exponential gaps at the rate in force when each gap
+/// starts. Deterministic in `(seed, label)`.
+pub fn rate_trace(
+    seed: u64,
+    label: &str,
+    duration_s: f64,
+    classes: usize,
+    rate: impl Fn(f64) -> f64,
+) -> Vec<Arrival> {
+    let mut rng = Rng::from_seed_and_label(seed, label);
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        let r = rate(t).max(1e-9);
+        // u ∈ [0,1): clamp away from 0 so ln never produces inf.
+        let u = rng.next_f64().max(1e-12);
+        t += -u.ln() / r;
+        if !(t < duration_s) {
+            break;
+        }
+        out.push(Arrival { at_s: t, class: rng.next_below(classes.max(1)) });
+    }
+    out
+}
+
+/// Square-wave bursts: `calm_rps` for the first half of every `period_s`,
+/// `burst_rps` for the second half.
+pub fn bursty(
+    seed: u64,
+    duration_s: f64,
+    calm_rps: f64,
+    burst_rps: f64,
+    period_s: f64,
+    classes: usize,
+) -> Vec<Arrival> {
+    let period = period_s.max(1e-6);
+    rate_trace(seed, "loadgen-bursty", duration_s, classes, move |t| {
+        if (t % period) < period / 2.0 {
+            calm_rps
+        } else {
+            burst_rps
+        }
+    })
+}
+
+/// Linear ramp from `start_rps` to `end_rps` over the trace — the
+/// capacity-crossing shape (starts under capacity, ends past it).
+pub fn ramp(
+    seed: u64,
+    duration_s: f64,
+    start_rps: f64,
+    end_rps: f64,
+    classes: usize,
+) -> Vec<Arrival> {
+    let dur = duration_s.max(1e-6);
+    rate_trace(seed, "loadgen-ramp", duration_s, classes, move |t| {
+        start_rps + (end_rps - start_rps) * (t / dur).clamp(0.0, 1.0)
+    })
+}
+
+/// Calm baseline with one rectangular spike: `spike_rps` during
+/// `[spike_at_s, spike_at_s + spike_len_s)`, `calm_rps` elsewhere.
+pub fn flash_crowd(
+    seed: u64,
+    duration_s: f64,
+    calm_rps: f64,
+    spike_at_s: f64,
+    spike_len_s: f64,
+    spike_rps: f64,
+    classes: usize,
+) -> Vec<Arrival> {
+    rate_trace(seed, "loadgen-flash", duration_s, classes, move |t| {
+        if t >= spike_at_s && t < spike_at_s + spike_len_s {
+            spike_rps
+        } else {
+            calm_rps
+        }
+    })
+}
+
+/// Merge several traces into one, ordered by arrival time (ties broken by
+/// class then input order, so the result is deterministic).
+pub fn merge(traces: &[Vec<Arrival>]) -> Vec<Arrival> {
+    let mut all: Vec<Arrival> = traces.iter().flatten().cloned().collect();
+    all.sort_by(|a, b| {
+        a.at_s
+            .partial_cmp(&b.at_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.class.cmp(&b.class))
+    });
+    all
+}
+
+/// Replay a trace open-loop against `f`: arrival `i` fires on its own
+/// thread at `trace[i].at_s` (measured from the call), regardless of
+/// whether earlier requests have returned — queueing shows up at the
+/// server, not in the generator. Returns each arrival's result in trace
+/// order. One thread per arrival: fine at harness scale (tens to a few
+/// hundred arrivals); not a general-purpose client pool.
+pub fn replay<T, F>(trace: &[Arrival], f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &Arrival) -> T + Sync,
+{
+    let start = Instant::now();
+    let f = &f;
+    let mut results: Vec<Option<T>> = trace.iter().map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, a)| {
+                s.spawn(move || {
+                    let target = Duration::from_secs_f64(a.at_s.max(0.0));
+                    let elapsed = start.elapsed();
+                    if target > elapsed {
+                        std::thread::sleep(target - elapsed);
+                    }
+                    (i, f(i, a))
+                })
+            })
+            .collect();
+        for h in handles {
+            let (i, r) = h.join().expect("replay client panicked");
+            results[i] = Some(r);
+        }
+    });
+    results.into_iter().map(|r| r.expect("all slots filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_in_seed() {
+        let a = bursty(7, 10.0, 2.0, 20.0, 2.0, 3);
+        let b = bursty(7, 10.0, 2.0, 20.0, 2.0, 3);
+        let c = bursty(8, 10.0, 2.0, 20.0, 2.0, 3);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn arrivals_are_ordered_and_in_range() {
+        for trace in [
+            bursty(1, 8.0, 1.0, 30.0, 2.0, 2),
+            ramp(2, 8.0, 1.0, 40.0, 2),
+            flash_crowd(3, 8.0, 2.0, 3.0, 2.0, 50.0, 2),
+        ] {
+            let mut prev = 0.0;
+            for a in &trace {
+                assert!(a.at_s >= prev, "unordered: {} < {prev}", a.at_s);
+                assert!(a.at_s < 8.0, "past duration: {}", a.at_s);
+                assert!(a.class < 2);
+                prev = a.at_s;
+            }
+        }
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_in_the_spike() {
+        let trace = flash_crowd(5, 10.0, 1.0, 4.0, 2.0, 60.0, 1);
+        let in_spike = trace.iter().filter(|a| a.at_s >= 4.0 && a.at_s < 6.0).count();
+        let calm = trace.iter().filter(|a| a.at_s < 2.0).count();
+        assert!(
+            in_spike > 5 * calm.max(1),
+            "spike {in_spike} vs calm {calm}: spike must dominate"
+        );
+    }
+
+    #[test]
+    fn ramp_back_half_denser_than_front_half() {
+        let trace = ramp(6, 10.0, 1.0, 50.0, 1);
+        let front = trace.iter().filter(|a| a.at_s < 5.0).count();
+        let back = trace.len() - front;
+        assert!(back > 2 * front, "ramp not ramping: front {front}, back {back}");
+    }
+
+    #[test]
+    fn merge_orders_across_traces() {
+        let merged = merge(&[
+            bursty(1, 5.0, 2.0, 10.0, 2.0, 2),
+            ramp(2, 5.0, 2.0, 10.0, 2),
+        ]);
+        let mut prev = 0.0;
+        for a in &merged {
+            assert!(a.at_s >= prev);
+            prev = a.at_s;
+        }
+        assert_eq!(
+            merged.len(),
+            bursty(1, 5.0, 2.0, 10.0, 2.0, 2).len() + ramp(2, 5.0, 2.0, 10.0, 2).len()
+        );
+    }
+
+    #[test]
+    fn replay_is_open_loop_and_order_preserving() {
+        // Four arrivals 30 ms apart, each handler holding 150 ms: closed
+        // loop would take ≥ 600 ms, open loop ≈ 240 ms. Bound generously
+        // for slow CI machines while still ruling out serialization.
+        let trace: Vec<Arrival> =
+            (0..4).map(|i| Arrival { at_s: 0.03 * i as f64, class: i }).collect();
+        let t0 = Instant::now();
+        let results = replay(&trace, |i, a| {
+            std::thread::sleep(Duration::from_millis(150));
+            (i, a.class)
+        });
+        let took = t0.elapsed();
+        assert_eq!(results, vec![(0, 0), (1, 1), (2, 2), (3, 3)]);
+        assert!(
+            took < Duration::from_millis(500),
+            "replay serialized the arrivals: {took:?}"
+        );
+    }
+}

@@ -10,10 +10,12 @@
 //! | [`threadpool`] | rayon/tokio worker pools |
 //! | [`benchkit`] | criterion |
 //! | [`proptest`] | proptest |
+//! | [`loadgen`] | locust/vegeta-style open-loop load generation |
 
 pub mod benchkit;
 pub mod cli;
 pub mod json;
+pub mod loadgen;
 pub mod npy;
 pub mod prng;
 pub mod proptest;

@@ -1,0 +1,44 @@
+//! CLI front-end: option-parsing contracts that must fail fast, before
+//! any artifact or device work — these tests need no artifacts and run
+//! everywhere.
+
+use std::process::Command;
+
+#[test]
+fn serve_rejects_removed_gather_ms_alias() {
+    // `--gather-ms` was a deprecated alias of `--admit-ms` from the
+    // pre-continuous-batching server; it is gone, so a stale deploy
+    // script fails loudly at parse time instead of silently serving with
+    // the default admission window.
+    let out = Command::new(env!("CARGO_BIN_EXE_foresight"))
+        .args(["serve", "--gather-ms", "5"])
+        .output()
+        .expect("spawn foresight");
+    assert!(
+        !out.status.success(),
+        "serve --gather-ms must be rejected, got {:?}",
+        out.status
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("unknown option --gather-ms"),
+        "stderr: {stderr}"
+    );
+    // the parse error carries the help text, so the replacement knob and
+    // the overload-control options are advertised in the same breath
+    assert!(stderr.contains("--admit-ms"), "stderr: {stderr}");
+    assert!(stderr.contains("--max-queue"), "stderr: {stderr}");
+    assert!(stderr.contains("--degrade"), "stderr: {stderr}");
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = Command::new(env!("CARGO_BIN_EXE_foresight"))
+        .arg("warp")
+        .output()
+        .expect("spawn foresight");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown command 'warp'"), "stderr: {stderr}");
+    assert!(stderr.contains("serve"), "stderr: {stderr}");
+}

@@ -3,10 +3,10 @@
 
 use std::sync::Arc;
 
-use foresight::autotune::{ProfileKey, ProfileStore, TunedProfile};
+use foresight::autotune::{ProfileKey, ProfilePoint, ProfileStore, TunedProfile};
 use foresight::config::Manifest;
 use foresight::runtime::DevicePool;
-use foresight::server::{Client, EngineRegistry, Server, ServerConfig};
+use foresight::server::{is_overloaded, Client, EngineRegistry, Server, ServerConfig};
 use foresight::util::json::Json;
 
 /// `FORESIGHT_TEST_DEVICES=N` re-runs the whole suite against a sharded
@@ -825,6 +825,428 @@ fn shutdown_under_load_joins_all_workers_and_answers_all_clients() {
         let r = h.join().unwrap().expect("connection must outlive shutdown");
         assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Overload control: bounded admission, deadlines, degradation, shutdown
+// drain. All pinned to one device via `start_server_pairs(cfg, 1, ..)`:
+// the properties under test are per-queue and the CI re-run at
+// FORESIGHT_TEST_DEVICES=2 must not change the topology underneath them.
+// ---------------------------------------------------------------------------
+
+fn stats_op() -> Json {
+    Json::obj(vec![("op", Json::str("stats"))])
+}
+
+/// Poll the `stats` op until `pred` holds; panic with the last snapshot
+/// if it never does.
+fn wait_stats(c: &mut Client, what: &str, pred: impl Fn(&Json) -> bool) {
+    let t0 = std::time::Instant::now();
+    loop {
+        let s = c.call(&stats_op()).unwrap();
+        if pred(&s) {
+            return;
+        }
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(20),
+            "never reached {what}: {s}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}
+
+fn with_deadline(mut req: Json, ms: u64) -> Json {
+    if let Json::Obj(ref mut o) = req {
+        o.insert("deadline_ms".into(), Json::num(ms as f64));
+    }
+    req
+}
+
+#[test]
+fn full_queue_rejects_with_overloaded_and_retry_hint() {
+    // max_queue 1 on one device: a long request holds the only lane
+    // (max_batch 1), one short request fills the queue, and the next
+    // arrival must get the `overloaded` backpressure response instead of
+    // queueing — counted in `rejects`, never in `requests`/`errors`.
+    let Some(server) = start_server_pairs(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            max_batch: 1,
+            admit_window_ms: 0,
+            max_queue: 1,
+            ..ServerConfig::default()
+        },
+        1,
+        &[("opensora-sim", "240p-2s")],
+    ) else {
+        return;
+    };
+    let addr = server.addr();
+
+    let mut c_plug = Client::connect(&addr).unwrap();
+    let plug = gen_req("foresight", "overload plug", 1, 40);
+    let h_plug = std::thread::spawn(move || c_plug.call(&plug).unwrap());
+    let mut c = Client::connect(&addr).unwrap();
+    wait_stats(&mut c, "plug in flight", |s| {
+        s.get("lanes_active").unwrap().as_usize().unwrap() >= 1
+    });
+
+    let mut c_fill = Client::connect(&addr).unwrap();
+    let fill = gen_req("foresight", "queued filler", 2, 4);
+    let h_fill = std::thread::spawn(move || c_fill.call(&fill).unwrap());
+    wait_stats(&mut c, "filler queued", |s| {
+        s.get("queue_depth").unwrap().as_usize().unwrap() >= 1
+    });
+
+    // Queue at capacity: the probe is answered inline on its connection
+    // thread — rejected, never queued — with a clamped drain-time hint.
+    let r = c.call(&gen_req("none", "overload probe", 3, 4)).unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "error", "{r}");
+    assert!(is_overloaded(&r), "{r}");
+    let hint = r.get("retry_after_ms").unwrap().as_f64().unwrap();
+    assert!((25.0..=5000.0).contains(&hint), "hint outside clamp range: {r}");
+    assert_eq!(r.get("queue_depth").unwrap().as_usize().unwrap(), 1, "{r}");
+
+    // the rejection disturbed neither the plug nor the queued filler
+    let r_plug = h_plug.join().unwrap();
+    assert_eq!(r_plug.get("status").unwrap().as_str().unwrap(), "ok", "{r_plug}");
+    let r_fill = h_fill.join().unwrap();
+    assert_eq!(r_fill.get("status").unwrap().as_str().unwrap(), "ok", "{r_fill}");
+
+    let s = c.call(&stats_op()).unwrap();
+    assert_eq!(s.get("rejects").unwrap().as_usize().unwrap(), 1, "{s}");
+    // a reject is its own ledger: not a request, not an error
+    assert_eq!(s.get("requests").unwrap().as_usize().unwrap(), 2, "{s}");
+    assert_eq!(s.get("errors").unwrap().as_usize().unwrap(), 0, "{s}");
+    assert_eq!(s.get("retires").unwrap().as_usize().unwrap(), 2, "{s}");
+    assert_eq!(s.get("deadline_misses").unwrap().as_usize().unwrap(), 0, "{s}");
+    assert!(s.get("queue_depth_peak").unwrap().as_usize().unwrap() >= 1, "{s}");
+    assert_eq!(s.get("queue_depth").unwrap().as_usize().unwrap(), 0, "{s}");
+    server.shutdown();
+}
+
+#[test]
+fn queued_request_past_deadline_is_answered_at_a_step_boundary() {
+    // A queued job whose deadline expires behind a long in-flight request
+    // is answered by the boundary sweep while the plug is *still running*
+    // — it never occupies a lane, and the miss is accounted as an error.
+    let Some(server) = start_server_pairs(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            max_batch: 1,
+            admit_window_ms: 0,
+            ..ServerConfig::default()
+        },
+        1,
+        &[("opensora-sim", "240p-2s")],
+    ) else {
+        return;
+    };
+    let addr = server.addr();
+
+    let mut c_plug = Client::connect(&addr).unwrap();
+    let plug = gen_req("foresight", "deadline plug", 1, 40);
+    let h_plug = std::thread::spawn(move || c_plug.call(&plug).unwrap());
+    let mut c = Client::connect(&addr).unwrap();
+    wait_stats(&mut c, "plug in flight", |s| {
+        s.get("lanes_active").unwrap().as_usize().unwrap() >= 1
+    });
+
+    // deadline 1ms: hopeless long before the plug's 40 steps drain, so
+    // the job can never be granted a lane — the queue sweep must answer.
+    let r = c.call(&with_deadline(gen_req("none", "doomed", 2, 4), 1)).unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "error", "{r}");
+    assert!(
+        r.get("deadline_exceeded").unwrap().as_bool().unwrap(),
+        "miss must be machine-readable: {r}"
+    );
+    // answered at a boundary of the in-flight cohort, not after it: the
+    // plug (hundreds of ms of schedule left) is still holding its lane
+    let s = c.call(&stats_op()).unwrap();
+    assert!(
+        s.get("lanes_active").unwrap().as_usize().unwrap() >= 1,
+        "the miss should have been answered mid-plug: {s}"
+    );
+
+    let r_plug = h_plug.join().unwrap();
+    assert_eq!(r_plug.get("status").unwrap().as_str().unwrap(), "ok", "{r_plug}");
+
+    let s = c.call(&stats_op()).unwrap();
+    assert_eq!(s.get("requests").unwrap().as_usize().unwrap(), 2, "{s}");
+    assert_eq!(s.get("errors").unwrap().as_usize().unwrap(), 1, "{s}");
+    assert_eq!(s.get("deadline_misses").unwrap().as_usize().unwrap(), 1, "{s}");
+    assert_eq!(s.get("retires").unwrap().as_usize().unwrap(), 1, "{s}");
+    assert_eq!(s.get("rejects").unwrap().as_usize().unwrap(), 0, "{s}");
+    server.shutdown();
+}
+
+#[test]
+fn inflight_deadline_expiry_frees_the_lane_and_answers_the_client() {
+    // A request admitted with a live deadline that expires mid-run is cut
+    // short at a step boundary: the client gets the deadline error well
+    // before the full schedule would have finished, the lane drains, and
+    // the worker keeps serving.
+    let Some(server) = start_server_pairs(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            max_batch: 1,
+            admit_window_ms: 0,
+            ..ServerConfig::default()
+        },
+        1,
+        &[("opensora-sim", "240p-2s")],
+    ) else {
+        return;
+    };
+    let addr = server.addr();
+    let mut c = Client::connect(&addr).unwrap();
+
+    // Warm + calibrate: the same 40-step request served to completion
+    // sets the clock the doomed run's deadline is scaled from.
+    let t0 = std::time::Instant::now();
+    let warm = c.call(&gen_req("none", "calibrate", 1, 40)).unwrap();
+    assert_eq!(warm.get("status").unwrap().as_str().unwrap(), "ok", "{warm}");
+    let full = t0.elapsed();
+
+    // Expire about a third of the way through: far past admission (an
+    // idle worker admits in microseconds) and far short of completion.
+    let deadline_ms = (full.as_millis() as u64 / 3).clamp(15, 1000);
+    let t1 = std::time::Instant::now();
+    let r = c
+        .call(&with_deadline(gen_req("none", "expires midflight", 1, 40), deadline_ms))
+        .unwrap();
+    let took = t1.elapsed();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "error", "{r}");
+    assert!(r.get("deadline_exceeded").unwrap().as_bool().unwrap(), "{r}");
+    assert!(
+        took < full,
+        "an expired lane must retire early, not run out its schedule \
+         (took {took:?} vs full run {full:?})"
+    );
+
+    // lane freed, worker healthy
+    wait_stats(&mut c, "lanes drained", |s| {
+        s.get("lanes_active").unwrap().as_usize().unwrap() == 0
+            && s.get("queue_depth").unwrap().as_usize().unwrap() == 0
+    });
+    let ok = c.call(&gen_req("none", "recovery", 2, 4)).unwrap();
+    assert_eq!(ok.get("status").unwrap().as_str().unwrap(), "ok", "{ok}");
+
+    let s = c.call(&stats_op()).unwrap();
+    assert_eq!(s.get("requests").unwrap().as_usize().unwrap(), 3, "{s}");
+    assert_eq!(s.get("retires").unwrap().as_usize().unwrap(), 2, "{s}");
+    assert_eq!(s.get("errors").unwrap().as_usize().unwrap(), 1, "{s}");
+    assert_eq!(s.get("deadline_misses").unwrap().as_usize().unwrap(), 1, "{s}");
+    server.shutdown();
+}
+
+const TUNED_SPEC: &str = "foresight:n=1,r=2,gamma=0.5";
+const FAST_GOOD: &str = "static:n=1,r=3";
+const FAST_BAD: &str = "static:n=1,r=6";
+
+/// A tuned profile whose chosen spec has *headroom*: the frontier holds a
+/// faster in-budget point (`FAST_GOOD`, 31 dB ≥ the 30 dB budget) and a
+/// faster-still out-of-budget one (`FAST_BAD`, 22 dB) the degradation
+/// valve must never pick. Autotune-written stores pick the fastest
+/// in-budget point as the spec already, making degradation a no-op — this
+/// mirrors a hand-tuned store that prefers quality.
+fn headroom_store(steps: usize) -> Arc<ProfileStore> {
+    let frontier = vec![
+        ProfilePoint {
+            spec: FAST_BAD.into(),
+            wall_s: 0.5,
+            reuse_fraction: 0.8,
+            psnr: 22.0,
+            ssim: 0.80,
+            lpips: 0.30,
+        },
+        ProfilePoint {
+            spec: FAST_GOOD.into(),
+            wall_s: 1.0,
+            reuse_fraction: 0.6,
+            psnr: 31.0,
+            ssim: 0.92,
+            lpips: 0.12,
+        },
+        ProfilePoint {
+            spec: TUNED_SPEC.into(),
+            wall_s: 3.0,
+            reuse_fraction: 0.3,
+            psnr: 38.0,
+            ssim: 0.99,
+            lpips: 0.02,
+        },
+    ];
+    let mut store = ProfileStore::new();
+    for sampler in ["rflow", "ddim"] {
+        store.insert(TunedProfile {
+            key: ProfileKey {
+                model: "opensora-sim".into(),
+                bucket: "240p-2s".into(),
+                sampler: sampler.into(),
+                steps,
+            },
+            spec: TUNED_SPEC.into(),
+            min_psnr: 30.0,
+            profile_version: 1,
+            frontier: frontier.clone(),
+        });
+    }
+    Arc::new(store)
+}
+
+#[test]
+fn policy_auto_degrades_under_queue_pressure_within_psnr_budget() {
+    const STEPS: usize = 8;
+    let Some(server) = start_server_pairs(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            max_batch: 1,
+            admit_window_ms: 0,
+            degrade_threshold: 1,
+            profiles: Some(headroom_store(STEPS)),
+            ..ServerConfig::default()
+        },
+        1,
+        &[("opensora-sim", "240p-2s")],
+    ) else {
+        return;
+    };
+    let addr = server.addr();
+
+    // Plug the lane and park one filler in the queue: depth ≥ threshold.
+    let mut c_plug = Client::connect(&addr).unwrap();
+    let plug = gen_req("foresight", "degrade plug", 1, 40);
+    let h_plug = std::thread::spawn(move || c_plug.call(&plug).unwrap());
+    let mut c = Client::connect(&addr).unwrap();
+    wait_stats(&mut c, "plug in flight", |s| {
+        s.get("lanes_active").unwrap().as_usize().unwrap() >= 1
+    });
+    let mut c_fill = Client::connect(&addr).unwrap();
+    let fill = gen_req("none", "degrade filler", 2, 4);
+    let h_fill = std::thread::spawn(move || c_fill.call(&fill).unwrap());
+    wait_stats(&mut c, "filler queued", |s| {
+        s.get("queue_depth").unwrap().as_usize().unwrap() >= 1
+    });
+
+    // `auto` resolves on the connection thread at parse time, so the swap
+    // decision reads the queue depth while the filler is still parked.
+    let mut c_probe = Client::connect(&addr).unwrap();
+    let probe = gen_req("auto", "degrade probe", 3, STEPS);
+    let h_probe = std::thread::spawn(move || c_probe.call(&probe).unwrap());
+
+    let r = h_probe.join().unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+    assert_eq!(r.get("resolved_policy").unwrap().as_str().unwrap(), FAST_GOOD, "{r}");
+    assert_eq!(r.get("policy_spec").unwrap().as_str().unwrap(), FAST_GOOD, "{r}");
+    assert!(r.get("degraded").unwrap().as_bool().unwrap(), "{r}");
+    assert_eq!(r.get("degraded_from").unwrap().as_str().unwrap(), TUNED_SPEC, "{r}");
+    assert_eq!(r.get("profile_match").unwrap().as_str().unwrap(), "exact", "{r}");
+
+    let r_plug = h_plug.join().unwrap();
+    assert_eq!(r_plug.get("status").unwrap().as_str().unwrap(), "ok", "{r_plug}");
+    let r_fill = h_fill.join().unwrap();
+    assert_eq!(r_fill.get("status").unwrap().as_str().unwrap(), "ok", "{r_fill}");
+
+    // Pressure off (everything drained): the same request resolves the
+    // tuned spec again, undegraded.
+    let r2 = c.call(&gen_req("auto", "calm probe", 4, STEPS)).unwrap();
+    assert_eq!(r2.get("status").unwrap().as_str().unwrap(), "ok", "{r2}");
+    assert_eq!(r2.get("resolved_policy").unwrap().as_str().unwrap(), TUNED_SPEC, "{r2}");
+    assert!(!r2.get("degraded").unwrap().as_bool().unwrap(), "{r2}");
+    assert!(r2.get("degraded_from").is_none(), "{r2}");
+
+    let s = c.call(&stats_op()).unwrap();
+    assert_eq!(s.get("degrade_swaps").unwrap().as_usize().unwrap(), 1, "{s}");
+    // the frontier's measured wall delta: 3.0s tuned − 1.0s fast tier
+    let headroom = s.get("degrade_headroom_s").unwrap().as_f64().unwrap();
+    assert!((1.9..=2.1).contains(&headroom), "headroom {headroom}: {s}");
+    assert_eq!(s.get("auto_resolved").unwrap().as_usize().unwrap(), 2, "{s}");
+    assert_eq!(s.get("errors").unwrap().as_usize().unwrap(), 0, "{s}");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_answers_queued_expired_and_rejected_jobs() {
+    // Shutdown fired with the full overload mix outstanding — a lane in
+    // flight, a normal queued job, a queued job whose deadline cannot be
+    // met, and a client rejected at capacity — must give every client a
+    // definitive answer and join its workers (watchdogged so a deadlock
+    // fails rather than hangs the suite).
+    let Some(server) = start_server_pairs(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            max_batch: 1,
+            admit_window_ms: 0,
+            max_queue: 2,
+            ..ServerConfig::default()
+        },
+        1,
+        &[("opensora-sim", "240p-2s")],
+    ) else {
+        return;
+    };
+    let addr = server.addr();
+
+    let mut c_plug = Client::connect(&addr).unwrap();
+    let plug = gen_req("foresight", "shutdown plug", 1, 60);
+    let h_plug = std::thread::spawn(move || c_plug.call(&plug).unwrap());
+    let mut c = Client::connect(&addr).unwrap();
+    wait_stats(&mut c, "plug in flight", |s| {
+        s.get("lanes_active").unwrap().as_usize().unwrap() >= 1
+    });
+
+    let mut c_norm = Client::connect(&addr).unwrap();
+    let norm = gen_req("none", "queued normal", 2, 4);
+    let h_norm = std::thread::spawn(move || c_norm.call(&norm).unwrap());
+    wait_stats(&mut c, "normal job queued", |s| {
+        s.get("queue_depth").unwrap().as_usize().unwrap() >= 1
+    });
+
+    // Deadline 150ms: still live while the probe below arrives (so the
+    // queue stays pinned at capacity) but unmeetable — the plug holds the
+    // lane for the rest of its ≫150ms schedule, so this job can only ever
+    // be answered with the deadline error, swept or drained.
+    let mut c_doom = Client::connect(&addr).unwrap();
+    let doom = with_deadline(gen_req("none", "queued doomed", 3, 4), 150);
+    let h_doom = std::thread::spawn(move || c_doom.call(&doom).unwrap());
+    wait_stats(&mut c, "doomed job queued", |s| {
+        s.get("queue_depth").unwrap().as_usize().unwrap() >= 2
+    });
+
+    // Queue full: rejected at the door.
+    let r_rej = c.call(&gen_req("none", "rejected probe", 4, 4)).unwrap();
+    assert!(is_overloaded(&r_rej), "{r_rej}");
+    let s = c.call(&stats_op()).unwrap();
+    assert_eq!(s.get("rejects").unwrap().as_usize().unwrap(), 1, "{s}");
+
+    // Shutdown with all of it outstanding.
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        server.shutdown();
+        let _ = tx.send(());
+    });
+    assert!(
+        rx.recv_timeout(std::time::Duration::from_secs(120)).is_ok(),
+        "shutdown with queued + expired + rejected jobs deadlocked"
+    );
+
+    // Every client got its definitive answer.
+    let r_plug = h_plug.join().unwrap();
+    assert_eq!(r_plug.get("status").unwrap().as_str().unwrap(), "ok", "{r_plug}");
+    let r_norm = h_norm.join().unwrap();
+    assert_eq!(r_norm.get("status").unwrap().as_str().unwrap(), "ok", "{r_norm}");
+    let r_doom = h_doom.join().unwrap();
+    assert_eq!(r_doom.get("status").unwrap().as_str().unwrap(), "error", "{r_doom}");
+    assert!(
+        r_doom.get("deadline_exceeded").unwrap().as_bool().unwrap(),
+        "{r_doom}"
+    );
 }
 
 #[test]

@@ -191,6 +191,69 @@ fn gen_req(bucket: &str, policy: &str, prompt: &str, seed: u64, steps: usize) ->
 }
 
 #[test]
+fn refused_migration_leaves_session_healthy_and_matching_its_oracle() {
+    // Precheck refusals (here: a shape-bucket mismatch) must NOT poison
+    // the session — only a failure mid-transfer does. The scheduler
+    // relies on this split: a refused give-back keeps serving the lane
+    // locally, while a poisoned lane is swept and its client answered.
+    // After the refusal the session keeps stepping on its own device and
+    // finishes bit-identical to a never-migrated run, with not one byte
+    // of migration traffic charged.
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load(&Manifest::default_root()).unwrap();
+    let pool = DevicePool::cpu(2).unwrap();
+    let mut engines = Vec::with_capacity(2);
+    for (rt, bucket) in pool.devices().iter().zip([MODEL.1, "240p-4s"]) {
+        let lm = Arc::new(LoadedModel::load(rt.clone(), &manifest, MODEL.0, bucket).unwrap());
+        engines.push(Arc::new(Engine::with_hot_path(lm, manifest.schedule, HotPath::Device)));
+    }
+
+    let spec = "foresight:n=1,r=2,gamma=0.5";
+    let mut req = Request::new("refusal probe", 21);
+    req.steps = Some(6);
+    let oracle = standalone(&engines[0], &req, spec);
+
+    let pol = policy_for(&engines[0], spec, 6);
+    let mut sess = engines[0].admit(&req, pol).unwrap();
+    sess.step(None).unwrap();
+    sess.step(None).unwrap();
+    // wrong shape bucket on the target replica: refused up front
+    assert!(sess.migrate(&engines[1]).is_err());
+    assert!(
+        !sess.is_poisoned(),
+        "a refused migration must not poison the session"
+    );
+    while !sess.is_done() {
+        sess.step(None).unwrap();
+    }
+    let got = sess.finish().unwrap();
+
+    let mismatch = first_latent_mismatch(&got.latents.data, &oracle.latents.data, 1e-6);
+    assert!(
+        mismatch.is_none(),
+        "latents diverged after a refused migration: {mismatch:?}"
+    );
+    assert_eq!(
+        (got.stats.computed_units, got.stats.reused_units),
+        (oracle.stats.computed_units, oracle.stats.reused_units),
+        "reuse decisions diverged after a refused migration"
+    );
+    // no hop was charged: the byte model matches the oracle exactly
+    assert_eq!(
+        (got.stats.h2d_bytes, got.stats.h2d_calls, got.stats.d2h_bytes, got.stats.d2h_calls),
+        (
+            oracle.stats.h2d_bytes,
+            oracle.stats.h2d_calls,
+            oracle.stats.d2h_bytes,
+            oracle.stats.d2h_calls
+        ),
+        "a refused migration must not move any lane bytes"
+    );
+}
+
+#[test]
 fn server_steals_a_lane_to_an_idle_replica_and_reports_it() {
     // End-to-end work steal: device 0 runs a two-lane cohort while device
     // 1 goes idle; the scheduler migrates one session over, the response
