@@ -1,0 +1,159 @@
+//! Feature-dynamics instrumentation (paper Figs. 2, 3, 11-14).
+//!
+//! A [`DynamicsRecorder`] plugs into the engine as a [`StepObserver`] and
+//! streams block outputs into the statistics the paper's analysis figures
+//! plot, without retaining full feature histories:
+//!
+//! * MSE between consecutive *steps* per (layer, kind) — Fig. 2 heatmap,
+//!   Fig. 3a, Fig. 11;
+//! * cosine similarity between consecutive steps — Fig. 12/14;
+//! * cosine similarity between consecutive *layers* within a step — Fig. 13.
+
+use std::collections::BTreeMap;
+
+use crate::engine::StepObserver;
+use crate::model::BlockKind;
+use crate::util::stats::{cosine_f32, mse_f32};
+
+/// Streaming recorder of feature-change statistics.
+#[derive(Default)]
+pub struct DynamicsRecorder {
+    /// Previous step's features per (layer, kind).
+    prev_step: BTreeMap<(usize, BlockKind), Vec<f32>>,
+    /// Previous layer's features within the current step, per kind.
+    prev_layer: BTreeMap<BlockKind, (usize, Vec<f32>)>,
+    current_step: Option<usize>,
+    /// step → (layer, kind) → MSE vs previous step.
+    pub step_mse: BTreeMap<usize, BTreeMap<(usize, BlockKind), f64>>,
+    /// step → (layer, kind) → cosine vs previous step.
+    pub step_cos: BTreeMap<usize, BTreeMap<(usize, BlockKind), f64>>,
+    /// step → (layer, kind) → cosine vs previous layer (same kind).
+    pub layer_cos: BTreeMap<usize, BTreeMap<(usize, BlockKind), f64>>,
+}
+
+impl DynamicsRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mean consecutive-step MSE of one layer over all recorded steps
+    /// (a Fig. 2 heatmap row aggregate).
+    pub fn mean_step_mse(&self, layer: usize, kind: BlockKind) -> f64 {
+        let vals: Vec<f64> = self
+            .step_mse
+            .values()
+            .filter_map(|m| m.get(&(layer, kind)).copied())
+            .collect();
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    /// The Fig. 2-style heatmap: rows = layers, cols = steps (MSE).
+    pub fn heatmap(&self, layers: usize, kind: BlockKind) -> Vec<Vec<f64>> {
+        let steps: Vec<usize> = self.step_mse.keys().copied().collect();
+        (0..layers)
+            .map(|l| {
+                steps
+                    .iter()
+                    .map(|s| {
+                        self.step_mse
+                            .get(s)
+                            .and_then(|m| m.get(&(l, kind)).copied())
+                            .unwrap_or(0.0)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+impl StepObserver for DynamicsRecorder {
+    fn on_block(&mut self, step: usize, layer: usize, kind: BlockKind, data: &[f32]) {
+        if self.current_step != Some(step) {
+            self.current_step = Some(step);
+            self.prev_layer.clear();
+        }
+        // consecutive-step stats
+        if let Some(prev) = self.prev_step.get(&(layer, kind)) {
+            if prev.len() == data.len() {
+                self.step_mse
+                    .entry(step)
+                    .or_default()
+                    .insert((layer, kind), mse_f32(prev, data));
+                self.step_cos
+                    .entry(step)
+                    .or_default()
+                    .insert((layer, kind), cosine_f32(prev, data));
+            }
+        }
+        // consecutive-layer stats (within the current step)
+        if let Some((prev_l, prev_data)) = self.prev_layer.get(&kind) {
+            if *prev_l + 1 == layer && prev_data.len() == data.len() {
+                self.layer_cos
+                    .entry(step)
+                    .or_default()
+                    .insert((layer, kind), cosine_f32(prev_data, data));
+            }
+        }
+        self.prev_step.insert((layer, kind), data.to_vec());
+        self.prev_layer.insert(kind, (layer, data.to_vec()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_step_mse_from_second_step() {
+        let mut r = DynamicsRecorder::new();
+        let a = vec![0.0f32; 8];
+        let b = vec![1.0f32; 8];
+        r.on_block(0, 0, BlockKind::Spatial, &a);
+        assert!(r.step_mse.is_empty());
+        r.on_block(1, 0, BlockKind::Spatial, &b);
+        let m = r.step_mse[&1][&(0, BlockKind::Spatial)];
+        assert!((m - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layer_cosine_within_step() {
+        let mut r = DynamicsRecorder::new();
+        let a = vec![1.0f32, 0.0, 0.0, 0.0];
+        let b = vec![1.0f32, 0.0, 0.0, 0.0];
+        r.on_block(0, 0, BlockKind::Spatial, &a);
+        r.on_block(0, 1, BlockKind::Spatial, &b);
+        let c = r.layer_cos[&0][&(1, BlockKind::Spatial)];
+        assert!((c - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kinds_tracked_separately() {
+        let mut r = DynamicsRecorder::new();
+        r.on_block(0, 0, BlockKind::Spatial, &[1.0, 2.0]);
+        r.on_block(0, 0, BlockKind::Temporal, &[5.0, 6.0]);
+        r.on_block(1, 0, BlockKind::Spatial, &[1.0, 2.0]);
+        r.on_block(1, 0, BlockKind::Temporal, &[5.0, 6.0]);
+        assert_eq!(r.step_mse[&1][&(0, BlockKind::Spatial)], 0.0);
+        assert_eq!(r.step_mse[&1][&(0, BlockKind::Temporal)], 0.0);
+    }
+
+    #[test]
+    fn heatmap_shape() {
+        let mut r = DynamicsRecorder::new();
+        for step in 0..3 {
+            for layer in 0..2 {
+                let v = vec![(step * 2 + layer) as f32; 4];
+                r.on_block(step, layer, BlockKind::Spatial, &v);
+            }
+        }
+        let hm = r.heatmap(2, BlockKind::Spatial);
+        assert_eq!(hm.len(), 2);
+        assert_eq!(hm[0].len(), 2); // steps 1 and 2 recorded
+        assert!(hm[0][0] > 0.0);
+        assert!(r.mean_step_mse(0, BlockKind::Spatial) > 0.0);
+    }
+}

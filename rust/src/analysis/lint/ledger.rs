@@ -1,0 +1,304 @@
+//! `ledger-drift` pass: the telemetry ledger's three-legged contract.
+//!
+//! Every counter field in `server::Telemetry` / `server::DeviceTelemetry`
+//! must have (1) an increment site somewhere under `server/`, (2) a
+//! serialization site in the `stats` op (its wire key appears as a string
+//! literal in `server/mod.rs`), and (3) a `///` doc comment on the field.
+//! A counter missing any leg is drift: it either reads zero forever, is
+//! invisible on the wire, or nobody knows what it means.
+//!
+//! Field kinds are classified by type: `Atomic*` fields are counters
+//! (increment = `fetch_add`/`fetch_max`/`fetch_sub` near a `.field`
+//! access), `Mutex<Reservoir>`/`OrderedMutex<Reservoir>` fields are
+//! sample stores (increment = `push`). Other fields (`per_device`,
+//! config) are not ledger entries. Aggregate and per-device fields that
+//! share a name (`joins`, `occupancy`, …) are folded: one increment site
+//! anywhere satisfies both, which matches how the scheduler credits both
+//! ledgers at the same event.
+//!
+//! Wire keys that differ from the field name live in [`wire_names`]; add
+//! a mapping there when serializing a counter under a transformed key
+//! (`degrade_headroom_us` → `degrade_headroom_s`, reservoirs → their
+//! derived percentile/mean keys).
+
+use super::{Finding, SourceFile};
+
+const PASS: &str = "ledger-drift";
+
+/// The structs whose fields form the ledger.
+const STRUCTS: [&str; 2] = ["Telemetry", "DeviceTelemetry"];
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Kind {
+    Counter,
+    Reservoir,
+}
+
+#[derive(Debug)]
+struct Field {
+    name: String,
+    kind: Kind,
+    line: usize,
+    has_doc: bool,
+}
+
+/// Wire keys under which a field may legitimately surface in the `stats`
+/// op. Defaults to the field name itself.
+pub fn wire_names(field: &str) -> Vec<String> {
+    match field {
+        "occupancy" => vec!["occupancy_mean".into()],
+        "occupancy_peak" => vec!["occupancy_max".into()],
+        "degrade_headroom_us" => vec!["degrade_headroom_s".into()],
+        "latencies_s" => vec!["latency_mean_s".into(), "latency_p50_s".into()],
+        "queue_s" => vec!["queue_mean_s".into(), "queue_p95_s".into()],
+        f => vec![f.to_string()],
+    }
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let Some(main) = files.iter().find(|f| f.path.ends_with("server/mod.rs")) else {
+        return Vec::new();
+    };
+    let mut fields = Vec::new();
+    for s in STRUCTS {
+        parse_counters(&main.text, s, &mut fields);
+    }
+    // Fold same-named aggregate/per-device fields: keep the first.
+    fields.dedup_by(|a, b| a.name == b.name);
+
+    // Increment sites may live anywhere under server/ (the scheduler
+    // credits most of the ledger); serialization keys must appear in the
+    // stats op, i.e. in server/mod.rs itself.
+    let hay: String = files
+        .iter()
+        .filter(|f| f.path.contains("server/"))
+        .map(|f| f.text.replace(['\n', '\r'], " "))
+        .collect::<Vec<_>>()
+        .join(" ");
+
+    let mut out = Vec::new();
+    for f in &fields {
+        let markers: &[&str] = match f.kind {
+            Kind::Counter => &["fetch_add", "fetch_max", "fetch_sub"],
+            Kind::Reservoir => &["push"],
+        };
+        if !has_increment(&hay, &f.name, markers) {
+            out.push(finding(main, f, "no increment site", markers));
+        }
+        let serialized = wire_names(&f.name)
+            .iter()
+            .any(|w| main.text.contains(&format!("\"{w}\"")));
+        if !serialized {
+            out.push(Finding {
+                pass: PASS,
+                file: main.path.clone(),
+                line: f.line,
+                what: f.name.clone(),
+                detail: format!(
+                    "counter `{}` is never serialized in the stats op (expected one of {:?} \
+                     as a wire key; see lint::ledger::wire_names)",
+                    f.name,
+                    wire_names(&f.name)
+                ),
+            });
+        }
+        if !f.has_doc {
+            out.push(Finding {
+                pass: PASS,
+                file: main.path.clone(),
+                line: f.line,
+                what: f.name.clone(),
+                detail: format!("counter `{}` has no /// doc comment", f.name),
+            });
+        }
+    }
+    out
+}
+
+fn finding(main: &SourceFile, f: &Field, leg: &str, markers: &[&str]) -> Finding {
+    Finding {
+        pass: PASS,
+        file: main.path.clone(),
+        line: f.line,
+        what: f.name.clone(),
+        detail: format!(
+            "counter `{}` has {leg} (looked for `.{}` near {:?} under server/)",
+            f.name, f.name, markers
+        ),
+    }
+}
+
+/// `.name` access followed by an increment marker within a short window —
+/// tolerant of rustfmt line wrapping (the haystack is newline-flattened).
+fn has_increment(hay: &str, name: &str, markers: &[&str]) -> bool {
+    let needle = format!(".{name}");
+    let mut from = 0;
+    while let Some(at) = hay[from..].find(&needle) {
+        let start = from + at + needle.len();
+        // Reject partial-ident matches like `.requests_total`.
+        let boundary = match hay[start..].chars().next() {
+            Some(c) => !c.is_alphanumeric() && c != '_',
+            None => true,
+        };
+        if boundary {
+            let window = &hay[start..(start + 64).min(hay.len())];
+            if markers.iter().any(|m| window.contains(m)) {
+                return true;
+            }
+        }
+        from = start;
+    }
+    false
+}
+
+/// Line-based parse of `struct <name> { … }`: collect Atomic/Reservoir
+/// fields with their doc status. Field declarations in this codebase are
+/// single-line (`name: AtomicU64,`), which the parser assumes.
+fn parse_counters(text: &str, struct_name: &str, out: &mut Vec<Field>) {
+    let header = format!("struct {struct_name} {{");
+    let mut in_struct = false;
+    let mut depth = 0i32;
+    let mut doc_run = false;
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if !in_struct {
+            if line.contains(&header) {
+                in_struct = true;
+                depth = 1;
+            }
+            continue;
+        }
+        depth += line.matches('{').count() as i32;
+        depth -= line.matches('}').count() as i32;
+        if depth <= 0 {
+            return;
+        }
+        if line.starts_with("///") {
+            doc_run = true;
+            continue;
+        }
+        if let Some((name, ty)) = split_field(line) {
+            let kind = if ty.contains("Atomic") {
+                Some(Kind::Counter)
+            } else if ty.contains("Reservoir") {
+                Some(Kind::Reservoir)
+            } else {
+                None
+            };
+            if let Some(kind) = kind {
+                out.push(Field { name, kind, line: i + 1, has_doc: doc_run });
+            }
+        }
+        doc_run = false;
+    }
+}
+
+/// `pub name: Type,` → (name, type text). `None` for non-field lines.
+fn split_field(line: &str) -> Option<(String, String)> {
+    if line.starts_with("//") || line.starts_with('#') {
+        return None;
+    }
+    let line = line.strip_prefix("pub ").unwrap_or(line);
+    let (name, ty) = line.split_once(':')?;
+    let name = name.trim();
+    if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+        return None;
+    }
+    Some((name.to_string(), ty.trim().to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+struct Telemetry {
+    /// Requests served.
+    requests: AtomicU64,
+    /// Per-request wall latency.
+    latencies_s: Mutex<Reservoir>,
+    per_device: Vec<DeviceTelemetry>,
+}
+fn serve(t: &Telemetry) {
+    t.requests.fetch_add(1, Ordering::Relaxed);
+    t.latencies_s.lock().push(0.5);
+    let resp = vec![("requests", 1.0), ("latency_mean_s", 2.0)];
+}
+"#;
+
+    #[test]
+    fn balanced_ledger_is_clean() {
+        let fs = check(&[SourceFile::new("server/mod.rs", GOOD)]);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn flags_unincremented_counter() {
+        let src = r#"
+struct Telemetry {
+    /// Added for a future subsystem; nothing bumps it.
+    orphans: AtomicU64,
+}
+fn serve() {
+    let resp = vec![("orphans", 0.0)];
+}
+"#;
+        let fs = check(&[SourceFile::new("server/mod.rs", src)]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].what, "orphans");
+        assert!(fs[0].detail.contains("no increment site"));
+    }
+
+    #[test]
+    fn flags_unserialized_and_undocumented() {
+        let src = r#"
+struct Telemetry {
+    ghosts: AtomicU64,
+}
+fn serve(t: &Telemetry) {
+    t.ghosts.fetch_add(1, Ordering::Relaxed);
+}
+"#;
+        let fs = check(&[SourceFile::new("server/mod.rs", src)]);
+        let details: Vec<&str> = fs.iter().map(|f| f.detail.as_str()).collect();
+        assert_eq!(fs.len(), 2, "{fs:?}");
+        assert!(details.iter().any(|d| d.contains("never serialized")));
+        assert!(details.iter().any(|d| d.contains("no /// doc comment")));
+    }
+
+    #[test]
+    fn increments_found_across_server_files() {
+        let main = r#"
+struct Telemetry {
+    /// Work stolen.
+    steals: AtomicU64,
+}
+fn serve() {
+    let resp = vec![("steals", 0.0)];
+}
+"#;
+        let sched = "fn steal(t: &Telemetry) { t.steals.fetch_add(1, Ordering::Relaxed); }";
+        let fs = check(&[
+            SourceFile::new("server/mod.rs", main),
+            SourceFile::new("server/scheduler.rs", sched),
+        ]);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn partial_ident_matches_do_not_count() {
+        let src = r#"
+struct Telemetry {
+    /// Never actually bumped.
+    reject: AtomicU64,
+}
+fn serve(t: &Telemetry) {
+    t.rejected_total.fetch_add(1, Ordering::Relaxed);
+    let resp = vec![("reject", 0.0)];
+}
+"#;
+        let fs = check(&[SourceFile::new("server/mod.rs", src)]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].detail.contains("no increment site"));
+    }
+}

@@ -1,0 +1,419 @@
+//! Minimal Rust token scanner for the lint passes.
+//!
+//! Hand-rolled in the house style of `util::json` (crates.io is
+//! unreachable, so no `syn`): good enough to tokenize this repository,
+//! not a general Rust lexer. It skips whitespace, line/doc comments,
+//! (nested) block comments, char literals and lifetimes, and numeric
+//! literals; it emits identifiers, ordinary string literals (with their
+//! contents — the ledger pass keys on serialized wire names), and
+//! single-character punctuation, each tagged with a 1-based line number.
+
+/// One lexed token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Str(String),
+    Punct(char),
+}
+
+/// Token plus the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+impl Token {
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> Lexer<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.b.get(self.pos + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == b'\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn skip_line_comment(&mut self) {
+        while let Some(c) = self.peek() {
+            if c == b'\n' {
+                break;
+            }
+            self.bump();
+        }
+    }
+
+    fn skip_block_comment(&mut self) {
+        // Rust block comments nest.
+        let mut depth = 1usize;
+        self.bump(); // '*'
+        while depth > 0 {
+            match (self.peek(), self.peek2()) {
+                (Some(b'/'), Some(b'*')) => {
+                    self.bump();
+                    self.bump();
+                    depth += 1;
+                }
+                (Some(b'*'), Some(b'/')) => {
+                    self.bump();
+                    self.bump();
+                    depth -= 1;
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => break,
+            }
+        }
+    }
+
+    /// Ordinary `"…"` string body, opening quote already consumed.
+    fn string_body(&mut self) -> String {
+        let mut s = String::new();
+        while let Some(c) = self.bump() {
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    // Keep escapes opaque; the passes only substring-match.
+                    if let Some(e) = self.bump() {
+                        s.push('\\');
+                        s.push(e as char);
+                    }
+                }
+                _ => s.push(c as char),
+            }
+        }
+        s
+    }
+
+    /// Raw string `r"…"` / `r#"…"#…`, cursor on the first `#` or `"`.
+    fn skip_raw_string(&mut self) {
+        let mut hashes = 0usize;
+        while self.peek() == Some(b'#') {
+            hashes += 1;
+            self.bump();
+        }
+        if self.peek() != Some(b'"') {
+            return; // not actually a raw string (e.g. `r#ident`)
+        }
+        self.bump();
+        loop {
+            match self.bump() {
+                None => break,
+                Some(b'"') => {
+                    let mut seen = 0usize;
+                    while seen < hashes && self.peek() == Some(b'#') {
+                        seen += 1;
+                        self.bump();
+                    }
+                    if seen == hashes {
+                        break;
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// `'…'` char literal or `'ident` lifetime, opening quote consumed.
+    fn skip_char_or_lifetime(&mut self) {
+        match self.peek() {
+            Some(b'\\') => {
+                // Escaped char literal: skip to the closing quote.
+                self.bump();
+                self.bump();
+                while let Some(c) = self.bump() {
+                    if c == b'\'' {
+                        break;
+                    }
+                }
+            }
+            Some(c) if c.is_ascii_alphanumeric() || c == b'_' => {
+                if self.b.get(self.pos + 1) == Some(&b'\'') {
+                    // 'x' char literal.
+                    self.bump();
+                    self.bump();
+                } else {
+                    // Lifetime: consume the identifier, no closing quote.
+                    while let Some(c) = self.peek() {
+                        if c.is_ascii_alphanumeric() || c == b'_' {
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+            _ => {
+                // Something like '(' in a macro; treat as char literal.
+                self.bump();
+                if self.peek() == Some(b'\'') {
+                    self.bump();
+                }
+            }
+        }
+    }
+}
+
+/// Tokenize `src`. Never fails: unknown bytes become punctuation.
+pub fn lex(src: &str) -> Vec<Token> {
+    let mut lx = Lexer { b: src.as_bytes(), pos: 0, line: 1 };
+    let mut out = Vec::new();
+    while let Some(c) = lx.peek() {
+        let line = lx.line;
+        match c {
+            b' ' | b'\t' | b'\r' | b'\n' => {
+                lx.bump();
+            }
+            b'/' if lx.peek2() == Some(b'/') => {
+                lx.skip_line_comment();
+            }
+            b'/' if lx.peek2() == Some(b'*') => {
+                lx.bump();
+                lx.skip_block_comment();
+            }
+            b'"' => {
+                lx.bump();
+                let s = lx.string_body();
+                out.push(Token { tok: Tok::Str(s), line });
+            }
+            b'\'' => {
+                lx.bump();
+                lx.skip_char_or_lifetime();
+            }
+            b'0'..=b'9' => {
+                // Loose numeric literal: 0x1f, 1_000, 1.5 — exponent signs
+                // fall out as punctuation, which the passes ignore.
+                lx.bump();
+                while let Some(c) = lx.peek() {
+                    if c.is_ascii_alphanumeric() || c == b'_' {
+                        lx.bump();
+                    } else if c == b'.'
+                        && lx.peek2().is_some_and(|d| d.is_ascii_digit())
+                    {
+                        lx.bump();
+                    } else {
+                        break;
+                    }
+                }
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let mut s = String::new();
+                while let Some(c) = lx.peek() {
+                    if c.is_ascii_alphanumeric() || c == b'_' {
+                        s.push(c as char);
+                        lx.bump();
+                    } else {
+                        break;
+                    }
+                }
+                // Raw / byte string prefixes swallow their literal whole.
+                let next = lx.peek();
+                if (s == "r" || s == "br") && (next == Some(b'"') || next == Some(b'#')) {
+                    lx.skip_raw_string();
+                } else if s == "b" && next == Some(b'"') {
+                    lx.bump();
+                    lx.string_body();
+                } else {
+                    out.push(Token { tok: Tok::Ident(s), line });
+                }
+            }
+            _ => {
+                lx.bump();
+                out.push(Token { tok: Tok::Punct(c as char), line });
+            }
+        }
+    }
+    out
+}
+
+/// Drop `#[cfg(test)]`- and `#[test]`-gated items from a token stream, so
+/// the passes only see code that ships. The gated item is everything from
+/// the attribute through the end of the following braced block (or the
+/// first `;` for non-braced items like `use`).
+pub fn strip_tests(toks: Vec<Token>) -> Vec<Token> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if let Some(j) = test_attr_end(&toks, i) {
+            i = skip_item(&toks, j);
+        } else {
+            out.push(toks[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+/// If `toks[i..]` starts a `#[cfg(test)]` or `#[test]` attribute, return
+/// the index just past its closing `]`.
+fn test_attr_end(toks: &[Token], i: usize) -> Option<usize> {
+    if !toks.get(i)?.is_punct('#') || !toks.get(i + 1)?.is_punct('[') {
+        return None;
+    }
+    if toks.get(i + 2)?.ident() == Some("test") && toks.get(i + 3)?.is_punct(']') {
+        return Some(i + 4);
+    }
+    if toks.get(i + 2)?.ident() == Some("cfg")
+        && toks.get(i + 3)?.is_punct('(')
+        && toks.get(i + 4)?.ident() == Some("test")
+        && toks.get(i + 5)?.is_punct(')')
+        && toks.get(i + 6)?.is_punct(']')
+    {
+        return Some(i + 7);
+    }
+    None
+}
+
+/// Skip one item starting at `i` (past any further attributes): consume to
+/// the first `{` at nesting level zero and through its matching `}`, or
+/// past the first top-level `;` for items without a body.
+fn skip_item(toks: &[Token], mut i: usize) -> usize {
+    // Further attributes on the same item.
+    while i < toks.len() {
+        if toks[i].is_punct('#') && toks.get(i + 1).is_some_and(|t| t.is_punct('[')) {
+            let mut depth = 0usize;
+            while i < toks.len() {
+                if toks[i].is_punct('[') {
+                    depth += 1;
+                } else if toks[i].is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                i += 1;
+            }
+        } else {
+            break;
+        }
+    }
+    // Body: to matching `}` of the first `{`, or past a bare `;`.
+    let mut brace = 0usize;
+    let mut paren = 0usize;
+    while i < toks.len() {
+        match toks[i].tok {
+            Tok::Punct('{') => brace += 1,
+            Tok::Punct('}') => {
+                brace = brace.saturating_sub(1);
+                if brace == 0 {
+                    return i + 1;
+                }
+            }
+            Tok::Punct('(') | Tok::Punct('[') => paren += 1,
+            Tok::Punct(')') | Tok::Punct(']') => paren = paren.saturating_sub(1),
+            Tok::Punct(';') if brace == 0 && paren == 0 => return i + 1,
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter_map(|t| t.ident().map(|s| s.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let src = r##"
+            // line comment with unwrap()
+            /* block /* nested */ still comment unwrap() */
+            let x = "string with unwrap()"; // tail
+            let y = r#"raw "quoted" unwrap()"#;
+            let z = 'c';
+            let lt: &'static str = "s";
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(ids.contains(&"static".to_string()));
+        let strs: Vec<String> = lex(src)
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Str(s) => Some(s),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, vec!["string with unwrap()".to_string(), "s".to_string()]);
+    }
+
+    #[test]
+    fn line_numbers() {
+        let toks = lex("a\nb\n  c");
+        let lines: Vec<(String, usize)> = toks
+            .iter()
+            .filter_map(|t| t.ident().map(|s| (s.to_string(), t.line)))
+            .collect();
+        assert_eq!(
+            lines,
+            vec![("a".into(), 1), ("b".into(), 2), ("c".into(), 3)]
+        );
+    }
+
+    #[test]
+    fn strips_cfg_test_mod_and_test_fn() {
+        let src = r#"
+            fn live() { x.unwrap(); }
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn t() { y.unwrap(); }
+            }
+            #[test]
+            fn stray() { z.unwrap(); }
+            fn also_live() {}
+        "#;
+        let toks = strip_tests(lex(src));
+        let ids: Vec<&str> = toks.iter().filter_map(|t| t.ident()).collect();
+        assert!(ids.contains(&"live"));
+        assert!(ids.contains(&"also_live"));
+        assert!(!ids.contains(&"tests"));
+        assert!(!ids.contains(&"stray"));
+        assert_eq!(ids.iter().filter(|s| **s == "unwrap").count(), 1);
+    }
+
+    #[test]
+    fn numeric_literals_do_not_eat_method_calls() {
+        // `1.0f64.sqrt()` style chains and tuple indexing must keep the
+        // following idents.
+        let ids = idents("let x = pair.0.lock(); let y = 1.0e3; y.floor();");
+        assert!(ids.contains(&"lock".to_string()));
+        assert!(ids.contains(&"floor".to_string()));
+    }
+}

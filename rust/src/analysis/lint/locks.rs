@@ -1,0 +1,507 @@
+//! `lock-order` and `io-under-lock` passes.
+//!
+//! A single scan per file tracks live mutex guards through each function:
+//! `let g = x.lock()` binds a guard until its scope closes (or `drop(g)`),
+//! while any chained `x.lock().op()` — bare or as a `let` initializer
+//! (`let v = x.lock().samples().to_vec()` binds the *samples*, not the
+//! guard) — is a statement-temporary dying at the `;`. The
+//! guard's identity is the field name before `.lock(` — `state`,
+//! `latencies_s`, `cache`, … — classified against the canonical rank
+//! table in [`util::sync`](crate::util::sync).
+//!
+//! * **lock-order**: acquiring a lock whose rank is not strictly above
+//!   every rank already held is an inversion; calls to `Router` methods
+//!   that lock internally (`queue_depths`, `enqueue`, `signal_stop`)
+//!   count as acquisitions of `router.state`. A `.lock(` on a field the
+//!   table does not know is flagged too — the table and the code must
+//!   not drift apart. Every nested acquisition also lands in a global
+//!   acquisition graph; cycles (possible deadlocks the rank table can't
+//!   see, e.g. between unranked locks) are reported after the scan.
+//! * **io-under-lock**: while a `router.state` guard is live, any
+//!   send/write/flush, blocking `recv`, or device-work dispatch
+//!   (`step`/`step_many`/`migrate`/`abandon`/`finish`/`admit`/`call`)
+//!   violates the off-lock-replies rule from the scheduler docs.
+//!
+//! The model is an approximation (no dataflow, single-file, guards from
+//! field names): it is tuned to be conservative on this codebase —
+//! chained temporaries inside one large expression are modeled as dying
+//! at the statement end, which is why multi-guard expressions must be
+//! written as separate scoped statements (the debug-build runtime
+//! checker in `util::sync` covers whatever a static scan cannot see).
+
+use std::collections::BTreeMap;
+
+use super::lexer::{lex, strip_tests, Token};
+use super::{Finding, SourceFile};
+use crate::util::sync::{
+    RANK_POOL_IN_FLIGHT, RANK_POOL_QUEUE, RANK_POOL_SLOTS, RANK_ROUTER_STATE,
+    RANK_RUNTIME_EXEC_CACHE, RANK_RUNTIME_FUSED_CACHE, RANK_TELEMETRY_LATENCY,
+    RANK_TELEMETRY_OCCUPANCY, RANK_TELEMETRY_QUEUE,
+};
+
+const PASS_ORDER: &str = "lock-order";
+const PASS_IO: &str = "io-under-lock";
+
+/// Map a `.lock()` receiver field to its canonical (rank, name). Must stay
+/// in sync with the rank table in `util::sync`.
+pub fn classify(field: &str) -> Option<(u32, &'static str)> {
+    Some(match field {
+        "state" => (RANK_ROUTER_STATE, "router.state"),
+        "rx" => (RANK_POOL_QUEUE, "pool.queue"),
+        "in_flight" => (RANK_POOL_IN_FLIGHT, "pool.in_flight"),
+        "cache" => (RANK_RUNTIME_EXEC_CACHE, "runtime.cache"),
+        "fused" => (RANK_RUNTIME_FUSED_CACHE, "runtime.fused"),
+        "latencies_s" => (RANK_TELEMETRY_LATENCY, "telemetry.latencies_s"),
+        "queue_s" => (RANK_TELEMETRY_QUEUE, "telemetry.queue_s"),
+        // Server-wide and per-device occupancy reservoirs share a field
+        // name; they are adjacent in rank and never nest, so the static
+        // pass folds them (the runtime checker distinguishes by rank).
+        "occupancy" => (RANK_TELEMETRY_OCCUPANCY, "telemetry.occupancy"),
+        "slots" => (RANK_POOL_SLOTS, "pool.slots"),
+        _ => return None,
+    })
+}
+
+/// Methods that acquire `router.state` internally.
+const ROUTER_LOCKING_FNS: [&str; 3] = ["queue_depths", "enqueue", "signal_stop"];
+
+/// Method calls forbidden while `router.state` is held.
+const IO_MARKERS: [&str; 13] = [
+    "send", "write", "write_all", "writeln", "flush", "recv", "step", "step_many", "migrate",
+    "abandon", "finish", "admit", "call",
+];
+
+/// Macros forbidden while `router.state` is held.
+const IO_MACROS: [&str; 2] = ["write", "writeln"];
+
+fn in_scope(path: &str) -> bool {
+    path.contains("server/") || path.contains("runtime/") || path.ends_with("util/threadpool.rs")
+}
+
+#[derive(Debug, Clone)]
+struct Guard {
+    /// Canonical name (`router.state`) or raw field ident when unranked.
+    key: String,
+    rank: Option<u32>,
+    /// Binding variable, `None` for statement temporaries.
+    var: Option<String>,
+    /// Brace depth at the binding; the guard dies when depth drops below.
+    depth: usize,
+}
+
+/// First-example metadata for one acquisition-graph edge.
+#[derive(Debug, Clone)]
+struct EdgeAt {
+    file: String,
+    line: usize,
+    func: String,
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut edges: BTreeMap<(String, String), EdgeAt> = BTreeMap::new();
+    for f in files {
+        if in_scope(&f.path) {
+            scan(&f.path, &strip_tests(lex(&f.text)), &mut edges, &mut out);
+        }
+    }
+    report_cycles(&edges, &mut out);
+    out
+}
+
+fn scan(
+    path: &str,
+    toks: &[Token],
+    edges: &mut BTreeMap<(String, String), EdgeAt>,
+    out: &mut Vec<Finding>,
+) {
+    let mut depth = 0usize;
+    let mut stmt_start = 0usize;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut current_fn = String::from("?");
+
+    let mut i = 0;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.ident() == Some("fn") {
+            if let Some(name) = toks.get(i + 1).and_then(|n| n.ident()) {
+                current_fn = name.to_string();
+            }
+        }
+        if t.is_punct('{') {
+            depth += 1;
+            stmt_start = i + 1;
+        } else if t.is_punct('}') {
+            depth = depth.saturating_sub(1);
+            guards.retain(|g| g.depth <= depth);
+            stmt_start = i + 1;
+        } else if t.is_punct(';') {
+            guards.retain(|g| !(g.var.is_none() && g.depth == depth));
+            stmt_start = i + 1;
+        } else if t.is_punct('.')
+            && toks.get(i + 1).and_then(|n| n.ident()) == Some("lock")
+            && toks.get(i + 2).is_some_and(|n| n.is_punct('('))
+        {
+            let field = if i > 0 { toks[i - 1].ident().unwrap_or("<expr>") } else { "<expr>" };
+            let line = toks[i + 1].line;
+            let (rank, key) = match classify(field) {
+                Some((r, name)) => (Some(r), name.to_string()),
+                None => {
+                    out.push(Finding {
+                        pass: PASS_ORDER,
+                        file: path.to_string(),
+                        line,
+                        what: field.to_string(),
+                        detail: format!(
+                            "unclassified lock in fn `{current_fn}` — add it to the \
+                             util::sync rank table and lint::locks::classify"
+                        ),
+                    });
+                    (None, field.to_string())
+                }
+            };
+            // The binding holds the guard only when `.lock()` ends the
+            // initializer chain (modulo `unwrap`/`expect`, which return
+            // the guard): a further method call consumes the guard inside
+            // the statement, so it dies at the `;` like any temporary.
+            let chained = toks.get(i + 3).is_some_and(|t| t.is_punct(')'))
+                && toks.get(i + 4).is_some_and(|t| t.is_punct('.'))
+                && !matches!(toks.get(i + 5).and_then(|t| t.ident()), Some("unwrap" | "expect"));
+            let var = if chained {
+                None
+            } else {
+                detect_binding(&toks[stmt_start..i])
+            };
+            if let Some(v) = &var {
+                // Rebinding releases the previous guard of the same name.
+                guards.retain(|g| g.var.as_deref() != Some(v));
+            }
+            record_acquire(
+                path,
+                line,
+                &current_fn,
+                &guards,
+                &key,
+                rank,
+                edges,
+                out,
+            );
+            guards.push(Guard { key, rank, var, depth });
+            i += 3;
+            continue;
+        } else if t.ident() == Some("drop")
+            && toks.get(i + 1).is_some_and(|n| n.is_punct('('))
+            && toks.get(i + 3).is_some_and(|n| n.is_punct(')'))
+        {
+            if let Some(name) = toks.get(i + 2).and_then(|n| n.ident()) {
+                guards.retain(|g| g.var.as_deref() != Some(name));
+            }
+        } else if let Some(id) = t.ident() {
+            let prev_dot = i > 0 && toks[i - 1].is_punct('.');
+            let next_paren = toks.get(i + 1).is_some_and(|n| n.is_punct('('));
+            let next_bang = toks.get(i + 1).is_some_and(|n| n.is_punct('!'));
+            let state_held = guards.iter().any(|g| g.rank == Some(RANK_ROUTER_STATE));
+
+            if prev_dot && next_paren && ROUTER_LOCKING_FNS.contains(&id) {
+                // An internal acquisition of router.state.
+                record_acquire(
+                    path,
+                    t.line,
+                    &current_fn,
+                    &guards,
+                    "router.state",
+                    Some(RANK_ROUTER_STATE),
+                    edges,
+                    out,
+                );
+            } else if state_held
+                && ((prev_dot && next_paren && IO_MARKERS.contains(&id))
+                    || (next_bang && IO_MACROS.contains(&id)))
+            {
+                out.push(Finding {
+                    pass: PASS_IO,
+                    file: path.to_string(),
+                    line: t.line,
+                    what: id.to_string(),
+                    detail: format!(
+                        "`{id}` while a router.state guard is live in fn `{current_fn}` \
+                         — replies and device work must run off-lock"
+                    ),
+                });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Record one acquisition of `key` while `guards` are held: graph edges
+/// from every live guard, plus an inversion finding when the new rank is
+/// not strictly above the highest held rank.
+#[allow(clippy::too_many_arguments)]
+fn record_acquire(
+    path: &str,
+    line: usize,
+    current_fn: &str,
+    guards: &[Guard],
+    key: &str,
+    rank: Option<u32>,
+    edges: &mut BTreeMap<(String, String), EdgeAt>,
+    out: &mut Vec<Finding>,
+) {
+    for g in guards {
+        edges.entry((g.key.clone(), key.to_string())).or_insert_with(|| EdgeAt {
+            file: path.to_string(),
+            line,
+            func: current_fn.to_string(),
+        });
+    }
+    let top = guards.iter().filter(|g| g.rank.is_some()).max_by_key(|g| g.rank);
+    if let (Some(r), Some(t)) = (rank, top) {
+        if let Some(tr) = t.rank {
+            if r <= tr {
+                out.push(Finding {
+                    pass: PASS_ORDER,
+                    file: path.to_string(),
+                    line,
+                    what: format!("{key} after {}", t.key),
+                    detail: format!(
+                        "fn `{current_fn}` acquires `{key}` (rank {r}) while holding \
+                         `{}` (rank {tr}); ranks must strictly increase",
+                        t.key
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// DFS over the global acquisition graph; each cycle is a potential
+/// deadlock the rank table cannot rule out.
+fn report_cycles(edges: &BTreeMap<(String, String), EdgeAt>, out: &mut Vec<Finding>) {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        adj.entry(a.as_str()).or_default().push(b.as_str());
+        adj.entry(b.as_str()).or_default();
+    }
+    let mut done: Vec<&str> = Vec::new();
+    let mut reported: Vec<String> = Vec::new();
+    let starts: Vec<&str> = adj.keys().copied().collect();
+    for start in starts {
+        let mut path: Vec<&str> = vec![start];
+        dfs(start, &adj, &mut path, &mut done, &mut reported, edges, out);
+    }
+}
+
+fn dfs<'a>(
+    node: &'a str,
+    adj: &BTreeMap<&'a str, Vec<&'a str>>,
+    path: &mut Vec<&'a str>,
+    done: &mut Vec<&'a str>,
+    reported: &mut Vec<String>,
+    edges: &BTreeMap<(String, String), EdgeAt>,
+    out: &mut Vec<Finding>,
+) {
+    if done.contains(&node) {
+        return;
+    }
+    for &next in adj.get(node).map(|v| v.as_slice()).unwrap_or(&[]) {
+        if let Some(pos) = path.iter().position(|&n| n == next) {
+            let mut cycle: Vec<&str> = path[pos..].to_vec();
+            cycle.push(next);
+            // Canonicalize so each cycle reports once regardless of entry.
+            let mut names = cycle.clone();
+            names.pop();
+            names.sort_unstable();
+            let sig = names.join("+");
+            if !reported.contains(&sig) {
+                reported.push(sig);
+                let at = edges.get(&(node.to_string(), next.to_string()));
+                out.push(Finding {
+                    pass: PASS_ORDER,
+                    file: at.map(|e| e.file.clone()).unwrap_or_default(),
+                    line: at.map(|e| e.line).unwrap_or(0),
+                    what: cycle.join(" -> "),
+                    detail: format!(
+                        "acquisition cycle (potential deadlock); closing edge in fn `{}`",
+                        at.map(|e| e.func.clone()).unwrap_or_default()
+                    ),
+                });
+            }
+        } else {
+            path.push(next);
+            dfs(next, adj, path, done, reported, edges, out);
+            path.pop();
+        }
+    }
+    done.push(node);
+}
+
+/// `let [mut] name = …` / `name = …` at the head of the current statement
+/// binds the guard to `name`; anything else is a temporary.
+fn detect_binding(stmt: &[Token]) -> Option<String> {
+    let mut k = 0;
+    if stmt.first()?.ident() == Some("let") {
+        k = 1;
+        if stmt.get(k)?.ident() == Some("mut") {
+            k += 1;
+        }
+        let name = stmt.get(k)?.ident()?.to_string();
+        if stmt.get(k + 1)?.is_punct('=') {
+            return Some(name);
+        }
+        return None;
+    }
+    let name = stmt.first()?.ident()?.to_string();
+    if stmt.get(1)?.is_punct('=') && !stmt.get(2).is_some_and(|t| t.is_punct('=')) {
+        return Some(name);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> Vec<Finding> {
+        check(&[SourceFile::new(path, src)])
+    }
+
+    #[test]
+    fn ascending_nesting_is_clean() {
+        let src = r#"
+            fn worker(&self) {
+                let mut st = self.router.state.lock();
+                self.telemetry.latencies_s.lock().push(1.0);
+                drop(st);
+                self.telemetry.queue_s.lock().push(2.0);
+            }
+        "#;
+        assert!(run("server/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_seeded_inversion() {
+        let src = r#"
+            fn stats(&self) {
+                let l = self.telemetry.latencies_s.lock();
+                let st = self.router.state.lock();
+            }
+        "#;
+        let fs = run("server/fixture.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].pass, "lock-order");
+        assert!(fs[0].what.contains("router.state after telemetry.latencies_s"));
+        assert_eq!(fs[0].line, 4);
+    }
+
+    #[test]
+    fn flags_router_locking_call_under_guard() {
+        let src = r#"
+            fn resolve(&self) {
+                let l = self.telemetry.latencies_s.lock();
+                let d = self.router.queue_depths();
+            }
+        "#;
+        let fs = run("server/fixture.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].pass, "lock-order");
+    }
+
+    #[test]
+    fn guard_scope_and_drop_end_liveness() {
+        let src = r#"
+            fn scoped(&self) {
+                {
+                    let st = self.state.lock();
+                }
+                let l = self.latencies_s.lock();
+                drop(l);
+                let st = self.state.lock();
+            }
+        "#;
+        assert!(run("server/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn temporaries_die_at_statement_end() {
+        let src = r#"
+            fn temp(&self) {
+                self.latencies_s.lock().push(1.0);
+                let st = self.state.lock();
+            }
+        "#;
+        assert!(run("server/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn chained_lock_reads_are_temporaries() {
+        // The `let` binds the copied-out samples, not the guard — taking
+        // router.state afterwards is fine.
+        let src = r#"
+            fn stats(&self) {
+                let qs = self.queue_s.lock().samples().to_vec();
+                let d = self.router.queue_depths();
+            }
+        "#;
+        assert!(run("server/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_io_under_router_lock() {
+        let src = r#"
+            fn sweep(&self) {
+                let mut st = self.state.lock();
+                let _ = job.reply.send(resp);
+                drop(st);
+                let _ = late.reply.send(resp);
+            }
+        "#;
+        let fs = run("server/scheduler_fixture.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].pass, "io-under-lock");
+        assert_eq!(fs[0].what, "send");
+        assert_eq!(fs[0].line, 4);
+    }
+
+    #[test]
+    fn flags_unclassified_lock_field() {
+        let src = r#"
+            fn rogue(&self) {
+                let g = self.mystery.lock();
+            }
+        "#;
+        let fs = run("runtime/fixture.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].detail.contains("unclassified"));
+        assert_eq!(fs[0].what, "mystery");
+    }
+
+    #[test]
+    fn reports_cross_function_cycle() {
+        // Two unranked locks taken in opposite orders in two functions:
+        // no single acquisition inverts a rank, only the graph sees it.
+        let src = r#"
+            fn ab(&self) {
+                let a = self.alpha.lock();
+                let b = self.beta.lock();
+            }
+            fn ba(&self) {
+                let b = self.beta.lock();
+                let a = self.alpha.lock();
+            }
+        "#;
+        let fs = run("server/fixture.rs", src);
+        let cycles: Vec<_> = fs
+            .iter()
+            .filter(|f| f.pass == "lock-order" && f.what.contains("->"))
+            .collect();
+        assert_eq!(cycles.len(), 1, "{fs:?}");
+        assert!(cycles[0].what.contains("alpha") && cycles[0].what.contains("beta"));
+    }
+
+    #[test]
+    fn out_of_scope_files_are_ignored() {
+        let src = "fn f(&self) { let a = self.state.lock(); let b = self.mystery.lock(); }";
+        assert!(run("engine/mod.rs", src).is_empty());
+    }
+}

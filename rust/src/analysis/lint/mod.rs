@@ -1,0 +1,222 @@
+//! Project-invariant static analysis (`foresight lint`).
+//!
+//! Four passes over `rust/src`, each a pure function from source text to
+//! [`Finding`]s so unit tests can feed seeded-violation fixtures:
+//!
+//! * [`locks`] — `lock-order` (nested-guard acquisition graph, ranked
+//!   against the canonical order in `util::sync`; inversions and cycles)
+//!   and `io-under-lock` (socket/reply/device work while a
+//!   `Router::state` guard is live);
+//! * [`panics`] — `panic-path` (`unwrap`/`expect`/`panic!`/`unreachable!`
+//!   in non-test serving code);
+//! * [`ledger`] — `ledger-drift` (every telemetry counter incremented,
+//!   serialized in the `stats` op, and documented).
+//!
+//! Findings are filtered through the checked-in allowlist
+//! (`rust/lint.allow`): `pass|file-suffix|pattern|justification` per
+//! line, justification mandatory. The CLI (`foresight lint`) exits
+//! nonzero on any non-allowlisted finding and reports allowlist entries
+//! that no longer match anything, so stale exemptions surface too.
+
+pub mod ledger;
+pub mod lexer;
+pub mod locks;
+pub mod panics;
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One source file as seen by the passes: a repo-relative path (used for
+/// scoping and allowlist matching) plus its full text.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+impl SourceFile {
+    pub fn new(path: impl Into<String>, text: impl Into<String>) -> Self {
+        Self { path: path.into(), text: text.into() }
+    }
+}
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Pass id: `lock-order`, `io-under-lock`, `panic-path`, `ledger-drift`.
+    pub pass: &'static str,
+    pub file: String,
+    pub line: usize,
+    /// The matched construct (e.g. `unwrap`, `telemetry.latencies_s`).
+    pub what: String,
+    pub detail: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: {}:{}: `{}` — {}",
+            self.pass, self.file, self.line, self.what, self.detail
+        )
+    }
+}
+
+/// Known pass ids (allowlist entries must name one).
+pub const PASSES: [&str; 4] = ["lock-order", "io-under-lock", "panic-path", "ledger-drift"];
+
+/// One `pass|file-suffix|pattern|justification` allowlist line.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub pass: String,
+    pub file_suffix: String,
+    pub pattern: String,
+    pub justification: String,
+    /// 1-based line in the allowlist file, for diagnostics.
+    pub line: usize,
+}
+
+impl AllowEntry {
+    fn matches(&self, f: &Finding) -> bool {
+        self.pass == f.pass
+            && f.file.ends_with(&self.file_suffix)
+            && (f.what.contains(&self.pattern) || f.detail.contains(&self.pattern))
+    }
+}
+
+/// Parsed allowlist. `#`-lines and blank lines are comments; every entry
+/// must carry a non-empty justification (that is the point of the file).
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    pub fn parse(text: &str) -> Result<Allowlist> {
+        let mut entries = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(4, '|');
+            let (pass, file_suffix, pattern, justification) = match (
+                parts.next(),
+                parts.next(),
+                parts.next(),
+                parts.next(),
+            ) {
+                (Some(a), Some(b), Some(c), Some(d)) => (a.trim(), b.trim(), c.trim(), d.trim()),
+                _ => bail!(
+                    "lint.allow:{}: expected `pass|file-suffix|pattern|justification`",
+                    i + 1
+                ),
+            };
+            if !PASSES.contains(&pass) {
+                bail!("lint.allow:{}: unknown pass `{pass}`", i + 1);
+            }
+            if pattern.is_empty() {
+                bail!("lint.allow:{}: empty pattern", i + 1);
+            }
+            if justification.is_empty() {
+                bail!("lint.allow:{}: entry needs a justification", i + 1);
+            }
+            entries.push(AllowEntry {
+                pass: pass.to_string(),
+                file_suffix: file_suffix.to_string(),
+                pattern: pattern.to_string(),
+                justification: justification.to_string(),
+                line: i + 1,
+            });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Allowlist> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("read allowlist {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Index of the first entry permitting `f`, if any.
+    pub fn permits(&self, f: &Finding) -> Option<usize> {
+        self.entries.iter().position(|e| e.matches(f))
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, returning paths relative
+/// to it with `/` separators, in a deterministic order.
+pub fn collect_sources(root: &Path) -> Result<Vec<SourceFile>> {
+    fn walk(root: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+        let mut entries: Vec<_> = fs::read_dir(dir)
+            .with_context(|| format!("read dir {}", dir.display()))?
+            .collect::<std::io::Result<_>>()?;
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let p = e.path();
+            if p.is_dir() {
+                walk(root, &p, out)?;
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                let text = fs::read_to_string(&p)
+                    .with_context(|| format!("read {}", p.display()))?;
+                out.push(SourceFile { path: rel, text });
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(root, root, &mut out)?;
+    Ok(out)
+}
+
+/// Run every pass over `files` (findings are pre-allowlist).
+pub fn run_all(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    findings.extend(locks::check(files));
+    findings.extend(panics::check(files));
+    findings.extend(ledger::check(files));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_parses_and_matches() {
+        let text = "\
+# comment
+panic-path|server/mod.rs|unwrap|invariant: channel outlives sender
+
+io-under-lock | server/scheduler.rs | send | replies drained off-lock
+";
+        let allow = Allowlist::parse(text).unwrap();
+        assert_eq!(allow.entries.len(), 2);
+        let f = Finding {
+            pass: "panic-path",
+            file: "server/mod.rs".into(),
+            line: 10,
+            what: "unwrap".into(),
+            detail: "x".into(),
+        };
+        assert_eq!(allow.permits(&f), Some(0));
+        let other = Finding { file: "server/scheduler.rs".into(), ..f.clone() };
+        assert_eq!(allow.permits(&other), None);
+    }
+
+    #[test]
+    fn allowlist_requires_justification() {
+        assert!(Allowlist::parse("panic-path|a.rs|unwrap|").is_err());
+        assert!(Allowlist::parse("panic-path|a.rs|unwrap").is_err());
+        assert!(Allowlist::parse("no-such-pass|a.rs|x|why").is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! `panic-path` pass: no `unwrap`/`expect`/`panic!`/`unreachable!` (or
+//! `todo!`/`unimplemented!`) in non-test serving code.
+//!
+//! Scope: `server/`, `runtime/`, `util/threadpool.rs`, `util/sync.rs` —
+//! the code a panicking request handler can take down. A handler must
+//! degrade to an error response; shared state must stay poison-tolerant.
+//! Deliberate exceptions (e.g. the lock-order checker itself, which
+//! panics by design) live in `rust/lint.allow` with justifications.
+
+use super::lexer::{lex, strip_tests, Token};
+use super::{Finding, SourceFile};
+
+const PASS: &str = "panic-path";
+
+/// Panic-family macros (flagged when followed by `!`).
+const MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+fn in_scope(path: &str) -> bool {
+    path.contains("server/")
+        || path.contains("runtime/")
+        || path.ends_with("util/threadpool.rs")
+        || path.ends_with("util/sync.rs")
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        if in_scope(&f.path) {
+            check_tokens(&f.path, &strip_tests(lex(&f.text)), &mut out);
+        }
+    }
+    out
+}
+
+fn check_tokens(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    let mut current_fn = String::from("?");
+    for (i, t) in toks.iter().enumerate() {
+        if t.ident() == Some("fn") {
+            if let Some(name) = toks.get(i + 1).and_then(|n| n.ident()) {
+                current_fn = name.to_string();
+            }
+        }
+        let Some(id) = t.ident() else { continue };
+        let prev_dot = i > 0 && toks[i - 1].is_punct('.');
+        let next = toks.get(i + 1);
+        let method_call = prev_dot && next.is_some_and(|n| n.is_punct('('));
+        let bang = next.is_some_and(|n| n.is_punct('!'));
+        let what = match id {
+            "unwrap" | "expect" if method_call => id.to_string(),
+            m if MACROS.contains(&m) && bang => format!("{m}!"),
+            _ => continue,
+        };
+        out.push(Finding {
+            pass: PASS,
+            file: path.to_string(),
+            line: t.line,
+            what,
+            detail: format!("panic path in non-test serving code (fn `{current_fn}`)"),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> Vec<Finding> {
+        check(&[SourceFile::new(path, src)])
+    }
+
+    #[test]
+    fn flags_seeded_unwrap_and_macros() {
+        let src = r#"
+            fn handler(x: Option<u32>) -> u32 {
+                let v = x.unwrap();
+                if v > 3 { panic!("boom"); }
+                match v { 0 => unreachable!(), _ => v }
+            }
+        "#;
+        let fs = run("server/fixture.rs", src);
+        let whats: Vec<&str> = fs.iter().map(|f| f.what.as_str()).collect();
+        assert_eq!(whats, vec!["unwrap", "panic!", "unreachable!"]);
+        assert!(fs[0].detail.contains("handler"));
+    }
+
+    #[test]
+    fn tolerant_variants_and_tests_pass() {
+        let src = r#"
+            fn ok(x: Option<u32>) -> u32 {
+                x.unwrap_or_else(|| 0).max(x.unwrap_or_default())
+            }
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn t() { Some(1).unwrap(); panic!("fine in tests"); }
+            }
+        "#;
+        assert!(run("server/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn out_of_scope_files_are_ignored() {
+        assert!(run("util/json.rs", "fn f() { x.unwrap(); }").is_empty());
+        assert!(run("engine/mod.rs", "fn f() { x.unwrap(); }").is_empty());
+    }
+}

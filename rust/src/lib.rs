@@ -157,6 +157,29 @@
 //! `benches/fig19_autotune.rs` asserts the tuned choice Pareto-dominates
 //! or matches the fixed default; `examples/serve.rs` shows the
 //! profile → persist → serve path end to end.
+//!
+//! # Static analysis
+//!
+//! The concurrency above rests on three project invariants the type
+//! system cannot see, so the repo checks them twice:
+//!
+//! * **Statically** — `foresight lint` ([`analysis::lint`]) scans
+//!   `rust/src` for lock-order inversions and acquisition cycles against
+//!   the canonical rank table in [`util::sync`], I/O or device work
+//!   performed while the scheduler's `router.state` guard is live,
+//!   `unwrap`/`expect`/`panic!` on serving paths (a handler must degrade
+//!   to an error response, never take the process down), and telemetry
+//!   ledger drift (every counter incremented, serialized in the `stats`
+//!   op, and documented). Deliberate exceptions live in `rust/lint.allow`
+//!   with one-line justifications; CI and `tests/integration_lint.rs`
+//!   fail on any non-allowlisted finding and on stale allowlist rows.
+//! * **Dynamically** — every lock in the serving stack is a
+//!   [`util::sync::OrderedMutex`] carrying a (name, rank); debug builds
+//!   (hence `cargo test` and the CI test legs) panic at the exact
+//!   acquisition site of any out-of-rank nesting, and poisoning is
+//!   tolerated everywhere so a panicking handler cannot take `stats`
+//!   down with it (see `tests/integration_server.rs`
+//!   `poisoned_telemetry_keeps_stats_serving`).
 
 pub mod analysis;
 pub mod autotune;

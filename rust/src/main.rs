@@ -6,11 +6,13 @@
 //! * `autotune` — profile policy configurations, write tuned profiles
 //! * `analyze`  — dump feature-dynamics statistics (Fig. 2-style CSV)
 //! * `info`     — list models/buckets available in the artifact manifest
+//! * `lint`     — project-invariant static analysis (see `analysis::lint`)
 
 use anyhow::{anyhow, Result};
 use std::path::Path;
 use std::sync::Arc;
 
+use foresight::analysis::lint::{collect_sources, run_all, Allowlist};
 use foresight::analysis::DynamicsRecorder;
 use foresight::autotune::{profile_engine, sweep_table, GridSpec, ProfileOptions, ProfileStore};
 use foresight::config::Manifest;
@@ -36,6 +38,7 @@ fn main() {
         "autotune" => cmd_autotune(&rest),
         "analyze" => cmd_analyze(&rest),
         "info" => cmd_info(&rest),
+        "lint" => cmd_lint(&rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -55,7 +58,8 @@ fn usage() -> String {
      \x20 serve      start the TCP JSON-lines server\n\
      \x20 autotune   profile policy configurations, write tuned profiles\n\
      \x20 analyze    dump feature-dynamics CSV (Fig. 2 style)\n\
-     \x20 info       list available models and buckets\n\n\
+     \x20 info       list available models and buckets\n\
+     \x20 lint       check project invariants (lock order, panic paths, ledger)\n\n\
      Run `foresight <command> --help` for options."
         .to_string()
 }
@@ -326,6 +330,90 @@ fn cmd_analyze(args: &[String]) -> Result<()> {
     }
     std::fs::write(out, csv)?;
     println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_lint(args: &[String]) -> Result<()> {
+    let p = Cli::new(
+        "foresight lint",
+        "project-invariant static analysis: lock order, I/O under lock, panic paths, ledger drift",
+    )
+    .opt("src", "", "source root to scan (default: ./src, else the crate's own src)")
+    .opt("allow", "", "allowlist file (default: lint.allow next to the source root)")
+    .flag("verbose", "also print allowlisted findings and their justifications")
+    .parse(args)
+    .map_err(|e| anyhow!("{e}"))?;
+
+    let src = match p.get("src") {
+        "" => {
+            let local = Path::new("src");
+            if local.is_dir() {
+                local.to_path_buf()
+            } else {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+            }
+        }
+        s => Path::new(s).to_path_buf(),
+    };
+    let allow_path = match p.get("allow") {
+        "" => match src.parent() {
+            Some(dir) => dir.join("lint.allow"),
+            None => Path::new("lint.allow").to_path_buf(),
+        },
+        s => Path::new(s).to_path_buf(),
+    };
+
+    let files = collect_sources(&src)?;
+    let allow = if allow_path.exists() {
+        Allowlist::load(&allow_path)?
+    } else {
+        Allowlist::default()
+    };
+
+    let findings = run_all(&files);
+    let mut used = vec![false; allow.entries.len()];
+    let mut blocking = 0usize;
+    let mut allowed = 0usize;
+    for f in &findings {
+        match allow.permits(f) {
+            Some(i) => {
+                used[i] = true;
+                allowed += 1;
+                if p.get_flag("verbose") {
+                    println!("allowed: {f}\n         ({})", allow.entries[i].justification);
+                }
+            }
+            None => {
+                blocking += 1;
+                println!("{f}");
+            }
+        }
+    }
+    for (i, e) in allow.entries.iter().enumerate() {
+        if !used[i] {
+            println!(
+                "warning: {}:{}: allowlist entry `{}|{}|{}` matches nothing — remove it",
+                allow_path.display(),
+                e.line,
+                e.pass,
+                e.file_suffix,
+                e.pattern
+            );
+        }
+    }
+    println!(
+        "lint: {} file(s), {} finding(s) ({} allowlisted, {} blocking)",
+        files.len(),
+        findings.len(),
+        allowed,
+        blocking
+    );
+    if blocking > 0 {
+        return Err(anyhow!(
+            "{blocking} non-allowlisted finding(s); fix them or add a justified entry to {}",
+            allow_path.display()
+        ));
+    }
     Ok(())
 }
 

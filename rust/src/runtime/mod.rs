@@ -39,8 +39,10 @@ use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
+
+use crate::util::sync::{OrderedMutex, RANK_RUNTIME_EXEC_CACHE, RANK_RUNTIME_FUSED_CACHE};
 
 pub use tensor::HostTensor;
 
@@ -309,9 +311,9 @@ fn parse_entry_arity(hlo_text: &str) -> Option<usize> {
 pub struct Runtime {
     client: Shared<xla::PjRtClient>,
     /// Compiled executables keyed by absolute artifact path.
-    cache: Mutex<BTreeMap<PathBuf, Arc<Executable>>>,
+    cache: OrderedMutex<BTreeMap<PathBuf, Arc<Executable>>>,
     /// Runtime-built fused executables keyed by (op, dims).
-    fused: Mutex<BTreeMap<(String, Vec<usize>), Arc<Executable>>>,
+    fused: OrderedMutex<BTreeMap<(String, Vec<usize>), Arc<Executable>>>,
     /// Host↔device copy counters (see [`TransferStats`]).
     transfers: TransferStats,
 }
@@ -322,8 +324,8 @@ impl Runtime {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
         Ok(Self {
             client: Shared(client),
-            cache: Mutex::new(BTreeMap::new()),
-            fused: Mutex::new(BTreeMap::new()),
+            cache: OrderedMutex::new("runtime.cache", RANK_RUNTIME_EXEC_CACHE, BTreeMap::new()),
+            fused: OrderedMutex::new("runtime.fused", RANK_RUNTIME_FUSED_CACHE, BTreeMap::new()),
             transfers: TransferStats::default(),
         })
     }
@@ -343,7 +345,7 @@ impl Runtime {
     /// carries no `entry_computation_layout`, instead of compiling an
     /// executable whose arity check can never pass.
     pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(path) {
+        if let Some(e) = self.cache.lock().get(path) {
             return Ok(e.clone());
         }
         let text = std::fs::read_to_string(path)
@@ -379,10 +381,7 @@ impl Runtime {
             arity,
             stats: ExecStats::default(),
         });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(path.to_path_buf(), exec.clone());
+        self.cache.lock().insert(path.to_path_buf(), exec.clone());
         Ok(exec)
     }
 
@@ -467,7 +466,7 @@ impl Runtime {
     /// keys).
     fn fused_executable(&self, op: &str, dims: &[usize]) -> Result<Arc<Executable>> {
         let key = (op.to_string(), dims.to_vec());
-        if let Some(e) = self.fused.lock().unwrap().get(&key) {
+        if let Some(e) = self.fused.lock().get(&key) {
             return Ok(e.clone());
         }
         let b = xla::XlaBuilder::new(&format!("fused_{op}"));
@@ -556,7 +555,7 @@ impl Runtime {
             arity,
             stats: ExecStats::default(),
         });
-        self.fused.lock().unwrap().insert(key, exec.clone());
+        self.fused.lock().insert(key, exec.clone());
         Ok(exec)
     }
 
@@ -615,7 +614,7 @@ impl Runtime {
             return Err(anyhow!("stack needs at least one input"));
         }
         let key = (format!("stack{batch}"), dims.to_vec());
-        if let Some(e) = self.fused.lock().unwrap().get(&key) {
+        if let Some(e) = self.fused.lock().get(&key) {
             return Ok(e.clone());
         }
         let b = xla::XlaBuilder::new(&format!("fused_stack{batch}"));
@@ -633,12 +632,17 @@ impl Runtime {
             );
         }
         let root = if batch == 1 {
-            parts.pop().expect("exactly one part")
+            match parts.pop() {
+                Some(p) => p,
+                None => return Err(anyhow!("fused stack: no lane part was built")),
+            }
         } else {
-            let (first, rest) = parts.split_first().expect("batch >= 2");
-            first
-                .concat_in_dim(rest, 0)
-                .map_err(|e| anyhow!("fused stack concat: {e:?}"))?
+            match parts.split_first() {
+                Some((first, rest)) => first
+                    .concat_in_dim(rest, 0)
+                    .map_err(|e| anyhow!("fused stack concat: {e:?}"))?,
+                None => return Err(anyhow!("fused stack: no lane part was built")),
+            }
         };
         let comp = root.build().map_err(|e| anyhow!("fused stack build: {e:?}"))?;
         let exe = self
@@ -652,7 +656,7 @@ impl Runtime {
             arity: batch,
             stats: ExecStats::default(),
         });
-        self.fused.lock().unwrap().insert(key, exec.clone());
+        self.fused.lock().insert(key, exec.clone());
         Ok(exec)
     }
 
@@ -685,7 +689,7 @@ impl Runtime {
             return Err(anyhow!("cohort step needs at least one lane"));
         }
         let key = (format!("cohort_{family}{batch}"), dims.to_vec());
-        if let Some(e) = self.fused.lock().unwrap().get(&key) {
+        if let Some(e) = self.fused.lock().get(&key) {
             return Ok(e.clone());
         }
         let b = xla::XlaBuilder::new(&format!("fused_cohort_{family}{batch}"));
@@ -740,7 +744,9 @@ impl Runtime {
                 }
                 _ => {
                     // Same op order as `ddim_step`.
-                    let (lo, hi) = bounds.as_ref().expect("ddim bounds");
+                    let Some((lo, hi)) = bounds.as_ref() else {
+                        return Err(anyhow!("fused cohort_{family}: missing clamp bounds"));
+                    };
                     let noise = eps.mul_(&s[2]).map_err(|e| err("noise", e))?;
                     let num = xi.sub_(&noise).map_err(|e| err("x0 numerator", e))?;
                     let x0 = num.div_(&s[1]).map_err(|e| err("x0 divide", e))?;
@@ -754,10 +760,17 @@ impl Runtime {
             parts.push(next);
         }
         let root = if batch == 1 {
-            parts.pop().expect("exactly one lane")
+            match parts.pop() {
+                Some(p) => p,
+                None => return Err(anyhow!("fused cohort_{family}: no lane part was built")),
+            }
         } else {
-            let (first, rest) = parts.split_first().expect("batch >= 2");
-            first.concat_in_dim(rest, 0).map_err(|e| err("concat", e))?
+            match parts.split_first() {
+                Some((first, rest)) => {
+                    first.concat_in_dim(rest, 0).map_err(|e| err("concat", e))?
+                }
+                None => return Err(anyhow!("fused cohort_{family}: no lane part was built")),
+            }
         };
         let comp = root.build().map_err(|e| err("build", e))?;
         let exe = self
@@ -771,7 +784,7 @@ impl Runtime {
             arity,
             stats: ExecStats::default(),
         });
-        self.fused.lock().unwrap().insert(key, exec.clone());
+        self.fused.lock().insert(key, exec.clone());
         Ok(exec)
     }
 
@@ -791,7 +804,7 @@ impl Runtime {
             return Err(anyhow!("regroup lane {bad} out of range for batch {batch}"));
         }
         let key = (format!("regroup{keep:?}"), batched_dims.to_vec());
-        if let Some(e) = self.fused.lock().unwrap().get(&key) {
+        if let Some(e) = self.fused.lock().get(&key) {
             return Ok(e.clone());
         }
         let b = xla::XlaBuilder::new("fused_regroup");
@@ -807,12 +820,17 @@ impl Runtime {
             );
         }
         let root = if parts.len() == 1 {
-            parts.pop().expect("exactly one lane")
+            match parts.pop() {
+                Some(p) => p,
+                None => return Err(anyhow!("fused regroup: no lane part was built")),
+            }
         } else {
-            let (first, rest) = parts.split_first().expect("len >= 2");
-            first
-                .concat_in_dim(rest, 0)
-                .map_err(|e| anyhow!("fused regroup concat: {e:?}"))?
+            match parts.split_first() {
+                Some((first, rest)) => first
+                    .concat_in_dim(rest, 0)
+                    .map_err(|e| anyhow!("fused regroup concat: {e:?}"))?,
+                None => return Err(anyhow!("fused regroup: no lane part was built")),
+            }
         };
         let comp = root
             .build()
@@ -828,7 +846,7 @@ impl Runtime {
             arity: 1,
             stats: ExecStats::default(),
         });
-        self.fused.lock().unwrap().insert(key, exec.clone());
+        self.fused.lock().insert(key, exec.clone());
         Ok(exec)
     }
 
@@ -843,7 +861,7 @@ impl Runtime {
             ));
         }
         let key = (format!("lane{index}"), batched_dims.to_vec());
-        if let Some(e) = self.fused.lock().unwrap().get(&key) {
+        if let Some(e) = self.fused.lock().get(&key) {
             return Ok(e.clone());
         }
         let b = xla::XlaBuilder::new(&format!("fused_lane{index}"));
@@ -870,13 +888,13 @@ impl Runtime {
             arity: 1,
             stats: ExecStats::default(),
         });
-        self.fused.lock().unwrap().insert(key, exec.clone());
+        self.fused.lock().insert(key, exec.clone());
         Ok(exec)
     }
 
     /// Number of compiled artifacts currently cached.
     pub fn cached_executables(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.lock().len()
     }
 }
 

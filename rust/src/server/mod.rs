@@ -193,7 +193,7 @@ use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::autotune::ProfileStore;
@@ -204,6 +204,10 @@ use crate::policy::build_policy;
 use crate::runtime::{DevicePool, Runtime};
 use crate::util::json::{self, Json};
 use crate::util::stats::{self, Reservoir};
+use crate::util::sync::{
+    OrderedMutex, RANK_DEVICE_OCCUPANCY, RANK_TELEMETRY_LATENCY, RANK_TELEMETRY_OCCUPANCY,
+    RANK_TELEMETRY_QUEUE,
+};
 
 mod scheduler;
 
@@ -438,7 +442,10 @@ fn cohort_key(payload: &Json) -> Option<(String, String)> {
 }
 
 struct Telemetry {
+    /// Jobs admitted for processing (including ones answered with a
+    /// validation or deadline error; excluding capacity `rejects`).
     requests: AtomicU64,
+    /// Admitted jobs answered with an error response of any kind.
     errors: AtomicU64,
     /// Transient accept(2) failures retried by the listener loop.
     accept_errors: AtomicU64,
@@ -460,7 +467,7 @@ struct Telemetry {
     /// max statistic once it evicts).
     occupancy_peak: AtomicU64,
     /// Per-step cohort occupancy (lanes advanced per pass).
-    occupancy: Mutex<Reservoir>,
+    occupancy: OrderedMutex<Reservoir>,
     /// `policy=auto` requests resolved to a tuned profile.
     auto_resolved: AtomicU64,
     /// `policy=auto` requests served [`DEFAULT_POLICY`] because no profile
@@ -488,8 +495,11 @@ struct Telemetry {
     queue_depth_peak: AtomicU64,
     /// One entry per device ordinal (module docs §Per-device stats).
     per_device: Vec<DeviceTelemetry>,
-    latencies_s: Mutex<Reservoir>,
-    queue_s: Mutex<Reservoir>,
+    /// Per-request wall-clock latency samples, in seconds.
+    latencies_s: OrderedMutex<Reservoir>,
+    /// Per-request queue wait (enqueue → session start) samples, in
+    /// seconds.
+    queue_s: OrderedMutex<Reservoir>,
 }
 
 /// Per-device slice of the scheduler telemetry. The aggregate counters
@@ -507,7 +517,7 @@ struct DeviceTelemetry {
     /// Largest per-step cohort occupancy seen on this device.
     occupancy_peak: AtomicU64,
     /// Per-step cohort occupancy on this device.
-    occupancy: Mutex<Reservoir>,
+    occupancy: OrderedMutex<Reservoir>,
 }
 
 impl Telemetry {
@@ -523,7 +533,11 @@ impl Telemetry {
             retires: AtomicU64::new(0),
             regroups: AtomicU64::new(0),
             occupancy_peak: AtomicU64::new(0),
-            occupancy: Mutex::new(Reservoir::new(reservoir_cap)),
+            occupancy: OrderedMutex::new(
+                "telemetry.occupancy",
+                RANK_TELEMETRY_OCCUPANCY,
+                Reservoir::new(reservoir_cap),
+            ),
             auto_resolved: AtomicU64::new(0),
             auto_fallbacks: AtomicU64::new(0),
             steals: AtomicU64::new(0),
@@ -539,11 +553,23 @@ impl Telemetry {
                     retires: AtomicU64::new(0),
                     steals: AtomicU64::new(0),
                     occupancy_peak: AtomicU64::new(0),
-                    occupancy: Mutex::new(Reservoir::new(reservoir_cap)),
+                    occupancy: OrderedMutex::new(
+                        "device.occupancy",
+                        RANK_DEVICE_OCCUPANCY,
+                        Reservoir::new(reservoir_cap),
+                    ),
                 })
                 .collect(),
-            latencies_s: Mutex::new(Reservoir::new(reservoir_cap)),
-            queue_s: Mutex::new(Reservoir::new(reservoir_cap)),
+            latencies_s: OrderedMutex::new(
+                "telemetry.latencies_s",
+                RANK_TELEMETRY_LATENCY,
+                Reservoir::new(reservoir_cap),
+            ),
+            queue_s: OrderedMutex::new(
+                "telemetry.queue_s",
+                RANK_TELEMETRY_QUEUE,
+                Reservoir::new(reservoir_cap),
+            ),
         }
     }
 }
@@ -692,12 +718,21 @@ impl Server {
                 cfg: scheduler::SchedConfig { max_batch, admit_window },
                 device,
             };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("foresight-server-worker-{wid}"))
-                    .spawn(move || scheduler::run_worker(&wctx))
-                    .expect("spawn worker"),
-            );
+            let spawned = std::thread::Builder::new()
+                .name(format!("foresight-server-worker-{wid}"))
+                .spawn(move || scheduler::run_worker(&wctx));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Wake and join the workers already spawned before
+                    // reporting the failure — no leaked threads.
+                    router.signal_stop(&stop);
+                    for h in handles.drain(..) {
+                        let _ = h.join();
+                    }
+                    return Err(anyhow!("spawn scheduler worker {wid}: {e}"));
+                }
+            }
         }
 
         // accept loop
@@ -712,64 +747,74 @@ impl Server {
                 devices,
                 degrade_threshold: cfg.degrade_threshold,
             });
-            handles.push(
-                std::thread::Builder::new()
-                    .name("foresight-server-accept".to_string())
-                    .spawn(move || {
-                        let mut conn_handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
-                        let mut consecutive_errs = 0u32;
-                        while !stop_accept.load(Ordering::SeqCst) {
-                            // Reap finished connection handlers each pass so
-                            // the handle list tracks live connections instead
-                            // of growing for the server's lifetime.
-                            let mut i = 0;
-                            while i < conn_handles.len() {
-                                if conn_handles[i].is_finished() {
-                                    let _ = conn_handles.swap_remove(i).join();
-                                } else {
-                                    i += 1;
-                                }
-                            }
-                            match listener.accept() {
-                                Ok((stream, _peer)) => {
-                                    consecutive_errs = 0;
-                                    let ctx = Arc::clone(&ctx);
-                                    conn_handles.push(std::thread::spawn(move || {
-                                        let _ = handle_conn(stream, ctx);
-                                    }));
-                                }
-                                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                    std::thread::sleep(Duration::from_millis(10));
-                                }
-                                Err(e) if accept_should_retry(&e) => {
-                                    // Transient (ECONNABORTED, EMFILE under
-                                    // load, ...): back off exponentially —
-                                    // capped so shutdown stays prompt — and
-                                    // keep listening rather than silently
-                                    // killing the accept loop.
-                                    telemetry.accept_errors.fetch_add(1, Ordering::Relaxed);
-                                    let delay = Duration::from_millis(
-                                        5u64.saturating_mul(1 << consecutive_errs.min(6)),
-                                    );
-                                    consecutive_errs = consecutive_errs.saturating_add(1);
-                                    std::thread::sleep(delay.min(Duration::from_millis(250)));
-                                }
-                                Err(e) => {
-                                    // Fatal: the listening socket itself is
-                                    // gone; existing connections keep
-                                    // draining through their own threads.
-                                    telemetry.accept_errors.fetch_add(1, Ordering::Relaxed);
-                                    eprintln!("[server] accept loop stopping: {e}");
-                                    break;
-                                }
+            let spawned = std::thread::Builder::new()
+                .name("foresight-server-accept".to_string())
+                .spawn(move || {
+                    let mut conn_handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                    let mut consecutive_errs = 0u32;
+                    while !stop_accept.load(Ordering::SeqCst) {
+                        // Reap finished connection handlers each pass so
+                        // the handle list tracks live connections instead
+                        // of growing for the server's lifetime.
+                        let mut i = 0;
+                        while i < conn_handles.len() {
+                            if conn_handles[i].is_finished() {
+                                let _ = conn_handles.swap_remove(i).join();
+                            } else {
+                                i += 1;
                             }
                         }
-                        for h in conn_handles {
-                            let _ = h.join();
+                        match listener.accept() {
+                            Ok((stream, _peer)) => {
+                                consecutive_errs = 0;
+                                let ctx = Arc::clone(&ctx);
+                                conn_handles.push(std::thread::spawn(move || {
+                                    let _ = handle_conn(stream, ctx);
+                                }));
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                            Err(e) if accept_should_retry(&e) => {
+                                // Transient (ECONNABORTED, EMFILE under
+                                // load, ...): back off exponentially —
+                                // capped so shutdown stays prompt — and
+                                // keep listening rather than silently
+                                // killing the accept loop.
+                                telemetry.accept_errors.fetch_add(1, Ordering::Relaxed);
+                                let delay = Duration::from_millis(
+                                    5u64.saturating_mul(1 << consecutive_errs.min(6)),
+                                );
+                                consecutive_errs = consecutive_errs.saturating_add(1);
+                                std::thread::sleep(delay.min(Duration::from_millis(250)));
+                            }
+                            Err(e) => {
+                                // Fatal: the listening socket itself is
+                                // gone; existing connections keep
+                                // draining through their own threads.
+                                telemetry.accept_errors.fetch_add(1, Ordering::Relaxed);
+                                eprintln!("[server] accept loop stopping: {e}");
+                                break;
+                            }
                         }
-                    })
-                    .expect("spawn accept"),
-            );
+                    }
+                    for h in conn_handles {
+                        let _ = h.join();
+                    }
+                });
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Same rollback as a failed worker spawn: the workers
+                    // are already serving queues, so stop and join them
+                    // before reporting the failure.
+                    router.signal_stop(&stop);
+                    for h in handles.drain(..) {
+                        let _ = h.join();
+                    }
+                    return Err(anyhow!("spawn accept loop: {e}"));
+                }
+            }
         }
 
         Ok(Server { addr, stop, router, handles })
@@ -832,7 +877,7 @@ fn overloaded_json(retry_after_ms: u64, depth: usize) -> Json {
 /// clamped to [25 ms, 5 s]. Before any latency sample exists, 50 ms per
 /// queued job.
 fn retry_after_hint(telemetry: &Telemetry, depth: usize, devices: usize) -> u64 {
-    let lat = telemetry.latencies_s.lock().unwrap().samples().to_vec();
+    let lat = telemetry.latencies_s.lock().samples().to_vec();
     let est_ms = if lat.is_empty() {
         50.0 * depth.max(1) as f64
     } else {
@@ -917,13 +962,22 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
             .to_string();
         let resp = match op.as_str() {
             "ping" => Json::obj(vec![("status", Json::str("ok")), ("pong", Json::Bool(true))]),
+            // Test-only, env-gated: panic mid-handler *while holding* the
+            // latency reservoir. Exists so the test suite can prove a
+            // panicking handler leaves telemetry poison-tolerant — the
+            // `stats` op must keep serving afterwards. Unknown op in
+            // production (the env var is never set there).
+            "__panic" if std::env::var("FORESIGHT_TEST_PANIC_OP").is_ok() => {
+                let _guard = telemetry.latencies_s.lock();
+                panic!("deliberate test panic (__panic op)");
+            }
             "stats" => {
                 let (lat, lat_seen) = {
-                    let r = telemetry.latencies_s.lock().unwrap();
+                    let r = telemetry.latencies_s.lock();
                     (r.samples().to_vec(), r.seen())
                 };
-                let qs = telemetry.queue_s.lock().unwrap().samples().to_vec();
-                let occ = telemetry.occupancy.lock().unwrap().samples().to_vec();
+                let qs = telemetry.queue_s.lock().samples().to_vec();
+                let occ = telemetry.occupancy.lock().samples().to_vec();
                 let occ_max = telemetry.occupancy_peak.load(Ordering::Relaxed) as f64;
                 let depths = ctx.router.queue_depths();
                 let mut fields = vec![
@@ -1001,7 +1055,7 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                         .iter()
                         .enumerate()
                         .map(|(d, t)| {
-                            let occ = t.occupancy.lock().unwrap().samples().to_vec();
+                            let occ = t.occupancy.lock().samples().to_vec();
                             let x = &xfer[d];
                             Json::obj(vec![
                                 ("device", Json::num(d as f64)),

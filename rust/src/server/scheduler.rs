@@ -112,11 +112,12 @@ use anyhow::{anyhow, Result};
 use std::cmp::Reverse;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use crate::engine::{session, Session};
 use crate::policy::build_policy;
+use crate::util::sync::{OrderedMutex, RANK_ROUTER_STATE};
 
 use super::{
     cohort_key, deadline_err_json, err_json, generate_response, parse_generate, EngineRegistry,
@@ -195,7 +196,11 @@ pub(super) struct Router {
     max_batch: usize,
     /// Per-device queue bound (`--max-queue`); 0 = unbounded.
     max_queue: usize,
-    state: Mutex<RouterState>,
+    /// Rank-10 `router.state` in the canonical lock order
+    /// (`util::sync`): every other lock in the stack ranks above it, so
+    /// replies, session steps and migrations all happen off this lock —
+    /// the `analysis::lint` io-under-lock pass enforces exactly that.
+    state: OrderedMutex<RouterState>,
     cv: Condvar,
 }
 
@@ -206,10 +211,14 @@ impl Router {
             devices,
             max_batch: max_batch.max(1),
             max_queue,
-            state: Mutex::new(RouterState {
-                queues: (0..devices).map(|_| VecDeque::new()).collect(),
-                devs: (0..devices).map(|_| DevState::default()).collect(),
-            }),
+            state: OrderedMutex::new(
+                "router.state",
+                RANK_ROUTER_STATE,
+                RouterState {
+                    queues: (0..devices).map(|_| VecDeque::new()).collect(),
+                    devs: (0..devices).map(|_| DevState::default()).collect(),
+                },
+            ),
             cv: Condvar::new(),
         }
     }
@@ -223,7 +232,7 @@ impl Router {
     /// **minimum**: with job steals live, a single empty queue means the
     /// next arrival need not wait, whatever the others hold.
     pub(super) fn queue_depths(&self) -> Vec<usize> {
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock();
         st.queues.iter().map(|q| q.len()).collect()
     }
 
@@ -236,7 +245,7 @@ impl Router {
     /// after observing `stop` under the same lock *with their queue
     /// empty*, so a `Queued` job is guaranteed to be answered.
     pub(super) fn enqueue(&self, job: Job, stop: &AtomicBool) -> EnqueueOutcome {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         if stop.load(Ordering::SeqCst) {
             return EnqueueOutcome::Stopping;
         }
@@ -267,7 +276,7 @@ impl Router {
     /// would hang). Shared by `Server::shutdown`/drop and the wire-level
     /// `shutdown` op so the protocol exists once.
     pub(super) fn signal_stop(&self, stop: &AtomicBool) {
-        let _guard = self.state.lock().unwrap();
+        let _guard = self.state.lock();
         stop.store(true, Ordering::SeqCst);
         self.cv.notify_all();
     }
@@ -316,7 +325,7 @@ enum Work {
 /// worker that parked while no device had lanes to spare re-evaluates and
 /// raises `wants_work`, so session migration stays live without polling.
 fn publish(ctx: &WorkerCtx, lanes: usize, key: Option<&(String, String)>) {
-    let mut st = ctx.router.state.lock().unwrap();
+    let mut st = ctx.router.state.lock();
     let grew = lanes > st.devs[ctx.device].lanes;
     st.devs[ctx.device].lanes = lanes;
     st.devs[ctx.device].cohort = key.cloned();
@@ -378,15 +387,11 @@ pub(super) fn run_worker(ctx: &WorkerCtx) {
             match report {
                 Ok(rep) => {
                     let dt = &ctx.telemetry.per_device[ctx.device];
-                    ctx.telemetry
-                        .occupancy
-                        .lock()
-                        .unwrap()
-                        .push(rep.occupancy as f64);
+                    ctx.telemetry.occupancy.lock().push(rep.occupancy as f64);
                     ctx.telemetry
                         .occupancy_peak
                         .fetch_max(rep.occupancy as u64, Ordering::Relaxed);
-                    dt.occupancy.lock().unwrap().push(rep.occupancy as f64);
+                    dt.occupancy.lock().push(rep.occupancy as f64);
                     dt.occupancy_peak
                         .fetch_max(rep.occupancy as u64, Ordering::Relaxed);
                     // A fresh cohort's very first stack build is not a
@@ -440,7 +445,7 @@ pub(super) fn run_worker(ctx: &WorkerCtx) {
 fn acquire_work(ctx: &WorkerCtx) -> Option<Work> {
     let me = ctx.device;
     let n = ctx.router.devices();
-    let mut st = ctx.router.state.lock().unwrap();
+    let mut st = ctx.router.state.lock();
     loop {
         // 1. own queue
         if let Some(job) = st.queues[me].pop_front() {
@@ -492,8 +497,7 @@ fn acquire_work(ctx: &WorkerCtx) -> Option<Work> {
                         })
                 })
                 .max_by_key(|&d| (st.devs[d].lanes + st.queues[d].len(), Reverse(d)));
-            if let Some(v) = victim {
-                let job = st.queues[v].pop_front().expect("nonempty queue");
+            if let Some(job) = victim.and_then(|v| st.queues[v].pop_front()) {
                 st.devs[me].wants_work = false;
                 return Some(Work::Job(job));
             }
@@ -501,7 +505,7 @@ fn acquire_work(ctx: &WorkerCtx) -> Option<Work> {
             //    some other device holds enough lanes to spare one.
             st.devs[me].wants_work = (0..n).any(|d| d != me && st.devs[d].lanes >= 2);
         }
-        st = ctx.router.cv.wait(st).unwrap();
+        st = st.wait(&ctx.router.cv);
     }
 }
 
@@ -519,15 +523,17 @@ fn start_cohort(ctx: &WorkerCtx, first: Job) -> (Vec<Lane>, Option<(String, Stri
         // queue_s (as the retired gather window did), never in wall_s.
         if ctx.cfg.max_batch > 1 && !ctx.cfg.admit_window.is_zero() {
             let deadline = Instant::now() + ctx.cfg.admit_window;
-            let mut st = ctx.router.state.lock().unwrap();
+            let mut st = ctx.router.state.lock();
             loop {
                 let q = &mut st.queues[ctx.device];
                 let mut i = 0;
                 while i < q.len() && jobs.len() < ctx.cfg.max_batch {
-                    if cohort_key(&q[i].payload).as_ref() == Some(key) {
-                        jobs.push(q.remove(i).expect("index in bounds"));
-                    } else {
+                    if cohort_key(&q[i].payload).as_ref() != Some(key) {
                         i += 1;
+                    } else if let Some(job) = q.remove(i) {
+                        jobs.push(job);
+                    } else {
+                        break; // i < q.len() makes this unreachable
                     }
                 }
                 if jobs.len() >= ctx.cfg.max_batch || ctx.stop.load(Ordering::SeqCst) {
@@ -537,7 +543,7 @@ fn start_cohort(ctx: &WorkerCtx, first: Job) -> (Vec<Lane>, Option<(String, Stri
                 if now >= deadline {
                     break;
                 }
-                let (guard, _timed_out) = ctx.router.cv.wait_timeout(st, deadline - now).unwrap();
+                let (guard, _timed_out) = st.wait_timeout(&ctx.router.cv, deadline - now);
                 st = guard;
             }
         }
@@ -570,14 +576,18 @@ fn boundary_intake(
     if room == 0 {
         return (jobs, migrated);
     }
-    let mut st = ctx.router.state.lock().unwrap();
+    let mut st = ctx.router.state.lock();
     while jobs.len() < room {
-        match st.queues[me].front() {
-            Some(job) if cohort_key(&job.payload).as_ref() == Some(key) => {
-                jobs.push(st.queues[me].pop_front().expect("front checked"));
-            }
-            _ => break,
+        let front_matches = st.queues[me]
+            .front()
+            .is_some_and(|j| cohort_key(&j.payload).as_ref() == Some(key));
+        if !front_matches {
+            break;
         }
+        let Some(job) = st.queues[me].pop_front() else {
+            break;
+        };
+        jobs.push(job);
     }
     if !st.devs[me].incoming.is_empty() {
         let all = std::mem::take(&mut st.devs[me].incoming);
@@ -602,8 +612,8 @@ fn boundary_intake(
                             .is_some_and(|j| cohort_key(&j.payload).as_ref() == Some(key))
                 })
                 .max_by_key(|&d| (st.devs[d].lanes + st.queues[d].len(), Reverse(d)));
-            match victim {
-                Some(v) => jobs.push(st.queues[v].pop_front().expect("front checked")),
+            match victim.and_then(|v| st.queues[v].pop_front()) {
+                Some(job) => jobs.push(job),
                 None => break,
             }
         }
@@ -626,7 +636,7 @@ fn maybe_give_lane(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
         return;
     }
     let thief = {
-        let mut st = ctx.router.state.lock().unwrap();
+        let mut st = ctx.router.state.lock();
         let my_load = lanes.len() + st.queues[me].len();
         let busier = (0..n).any(|d| d != me && st.devs[d].lanes + st.queues[d].len() > my_load);
         if busier {
@@ -642,7 +652,9 @@ fn maybe_give_lane(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
     };
     // Any lane is correct to move; take the newest (its remaining
     // schedule is typically the longest, amortizing the transfer).
-    let mut lane = lanes.pop().expect("len >= 2");
+    let Some(mut lane) = lanes.pop() else {
+        return;
+    };
     let moved = ctx
         .registry
         .get_on(&lane.params.model, &lane.params.bucket, thief)
@@ -652,7 +664,7 @@ fn maybe_give_lane(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
             ctx.telemetry.per_device[me]
                 .lanes_active
                 .fetch_sub(1, Ordering::Relaxed);
-            let mut st = ctx.router.state.lock().unwrap();
+            let mut st = ctx.router.state.lock();
             st.devs[me].lanes = st.devs[me].lanes.saturating_sub(1);
             if ctx.stop.load(Ordering::SeqCst) {
                 // The thief may already have drained its deposit slot and
@@ -684,7 +696,7 @@ fn maybe_give_lane(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
                     .fetch_sub(1, Ordering::Relaxed);
                 lane.session.abandon();
                 let _ = lane.job.reply.send(err_json(&format!("{e:#}")));
-                let mut st = ctx.router.state.lock().unwrap();
+                let mut st = ctx.router.state.lock();
                 st.devs[me].lanes = st.devs[me].lanes.saturating_sub(1);
                 ctx.router.cv.notify_all();
             } else {
@@ -694,7 +706,7 @@ fn maybe_give_lane(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
                 // broadcast lets the parked thief re-evaluate other
                 // victims.
                 lanes.push(lane);
-                let _guard = ctx.router.state.lock().unwrap();
+                let _guard = ctx.router.state.lock();
                 ctx.router.cv.notify_all();
             }
         }
@@ -740,7 +752,7 @@ fn sweep_dead_lanes(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
 fn sweep_expired_queue(ctx: &WorkerCtx) {
     let mut expired = Vec::new();
     {
-        let mut st = ctx.router.state.lock().unwrap();
+        let mut st = ctx.router.state.lock();
         let q = &mut st.queues[ctx.device];
         if q.is_empty() {
             return;
@@ -748,10 +760,12 @@ fn sweep_expired_queue(ctx: &WorkerCtx) {
         let now = Instant::now();
         let mut i = 0;
         while i < q.len() {
-            if q[i].deadline.is_some_and(|d| d <= now) {
-                expired.push(q.remove(i).expect("index in bounds"));
-            } else {
+            if !q[i].deadline.is_some_and(|d| d <= now) {
                 i += 1;
+            } else if let Some(job) = q.remove(i) {
+                expired.push(job);
+            } else {
+                break; // i < q.len() makes this unreachable
             }
         }
     }
@@ -847,8 +861,8 @@ fn retire(ctx: &WorkerCtx, lane: Lane) {
             if peak >= 2 {
                 ctx.telemetry.batched_requests.fetch_add(1, Ordering::Relaxed);
             }
-            ctx.telemetry.latencies_s.lock().unwrap().push(r.stats.wall_s);
-            ctx.telemetry.queue_s.lock().unwrap().push(lane.queue_s);
+            ctx.telemetry.latencies_s.lock().push(r.stats.wall_s);
+            ctx.telemetry.queue_s.lock().push(lane.queue_s);
             let _ = lane.job.reply.send(resp);
         }
         Err(e) => {

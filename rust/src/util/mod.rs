@@ -11,6 +11,7 @@
 //! | [`benchkit`] | criterion |
 //! | [`proptest`] | proptest |
 //! | [`loadgen`] | locust/vegeta-style open-loop load generation |
+//! | [`sync`] | parking_lot-style ranked/poison-tolerant mutexes |
 
 pub mod benchkit;
 pub mod cli;
@@ -20,4 +21,5 @@ pub mod npy;
 pub mod prng;
 pub mod proptest;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;

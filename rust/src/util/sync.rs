@@ -1,0 +1,342 @@
+//! Ranked, poison-tolerant mutexes — the runtime half of the lock-order
+//! discipline that `analysis::lint` checks statically.
+//!
+//! Every long-lived mutex in the serving stack is an [`OrderedMutex`]
+//! carrying a name and a rank from the canonical order below. In debug
+//! builds a thread-local checker panics the moment any thread acquires a
+//! lock whose rank is not strictly greater than the highest rank it
+//! already holds — turning a potential deadlock (which would hang CI) into
+//! an immediate, attributed failure at the exact acquisition site. Release
+//! builds compile the checker away; the wrapper then costs nothing beyond
+//! the poison-tolerant `lock()`.
+//!
+//! # Canonical lock order
+//!
+//! Locks must be acquired in strictly increasing rank. The static
+//! `analysis::lint` lock-order pass enforces the same table by field name.
+//!
+//! | rank | const                       | lock                                   |
+//! |------|-----------------------------|----------------------------------------|
+//! | 10   | [`RANK_ROUTER_STATE`]       | `server::scheduler::Router::state`     |
+//! | 20   | [`RANK_POOL_QUEUE`]         | `util::threadpool` job receiver        |
+//! | 30   | [`RANK_POOL_IN_FLIGHT`]     | `util::threadpool` in-flight counter   |
+//! | 40   | [`RANK_RUNTIME_EXEC_CACHE`] | `runtime::Runtime::cache`              |
+//! | 41   | [`RANK_RUNTIME_FUSED_CACHE`]| `runtime::Runtime::fused`              |
+//! | 50   | [`RANK_TELEMETRY_LATENCY`]  | `server::Telemetry::latencies_s`       |
+//! | 51   | [`RANK_TELEMETRY_QUEUE`]    | `server::Telemetry::queue_s`           |
+//! | 52   | [`RANK_TELEMETRY_OCCUPANCY`]| `server::Telemetry::occupancy`         |
+//! | 53   | [`RANK_DEVICE_OCCUPANCY`]   | `server::DeviceTelemetry::occupancy`   |
+//! | 60   | [`RANK_POOL_SLOTS`]         | `util::threadpool::run_all` slots      |
+//!
+//! Gaps are deliberate: a new lock slots in without renumbering. When you
+//! add one, give it a rank consistent with every existing nesting, add a
+//! row here, and teach `analysis::lint::locks` its field name.
+//!
+//! # Poison policy
+//!
+//! A panicking thread must not take telemetry (or any other shared state)
+//! down with it: `lock()`, the condvar waits and `into_inner()` all
+//! recover the value from a poisoned mutex via `PoisonError::into_inner`.
+//! Counters and reservoirs are monotonic aggregates, so the worst case is
+//! one lost update from the thread that died — never a wedged `stats` op.
+//!
+//! # Condvar protocol
+//!
+//! `std::sync::Condvar` needs the raw `MutexGuard`, so [`OrderedGuard`]
+//! exposes [`OrderedGuard::wait`] / [`OrderedGuard::wait_timeout`]: the
+//! inner guard is lent to the condvar and re-wrapped on wake. The rank
+//! stays registered across the wait — the blocked thread still conceptually
+//! holds its slot in the order, and it re-acquires the same mutex before
+//! continuing.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// `server::scheduler::Router::state` — queues + device table.
+pub const RANK_ROUTER_STATE: u32 = 10;
+/// `util::threadpool` shared job receiver.
+pub const RANK_POOL_QUEUE: u32 = 20;
+/// `util::threadpool` in-flight job counter (condvar-paired).
+pub const RANK_POOL_IN_FLIGHT: u32 = 30;
+/// `runtime::Runtime::cache` — HLO-path → executable.
+pub const RANK_RUNTIME_EXEC_CACHE: u32 = 40;
+/// `runtime::Runtime::fused` — (builder key, shape) → executable.
+pub const RANK_RUNTIME_FUSED_CACHE: u32 = 41;
+/// `server::Telemetry::latencies_s` reservoir.
+pub const RANK_TELEMETRY_LATENCY: u32 = 50;
+/// `server::Telemetry::queue_s` reservoir.
+pub const RANK_TELEMETRY_QUEUE: u32 = 51;
+/// `server::Telemetry::occupancy` reservoir.
+pub const RANK_TELEMETRY_OCCUPANCY: u32 = 52;
+/// `server::DeviceTelemetry::occupancy` reservoirs (one per device).
+pub const RANK_DEVICE_OCCUPANCY: u32 = 53;
+/// `util::threadpool::run_all` result slots.
+pub const RANK_POOL_SLOTS: u32 = 60;
+
+/// A named, ranked, poison-tolerant mutex. See the module docs for the
+/// canonical rank table and the debug-build acquisition checker.
+pub struct OrderedMutex<T> {
+    name: &'static str,
+    rank: u32,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    pub const fn new(name: &'static str, rank: u32, value: T) -> Self {
+        Self { name, rank, inner: Mutex::new(value) }
+    }
+
+    /// Acquire the lock, recovering from poison. In debug builds, panics
+    /// if this thread already holds a lock of equal or higher rank.
+    pub fn lock(&self) -> OrderedGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        checker::acquire(self.rank, self.name);
+        let guard = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        OrderedGuard { lock: self, guard: Some(guard) }
+    }
+
+    /// Consume the mutex, recovering the value even if poisoned.
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OrderedMutex")
+            .field("name", &self.name)
+            .field("rank", &self.rank)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+/// Guard for an [`OrderedMutex`]. Dropping it releases the mutex and
+/// unregisters the rank from the thread's held-lock stack.
+///
+/// The inner guard lives in an `Option` solely so the condvar waits can
+/// lend it to `std::sync::Condvar` and re-wrap the returned guard; it is
+/// `Some` at every point user code can observe.
+pub struct OrderedGuard<'a, T> {
+    lock: &'a OrderedMutex<T>,
+    guard: Option<MutexGuard<'a, T>>,
+}
+
+impl<'a, T> OrderedGuard<'a, T> {
+    /// Block on `cv` until notified, releasing and re-acquiring the mutex
+    /// like `Condvar::wait`. Poison during the wait is recovered; the rank
+    /// stays registered (the thread re-holds the same lock on wake).
+    pub fn wait(mut self, cv: &Condvar) -> OrderedGuard<'a, T> {
+        if let Some(inner) = self.guard.take() {
+            let inner = cv.wait(inner).unwrap_or_else(PoisonError::into_inner);
+            self.guard = Some(inner);
+        }
+        self
+    }
+
+    /// Like [`OrderedGuard::wait`] with a timeout; the `bool` is true when
+    /// the wait timed out rather than being notified.
+    pub fn wait_timeout(mut self, cv: &Condvar, dur: Duration) -> (OrderedGuard<'a, T>, bool) {
+        let mut timed_out = false;
+        if let Some(inner) = self.guard.take() {
+            let (inner, res) =
+                cv.wait_timeout(inner, dur).unwrap_or_else(PoisonError::into_inner);
+            timed_out = res.timed_out();
+            self.guard = Some(inner);
+        }
+        (self, timed_out)
+    }
+}
+
+impl<T> Deref for OrderedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match self.guard.as_deref() {
+            Some(v) => v,
+            None => unreachable!("guard lent to a condvar outside wait()"),
+        }
+    }
+}
+
+impl<T> DerefMut for OrderedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match self.guard.as_deref_mut() {
+            Some(v) => v,
+            None => unreachable!("guard lent to a condvar outside wait()"),
+        }
+    }
+}
+
+impl<T> Drop for OrderedGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        checker::release(self.lock.rank);
+        #[cfg(not(debug_assertions))]
+        let _ = self.lock;
+    }
+}
+
+/// Debug-build acquisition checker: a thread-local stack of held ranks.
+/// Pushes are strictly increasing, so the stack stays sorted and its last
+/// element is the highest rank this thread holds; releases may happen in
+/// any order (guards are droppable out of LIFO), so release removes the
+/// topmost entry with the matching rank.
+#[cfg(debug_assertions)]
+mod checker {
+    use std::cell::RefCell;
+
+    thread_local! {
+        static HELD: RefCell<Vec<(u32, &'static str)>> = const { RefCell::new(Vec::new()) };
+    }
+
+    pub fn acquire(rank: u32, name: &'static str) {
+        HELD.with(|held| {
+            let mut held = held.borrow_mut();
+            if let Some(&(top_rank, top_name)) = held.last() {
+                if rank <= top_rank {
+                    panic!(
+                        "lock-order violation: acquiring `{name}` (rank {rank}) while \
+                         holding `{top_name}` (rank {top_rank}); ranks must strictly \
+                         increase — see util::sync rank table"
+                    );
+                }
+            }
+            held.push((rank, name));
+        });
+    }
+
+    pub fn release(rank: u32) {
+        HELD.with(|held| {
+            let mut held = held.borrow_mut();
+            if let Some(i) = held.iter().rposition(|&(r, _)| r == rank) {
+                held.remove(i);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn ascending_acquisition_is_clean() {
+        let low = OrderedMutex::new("test.low", 10, 1u32);
+        let high = OrderedMutex::new("test.high", 50, 2u32);
+        let a = low.lock();
+        let b = high.lock();
+        assert_eq!(*a + *b, 3);
+        drop(a); // non-LIFO release must be fine
+        assert_eq!(*b, 2);
+        drop(b);
+        // Re-acquiring after a full release starts a fresh ordering.
+        let b = high.lock();
+        drop(b);
+        let a = low.lock();
+        assert_eq!(*a, 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn reverse_rank_acquisition_trips_checker() {
+        let low = Arc::new(OrderedMutex::new("test.rev-low", 10, 0u32));
+        let high = Arc::new(OrderedMutex::new("test.rev-high", 50, 0u32));
+
+        // One thread takes the canonical order and is untouched; the other
+        // takes the reverse order and must panic at the second acquire —
+        // before it can deadlock anything.
+        let (l0, h0) = (Arc::clone(&low), Arc::clone(&high));
+        let ok = std::thread::spawn(move || {
+            let mut a = l0.lock();
+            *a += 1;
+            let _b = h0.lock();
+        });
+        let (l1, h1) = (Arc::clone(&low), Arc::clone(&high));
+        let bad = std::thread::spawn(move || {
+            let _b = h1.lock();
+            let _a = l1.lock(); // rank 10 while holding 50: boom
+        });
+
+        assert!(ok.join().is_ok());
+        let err = match bad.join() {
+            Err(e) => e,
+            Ok(()) => panic!("reverse-rank acquisition did not trip the checker"),
+        };
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("lock-order violation"), "unexpected panic: {msg}");
+
+        // The panicked thread poisoned `high`; lock() must recover.
+        assert_eq!(*high.lock(), 0);
+        assert_eq!(*low.lock(), 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn equal_rank_nesting_trips_checker() {
+        let a = Arc::new(OrderedMutex::new("test.eq-a", 50, ()));
+        let b = Arc::new(OrderedMutex::new("test.eq-b", 50, ()));
+        let (a0, b0) = (Arc::clone(&a), Arc::clone(&b));
+        let t = std::thread::spawn(move || {
+            let _g = a0.lock();
+            let _h = b0.lock();
+        });
+        assert!(t.join().is_err(), "equal-rank nesting must trip the checker");
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_value() {
+        let m = Arc::new(OrderedMutex::new("test.poison", 50, vec![1, 2, 3]));
+        let m2 = Arc::clone(&m);
+        let t = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            g.push(4);
+            panic!("die holding the lock");
+        });
+        assert!(t.join().is_err());
+        // The panicking thread's completed update survives; the lock serves.
+        assert_eq!(m.lock().len(), 4);
+        let m = match Arc::try_unwrap(m) {
+            Ok(m) => m,
+            Err(_) => return, // other handle leaked; nothing left to check
+        };
+        assert_eq!(m.into_inner(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn condvar_wait_roundtrip() {
+        let pair = Arc::new((OrderedMutex::new("test.cv", 30, 0usize), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut g = m.lock();
+            *g = 7;
+            cv.notify_all();
+            drop(g);
+        });
+        let (m, cv) = &*pair;
+        let mut g = m.lock();
+        while *g != 7 {
+            // A timeout just means the writer has not run yet; keep
+            // waiting — the join below bounds the test.
+            let (g2, _timed_out) = g.wait_timeout(cv, Duration::from_millis(200));
+            g = g2;
+        }
+        assert_eq!(*g, 7);
+        drop(g);
+        assert!(t.join().is_ok());
+    }
+}

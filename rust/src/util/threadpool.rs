@@ -1,13 +1,18 @@
 //! Fixed-size worker thread pool (tokio/rayon substitute).
 //!
-//! Used by the serving layer's worker pool and by benches that fan out
-//! independent generations. Jobs are boxed closures delivered over an mpsc
-//! channel guarded by a mutex (multi-consumer); `scope`-style joining is
-//! provided by [`ThreadPool::run_all`].
+//! Used by benches that fan out independent generations. Jobs are boxed
+//! closures delivered over an mpsc channel guarded by a mutex
+//! (multi-consumer); `scope`-style joining is provided by
+//! [`ThreadPool::run_all`]. All three internal locks are
+//! [`OrderedMutex`]es (ranks `POOL_QUEUE` < `POOL_IN_FLIGHT` <
+//! `POOL_SLOTS`), so the debug-build checker verifies the pool never
+//! nests them out of order even though no pair is ever meant to nest.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar};
 use std::thread::JoinHandle;
+
+use crate::util::sync::{OrderedMutex, RANK_POOL_IN_FLIGHT, RANK_POOL_QUEUE, RANK_POOL_SLOTS};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -15,7 +20,7 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
-    in_flight: Arc<(Mutex<usize>, Condvar)>,
+    in_flight: Arc<(OrderedMutex<usize>, Condvar)>,
     submitted: AtomicUsize,
 }
 
@@ -23,9 +28,12 @@ impl ThreadPool {
     /// Spawn `n` workers (n >= 1).
     pub fn new(n: usize) -> Self {
         assert!(n >= 1, "thread pool needs at least one worker");
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let (tx, queue) = mpsc::channel::<Job>();
+        let rx = Arc::new(OrderedMutex::new("pool.queue", RANK_POOL_QUEUE, queue));
+        let in_flight = Arc::new((
+            OrderedMutex::new("pool.in_flight", RANK_POOL_IN_FLIGHT, 0usize),
+            Condvar::new(),
+        ));
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let rx = Arc::clone(&rx);
@@ -35,15 +43,15 @@ impl ThreadPool {
                     .name(format!("foresight-worker-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().unwrap();
+                            let guard = rx.lock();
                             guard.recv()
                         };
                         match job {
                             Ok(job) => {
                                 job();
-                                let (lock, cv) = &*inf;
-                                let mut cnt = lock.lock().unwrap();
-                                *cnt -= 1;
+                                let (in_flight, cv) = &*inf;
+                                let mut cnt = in_flight.lock();
+                                *cnt = cnt.saturating_sub(1);
                                 cv.notify_all();
                             }
                             Err(_) => return, // channel closed: shut down
@@ -58,8 +66,8 @@ impl ThreadPool {
     /// Submit a job; returns immediately.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         {
-            let (lock, _) = &*self.in_flight;
-            *lock.lock().unwrap() += 1;
+            let (in_flight, _) = &*self.in_flight;
+            *in_flight.lock() += 1;
         }
         self.submitted.fetch_add(1, Ordering::Relaxed);
         self.tx
@@ -71,10 +79,10 @@ impl ThreadPool {
 
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
-        let (lock, cv) = &*self.in_flight;
-        let mut cnt = lock.lock().unwrap();
+        let (in_flight, cv) = &*self.in_flight;
+        let mut cnt = in_flight.lock();
         while *cnt > 0 {
-            cnt = cv.wait(cnt).unwrap();
+            cnt = cnt.wait(cv);
         }
     }
 
@@ -90,20 +98,22 @@ impl ThreadPool {
         F: FnOnce() -> T + Send + 'static,
     {
         let n = jobs.len();
-        let slots: Arc<Mutex<Vec<Option<T>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let slots: Arc<OrderedMutex<Vec<Option<T>>>> = Arc::new(OrderedMutex::new(
+            "pool.slots",
+            RANK_POOL_SLOTS,
+            (0..n).map(|_| None).collect(),
+        ));
         for (i, job) in jobs.into_iter().enumerate() {
             let slots = Arc::clone(&slots);
             self.submit(move || {
                 let r = job();
-                slots.lock().unwrap()[i] = Some(r);
+                slots.lock()[i] = Some(r);
             });
         }
         self.wait_idle();
         Arc::try_unwrap(slots)
             .unwrap_or_else(|_| panic!("slots still shared"))
             .into_inner()
-            .unwrap()
             .into_iter()
             .map(|o| o.expect("job did not run"))
             .collect()

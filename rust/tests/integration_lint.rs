@@ -1,0 +1,51 @@
+//! Self-lint: `foresight lint` run over this crate's own tree must come
+//! back clean. This is the same gate as the CI lint leg, wired into
+//! `cargo test` so a violation (or a stale allowlist row) fails the suite
+//! even where CI cannot build (no artifacts needed).
+
+use std::path::Path;
+
+use foresight::analysis::lint::{collect_sources, run_all, Allowlist};
+
+fn crate_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn tree_has_no_blocking_findings() {
+    let files = collect_sources(&crate_root().join("src")).expect("collect rust/src");
+    let allow = Allowlist::load(&crate_root().join("lint.allow")).expect("parse lint.allow");
+    let blocking: Vec<String> = run_all(&files)
+        .into_iter()
+        .filter(|f| allow.permits(f).is_none())
+        .map(|f| f.to_string())
+        .collect();
+    assert!(
+        blocking.is_empty(),
+        "non-allowlisted lint findings (fix them or add a justified rust/lint.allow row):\n{}",
+        blocking.join("\n")
+    );
+}
+
+#[test]
+fn allowlist_has_no_stale_rows() {
+    // The CLI only warns about rows that stopped matching; the test suite
+    // makes staleness a hard failure so exemptions cannot outlive the
+    // code they excused.
+    let files = collect_sources(&crate_root().join("src")).expect("collect rust/src");
+    let allow = Allowlist::load(&crate_root().join("lint.allow")).expect("parse lint.allow");
+    let mut used = vec![false; allow.entries.len()];
+    for f in run_all(&files) {
+        if let Some(i) = allow.permits(&f) {
+            used[i] = true;
+        }
+    }
+    let stale: Vec<String> = allow
+        .entries
+        .iter()
+        .zip(&used)
+        .filter(|(_, u)| !**u)
+        .map(|(e, _)| format!("lint.allow:{}: {}|{}|{}", e.line, e.pass, e.file_suffix, e.pattern))
+        .collect();
+    assert!(stale.is_empty(), "allowlist rows match nothing — remove them:\n{}", stale.join("\n"));
+}

@@ -1264,3 +1264,28 @@ fn deterministic_across_connections() {
     assert_eq!(run(), run(), "same request must make identical decisions");
     server.shutdown();
 }
+
+#[test]
+fn poisoned_telemetry_keeps_stats_serving() {
+    // A handler that panics while holding the latency reservoir poisons
+    // the inner mutex; `OrderedMutex` is poison-tolerant, so the `stats`
+    // op must keep serving afterwards instead of cascading the panic.
+    // The `__panic` op only exists when this env var is set (see
+    // server::handle_line).
+    std::env::set_var("FORESIGHT_TEST_PANIC_OP", "1");
+    let Some(server) = start_server(1) else { return };
+    let addr = server.addr();
+
+    let mut c = Client::connect(&addr).unwrap();
+    let r = c.call(&Json::obj(vec![("op", Json::str("__panic"))]));
+    assert!(r.is_err(), "the panicking handler should drop the connection, got {r:?}");
+
+    // A fresh connection still gets real answers out of the poisoned
+    // reservoir's server.
+    let mut c = Client::connect(&addr).unwrap();
+    assert!(c.ping().unwrap());
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("status").unwrap().as_str().unwrap(), "ok", "{stats}");
+    assert_eq!(stats.get("latency_samples").unwrap().as_usize().unwrap(), 0);
+    server.shutdown();
+}
