@@ -1,11 +1,17 @@
-//! `ledger-drift` pass: the telemetry ledger's three-legged contract.
+//! `ledger-drift` pass: the telemetry ledger's four-legged contract.
 //!
 //! Every counter field in `server::Telemetry` / `server::DeviceTelemetry`
 //! must have (1) an increment site somewhere under `server/`, (2) a
 //! serialization site in the `stats` op (its wire key appears as a string
 //! literal in `server/mod.rs`), and (3) a `///` doc comment on the field.
-//! A counter missing any leg is drift: it either reads zero forever, is
-//! invisible on the wire, or nobody knows what it means.
+//! Aggregate (`Telemetry`) fields additionally need (4) a Prometheus
+//! scrape row: one of their wire keys must appear in the `PROM_METRICS`
+//! table that drives the `metrics` op, so a future counter cannot ship
+//! without a scrape line. (Per-device fields are exempt — the renderer
+//! derives `foresight_device_*` families generically from the
+//! `per_device` objects, so they cannot drift.) A counter missing any
+//! leg is drift: it either reads zero forever, is invisible on the wire,
+//! or nobody knows what it means.
 //!
 //! Field kinds are classified by type: `Atomic*` fields are counters
 //! (increment = `fetch_add`/`fetch_max`/`fetch_sub` near a `.field`
@@ -112,7 +118,76 @@ pub fn check(files: &[SourceFile]) -> Vec<Finding> {
             });
         }
     }
+
+    // Leg 4: Prometheus coverage. Only aggregate (`Telemetry`) fields
+    // need a PROM_METRICS row — the per-device families render
+    // generically from the `per_device` objects.
+    let mut tel_fields = Vec::new();
+    parse_counters(&main.text, "Telemetry", &mut tel_fields);
+    match parse_prom_keys(&main.text) {
+        Some(prom) => {
+            for f in &tel_fields {
+                if !wire_names(&f.name).iter().any(|w| prom.contains(w)) {
+                    out.push(Finding {
+                        pass: PASS,
+                        file: main.path.clone(),
+                        line: f.line,
+                        what: f.name.clone(),
+                        detail: format!(
+                            "counter `{}` has no Prometheus scrape row (expected one of {:?} \
+                             as a PROM_METRICS key in server/mod.rs)",
+                            f.name,
+                            wire_names(&f.name)
+                        ),
+                    });
+                }
+            }
+        }
+        None => {
+            if !tel_fields.is_empty() {
+                out.push(Finding {
+                    pass: PASS,
+                    file: main.path.clone(),
+                    line: 0,
+                    what: "PROM_METRICS".to_string(),
+                    detail: "no PROM_METRICS table in server/mod.rs — the metrics op \
+                             cannot scrape the ledger"
+                        .to_string(),
+                });
+            }
+        }
+    }
     out
+}
+
+/// Extract the metric keys from the `PROM_METRICS` table literal in
+/// `server/mod.rs`: the first string of every `("key", "help")` tuple up
+/// to the closing `];`. Anchors on the `const` declaration (doc comments
+/// mention the name earlier). `None` when the table is absent entirely.
+fn parse_prom_keys(text: &str) -> Option<Vec<String>> {
+    let start = text.find("const PROM_METRICS")?;
+    let rest = &text[start..];
+    let body: Vec<char> = rest[..rest.find("];")?].chars().collect();
+    let mut keys = Vec::new();
+    let mut i = 0;
+    while i < body.len() {
+        if body[i] == '(' {
+            let mut j = i + 1;
+            while j < body.len() && body[j].is_whitespace() {
+                j += 1;
+            }
+            if j < body.len() && body[j] == '"' {
+                let mut e = j + 1;
+                while e < body.len() && body[e] != '"' {
+                    e += 1;
+                }
+                keys.push(body[j + 1..e].iter().collect());
+                i = e;
+            }
+        }
+        i += 1;
+    }
+    Some(keys)
 }
 
 fn finding(main: &SourceFile, f: &Field, leg: &str, markers: &[&str]) -> Finding {
@@ -215,15 +290,23 @@ mod tests {
 struct Telemetry {
     /// Requests served.
     requests: AtomicU64,
+    /// Events ring-buffered by the tracer (mirrored by fetch_max).
+    trace_events: AtomicU64,
     /// Per-request wall latency.
     latencies_s: Mutex<Reservoir>,
     per_device: Vec<DeviceTelemetry>,
 }
 fn serve(t: &Telemetry) {
     t.requests.fetch_add(1, Ordering::Relaxed);
+    t.trace_events.fetch_max(7, Ordering::Relaxed);
     t.latencies_s.lock().push(0.5);
-    let resp = vec![("requests", 1.0), ("latency_mean_s", 2.0)];
+    let resp = vec![("requests", 1.0), ("trace_events", 7.0), ("latency_mean_s", 2.0)];
 }
+const PROM_METRICS: &[(&str, &str)] = &[
+    ("requests", "Requests served"),
+    ("trace_events", "Tracer events"),
+    ("latency_mean_s", "Mean latency"),
+];
 "#;
 
     #[test]
@@ -242,6 +325,7 @@ struct Telemetry {
 fn serve() {
     let resp = vec![("orphans", 0.0)];
 }
+const PROM_METRICS: &[(&str, &str)] = &[("orphans", "never bumped")];
 "#;
         let fs = check(&[SourceFile::new("server/mod.rs", src)]);
         assert_eq!(fs.len(), 1, "{fs:?}");
@@ -258,12 +342,14 @@ struct Telemetry {
 fn serve(t: &Telemetry) {
     t.ghosts.fetch_add(1, Ordering::Relaxed);
 }
+const PROM_METRICS: &[(&str, &str)] = &[("unrelated", "x")];
 "#;
         let fs = check(&[SourceFile::new("server/mod.rs", src)]);
         let details: Vec<&str> = fs.iter().map(|f| f.detail.as_str()).collect();
-        assert_eq!(fs.len(), 2, "{fs:?}");
+        assert_eq!(fs.len(), 3, "{fs:?}");
         assert!(details.iter().any(|d| d.contains("never serialized")));
         assert!(details.iter().any(|d| d.contains("no /// doc comment")));
+        assert!(details.iter().any(|d| d.contains("no Prometheus scrape row")));
     }
 
     #[test]
@@ -276,6 +362,7 @@ struct Telemetry {
 fn serve() {
     let resp = vec![("steals", 0.0)];
 }
+const PROM_METRICS: &[(&str, &str)] = &[("steals", "Work stolen")];
 "#;
         let sched = "fn steal(t: &Telemetry) { t.steals.fetch_add(1, Ordering::Relaxed); }";
         let fs = check(&[
@@ -296,9 +383,88 @@ fn serve(t: &Telemetry) {
     t.rejected_total.fetch_add(1, Ordering::Relaxed);
     let resp = vec![("reject", 0.0)];
 }
+const PROM_METRICS: &[(&str, &str)] = &[("reject", "Never bumped")];
 "#;
         let fs = check(&[SourceFile::new("server/mod.rs", src)]);
         assert_eq!(fs.len(), 1, "{fs:?}");
         assert!(fs[0].detail.contains("no increment site"));
+    }
+
+    #[test]
+    fn flags_counter_missing_prom_row() {
+        // Healthy on the first three legs, but nothing scrapes it.
+        let src = r#"
+struct Telemetry {
+    /// Fully wired, never exported to Prometheus.
+    unscraped: AtomicU64,
+}
+fn serve(t: &Telemetry) {
+    t.unscraped.fetch_add(1, Ordering::Relaxed);
+    let resp = vec![("unscraped", 0.0)];
+}
+const PROM_METRICS: &[(&str, &str)] = &[("unrelated", "x")];
+"#;
+        let fs = check(&[SourceFile::new("server/mod.rs", src)]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].what, "unscraped");
+        assert!(fs[0].detail.contains("no Prometheus scrape row"));
+    }
+
+    #[test]
+    fn missing_prom_table_is_drift() {
+        let src = r#"
+struct Telemetry {
+    /// Served, incremented, documented — but the metrics table is gone.
+    requests: AtomicU64,
+}
+fn serve(t: &Telemetry) {
+    t.requests.fetch_add(1, Ordering::Relaxed);
+    let resp = vec![("requests", 0.0)];
+}
+"#;
+        let fs = check(&[SourceFile::new("server/mod.rs", src)]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].what, "PROM_METRICS");
+        assert!(fs[0].detail.contains("no PROM_METRICS table"));
+    }
+
+    #[test]
+    fn device_only_fields_are_prom_exempt() {
+        // Per-device families render generically from the `per_device`
+        // objects, so a DeviceTelemetry-only counter needs no table row.
+        let src = r#"
+struct Telemetry {
+    /// Requests served.
+    requests: AtomicU64,
+}
+struct DeviceTelemetry {
+    /// Host-to-device bytes for this replica alone.
+    h2d_bytes: AtomicU64,
+}
+fn serve(t: &Telemetry, d: &DeviceTelemetry) {
+    t.requests.fetch_add(1, Ordering::Relaxed);
+    d.h2d_bytes.fetch_add(64, Ordering::Relaxed);
+    let resp = vec![("requests", 1.0), ("h2d_bytes", 64.0)];
+}
+const PROM_METRICS: &[(&str, &str)] = &[("requests", "Requests served")];
+"#;
+        let fs = check(&[SourceFile::new("server/mod.rs", src)]);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn prom_keys_parse_wrapped_rows() {
+        let src = r#"
+const PROM_METRICS: &[(&str, &str)] = &[
+    ("requests", "Requests served"),
+    (
+        "queue_depth",
+        "Jobs queued right now",
+    ),
+];
+"#;
+        let keys = parse_prom_keys(src).expect("table present");
+        assert_eq!(keys, vec!["requests".to_string(), "queue_depth".to_string()]);
+        assert_eq!(parse_prom_keys("no table here"), None);
     }
 }

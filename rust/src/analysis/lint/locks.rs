@@ -36,7 +36,7 @@ use super::{Finding, SourceFile};
 use crate::util::sync::{
     RANK_POOL_IN_FLIGHT, RANK_POOL_QUEUE, RANK_POOL_SLOTS, RANK_ROUTER_STATE,
     RANK_RUNTIME_EXEC_CACHE, RANK_RUNTIME_FUSED_CACHE, RANK_TELEMETRY_LATENCY,
-    RANK_TELEMETRY_OCCUPANCY, RANK_TELEMETRY_QUEUE,
+    RANK_TELEMETRY_OCCUPANCY, RANK_TELEMETRY_QUEUE, RANK_TRACE_RING,
 };
 
 const PASS_ORDER: &str = "lock-order";
@@ -58,6 +58,10 @@ pub fn classify(field: &str) -> Option<(u32, &'static str)> {
         // pass folds them (the runtime checker distinguishes by rank).
         "occupancy" => (RANK_TELEMETRY_OCCUPANCY, "telemetry.occupancy"),
         "slots" => (RANK_POOL_SLOTS, "pool.slots"),
+        // Tracer ring shards; hot-path emission uses `try_lock` (invisible
+        // to this scan by design — it cannot block), but the drain side
+        // takes the lock outright.
+        "ring" => (RANK_TRACE_RING, "trace.ring"),
         _ => return None,
     })
 }
@@ -75,7 +79,10 @@ const IO_MARKERS: [&str; 13] = [
 const IO_MACROS: [&str; 2] = ["write", "writeln"];
 
 fn in_scope(path: &str) -> bool {
-    path.contains("server/") || path.contains("runtime/") || path.ends_with("util/threadpool.rs")
+    path.contains("server/")
+        || path.contains("runtime/")
+        || path.contains("trace/")
+        || path.ends_with("util/threadpool.rs")
 }
 
 #[derive(Debug, Clone)]
@@ -503,5 +510,29 @@ mod tests {
     fn out_of_scope_files_are_ignored() {
         let src = "fn f(&self) { let a = self.state.lock(); let b = self.mystery.lock(); }";
         assert!(run("engine/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn trace_ring_is_classified_and_nests_above_everything() {
+        // trace/ is in scope and trace.ring (rank 70) may be taken under
+        // any serving lock — emission inside a router.state section is
+        // rank-legal.
+        let src = r#"
+            fn drain_under_state(&self) {
+                let st = self.state.lock();
+                let g = self.ring.lock();
+            }
+        "#;
+        assert!(run("trace/fixture.rs", src).is_empty());
+        // ...but the inverse order is an inversion like any other.
+        let src = r#"
+            fn inverted(&self) {
+                let g = self.ring.lock();
+                let st = self.state.lock();
+            }
+        "#;
+        let fs = run("trace/fixture.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].what.contains("router.state after trace.ring"));
     }
 }

@@ -1,9 +1,10 @@
 //! `panic-path` pass: no `unwrap`/`expect`/`panic!`/`unreachable!` (or
 //! `todo!`/`unimplemented!`) in non-test serving code.
 //!
-//! Scope: `server/`, `runtime/`, `util/threadpool.rs`, `util/sync.rs` —
-//! the code a panicking request handler can take down. A handler must
-//! degrade to an error response; shared state must stay poison-tolerant.
+//! Scope: `server/`, `runtime/`, `trace/`, `util/threadpool.rs`,
+//! `util/sync.rs` — the code a panicking request handler can take down. A
+//! handler must degrade to an error response; shared state must stay
+//! poison-tolerant.
 //! Deliberate exceptions (e.g. the lock-order checker itself, which
 //! panics by design) live in `rust/lint.allow` with justifications.
 
@@ -18,6 +19,7 @@ const MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
 fn in_scope(path: &str) -> bool {
     path.contains("server/")
         || path.contains("runtime/")
+        || path.contains("trace/")
         || path.ends_with("util/threadpool.rs")
         || path.ends_with("util/sync.rs")
 }
@@ -102,5 +104,12 @@ mod tests {
     fn out_of_scope_files_are_ignored() {
         assert!(run("util/json.rs", "fn f() { x.unwrap(); }").is_empty());
         assert!(run("engine/mod.rs", "fn f() { x.unwrap(); }").is_empty());
+    }
+
+    #[test]
+    fn trace_files_are_in_scope() {
+        let fs = run("trace/mod.rs", "fn f(x: Option<u32>) { x.unwrap(); }");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].what, "unwrap");
     }
 }

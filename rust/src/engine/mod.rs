@@ -100,11 +100,14 @@ pub struct Request {
     pub steps: Option<usize>,
     /// Override the preset's CFG scale.
     pub cfg_scale: Option<f64>,
+    /// Request span for the event tracer ([`crate::trace`]); 0 (the
+    /// default) leaves the session's events unattributed.
+    pub trace_id: u64,
 }
 
 impl Request {
     pub fn new(prompt: &str, seed: u64) -> Self {
-        Self { prompt: prompt.to_string(), seed, steps: None, cfg_scale: None }
+        Self { prompt: prompt.to_string(), seed, steps: None, cfg_scale: None, trace_id: 0 }
     }
 }
 
@@ -190,6 +193,11 @@ pub struct RunResult {
     pub reuse_map: Vec<Vec<bool>>,
     /// Foresight's per-site λ after the run (Fig. 5).
     pub thresholds: Option<BTreeMap<(usize, BlockKind, usize), f64>>,
+    /// λ aligned with each `reuse_map` row's site index (branch-0 policy
+    /// order); `-1.0` = no threshold recorded for that site, `None` = the
+    /// policy records no thresholds at all. Feeds the server's
+    /// `reuse_timeline` echo.
+    pub site_lambdas: Option<Vec<f64>>,
 }
 
 /// Observer hook for the feature-dynamics analyses (Figs. 2/3/11-14):

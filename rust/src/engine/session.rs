@@ -70,6 +70,7 @@ use crate::model::{BlockKind, LoadedModel, SubUnit};
 use crate::policy::{sites_for, Action, CacheMode, Granularity, ReusePolicy, Site};
 use crate::runtime::{DeviceTensor, Executable, HostTensor, Runtime};
 use crate::sampler::{self, DeviceCoeffs, DeviceStepper, Sampler};
+use crate::trace;
 use crate::util::prng::Rng;
 use crate::util::stats::mse_f32;
 use crate::workload;
@@ -166,8 +167,14 @@ struct BranchWorker {
 }
 
 impl BranchWorker {
-    fn spawn(model: Arc<LoadedModel>, bctx: Arc<BranchCtx>, branch: usize, rp: RunParams) -> Self {
-        Self::spawn_with_cache(model, bctx, branch, rp, FeatureCache::new())
+    fn spawn(
+        model: Arc<LoadedModel>,
+        bctx: Arc<BranchCtx>,
+        branch: usize,
+        rp: RunParams,
+        trace_id: u64,
+    ) -> Self {
+        Self::spawn_with_cache(model, bctx, branch, rp, trace_id, FeatureCache::new())
     }
 
     /// Spawn with a pre-populated cache — the device-migration path seeds
@@ -179,6 +186,7 @@ impl BranchWorker {
         bctx: Arc<BranchCtx>,
         branch: usize,
         rp: RunParams,
+        trace_id: u64,
         cache: FeatureCache,
     ) -> Self {
         let (tx_job, rx_job) = mpsc::channel::<WorkerJob>();
@@ -186,6 +194,9 @@ impl BranchWorker {
         let handle = std::thread::Builder::new()
             .name(format!("foresight-session-branch-{branch}"))
             .spawn(move || {
+                // Attribute this worker's runtime transfer events (drift
+                // scalar downloads etc.) to the owning request's span.
+                trace::set_current(trace_id);
                 let mut cache = cache;
                 let mut mirror: HostMirror = BTreeMap::new();
                 while let Ok((step, c, h0, actions)) = rx_job.recv() {
@@ -319,6 +330,8 @@ pub struct Session<'p> {
     /// the just-refreshed cache — silently corrupting decisions instead
     /// of failing. Poisoned sessions refuse further steps.
     poisoned: bool,
+    /// Request span for the event tracer (0 = unattributed).
+    trace_id: u64,
     t_start: Instant,
 }
 
@@ -430,8 +443,8 @@ impl<'p> Session<'p> {
 
         let exec = if parallel && engine.hot_path == HotPath::Device {
             Exec::Workers([
-                BranchWorker::spawn(m.clone(), branches[0].clone(), 0, rp),
-                BranchWorker::spawn(m.clone(), branches[1].clone(), 1, rp),
+                BranchWorker::spawn(m.clone(), branches[0].clone(), 0, rp, req.trace_id),
+                BranchWorker::spawn(m.clone(), branches[1].clone(), 1, rp, req.trace_id),
             ])
         } else {
             Exec::Inline {
@@ -459,6 +472,7 @@ impl<'p> Session<'p> {
             latent_elems,
             peak_lanes: 1,
             poisoned: false,
+            trace_id: req.trace_id,
             t_start: Instant::now(),
         })
     }
@@ -471,6 +485,11 @@ impl<'p> Session<'p> {
     /// Next step to execute (== [`Session::steps`] when done).
     pub fn cursor(&self) -> usize {
         self.cursor
+    }
+
+    /// The request span this session's trace events carry (0 = none).
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
     }
 
     pub fn is_done(&self) -> bool {
@@ -530,7 +549,60 @@ impl<'p> Session<'p> {
         }
         oc.stats.merge_into(&mut self.stats);
         ou.stats.merge_into(&mut self.stats);
+        self.emit_policy_events(step, &decisions, oc, ou);
         self.reuse_map.push(decisions);
+    }
+
+    /// One [`trace::Payload::Policy`] instant per branch-0 decision site
+    /// (plus one per measured uncond site) for this step: the planned
+    /// action, the observed drift MSE (−1 = unmeasured), and the policy's
+    /// λ threshold (−1 = none yet, e.g. during warmup). Gated on the
+    /// tracer so the untraced hot path pays one relaxed atomic load.
+    fn emit_policy_events(&self, step: usize, decisions: &[bool], oc: &BranchOut, ou: &BranchOut) {
+        if self.trace_id == 0 || !trace::global().enabled() {
+            return;
+        }
+        let lambdas = self.policy.thresholds();
+        let lam = |site: &Site| {
+            lambdas
+                .as_ref()
+                .and_then(|t| t.get(&(site.layer, site.kind, site.branch)))
+                .copied()
+                .unwrap_or(-1.0)
+        };
+        let mse_of = |obs: &[(Site, f64)], site: &Site| {
+            obs.iter().find(|(s, _)| s == site).map_or(-1.0, |(_, m)| *m)
+        };
+        for (i, site) in self.sites[0].iter().enumerate() {
+            trace::emit(
+                self.trace_id,
+                trace::Payload::Policy {
+                    step: step as u32,
+                    branch: 0,
+                    site: i as u32,
+                    reuse: decisions.get(i).copied().unwrap_or(false),
+                    mse: mse_of(&oc.observations, site),
+                    lambda: lam(site),
+                },
+            );
+        }
+        // The uncond branch's planned actions aren't retained past the
+        // sweep, but a drift observation implies the site computed — so
+        // its measured sites still get a per-branch event.
+        for (site, mse) in ou.observations.iter() {
+            let idx = self.sites[1].iter().position(|s| s == site).unwrap_or(0);
+            trace::emit(
+                self.trace_id,
+                trace::Payload::Policy {
+                    step: step as u32,
+                    branch: 1,
+                    site: idx as u32,
+                    reuse: false,
+                    mse: *mse,
+                    lambda: lam(site),
+                },
+            );
+        }
     }
 
     /// Advance this session one step on its own (no cohort). Drives all
@@ -792,11 +864,20 @@ impl<'p> Session<'p> {
         self.stats.cache_entries_per_layer = entries;
 
         let [f, p, c_lat] = self.dims;
+        // λ per branch-0 site index, aligned with `reuse_map` rows (the
+        // server's `reuse_timeline` echo joins the two by index).
+        let site_lambdas = self.policy.thresholds().map(|t| {
+            self.sites[0]
+                .iter()
+                .map(|s| t.get(&(s.layer, s.kind, s.branch)).copied().unwrap_or(-1.0))
+                .collect()
+        });
         Ok(RunResult {
             latents: HostTensor::new(vec![f, p, c_lat], x),
             stats: std::mem::take(&mut self.stats),
             reuse_map: std::mem::take(&mut self.reuse_map),
             thresholds: self.policy.thresholds(),
+            site_lambdas,
         })
     }
 
@@ -923,6 +1004,7 @@ impl<'p> Session<'p> {
                 self.branches[0].clone(),
                 0,
                 self.rp,
+                self.trace_id,
                 cache_c,
             ),
             BranchWorker::spawn_with_cache(
@@ -930,6 +1012,7 @@ impl<'p> Session<'p> {
                 self.branches[1].clone(),
                 1,
                 self.rp,
+                self.trace_id,
                 cache_u,
             ),
         ]);

@@ -158,6 +158,42 @@
 //! or matches the fixed default; `examples/serve.rs` shows the
 //! profile → persist → serve path end to end.
 //!
+//! # Observability
+//!
+//! Aggregates alone cannot explain a single slow request or a single bad
+//! frame, so the serving stack carries a structured per-step tracer
+//! ([`trace`]): always compiled, runtime-toggled (`FORESIGHT_TRACE`, or
+//! the `trace` wire op's `enable` flag), writing into bounded ring shards
+//! that **drop (and count) instead of blocking** when contended or full —
+//! emission is safe from under any lock because the ring holds the
+//! highest rank in the [`util::sync`] table and only ever uses
+//! `try_lock` on the hot path. Every request gets a `trace_id` at the
+//! wire front; the span it opens collects enqueue/reject/deadline events
+//! from the server, admit/join/retire/steal/migrate/degrade and
+//! per-boundary fused-pass wall+occupancy from the scheduler, per-step
+//! per-branch per-site reuse/compute decisions with observed drift MSE
+//! and λ thresholds from the session, and h2d/d2h transfer events from
+//! the runtime.
+//!
+//! Three export surfaces (see [`server`] wire-protocol docs):
+//!
+//! * `{"op":"trace","since":<seq>}` drains the rings incrementally as
+//!   Chrome trace-event JSON objects ([`trace::chrome`]), and the
+//!   `foresight trace` CLI subcommand writes a Perfetto-loadable
+//!   `{"traceEvents":[...]}` file from them;
+//! * a `trace:true` flag on any `generate` request returns that
+//!   request's compact per-step reuse timeline (step, site, action, λ)
+//!   inline in the response;
+//! * `{"op":"metrics"}` renders the full `stats` surface in Prometheus
+//!   text exposition format (`foresight_<stat>` gauges, per-device
+//!   values labeled `{device="N"}`) for standard scrapers, with the
+//!   `analysis::lint` ledger pass holding the metric table and the
+//!   telemetry struct in lockstep.
+//!
+//! `benches/fig23_trace.rs` pins the overhead contract: tracing off costs
+//! nothing measurable, tracing on stays bounded, and overload drops
+//! events instead of stalling step boundaries.
+//!
 //! # Static analysis
 //!
 //! The concurrency above rests on three project invariants the type
@@ -192,6 +228,7 @@ pub mod policy;
 pub mod runtime;
 pub mod sampler;
 pub mod server;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -7,8 +7,10 @@
 //! * `analyze`  — dump feature-dynamics statistics (Fig. 2-style CSV)
 //! * `info`     — list models/buckets available in the artifact manifest
 //! * `lint`     — project-invariant static analysis (see `analysis::lint`)
+//! * `trace`    — drain trace events to Chrome trace-event JSON
 
 use anyhow::{anyhow, Result};
+use std::net::SocketAddr;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -20,8 +22,10 @@ use foresight::engine::{Engine, Request};
 use foresight::model::{BlockKind, LoadedModel};
 use foresight::policy::build_policy;
 use foresight::runtime::{DevicePool, Runtime};
-use foresight::server::{EngineRegistry, Server, ServerConfig};
+use foresight::server::{Client, EngineRegistry, Server, ServerConfig};
+use foresight::trace;
 use foresight::util::cli::Cli;
+use foresight::util::json::{self, Json};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -39,6 +43,7 @@ fn main() {
         "analyze" => cmd_analyze(&rest),
         "info" => cmd_info(&rest),
         "lint" => cmd_lint(&rest),
+        "trace" => cmd_trace(&rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -59,7 +64,8 @@ fn usage() -> String {
      \x20 autotune   profile policy configurations, write tuned profiles\n\
      \x20 analyze    dump feature-dynamics CSV (Fig. 2 style)\n\
      \x20 info       list available models and buckets\n\
-     \x20 lint       check project invariants (lock order, panic paths, ledger)\n\n\
+     \x20 lint       check project invariants (lock order, panic paths, ledger)\n\
+     \x20 trace      drain trace events to Chrome trace JSON (chrome://tracing, Perfetto)\n\n\
      Run `foresight <command> --help` for options."
         .to_string()
 }
@@ -414,6 +420,99 @@ fn cmd_lint(args: &[String]) -> Result<()> {
             allow_path.display()
         ));
     }
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let p = Cli::new(
+        "foresight trace",
+        "drain trace events and write a Chrome trace-event JSON document",
+    )
+    .opt(
+        "addr",
+        "",
+        "running server to drain via {\"op\":\"trace\"}, e.g. 127.0.0.1:7878",
+    )
+    .opt("since", "0", "drain events with seq >= since (a previous run's `next`)")
+    .opt("out", "results/trace.json", "output path for the Chrome trace document")
+    .flag(
+        "demo",
+        "no server: record a synthetic request span with the in-process tracer and export it",
+    )
+    .parse(args)
+    .map_err(|e| anyhow!("{e}"))?;
+
+    let since = p.get_u64("since").map_err(|e| anyhow!(e))?;
+    let (events, next) = if p.get_flag("demo") {
+        // Hermetic path (CI smoke): exercise the real tracer, renderer
+        // and parser without artifacts or a live server.
+        let t = trace::global();
+        t.enable(true);
+        let id = t.next_trace_id();
+        trace::emit(id, trace::Payload::Begin);
+        trace::emit(id, trace::Payload::Enqueue { device: 0, depth: 1 });
+        trace::emit(id, trace::Payload::Admit { device: 0, queue_us: 120 });
+        trace::emit_dur(id, 850, trace::Payload::Pass { device: 0, occupancy: 1 });
+        trace::emit(
+            id,
+            trace::Payload::Policy {
+                step: 0,
+                branch: 0,
+                site: 0,
+                reuse: false,
+                mse: 0.01,
+                lambda: 0.02,
+            },
+        );
+        trace::emit(id, trace::Payload::Retire { device: 0, steps: 1 });
+        trace::emit(id, trace::Payload::End { ok: true });
+        let d = t.drain(since);
+        let evs: Vec<Json> = d.events.iter().map(trace::chrome::event_json).collect();
+        (evs, d.next)
+    } else {
+        let addr = p.get("addr");
+        if addr.is_empty() {
+            return Err(anyhow!(
+                "pass --addr <host:port> (a running `foresight serve`) or --demo"
+            ));
+        }
+        let sock: SocketAddr = addr
+            .parse()
+            .map_err(|e| anyhow!("--addr '{addr}': {e}"))?;
+        let mut client = Client::connect(&sock)?;
+        let resp = client.call(&Json::obj(vec![
+            ("op", Json::str("trace")),
+            ("since", Json::num(since as f64)),
+        ]))?;
+        if resp.get("status").and_then(|v| v.as_str()) != Some("ok") {
+            return Err(anyhow!("trace op failed: {resp}"));
+        }
+        let evs = resp
+            .get("events")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.to_vec())
+            .unwrap_or_default();
+        let next = resp.get("next").and_then(|v| v.as_u64()).unwrap_or(since);
+        if let Some(dropped) = resp.get("dropped").and_then(|v| v.as_u64()) {
+            if dropped > 0 {
+                eprintln!("note: the tracer has dropped {dropped} event(s) so far (bounded rings)");
+            }
+        }
+        (evs, next)
+    };
+
+    let n = events.len();
+    let doc = trace::chrome::document(events);
+    let text = doc.to_string();
+    // The export contract: the document must round-trip our own parser
+    // (what the fig23 bench asserts; Chrome/Perfetto accept a superset).
+    json::parse(&text).map_err(|e| anyhow!("internal: rendered trace does not re-parse: {e}"))?;
+    let out = p.get("out");
+    if let Some(dir) = Path::new(out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(out, &text)?;
+    println!("wrote {out} ({n} event(s); resume with --since {next})");
     Ok(())
 }
 

@@ -42,6 +42,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::trace;
 use crate::util::sync::{OrderedMutex, RANK_RUNTIME_EXEC_CACHE, RANK_RUNTIME_FUSED_CACHE};
 
 pub use tensor::HostTensor;
@@ -393,6 +394,7 @@ impl Runtime {
             .buffer_from_host_buffer(data, dims, None)
             .map_err(|e| anyhow!("upload: {e:?}"))?;
         self.transfers.record_h2d(data.len() * 4);
+        trace::emit_here(trace::Payload::H2d { bytes: (data.len() * 4) as u64 });
         Ok(DeviceTensor { buf: Shared(buf), dims: dims.to_vec() })
     }
 
@@ -426,6 +428,7 @@ impl Runtime {
         lit.copy_raw_to(dst)
             .map_err(|e| anyhow!("download (copy_raw): {e:?}"))?;
         self.transfers.record_d2h(dst.len() * 4);
+        trace::emit_here(trace::Payload::D2h { bytes: (dst.len() * 4) as u64 });
         Ok(())
     }
 

@@ -66,7 +66,54 @@
 //!    refused with `{"status":"error", "overloaded":true,
 //!    "retry_after_ms":.., "queue_depth":..}` without being queued.
 //! * `{"op":"stats"}` → server-level counters + latency percentiles
+//! * `{"op":"metrics"}` → the same counters rendered as Prometheus text
+//!    exposition (§Observability) inside `{"status":"ok","body":..,
+//!    "content_type":"text/plain; version=0.0.4"}`
+//! * `{"op":"trace","since"?:<seq>,"enable"?:bool}` → incremental drain of
+//!    the process-wide event tracer as Chrome trace-event objects
+//!    (§Observability)
 //! * `{"op":"shutdown"}` → stops the server
+//!
+//! A `generate` request may additionally send `"trace": true` to get a
+//! compact per-step reuse timeline back in its response (§Observability).
+//!
+//! # Observability
+//!
+//! Three surfaces expose what the aggregate `stats` op cannot
+//! (see [`crate::trace`] and the crate docs §Observability):
+//!
+//! * **`{"op":"trace","since":<seq>,"enable":<bool>}`** — drains the
+//!   bounded ring buffers of the process-wide tracer, returning
+//!   `{"status":"ok", "events":[..], "next":<seq>, "emitted":..,
+//!   "dropped":.., "enabled":..}`. `events` are Chrome trace-event
+//!   objects ([`crate::trace::chrome`]) ready to wrap in a
+//!   `{"traceEvents":[...]}` envelope (the `foresight trace` CLI does
+//!   exactly that); pass the returned `next` as the following request's
+//!   `since` to read incrementally. The drain is non-destructive. The
+//!   optional `enable` flag toggles recording at runtime (tracing also
+//!   starts enabled under `FORESIGHT_TRACE=1`). **Drop semantics**: the
+//!   tracer never blocks a hot path — a contended ring shard or a full
+//!   ring (capacity `FORESIGHT_TRACE_RING`, default 16384 events/shard)
+//!   drops events and counts them in `trace_drops` instead of stalling a
+//!   step boundary; `seq` gaps in a drain are exactly those drops.
+//! * **`"trace": true` on a `generate` request** — the response gains a
+//!   `reuse_timeline` array of `{step, site, action, lambda}` objects:
+//!   the policy's planned branch-0 decision per measured site per step
+//!   (`action` ∈ `reuse`/`compute`) with the λ threshold the decision
+//!   compared against (omitted when the policy records none). Works
+//!   whether or not the tracer is enabled — the timeline comes from the
+//!   session's own `RunResult`, not the ring. The timeline's `reuse`
+//!   count is the *planned* branch-0 reuse total; it never exceeds the
+//!   response's `reused_units + fallback_units` (a planned reuse either
+//!   executed or fell back on a cold cache).
+//! * **`{"op":"metrics"}`** — the full `stats` surface in Prometheus
+//!   text exposition format. **Naming scheme**: every scalar stats key
+//!   `k` exports as gauge `foresight_<k>` (e.g. `foresight_requests`,
+//!   `foresight_latency_p99_s`); with `devices > 1` the `per_device`
+//!   breakdown exports as `foresight_device_<k>{device="<ordinal>"}`.
+//!   The table driving the rendering ([`PROM_METRICS`]) is cross-checked
+//!   against [`Telemetry`] by the `analysis::lint` ledger pass, so a new
+//!   counter cannot ship without a scrape line.
 //!
 //! # `policy=auto` resolution
 //!
@@ -202,6 +249,7 @@ use crate::engine::{Engine, Request, RunResult};
 use crate::model::LoadedModel;
 use crate::policy::build_policy;
 use crate::runtime::{DevicePool, Runtime};
+use crate::trace;
 use crate::util::json::{self, Json};
 use crate::util::stats::{self, Reservoir};
 use crate::util::sync::{
@@ -296,6 +344,13 @@ struct Job {
     /// Present when the request sent `policy:"auto"` (the payload's policy
     /// field has already been rewritten to `auto.spec`).
     auto: Option<AutoInfo>,
+    /// Request span id allocated at the wire front; every scheduler/
+    /// session/runtime event this job causes is tagged with it
+    /// (module docs §Observability).
+    trace_id: u64,
+    /// The request sent `"trace": true` — its response gets the compact
+    /// per-step `reuse_timeline`.
+    want_trace: bool,
 }
 
 /// Outcome of resolving a `policy:"auto"` request at enqueue time.
@@ -493,6 +548,15 @@ struct Telemetry {
     degrade_headroom_us: AtomicU64,
     /// Deepest any device queue has ever been at enqueue time.
     queue_depth_peak: AtomicU64,
+    /// Events ring-buffered by the process-wide tracer (monotonic mirror
+    /// of [`crate::trace::Tracer::events_total`], refreshed on `stats`).
+    trace_events: AtomicU64,
+    /// Trace events dropped by shard contention or ring overflow instead
+    /// of blocking a hot path (mirror of
+    /// [`crate::trace::Tracer::drops_total`], refreshed on `stats`).
+    trace_drops: AtomicU64,
+    /// `trace` wire-op drains served.
+    traces_served: AtomicU64,
     /// One entry per device ordinal (module docs §Per-device stats).
     per_device: Vec<DeviceTelemetry>,
     /// Per-request wall-clock latency samples, in seconds.
@@ -546,6 +610,9 @@ impl Telemetry {
             degrade_swaps: AtomicU64::new(0),
             degrade_headroom_us: AtomicU64::new(0),
             queue_depth_peak: AtomicU64::new(0),
+            trace_events: AtomicU64::new(0),
+            trace_drops: AtomicU64::new(0),
+            traces_served: AtomicU64::new(0),
             per_device: (0..devices.max(1))
                 .map(|_| DeviceTelemetry {
                     lanes_active: AtomicU64::new(0),
@@ -971,121 +1038,39 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                 let _guard = telemetry.latencies_s.lock();
                 panic!("deliberate test panic (__panic op)");
             }
-            "stats" => {
-                let (lat, lat_seen) = {
-                    let r = telemetry.latencies_s.lock();
-                    (r.samples().to_vec(), r.seen())
-                };
-                let qs = telemetry.queue_s.lock().samples().to_vec();
-                let occ = telemetry.occupancy.lock().samples().to_vec();
-                let occ_max = telemetry.occupancy_peak.load(Ordering::Relaxed) as f64;
-                let depths = ctx.router.queue_depths();
-                let mut fields = vec![
+            "stats" => stats_json(ctx),
+            // The same surface for Prometheus scrapers (module docs
+            // §Observability): every scalar stats key renders as a
+            // `foresight_<key>` gauge line, per-device values with a
+            // `{device="N"}` label, inside a JSON envelope so the
+            // one-line-per-response protocol holds.
+            "metrics" => {
+                let body = prometheus_text(&stats_json(ctx));
+                Json::obj(vec![
                     ("status", Json::str("ok")),
-                    ("requests", Json::num(telemetry.requests.load(Ordering::Relaxed) as f64)),
-                    ("errors", Json::num(telemetry.errors.load(Ordering::Relaxed) as f64)),
-                    (
-                        "accept_errors",
-                        Json::num(telemetry.accept_errors.load(Ordering::Relaxed) as f64),
-                    ),
-                    ("batches", Json::num(telemetry.batches.load(Ordering::Relaxed) as f64)),
-                    (
-                        "batched_requests",
-                        Json::num(telemetry.batched_requests.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "lanes_active",
-                        Json::num(telemetry.lanes_active.load(Ordering::Relaxed) as f64),
-                    ),
-                    ("joins", Json::num(telemetry.joins.load(Ordering::Relaxed) as f64)),
-                    ("retires", Json::num(telemetry.retires.load(Ordering::Relaxed) as f64)),
-                    ("regroups", Json::num(telemetry.regroups.load(Ordering::Relaxed) as f64)),
-                    ("occupancy_mean", Json::num(stats::mean(&occ))),
-                    ("occupancy_max", Json::num(occ_max)),
-                    (
-                        "profile_store_version",
-                        Json::num(ctx.profiles.as_deref().map_or(0, |s| s.version()) as f64),
-                    ),
-                    (
-                        "profiles_loaded",
-                        Json::num(ctx.profiles.as_deref().map_or(0, |s| s.len()) as f64),
-                    ),
-                    (
-                        "auto_resolved",
-                        Json::num(telemetry.auto_resolved.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "auto_fallbacks",
-                        Json::num(telemetry.auto_fallbacks.load(Ordering::Relaxed) as f64),
-                    ),
-                    ("rejects", Json::num(telemetry.rejects.load(Ordering::Relaxed) as f64)),
-                    (
-                        "deadline_misses",
-                        Json::num(telemetry.deadline_misses.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "degrade_swaps",
-                        Json::num(telemetry.degrade_swaps.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "degrade_headroom_s",
-                        Json::num(telemetry.degrade_headroom_us.load(Ordering::Relaxed) as f64 / 1e6),
-                    ),
-                    ("queue_depth", Json::num(depths.iter().sum::<usize>() as f64)),
-                    (
-                        "queue_depth_peak",
-                        Json::num(telemetry.queue_depth_peak.load(Ordering::Relaxed) as f64),
-                    ),
-                    ("latency_p50_s", Json::num(stats::percentile(&lat, 50.0))),
-                    ("latency_p95_s", Json::num(stats::percentile(&lat, 95.0))),
-                    ("latency_p99_s", Json::num(stats::percentile(&lat, 99.0))),
-                    ("latency_mean_s", Json::num(stats::mean(&lat))),
-                    ("latency_samples", Json::num(lat.len() as f64)),
-                    ("latency_seen", Json::num(lat_seen as f64)),
-                    ("queue_mean_s", Json::num(stats::mean(&qs))),
-                    ("queue_p95_s", Json::num(stats::percentile(&qs, 95.0))),
-                ];
-                // Sharded-only fields (module docs §Per-device stats):
-                // gated on devices > 1 so the single-device response stays
-                // byte-identical to the pre-sharding server.
-                if ctx.devices > 1 {
-                    let xfer = ctx.registry.pool().transfer_snapshots();
-                    let per_device: Vec<Json> = telemetry
-                        .per_device
-                        .iter()
-                        .enumerate()
-                        .map(|(d, t)| {
-                            let occ = t.occupancy.lock().samples().to_vec();
-                            let x = &xfer[d];
-                            Json::obj(vec![
-                                ("device", Json::num(d as f64)),
-                                (
-                                    "lanes_active",
-                                    Json::num(t.lanes_active.load(Ordering::Relaxed) as f64),
-                                ),
-                                ("occupancy_mean", Json::num(stats::mean(&occ))),
-                                (
-                                    "occupancy_max",
-                                    Json::num(t.occupancy_peak.load(Ordering::Relaxed) as f64),
-                                ),
-                                ("joins", Json::num(t.joins.load(Ordering::Relaxed) as f64)),
-                                ("retires", Json::num(t.retires.load(Ordering::Relaxed) as f64)),
-                                ("steals", Json::num(t.steals.load(Ordering::Relaxed) as f64)),
-                                ("queue_depth", Json::num(depths[d] as f64)),
-                                ("h2d_bytes", Json::num(x.h2d_bytes as f64)),
-                                ("h2d_calls", Json::num(x.h2d_calls as f64)),
-                                ("d2h_bytes", Json::num(x.d2h_bytes as f64)),
-                                ("d2h_calls", Json::num(x.d2h_calls as f64)),
-                            ])
-                        })
-                        .collect();
-                    fields.extend([
-                        ("devices", Json::num(ctx.devices as f64)),
-                        ("steals", Json::num(telemetry.steals.load(Ordering::Relaxed) as f64)),
-                        ("per_device", Json::Arr(per_device)),
-                    ]);
+                    ("content_type", Json::str("text/plain; version=0.0.4")),
+                    ("body", Json::str(body)),
+                ])
+            }
+            // Incremental tracer drain (module docs §Observability):
+            // non-destructive, cursor-based via `since`; the optional
+            // `enable` flag toggles recording at runtime.
+            "trace" => {
+                let t = trace::global();
+                if let Some(on) = payload.get("enable").and_then(|v| v.as_bool()) {
+                    t.enable(on);
                 }
-                Json::obj(fields)
+                let since = payload.get("since").and_then(|v| v.as_u64()).unwrap_or(0);
+                let d = t.drain(since);
+                telemetry.traces_served.fetch_add(1, Ordering::Relaxed);
+                Json::obj(vec![
+                    ("status", Json::str("ok")),
+                    ("enabled", Json::Bool(d.enabled)),
+                    ("next", Json::num(d.next as f64)),
+                    ("emitted", Json::num(d.emitted as f64)),
+                    ("dropped", Json::num(d.dropped as f64)),
+                    ("events", Json::arr(d.events.iter().map(trace::chrome::event_json).collect())),
+                ])
             }
             "shutdown" => {
                 ctx.router.signal_stop(&ctx.stop);
@@ -1107,10 +1092,19 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                         return Ok(true);
                     }
                 };
+                // Request span: one trace id per accepted generate line;
+                // every downstream event (scheduler, session, runtime)
+                // carries it (module docs §Observability).
+                let trace_id = trace::global().next_trace_id();
+                let want_trace = payload.get("trace").and_then(|v| v.as_bool()).unwrap_or(false);
+                trace::emit(trace_id, trace::Payload::Begin);
                 // Resolve `policy:"auto"` to a concrete spec before the
                 // job is queued, so the batch key (derived from the raw
                 // payload) groups identically-resolved requests.
                 let auto = resolve_auto(&mut payload, ctx);
+                if auto.as_ref().map_or(false, |a| a.degraded) {
+                    trace::emit(trace_id, trace::Payload::Degrade);
+                }
                 let (tx, rx) = mpsc::channel();
                 let enqueued = Instant::now();
                 // Routing front: the router picks the device queue under
@@ -1125,8 +1119,10 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                     deadline: deadline_in.map(|d| enqueued + d),
                     reply: tx,
                     auto,
+                    trace_id,
+                    want_trace,
                 };
-                match ctx.router.enqueue(job, &ctx.stop) {
+                let resp = match ctx.router.enqueue(job, &ctx.stop) {
                     scheduler::EnqueueOutcome::Queued { depth } => {
                         telemetry
                             .queue_depth_peak
@@ -1138,16 +1134,279 @@ fn handle_line(line: &str, writer: &mut TcpStream, ctx: &ServeCtx) -> Result<boo
                         // control): refused *before* counting as an
                         // admitted request — `rejects` is its own ledger.
                         telemetry.rejects.fetch_add(1, Ordering::Relaxed);
+                        trace::emit(trace_id, trace::Payload::Reject { depth: depth as u64 });
                         overloaded_json(retry_after_hint(telemetry, depth, ctx.devices), depth)
                     }
                     scheduler::EnqueueOutcome::Stopping => err_json("server is shutting down"),
-                }
+                };
+                // Close the request span with the final disposition —
+                // rejects and deadline misses end the span `ok:false`.
+                let ok = resp.get("status").and_then(|v| v.as_str()) == Some("ok");
+                trace::emit(trace_id, trace::Payload::End { ok });
+                resp
             }
             other => err_json(&format!("unknown op '{other}'")),
         };
         writeln!(writer, "{resp}")?;
     }
     Ok(true)
+}
+
+/// The full `stats` response object — also the single source feed for
+/// the `metrics` Prometheus rendering, so the two surfaces can never
+/// disagree. Refreshes the [`Telemetry`] mirrors of the process-wide
+/// tracer counters first (they are monotonic, hence `fetch_max`).
+fn stats_json(ctx: &ServeCtx) -> Json {
+    let telemetry = &ctx.telemetry;
+    let trc = trace::global();
+    telemetry.trace_events.fetch_max(trc.events_total(), Ordering::Relaxed);
+    telemetry.trace_drops.fetch_max(trc.drops_total(), Ordering::Relaxed);
+    let (lat, lat_seen) = {
+        let r = telemetry.latencies_s.lock();
+        (r.samples().to_vec(), r.seen())
+    };
+    let qs = telemetry.queue_s.lock().samples().to_vec();
+    let occ = telemetry.occupancy.lock().samples().to_vec();
+    let occ_max = telemetry.occupancy_peak.load(Ordering::Relaxed) as f64;
+    let depths = ctx.router.queue_depths();
+    let mut fields = vec![
+        ("status", Json::str("ok")),
+        ("requests", Json::num(telemetry.requests.load(Ordering::Relaxed) as f64)),
+        ("errors", Json::num(telemetry.errors.load(Ordering::Relaxed) as f64)),
+        (
+            "accept_errors",
+            Json::num(telemetry.accept_errors.load(Ordering::Relaxed) as f64),
+        ),
+        ("batches", Json::num(telemetry.batches.load(Ordering::Relaxed) as f64)),
+        (
+            "batched_requests",
+            Json::num(telemetry.batched_requests.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "lanes_active",
+            Json::num(telemetry.lanes_active.load(Ordering::Relaxed) as f64),
+        ),
+        ("joins", Json::num(telemetry.joins.load(Ordering::Relaxed) as f64)),
+        ("retires", Json::num(telemetry.retires.load(Ordering::Relaxed) as f64)),
+        ("regroups", Json::num(telemetry.regroups.load(Ordering::Relaxed) as f64)),
+        ("occupancy_mean", Json::num(stats::mean(&occ))),
+        ("occupancy_max", Json::num(occ_max)),
+        (
+            "profile_store_version",
+            Json::num(ctx.profiles.as_deref().map_or(0, |s| s.version()) as f64),
+        ),
+        (
+            "profiles_loaded",
+            Json::num(ctx.profiles.as_deref().map_or(0, |s| s.len()) as f64),
+        ),
+        (
+            "auto_resolved",
+            Json::num(telemetry.auto_resolved.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "auto_fallbacks",
+            Json::num(telemetry.auto_fallbacks.load(Ordering::Relaxed) as f64),
+        ),
+        ("rejects", Json::num(telemetry.rejects.load(Ordering::Relaxed) as f64)),
+        (
+            "deadline_misses",
+            Json::num(telemetry.deadline_misses.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "degrade_swaps",
+            Json::num(telemetry.degrade_swaps.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "degrade_headroom_s",
+            Json::num(telemetry.degrade_headroom_us.load(Ordering::Relaxed) as f64 / 1e6),
+        ),
+        ("queue_depth", Json::num(depths.iter().sum::<usize>() as f64)),
+        (
+            "queue_depth_peak",
+            Json::num(telemetry.queue_depth_peak.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "trace_events",
+            Json::num(telemetry.trace_events.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "trace_drops",
+            Json::num(telemetry.trace_drops.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "traces_served",
+            Json::num(telemetry.traces_served.load(Ordering::Relaxed) as f64),
+        ),
+        ("latency_p50_s", Json::num(stats::percentile(&lat, 50.0))),
+        ("latency_p95_s", Json::num(stats::percentile(&lat, 95.0))),
+        ("latency_p99_s", Json::num(stats::percentile(&lat, 99.0))),
+        ("latency_mean_s", Json::num(stats::mean(&lat))),
+        ("latency_samples", Json::num(lat.len() as f64)),
+        ("latency_seen", Json::num(lat_seen as f64)),
+        ("queue_mean_s", Json::num(stats::mean(&qs))),
+        ("queue_p95_s", Json::num(stats::percentile(&qs, 95.0))),
+    ];
+    // Sharded-only fields (module docs §Per-device stats):
+    // gated on devices > 1 so the single-device response stays
+    // byte-identical to the pre-sharding server.
+    if ctx.devices > 1 {
+        let xfer = ctx.registry.pool().transfer_snapshots();
+        let per_device: Vec<Json> = telemetry
+            .per_device
+            .iter()
+            .enumerate()
+            .map(|(d, t)| {
+                let occ = t.occupancy.lock().samples().to_vec();
+                let x = &xfer[d];
+                Json::obj(vec![
+                    ("device", Json::num(d as f64)),
+                    (
+                        "lanes_active",
+                        Json::num(t.lanes_active.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("occupancy_mean", Json::num(stats::mean(&occ))),
+                    (
+                        "occupancy_max",
+                        Json::num(t.occupancy_peak.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("joins", Json::num(t.joins.load(Ordering::Relaxed) as f64)),
+                    ("retires", Json::num(t.retires.load(Ordering::Relaxed) as f64)),
+                    ("steals", Json::num(t.steals.load(Ordering::Relaxed) as f64)),
+                    ("queue_depth", Json::num(depths[d] as f64)),
+                    ("h2d_bytes", Json::num(x.h2d_bytes as f64)),
+                    ("h2d_calls", Json::num(x.h2d_calls as f64)),
+                    ("d2h_bytes", Json::num(x.d2h_bytes as f64)),
+                    ("d2h_calls", Json::num(x.d2h_calls as f64)),
+                ])
+            })
+            .collect();
+        fields.extend([
+            ("devices", Json::num(ctx.devices as f64)),
+            ("steals", Json::num(telemetry.steals.load(Ordering::Relaxed) as f64)),
+            ("per_device", Json::Arr(per_device)),
+        ]);
+    }
+    Json::obj(fields)
+}
+
+/// Prometheus exposition table: `(stats key, HELP text)`, one row per
+/// scalar key the `stats` op can emit. The `metrics` op renders each
+/// present key as gauge `foresight_<key>`; the `analysis::lint` ledger
+/// pass cross-checks this table against [`Telemetry`]'s wire names so a
+/// new counter cannot ship without a scrape line (module docs
+/// §Observability).
+const PROM_METRICS: &[(&str, &str)] = &[
+    ("requests", "Generate requests admitted off the wire"),
+    ("errors", "Per-request errors (validation, dispatch, engine)"),
+    ("accept_errors", "Listener accept()/handshake failures"),
+    ("batches", "Fused cohort passes executed"),
+    ("batched_requests", "Requests that ever shared a cohort"),
+    ("lanes_active", "Lanes occupied right now, all devices"),
+    ("joins", "Sessions that joined an in-flight cohort"),
+    ("retires", "Sessions retired at a step boundary"),
+    ("regroups", "Cohort regroups (lane set changed between passes)"),
+    ("occupancy_mean", "Mean lanes advanced per fused pass"),
+    ("occupancy_max", "Peak lanes advanced by any fused pass"),
+    ("profile_store_version", "Version of the loaded autotune profile store"),
+    ("profiles_loaded", "Profiles in the loaded autotune store"),
+    ("auto_resolved", "policy=auto requests resolved from a profile"),
+    ("auto_fallbacks", "policy=auto requests that fell back to the default"),
+    ("rejects", "Requests refused by bounded admission"),
+    ("deadline_misses", "Requests dropped past their deadline"),
+    ("degrade_swaps", "policy=auto requests degraded under queue pressure"),
+    ("degrade_headroom_s", "Cumulative seconds of estimated work shed by degrades"),
+    ("queue_depth", "Jobs queued across all device queues right now"),
+    ("queue_depth_peak", "Deepest any device queue has ever been"),
+    ("trace_events", "Events ring-buffered by the process-wide tracer"),
+    ("trace_drops", "Trace events dropped instead of blocking a hot path"),
+    ("traces_served", "trace wire-op drains served"),
+    ("latency_p50_s", "Median request wall-clock latency (seconds)"),
+    ("latency_p95_s", "p95 request wall-clock latency (seconds)"),
+    ("latency_p99_s", "p99 request wall-clock latency (seconds)"),
+    ("latency_mean_s", "Mean request wall-clock latency (seconds)"),
+    ("latency_samples", "Latency samples currently in the reservoir"),
+    ("latency_seen", "Latency samples ever offered to the reservoir"),
+    ("queue_mean_s", "Mean queue wait (seconds)"),
+    ("queue_p95_s", "p95 queue wait (seconds)"),
+    ("devices", "Runtime device replicas serving this process"),
+    ("steals", "Queued jobs pulled by an idle non-home device"),
+];
+
+/// Render a `stats` response as Prometheus text exposition (version
+/// 0.0.4). Scalar keys follow [`PROM_METRICS`]; keys absent from the
+/// response (e.g. sharded-only fields on a single-device server) are
+/// skipped; the `per_device` breakdown renders as
+/// `foresight_device_<key>{device="N"}` gauges grouped per metric name.
+fn prometheus_text(stats: &Json) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for (key, help) in PROM_METRICS {
+        let Some(v) = stats.get(key).and_then(|v| v.as_f64()) else {
+            continue;
+        };
+        let _ = writeln!(out, "# HELP foresight_{key} {help}");
+        let _ = writeln!(out, "# TYPE foresight_{key} gauge");
+        let _ = writeln!(out, "foresight_{key} {}", fmt_prom(v));
+    }
+    if let Some(devs) = stats.get("per_device").and_then(|v| v.as_arr()) {
+        // Key-major so all samples of one metric family stay contiguous
+        // (the exposition format requires grouping).
+        let keys: Vec<&String> = devs
+            .first()
+            .and_then(|d| d.as_obj())
+            .map(|o| o.keys().filter(|k| k.as_str() != "device").collect())
+            .unwrap_or_default();
+        for k in keys {
+            let _ = writeln!(out, "# TYPE foresight_device_{k} gauge");
+            for d in devs {
+                let ord = d.get("device").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                if let Some(v) = d.get(k).and_then(|v| v.as_f64()) {
+                    let _ = writeln!(
+                        out,
+                        "foresight_device_{k}{{device=\"{}\"}} {}",
+                        fmt_prom(ord),
+                        fmt_prom(v)
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Format a sample value: counters print as integers, everything else in
+/// Rust's shortest-roundtrip float form (both valid exposition values).
+fn fmt_prom(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// The compact per-step reuse timeline echoed on `"trace": true` requests
+/// (module docs §Observability): one `{step, site, action, lambda}`
+/// object per planned branch-0 decision, straight from the session's
+/// [`RunResult`] (`lambda` omitted when the policy records no threshold
+/// for that site).
+fn reuse_timeline(r: &RunResult) -> Json {
+    let mut entries = Vec::new();
+    for (step, row) in r.reuse_map.iter().enumerate() {
+        for (site, &reuse) in row.iter().enumerate() {
+            let mut f = vec![
+                ("step", Json::num(step as f64)),
+                ("site", Json::num(site as f64)),
+                ("action", Json::str(if reuse { "reuse" } else { "compute" })),
+            ];
+            if let Some(l) = r.site_lambdas.as_ref().and_then(|ls| ls.get(site)) {
+                if l.is_finite() && *l >= 0.0 {
+                    f.push(("lambda", Json::num(*l)));
+                }
+            }
+            entries.push(Json::obj(f));
+        }
+    }
+    Json::arr(entries)
 }
 
 /// A `generate` payload after wire validation, ready for dispatch.
@@ -1260,9 +1519,14 @@ fn generate_response(
         ("policy_spec", Json::str(policy_spec)),
         ("wall_s", Json::num(s.wall_s)),
         ("queue_s", Json::num(queue_s)),
+        // Explicit alias so clients never have to guess which of the two
+        // wall-clock fields is the queue wait (satellite of the tracing
+        // work — every response echoes it).
+        ("queue_wait_s", Json::num(queue_s)),
         ("steps", Json::num(s.per_step_s.len() as f64)),
         ("computed_units", Json::num(s.computed_units as f64)),
         ("reused_units", Json::num(s.reused_units as f64)),
+        ("fallback_units", Json::num(s.fallback_units as f64)),
         ("reuse_fraction", Json::num(s.reuse_fraction())),
         ("cache_peak_bytes", Json::num(s.cache_peak_bytes as f64)),
         ("h2d_bytes", Json::num(s.h2d_bytes as f64)),

@@ -117,11 +117,13 @@ use std::time::{Duration, Instant};
 
 use crate::engine::{session, Session};
 use crate::policy::build_policy;
+use crate::trace;
+use crate::util::json::Json;
 use crate::util::sync::{OrderedMutex, RANK_ROUTER_STATE};
 
 use super::{
-    cohort_key, deadline_err_json, err_json, generate_response, parse_generate, EngineRegistry,
-    GenerateParams, Job, Telemetry,
+    cohort_key, deadline_err_json, err_json, generate_response, parse_generate, reuse_timeline,
+    EngineRegistry, GenerateParams, Job, Telemetry,
 };
 
 /// Scheduler knobs (from `ServerConfig`).
@@ -259,8 +261,10 @@ impl Router {
             }
             d = shortest;
         }
+        let tid = job.trace_id;
         st.queues[d].push_back(job);
         let depth = st.queues[d].len();
+        trace::emit(tid, trace::Payload::Enqueue { device: d as u64, depth: depth as u64 });
         // notify_all, not notify_one: a gathering worker parked on the
         // shared condvar must also see new arrivals inside its window,
         // and idle workers on other devices must re-check for steals.
@@ -379,6 +383,7 @@ pub(super) fn run_worker(ctx: &WorkerCtx) {
                 break;
             }
             publish(ctx, lanes.len(), key.as_ref());
+            let t_pass = Instant::now();
             let report = {
                 let mut refs: Vec<&mut Session<'static>> =
                     lanes.iter_mut().map(|l| &mut l.session).collect();
@@ -386,6 +391,17 @@ pub(super) fn run_worker(ctx: &WorkerCtx) {
             };
             match report {
                 Ok(rep) => {
+                    // One complete trace event per fused cohort pass:
+                    // wall time, device ordinal, lanes advanced. Cohort
+                    // scope, so it carries no single request's span id.
+                    trace::emit_dur(
+                        0,
+                        t_pass.elapsed().as_micros() as u64,
+                        trace::Payload::Pass {
+                            device: ctx.device as u64,
+                            occupancy: rep.occupancy as u64,
+                        },
+                    );
                     let dt = &ctx.telemetry.per_device[ctx.device];
                     ctx.telemetry.occupancy.lock().push(rep.occupancy as f64);
                     ctx.telemetry
@@ -497,9 +513,15 @@ fn acquire_work(ctx: &WorkerCtx) -> Option<Work> {
                         })
                 })
                 .max_by_key(|&d| (st.devs[d].lanes + st.queues[d].len(), Reverse(d)));
-            if let Some(job) = victim.and_then(|v| st.queues[v].pop_front()) {
-                st.devs[me].wants_work = false;
-                return Some(Work::Job(job));
+            if let Some(v) = victim {
+                if let Some(job) = st.queues[v].pop_front() {
+                    trace::emit(
+                        job.trace_id,
+                        trace::Payload::Steal { device: me as u64, victim: v as u64 },
+                    );
+                    st.devs[me].wants_work = false;
+                    return Some(Work::Job(job));
+                }
             }
             // 4. every queue is empty: ask for a session migration when
             //    some other device holds enough lanes to spare one.
@@ -612,8 +634,14 @@ fn boundary_intake(
                             .is_some_and(|j| cohort_key(&j.payload).as_ref() == Some(key))
                 })
                 .max_by_key(|&d| (st.devs[d].lanes + st.queues[d].len(), Reverse(d)));
-            match victim.and_then(|v| st.queues[v].pop_front()) {
-                Some(job) => jobs.push(job),
+            match victim.and_then(|v| st.queues[v].pop_front().map(|j| (v, j))) {
+                Some((v, job)) => {
+                    trace::emit(
+                        job.trace_id,
+                        trace::Payload::Steal { device: me as u64, victim: v as u64 },
+                    );
+                    jobs.push(job);
+                }
                 None => break,
             }
         }
@@ -680,6 +708,10 @@ fn maybe_give_lane(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
             dt.steals.fetch_add(1, Ordering::Relaxed);
             dt.lanes_active.fetch_add(1, Ordering::Relaxed);
             st.devs[thief].lanes += 1;
+            trace::emit(
+                lane.job.trace_id,
+                trace::Payload::Migrate { from: me as u64, to: thief as u64 },
+            );
             st.devs[thief].incoming.push(lane);
             ctx.router.cv.notify_all();
         }
@@ -736,6 +768,7 @@ fn sweep_dead_lanes(ctx: &WorkerCtx, lanes: &mut Vec<Lane>) {
             .fetch_sub(1, Ordering::Relaxed);
         let resp = if expired {
             ctx.telemetry.deadline_misses.fetch_add(1, Ordering::Relaxed);
+            trace::emit(lane.job.trace_id, trace::Payload::DeadlineMiss { at: "lane" });
             deadline_err_json()
         } else {
             err_json("session poisoned (failed migration); request aborted")
@@ -773,6 +806,7 @@ fn sweep_expired_queue(ctx: &WorkerCtx) {
         ctx.telemetry.requests.fetch_add(1, Ordering::Relaxed);
         ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
         ctx.telemetry.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        trace::emit(job.trace_id, trace::Payload::DeadlineMiss { at: "queue" });
         let _ = job.reply.send(deadline_err_json());
     }
 }
@@ -792,18 +826,36 @@ fn admit(ctx: &WorkerCtx, job: Job, lanes: &mut Vec<Lane>, midflight: bool) {
         // deadline): answer without spending a session start on it.
         ctx.telemetry.errors.fetch_add(1, Ordering::Relaxed);
         ctx.telemetry.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        trace::emit(job.trace_id, trace::Payload::DeadlineMiss { at: "admit" });
         let _ = job.reply.send(deadline_err_json());
         return;
     }
     let queue_s = job.enqueued.elapsed().as_secs_f64();
+    // Attribute admission-time runtime transfers (text conditioning,
+    // initial latent, per-step scalars) to this request's span.
+    let _span = trace::scope(job.trace_id);
     match try_start(ctx, &job) {
         Ok((session, params)) => {
             let dt = &ctx.telemetry.per_device[ctx.device];
             ctx.telemetry.lanes_active.fetch_add(1, Ordering::Relaxed);
             dt.lanes_active.fetch_add(1, Ordering::Relaxed);
+            trace::emit(
+                job.trace_id,
+                trace::Payload::Admit {
+                    device: ctx.device as u64,
+                    queue_us: (queue_s * 1e6) as u64,
+                },
+            );
             if midflight {
                 ctx.telemetry.joins.fetch_add(1, Ordering::Relaxed);
                 dt.joins.fetch_add(1, Ordering::Relaxed);
+                trace::emit(
+                    job.trace_id,
+                    trace::Payload::Join {
+                        device: ctx.device as u64,
+                        lanes: (lanes.len() + 1) as u64,
+                    },
+                );
             }
             lanes.push(Lane { session, job, queue_s, params });
         }
@@ -817,7 +869,10 @@ fn admit(ctx: &WorkerCtx, job: Job, lanes: &mut Vec<Lane>, midflight: bool) {
 /// Wire validation + policy construction + session admission, on this
 /// worker's device replica.
 fn try_start(ctx: &WorkerCtx, job: &Job) -> Result<(Session<'static>, GenerateParams)> {
-    let p = parse_generate(&job.payload)?;
+    let mut p = parse_generate(&job.payload)?;
+    // Thread the request span into the session so its branch workers and
+    // per-step policy events attribute correctly.
+    p.req.trace_id = job.trace_id;
     let engine = ctx.registry.get_on(&p.model, &p.bucket, ctx.device)?;
     let info = &engine.model().info;
     if let Some(s) = p.req.steps {
@@ -845,9 +900,16 @@ fn retire(ctx: &WorkerCtx, lane: Lane) {
     ctx.telemetry.lanes_active.fetch_sub(1, Ordering::Relaxed);
     dt.lanes_active.fetch_sub(1, Ordering::Relaxed);
     let peak = lane.session.peak_lanes();
+    let steps = lane.session.cursor() as u64;
+    // Attribute the final-latent download inside `finish` to the span.
+    let _span = trace::scope(lane.job.trace_id);
+    trace::emit(
+        lane.job.trace_id,
+        trace::Payload::Retire { device: ctx.device as u64, steps },
+    );
     match lane.session.finish() {
         Ok(r) => {
-            let resp = generate_response(
+            let mut resp = generate_response(
                 &lane.params.model,
                 &lane.params.bucket,
                 &r,
@@ -856,6 +918,14 @@ fn retire(ctx: &WorkerCtx, lane: Lane) {
                 &lane.params.policy_spec,
                 lane.job.auto.as_ref(),
             );
+            // `"trace": true` requests get the compact per-step reuse
+            // timeline straight off the RunResult (module docs
+            // §Observability) — independent of the tracer being enabled.
+            if lane.job.want_trace {
+                if let Json::Obj(map) = &mut resp {
+                    map.insert("reuse_timeline".to_string(), reuse_timeline(&r));
+                }
+            }
             ctx.telemetry.retires.fetch_add(1, Ordering::Relaxed);
             dt.retires.fetch_add(1, Ordering::Relaxed);
             if peak >= 2 {

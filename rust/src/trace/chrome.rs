@@ -1,0 +1,221 @@
+//! Chrome trace-event rendering for drained [`Event`]s.
+//!
+//! Produces the Trace Event Format consumed by Perfetto / `chrome://
+//! tracing`: request spans render as async begin/end pairs (`ph:"b"` /
+//! `ph:"e"`) keyed by `trace_id`, fused cohort passes as complete events
+//! (`ph:"X"` with `dur`), and everything else as thread-scoped instants
+//! (`ph:"i"`). Timestamps are the tracer-epoch microseconds the format
+//! expects. [`document`] wraps a rendered batch in the standard
+//! `{"traceEvents":[...]}` envelope, which [`crate::util::json::parse`]
+//! round-trips — the fig23 bench and the `foresight trace` CLI both rely
+//! on that.
+
+use super::{Event, Payload};
+use crate::util::json::Json;
+
+/// Render one event as a Chrome trace-event object.
+pub fn event_json(ev: &Event) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", Json::str(ev.payload.name())),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(ev.tid as f64)),
+        ("ts", Json::num(ev.ts_us as f64)),
+        ("seq", Json::num(ev.seq as f64)),
+    ];
+    let mut args: Vec<(&str, Json)> = Vec::new();
+    if ev.trace_id != 0 {
+        args.push(("trace_id", Json::num(ev.trace_id as f64)));
+    }
+    match ev.payload {
+        Payload::Begin => {
+            fields.push(("ph", Json::str("b")));
+            fields.push(("cat", Json::str("request")));
+            fields.push(("id", Json::num(ev.trace_id as f64)));
+        }
+        Payload::End { ok } => {
+            fields.push(("ph", Json::str("e")));
+            fields.push(("cat", Json::str("request")));
+            fields.push(("id", Json::num(ev.trace_id as f64)));
+            args.push(("ok", Json::Bool(ok)));
+        }
+        Payload::Pass { device, occupancy } => {
+            fields.push(("ph", Json::str("X")));
+            fields.push(("dur", Json::num(ev.dur_us as f64)));
+            args.push(("device", Json::num(device as f64)));
+            args.push(("occupancy", Json::num(occupancy as f64)));
+        }
+        Payload::Enqueue { device, depth } => {
+            instant(&mut fields);
+            args.push(("device", Json::num(device as f64)));
+            args.push(("depth", Json::num(depth as f64)));
+        }
+        Payload::Reject { depth } => {
+            instant(&mut fields);
+            args.push(("depth", Json::num(depth as f64)));
+        }
+        Payload::DeadlineMiss { at } => {
+            instant(&mut fields);
+            args.push(("at", Json::str(at)));
+        }
+        Payload::Admit { device, queue_us } => {
+            instant(&mut fields);
+            args.push(("device", Json::num(device as f64)));
+            args.push(("queue_us", Json::num(queue_us as f64)));
+        }
+        Payload::Join { device, lanes } => {
+            instant(&mut fields);
+            args.push(("device", Json::num(device as f64)));
+            args.push(("lanes", Json::num(lanes as f64)));
+        }
+        Payload::Retire { device, steps } => {
+            instant(&mut fields);
+            args.push(("device", Json::num(device as f64)));
+            args.push(("steps", Json::num(steps as f64)));
+        }
+        Payload::Steal { device, victim } => {
+            instant(&mut fields);
+            args.push(("device", Json::num(device as f64)));
+            args.push(("victim", Json::num(victim as f64)));
+        }
+        Payload::Migrate { from, to } => {
+            instant(&mut fields);
+            args.push(("from", Json::num(from as f64)));
+            args.push(("to", Json::num(to as f64)));
+        }
+        Payload::Degrade => {
+            instant(&mut fields);
+        }
+        Payload::Policy { step, branch, site, reuse, mse, lambda } => {
+            instant(&mut fields);
+            args.push(("step", Json::num(step as f64)));
+            args.push(("branch", Json::num(branch as f64)));
+            args.push(("site", Json::num(site as f64)));
+            args.push(("action", Json::str(if reuse { "reuse" } else { "compute" })));
+            if mse >= 0.0 {
+                args.push(("mse", Json::num(mse)));
+            }
+            if lambda >= 0.0 {
+                args.push(("lambda", Json::num(lambda)));
+            }
+        }
+        Payload::H2d { bytes } => {
+            instant(&mut fields);
+            args.push(("bytes", Json::num(bytes as f64)));
+        }
+        Payload::D2h { bytes } => {
+            instant(&mut fields);
+            args.push(("bytes", Json::num(bytes as f64)));
+        }
+    }
+    fields.push(("args", Json::obj(args)));
+    Json::obj(fields)
+}
+
+/// Mark the event under construction as a thread-scoped instant.
+fn instant(fields: &mut Vec<(&'static str, Json)>) {
+    fields.push(("ph", Json::str("i")));
+    fields.push(("s", Json::str("t")));
+}
+
+/// Wrap rendered events in the Chrome trace envelope.
+pub fn document(events: Vec<Json>) -> Json {
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::arr(events)),
+    ])
+}
+
+/// Render a drained batch straight to the envelope.
+pub fn render(events: &[Event]) -> Json {
+    document(events.iter().map(event_json).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Tracer;
+    use crate::util::json;
+
+    #[test]
+    fn rendered_document_reparses_with_span_pair() {
+        let t = Tracer::new(true, 256);
+        let id = t.next_trace_id();
+        t.record(id, 0, Payload::Begin);
+        t.record(id, 0, Payload::Enqueue { device: 0, depth: 1 });
+        t.record(id, 0, Payload::Admit { device: 0, queue_us: 42 });
+        t.record(id, 900, Payload::Pass { device: 0, occupancy: 2 });
+        t.record(
+            id,
+            0,
+            Payload::Policy { step: 1, branch: 0, site: 3, reuse: true, mse: 0.25, lambda: 0.5 },
+        );
+        t.record(id, 0, Payload::Retire { device: 0, steps: 8 });
+        t.record(id, 0, Payload::End { ok: true });
+
+        let doc = render(&t.drain(0).events);
+        let parsed = json::parse(&doc.to_string()).expect("chrome JSON must re-parse");
+        let evs = parsed
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        assert_eq!(evs.len(), 7);
+
+        // Exactly one async begin and one async end, both keyed by the
+        // request's trace id.
+        let phs: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("ph").and_then(|p| p.as_str())).collect();
+        assert_eq!(phs.iter().filter(|p| **p == "b").count(), 1);
+        assert_eq!(phs.iter().filter(|p| **p == "e").count(), 1);
+        for e in evs {
+            let ph = e.get("ph").and_then(|p| p.as_str()).expect("ph");
+            match ph {
+                "b" | "e" => {
+                    assert_eq!(e.get("id").and_then(|v| v.as_u64()), Some(id));
+                }
+                "X" => {
+                    assert_eq!(e.get("dur").and_then(|v| v.as_u64()), Some(900));
+                    let args = e.get("args").expect("args");
+                    assert_eq!(args.get("occupancy").and_then(|v| v.as_u64()), Some(2));
+                }
+                "i" => {
+                    assert_eq!(e.get("s").and_then(|v| v.as_str()), Some("t"));
+                }
+                other => panic!("unexpected ph {other:?}"),
+            }
+        }
+
+        // The policy instant carries the reuse decision and both scalars.
+        let pol = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("policy"))
+            .expect("policy event");
+        let args = pol.get("args").expect("args");
+        assert_eq!(args.get("action").and_then(|v| v.as_str()), Some("reuse"));
+        assert_eq!(args.get("mse").and_then(|v| v.as_f64()), Some(0.25));
+        assert_eq!(args.get("lambda").and_then(|v| v.as_f64()), Some(0.5));
+    }
+
+    #[test]
+    fn unmeasured_policy_event_omits_scalars() {
+        let ev = Event {
+            seq: 0,
+            ts_us: 10,
+            dur_us: 0,
+            tid: 1,
+            trace_id: 5,
+            payload: Payload::Policy {
+                step: 2,
+                branch: 1,
+                site: 0,
+                reuse: false,
+                mse: -1.0,
+                lambda: -1.0,
+            },
+        };
+        let j = event_json(&ev);
+        let args = j.get("args").expect("args");
+        assert!(args.get("mse").is_none());
+        assert!(args.get("lambda").is_none());
+        assert_eq!(args.get("action").and_then(|v| v.as_str()), Some("compute"));
+    }
+}

@@ -1,0 +1,488 @@
+//! Structured per-step event tracing — request timelines, reuse-decision
+//! timelines, and the drain behind the `trace` wire op / `foresight trace`
+//! CLI.
+//!
+//! The serving stack's aggregate telemetry (`server::Telemetry`, the
+//! `stats` op) answers "how is the fleet doing"; this module answers
+//! "where did request X's wall-clock go" and "which sites did the policy
+//! reuse at which steps, at what drift". Every layer emits [`Event`]s
+//! tagged with a `trace_id` allocated per request at the wire front:
+//!
+//! * **server** — request span begin/end, enqueue depth, overload rejects,
+//!   deadline misses;
+//! * **scheduler** — cohort admit/join/retire, job steals, session
+//!   migrations, degrade swaps, and one complete (`dur_us`) event per
+//!   fused cohort pass carrying device ordinal and occupancy;
+//! * **engine/session** — one [`Payload::Policy`] instant per measured
+//!   site per step per CFG branch: reuse vs compute, observed drift MSE,
+//!   and the policy's λ threshold at that site;
+//! * **runtime** — h2d/d2h transfer events mirroring the
+//!   `runtime::TransferStats` byte model, attributed to the emitting
+//!   thread's current trace scope ([`scope`]).
+//!
+//! # Never block, never grow: drop instead
+//!
+//! Emission must be safe from under any lock in the system and from every
+//! hot path, so the tracer is **always compiled, runtime-toggled**
+//! ([`Tracer::enable`]; a single relaxed atomic load when off) and writes
+//! into **bounded ring shards** guarded by `util::sync::OrderedMutex` at
+//! [`RANK_TRACE_RING`] — the highest rank in the table, so holding any
+//! other lock while emitting is rank-legal. The emit path only ever uses
+//! `try_lock`: shard contention **drops the event and increments a drop
+//! counter** instead of waiting, and a full ring **evicts its oldest
+//! event** (also counted) instead of allocating. `trace_events` /
+//! `trace_drops` surface through the `stats` and `metrics` ops.
+//!
+//! # Draining
+//!
+//! [`Tracer::drain`] is non-destructive and cursor-based: pass the `next`
+//! sequence number returned by the previous drain to read incrementally
+//! (the `{"op":"trace","since":N}` wire op is exactly this). Sequence
+//! numbers are globally ordered; gaps are dropped events. [`chrome`]
+//! renders drained events as Chrome trace-event JSON (Perfetto-loadable).
+//!
+//! # Environment
+//!
+//! * `FORESIGHT_TRACE` — `1`/`true`/`on` starts the process-wide tracer
+//!   enabled (it can also be toggled at runtime, e.g. via the `trace`
+//!   wire op's `enable` flag).
+//! * `FORESIGHT_TRACE_RING` — per-shard ring capacity in events
+//!   (default 16384; floor 2). Small values force overflow, which the
+//!   fig23 bench uses to prove drops never stall a step boundary.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::util::sync::{OrderedMutex, RANK_TRACE_RING};
+
+pub mod chrome;
+
+/// Number of ring shards. Threads map to shards by their dense trace
+/// ordinal, so two hot threads rarely contend on one shard.
+const SHARDS: usize = 8;
+
+/// Default per-shard ring capacity (events). At ~96 B/event the default
+/// tracer retains ~12 MiB of history process-wide.
+const DEFAULT_RING: usize = 16384;
+
+/// Kind-specific data carried by an [`Event`]. Fixed-size and `Copy` so a
+/// ring slot never owns heap memory.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Payload {
+    /// Request span opens: the generate op was accepted off the wire.
+    Begin,
+    /// Request span closes: the reply was produced (`ok:false` = error,
+    /// reject or deadline miss).
+    End { ok: bool },
+    /// Request routed into a device queue at the given depth.
+    Enqueue { device: u64, depth: u64 },
+    /// Request refused by bounded admission (every candidate queue full).
+    Reject { depth: u64 },
+    /// Deadline expired; `at` is the enforcement point
+    /// (`"queue"` / `"admit"` / `"lane"`).
+    DeadlineMiss { at: &'static str },
+    /// Session started on a device after `queue_us` microseconds queued.
+    Admit { device: u64, queue_us: u64 },
+    /// Session joined an in-flight cohort (lane count after the join).
+    Join { device: u64, lanes: u64 },
+    /// Session finished and left the cohort after `steps` steps.
+    Retire { device: u64, steps: u64 },
+    /// Idle device pulled a queued job routed to `victim`.
+    Steal { device: u64, victim: u64 },
+    /// Running session moved between devices at a step boundary.
+    Migrate { from: u64, to: u64 },
+    /// Queue pressure swapped `policy:"auto"` to a faster frontier tier.
+    Degrade,
+    /// One fused cohort pass at a step boundary: a complete event whose
+    /// `dur_us` is the pass wall time; occupancy = lanes advanced.
+    Pass { device: u64, occupancy: u64 },
+    /// One per-site reuse decision: at `step`, CFG `branch`, measured
+    /// site index `site`, the policy chose reuse (true) or compute.
+    /// `mse` is the observed drift (negative = not measured this step)
+    /// and `lambda` the policy's threshold at that site (negative =
+    /// no threshold recorded).
+    Policy { step: u32, branch: u8, site: u32, reuse: bool, mse: f64, lambda: f64 },
+    /// Host→device transfer (bytes), from `runtime::TransferStats`.
+    H2d { bytes: u64 },
+    /// Device→host transfer (bytes), from `runtime::TransferStats`.
+    D2h { bytes: u64 },
+}
+
+impl Payload {
+    /// Stable lowercase event name used in exports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Payload::Begin | Payload::End { .. } => "request",
+            Payload::Enqueue { .. } => "enqueue",
+            Payload::Reject { .. } => "reject",
+            Payload::DeadlineMiss { .. } => "deadline_miss",
+            Payload::Admit { .. } => "admit",
+            Payload::Join { .. } => "join",
+            Payload::Retire { .. } => "retire",
+            Payload::Steal { .. } => "steal",
+            Payload::Migrate { .. } => "migrate",
+            Payload::Degrade => "degrade",
+            Payload::Pass { .. } => "pass",
+            Payload::Policy { .. } => "policy",
+            Payload::H2d { .. } => "h2d",
+            Payload::D2h { .. } => "d2h",
+        }
+    }
+}
+
+/// One traced occurrence. `Copy` and pointer-free by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Global emission order; gaps in a drain mean dropped events.
+    pub seq: u64,
+    /// Microseconds since the tracer's epoch (monotonic process-wide,
+    /// hence monotonic per thread).
+    pub ts_us: u64,
+    /// Wall duration for complete events ([`Payload::Pass`]); 0 otherwise.
+    pub dur_us: u64,
+    /// Dense per-thread ordinal (assigned at a thread's first emission).
+    pub tid: u64,
+    /// Request span this event belongs to; 0 = unattributed.
+    pub trace_id: u64,
+    pub payload: Payload,
+}
+
+/// Bounded event ring: push evicts the oldest entry when full.
+struct Ring {
+    buf: VecDeque<Event>,
+    cap: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Ring { buf: VecDeque::with_capacity(cap.min(1024)), cap }
+    }
+
+    /// Append `ev`; returns false when an old event was evicted to make
+    /// room (an overflow drop).
+    fn push(&mut self, ev: Event) -> bool {
+        let clean = self.buf.len() < self.cap;
+        if !clean {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(ev);
+        clean
+    }
+}
+
+/// Result of a [`Tracer::drain`]: events at `seq >= since` still resident
+/// in the rings, ordered by `seq`.
+#[derive(Debug)]
+pub struct Drained {
+    pub events: Vec<Event>,
+    /// Cursor for the next incremental drain (`last seq + 1`, or the
+    /// `since` that was passed when nothing matched).
+    pub next: u64,
+    /// Total events ever ring-buffered by this tracer.
+    pub emitted: u64,
+    /// Total events lost to shard contention or ring overflow.
+    pub dropped: u64,
+    /// Whether the tracer is currently recording.
+    pub enabled: bool,
+}
+
+/// Process-wide event tracer. See the module docs for the design; almost
+/// all callers go through the free functions ([`emit`], [`scope`]) and
+/// [`global`].
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    seq: AtomicU64,
+    next_trace_id: AtomicU64,
+    events_total: AtomicU64,
+    drops_total: AtomicU64,
+    shards: Vec<OrderedMutex<Ring>>,
+}
+
+impl Tracer {
+    /// Build a tracer with an explicit initial state and per-shard ring
+    /// capacity. Unit tests use private instances; production code shares
+    /// [`global`].
+    pub fn new(enabled: bool, ring_cap: usize) -> Self {
+        let cap = ring_cap.max(2);
+        let mut shards = Vec::with_capacity(SHARDS);
+        for _ in 0..SHARDS {
+            shards.push(OrderedMutex::new("trace.ring", RANK_TRACE_RING, Ring::new(cap)));
+        }
+        Tracer {
+            enabled: AtomicBool::new(enabled),
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            next_trace_id: AtomicU64::new(1),
+            events_total: AtomicU64::new(0),
+            drops_total: AtomicU64::new(0),
+            shards,
+        }
+    }
+
+    fn from_env() -> Self {
+        let enabled = std::env::var("FORESIGHT_TRACE")
+            .map(|v| matches!(v.as_str(), "1" | "true" | "on"))
+            .unwrap_or(false);
+        let cap = std::env::var("FORESIGHT_TRACE_RING")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_RING);
+        Tracer::new(enabled, cap)
+    }
+
+    /// Is the tracer currently recording?
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Toggle recording at runtime. Disabling keeps already-buffered
+    /// events drainable.
+    pub fn enable(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Allocate a fresh nonzero request trace id.
+    pub fn next_trace_id(&self) -> u64 {
+        self.next_trace_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Total events ring-buffered so far (monotonic; includes events that
+    /// have since scrolled out of the rings).
+    pub fn events_total(&self) -> u64 {
+        self.events_total.load(Ordering::Relaxed)
+    }
+
+    /// Total events dropped so far (shard contention + ring overflow).
+    pub fn drops_total(&self) -> u64 {
+        self.drops_total.load(Ordering::Relaxed)
+    }
+
+    /// Record one event. Never blocks: a contended shard or full ring
+    /// drops instead (see module docs). `dur_us` is nonzero only for
+    /// complete events like [`Payload::Pass`].
+    pub fn record(&self, trace_id: u64, dur_us: u64, payload: Payload) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ts_us = self.epoch.elapsed().as_micros() as u64;
+        let tid = tid();
+        let ev = Event { seq, ts_us, dur_us, tid, trace_id, payload };
+        match self.shards[(tid as usize) % self.shards.len()].try_lock() {
+            Some(mut guard) => {
+                let clean = guard.push(ev);
+                self.events_total.fetch_add(1, Ordering::Relaxed);
+                if !clean {
+                    self.drops_total.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            None => {
+                self.drops_total.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Non-destructive cursor drain: every resident event with
+    /// `seq >= since`, ordered by `seq`. Pass the returned `next` back in
+    /// to read incrementally.
+    pub fn drain(&self, since: u64) -> Drained {
+        let mut events = Vec::new();
+        for ring in &self.shards {
+            let guard = ring.lock();
+            for ev in guard.buf.iter() {
+                if ev.seq >= since {
+                    events.push(*ev);
+                }
+            }
+        }
+        events.sort_by_key(|e| e.seq);
+        let next = events.last().map_or(since, |e| e.seq + 1);
+        Drained {
+            events,
+            next,
+            emitted: self.events_total(),
+            dropped: self.drops_total(),
+            enabled: self.enabled(),
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+
+/// The process-wide tracer, initialized from the environment on first use
+/// (`FORESIGHT_TRACE`, `FORESIGHT_TRACE_RING`).
+pub fn global() -> &'static Tracer {
+    GLOBAL.get_or_init(Tracer::from_env)
+}
+
+/// Emit one instant event on the global tracer.
+pub fn emit(trace_id: u64, payload: Payload) {
+    global().record(trace_id, 0, payload);
+}
+
+/// Emit one complete event (with wall duration) on the global tracer.
+pub fn emit_dur(trace_id: u64, dur_us: u64, payload: Payload) {
+    global().record(trace_id, dur_us, payload);
+}
+
+/// Emit one instant event attributed to the thread's current scope
+/// ([`scope`]); used by layers that don't carry a trace id explicitly
+/// (e.g. runtime transfers).
+pub fn emit_here(payload: Payload) {
+    global().record(current(), 0, payload);
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// This thread's dense trace ordinal (stable for the thread's lifetime).
+fn tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// The trace id currently attributed to this thread (0 = none).
+pub fn current() -> u64 {
+    CURRENT.with(|c| c.get())
+}
+
+/// Set this thread's trace attribution directly. Prefer [`scope`] where
+/// the attribution has a lexical extent; long-lived per-request worker
+/// threads (session branch workers) set it once at startup.
+pub fn set_current(id: u64) {
+    CURRENT.with(|c| c.set(id));
+}
+
+/// RAII trace attribution: events emitted by this thread while the guard
+/// lives (including [`emit_here`] from callees) belong to `id`; the
+/// previous attribution is restored on drop.
+#[must_use = "dropping the scope immediately restores the previous trace id"]
+pub struct Scope {
+    prev: u64,
+}
+
+pub fn scope(id: u64) -> Scope {
+    let prev = current();
+    set_current(id);
+    Scope { prev }
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        set_current(self.prev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(false, 64);
+        t.record(1, 0, Payload::Begin);
+        t.record(1, 0, Payload::End { ok: true });
+        let d = t.drain(0);
+        assert!(d.events.is_empty());
+        assert_eq!(d.next, 0);
+        assert_eq!(d.emitted, 0);
+        assert_eq!(d.dropped, 0);
+        assert!(!d.enabled);
+    }
+
+    #[test]
+    fn drain_is_cursor_incremental_and_seq_ordered() {
+        let t = Tracer::new(true, 1024);
+        for i in 0..5 {
+            t.record(i, 0, Payload::Enqueue { device: 0, depth: i });
+        }
+        let d1 = t.drain(0);
+        assert_eq!(d1.events.len(), 5);
+        assert!(d1.events.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert_eq!(d1.next, d1.events.last().map(|e| e.seq + 1).expect("nonempty"));
+        // Nothing new: same cursor comes back.
+        let d2 = t.drain(d1.next);
+        assert!(d2.events.is_empty());
+        assert_eq!(d2.next, d1.next);
+        // New events appear after the cursor; old ones stay readable from 0.
+        t.record(9, 0, Payload::Reject { depth: 3 });
+        let d3 = t.drain(d1.next);
+        assert_eq!(d3.events.len(), 1);
+        assert_eq!(d3.events[0].trace_id, 9);
+        assert_eq!(t.drain(0).events.len(), 6);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        // All events from one thread land in one shard, so a tiny cap
+        // forces eviction deterministically.
+        let t = Tracer::new(true, 4);
+        for i in 0..10u64 {
+            t.record(i, 0, Payload::H2d { bytes: i });
+        }
+        assert_eq!(t.events_total(), 10);
+        assert_eq!(t.drops_total(), 6);
+        let d = t.drain(0);
+        assert_eq!(d.events.len(), 4);
+        // The survivors are the newest four, in order.
+        let ids: Vec<u64> = d.events.iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+        assert_eq!(d.dropped, 6);
+    }
+
+    #[test]
+    fn timestamps_are_monotonic_per_thread() {
+        let t = Tracer::new(true, 1024);
+        for _ in 0..100 {
+            t.record(1, 0, Payload::D2h { bytes: 4 });
+        }
+        let d = t.drain(0);
+        assert_eq!(d.events.len(), 100);
+        assert!(d.events.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        // Single-threaded test: every event shares this thread's tid.
+        assert!(d.events.iter().all(|e| e.tid == d.events[0].tid));
+    }
+
+    #[test]
+    fn scope_nests_and_restores() {
+        assert_eq!(current(), 0);
+        {
+            let _a = scope(7);
+            assert_eq!(current(), 7);
+            {
+                let _b = scope(8);
+                assert_eq!(current(), 8);
+            }
+            assert_eq!(current(), 7);
+        }
+        assert_eq!(current(), 0);
+    }
+
+    #[test]
+    fn trace_ids_are_fresh_and_nonzero() {
+        let t = Tracer::new(true, 16);
+        let a = t.next_trace_id();
+        let b = t.next_trace_id();
+        assert!(a > 0 && b > a);
+    }
+
+    #[test]
+    fn enable_toggle_gates_recording() {
+        let t = Tracer::new(false, 64);
+        t.record(1, 0, Payload::Begin);
+        t.enable(true);
+        t.record(1, 0, Payload::Begin);
+        t.enable(false);
+        t.record(1, 0, Payload::Begin);
+        let d = t.drain(0);
+        assert_eq!(d.events.len(), 1);
+        assert_eq!(d.emitted, 1);
+    }
+}

@@ -49,6 +49,8 @@ impl Welford {
     }
 }
 
+/// Arithmetic mean; 0.0 (never NaN) on an empty slice, so stats surfaces
+/// can serialize an idle reservoir without poisoning JSON consumers.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -65,10 +67,16 @@ pub fn std(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, p in [0, 100].
+///
+/// Total on degenerate input — the telemetry surface calls this on live
+/// reservoirs of any fill level: an empty slice yields 0.0 (never NaN),
+/// and a `p` outside [0, 100] (or NaN) clamps to the nearest valid
+/// percentile instead of indexing out of bounds.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
+    let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 100.0) };
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
@@ -342,6 +350,53 @@ mod tests {
             r.samples().iter().any(|&x| x < (n / 2) as f64),
             "reservoir degenerated into a recency window"
         );
+    }
+
+    #[test]
+    fn empty_inputs_are_zero_never_nan() {
+        let empty: [f64; 0] = [];
+        assert_eq!(mean(&empty), 0.0);
+        assert_eq!(std(&empty), 0.0);
+        assert_eq!(percentile(&empty, 50.0), 0.0);
+        assert_eq!(median(&empty), 0.0);
+        let r = Reservoir::new(8);
+        assert_eq!(mean(r.samples()), 0.0);
+        assert_eq!(percentile(r.samples(), 99.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, -50.0), 1.0);
+        assert_eq!(percentile(&xs, 250.0), 3.0);
+        assert_eq!(percentile(&xs, f64::NAN), 1.0);
+    }
+
+    #[test]
+    fn single_sample_reservoir_stats_are_total() {
+        let mut r = Reservoir::new(8);
+        r.push(7.5);
+        assert_eq!(mean(r.samples()), 7.5);
+        assert_eq!(percentile(r.samples(), 0.0), 7.5);
+        assert_eq!(percentile(r.samples(), 50.0), 7.5);
+        assert_eq!(percentile(r.samples(), 100.0), 7.5);
+    }
+
+    #[test]
+    fn post_overflow_reservoir_stats_stay_in_range() {
+        // Past cap the reservoir subsamples; every derived stat must stay
+        // finite and inside the pushed value range.
+        let mut r = Reservoir::new(4);
+        for i in 0..1_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 4);
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            let v = percentile(r.samples(), p);
+            assert!(v.is_finite() && (0.0..1_000.0).contains(&v), "p{p} = {v}");
+        }
+        let m = mean(r.samples());
+        assert!(m.is_finite() && (0.0..1_000.0).contains(&m));
     }
 
     #[test]

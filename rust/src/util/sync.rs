@@ -27,6 +27,7 @@
 //! | 52   | [`RANK_TELEMETRY_OCCUPANCY`]| `server::Telemetry::occupancy`         |
 //! | 53   | [`RANK_DEVICE_OCCUPANCY`]   | `server::DeviceTelemetry::occupancy`   |
 //! | 60   | [`RANK_POOL_SLOTS`]         | `util::threadpool::run_all` slots      |
+//! | 70   | [`RANK_TRACE_RING`]         | `trace::Tracer` ring shards            |
 //!
 //! Gaps are deliberate: a new lock slots in without renumbering. When you
 //! add one, give it a rank consistent with every existing nesting, add a
@@ -50,7 +51,7 @@
 //! continuing.
 
 use std::ops::{Deref, DerefMut};
-use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, TryLockError};
 use std::time::Duration;
 
 /// `server::scheduler::Router::state` — queues + device table.
@@ -73,6 +74,11 @@ pub const RANK_TELEMETRY_OCCUPANCY: u32 = 52;
 pub const RANK_DEVICE_OCCUPANCY: u32 = 53;
 /// `util::threadpool::run_all` result slots.
 pub const RANK_POOL_SLOTS: u32 = 60;
+/// `trace::Tracer` event-ring shards. Highest rank on purpose: events are
+/// emitted from under any other lock in the system, so the ring must nest
+/// inside everything (and `trace` only ever takes it via `try_lock`, which
+/// cannot block regardless).
+pub const RANK_TRACE_RING: u32 = 70;
 
 /// A named, ranked, poison-tolerant mutex. See the module docs for the
 /// canonical rank table and the debug-build acquisition checker.
@@ -94,6 +100,23 @@ impl<T> OrderedMutex<T> {
         checker::acquire(self.rank, self.name);
         let guard = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
         OrderedGuard { lock: self, guard: Some(guard) }
+    }
+
+    /// Try to acquire the lock without blocking. Returns `None` when the
+    /// mutex is currently held by another thread; recovers from poison like
+    /// [`OrderedMutex::lock`]. The rank checker registers the acquisition
+    /// only on success, so a failed try leaves the thread's held-lock stack
+    /// untouched. This is the emission primitive for `trace`: contention
+    /// means "drop the event", never "stall the hot path".
+    pub fn try_lock(&self) -> Option<OrderedGuard<'_, T>> {
+        let guard = match self.inner.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => return None,
+        };
+        #[cfg(debug_assertions)]
+        checker::acquire(self.rank, self.name);
+        Some(OrderedGuard { lock: self, guard: Some(guard) })
     }
 
     /// Consume the mutex, recovering the value even if poisoned.
@@ -295,6 +318,29 @@ mod tests {
             let _h = b0.lock();
         });
         assert!(t.join().is_err(), "equal-rank nesting must trip the checker");
+    }
+
+    #[test]
+    fn try_lock_never_blocks_and_recovers_poison() {
+        let m = Arc::new(OrderedMutex::new("test.try", 70, 5u32));
+        // Uncontended: succeeds and the guard derefs.
+        {
+            let g = m.try_lock().expect("uncontended try_lock must succeed");
+            assert_eq!(*g, 5);
+            // Held: a second try on the same mutex from another thread fails
+            // fast instead of blocking.
+            let m2 = Arc::clone(&m);
+            let t = std::thread::spawn(move || m2.try_lock().is_none());
+            assert!(t.join().unwrap(), "contended try_lock must return None");
+        }
+        // Poisoned: recovers the value like lock().
+        let m2 = Arc::clone(&m);
+        let t = std::thread::spawn(move || {
+            let _g = m2.try_lock().unwrap();
+            panic!("die holding the lock");
+        });
+        assert!(t.join().is_err());
+        assert_eq!(*m.try_lock().expect("poisoned try_lock must recover"), 5);
     }
 
     #[test]

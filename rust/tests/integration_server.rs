@@ -1289,3 +1289,222 @@ fn poisoned_telemetry_keeps_stats_serving() {
     assert_eq!(stats.get("latency_samples").unwrap().as_usize().unwrap(), 0);
     server.shutdown();
 }
+
+// --- observability: response echoes, Prometheus scrape, trace spans --------
+
+#[test]
+fn generate_echoes_queue_wait_and_reuse_fraction() {
+    let Some(server) = start_server(1) else { return };
+    let mut c = Client::connect(&server.addr()).unwrap();
+    let r = c.call(&gen_req("foresight", "timeline probe", 5, 10)).unwrap();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+
+    let qw = r.get("queue_wait_s").unwrap().as_f64().unwrap();
+    assert!(qw.is_finite() && qw >= 0.0, "{r}");
+    assert_eq!(
+        qw,
+        r.get("queue_s").unwrap().as_f64().unwrap(),
+        "queue_wait_s must alias queue_s exactly: {r}"
+    );
+
+    let rf = r.get("reuse_fraction").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&rf), "{r}");
+    let reused = r.get("reused_units").unwrap().as_f64().unwrap();
+    let computed = r.get("computed_units").unwrap().as_f64().unwrap();
+    let fallback = r.get("fallback_units").unwrap().as_f64().unwrap();
+    assert!(fallback >= 0.0, "{r}");
+    if reused + computed > 0.0 {
+        assert!(
+            (rf - reused / (reused + computed)).abs() < 1e-9,
+            "reuse_fraction must match its unit counters: {r}"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn metrics_op_renders_prometheus_exposition() {
+    let Some(server) = start_server(1) else { return };
+    let mut c = Client::connect(&server.addr()).unwrap();
+    let ok = c.call(&gen_req("none", "scrape probe", 1, 4)).unwrap();
+    assert_eq!(ok.get("status").unwrap().as_str().unwrap(), "ok", "{ok}");
+
+    let m = c.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    assert_eq!(m.get("status").unwrap().as_str().unwrap(), "ok", "{m}");
+    assert_eq!(
+        m.get("content_type").unwrap().as_str().unwrap(),
+        "text/plain; version=0.0.4"
+    );
+    let body = m.get("body").unwrap().as_str().unwrap().to_string();
+
+    // Every line is a HELP/TYPE comment or a parseable foresight_* sample.
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('#') {
+            assert!(
+                line.starts_with("# HELP foresight_") || line.starts_with("# TYPE foresight_"),
+                "malformed comment line {line:?}"
+            );
+            continue;
+        }
+        let (name, value) = line
+            .split_once(' ')
+            .unwrap_or_else(|| panic!("malformed sample line {line:?}"));
+        assert!(name.starts_with("foresight_"), "{line}");
+        let v: f64 = value
+            .parse()
+            .unwrap_or_else(|_| panic!("unparseable value in {line:?}"));
+        assert!(v.is_finite(), "{line}");
+    }
+
+    // The served request and the ledger's new trace counters all scrape.
+    assert!(body.contains("# TYPE foresight_requests gauge"), "{body}");
+    assert!(body.contains("\nforesight_requests 1\n") || body.starts_with("foresight_requests 1"), "{body}");
+    for key in ["trace_events", "trace_drops", "traces_served", "latency_p99_s", "queue_mean_s"] {
+        assert!(
+            body.contains(&format!("# TYPE foresight_{key} gauge")),
+            "missing family foresight_{key} in:\n{body}"
+        );
+    }
+
+    // Sharded topology adds per-device families with device labels.
+    if test_devices() > 1 {
+        for d in 0..test_devices() {
+            assert!(
+                body.contains(&format!("foresight_device_joins{{device=\"{d}\"}}")),
+                "missing device {d} sample in:\n{body}"
+            );
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn trace_spans_one_per_request_and_ordered() {
+    let Some(server) = start_server(2) else { return };
+    let addr = server.addr();
+
+    // Enable the tracer over the wire. Never disable it here: the tracer
+    // is process-global and other tests in this binary may be recording.
+    let mut c = Client::connect(&addr).unwrap();
+    let t0 = c
+        .call(&Json::obj(vec![
+            ("op", Json::str("trace")),
+            ("enable", Json::Bool(true)),
+        ]))
+        .unwrap();
+    assert_eq!(t0.get("status").unwrap().as_str().unwrap(), "ok", "{t0}");
+    assert!(t0.get("enabled").unwrap().as_bool().unwrap(), "{t0}");
+
+    // Staggered sessions with step counts no other test uses, so this
+    // test can find its own spans in the shared ring (retire events
+    // carry the step total).
+    let steps = [13usize, 15, 17];
+    let mut handles = Vec::new();
+    for (i, &n) in steps.iter().enumerate() {
+        handles.push(std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20 * i as u64));
+            let mut c = Client::connect(&addr).unwrap();
+            let mut req = gen_req("foresight", &format!("span probe {i}"), i as u64, n);
+            if let Json::Obj(ref mut o) = req {
+                o.insert("trace".into(), Json::Bool(true));
+            }
+            c.call(&req).unwrap()
+        }));
+    }
+    let resps: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for r in &resps {
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok", "{r}");
+        // Timeline ↔ RunStats agreement: the planned branch-0 reuse count
+        // never exceeds effective reuses plus cold-cache fallbacks.
+        let tl = r.get("reuse_timeline").unwrap().as_arr().unwrap().to_vec();
+        assert!(!tl.is_empty(), "trace:true must attach a timeline: {r}");
+        let planned = tl
+            .iter()
+            .filter(|e| e.get("action").and_then(|a| a.as_str()) == Some("reuse"))
+            .count() as f64;
+        let reused = r.get("reused_units").unwrap().as_f64().unwrap();
+        let fallback = r.get("fallback_units").unwrap().as_f64().unwrap();
+        assert!(
+            planned <= reused + fallback,
+            "planned {planned} > reused {reused} + fallback {fallback}: {r}"
+        );
+        let tl_steps: Vec<usize> = tl
+            .iter()
+            .map(|e| e.get("step").unwrap().as_usize().unwrap())
+            .collect();
+        assert!(
+            tl_steps.windows(2).all(|w| w[0] <= w[1]),
+            "timeline steps out of order: {tl_steps:?}"
+        );
+    }
+
+    // Drain the ring and reconstruct this test's spans.
+    let d = c.call(&Json::obj(vec![("op", Json::str("trace"))])).unwrap();
+    assert_eq!(d.get("status").unwrap().as_str().unwrap(), "ok", "{d}");
+    let events = d.get("events").unwrap().as_arr().unwrap().to_vec();
+
+    let arg_u64 = |e: &Json, k: &str| e.get("args").and_then(|a| a.get(k)).and_then(|v| v.as_u64());
+    let name_of = |e: &Json| e.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+    let seq_of = |e: &Json| e.get("seq").and_then(|v| v.as_u64()).unwrap();
+
+    let mut ours: Vec<u64> = Vec::new();
+    for e in &events {
+        if name_of(e) == "retire" && arg_u64(e, "steps").is_some_and(|s| steps.contains(&(s as usize))) {
+            if let Some(id) = arg_u64(e, "trace_id") {
+                if id != 0 && !ours.contains(&id) {
+                    ours.push(id);
+                }
+            }
+        }
+    }
+    assert_eq!(ours.len(), 3, "expected one retire per staggered request among {} events", events.len());
+
+    for &id in &ours {
+        let evs: Vec<&Json> = events
+            .iter()
+            .filter(|e| arg_u64(e, "trace_id") == Some(id))
+            .collect();
+        let ph = |e: &Json| e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        // Exactly one span per request.
+        let begins: Vec<&&Json> = evs.iter().filter(|e| ph(e) == "b").collect();
+        let ends: Vec<&&Json> = evs.iter().filter(|e| ph(e) == "e").collect();
+        assert_eq!(begins.len(), 1, "one begin for trace {id}");
+        assert_eq!(ends.len(), 1, "one end for trace {id}");
+        let b = seq_of(begins[0]);
+        let e_seq = seq_of(ends[0]);
+
+        // admitted ≤ step(0) < … < finished, in global emission order.
+        let admit = evs
+            .iter()
+            .find(|e| name_of(e) == "admit")
+            .unwrap_or_else(|| panic!("no admit event for trace {id}"));
+        let retire = evs
+            .iter()
+            .find(|e| name_of(e) == "retire")
+            .unwrap_or_else(|| panic!("no retire event for trace {id}"));
+        let mut policies: Vec<&&Json> = evs.iter().filter(|e| name_of(e) == "policy").collect();
+        assert!(!policies.is_empty(), "no policy events for trace {id}");
+        policies.sort_by_key(|e| seq_of(e));
+        assert!(b < seq_of(admit), "begin after admit for trace {id}");
+        assert!(
+            seq_of(admit) <= seq_of(policies[0]),
+            "admit after first policy step for trace {id}"
+        );
+        assert!(
+            seq_of(policies[policies.len() - 1]) < seq_of(retire),
+            "policy event after retire for trace {id}"
+        );
+        assert!(seq_of(retire) < e_seq, "retire after span end for trace {id}");
+        // Per-step policy batches arrive in step order.
+        let psteps: Vec<u64> = policies.iter().map(|e| arg_u64(e, "step").unwrap()).collect();
+        assert!(
+            psteps.windows(2).all(|w| w[0] <= w[1]),
+            "policy steps out of order for trace {id}: {psteps:?}"
+        );
+    }
+    server.shutdown();
+}
