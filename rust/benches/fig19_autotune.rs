@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
             gammas: vec![0.25, 1.0, 2.0],
             warmups: vec![0.15],
             static_nr: vec![(1, 2)],
+            orders: vec![1, 2],
         },
     };
     let outcome = profile_engine(&engine, &opts)?;

@@ -252,6 +252,7 @@ fn main() -> anyhow::Result<()> {
                     branch: 0,
                     site: 0,
                     reuse: s % 2 == 0,
+                    predict: false,
                     mse: 0.1,
                     lambda: 0.2,
                 },

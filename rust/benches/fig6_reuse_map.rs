@@ -42,8 +42,8 @@ fn main() -> anyhow::Result<()> {
         let mut row = vec![format!("L{layer:02}{kind}")];
         let mut line = format!("  L{layer:02}{kind} ");
         for step in &r.reuse_map {
-            row.push(if step[site] { "reuse".into() } else { "compute".into() });
-            line.push(if step[site] { '→' } else { '✓' });
+            row.push(step[site].name().into());
+            line.push(if step[site].is_reuse() { '→' } else { '✓' });
         }
         t.row(row);
         ascii.push_str(&line);
@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
         let c = |k: usize| {
             r.reuse_map
                 .iter()
-                .filter(|step| step[layer * 2 + k])
+                .filter(|step| step[layer * 2 + k].is_reuse())
                 .count()
         };
         counts.row(vec![layer.to_string(), c(0).to_string(), c(1).to_string()]);

@@ -62,6 +62,11 @@ pub enum Knobs {
     NoReuse,
     Static { n: usize, r: usize },
     Foresight { n: usize, r: usize, gamma: f64, warmup: f64 },
+    /// A [`crate::policy::Forecast`] wrapper layered over another
+    /// candidate: same reuse schedule as `inner`, but each reuse step is
+    /// served by an order-`k` linear-multistep forecast instead of a
+    /// verbatim replay.
+    Forecast { k: usize, inner: Box<Knobs> },
 }
 
 /// The serving default (`policy=foresight` with no args): N=1, R=2, γ=0.5,
@@ -78,8 +83,29 @@ impl Knobs {
             Knobs::Foresight { n, r, gamma, warmup } => {
                 format!("foresight:n={n},r={r},gamma={gamma},warmup={warmup}")
             }
+            Knobs::Forecast { k, inner } => format!("forecast:k={k},inner={}", inner.spec()),
         }
     }
+
+    /// The predictor order a spec runs at: `k` for forecast wrappers,
+    /// 1 (verbatim replay) for everything else.
+    pub fn order(&self) -> usize {
+        match self {
+            Knobs::Forecast { k, .. } => *k,
+            _ => 1,
+        }
+    }
+}
+
+/// Predictor order of a rendered spec string (the sweep-table column):
+/// `forecast:k=<k>,…` → k, anything else → 1. Falls back to 1 on a
+/// malformed head rather than erroring — the table is reporting, not
+/// validation ([`crate::policy::build_policy`] is the validator).
+pub fn spec_order(spec: &str) -> usize {
+    spec.strip_prefix("forecast:k=")
+        .and_then(|rest| rest.split(',').next())
+        .and_then(|k| k.trim().parse::<usize>().ok())
+        .unwrap_or(1)
 }
 
 /// Sweep bounds for one profiling run.
@@ -93,6 +119,11 @@ pub struct GridSpec {
     pub warmups: Vec<f64>,
     /// Static baseline (N, R) points.
     pub static_nr: Vec<(usize, usize)>,
+    /// Forecast predictor orders k to layer over each Foresight point.
+    /// Orders ≥ 2 emit `forecast:k=...,inner=foresight:...` candidates;
+    /// k = 1 is verbatim replay and is already swept as the bare inner,
+    /// so it never emits a wrapper.
+    pub orders: Vec<usize>,
 }
 
 impl GridSpec {
@@ -103,6 +134,7 @@ impl GridSpec {
             gammas: vec![0.25, 0.5, 1.0, 2.0],
             warmups: vec![0.15],
             static_nr: vec![(1, 2), (2, 3)],
+            orders: vec![1, 2, 3],
         }
     }
 
@@ -113,6 +145,7 @@ impl GridSpec {
             gammas: vec![0.5, 1.0],
             warmups: vec![0.15],
             static_nr: vec![(1, 2)],
+            orders: vec![1, 2],
         }
     }
 
@@ -125,11 +158,21 @@ impl GridSpec {
         for &(n, r) in &self.static_nr {
             out.push(Knobs::Static { n, r });
         }
+        let mut foresight = Vec::new();
         for &(n, r) in &self.nr {
             for &gamma in &self.gammas {
                 for &warmup in &self.warmups {
-                    out.push(Knobs::Foresight { n, r, gamma, warmup });
+                    foresight.push(Knobs::Foresight { n, r, gamma, warmup });
                 }
+            }
+        }
+        out.extend(foresight.iter().cloned());
+        for &k in &self.orders {
+            if k < 2 {
+                continue; // verbatim replay == the bare inner, already listed
+            }
+            for f in &foresight {
+                out.push(Knobs::Forecast { k, inner: Box::new(f.clone()) });
             }
         }
         let mut seen = std::collections::BTreeSet::new();
@@ -197,11 +240,12 @@ pub fn sweep_table(outcome: &ProfileOutcome) -> MdTable {
         .map(|f| f.spec.as_str())
         .collect();
     let mut t = MdTable::new(&[
-        "spec", "wall(s)", "reuse", "PSNR", "SSIM", "LPIPS", "frontier", "chosen",
+        "spec", "order", "wall(s)", "reuse", "PSNR", "SSIM", "LPIPS", "frontier", "chosen",
     ]);
     for pt in &outcome.points {
         t.row(vec![
             pt.spec.clone(),
+            spec_order(&pt.spec).to_string(),
             format!("{:.3}", pt.wall_s),
             format!("{:.0}%", 100.0 * pt.reuse_fraction),
             format!("{:.2}", pt.psnr),
@@ -357,24 +401,26 @@ pub fn profile_engine(engine: &Engine, opts: &ProfileOptions) -> Result<ProfileO
     for knobs in opts.grid.candidates() {
         let spec = knobs.spec();
         let mut wall = Vec::with_capacity(panel.len());
-        let (mut reuse, mut psnr, mut ssim, mut lpips) = (0.0, 0.0, 0.0, 0.0);
+        let mut reuse = stats::Welford::new();
+        let mut psnr = stats::Welford::new();
+        let mut ssim = stats::Welford::new();
+        let mut lpips = stats::Welford::new();
         for (i, p) in panel.iter().enumerate() {
             let r = run(&spec, &p.text, p.id as u64, steps)?;
             wall.push(r.stats.wall_s);
-            reuse += r.stats.reuse_fraction();
+            reuse.push(r.stats.reuse_fraction());
             let fr = dec.decode(&r.latents);
-            psnr += metrics::psnr(&base_frames[i], &fr);
-            ssim += metrics::ssim(&base_frames[i], &fr);
-            lpips += metrics::lpips(&net, &base_frames[i], &fr);
+            psnr.push(metrics::psnr(&base_frames[i], &fr));
+            ssim.push(metrics::ssim(&base_frames[i], &fr));
+            lpips.push(metrics::lpips(&net, &base_frames[i], &fr));
         }
-        let n = panel.len() as f64;
         points.push(ProfilePoint {
             spec,
             wall_s: stats::mean(&wall),
-            reuse_fraction: reuse / n,
-            psnr: psnr / n,
-            ssim: ssim / n,
-            lpips: lpips / n,
+            reuse_fraction: reuse.mean(),
+            psnr: psnr.mean(),
+            ssim: ssim.mean(),
+            lpips: lpips.mean(),
         });
     }
 
@@ -447,6 +493,7 @@ mod tests {
             gammas: vec![0.5, 0.5],
             warmups: vec![0.15],
             static_nr: vec![(1, 2)],
+            orders: vec![1, 1],
         };
         let cands = grid.candidates();
         let specs: Vec<String> = cands.iter().map(|k| k.spec()).collect();
@@ -455,6 +502,42 @@ mod tests {
         assert!(specs.contains(&DEFAULT_KNOBS.spec()));
         // the duplicated grid axes collapse to default + static
         assert_eq!(specs.len(), 2, "{specs:?}");
+    }
+
+    #[test]
+    fn grid_orders_emit_forecast_wrappers_for_k_ge_2() {
+        let grid = GridSpec {
+            nr: vec![(1, 2)],
+            gammas: vec![0.5],
+            warmups: vec![0.15],
+            static_nr: vec![],
+            orders: vec![1, 2, 3],
+        };
+        let specs: Vec<String> = grid.candidates().iter().map(|k| k.spec()).collect();
+        // k=1 emits no wrapper (it IS the bare inner); k=2 and k=3 each
+        // wrap the single foresight point. Default == that point, so:
+        // [foresight default, forecast k=2, forecast k=3].
+        assert_eq!(
+            specs,
+            vec![
+                "foresight:n=1,r=2,gamma=0.5,warmup=0.15".to_string(),
+                "forecast:k=2,inner=foresight:n=1,r=2,gamma=0.5,warmup=0.15".to_string(),
+                "forecast:k=3,inner=foresight:n=1,r=2,gamma=0.5,warmup=0.15".to_string(),
+            ]
+        );
+    }
+
+    #[test]
+    fn spec_order_parses_forecast_heads() {
+        assert_eq!(spec_order("none"), 1);
+        assert_eq!(spec_order("foresight:n=1,r=2,gamma=0.5,warmup=0.15"), 1);
+        assert_eq!(spec_order("forecast:k=3,inner=static:n=1,r=2"), 3);
+        assert_eq!(spec_order("forecast:k=oops,inner=none"), 1);
+        assert_eq!(
+            Knobs::Forecast { k: 2, inner: Box::new(DEFAULT_KNOBS) }.order(),
+            2
+        );
+        assert_eq!(DEFAULT_KNOBS.order(), 1);
     }
 
     #[test]
@@ -580,6 +663,10 @@ mod tests {
         assert_eq!(
             Knobs::Foresight { n: 1, r: 2, gamma: 0.5, warmup: 0.15 }.spec(),
             "foresight:n=1,r=2,gamma=0.5,warmup=0.15"
+        );
+        assert_eq!(
+            Knobs::Forecast { k: 2, inner: Box::new(Knobs::Static { n: 1, r: 2 }) }.spec(),
+            "forecast:k=2,inner=static:n=1,r=2"
         );
     }
 }

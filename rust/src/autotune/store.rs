@@ -395,6 +395,21 @@ mod tests {
     }
 
     #[test]
+    fn forecast_specs_roundtrip_verbatim() {
+        // Forecast wrapper specs embed `:` and `,` and an `=` inside the
+        // inner spec — the JSON writer/reader must carry them verbatim so
+        // `policy=auto` can serve a tuned forecast configuration.
+        let spec = "forecast:k=2,inner=foresight:n=1,r=2,gamma=0.5,warmup=0.15";
+        let mut store = ProfileStore::new();
+        store.insert(profile("m", "b", 30, spec));
+        let back = ProfileStore::from_json_str(&store.to_json_string()).unwrap();
+        let got = back.lookup("m", "b", "rflow", 30).unwrap();
+        assert_eq!(got.kind(), "exact");
+        assert_eq!(got.profile().spec, spec);
+        assert_eq!(got.profile().frontier[0].spec, spec);
+    }
+
+    #[test]
     fn rejects_incompatible_schema_versions_cleanly() {
         let err = ProfileStore::from_json_str(r#"{"schema_version": 99, "profiles": []}"#)
             .unwrap_err()

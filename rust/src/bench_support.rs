@@ -200,30 +200,31 @@ pub fn run_suite(
     let mut rows = Vec::new();
     for (name, spec) in specs {
         let mut lats = Vec::new();
-        let mut reuse = 0.0;
-        let (mut psnr, mut ssim, mut lpips) = (0.0, 0.0, 0.0);
+        let mut reuse = stats::Welford::new();
+        let mut psnr = stats::Welford::new();
+        let mut ssim = stats::Welford::new();
+        let mut lpips = stats::Welford::new();
         let mut frames = Vec::new();
         let mut cache_peak = 0usize;
         for p in prompts {
             let r = run_one(engine, spec, &p.text, p.id as u64, steps)?;
             lats.push(r.stats.wall_s);
-            reuse += r.stats.reuse_fraction();
+            reuse.push(r.stats.reuse_fraction());
             cache_peak = cache_peak.max(r.stats.cache_peak_bytes);
             let fr = dec.decode(&r.latents);
             let i = frames.len();
-            psnr += metrics::psnr(&base_frames[i], &fr);
-            ssim += metrics::ssim(&base_frames[i], &fr);
-            lpips += metrics::lpips(&net, &base_frames[i], &fr);
+            psnr.push(metrics::psnr(&base_frames[i], &fr));
+            ssim.push(metrics::ssim(&base_frames[i], &fr));
+            lpips.push(metrics::lpips(&net, &base_frames[i], &fr));
             frames.push(fr);
         }
-        let n = prompts.len() as f64;
         rows.push(MethodRow {
             name: name.to_string(),
             latencies: lats,
-            reuse_frac: reuse / n,
-            psnr: psnr / n,
-            ssim: ssim / n,
-            lpips: lpips / n,
+            reuse_frac: reuse.mean(),
+            psnr: psnr.mean(),
+            ssim: ssim.mean(),
+            lpips: lpips.mean(),
             vbench: metrics::vbench_percent(&net, &frames),
             fvd: metrics::fvd(&net, &base_frames, &frames),
             cache_peak_bytes: cache_peak,
@@ -260,7 +261,11 @@ pub fn run_clip_vqa_suite(
     let mut rows = Vec::new();
     for (name, spec) in specs {
         let mut lats = Vec::new();
-        let (mut cs, mut ct, mut va, mut vt, mut vo) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        let mut cs = stats::Welford::new();
+        let mut ct = stats::Welford::new();
+        let mut va = stats::Welford::new();
+        let mut vt = stats::Welford::new();
+        let mut vo = stats::Welford::new();
         for p in prompts {
             let r = run_one(engine, spec, &p.text, p.id as u64, steps)?;
             lats.push(r.stats.wall_s);
@@ -270,20 +275,19 @@ pub fn run_clip_vqa_suite(
                 engine.model().info.d_text,
                 engine.model().info.text_len,
             );
-            cs += clip.clipsim(&emb, &fr);
-            ct += clip.clip_temp(&fr);
-            va += metrics::vqa_aesthetic(&fr);
-            vt += metrics::vqa_technical(&fr);
-            vo += metrics::vqa_overall(&fr);
+            cs.push(clip.clipsim(&emb, &fr));
+            ct.push(clip.clip_temp(&fr));
+            va.push(metrics::vqa_aesthetic(&fr));
+            vt.push(metrics::vqa_technical(&fr));
+            vo.push(metrics::vqa_overall(&fr));
         }
-        let n = prompts.len() as f64;
         rows.push(ClipVqaRow {
             name: name.to_string(),
-            clipsim: cs / n,
-            clip_temp: ct / n,
-            vqa_aesthetic: va / n,
-            vqa_technical: vt / n,
-            vqa_overall: vo / n,
+            clipsim: cs.mean(),
+            clip_temp: ct.mean(),
+            vqa_aesthetic: va.mean(),
+            vqa_technical: vt.mean(),
+            vqa_overall: vo.mean(),
             latencies: lats,
         });
     }

@@ -15,8 +15,23 @@
 //! The engine keeps one `FeatureCache` per CFG branch so the two guidance
 //! branches can execute on concurrent threads without sharing mutable
 //! state; keys still carry the branch index for stable telemetry.
+//!
+//! # History rings (feature forecasting)
+//!
+//! When built with [`FeatureCache::with_history`] depth `k >= 2`, the
+//! cache additionally keeps the last `k-1` *superseded* outputs per site
+//! in a bounded ring, so [`FeatureCache::last_k`] can serve the `k` most
+//! recent outputs (live entry + ring) to the engine's linear-multistep
+//! forecast (`runtime::lms_combine`) on a Predict step. Ring slots are
+//! byte-accounted in `current_bytes`/`peak_bytes` exactly like live
+//! entries, survive device migration bit-exactly through
+//! [`FeatureCache::drain_history`]/[`FeatureCache::restore_history`], and
+//! are never counted as policy stores or hits — the ring is data
+//! retention, not a caching decision. Depth 0/1 (the default) keeps the
+//! ring machinery entirely inert: `put` frees superseded buffers
+//! immediately, as it always has.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 
 use crate::model::{BlockKind, SubUnit};
@@ -61,6 +76,13 @@ pub struct CacheEntry {
 #[derive(Default)]
 pub struct FeatureCache {
     entries: BTreeMap<CacheKey, CacheEntry>,
+    /// Superseded outputs per site, oldest at the front, newest at the
+    /// back. Bounded to `history_depth - 1` slots (the live entry is the
+    /// k-th, newest, output). Empty unless `history_depth >= 2`.
+    history: BTreeMap<CacheKey, VecDeque<(Arc<DeviceTensor>, usize)>>,
+    /// How many outputs per site `last_k` can serve (live entry + ring).
+    /// 0/1 disables the ring.
+    history_depth: usize,
     current_bytes: usize,
     peak_bytes: usize,
     /// Lifetime counters.
@@ -73,20 +95,77 @@ impl FeatureCache {
         Self::default()
     }
 
+    /// A cache whose sites retain the last `depth` outputs (live entry
+    /// plus a ring of `depth - 1` superseded buffers) for feature
+    /// forecasting. `depth <= 1` is identical to [`FeatureCache::new`].
+    pub fn with_history(depth: usize) -> Self {
+        Self { history_depth: depth, ..Self::default() }
+    }
+
+    /// The configured history depth (outputs retained per site).
+    pub fn history_depth(&self) -> usize {
+        self.history_depth
+    }
+
     fn entry_bytes(e: &CacheEntry) -> usize {
         e.device.element_count() * 4
     }
 
-    /// Insert or replace an entry.
+    fn tensor_bytes(t: &DeviceTensor) -> usize {
+        t.element_count() * 4
+    }
+
+    /// Insert or replace an entry. With history enabled, the superseded
+    /// buffer moves into the site's ring (its bytes stay charged); ring
+    /// slots beyond `history_depth - 1` are freed oldest-first.
     pub fn put(&mut self, key: CacheKey, device: Arc<DeviceTensor>, step: usize) {
         let entry = CacheEntry { device, step };
         let new_bytes = Self::entry_bytes(&entry);
-        if let Some(old) = self.entries.insert(key, entry) {
-            self.current_bytes -= Self::entry_bytes(&old);
-        }
+        let old = self.entries.insert(key, entry);
         self.current_bytes += new_bytes;
+        if let Some(old) = old {
+            if self.history_depth >= 2 {
+                // The new buffer is charged before the ring evicts: an
+                // evicted slot is only freed after the new output exists
+                // on device, so the high water includes both.
+                self.peak_bytes = self.peak_bytes.max(self.current_bytes);
+                let ring = self.history.entry(key).or_default();
+                ring.push_back((old.device, old.step));
+                while ring.len() > self.history_depth - 1 {
+                    if let Some((evicted, _)) = ring.pop_front() {
+                        self.current_bytes -= Self::tensor_bytes(&evicted);
+                    }
+                }
+            } else {
+                self.current_bytes -= Self::entry_bytes(&old);
+            }
+        }
         self.peak_bytes = self.peak_bytes.max(self.current_bytes);
         self.stores += 1;
+    }
+
+    /// How many outputs are available for this site right now: the live
+    /// entry (if any) plus the ring of superseded outputs behind it.
+    pub fn depth(&self, key: &CacheKey) -> usize {
+        let live = usize::from(self.entries.contains_key(key));
+        live + self.history.get(key).map_or(0, |r| r.len())
+    }
+
+    /// The `k` most recent outputs for this site, newest first (live
+    /// entry, then ring back-to-front). `None` when fewer than `k`
+    /// outputs are retained — the forecast caller falls back to verbatim
+    /// replay. Not a policy hit: forecasting reads are accounted by the
+    /// engine's own forecast counters.
+    pub fn last_k(&self, key: &CacheKey, k: usize) -> Option<Vec<Arc<DeviceTensor>>> {
+        if k == 0 || self.depth(key) < k {
+            return None;
+        }
+        let mut out = Vec::with_capacity(k);
+        out.push(self.entries.get(key)?.device.clone());
+        if let Some(ring) = self.history.get(key) {
+            out.extend(ring.iter().rev().take(k - 1).map(|(d, _)| d.clone()));
+        }
+        Some(out)
     }
 
     pub fn get(&mut self, key: &CacheKey) -> Option<&CacheEntry> {
@@ -141,7 +220,19 @@ impl FeatureCache {
 
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.history.clear();
         self.current_bytes = 0;
+    }
+
+    /// Total bytes currently held by history rings (excluded: live
+    /// entries). Used by the migration path to predict the extra bus
+    /// charge of moving forecast history.
+    pub fn history_bytes(&self) -> usize {
+        self.history
+            .values()
+            .flat_map(|r| r.iter())
+            .map(|(d, _)| Self::tensor_bytes(d))
+            .sum()
     }
 
     // --- device-migration support -------------------------------------
@@ -154,10 +245,40 @@ impl FeatureCache {
     // would have reported had it never moved.
 
     /// Remove and return every entry, in key order. Lifetime counters and
-    /// the peak stay behind for [`FeatureCache::adopt_accounting`].
+    /// the peak stay behind for [`FeatureCache::adopt_accounting`];
+    /// history rings stay resident until [`FeatureCache::drain_history`].
     pub fn drain_entries(&mut self) -> Vec<(CacheKey, CacheEntry)> {
-        self.current_bytes = 0;
-        std::mem::take(&mut self.entries).into_iter().collect()
+        let drained: Vec<(CacheKey, CacheEntry)> =
+            std::mem::take(&mut self.entries).into_iter().collect();
+        for (_, e) in &drained {
+            self.current_bytes -= Self::entry_bytes(e);
+        }
+        drained
+    }
+
+    /// Remove and return every history ring, in key order; per ring the
+    /// slots come out oldest first, matching the order
+    /// [`FeatureCache::restore_history`] expects.
+    pub fn drain_history(&mut self) -> Vec<(CacheKey, Vec<(Arc<DeviceTensor>, usize)>)> {
+        let drained: Vec<(CacheKey, Vec<(Arc<DeviceTensor>, usize)>)> =
+            std::mem::take(&mut self.history)
+                .into_iter()
+                .map(|(k, ring)| (k, ring.into_iter().collect()))
+                .collect();
+        for (_, ring) in &drained {
+            for (d, _) in ring {
+                self.current_bytes -= Self::tensor_bytes(d);
+            }
+        }
+        drained
+    }
+
+    /// Append one transferred history slot (oldest-first call order)
+    /// without counting a policy store.
+    pub fn restore_history(&mut self, key: CacheKey, device: Arc<DeviceTensor>, step: usize) {
+        self.current_bytes += Self::tensor_bytes(&device);
+        self.history.entry(key).or_default().push_back((device, step));
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes);
     }
 
     /// Insert a transferred entry **without** counting a policy store —
@@ -296,6 +417,106 @@ mod tests {
         assert_eq!(m.stores, stores, "restore() is not a policy store");
         assert_eq!(m.hits, hits);
         assert_eq!(m.peek(&key(0, 0, Unit::Block)).unwrap().step, 2);
+    }
+
+    #[test]
+    fn history_ring_bounds_depth_and_accounts_bytes() {
+        let rt = Runtime::cpu().unwrap();
+        let mut c = FeatureCache::with_history(3); // live + 2 ring slots
+        let k = key(0, 0, Unit::Block);
+        assert_eq!(c.depth(&k), 0);
+        assert!(c.last_k(&k, 1).is_none());
+
+        c.put(k, dev(&rt, 100), 0);
+        assert_eq!(c.depth(&k), 1);
+        assert_eq!(c.current_bytes(), 400);
+        assert!(c.last_k(&k, 2).is_none(), "short history refuses");
+
+        c.put(k, dev(&rt, 100), 1);
+        c.put(k, dev(&rt, 100), 2);
+        assert_eq!(c.depth(&k), 3);
+        assert_eq!(c.current_bytes(), 1200, "live + 2 ring slots charged");
+        assert_eq!(c.history_bytes(), 800);
+
+        // fourth put evicts the oldest ring slot: depth and bytes hold
+        c.put(k, dev(&rt, 100), 3);
+        assert_eq!(c.depth(&k), 3);
+        assert_eq!(c.current_bytes(), 1200);
+        assert_eq!(c.peak_bytes(), 1600, "peak saw the pre-eviction high water");
+
+        c.clear();
+        assert_eq!(c.current_bytes(), 0);
+        assert_eq!(c.depth(&k), 0);
+    }
+
+    #[test]
+    fn last_k_orders_newest_first() {
+        let rt = Runtime::cpu().unwrap();
+        let mut c = FeatureCache::with_history(3);
+        let k = key(0, 1, Unit::Block);
+        for step in 0..3 {
+            let d = Arc::new(rt.upload(&vec![step as f32; 4], &[4]).unwrap());
+            c.put(k, d, step);
+        }
+        let h = c.last_k(&k, 3).unwrap();
+        let vals: Vec<f32> = h.iter().map(|d| rt.download(d).unwrap().data[0]).collect();
+        assert_eq!(vals, vec![2.0, 1.0, 0.0], "live entry, then ring newest→oldest");
+        // k=2 serves the newest two
+        let h2 = c.last_k(&k, 2).unwrap();
+        assert_eq!(rt.download(&h2[1]).unwrap().data[0], 1.0);
+    }
+
+    #[test]
+    fn depth_one_cache_keeps_ring_inert() {
+        let rt = Runtime::cpu().unwrap();
+        let mut c = FeatureCache::new();
+        let k = key(0, 0, Unit::Block);
+        c.put(k, dev(&rt, 100), 0);
+        c.put(k, dev(&rt, 100), 1);
+        assert_eq!(c.depth(&k), 1);
+        assert_eq!(c.current_bytes(), 400, "superseded buffer freed immediately");
+        assert_eq!(c.history_bytes(), 0);
+        assert!(c.last_k(&k, 1).is_some());
+        assert!(c.last_k(&k, 2).is_none());
+    }
+
+    #[test]
+    fn drain_restore_history_round_trips_bytes_and_order() {
+        let rt = Runtime::cpu().unwrap();
+        let mut c = FeatureCache::with_history(3);
+        let k = key(0, 2, Unit::Block);
+        for step in 0..3 {
+            let d = Arc::new(rt.upload(&vec![step as f32; 8], &[8]).unwrap());
+            c.put(k, d, step);
+        }
+        let live_bytes = 32;
+        let hist_bytes = c.history_bytes();
+        assert_eq!(hist_bytes, 64);
+
+        let entries = c.drain_entries();
+        assert_eq!(c.current_bytes(), hist_bytes, "rings stay charged after entry drain");
+        let rings = c.drain_history();
+        assert_eq!(c.current_bytes(), 0);
+        assert_eq!(rings.len(), 1);
+        assert_eq!(rings[0].1.len(), 2);
+        assert_eq!(rings[0].1[0].1, 0, "oldest first");
+
+        let mut m = FeatureCache::with_history(3);
+        for (key, e) in entries {
+            m.restore(key, e.device, e.step);
+        }
+        for (key, ring) in rings {
+            for (d, step) in ring {
+                m.restore_history(key, d, step);
+            }
+        }
+        m.adopt_accounting(&c);
+        assert_eq!(m.current_bytes(), live_bytes + hist_bytes);
+        assert_eq!(m.depth(&k), 3);
+        let h = m.last_k(&k, 3).unwrap();
+        let vals: Vec<f32> = h.iter().map(|d| rt.download(d).unwrap().data[0]).collect();
+        assert_eq!(vals, vec![2.0, 1.0, 0.0], "order survives the hop");
+        assert_eq!(m.stores, c.stores, "restores adopted the source counters, added none");
     }
 
     #[test]

@@ -128,6 +128,38 @@ pub enum HotPath {
     Host,
 }
 
+/// One planned per-site decision class, recorded per step in
+/// [`RunResult::reuse_map`] (branch 0, policy site order). `Predict` and
+/// `Reuse` are both reuse steps (zero block dispatches); they differ only
+/// in what fills the site's output — a linear-multistep forecast over the
+/// cached history vs a verbatim replay of the stale entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepDecision {
+    /// The site dispatched its block executable.
+    Compute,
+    /// The site replayed its cached output verbatim.
+    Reuse,
+    /// The site's output was forecast from its cached history
+    /// (`runtime::lms_combine`).
+    Predict,
+}
+
+impl StepDecision {
+    /// Whether this decision skipped the block compute.
+    pub fn is_reuse(self) -> bool {
+        !matches!(self, StepDecision::Compute)
+    }
+
+    /// Stable wire/display name: `compute` / `reuse` / `predict`.
+    pub fn name(self) -> &'static str {
+        match self {
+            StepDecision::Compute => "compute",
+            StepDecision::Reuse => "reuse",
+            StepDecision::Predict => "predict",
+        }
+    }
+}
+
 /// Counters and timings for one run.
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
@@ -138,6 +170,14 @@ pub struct RunStats {
     pub reused_units: u64,
     /// Reuse decisions that fell back to compute due to a cold cache.
     pub fallback_units: u64,
+    /// Reuse units served by linear-multistep forecast (a subset of
+    /// `reused_units`): the site's output was extrapolated from its
+    /// history ring by one fused `lms_combine` dispatch.
+    pub forecast_units: u64,
+    /// Planned forecasts that fell back to verbatim replay because the
+    /// site's history ring was still shallower than the predictor order
+    /// (also counted in `reused_units`; disjoint from `forecast_units`).
+    pub forecast_fallback_units: u64,
     pub cache_peak_bytes: usize,
     pub cache_entries_per_layer: f64,
     /// Host→device bytes moved by this run. Under [`HotPath::Device`]:
@@ -189,8 +229,11 @@ pub struct RunResult {
     /// Final denoised latent video [F, P, C].
     pub latents: HostTensor,
     pub stats: RunStats,
-    /// Per step, per site (branch 0, policy order): true = reused (Fig. 6).
-    pub reuse_map: Vec<Vec<bool>>,
+    /// Per step, per site (branch 0, policy order): the planned decision
+    /// class (Fig. 6). `Reuse` and `Predict` both skip the block compute;
+    /// `Predict` fills the site from a linear-multistep forecast instead
+    /// of a verbatim replay.
+    pub reuse_map: Vec<Vec<StepDecision>>,
     /// Foresight's per-site λ after the run (Fig. 5).
     pub thresholds: Option<BTreeMap<(usize, BlockKind, usize), f64>>,
     /// λ aligned with each `reuse_map` row's site index (branch-0 policy

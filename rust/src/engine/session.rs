@@ -68,14 +68,14 @@ use crate::cache::{CacheKey, FeatureCache, Unit};
 use crate::config::SamplerKind;
 use crate::model::{BlockKind, LoadedModel, SubUnit};
 use crate::policy::{sites_for, Action, CacheMode, Granularity, ReusePolicy, Site};
-use crate::runtime::{DeviceTensor, Executable, HostTensor, Runtime};
+use crate::runtime::{lms_coefficients, DeviceTensor, Executable, HostTensor, Runtime};
 use crate::sampler::{self, DeviceCoeffs, DeviceStepper, Sampler};
 use crate::trace;
 use crate::util::prng::Rng;
 use crate::util::stats::mse_f32;
 use crate::workload;
 
-use super::{Engine, HotPath, Request, RunResult, RunStats, StepObserver};
+use super::{Engine, HotPath, Request, RunResult, RunStats, StepDecision, StepObserver};
 
 /// Per-branch request context (precomputed cross-attention K/V).
 pub(crate) struct BranchCtx {
@@ -109,6 +109,9 @@ struct RunParams {
     granularity: Granularity,
     cache_mode: CacheMode,
     needs_measure: bool,
+    /// Cached outputs retained per site ([`ReusePolicy::history_depth`]);
+    /// ≥ 2 enables the forecasting (`Action::Predict`) arm.
+    history_depth: usize,
 }
 
 /// Step-constant inputs shared by both branch sweeps.
@@ -119,6 +122,9 @@ struct StepCtx<'a> {
     needs_measure: bool,
     c: &'a Arc<DeviceTensor>,
     h0: &'a Arc<DeviceTensor>,
+    /// Predictor coefficients c₀..c₍ₖ₋₁₎ as resident rank-0 tensors,
+    /// uploaded once at admit (empty unless `history_depth ≥ 2`).
+    lms: &'a [Arc<DeviceTensor>],
 }
 
 /// Per-branch counters, merged into [`RunStats`] after the branches join.
@@ -127,6 +133,11 @@ struct BranchStats {
     computed: u64,
     reused: u64,
     fallback: u64,
+    /// Reuse units served by `lms_combine` forecast (subset of `reused`).
+    forecast: u64,
+    /// Planned forecasts replayed verbatim instead — history ring was
+    /// shallower than the predictor order (subset of `reused`).
+    forecast_fallback: u64,
     d2h_bytes: u64,
     d2h_calls: u64,
 }
@@ -136,6 +147,8 @@ impl BranchStats {
         s.computed_units += self.computed;
         s.reused_units += self.reused;
         s.fallback_units += self.fallback;
+        s.forecast_units += self.forecast;
+        s.forecast_fallback_units += self.forecast_fallback;
         s.d2h_bytes += self.d2h_bytes;
         s.d2h_calls += self.d2h_calls;
     }
@@ -173,8 +186,10 @@ impl BranchWorker {
         branch: usize,
         rp: RunParams,
         trace_id: u64,
+        lms: Vec<Arc<DeviceTensor>>,
     ) -> Self {
-        Self::spawn_with_cache(model, bctx, branch, rp, trace_id, FeatureCache::new())
+        let cache = FeatureCache::with_history(rp.history_depth);
+        Self::spawn_with_cache(model, bctx, branch, rp, trace_id, lms, cache)
     }
 
     /// Spawn with a pre-populated cache — the device-migration path seeds
@@ -187,6 +202,7 @@ impl BranchWorker {
         branch: usize,
         rp: RunParams,
         trace_id: u64,
+        lms: Vec<Arc<DeviceTensor>>,
         cache: FeatureCache,
     ) -> Self {
         let (tx_job, rx_job) = mpsc::channel::<WorkerJob>();
@@ -207,6 +223,7 @@ impl BranchWorker {
                         needs_measure: rp.needs_measure,
                         c: &c,
                         h0: &h0,
+                        lms: &lms,
                     };
                     let r = sweep_branch(
                         &model,
@@ -319,7 +336,12 @@ pub struct Session<'p> {
     sites: [Vec<Site>; 2],
     cursor: usize,
     stats: RunStats,
-    reuse_map: Vec<Vec<bool>>,
+    reuse_map: Vec<Vec<StepDecision>>,
+    /// Predictor coefficients as resident rank-0 tensors (uploaded once
+    /// at admit; empty unless the policy's history depth is ≥ 2). Workers
+    /// hold clones; this copy feeds the inline path and is rebuilt —
+    /// unmetered, like the rest of [`DeviceGear`] — on device migration.
+    lms: Vec<Arc<DeviceTensor>>,
     dims: [usize; 3],
     latent_elems: usize,
     /// Largest cohort this session ever shared a step with (≥ 1).
@@ -370,6 +392,7 @@ impl<'p> Session<'p> {
             granularity: policy.granularity(),
             cache_mode: policy.cache_mode(),
             needs_measure: policy.needs_measurement(),
+            history_depth: policy.history_depth(),
         };
         let sites = [
             sites_for(info.layers, rp.granularity, 0),
@@ -398,6 +421,18 @@ impl<'p> Session<'p> {
         let dims = [f, p, c_lat];
         let latent_elems = f * p * c_lat;
         let rt = m.runtime().clone();
+
+        // Forecasting: the predictor's k fixed coefficients upload once
+        // at admit as resident rank-0 scalars, so a later Predict step
+        // dispatches `lms_combine` with zero additional transfers.
+        let mut lms: Vec<Arc<DeviceTensor>> = Vec::new();
+        if rp.history_depth >= 2 {
+            for c in lms_coefficients(rp.history_depth)? {
+                lms.push(Arc::new(rt.upload(&[c], &[])?));
+                stats.h2d_bytes += 4;
+                stats.h2d_calls += 1;
+            }
+        }
 
         let (gear, latent) = match engine.hot_path {
             HotPath::Device => {
@@ -443,12 +478,15 @@ impl<'p> Session<'p> {
 
         let exec = if parallel && engine.hot_path == HotPath::Device {
             Exec::Workers([
-                BranchWorker::spawn(m.clone(), branches[0].clone(), 0, rp, req.trace_id),
-                BranchWorker::spawn(m.clone(), branches[1].clone(), 1, rp, req.trace_id),
+                BranchWorker::spawn(m.clone(), branches[0].clone(), 0, rp, req.trace_id, lms.clone()),
+                BranchWorker::spawn(m.clone(), branches[1].clone(), 1, rp, req.trace_id, lms.clone()),
             ])
         } else {
             Exec::Inline {
-                caches: [FeatureCache::new(), FeatureCache::new()],
+                caches: [
+                    FeatureCache::with_history(rp.history_depth),
+                    FeatureCache::with_history(rp.history_depth),
+                ],
                 mirrors: [BTreeMap::new(), BTreeMap::new()],
             }
         };
@@ -468,6 +506,7 @@ impl<'p> Session<'p> {
             cursor: 0,
             stats,
             reuse_map: Vec::with_capacity(steps),
+            lms,
             dims,
             latent_elems,
             peak_lanes: 1,
@@ -528,21 +567,28 @@ impl<'p> Session<'p> {
     /// Precompute both branches' site actions for the current step. Safe
     /// before the sweeps because decisions for step `t` depend only on
     /// observations from steps `< t` (module docs §Policy-free workers).
-    fn plan_step(&mut self) -> (Vec<Action>, Vec<Action>, Vec<bool>) {
+    fn plan_step(&mut self) -> (Vec<Action>, Vec<Action>, Vec<StepDecision>) {
         let step = self.cursor;
         let pol = &mut self.policy;
         let actions0: Vec<Action> =
             self.sites[0].iter().map(|site| pol.action(step, *site)).collect();
         let actions1: Vec<Action> =
             self.sites[1].iter().map(|site| pol.action(step, *site)).collect();
-        let decisions: Vec<bool> = actions0.iter().map(|a| a.is_reuse()).collect();
+        let decisions: Vec<StepDecision> = actions0
+            .iter()
+            .map(|a| match a {
+                Action::Predict { .. } => StepDecision::Predict,
+                a if a.is_reuse() => StepDecision::Reuse,
+                _ => StepDecision::Compute,
+            })
+            .collect();
         (actions0, actions1, decisions)
     }
 
     /// Feed the branches' drift observations back to the policy (cond
     /// branch first, then uncond — per-site state makes the cross-branch
     /// order immaterial, see the engine docs' interleaving argument).
-    fn absorb(&mut self, oc: &BranchOut, ou: &BranchOut, decisions: Vec<bool>) {
+    fn absorb(&mut self, oc: &BranchOut, ou: &BranchOut, decisions: Vec<StepDecision>) {
         let step = self.cursor;
         for (site, mse) in oc.observations.iter().chain(ou.observations.iter()) {
             self.policy.observe_mse(step, *site, *mse);
@@ -558,7 +604,13 @@ impl<'p> Session<'p> {
     /// action, the observed drift MSE (−1 = unmeasured), and the policy's
     /// λ threshold (−1 = none yet, e.g. during warmup). Gated on the
     /// tracer so the untraced hot path pays one relaxed atomic load.
-    fn emit_policy_events(&self, step: usize, decisions: &[bool], oc: &BranchOut, ou: &BranchOut) {
+    fn emit_policy_events(
+        &self,
+        step: usize,
+        decisions: &[StepDecision],
+        oc: &BranchOut,
+        ou: &BranchOut,
+    ) {
         if self.trace_id == 0 || !trace::global().enabled() {
             return;
         }
@@ -574,13 +626,15 @@ impl<'p> Session<'p> {
             obs.iter().find(|(s, _)| s == site).map_or(-1.0, |(_, m)| *m)
         };
         for (i, site) in self.sites[0].iter().enumerate() {
+            let d = decisions.get(i).copied().unwrap_or(StepDecision::Compute);
             trace::emit(
                 self.trace_id,
                 trace::Payload::Policy {
                     step: step as u32,
                     branch: 0,
                     site: i as u32,
-                    reuse: decisions.get(i).copied().unwrap_or(false),
+                    reuse: d.is_reuse(),
+                    predict: d == StepDecision::Predict,
                     mse: mse_of(&oc.observations, site),
                     lambda: lam(site),
                 },
@@ -598,6 +652,7 @@ impl<'p> Session<'p> {
                     branch: 1,
                     site: idx as u32,
                     reuse: false,
+                    predict: false,
                     mse: *mse,
                     lambda: lam(site),
                 },
@@ -680,6 +735,7 @@ impl<'p> Session<'p> {
                     needs_measure: self.rp.needs_measure,
                     c: &c,
                     h0: &h0,
+                    lms: &self.lms,
                 };
                 let [cache_c, cache_u] = caches;
                 let [mir_c, mir_u] = mirrors;
@@ -757,6 +813,7 @@ impl<'p> Session<'p> {
             needs_measure: self.rp.needs_measure,
             c: &c,
             h0: &h0,
+            lms: &self.lms,
         };
         let Exec::Inline { caches, mirrors } = &mut self.exec else {
             return Err(anyhow!("host sessions run inline"));
@@ -991,6 +1048,16 @@ impl<'p> Session<'p> {
         }
         self.gear = Some(DeviceGear { stepper, cfg_exec, cfg_scale_dev, c_steps, coeffs });
 
+        // Predictor coefficients are request-constant gear too: rebuilt on
+        // the target from the same fixed formula, outside the per-request
+        // meter (the admit-time charge already covered them once).
+        self.lms = Vec::new();
+        if self.rp.history_depth >= 2 {
+            for c in lms_coefficients(self.rp.history_depth)? {
+                self.lms.push(Arc::new(dst_rt.upload(&[c], &[])?));
+            }
+        }
+
         // 5. Latent host→target: the metered lane upload.
         let x_dev = dst_rt.upload(&x_host, &self.dims)?;
         self.stats.h2d_bytes += (self.latent_elems * 4) as u64;
@@ -1005,6 +1072,7 @@ impl<'p> Session<'p> {
                 0,
                 self.rp,
                 self.trace_id,
+                self.lms.clone(),
                 cache_c,
             ),
             BranchWorker::spawn_with_cache(
@@ -1013,6 +1081,7 @@ impl<'p> Session<'p> {
                 1,
                 self.rp,
                 self.trace_id,
+                self.lms.clone(),
                 cache_u,
             ),
         ]);
@@ -1026,12 +1095,22 @@ impl<'p> Session<'p> {
 /// Metered only by the runtimes' `TransferStats` — a migration is
 /// infrastructure traffic, not part of the request's standalone byte model.
 fn transfer_cache(src: &Runtime, dst: &Runtime, mut cache: FeatureCache) -> Result<FeatureCache> {
-    let mut out = FeatureCache::new();
+    let mut out = FeatureCache::with_history(cache.history_depth());
     for (key, entry) in cache.drain_entries() {
         let mut host = vec![0.0f32; entry.device.element_count()];
         src.download_into(&entry.device, &mut host)?;
         let dev = Arc::new(dst.upload(&host, entry.device.dims())?);
         out.restore(key, dev, entry.step);
+    }
+    // History rings ride along oldest-first so the target's rings replay
+    // the source's exactly (a forecast after the hop sees identical h₀..hₖ).
+    for (key, ring) in cache.drain_history() {
+        for (t, step) in ring {
+            let mut host = vec![0.0f32; t.element_count()];
+            src.download_into(&t, &mut host)?;
+            let dev = Arc::new(dst.upload(&host, t.dims())?);
+            out.restore_history(key, dev, step);
+        }
     }
     out.adopt_accounting(&cache);
     Ok(out)
@@ -1175,7 +1254,7 @@ fn step_many_inner<'p>(sessions: &mut [&mut Session<'p>]) -> Result<StepReport> 
     }
 
     // --- dispatch all 2B branch sweeps, then collect in lane order ----
-    let mut decisions_all: Vec<Vec<bool>> = Vec::with_capacity(nb);
+    let mut decisions_all: Vec<Vec<StepDecision>> = Vec::with_capacity(nb);
     for (i, s) in sessions.iter_mut().enumerate() {
         let step = s.cursor;
         let c = s.gear.as_ref().expect("validated device gear").c_steps[step].clone();
@@ -1263,6 +1342,9 @@ impl ReusePolicy for PolicyShim<'_> {
     }
     fn needs_measurement(&self) -> bool {
         self.0.needs_measurement()
+    }
+    fn history_depth(&self) -> usize {
+        self.0.history_depth()
     }
     fn begin_request(&mut self, layers: usize, steps: usize) {
         self.0.begin_request(layers, steps)
@@ -1378,7 +1460,9 @@ fn apply_coarse(
         CacheKey { branch: site.branch, layer: site.layer, kind: site.kind, unit: site.unit };
 
     let effective = match action {
-        Action::Reuse | Action::ReuseResidual if !cache.contains(&key) => {
+        Action::Reuse | Action::ReuseResidual | Action::Predict { .. }
+            if !cache.contains(&key) =>
+        {
             bs.fallback += 1;
             Action::Compute { update_cache: true, measure: ctx.needs_measure }
         }
@@ -1390,6 +1474,32 @@ fn apply_coarse(
             bs.reused += 1;
             let e = cache.get(&key).expect("checked above");
             Ok(e.device.clone())
+        }
+        Action::Predict { order } => {
+            // A Predict step is a reuse step (zero block dispatches, zero
+            // transfers): the site's output is extrapolated from its last
+            // `order` cached outputs in one fused dispatch against the
+            // admit-time coefficient scalars. A ring still shallower than
+            // `order` replays the live entry verbatim instead — per site,
+            // with its own counter, so PSNR audits can attribute quality.
+            bs.reused += 1;
+            match cache.last_k(&key, order) {
+                Some(hist) if ctx.lms.len() >= order => {
+                    bs.forecast += 1;
+                    let exe = m.runtime().lms_combine(hist[0].dims(), order)?;
+                    let mut args: Vec<&DeviceTensor> =
+                        hist.iter().map(|t| t.as_ref()).collect();
+                    for c in &ctx.lms[..order] {
+                        args.push(c.as_ref());
+                    }
+                    Ok(Arc::new(exe.run(&args)?))
+                }
+                _ => {
+                    bs.forecast_fallback += 1;
+                    let e = cache.get(&key).expect("checked above");
+                    Ok(e.device.clone())
+                }
+            }
         }
         Action::ReuseResidual => {
             bs.reused += 1;
@@ -1468,10 +1578,18 @@ fn apply_fine(
             Action::Compute { update_cache: true, measure: false }
         }
         Action::Reuse => Action::ReuseResidual, // fine reuse is delta-based
+        Action::Predict { .. } => {
+            // Unreachable by construction: the Forecast wrapper rejects
+            // fine-grained inners at build time.
+            return Err(anyhow!("fine sites cannot forecast (coarse output-mode only)"));
+        }
         a => a,
     };
 
     match effective {
+        Action::Reuse | Action::Predict { .. } => {
+            unreachable!("mapped away above: fine reuse is delta-based, forecast is coarse-only")
+        }
         Action::ReuseResidual => {
             bs.reused += 1;
             let delta = cache.get(&key).expect("checked above").device.clone();

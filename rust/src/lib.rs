@@ -158,6 +158,40 @@
 //! or matches the fixed default; `examples/serve.rs` shows the
 //! profile → persist → serve path end to end.
 //!
+//! # Forecasting
+//!
+//! Verbatim replay serves a reuse step the activation from the *last*
+//! compute — correct but stale, and staleness is exactly what caps how
+//! aggressive a reuse schedule can get before quality collapses. The
+//! forecasting layer replaces replay with a **linear-multistep
+//! prediction**: each cache site keeps a bounded ring of its superseded
+//! outputs ([`cache::FeatureCache`] history rings, byte-accounted and
+//! migration-safe), and a reuse step is served `Σ cᵢ·hᵢ` over the k most
+//! recent outputs in **one fused dispatch**
+//! ([`runtime::Runtime::lms_combine`]) with the order-k coefficients
+//! ([`runtime::lms_coefficients`]) uploaded once at admit as rank-0
+//! scalars — a forecast moves zero additional bytes over the bus. The
+//! coefficients target the midpoint of the reuse window (half-spacing
+//! Lagrange extrapolation), since one forecast serves every reuse step
+//! until the next compute refreshes the site.
+//!
+//! Policy-side this is a composable wrapper, not a new policy:
+//! `forecast:k=2,inner=foresight:n=1,r=2,gamma=0.5`
+//! ([`policy::Forecast`]) lets the inner policy decide *when* to reuse
+//! and upgrades those decisions to `Predict`; history-starved sites
+//! (fewer than k stored outputs) fall back to verbatim replay per site,
+//! with exact `forecasts`/`forecast_fallbacks` accounting through
+//! [`engine::RunStats`], the `stats` op and per-response
+//! `forecast_units`. `forecast:k=1` is bit-identical to replay by
+//! construction. The predictor order joins the [`autotune`] sweep grid
+//! (`--orders`), so `policy:"auto"` serves tuned forecast specs
+//! transparently. `benches/fig24_forecast.rs` pins the contract: higher
+//! PSNR than replay at equal reuse fraction, a strictly faster tuned
+//! pick at the same min-PSNR budget, k=1 bit-identity, transfer-free
+//! forecast steps, and fallback counts matching a decision-map oracle;
+//! `tests/integration_sharded.rs` proves the rings survive migration
+//! bit-exact, charged at exactly their drained bytes on the bus meters.
+//!
 //! # Observability
 //!
 //! Aggregates alone cannot explain a single slow request or a single bad

@@ -235,6 +235,15 @@ fn parse_f64_list(raw: &[String], flag: &str) -> Result<Vec<f64>> {
         .collect()
 }
 
+fn parse_usize_list(raw: &[String], flag: &str) -> Result<Vec<usize>> {
+    raw.iter()
+        .map(|s| {
+            s.parse()
+                .map_err(|_| anyhow!("--{flag}: '{s}' is not a non-negative integer"))
+        })
+        .collect()
+}
+
 fn cmd_autotune(args: &[String]) -> Result<()> {
     let p = Cli::new(
         "foresight autotune",
@@ -247,6 +256,7 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
     .opt("warmups", "0.15", "comma list of Foresight warmup fractions")
     .opt("nr", "1:2,2:3", "comma list of Foresight n:r cycle shapes")
     .opt("static-nr", "1:2,2:3", "comma list of static-baseline n:r points")
+    .opt("orders", "1,2,3", "comma list of forecast predictor orders k (k>=2 wraps each Foresight point)")
     .opt("prompts", "4", "prompt-panel size")
     .opt("min-psnr", "30", "quality budget: min mean PSNR (dB) vs NoReuse")
     .opt("out", "results/profiles.json", "profile store output path")
@@ -279,6 +289,7 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
             gammas: parse_f64_list(&p.get_list("gammas"), "gammas")?,
             warmups: parse_f64_list(&p.get_list("warmups"), "warmups")?,
             static_nr: parse_nr_list(&p.get_list("static-nr"), "static-nr")?,
+            orders: parse_usize_list(&p.get_list("orders"), "orders")?,
         },
     };
     let outcome = profile_engine(&engine, &opts)?;
@@ -460,6 +471,7 @@ fn cmd_trace(args: &[String]) -> Result<()> {
                 branch: 0,
                 site: 0,
                 reuse: false,
+                predict: false,
                 mse: 0.01,
                 lambda: 0.02,
             },

@@ -1,0 +1,180 @@
+//! Forecast: a composable wrapper that upgrades verbatim replay to
+//! linear-multistep feature prediction ("Predict to Skip", PAPERS.md).
+//!
+//! The wrapper owns **no** reuse schedule of its own: the inner policy
+//! decides *when* a site reuses (Foresight's δ ≤ γ·λ gate, a static
+//! cycle, ...), and `Forecast` upgrades each of those `Reuse` decisions
+//! to [`Action::Predict`] with its fixed predictor order `k`. The engine
+//! then extrapolates the site's next output from its last `k` cached
+//! outputs in one fused `lms_combine` dispatch — falling back to
+//! verbatim replay (counted in `forecast_fallback_units`) for any site
+//! whose history ring is still shallower than `k`.
+//!
+//! Order `k = 1` is the degenerate predictor: its only coefficient is
+//! `1.0`, so the forecast *is* the cached output. The wrapper therefore
+//! passes `Reuse` through untouched at `k = 1`, making
+//! `forecast:k=1,inner=<spec>` bit-identical to `<spec>` — the
+//! equivalence the engine tests pin.
+//!
+//! Spec grammar: `forecast:k=<order>,inner=<spec>`, where `<spec>` is any
+//! complete policy spec (embedded `:` and `,` included) — see
+//! [`super::build_policy`].
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+use super::{Action, CacheMode, Granularity, ReusePolicy, Site};
+use crate::model::BlockKind;
+
+/// Highest supported predictor order (matches
+/// [`crate::runtime::lms_coefficients`]).
+pub const MAX_ORDER: usize = 4;
+
+/// The forecasting wrapper policy.
+pub struct Forecast {
+    order: usize,
+    inner: Box<dyn ReusePolicy>,
+}
+
+impl Forecast {
+    /// Validated constructor: `order` must be in `[1, 4]` and the inner
+    /// policy must cache whole block outputs (`Coarse` granularity,
+    /// `Output` mode) — extrapolating residual deltas or sublayer units
+    /// is not what the predictor's coefficients model.
+    pub fn new(order: usize, inner: Box<dyn ReusePolicy>) -> Result<Self> {
+        if !(1..=MAX_ORDER).contains(&order) {
+            return Err(anyhow!(
+                "forecast: predictor order k must be in [1, {MAX_ORDER}], got {order}"
+            ));
+        }
+        if inner.granularity() != Granularity::Coarse || inner.cache_mode() != CacheMode::Output {
+            return Err(anyhow!(
+                "forecast: inner policy '{}' must be coarse output-mode (whole-block \
+                 outputs); fine/delta policies cannot be forecast-wrapped",
+                inner.name()
+            ));
+        }
+        Ok(Self { order, inner })
+    }
+
+    /// The predictor order k.
+    pub fn order(&self) -> usize {
+        self.order
+    }
+}
+
+impl ReusePolicy for Forecast {
+    fn name(&self) -> String {
+        format!("forecast(k={},{})", self.order, self.inner.name())
+    }
+
+    fn granularity(&self) -> Granularity {
+        self.inner.granularity()
+    }
+
+    fn cache_mode(&self) -> CacheMode {
+        self.inner.cache_mode()
+    }
+
+    fn needs_measurement(&self) -> bool {
+        self.inner.needs_measurement()
+    }
+
+    fn history_depth(&self) -> usize {
+        self.order
+    }
+
+    fn begin_request(&mut self, layers: usize, steps: usize) {
+        self.inner.begin_request(layers, steps);
+    }
+
+    fn action(&mut self, step: usize, site: Site) -> Action {
+        match self.inner.action(step, site) {
+            Action::Reuse if self.order >= 2 => Action::Predict { order: self.order },
+            a => a,
+        }
+    }
+
+    fn observe_mse(&mut self, step: usize, site: Site, mse: f64) {
+        self.inner.observe_mse(step, site, mse);
+    }
+
+    fn thresholds(&self) -> Option<BTreeMap<(usize, BlockKind, usize), f64>> {
+        self.inner.thresholds()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Unit;
+    use crate::policy::{Foresight, Pab, StaticReuse};
+
+    fn site(layer: usize) -> Site {
+        Site { layer, kind: BlockKind::Spatial, unit: Unit::Block, branch: 0 }
+    }
+
+    #[test]
+    fn upgrades_inner_reuse_to_predict() {
+        // static:n=1,r=2 reuses every odd step; wrapped at k=2 those
+        // become Predict{2} while compute steps pass through untouched.
+        let inner = Box::new(StaticReuse::new(1, 2).unwrap());
+        let mut p = Forecast::new(2, inner).unwrap();
+        p.begin_request(2, 10);
+        let mut saw_predict = false;
+        let mut saw_compute = false;
+        for step in 0..10 {
+            match p.action(step, site(0)) {
+                Action::Predict { order } => {
+                    assert_eq!(order, 2);
+                    saw_predict = true;
+                }
+                Action::Reuse => panic!("k=2 wrapper must not emit bare Reuse"),
+                Action::Compute { .. } => saw_compute = true,
+                Action::ReuseResidual => panic!("coarse inner cannot emit ReuseResidual"),
+            }
+        }
+        assert!(saw_predict && saw_compute);
+    }
+
+    #[test]
+    fn order_one_is_transparent() {
+        // k=1 forecasting degenerates to verbatim replay: the wrapped
+        // policy's action stream must be identical to the bare policy's.
+        let mut bare = StaticReuse::new(1, 2).unwrap();
+        let mut wrapped = Forecast::new(1, Box::new(StaticReuse::new(1, 2).unwrap())).unwrap();
+        bare.begin_request(2, 12);
+        wrapped.begin_request(2, 12);
+        for step in 0..12 {
+            for l in 0..2 {
+                assert_eq!(bare.action(step, site(l)), wrapped.action(step, site(l)));
+            }
+        }
+        assert_eq!(wrapped.history_depth(), 1);
+    }
+
+    #[test]
+    fn delegates_measurement_and_thresholds_to_inner() {
+        let mut p = Forecast::new(3, Box::new(Foresight::paper_default())).unwrap();
+        assert!(p.needs_measurement());
+        assert_eq!(p.history_depth(), 3);
+        p.begin_request(2, 30);
+        for step in 1..6 {
+            p.observe_mse(step, site(0), 1.0);
+        }
+        let th = p.thresholds().expect("foresight thresholds pass through");
+        assert!(!th.is_empty());
+        assert!(p.name().contains("forecast(k=3"));
+        assert!(p.name().contains("foresight"));
+    }
+
+    #[test]
+    fn rejects_bad_order_and_incompatible_inner() {
+        assert!(Forecast::new(0, Box::new(StaticReuse::new(1, 2).unwrap())).is_err());
+        assert!(Forecast::new(5, Box::new(StaticReuse::new(1, 2).unwrap())).is_err());
+        // PAB is fine-grained delta caching — not forecastable.
+        let pab = Pab::new(2, 4, 6, 0.07, 0.55, vec![0], 2, 30).unwrap();
+        let err = Forecast::new(2, Box::new(pab)).unwrap_err().to_string();
+        assert!(err.contains("coarse output-mode"), "{err}");
+    }
+}

@@ -7,8 +7,21 @@
 //! MSE observations — which keeps them unit-testable without a runtime and
 //! lets the property tests drive them through thousands of synthetic
 //! trajectories.
+//!
+//! # Composable wrappers
+//!
+//! Besides the base policies, specs can name **wrappers** that compose
+//! with any base policy. The only wrapper today is [`Forecast`]
+//! (`forecast:k=<order>,inner=<spec>`): the inner policy keeps deciding
+//! *when* a site reuses, and the wrapper upgrades each `Reuse` to
+//! [`Action::Predict`] so the engine extrapolates the site's next output
+//! from its cached history instead of replaying a stale one. The
+//! `inner=` value is the **last** key and swallows the rest of the spec
+//! verbatim (embedded `:`/`,` included), so any spec that parses on its
+//! own parses inside a wrapper — autotune round-trips both forms.
 
 pub mod delta_dit;
+pub mod forecast;
 pub mod foresight;
 pub mod none;
 pub mod pab;
@@ -23,6 +36,7 @@ use crate::config::ModelInfo;
 use crate::model::BlockKind;
 
 pub use delta_dit::DeltaDit;
+pub use forecast::Forecast;
 pub use foresight::Foresight;
 pub use none::NoReuse;
 pub use pab::Pab;
@@ -63,11 +77,17 @@ pub enum Action {
     Reuse,
     /// Add the cached residual delta to the current state (delta-mode).
     ReuseResidual,
+    /// Extrapolate this unit's output from its last `order` cached
+    /// outputs (one fused `lms_combine` dispatch) instead of replaying
+    /// the stale one. Emitted by the [`Forecast`] wrapper; the engine
+    /// falls back to verbatim replay per site when the history ring is
+    /// still shallower than `order`.
+    Predict { order: usize },
 }
 
 impl Action {
     pub fn is_reuse(&self) -> bool {
-        matches!(self, Action::Reuse | Action::ReuseResidual)
+        matches!(self, Action::Reuse | Action::ReuseResidual | Action::Predict { .. })
     }
 }
 
@@ -95,6 +115,13 @@ pub trait ReusePolicy: Send {
         false
     }
 
+    /// How many outputs per site the engine's cache must retain (live
+    /// entry plus history ring). 1 — the default — keeps only the live
+    /// entry; forecasting wrappers return their predictor order `k`.
+    fn history_depth(&self) -> usize {
+        1
+    }
+
     /// Reset state for a new request.
     fn begin_request(&mut self, layers: usize, steps: usize);
 
@@ -114,7 +141,13 @@ pub trait ReusePolicy: Send {
 /// paper-default parameters from the model preset (Appendix A.6 tables).
 ///
 /// Examples: `none`, `static`, `static:n=2,r=3`,
-/// `foresight:n=1,r=2,gamma=0.5,warmup=0.15`, `delta-dit`, `tgate`, `pab`.
+/// `foresight:n=1,r=2,gamma=0.5,warmup=0.15`, `delta-dit`, `tgate`, `pab`,
+/// `forecast:k=2,inner=foresight:n=1,r=2,gamma=0.5`.
+///
+/// The `forecast` wrapper is parsed before the generic `key=val` split:
+/// its `inner=` value is the rest of the spec verbatim (embedded `:`/`,`
+/// included) and recurses through this same parser, so wrapped and bare
+/// specs round-trip identically.
 ///
 /// Parsing is strict so errors are actionable at the wire and so the
 /// `autotune` subsystem can round-trip every spec it emits:
@@ -127,6 +160,37 @@ pub trait ReusePolicy: Send {
 ///   `[0,1)`, inverted `pab` ranges, ...) surface as `Result` errors from
 ///   the validated policy constructors — never as a worker-killing panic.
 pub fn build_policy(spec: &str, model: &ModelInfo, steps: usize) -> Result<Box<dyn ReusePolicy>> {
+    // Wrapper specs first: `inner=` swallows the remainder (it is itself a
+    // full spec with embedded ':'/','), so the generic comma split below
+    // must never see it.
+    if spec == "forecast" || spec.starts_with("forecast:") {
+        let args = spec.strip_prefix("forecast").unwrap_or_default();
+        let args = args.strip_prefix(':').unwrap_or(args);
+        let (head, inner_spec) = args.split_once("inner=").ok_or_else(|| {
+            anyhow!("policy 'forecast': missing inner= spec (expected forecast:k=<order>,inner=<spec>)")
+        })?;
+        let mut order = 2usize;
+        for pair in head.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow!("policy 'forecast': arg '{pair}' is not key=val"))?;
+            match k.trim() {
+                "k" => {
+                    order = v.trim().parse().map_err(|_| {
+                        anyhow!("policy 'forecast': arg k='{}' is not a non-negative integer", v.trim())
+                    })?;
+                }
+                other => {
+                    return Err(anyhow!(
+                        "policy 'forecast': unknown arg '{other}' (known: k, inner)"
+                    ))
+                }
+            }
+        }
+        let inner = build_policy(inner_spec.trim(), model, steps)?;
+        return Ok(Box::new(Forecast::new(order, inner)?));
+    }
+
     let (name, args) = match spec.split_once(':') {
         Some((n, a)) => (n, a),
         None => (spec, ""),
@@ -219,7 +283,8 @@ pub fn build_policy(spec: &str, model: &ModelInfo, steps: usize) -> Result<Box<d
             )?))
         }
         other => Err(anyhow!(
-            "unknown policy '{other}' (expected none|static|foresight|delta-dit|tgate|pab)"
+            "unknown policy '{other}' (expected none|static|foresight|delta-dit|tgate|pab|\
+             forecast:k=<order>,inner=<spec>)"
         )),
     }
 }
@@ -337,6 +402,44 @@ mod tests {
             let r = build_policy(spec, &m, 30);
             assert!(r.is_err(), "{spec} should be rejected");
         }
+    }
+
+    #[test]
+    fn parses_forecast_wrapper_specs() {
+        let m = model();
+        // inner= swallows the remainder: embedded ':' and ',' intact
+        let p = build_policy("forecast:k=2,inner=foresight:n=1,r=2,gamma=0.5", &m, 30).unwrap();
+        assert!(p.name().contains("forecast(k=2"));
+        assert!(p.name().contains("N1R2"));
+        assert_eq!(p.history_depth(), 2);
+        // bare inner spec without params
+        let p = build_policy("forecast:k=3,inner=static", &m, 30).unwrap();
+        assert_eq!(p.history_depth(), 3);
+        // k defaults to 2
+        let p = build_policy("forecast:inner=static:n=1,r=2", &m, 30).unwrap();
+        assert_eq!(p.history_depth(), 2);
+        // k=1 degenerates to depth 1 (verbatim replay)
+        let p = build_policy("forecast:k=1,inner=foresight", &m, 30).unwrap();
+        assert_eq!(p.history_depth(), 1);
+    }
+
+    #[test]
+    fn forecast_wrapper_rejects_bad_specs() {
+        let m = model();
+        for spec in [
+            "forecast",                        // no inner
+            "forecast:k=2",                    // no inner
+            "forecast:k=0,inner=static",       // order out of range
+            "forecast:k=9,inner=static",       // order out of range
+            "forecast:k=abc,inner=static",     // malformed order
+            "forecast:q=2,inner=static",       // unknown key
+            "forecast:k=2,inner=pab",          // fine/delta inner
+            "forecast:k=2,inner=warp-drive",   // unknown inner
+        ] {
+            assert!(build_policy(spec, &m, 30).is_err(), "{spec} should be rejected");
+        }
+        let err = build_policy("forecast:k=2", &m, 30).unwrap_err().to_string();
+        assert!(err.contains("inner="), "{err}");
     }
 
     #[test]

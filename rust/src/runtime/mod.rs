@@ -13,7 +13,12 @@
 //! results ever leave the device, and the sampler-step primitives —
 //! `scale`/`axpy` (rflow Euler is a single axpy) and the fused `ddim_step`
 //! (x0-prediction, clamp, re-noising in one dispatch) — that let the
-//! engine keep the latent device-resident for a whole request. Every
+//! engine keep the latent device-resident for a whole request. The
+//! forecast reuse path adds `lms_combine`: an order-k linear-multistep
+//! extrapolation `Σ cᵢ·hᵢ` over a site's cached history in one dispatch,
+//! coefficients as rank-0 runtime arguments (see [`lms_coefficients`]),
+//! so a Predict step moves exactly as many bytes as verbatim replay:
+//! none. Every
 //! host↔device copy is metered in [`TransferStats`] (see `engine` module
 //! docs §Hot path for the byte model).
 //!
@@ -306,6 +311,33 @@ fn parse_entry_arity(hlo_text: &str) -> Option<usize> {
         }
     }
     Some(count)
+}
+
+/// Fixed linear-multistep extrapolation coefficients for predictor order
+/// `k ∈ [1, 4]`, newest history term first: the Lagrange basis of `k`
+/// equally-spaced past outputs evaluated **half a spacing ahead** of the
+/// newest one (`Σ cᵢ = 1` for every order; order 1 degenerates to
+/// verbatim replay `[1.0]`).
+///
+/// Half a spacing — not the full Adams-Bashforth step — because one
+/// forecast serves the *whole* reuse window between two computes: the
+/// cache is not refreshed on Predict steps, so every reuse in the window
+/// extrapolates from the same history snapshot. Targeting the window
+/// midpoint minimises the expected error over the window (a full-step
+/// target overshoots the early reuse steps by as much as replay
+/// undershoots the late ones, and its larger alternating weights amplify
+/// history noise for nothing).
+///
+/// The engine uploads these once at admit as rank-0 device tensors so
+/// [`Runtime::lms_combine`] dispatches with zero per-step host traffic.
+pub fn lms_coefficients(order: usize) -> Result<Vec<f32>> {
+    match order {
+        1 => Ok(vec![1.0]),
+        2 => Ok(vec![1.5, -0.5]),
+        3 => Ok(vec![1.875, -1.25, 0.375]),
+        4 => Ok(vec![2.1875, -2.1875, 1.3125, -0.3125]),
+        other => Err(anyhow!("unsupported forecast order {other} (supported: 1..=4)")),
+    }
 }
 
 /// The PJRT runtime: client + executable cache + fused-executable builder.
@@ -605,6 +637,60 @@ impl Runtime {
     /// the latent through the host (see [`crate::sampler::DeviceStepper`]).
     pub fn ddim_step(&self, dims: &[usize]) -> Result<Arc<Executable>> {
         self.fused_executable("ddim_step", dims)
+    }
+
+    /// Order-`k` linear-multistep feature extrapolation
+    /// `Σᵢ cᵢ·hᵢ` over the `k` most recent cached outputs of one site, in
+    /// **one** fused dispatch (args: `h0..h{k-1}` newest-first, then
+    /// `c0..c{k-1}` rank-0 coefficients; result `dims`-shaped). The
+    /// forecast reuse path (`policy::forecast`) uses this so a Predict
+    /// step stays zero-download, like verbatim replay: the history
+    /// tensors are already device-resident and the coefficients are
+    /// uploaded once at admit (see [`lms_coefficients`]). Cached per
+    /// `(k, dims)` like every fused op.
+    pub fn lms_combine(&self, dims: &[usize], order: usize) -> Result<Arc<Executable>> {
+        if order == 0 {
+            return Err(anyhow!("lms_combine needs at least one history term"));
+        }
+        let key = (format!("lms{order}"), dims.to_vec());
+        if let Some(e) = self.fused.lock().get(&key) {
+            return Ok(e.clone());
+        }
+        let b = xla::XlaBuilder::new(&format!("fused_lms{order}"));
+        let err = |stage: &str, e| anyhow!("fused lms{order} {stage}: {e:?}");
+        let idims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let param = |i: i64, pdims: &[i64], name: &str| {
+            b.parameter(i, xla::ElementType::F32, pdims, name)
+                .map_err(|e| anyhow!("fused lms{order} param {name}: {e:?}"))
+        };
+        let mut terms = Vec::with_capacity(order);
+        for i in 0..order {
+            let h = param(i as i64, &idims, &format!("h{i}"))?;
+            let c = param((order + i) as i64, &[], &format!("c{i}"))?;
+            terms.push(h.mul_(&c).map_err(|e| err("mul", e))?);
+        }
+        let mut iter = terms.into_iter();
+        let mut root = match iter.next() {
+            Some(t) => t,
+            None => return Err(anyhow!("fused lms{order}: no terms were built")),
+        };
+        for t in iter {
+            root = root.add_(&t).map_err(|e| err("add", e))?;
+        }
+        let comp = root.build().map_err(|e| err("build", e))?;
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile fused_lms{order}: {e:?}"))?;
+        let exec = Arc::new(Executable {
+            name: format!("fused_lms{order}{dims:?}"),
+            exe: Shared(exe),
+            arity: 2 * order,
+            stats: ExecStats::default(),
+        });
+        self.fused.lock().insert(key, exec.clone());
+        Ok(exec)
     }
 
     /// Stack `batch` identically-shaped `dims` tensors along a new leading
@@ -1072,6 +1158,62 @@ mod tests {
         // the clamp actually fired for the out-of-range elements
         let x0_unclamped = (x[1] - s1mat * eps[1]) / sat;
         assert!(x0_unclamped < lo, "test vector must exercise the clamp");
+    }
+
+    #[test]
+    fn lms_coefficients_sum_to_one_and_bound_order() {
+        for order in 1..=4 {
+            let c = lms_coefficients(order).unwrap();
+            assert_eq!(c.len(), order);
+            let sum: f32 = c.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6, "order {order} coefficients must sum to 1");
+        }
+        assert!(lms_coefficients(0).is_err());
+        assert!(lms_coefficients(5).is_err());
+    }
+
+    #[test]
+    fn lms_combine_matches_host_reference() {
+        let rt = Runtime::cpu().unwrap();
+        let dims = [2usize, 3];
+        let n = 6;
+        let hist: Vec<Vec<f32>> = (0..3)
+            .map(|h| (0..n).map(|i| ((h * n + i) % 7) as f32 * 0.25 - 0.5).collect())
+            .collect();
+        let dh: Vec<_> = hist.iter().map(|v| rt.upload(v, &dims).unwrap()).collect();
+        for order in 2..=3usize {
+            let coeffs = lms_coefficients(order).unwrap();
+            let dc: Vec<_> = coeffs.iter().map(|&c| rt.upload(&[c], &[]).unwrap()).collect();
+            let exe = rt.lms_combine(&dims, order).unwrap();
+            assert_eq!(exe.arity(), 2 * order);
+            let mut args: Vec<&DeviceTensor> = dh[..order].iter().collect();
+            args.extend(dc.iter());
+            let out = exe.run(&args).unwrap();
+            assert_eq!(out.dims(), &dims);
+            let mut got = vec![0.0f32; n];
+            rt.download_into(&out, &mut got).unwrap();
+            for i in 0..n {
+                let want: f32 = (0..order).map(|t| coeffs[t] * hist[t][i]).sum();
+                assert!(
+                    (got[i] - want).abs() <= 1e-6 * (1.0 + want.abs()),
+                    "order {order} elem {i}: device {} vs host {want}",
+                    got[i]
+                );
+            }
+        }
+        assert!(rt.lms_combine(&dims, 0).is_err());
+    }
+
+    #[test]
+    fn lms_combine_order_one_is_identity() {
+        let rt = Runtime::cpu().unwrap();
+        let x = [0.25f32, -1.5, 3.0];
+        let dx = rt.upload(&x, &[3]).unwrap();
+        let c = rt.upload(&[1.0f32], &[]).unwrap();
+        let out = rt.lms_combine(&[3], 1).unwrap().run(&[&dx, &c]).unwrap();
+        let mut got = [0.0f32; 3];
+        rt.download_into(&out, &mut got).unwrap();
+        assert_eq!(got, x, "order-1 forecast must be bit-identical replay");
     }
 
     #[test]

@@ -99,8 +99,10 @@
 //! * **`"trace": true` on a `generate` request** — the response gains a
 //!   `reuse_timeline` array of `{step, site, action, lambda}` objects:
 //!   the policy's planned branch-0 decision per measured site per step
-//!   (`action` ∈ `reuse`/`compute`) with the λ threshold the decision
-//!   compared against (omitted when the policy records none). Works
+//!   (`action` ∈ `predict`/`reuse`/`compute`; `predict` = the site's
+//!   output is forecast from its history ring instead of replayed) with
+//!   the λ threshold the decision compared against (omitted when the
+//!   policy records none). Works
 //!   whether or not the tracer is enabled — the timeline comes from the
 //!   session's own `RunResult`, not the ring. The timeline's `reuse`
 //!   count is the *planned* branch-0 reuse total; it never exceeds the
@@ -531,6 +533,13 @@ struct Telemetry {
     /// Sessions migrated between devices by work stealing (total; each is
     /// also credited to the *target* device's [`DeviceTelemetry`]).
     steals: AtomicU64,
+    /// Reuse units served by linear-multistep forecast (`lms_combine`)
+    /// instead of verbatim replay, summed over retired sessions.
+    forecasts: AtomicU64,
+    /// Planned forecasts that replayed verbatim because the site's
+    /// history ring was shallower than the predictor order, summed over
+    /// retired sessions.
+    forecast_fallbacks: AtomicU64,
     /// `generate` jobs refused at admission because every candidate queue
     /// sat at `--max-queue` (the `overloaded` wire response). Rejected
     /// jobs are **not** counted in `requests`/`errors` — they were never
@@ -605,6 +614,8 @@ impl Telemetry {
             auto_resolved: AtomicU64::new(0),
             auto_fallbacks: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            forecasts: AtomicU64::new(0),
+            forecast_fallbacks: AtomicU64::new(0),
             rejects: AtomicU64::new(0),
             deadline_misses: AtomicU64::new(0),
             degrade_swaps: AtomicU64::new(0),
@@ -1207,6 +1218,14 @@ fn stats_json(ctx: &ServeCtx) -> Json {
             "auto_fallbacks",
             Json::num(telemetry.auto_fallbacks.load(Ordering::Relaxed) as f64),
         ),
+        (
+            "forecasts",
+            Json::num(telemetry.forecasts.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "forecast_fallbacks",
+            Json::num(telemetry.forecast_fallbacks.load(Ordering::Relaxed) as f64),
+        ),
         ("rejects", Json::num(telemetry.rejects.load(Ordering::Relaxed) as f64)),
         (
             "deadline_misses",
@@ -1311,6 +1330,8 @@ const PROM_METRICS: &[(&str, &str)] = &[
     ("profiles_loaded", "Profiles in the loaded autotune store"),
     ("auto_resolved", "policy=auto requests resolved from a profile"),
     ("auto_fallbacks", "policy=auto requests that fell back to the default"),
+    ("forecasts", "Reuse units served by linear-multistep forecast"),
+    ("forecast_fallbacks", "Planned forecasts replayed verbatim (shallow history)"),
     ("rejects", "Requests refused by bounded admission"),
     ("deadline_misses", "Requests dropped past their deadline"),
     ("degrade_swaps", "policy=auto requests degraded under queue pressure"),
@@ -1392,11 +1413,11 @@ fn fmt_prom(v: f64) -> String {
 fn reuse_timeline(r: &RunResult) -> Json {
     let mut entries = Vec::new();
     for (step, row) in r.reuse_map.iter().enumerate() {
-        for (site, &reuse) in row.iter().enumerate() {
+        for (site, &decision) in row.iter().enumerate() {
             let mut f = vec![
                 ("step", Json::num(step as f64)),
                 ("site", Json::num(site as f64)),
-                ("action", Json::str(if reuse { "reuse" } else { "compute" })),
+                ("action", Json::str(decision.name())),
             ];
             if let Some(l) = r.site_lambdas.as_ref().and_then(|ls| ls.get(site)) {
                 if l.is_finite() && *l >= 0.0 {
@@ -1527,6 +1548,8 @@ fn generate_response(
         ("computed_units", Json::num(s.computed_units as f64)),
         ("reused_units", Json::num(s.reused_units as f64)),
         ("fallback_units", Json::num(s.fallback_units as f64)),
+        ("forecast_units", Json::num(s.forecast_units as f64)),
+        ("forecast_fallback_units", Json::num(s.forecast_fallback_units as f64)),
         ("reuse_fraction", Json::num(s.reuse_fraction())),
         ("cache_peak_bytes", Json::num(s.cache_peak_bytes as f64)),
         ("h2d_bytes", Json::num(s.h2d_bytes as f64)),

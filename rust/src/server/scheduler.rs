@@ -928,6 +928,12 @@ fn retire(ctx: &WorkerCtx, lane: Lane) {
             }
             ctx.telemetry.retires.fetch_add(1, Ordering::Relaxed);
             dt.retires.fetch_add(1, Ordering::Relaxed);
+            ctx.telemetry
+                .forecasts
+                .fetch_add(r.stats.forecast_units, Ordering::Relaxed);
+            ctx.telemetry
+                .forecast_fallbacks
+                .fetch_add(r.stats.forecast_fallback_units, Ordering::Relaxed);
             if peak >= 2 {
                 ctx.telemetry.batched_requests.fetch_add(1, Ordering::Relaxed);
             }

@@ -85,12 +85,19 @@ pub fn event_json(ev: &Event) -> Json {
         Payload::Degrade => {
             instant(&mut fields);
         }
-        Payload::Policy { step, branch, site, reuse, mse, lambda } => {
+        Payload::Policy { step, branch, site, reuse, predict, mse, lambda } => {
             instant(&mut fields);
             args.push(("step", Json::num(step as f64)));
             args.push(("branch", Json::num(branch as f64)));
             args.push(("site", Json::num(site as f64)));
-            args.push(("action", Json::str(if reuse { "reuse" } else { "compute" })));
+            let action = if predict {
+                "predict"
+            } else if reuse {
+                "reuse"
+            } else {
+                "compute"
+            };
+            args.push(("action", Json::str(action)));
             if mse >= 0.0 {
                 args.push(("mse", Json::num(mse)));
             }
@@ -147,7 +154,15 @@ mod tests {
         t.record(
             id,
             0,
-            Payload::Policy { step: 1, branch: 0, site: 3, reuse: true, mse: 0.25, lambda: 0.5 },
+            Payload::Policy {
+                step: 1,
+                branch: 0,
+                site: 3,
+                reuse: true,
+                predict: false,
+                mse: 0.25,
+                lambda: 0.5,
+            },
         );
         t.record(id, 0, Payload::Retire { device: 0, steps: 8 });
         t.record(id, 0, Payload::End { ok: true });
@@ -208,6 +223,7 @@ mod tests {
                 branch: 1,
                 site: 0,
                 reuse: false,
+                predict: false,
                 mse: -1.0,
                 lambda: -1.0,
             },
@@ -217,5 +233,28 @@ mod tests {
         assert!(args.get("mse").is_none());
         assert!(args.get("lambda").is_none());
         assert_eq!(args.get("action").and_then(|v| v.as_str()), Some("compute"));
+    }
+
+    #[test]
+    fn forecast_policy_event_renders_predict_action() {
+        let ev = Event {
+            seq: 0,
+            ts_us: 10,
+            dur_us: 0,
+            tid: 1,
+            trace_id: 5,
+            payload: Payload::Policy {
+                step: 4,
+                branch: 0,
+                site: 2,
+                reuse: true,
+                predict: true,
+                mse: -1.0,
+                lambda: 0.5,
+            },
+        };
+        let j = event_json(&ev);
+        let args = j.get("args").expect("args");
+        assert_eq!(args.get("action").and_then(|v| v.as_str()), Some("predict"));
     }
 }

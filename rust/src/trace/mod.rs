@@ -14,8 +14,8 @@
 //!   migrations, degrade swaps, and one complete (`dur_us`) event per
 //!   fused cohort pass carrying device ordinal and occupancy;
 //! * **engine/session** — one [`Payload::Policy`] instant per measured
-//!   site per step per CFG branch: reuse vs compute, observed drift MSE,
-//!   and the policy's λ threshold at that site;
+//!   site per step per CFG branch: predict / reuse / compute, observed
+//!   drift MSE, and the policy's λ threshold at that site;
 //! * **runtime** — h2d/d2h transfer events mirroring the
 //!   `runtime::TransferStats` byte model, attributed to the emitting
 //!   thread's current trace scope ([`scope`]).
@@ -101,10 +101,12 @@ pub enum Payload {
     Pass { device: u64, occupancy: u64 },
     /// One per-site reuse decision: at `step`, CFG `branch`, measured
     /// site index `site`, the policy chose reuse (true) or compute.
+    /// `predict` refines a reuse: true means the site's output was
+    /// forecast from its history (`lms_combine`) rather than replayed.
     /// `mse` is the observed drift (negative = not measured this step)
     /// and `lambda` the policy's threshold at that site (negative =
     /// no threshold recorded).
-    Policy { step: u32, branch: u8, site: u32, reuse: bool, mse: f64, lambda: f64 },
+    Policy { step: u32, branch: u8, site: u32, reuse: bool, predict: bool, mse: f64, lambda: f64 },
     /// Host→device transfer (bytes), from `runtime::TransferStats`.
     H2d { bytes: u64 },
     /// Device→host transfer (bytes), from `runtime::TransferStats`.

@@ -93,7 +93,13 @@ fn migrated_session_matches_never_migrated_run_and_charges_one_lane_per_hop() {
     proptest_cases(4, move |g| {
         let steps = g.usize_in(4..=10);
         let seed = g.usize_in(0..=10_000) as u64;
-        let spec = *g.pick(&["none", "static", "foresight:n=1,r=2,gamma=0.5"]);
+        let spec = *g.pick(&[
+            "none",
+            "static",
+            "foresight:n=1,r=2,gamma=0.5",
+            "forecast:k=2,inner=static",
+            "forecast:k=3,inner=foresight:n=1,r=2,gamma=0.5",
+        ]);
         // one or two hops, at strictly increasing interior boundaries
         let hop1 = g.usize_in(1..=steps - 1);
         let hops: Vec<usize> = if g.bool() && hop1 + 1 <= steps - 1 {
@@ -135,6 +141,20 @@ fn migrated_session_matches_never_migrated_run_and_charges_one_lane_per_hop() {
                 == (oracle.stats.computed_units, oracle.stats.reused_units),
             format!("steps={steps} spec={spec} hops={hops:?}: decisions diverged"),
         );
+        // History rings must survive the hop bit-exact: a lost or
+        // truncated ring would demote post-hop forecasts to fallbacks.
+        prop_assert(
+            (got.stats.forecast_units, got.stats.forecast_fallback_units)
+                == (oracle.stats.forecast_units, oracle.stats.forecast_fallback_units),
+            format!(
+                "steps={steps} spec={spec} hops={hops:?}: forecast accounting \
+                 diverged (got {}/{} vs oracle {}/{})",
+                got.stats.forecast_units,
+                got.stats.forecast_fallback_units,
+                oracle.stats.forecast_units,
+                oracle.stats.forecast_fallback_units,
+            ),
+        );
         let h = hops.len() as u64;
         prop_assert(
             got.stats.d2h_bytes == oracle.stats.d2h_bytes + h * lane
@@ -156,6 +176,103 @@ fn migrated_session_matches_never_migrated_run_and_charges_one_lane_per_hop() {
             ),
         );
     });
+}
+
+#[test]
+fn migrating_a_forecast_session_moves_exactly_the_history_ring_bytes() {
+    // The migration drain moves history rings alongside live entries, and
+    // the bus-level charge grows by exactly the drained history bytes.
+    // RunStats intentionally sees none of this — cache and ring movement
+    // is infrastructure traffic, not part of the request's standalone byte
+    // model — so the observable is each runtime's own TransferStats. An
+    // A/B pair runs the same static schedule migrated at the same
+    // boundary, with and without a forecast wrapper: the source bus must
+    // differ by the ring bytes, the target bus by the ring bytes plus the
+    // k rank-0 coefficient re-uploads (4 bytes each) from the LMS rebuild.
+    if !artifacts_present() {
+        return;
+    }
+    let engines = two_engines().unwrap();
+    let steps = 8usize;
+    let hop = 5usize; // static r=2 computes at 0,2,4 → 3 stores/site pre-hop
+    let k = 3usize; // rings full at the hop: min(3-1, k-1) = 2 entries/site
+
+    let mut req = Request::new("history ring hop probe", 33);
+    req.steps = Some(steps);
+
+    let run_migrated = |spec: &str| {
+        let pol = policy_for(&engines[0], spec, steps);
+        let mut sess = engines[0].admit(&req, pol).unwrap();
+        for _ in 0..hop {
+            sess.step(None).unwrap();
+        }
+        let src0 = engines[0].model().runtime().transfer_stats().snapshot();
+        let dst0 = engines[1].model().runtime().transfer_stats().snapshot();
+        sess.migrate(&engines[1]).unwrap();
+        let src = engines[0].model().runtime().transfer_stats().snapshot().delta_since(&src0);
+        let dst = engines[1].model().runtime().transfer_stats().snapshot().delta_since(&dst0);
+        while !sess.is_done() {
+            sess.step(None).unwrap();
+        }
+        (sess.finish().unwrap(), src, dst)
+    };
+
+    let fc_spec = format!("forecast:k={k},inner=static:n=1,r=2");
+    let (got_fc, src_fc, dst_fc) = run_migrated(&fc_spec);
+    let (got_rp, src_rp, dst_rp) = run_migrated("static:n=1,r=2");
+
+    // The replay twin carries no rings and never forecasts.
+    assert_eq!(
+        (got_rp.stats.forecast_units, got_rp.stats.forecast_fallback_units),
+        (0, 0),
+        "replay twin must not forecast"
+    );
+    // Post-hop reuse steps (5 and 7) must be served from the migrated
+    // rings, not demoted to fallback replay.
+    assert!(
+        got_fc.stats.forecast_units > 0,
+        "no forecast fired after the hop — rings were lost in migration"
+    );
+
+    // Migrated forecast run matches its never-migrated oracle: latents
+    // ≤1e-6 and identical forecast/fallback accounting, i.e. the rings
+    // round-tripped bit-exact.
+    let oracle = standalone(&engines[0], &req, &fc_spec);
+    let mismatch = first_latent_mismatch(&got_fc.latents.data, &oracle.latents.data, 1e-6);
+    assert!(
+        mismatch.is_none(),
+        "forecast latents diverged after migration: {mismatch:?}"
+    );
+    assert_eq!(
+        (got_fc.stats.forecast_units, got_fc.stats.forecast_fallback_units),
+        (oracle.stats.forecast_units, oracle.stats.forecast_fallback_units),
+        "forecast accounting diverged after migration"
+    );
+
+    // Exact bus deltas: every coarse site (2 branches × layers ×
+    // {spatial, temporal}) drains min(stores-1, k-1) = 2 superseded block
+    // outputs of f·p·d·4 bytes each, one metered call apiece.
+    let m = engines[0].model();
+    let [f, p, d] = m.state_dims();
+    let site_bytes = (f * p * d * 4) as u64;
+    let sites = (2 * m.info.layers * 2) as u64;
+    let ring_entries = (k - 1) as u64;
+    let history_bytes = sites * ring_entries * site_bytes;
+    let history_calls = sites * ring_entries;
+
+    assert_eq!(
+        (src_fc.d2h_bytes, src_fc.d2h_calls),
+        (src_rp.d2h_bytes + history_bytes, src_rp.d2h_calls + history_calls),
+        "source bus must drain exactly the history-ring bytes on top of the replay twin"
+    );
+    assert_eq!(
+        (dst_fc.h2d_bytes, dst_fc.h2d_calls),
+        (
+            dst_rp.h2d_bytes + history_bytes + 4 * k as u64,
+            dst_rp.h2d_calls + history_calls + k as u64
+        ),
+        "target bus must restore exactly the history-ring bytes plus k coefficient scalars"
+    );
 }
 
 #[test]
